@@ -1,0 +1,83 @@
+//! End-to-end serving driver (the DESIGN.md validation workload).
+//!
+//!     make artifacts && cargo run --release --example edge_serving
+//!
+//! Loads the trained TinyQwen, generates a Poisson MicroFact trace, serves
+//! batched collaborative tasks through the coordinator with the edge-
+//! network simulator on, and reports latency percentiles, throughput, EM
+//! and communication per task.  Results are recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use fedattn::cli::Args;
+use fedattn::config::SystemConfig;
+use fedattn::coordinator::{Coordinator, CoordinatorConfig};
+use fedattn::data::{Segmentation, TraceConfig, WorkloadTrace};
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let args = Args::from_env();
+    let mut sc = SystemConfig::default();
+    sc.artifacts_dir = fedattn::default_artifacts_dir();
+    sc.federation.participants = args.usize_or("participants", 4);
+    sc.federation.sync_h = args.usize_or("h", 2);
+    sc.federation.segmentation = Segmentation::SemQEx;
+    sc.serving.engines = args.usize_or("engines", 2);
+
+    let engine = fedattn::runtime::Engine::load(&sc.artifacts_dir, &sc.weights_file)?;
+    println!(
+        "engine: {} ({} params, {} artifacts)",
+        engine.manifest.model.name,
+        engine.weights().param_count(),
+        engine.manifest.entries.len()
+    );
+
+    let mut ccfg = CoordinatorConfig::from_system(&sc);
+    ccfg.time_scale = args.f64_or("time-scale", 20.0);
+    let coord = Coordinator::new(engine, ccfg);
+
+    let trace = WorkloadTrace::generate(&TraceConfig {
+        seed: args.u64_or("seed", 17),
+        n_tasks: args.usize_or("tasks", 24),
+        mean_interarrival_ms: args.f64_or("interarrival-ms", 400.0),
+        ..Default::default()
+    });
+    println!(
+        "trace : {} tasks, mean inter-arrival {:.0} ms (compressed {}x)\n",
+        trace.len(),
+        400.0,
+        20.0
+    );
+
+    let rep = coord.serve_trace(&trace)?;
+    let svc = rep.service_summary();
+    println!("== edge_serving report ==");
+    println!("tasks        : {}", rep.results.len());
+    println!("EM           : {:.3}", rep.em_rate());
+    println!("throughput   : {:.2} tasks/s", rep.throughput_tasks_per_s());
+    println!("latency p50  : {:.1} ms", rep.latency_percentile(50.0));
+    println!("latency p95  : {:.1} ms", rep.latency_percentile(95.0));
+    println!("service mean : {:.1} ms (min {:.1} / max {:.1})", svc.mean, svc.min, svc.max);
+    let comm: u64 = rep.results.iter().map(|r| r.comm_bytes).sum();
+    let commt: f64 = rep.results.iter().map(|r| r.comm_time_ms).sum();
+    println!(
+        "comm         : {} total, {:.1} ms simulated transfer",
+        fmt_bytes(comm as f64),
+        commt
+    );
+    println!("\nper-task:");
+    println!("{:>4} {:>6} {:>10} {:>10} {:>10}  answer", "id", "EM", "queue ms", "svc ms", "comm");
+    for r in &rep.results {
+        println!(
+            "{:>4} {:>6} {:>10.1} {:>10.1} {:>10}  {:?} (gold {:?})",
+            r.task_id,
+            r.em,
+            r.queue_ms,
+            r.service_ms,
+            fmt_bytes(r.comm_bytes as f64),
+            r.answer,
+            r.gold
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+"""AOT export: lower TinyQwen pieces to HLO *text* artifacts + manifest.
+
+Python runs once at build time (``make artifacts``); the Rust coordinator
+loads ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file``,
+compiles them on the PJRT CPU client, and drives the FedAttn schedule.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every weight is a runtime *parameter*, so one lowered block serves all
+layers and Rust uploads weights once as device buffers (``execute_b``).
+
+Usage: (cd python && python -m compile.aot --out ../artifacts [--fixtures])
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import PRESETS, DEFAULT_AOT, AotConfig, ModelConfig, manifest_dict
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _kv_tile(ac: AotConfig, g: int) -> int:
+    """KV tile: prefer the configured tile, shrink for small buffers."""
+    return ac.block_kv if g % ac.block_kv == 0 else ac.block_q
+
+
+def block_weight_specs(mc: ModelConfig):
+    d, qd, kd, dff = mc.d_model, mc.q_dim, mc.kv_dim, mc.d_ff
+    return [
+        ("ln1", _f32(d)), ("wq", _f32(d, qd)), ("bq", _f32(qd)),
+        ("wk", _f32(d, kd)), ("bk", _f32(kd)),
+        ("wv", _f32(d, kd)), ("bv", _f32(kd)),
+        ("wo", _f32(qd, d)), ("ln2", _f32(d)),
+        ("wg", _f32(d, dff)), ("wu", _f32(d, dff)), ("wd", _f32(dff, d)),
+    ]
+
+
+def build_entries(mc: ModelConfig, ac: AotConfig):
+    """Yield (name, fn, [(arg_name, spec), ...], [out_name, ...]) tuples."""
+    d, hd, hq, hkv = mc.d_model, mc.head_dim, mc.n_heads, mc.n_kv_heads
+    wspecs = block_weight_specs(mc)
+    attn_w = wspecs[7:]   # wo, ln2, wg, wu, wd
+    proj_w = wspecs[:7]   # ln1, wq..bv
+    entries = []
+
+    for l in ac.l_variants:
+        bkv = _kv_tile(ac, l)
+
+        def bf(x, pos, mask, *w, _bkv=bkv):
+            return M.block_fused(mc, x, pos, mask, *w,
+                                 block_q=ac.block_q, block_kv=_bkv)
+
+        entries.append((
+            f"block_fused_L{l}", bf,
+            [("x", _f32(l, d)), ("pos", _i32(l)), ("mask", _f32(l, l))] + wspecs,
+            ["x_out", "k", "v"],
+            {"kind": "block_fused", "l": l, "g": l},
+        ))
+
+        def qkv(x, pos, *w):
+            return M.qkv_project(mc, x, pos, *w)
+
+        entries.append((
+            f"qkv_project_L{l}", qkv,
+            [("x", _f32(l, d)), ("pos", _i32(l))] + proj_w,
+            ["q", "k", "v"],
+            {"kind": "qkv_project", "l": l},
+        ))
+
+    for (l, g) in ac.attn_pairs():
+        bkv = _kv_tile(ac, g)
+
+        def af(x, q, k, v, mask, *w, _bkv=bkv):
+            return (M.attn_ffn(mc, x, q, k, v, mask, *w,
+                               block_q=ac.block_q, block_kv=_bkv),)
+
+        entries.append((
+            f"attn_ffn_L{l}_G{g}", af,
+            [("x", _f32(l, d)), ("q", _f32(l, hq, hd)),
+             ("k", _f32(g, hkv, hd)), ("v", _f32(g, hkv, hd)),
+             ("mask", _f32(l, g))] + attn_w,
+            ["x_out"],
+            {"kind": "attn_ffn", "l": l, "g": g},
+        ))
+
+    c = ac.decode_cache
+
+    def dec(x, pos, kc, vc, mask, *w):
+        return M.decode_block(mc, x, pos, kc, vc, mask, *w)
+
+    entries.append((
+        f"decode_block_C{c}", dec,
+        [("x", _f32(1, d)), ("pos", _i32(1)),
+         ("k_cache", _f32(c, hkv, hd)), ("v_cache", _f32(c, hkv, hd)),
+         ("mask", _f32(1, c))] + wspecs,
+        ["x_out", "k_new", "v_new"],
+        {"kind": "decode_block", "c": c},
+    ))
+
+    def logits(x, ln_f, w_out):
+        return (M.logits_head(mc, x, ln_f, w_out),)
+
+    entries.append((
+        "logits", logits,
+        [("x", _f32(1, d)), ("ln_f", _f32(d)),
+         ("w_out", _f32(d, mc.vocab_size))],
+        ["logits"],
+        {"kind": "logits"},
+    ))
+
+    for l in ac.l_variants:
+        def emb(ids, table):
+            return (table[ids],)
+
+        entries.append((
+            f"embed_L{l}", emb,
+            [("ids", _i32(l)), ("emb", _f32(mc.vocab_size, d))],
+            ["x"],
+            {"kind": "embed", "l": l},
+        ))
+    return entries
+
+
+def export(mc: ModelConfig, ac: AotConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = manifest_dict(mc, ac)
+    manifest["entries"] = []
+    for name, fn, args, outs, meta in build_entries(mc, ac):
+        specs = [s for (_, s) in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name,
+            "file": fname,
+            **meta,
+            "inputs": [
+                {"name": an, "dtype": str(s.dtype), "shape": list(s.shape)}
+                for (an, s) in args
+            ],
+            "outputs": outs,
+        })
+        print(f"  {name}: {len(text)} chars, {len(args)} inputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def dump_fixtures(mc: ModelConfig, ac: AotConfig, out_dir: str, seed=3):
+    """Dump cross-language test fixtures (random weights, deterministic).
+
+    ``fixtures.npz`` holds, for each entry-point kind, one concrete
+    input/output example computed by the JAX reference, plus a complete
+    FedAttn scenario (uniform H=2, 3 participants) for the end-to-end
+    integration test in Rust.
+    """
+    from . import fedattn_ref as F
+    from . import data as D
+
+    rng = np.random.default_rng(seed)
+    params = M.init_params(mc, jax.random.PRNGKey(seed))
+    fx = {}
+
+    # --- block_fused on the smallest L variant ---
+    l = ac.l_variants[0]
+    x = rng.standard_normal((l, mc.d_model)).astype(np.float32)
+    pos = np.arange(l, dtype=np.int32)
+    mask = np.asarray(M.causal_mask(l))
+    bp = M.block_params(params, 0)
+    xo, k, v = M.block_fused(mc, jnp.asarray(x), jnp.asarray(pos),
+                             jnp.asarray(mask), *bp,
+                             block_q=ac.block_q, block_kv=_kv_tile(ac, l))
+    fx.update({"bf.x": x, "bf.pos": pos, "bf.mask": mask,
+               "bf.x_out": np.asarray(xo), "bf.k": np.asarray(k),
+               "bf.v": np.asarray(v)})
+
+    # --- attn_ffn with a global KV buffer ---
+    g = ac.g_variants[0]
+    q2, k2, v2 = M.qkv_project(mc, jnp.asarray(x), jnp.asarray(pos), *bp[:7])
+    kg = rng.standard_normal((g, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+    vg = rng.standard_normal((g, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+    maskg = np.where(rng.random((l, g)) < 0.5, 0.0, -1e30).astype(np.float32)
+    xo2 = M.attn_ffn(mc, jnp.asarray(x), q2, jnp.asarray(kg), jnp.asarray(vg),
+                     jnp.asarray(maskg), *bp[7:],
+                     block_q=ac.block_q, block_kv=_kv_tile(ac, g))
+    fx.update({"af.q": np.asarray(q2), "af.kg": kg, "af.vg": vg,
+               "af.mask": maskg, "af.x_out": np.asarray(xo2),
+               "qkv.k": np.asarray(k2), "qkv.v": np.asarray(v2)})
+
+    # --- decode_block ---
+    c = ac.decode_cache
+    xd = rng.standard_normal((1, mc.d_model)).astype(np.float32)
+    posd = np.array([g + 1], dtype=np.int32)
+    kc = rng.standard_normal((c, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+    vc = rng.standard_normal((c, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+    maskd = np.where(np.arange(c)[None, :] < g, 0.0, -1e30).astype(np.float32)
+    xd2, kn, vn = M.decode_block(mc, jnp.asarray(xd), jnp.asarray(posd),
+                                 jnp.asarray(kc), jnp.asarray(vc),
+                                 jnp.asarray(maskd), *bp)
+    fx.update({"dec.x": xd, "dec.pos": posd, "dec.kc": kc, "dec.vc": vc,
+               "dec.mask": maskd, "dec.x_out": np.asarray(xd2),
+               "dec.k_new": np.asarray(kn), "dec.v_new": np.asarray(vn)})
+
+    # --- full FedAttn scenario: 3 participants, uniform H=2 ---
+    drng = D.SplitMix64(seed)
+    ep = D.gen_episode(drng, 4)
+    prompt_ids, _ = D.episode_ids(ep)
+    ids = np.asarray(prompt_ids, dtype=np.int32)
+    L = len(ids)
+    owners = np.minimum(np.arange(L) * 3 // L, 2).astype(np.int32)
+    sched = F.FedSchedule.uniform(mc.n_layers, 3, 2)
+    xfin = F.fedattn_forward(mc, params, ids, owners, sched)
+    logits = F.fedattn_logits(mc, params, ids, owners, sched, publisher=2)
+    fx.update({"fed.ids": ids, "fed.owners": owners,
+               "fed.h": np.int32(2),
+               "fed.x_final": np.asarray(xfin),
+               "fed.logits": np.asarray(logits)})
+
+    np.savez(os.path.join(out_dir, "fixtures.npz"), **fx)
+    np.savez(os.path.join(out_dir, "fixture_weights.npz"),
+             **{kk: np.asarray(vv) for kk, vv in params.items()})
+    print(f"  fixtures: {len(fx)} arrays")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="base", choices=sorted(PRESETS))
+    ap.add_argument("--fixtures", action="store_true",
+                    help="also dump cross-language test fixtures")
+    args = ap.parse_args()
+    mc = PRESETS[args.preset]
+    print(f"exporting {mc.name} ({mc.param_count()} params) -> {args.out}")
+    export(mc, DEFAULT_AOT, args.out)
+    if args.fixtures:
+        dump_fixtures(mc, DEFAULT_AOT, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Shared model / AOT configuration for the FedAttn build path.
+
+This module is the single source of truth for the TinyQwen architecture and
+the artifact variant grid.  Rust consumes the same values through
+``artifacts/manifest.json`` emitted by :mod:`compile.aot`.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Qwen2.5-shaped decoder-only LM (RMSNorm pre-norm, RoPE, GQA, SwiGLU).
+
+    The defaults are the ``base`` preset used for all paper-figure benches.
+    """
+
+    name: str = "tinyqwen-base"
+    vocab_size: int = 128          # byte-level ASCII tokenizer
+    d_model: int = 96
+    n_layers: int = 8
+    n_heads: int = 4               # query heads
+    n_kv_heads: int = 2            # GQA: grouped KV heads
+    head_dim: int = 24
+    d_ff: int = 256
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    qkv_bias: bool = True          # Qwen2.5 uses bias on Q/K/V projections
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        d, v = self.d_model, self.vocab_size
+        per_block = (
+            d  # ln1
+            + d * self.q_dim + self.q_dim      # wq + bq
+            + d * self.kv_dim + self.kv_dim    # wk + bk
+            + d * self.kv_dim + self.kv_dim    # wv + bv
+            + self.q_dim * d                   # wo
+            + d                                # ln2
+            + d * self.d_ff * 2                # gate + up
+            + self.d_ff * d                    # down
+        )
+        return v * d + self.n_layers * per_block + d + d * v  # emb, blocks, ln_f, w_out
+
+
+# Named width/depth presets standing in for the paper's 0.5B..7B model-size
+# sweep (calibration band repro=0: real Qwen checkpoints are unavailable).
+PRESETS = {
+    "tiny": ModelConfig(name="tinyqwen-tiny", d_model=48, n_layers=4, n_heads=2,
+                        n_kv_heads=1, head_dim=24, d_ff=128),
+    "base": ModelConfig(),
+    "wide": ModelConfig(name="tinyqwen-wide", d_model=160, n_layers=8, n_heads=4,
+                        n_kv_heads=2, head_dim=40, d_ff=448),
+}
+
+
+@dataclass(frozen=True)
+class AotConfig:
+    """Artifact variant grid.
+
+    ``l_variants``  — per-participant padded sequence lengths (block_fused /
+                      qkv_project / attn_ffn L dimension).
+    ``g_variants``  — global KV buffer lengths for sync-block attention.
+    ``decode_cache``— KV cache capacity for autoregressive decode blocks.
+    All lengths are multiples of the Pallas query tile (32).
+    """
+
+    l_variants: Tuple[int, ...] = (32, 64, 128, 256, 384)
+    g_variants: Tuple[int, ...] = (128, 256, 384)
+    decode_cache: int = 448
+    block_q: int = 32              # Pallas query tile
+    block_kv: int = 64             # Pallas KV tile
+
+    def attn_pairs(self) -> List[Tuple[int, int]]:
+        """(L, G) pairs compiled for sync-block attention."""
+        return [(l, g) for l in self.l_variants for g in self.g_variants if g >= l]
+
+
+DEFAULT_AOT = AotConfig()
+
+
+def manifest_dict(mc: ModelConfig, ac: AotConfig) -> dict:
+    return {
+        "format": 1,
+        "model": asdict(mc),
+        "aot": {
+            "l_variants": list(ac.l_variants),
+            "g_variants": list(ac.g_variants),
+            "decode_cache": ac.decode_cache,
+            "block_q": ac.block_q,
+            "block_kv": ac.block_kv,
+        },
+    }

@@ -1,0 +1,162 @@
+"""MicroFact: the synthetic collaborative-QA corpus (GSM8K stand-in).
+
+The paper evaluates FedAttn with Qwen2.5 on GSM8K few-shot prompts; neither
+is available here (repro band 0), so we substitute a task that preserves the
+*mechanism* being measured: answering requires combining information held by
+**different participants**, so the exact-match accuracy is causally coupled
+to KV-exchange frequency, sync placement, and sparsity — exactly the knobs
+of Figs. 5–10.
+
+An episode:  F entity–count facts (``"Lia has 7 plums."``) + a question that
+combines two of them (sum / difference / larger-of) + the numeric answer.
+Centralized text:
+
+    <BOS>Lia has 7 plums. Omar has 5 plums. ... Q: how many plums do Lia and
+    Omar have in total? A: 12<EOS>
+
+The same generator (same PRNG: SplitMix64) is re-implemented in Rust
+(``rust/src/data``) so training data (Python) and serving workloads (Rust)
+come from one distribution; cross-language agreement is tested via fixture
+dumps.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+# --- byte-level tokenizer (mirrors rust/src/tokenizer) ---------------------
+PAD, BOS, EOS = 0, 1, 2
+VOCAB_SIZE = 128
+
+
+def encode(text: str) -> List[int]:
+    """ASCII chars map to their own codes; everything else is dropped."""
+    return [b for b in text.encode("ascii", errors="ignore") if 32 <= b < 127]
+
+
+def decode_ids(ids) -> str:
+    return "".join(chr(i) for i in ids if 32 <= i < 127)
+
+
+# --- SplitMix64 — identical constants to rust/src/util/prng.rs -------------
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG shared bit-for-bit with the Rust side."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) (modulo method; n << 2^64 so bias ~0)."""
+        return self.next_u64() % n
+
+
+# Pools — keep in lockstep with rust/src/data/microfact.rs.
+NAMES = [
+    "Lia", "Omar", "Tess", "Ravi", "Noa", "Kai", "Mia", "Jon",
+    "Zoe", "Eli", "Ana", "Max", "Ida", "Sam", "Uma", "Leo",
+]
+ITEMS = [
+    "plums", "coins", "books", "pens", "cards", "nuts", "cups", "keys",
+    "bags", "hats", "rocks", "seeds",
+]
+MIN_COUNT, MAX_COUNT = 2, 9  # single-digit counts: answers are <= 2 chars
+
+
+@dataclass
+class Episode:
+    facts: List[str]          # one sentence per fact
+    question: str             # includes trailing "A:" marker? (no — see text)
+    answer: str               # numeric string
+    n_facts: int
+    q_kind: str
+
+    @property
+    def prompt(self) -> str:
+        return " ".join(self.facts) + " " + self.question
+
+    @property
+    def full_text(self) -> str:
+        return self.prompt + " " + self.answer
+
+
+def gen_episode(rng: SplitMix64, n_facts: int = 4) -> Episode:
+    """Generate one episode with ``n_facts`` facts and a 2-entity question."""
+    item = ITEMS[rng.below(len(ITEMS))]
+    # Distinct names, one count each.
+    idxs: List[int] = []
+    while len(idxs) < n_facts:
+        c = rng.below(len(NAMES))
+        if c not in idxs:
+            idxs.append(c)
+    names = [NAMES[i] for i in idxs]
+    counts = [MIN_COUNT + rng.below(MAX_COUNT - MIN_COUNT + 1)
+              for _ in range(n_facts)]
+    facts = [f"{n} has {c} {item}." for n, c in zip(names, counts)]
+
+    a = rng.below(n_facts)
+    b = rng.below(n_facts)
+    while b == a:
+        b = rng.below(n_facts)
+    # Retrieval-heavy mix: "get" (single-fact lookup) dominates so that EM is
+    # driven by cross-participant attention rather than arithmetic capacity.
+    r = rng.below(10)
+    kind = "get" if r < 4 else ("most" if r < 7 else "sum")
+    if kind == "get":
+        q = f"Q: how many {item} does {names[a]} have? A:"
+        ans = str(counts[a])
+    elif kind == "most":
+        hi = a if counts[a] >= counts[b] else b
+        q = f"Q: who has more {item}, {names[a]} or {names[b]}? A:"
+        ans = names[hi]
+    else:
+        q = (f"Q: how many {item} do {names[a]} and {names[b]} have in "
+             f"total? A:")
+        ans = str(counts[a] + counts[b])
+    return Episode(facts, q, ans, n_facts, kind)
+
+
+def episode_ids(ep: Episode) -> Tuple[List[int], List[int]]:
+    """(prompt ids with BOS, answer ids with EOS)."""
+    return [BOS] + encode(ep.prompt), encode(" " + ep.answer) + [EOS]
+
+
+ANSWER_WEIGHT = 8.0
+
+
+def pack_training_batch(rng: SplitMix64, batch: int, seq_len: int,
+                        min_facts: int = 3, max_facts: int = 6):
+    """Pack episodes into [batch, seq_len] id / target / weight arrays.
+
+    Targets are next-token ids.  Answer-span targets (the tokens after
+    "A:" plus EOS) carry ``ANSWER_WEIGHT`` — they are the task signal and
+    only ~2% of the tokens; the facts are irreducibly random and would
+    otherwise dominate the gradient.
+    """
+    import numpy as np
+
+    ids = np.zeros((batch, seq_len), dtype=np.int32)
+    wts = np.ones((batch, seq_len), dtype=np.float32)
+    for bi in range(batch):
+        row: List[int] = []
+        roww: List[float] = []
+        while len(row) < seq_len:
+            nf = min_facts + rng.below(max_facts - min_facts + 1)
+            ep = gen_episode(rng, nf)
+            p, a = episode_ids(ep)
+            row.extend(p + a)
+            roww.extend([1.0] * len(p) + [ANSWER_WEIGHT] * len(a))
+        ids[bi] = row[:seq_len]
+        wts[bi] = roww[:seq_len]
+    inputs = ids[:, :-1]
+    targets = ids[:, 1:]
+    weights = wts[:, 1:] * (targets != PAD)
+    return inputs, targets, weights

@@ -1,0 +1,122 @@
+"""Pure-JAX reference implementation of the FedAttn algorithm (Alg. 1).
+
+Used for (a) the H=1 ≡ CenAttn invariant test, (b) cross-language fixtures
+checked by the Rust integration tests, and (c) quick python-side experiments.
+
+Implementation note — the *global mask formulation*: because attention rows
+are independent, running each participant's local attention over its own
+token set is mathematically identical to running one global attention over
+the full sequence with a visibility mask:
+
+    visible(i, j)  ⇔  pos_j ≤ pos_i                     (causality)
+                   ∧ ( owner(i) == owner(j)             (always see own KV)
+                     ∨ ( attending(owner(i), m)         (i's owner performs
+                       ∧ transmitted(j, m) ) )           global attention and
+                                                         j's row was exchanged)
+
+Every participant computes K/V at every block as part of its local forward,
+so any attendee can receive any peer's current-block KV; "attending" means
+*performing global attention* (and is what costs communication).
+
+This reproduces Eq. 18 (local), Eq. 20–21 (global aggregation + attention),
+per-participant schedules (paper Fig. 8), and sparse KV exchange (Fig. 10)
+in one place.  The Rust coordinator implements the *distributed* version
+(real per-participant buffers + exchange); fixtures pin the two together.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels.ref import NEG
+from .model import block_params, qkv_project, attn_ffn, rms_norm
+
+
+@dataclass
+class BlockSync:
+    """Sync behaviour of one Transformer block.
+
+    ``participants``: indices that perform *global* self-attention at this
+    block (empty = pure local block).  ``transmitted``: optional per-
+    participant boolean array over its local rows — which KV rows it
+    actually transmits (sparse KV exchange); ``None`` = all rows.
+    """
+    participants: Sequence[int] = ()
+    transmitted: Optional[Dict[int, np.ndarray]] = None
+
+
+@dataclass
+class FedSchedule:
+    """Per-block sync configuration; length == n_layers."""
+    blocks: List[BlockSync]
+
+    @staticmethod
+    def uniform(n_layers: int, n_participants: int, h: int) -> "FedSchedule":
+        """Every h-th block is a global-sync block (Alg. 1's fixed H)."""
+        blocks = []
+        for m in range(n_layers):
+            if (m + 1) % h == 0:
+                blocks.append(BlockSync(tuple(range(n_participants))))
+            else:
+                blocks.append(BlockSync(()))
+        return FedSchedule(blocks)
+
+
+def build_mask(owners: np.ndarray, pos: np.ndarray, sync: BlockSync,
+               n_participants: int) -> np.ndarray:
+    """[L, L] additive mask for one block under the global-mask formulation."""
+    L = owners.shape[0]
+    causal = pos[:, None] >= pos[None, :]
+    same = owners[:, None] == owners[None, :]
+    syncing = np.zeros(n_participants, dtype=bool)
+    for p in sync.participants:
+        syncing[p] = True
+    tx = np.ones(L, dtype=bool)
+    if sync.transmitted is not None:
+        for p, keep in sync.transmitted.items():
+            tx[owners == p] = keep
+    cross = syncing[owners][:, None] & tx[None, :]
+    visible = causal & (same | cross)
+    return np.where(visible, 0.0, NEG).astype(np.float32)
+
+
+def fedattn_forward(mc: ModelConfig, params, ids: np.ndarray,
+                    owners: np.ndarray, schedule: FedSchedule,
+                    *, use_pallas=False, collect_hidden=False):
+    """Run the federated prefill; returns final hidden states [L, d].
+
+    Args:
+      ids:     [L] global token ids (participant shards interleaved in
+               global order).
+      owners:  [L] participant index of each token.
+      schedule: per-block sync configuration.
+      collect_hidden: also return the per-block hidden list (error analysis).
+    """
+    L = ids.shape[0]
+    pos = np.arange(L, dtype=np.int32)
+    x = params["emb"][jnp.asarray(ids)]
+    n_participants = int(owners.max()) + 1 if L else 0
+    hiddens = []
+    for m in range(mc.n_layers):
+        mask = jnp.asarray(build_mask(owners, pos, schedule.blocks[m],
+                                      n_participants))
+        bp = block_params(params, m)
+        q, k, v = qkv_project(mc, x, jnp.asarray(pos), *bp[:7])
+        x = attn_ffn(mc, x, q, k, v, mask, *bp[7:], use_pallas=use_pallas)
+        if collect_hidden:
+            hiddens.append(np.asarray(x))
+    if collect_hidden:
+        return x, hiddens
+    return x
+
+
+def fedattn_logits(mc: ModelConfig, params, ids, owners, schedule,
+                   publisher: int, **kw):
+    """Next-token logits at the publisher's last token (decode kick-off)."""
+    x = fedattn_forward(mc, params, ids, owners, schedule, **kw)
+    idx = int(np.where(owners == publisher)[0][-1])
+    h = x[idx:idx + 1]
+    return rms_norm(h, params["ln_f"], mc.rms_eps) @ params["w_out"]

@@ -1,0 +1,126 @@
+"""Layer-1 Pallas kernel: blocked, masked multi-head attention (GQA).
+
+This is the compute hot-spot of FedAttn's non-autoregressive prefill: every
+Transformer block — local self-attention (Eq. 18) and global self-attention
+over the aggregated KV matrix (Eq. 21) — funnels through this kernel.  The
+FedAttn-specific semantics (causality by *global* token position, padding
+validity, sparse-KV-exchange visibility, per-participant aggregation masks)
+are all carried by the additive ``mask`` operand built by the Rust
+coordinator, so a single kernel serves every schedule and sparsity policy.
+
+Hardware adaptation (paper targets generic edge accelerators / GPUs):
+  * the KV sequence is tiled along ``G`` into VMEM-resident blocks via
+    ``BlockSpec`` index maps — the TPU analogue of CUDA threadblock tiling
+    over shared memory;
+  * Q.K^T and P.V contractions are expressed as dense [bq,hd]x[hd,bk]
+    matmuls that map onto the MXU systolic array;
+  * softmax is computed *online* (flash-style running max / denominator in
+    scratch) so no [L,G] score matrix ever exists in HBM.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO ops that the
+Rust runtime runs unmodified.  The BlockSpec structure (VMEM footprint, MXU
+tile shapes) is what the DESIGN.md TPU estimate is based on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, scale, n_kv_tiles):
+    """One (head, q-tile, kv-tile) grid cell of online-softmax attention.
+
+    Grid is (Hq, L/bq, G/bk) with the KV tile as the innermost dimension, so
+    the running statistics in scratch carry across KV tiles of a fixed
+    (head, q-tile) pair.
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]          # [bq, hd]
+    k = k_ref[0]          # [bk, hd]
+    v = v_ref[0]          # [bk, hd]
+    mask = mask_ref[...]  # [bq, bk]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + mask
+
+    m_prev = m_ref[...]                       # [bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)            # [bq]
+    p = jnp.exp(s - m_new[:, None])           # [bq, bk]
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_tiles - 1)
+    def _flush():
+        l = l_ref[...]
+        # Fully-masked rows (padding queries): running max never left NEG.
+        dead = m_ref[...] <= NEG / 2
+        denom = jnp.where(l == 0.0, 1.0, l)
+        out = acc_ref[...] / denom[:, None]
+        o_ref[0] = jnp.where(dead[:, None], 0.0, out).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv"))
+def pallas_mha(q, k, v, mask, *, block_q=32, block_kv=64):
+    """Masked GQA attention via the blocked Pallas kernel.
+
+    Args:
+      q:    [L, Hq, hd].
+      k:    [G, Hkv, hd].
+      v:    [G, Hkv, hd].
+      mask: [L, G] additive (0 visible, NEG hidden).
+      block_q / block_kv: tile sizes; must divide L and G respectively.
+
+    Returns:
+      [L, Hq, hd] attention output, matching :func:`compile.kernels.ref.mha_ref`.
+    """
+    L, Hq, hd = q.shape
+    G, Hkv, _ = k.shape
+    assert L % block_q == 0, (L, block_q)
+    assert G % block_kv == 0, (G, block_kv)
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    n_kv_tiles = G // block_kv
+    scale = 1.0 / (hd ** 0.5)
+
+    # Head-major layouts so BlockSpec can index heads on the leading axis.
+    qh = jnp.transpose(q, (1, 0, 2))  # [Hq, L, hd]
+    kh = jnp.transpose(k, (1, 0, 2))  # [Hkv, G, hd]
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    kernel = functools.partial(_mha_kernel, scale=scale, n_kv_tiles=n_kv_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Hq, L // block_q, n_kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((block_q, block_kv), lambda h, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hq, L, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m
+            pltpu.VMEM((block_q,), jnp.float32),   # running denominator l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(qh, kh, vh, mask)
+    return jnp.transpose(out, (1, 0, 2))

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Pallas attention kernel.
+
+This is the correctness ground truth: every Pallas kernel variant is checked
+against this implementation in ``python/tests/test_kernel.py``, and the same
+math backs the decode-path attention (which is not a Pallas hot-spot — the
+paper targets the non-autoregressive prefill).
+"""
+
+import jax.numpy as jnp
+
+# Additive mask value for invisible positions.  Finite (not -inf) so that
+# fully-masked rows produce zeros rather than NaNs after the guard below.
+NEG = -1e30
+
+
+def mha_ref(q, k, v, mask):
+    """Masked multi-head attention with GQA broadcast.
+
+    Args:
+      q:    [L, Hq, hd] queries.
+      k:    [G, Hkv, hd] keys.
+      v:    [G, Hkv, hd] values.
+      mask: [L, G] additive mask (0 = visible, NEG = hidden).  Encodes
+            causality by global position, padding validity and FedAttn's
+            sparse-KV-exchange visibility.
+
+    Returns:
+      [L, Hq, hd] attention output.  Fully-masked query rows return zeros.
+    """
+    L, Hq, hd = q.shape
+    G, Hkv, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=q.dtype))
+
+    # [Hq, L, hd] x [Hkv->Hq, hd, G] -> [Hq, L, G]
+    qh = jnp.transpose(q, (1, 0, 2))
+    kh = jnp.repeat(jnp.transpose(k, (1, 0, 2)), group, axis=0)
+    vh = jnp.repeat(jnp.transpose(v, (1, 0, 2)), group, axis=0)
+    s = jnp.einsum("hld,hgd->hlg", qh, kh) * scale + mask[None, :, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    # Guard fully-masked rows: when every score is NEG the row max is NEG.
+    fully_masked = m <= NEG / 2
+    o = jnp.einsum("hlg,hgd->hld", p / denom, vh)
+    o = jnp.where(fully_masked, 0.0, o)
+    return jnp.transpose(o, (1, 0, 2))

@@ -1,0 +1,214 @@
+"""Layer-2 JAX model: TinyQwen forward pieces used by FedAttn.
+
+A Qwen2.5-shaped decoder-only LM (pre-norm RMSNorm, RoPE, GQA, SwiGLU, QKV
+bias).  The model is decomposed exactly along the FedAttn algorithm's joints
+(paper Alg. 1) so the Rust coordinator owns the schedule:
+
+  * ``block_fused``  — one Transformer block with *local* self-attention
+                       (Phase I, Eq. 17–19); also returns the block's K/V for
+                       the decode-stage cache.
+  * ``qkv_project``  — Q/K/V projection + RoPE only (Eq. 17), run before the
+                       KV exchange at a sync block.
+  * ``attn_ffn``     — attention of local Q over an (aggregated, global) KV
+                       buffer + residual + FFN (Eq. 20–21 + 19).
+  * ``decode_block`` — one block of autoregressive decoding over a KV cache
+                       (paper §IV-C); uses the jnp reference attention since
+                       decode is not the paper's hot-spot.
+  * ``logits``       — final RMSNorm + LM head.
+
+All weights are *runtime parameters* (no baked constants) so a single lowered
+HLO serves every layer; Rust uploads weights once as device buffers.
+
+Weight-name convention (npz keys): ``blk{m}.{ln1,wq,bq,wk,bk,wv,bv,wo,
+ln2,wg,wu,wd}``, plus ``emb``, ``ln_f``, ``w_out``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.attention import pallas_mha
+from .kernels.ref import mha_ref, NEG
+
+# Per-block weight tensor order — shared with the manifest and Rust runtime.
+BLOCK_PARAM_NAMES = (
+    "ln1", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "ln2", "wg", "wu", "wd",
+)
+
+
+def rms_norm(x, w, eps=1e-6):
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta=10_000.0):
+    """Rotary position embedding (half-rotation form).
+
+    Args:
+      x:   [L, H, hd].
+      pos: [L] int32 *global* token positions (FedAttn participants keep
+           their tokens' positions in the global sequence).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]       # [L, half]
+    cos = jnp.cos(ang)[:, None, :]                                # [L, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(h, wg, wu, wd):
+    """SwiGLU FFN: (silu(h @ wg) * (h @ wu)) @ wd."""
+    g = h @ wg
+    return (jax.nn.silu(g) * (h @ wu)) @ wd
+
+
+def qkv_project(mc: ModelConfig, x, pos, ln1, wq, bq, wk, bk, wv, bv):
+    """Eq. 17: pre-norm QKV projection with RoPE applied to Q and K.
+
+    Returns q [L,Hq,hd], k [L,Hkv,hd], v [L,Hkv,hd] in token-major layout so
+    that KV aggregation (Eq. 20) is a concatenation along axis 0.
+    """
+    L = x.shape[0]
+    h = rms_norm(x, ln1, mc.rms_eps)
+    q = (h @ wq + bq).reshape(L, mc.n_heads, mc.head_dim)
+    k = (h @ wk + bk).reshape(L, mc.n_kv_heads, mc.head_dim)
+    v = (h @ wv + bv).reshape(L, mc.n_kv_heads, mc.head_dim)
+    q = rope(q, pos, mc.rope_theta)
+    k = rope(k, pos, mc.rope_theta)
+    return q, k, v
+
+
+def attn_ffn(mc: ModelConfig, x, q, k, v, mask, wo, ln2, wg, wu, wd,
+             *, block_q=32, block_kv=64, use_pallas=True):
+    """Eq. 18/21 + Eq. 19: attention output, residual, FFN, residual."""
+    L = x.shape[0]
+    if use_pallas:
+        o = pallas_mha(q, k, v, mask, block_q=block_q, block_kv=block_kv)
+    else:
+        o = mha_ref(q, k, v, mask)
+    o = o.reshape(L, mc.q_dim) @ wo
+    x = x + o
+    x = x + swiglu(rms_norm(x, ln2, mc.rms_eps), wg, wu, wd)
+    return x
+
+
+def block_fused(mc: ModelConfig, x, pos, mask,
+                ln1, wq, bq, wk, bk, wv, bv, wo, ln2, wg, wu, wd,
+                *, block_q=32, block_kv=64, use_pallas=True):
+    """One local-attention Transformer block (Phase I).
+
+    Returns (x_out, k, v); K/V are kept for the decode-stage cache and for
+    the KV exchange bookkeeping in the coordinator.
+    """
+    q, k, v = qkv_project(mc, x, pos, ln1, wq, bq, wk, bk, wv, bv)
+    x = attn_ffn(mc, x, q, k, v, mask, wo, ln2, wg, wu, wd,
+                 block_q=block_q, block_kv=block_kv, use_pallas=use_pallas)
+    return x, k, v
+
+
+def decode_block(mc: ModelConfig, x, pos, k_cache, v_cache, mask,
+                 ln1, wq, bq, wk, bk, wv, bv, wo, ln2, wg, wu, wd):
+    """One block of single-token decoding over a padded KV cache.
+
+    Args:
+      x:       [1, d] current token hidden state.
+      pos:     [1] global position of the token.
+      k_cache: [C, Hkv, hd] padded cache (local KV for local blocks, global
+               KV for sync blocks — paper §IV-C).
+      mask:    [1, C] additive validity mask for cache rows.
+
+    Returns (x_out [1,d], k_new [1,Hkv,hd], v_new [1,Hkv,hd]); the Rust
+    coordinator writes k_new/v_new into the cache at the token's slot.
+    """
+    q, k_new, v_new = qkv_project(mc, x, pos, ln1, wq, bq, wk, bk, wv, bv)
+    k_all = jnp.concatenate([k_cache, k_new], axis=0)
+    v_all = jnp.concatenate([v_cache, v_new], axis=0)
+    mask_all = jnp.concatenate(
+        [mask, jnp.zeros((1, 1), dtype=mask.dtype)], axis=1)
+    o = mha_ref(q, k_all, v_all, mask_all)
+    o = o.reshape(1, mc.q_dim) @ wo
+    x = x + o
+    x = x + swiglu(rms_norm(x, ln2, mc.rms_eps), wg, wu, wd)
+    return x, k_new, v_new
+
+
+def logits_head(mc: ModelConfig, x, ln_f, w_out):
+    """Final RMSNorm + LM head for the last-position hidden state [1, d]."""
+    return rms_norm(x, ln_f, mc.rms_eps) @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward (training / reference / fixtures) — centralized
+# attention, i.e. the CenAttn baseline of the paper.
+# ---------------------------------------------------------------------------
+
+def init_params(mc: ModelConfig, key):
+    """Initialise a full parameter dict (flat name -> f32 array)."""
+    d, dff = mc.d_model, mc.d_ff
+    params = {}
+    k_emb, key = jax.random.split(key)
+    params["emb"] = jax.random.normal(k_emb, (mc.vocab_size, d)) * 0.02
+    for m in range(mc.n_layers):
+        keys = jax.random.split(jax.random.fold_in(key, m), 8)
+        s = 1.0 / jnp.sqrt(d)
+        blk = {
+            "ln1": jnp.ones((d,)),
+            "wq": jax.random.normal(keys[0], (d, mc.q_dim)) * s,
+            "bq": jnp.zeros((mc.q_dim,)),
+            "wk": jax.random.normal(keys[1], (d, mc.kv_dim)) * s,
+            "bk": jnp.zeros((mc.kv_dim,)),
+            "wv": jax.random.normal(keys[2], (d, mc.kv_dim)) * s,
+            "bv": jnp.zeros((mc.kv_dim,)),
+            "wo": jax.random.normal(keys[3], (mc.q_dim, d)) * s,
+            "ln2": jnp.ones((d,)),
+            "wg": jax.random.normal(keys[4], (d, dff)) * s,
+            "wu": jax.random.normal(keys[5], (d, dff)) * s,
+            "wd": jax.random.normal(keys[6], (dff, d)) / jnp.sqrt(dff),
+        }
+        for name, val in blk.items():
+            params[f"blk{m}.{name}"] = val.astype(jnp.float32)
+    k_out, _ = jax.random.split(key)
+    params["ln_f"] = jnp.ones((d,), jnp.float32)
+    params["w_out"] = (jax.random.normal(k_out, (d, mc.vocab_size))
+                       / jnp.sqrt(d)).astype(jnp.float32)
+    return {k: v.astype(jnp.float32) for k, v in params.items()}
+
+
+def block_params(params, m):
+    """Ordered per-block weight list for layer ``m``."""
+    return [params[f"blk{m}.{n}"] for n in BLOCK_PARAM_NAMES]
+
+
+def causal_mask(L, valid=None):
+    """[L, L] additive causal mask; ``valid`` [L] bool marks real tokens."""
+    i = jnp.arange(L)
+    m = jnp.where(i[:, None] >= i[None, :], 0.0, NEG).astype(jnp.float32)
+    if valid is not None:
+        m = jnp.where(valid[None, :], m, NEG)
+    return m
+
+
+def forward_hidden(mc: ModelConfig, params, ids, *, use_pallas=False):
+    """Centralized full-stack forward returning final hidden states [L, d].
+
+    Uses the jnp reference attention by default (training path — faster to
+    trace); the Pallas path is exercised by the AOT artifacts and tests.
+    """
+    L = ids.shape[0]
+    x = params["emb"][ids]
+    pos = jnp.arange(L, dtype=jnp.int32)
+    mask = causal_mask(L)
+    for m in range(mc.n_layers):
+        x, _, _ = block_fused(mc, x, pos, mask, *block_params(params, m),
+                              use_pallas=use_pallas)
+    return x
+
+
+def forward_logits(mc: ModelConfig, params, ids, *, use_pallas=False):
+    """Centralized forward returning next-token logits [L, V]."""
+    x = forward_hidden(mc, params, ids, use_pallas=use_pallas)
+    return rms_norm(x, params["ln_f"], mc.rms_eps) @ params["w_out"]

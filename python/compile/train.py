@@ -1,0 +1,170 @@
+"""Build-time training of TinyQwen on MicroFact (CPU JAX).
+
+This replaces the paper's pretrained Qwen2.5 checkpoints (unavailable —
+repro band 0).  Training is centralized (CenAttn): FedAttn is an *inference*
+paradigm and reuses the very same weights, so H=1 FedAttn recovers the
+trained model's accuracy and larger H degrades it — the paper's Fig. 5
+mechanism.
+
+Hand-rolled Adam (optax is not installed in this image).  The checkpoint is
+written as an uncompressed ``.npz`` (the Rust ``xla`` crate reads npz
+natively) plus a JSON training log.
+
+Usage:  python -m compile.train --out ../artifacts [--steps N] [--preset base]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .config import PRESETS, ModelConfig
+from .model import forward_logits, init_params
+
+
+def cross_entropy(logits, targets, weights):
+    """Mean weighted token-level cross entropy."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def make_step(mc: ModelConfig, lr_schedule):
+    """Jitted Adam step with gradient clipping and decoupled weight decay."""
+
+    def loss_fn(params, inputs, targets, weights):
+        logits = jax.vmap(lambda ids: forward_logits(mc, params, ids))(inputs)
+        return cross_entropy(logits, targets, weights)
+
+    @jax.jit
+    def step(params, m_state, v_state, inputs, targets, weights, it):
+        loss, grads = jax.value_and_grad(loss_fn)(params, inputs, targets, weights)
+        # Global-norm clip at 1.0.
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-9))
+        lr = lr_schedule(it)
+        b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+
+        def upd(p, g, m, v, name_is_matrix):
+            g = g * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** (it + 1))
+            vhat = v / (1 - b2 ** (it + 1))
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if name_is_matrix:
+                delta = delta + wd * p
+            return p - lr * delta, m, v
+
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            is_matrix = params[k].ndim >= 2
+            new_p[k], new_m[k], new_v[k] = upd(
+                params[k], grads[k], m_state[k], v_state[k], is_matrix)
+        return new_p, new_m, new_v, loss, gnorm
+
+    return step
+
+
+def greedy_decode_batch(mc, params, prompts, max_new=8):
+    """Greedy decode (centralized) for EM evaluation during training.
+
+    Re-runs the full forward per generated token — fine at this scale and
+    keeps the training script free of cache plumbing.
+    """
+    outs = []
+    for ids in prompts:
+        ids = list(ids)
+        for _ in range(max_new):
+            logits = forward_logits(mc, params, jnp.asarray(ids, jnp.int32))
+            nxt = int(jnp.argmax(logits[-1]))
+            if nxt == D.EOS:
+                break
+            ids.append(nxt)
+        outs.append(ids)
+    return outs
+
+
+def eval_em(mc, params, rng, n_episodes=32, max_new=8):
+    """Exact-match accuracy of the numeric/name answer, centralized."""
+    hits = 0
+    for _ in range(n_episodes):
+        ep = D.gen_episode(rng, 4)
+        prompt, _ = D.episode_ids(ep)
+        out = greedy_decode_batch(mc, params, [prompt], max_new=max_new)[0]
+        gen = D.decode_ids(out[len(prompt):]).strip()
+        if gen == ep.answer:
+            hits += 1
+    return hits / n_episodes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="base", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=4000)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--seq", type=int, default=160)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--eval-every", type=int, default=400)
+    ap.add_argument("--init", default=None,
+                    help="resume from an existing weights.npz")
+    args = ap.parse_args()
+
+    mc = PRESETS[args.preset]
+    os.makedirs(args.out, exist_ok=True)
+
+    def lr_schedule(it):
+        it = jnp.asarray(it, jnp.float32)
+        warm = jnp.minimum(1.0, (it + 1) / args.warmup)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(it / args.steps, 1.0)))
+        return args.lr * warm * (0.1 + 0.9 * cos)
+
+    params = init_params(mc, jax.random.PRNGKey(args.seed))
+    if args.init:
+        loaded = np.load(args.init)
+        params = {k: jnp.asarray(loaded[k]) for k in loaded.files}
+    m_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step = make_step(mc, lr_schedule)
+    rng = D.SplitMix64(args.seed)
+    eval_rng = D.SplitMix64(args.seed ^ 0xDEAD)
+
+    log = {"preset": args.preset, "params": mc.param_count(),
+           "steps": args.steps, "batch": args.batch, "seq": args.seq,
+           "loss": [], "em": []}
+    t0 = time.time()
+    for it in range(args.steps):
+        inputs, targets, weights = D.pack_training_batch(
+            rng, args.batch, args.seq + 1)
+        params, m_state, v_state, loss, gnorm = step(
+            params, m_state, v_state,
+            jnp.asarray(inputs), jnp.asarray(targets), jnp.asarray(weights),
+            it)
+        if it % 100 == 0 or it == args.steps - 1:
+            log["loss"].append([it, float(loss)])
+            print(f"step {it:5d} loss {float(loss):.4f} gnorm {float(gnorm):.2f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+        if (it + 1) % args.eval_every == 0 or it == args.steps - 1:
+            em = eval_em(mc, params, eval_rng)
+            log["em"].append([it, em])
+            print(f"  eval EM = {em:.3f}", flush=True)
+
+    np.savez(os.path.join(args.out, "weights.npz"),
+             **{k: np.asarray(v) for k, v in params.items()})
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"saved weights ({mc.param_count()} params) to {args.out}/weights.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""AOT exporter tests: entry-point coverage, HLO-text generation, manifest
+structure.  (The full export is exercised by `make artifacts`; here we lower
+one representative entry to keep the test fast.)"""
+
+import json
+
+import jax
+import pytest
+
+from compile.config import PRESETS, DEFAULT_AOT, manifest_dict
+from compile.aot import build_entries, to_hlo_text
+
+
+MC = PRESETS["base"]
+
+
+def test_entry_coverage():
+    entries = build_entries(MC, DEFAULT_AOT)
+    kinds = {}
+    for name, _, args, outs, meta in entries:
+        kinds.setdefault(meta["kind"], []).append(name)
+        assert len(outs) >= 1
+        assert len(args) >= 2
+    # Every kind the Rust runtime calls must be present.
+    for kind in ["block_fused", "qkv_project", "attn_ffn", "decode_block",
+                 "logits", "embed"]:
+        assert kind in kinds, kind
+    # One block_fused / qkv / embed per L variant.
+    assert len(kinds["block_fused"]) == len(DEFAULT_AOT.l_variants)
+    assert len(kinds["attn_ffn"]) == len(DEFAULT_AOT.attn_pairs())
+
+
+def test_block_weight_order_matches_model():
+    from compile.aot import block_weight_specs
+    from compile.model import BLOCK_PARAM_NAMES
+    specs = block_weight_specs(MC)
+    assert tuple(n for n, _ in specs) == BLOCK_PARAM_NAMES
+
+
+def test_lower_one_entry_to_hlo_text():
+    entries = build_entries(MC, DEFAULT_AOT)
+    # logits is the smallest entry — lower it end to end.
+    name, fn, args, outs, meta = next(e for e in entries if e[0] == "logits")
+    lowered = jax.jit(fn).lower(*[s for _, s in args])
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # HLO text (not serialized proto) is the interchange contract.
+    assert "parameter(0)" in text
+
+
+def test_manifest_dict_roundtrips_json():
+    m = manifest_dict(MC, DEFAULT_AOT)
+    text = json.dumps(m)
+    back = json.loads(text)
+    assert back["model"]["d_model"] == MC.d_model
+    assert back["aot"]["l_variants"] == list(DEFAULT_AOT.l_variants)
+
+
+def test_l_variants_tile_aligned():
+    for l in DEFAULT_AOT.l_variants:
+        assert l % DEFAULT_AOT.block_q == 0
+    for g in DEFAULT_AOT.g_variants:
+        assert g % DEFAULT_AOT.block_q == 0

@@ -1,0 +1,119 @@
+"""L2 model-piece tests: shapes, RoPE properties, block decomposition
+consistency (fused == projected+attended), decode-path equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.config import PRESETS, ModelConfig
+from compile import model as M
+
+
+MC = ModelConfig(
+    name="test", vocab_size=128, d_model=48, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=12, d_ff=64,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(MC, jax.random.PRNGKey(0))
+
+
+def test_param_count_matches_config(params):
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == MC.param_count()
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 2, 12)),
+                    jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        atol=1e-4,
+    )
+
+
+def test_rope_relative_positions():
+    # RoPE inner products depend only on relative offsets: shifting both
+    # positions by a constant leaves q·k unchanged.
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 12)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 12)), jnp.float32)
+    def dot_at(pq, pk):
+        qr = M.rope(q, jnp.asarray([pq], jnp.int32))
+        kr = M.rope(k, jnp.asarray([pk], jnp.int32))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(3, 1) - dot_at(13, 11)) < 1e-4
+
+
+def test_block_fused_equals_decomposed(params):
+    rng = np.random.default_rng(2)
+    L = 32
+    x = jnp.asarray(rng.standard_normal((L, MC.d_model)), jnp.float32)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    mask = M.causal_mask(L)
+    bp = M.block_params(params, 0)
+    fused_x, fused_k, fused_v = M.block_fused(
+        MC, x, pos, mask, *bp, use_pallas=False)
+    q, k, v = M.qkv_project(MC, x, pos, *bp[:7])
+    x2 = M.attn_ffn(MC, x, q, k, v, mask, *bp[7:], use_pallas=False)
+    np.testing.assert_allclose(np.asarray(fused_x), np.asarray(x2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused_k), np.asarray(k), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused_v), np.asarray(v), atol=1e-6)
+
+
+def test_decode_block_matches_prefill_last_row(params):
+    """Decoding token L-1 against the cache of tokens 0..L-2 must equal the
+    prefill block output at row L-1 — the KV-cache correctness property."""
+    rng = np.random.default_rng(3)
+    L = 16
+    x = jnp.asarray(rng.standard_normal((L, MC.d_model)), jnp.float32)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    mask = M.causal_mask(L)
+    bp = M.block_params(params, 0)
+    full_x, full_k, full_v = M.block_fused(MC, x, pos, mask, *bp, use_pallas=False)
+
+    C = 24  # padded cache
+    kc = jnp.zeros((C, MC.n_kv_heads, MC.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[: L - 1].set(full_k[: L - 1])
+    vc = vc.at[: L - 1].set(full_v[: L - 1])
+    dmask = jnp.where(jnp.arange(C)[None, :] < L - 1, 0.0, -1e30).astype(jnp.float32)
+    xd, k_new, v_new = M.decode_block(
+        MC, x[L - 1 : L], pos[L - 1 : L], kc, vc, dmask, *bp)
+    np.testing.assert_allclose(
+        np.asarray(xd[0]), np.asarray(full_x[L - 1]), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(k_new[0]), np.asarray(full_k[L - 1]), atol=1e-5)
+
+
+def test_forward_logits_shape(params):
+    ids = jnp.asarray(np.arange(10) % MC.vocab_size, jnp.int32)
+    logits = M.forward_logits(MC, params, ids)
+    assert logits.shape == (10, MC.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_pallas_and_ref_paths_agree(params):
+    rng = np.random.default_rng(4)
+    L = 32
+    x = jnp.asarray(rng.standard_normal((L, MC.d_model)), jnp.float32)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    mask = M.causal_mask(L)
+    bp = M.block_params(params, 1)
+    a, _, _ = M.block_fused(MC, x, pos, mask, *bp, use_pallas=True,
+                            block_q=32, block_kv=32)
+    b, _, _ = M.block_fused(MC, x, pos, mask, *bp, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_presets_are_consistent():
+    for name, mc in PRESETS.items():
+        assert mc.n_heads % mc.n_kv_heads == 0, name
+        assert mc.q_dim == mc.n_heads * mc.head_dim
+        assert mc.param_count() > 0

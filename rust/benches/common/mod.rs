@@ -1,0 +1,220 @@
+//! Shared support for the paper-figure benches (criterion is unavailable
+//! offline; every bench is a `harness = false` binary using this module).
+//!
+//! Each bench prints the paper's rows and writes a JSON series into
+//! `bench_out/` for later plotting / EXPERIMENTS.md.
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use fedattn::data::{gen_episode, partition, Episode, Segmentation};
+use fedattn::fedattn::{
+    FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule,
+};
+use fedattn::metrics::{em_score, CostModel};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::runtime::Engine;
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::prng::SplitMix64;
+
+/// Episodes per sweep point (override: FEDATTN_BENCH_EPISODES).
+pub fn episodes_per_point() -> usize {
+    std::env::var("FEDATTN_BENCH_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10)
+}
+
+pub fn load_engine() -> Result<Engine> {
+    let dir = fedattn::default_artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not found at {dir:?} — run `make artifacts` first"
+    );
+    Engine::load(&dir, "weights.npz")
+}
+
+/// One sweep-point configuration.
+#[derive(Clone)]
+pub struct PointCfg {
+    pub n: usize,
+    pub seg: Segmentation,
+    pub schedule: SyncSchedule,
+    pub kv_policy: KvExchangePolicy,
+    pub local_ratio: f64,
+    pub decode_all: bool,
+    pub episodes: usize,
+    pub seed: u64,
+    pub n_facts: usize,
+    pub link: LinkSpec,
+}
+
+impl PointCfg {
+    pub fn new(n: usize, seg: Segmentation, schedule: SyncSchedule) -> Self {
+        Self {
+            n,
+            seg,
+            schedule,
+            kv_policy: KvExchangePolicy::Full,
+            local_ratio: 1.0,
+            decode_all: false,
+            episodes: episodes_per_point(),
+            seed: 1234,
+            n_facts: 4,
+            link: LinkSpec::default(),
+        }
+    }
+}
+
+/// Aggregated results for one sweep point.
+#[derive(Debug, Clone, Default)]
+pub struct PointResult {
+    /// EM of the task publisher.
+    pub em_publisher: f64,
+    /// Mean / min / max per-participant EM (only when decode_all).
+    pub em_mean: f64,
+    pub em_min: f64,
+    pub em_max: f64,
+    /// Mean bytes *transmitted* per participant per task (Fig. 5 metric).
+    pub avg_tx_bytes: f64,
+    /// Mean simulated communication time per task (ms).
+    pub comm_time_ms: f64,
+    /// Mean wall-clock per task (ms).
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub episodes: usize,
+}
+
+/// Run `cfg.episodes` episodes and aggregate.
+pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut em_pub = 0usize;
+    let mut em_hits: Vec<usize> = vec![0; cfg.n];
+    let mut em_counts: Vec<usize> = vec![0; cfg.n];
+    let mut tx_sum = 0f64;
+    let mut commt = 0f64;
+    let mut pre_ms = 0f64;
+    let mut dec_ms = 0f64;
+    for e in 0..cfg.episodes {
+        let ep = gen_episode(&mut rng, cfg.n_facts);
+        let part = partition(&ep, cfg.n, cfg.seg);
+        let mut scfg = SessionConfig::new(cfg.schedule.clone());
+        scfg.kv_policy = cfg.kv_policy;
+        scfg.local_sparsity = LocalSparsity { ratio: cfg.local_ratio };
+        scfg.decode_all = cfg.decode_all;
+        scfg.seed = cfg.seed ^ (e as u64).wrapping_mul(0x9E37);
+        let net = NetSim::uniform(Topology::Star, cfg.n, cfg.link, scfg.seed);
+        let rep = FedSession::new(engine, &part, scfg, net)?.run()?;
+        if em_score(&rep.answer, &ep.answer) {
+            em_pub += 1;
+        }
+        for (p, ans) in rep.answers.iter().enumerate() {
+            if let Some(a) = ans {
+                em_counts[p] += 1;
+                if em_score(a, &ep.answer) {
+                    em_hits[p] += 1;
+                }
+            }
+        }
+        tx_sum += rep.net.avg_tx_bytes_per_participant();
+        commt += rep.net.comm_time_ms;
+        pre_ms += rep.prefill_ms;
+        dec_ms += rep.decode_ms;
+    }
+    let per_part: Vec<f64> = em_hits
+        .iter()
+        .zip(&em_counts)
+        .filter(|(_, &c)| c > 0)
+        .map(|(&h, &c)| h as f64 / c as f64)
+        .collect();
+    let ne = cfg.episodes as f64;
+    Ok(PointResult {
+        em_publisher: em_pub as f64 / ne,
+        em_mean: mean(&per_part),
+        em_min: per_part.iter().copied().fold(f64::INFINITY, f64::min),
+        em_max: per_part.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        avg_tx_bytes: tx_sum / ne,
+        comm_time_ms: commt / ne,
+        prefill_ms: pre_ms / ne,
+        decode_ms: dec_ms / ne,
+        episodes: cfg.episodes,
+    })
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Write a bench's JSON output under bench_out/.
+pub fn write_json(name: &str, value: Json) {
+    let dir = repo_root().join("bench_out");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, value.to_string_compact()) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    } else {
+        eprintln!("(series written to {path:?})");
+    }
+}
+
+fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..5 {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from(".")
+}
+
+/// JSON row helper for sweep points.
+pub fn point_json(label: &str, x: f64, r: &PointResult) -> Json {
+    JsonBuilder::new()
+        .str("label", label)
+        .num("x", x)
+        .num("em_publisher", r.em_publisher)
+        .num("em_mean", r.em_mean)
+        .num("em_min", r.em_min)
+        .num("em_max", r.em_max)
+        .num("avg_tx_bytes", r.avg_tx_bytes)
+        .num("comm_time_ms", r.comm_time_ms)
+        .num("prefill_ms", r.prefill_ms)
+        .num("decode_ms", r.decode_ms)
+        .build()
+}
+
+/// Representative cost model for the loaded engine.
+pub fn cost_model(engine: &Engine) -> CostModel {
+    CostModel::new(engine.manifest.model.clone())
+}
+
+/// Fixed evaluation episodes shared across points of a sweep (paired
+/// comparison reduces variance).
+pub fn fixed_episodes(seed: u64, n: usize, n_facts: usize) -> Vec<Episode> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| gen_episode(&mut rng, n_facts)).collect()
+}
+
+/// Micro-bench timing helper: median of `iters` runs after `warmup`.
+pub fn time_median_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t = std::time::Instant::now();
+            f();
+            t.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}

@@ -1,0 +1,66 @@
+//! Fig. 5 — trade-off between response quality and communication cost.
+//!
+//! Sweeps the number of local forwards H ∈ {1, 2, 4, 8(=M)} plus the
+//! fully-local LocAttn limit across the four input-segmentation settings,
+//! reporting mean/min/max EM over participants and the mean bytes
+//! transmitted per participant — the paper's primary efficacy–efficiency
+//! result (Remark 4/5: EM falls and comm savings shrink as O(1/H²)).
+//!
+//!     cargo bench --bench fig5_quality_vs_comm
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::Segmentation;
+use fedattn::fedattn::SyncSchedule;
+use fedattn::util::json::Json;
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let n = 4usize;
+    let hs = [1usize, 2, 4, 8];
+    let mut rows = Vec::new();
+
+    println!("== Fig. 5: EM vs communication cost across local forwards H ==");
+    println!("(N = {n}, {} episodes/point)", episodes_per_point());
+    for seg in Segmentation::ALL {
+        println!("\n-- segmentation {} --", seg.as_str());
+        println!(
+            "{:>8} {:>8} {:>8} {:>8} {:>14} {:>10}",
+            "H", "EM mean", "EM min", "EM max", "tx/participant", "comm ms"
+        );
+        for &h in &hs {
+            let mut cfg = PointCfg::new(n, seg, SyncSchedule::uniform(m, n, h));
+            let r = run_point(&engine, &cfg)?;
+            println!(
+                "{:>8} {:>8.3} {:>8.3} {:>8.3} {:>14} {:>10.2}",
+                h,
+                r.em_mean,
+                r.em_min,
+                r.em_max,
+                fmt_bytes(r.avg_tx_bytes),
+                r.comm_time_ms
+            );
+            rows.push(point_json(&format!("{}:H{}", seg.as_str(), h), h as f64, &r));
+        }
+        // LocAttn limit: no KV exchange at all.
+        let mut cfg = PointCfg::new(n, seg, SyncSchedule::never(m, n));
+        let r = run_point(&engine, &cfg)?;
+        println!(
+            "{:>8} {:>8.3} {:>8.3} {:>8.3} {:>14} {:>10.2}",
+            "loc",
+            r.em_mean,
+            r.em_min,
+            r.em_max,
+            fmt_bytes(r.avg_tx_bytes),
+            r.comm_time_ms
+        );
+        rows.push(point_json(&format!("{}:loc", seg.as_str()), (m + 1) as f64, &r));
+    }
+    write_json("fig5_quality_vs_comm", Json::Arr(rows));
+    Ok(())
+}

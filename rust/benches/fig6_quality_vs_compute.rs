@@ -1,0 +1,70 @@
+//! Fig. 6 — trade-off between response quality and computational cost.
+//!
+//! Sweeps the number of participants N (N = 1 is CenAttn): per-participant
+//! prefill FLOPs and peak memory fall roughly quadratically (the sequence
+//! dimension is sharded) while EM degrades — the paper's computational-
+//! efficiency result.
+//!
+//!     cargo bench --bench fig6_quality_vs_compute
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::{partition, Segmentation};
+use fedattn::fedattn::SyncSchedule;
+use fedattn::util::json::Json;
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let cm = cost_model(&engine);
+    let h = 2usize;
+    let mut rows = Vec::new();
+
+    println!("== Fig. 6: EM vs per-participant compute across N (H = {h}) ==");
+    for seg in [Segmentation::TokQAg, Segmentation::SemQEx] {
+        println!("\n-- segmentation {} --", seg.as_str());
+        println!(
+            "{:>4} {:>8} {:>8} {:>14} {:>12} {:>10}",
+            "N", "EM pub", "EM mean", "prefill FLOPs", "peak mem", "wall ms"
+        );
+        for &n in &[1usize, 2, 4, 6] {
+            let mut cfg = PointCfg::new(n, seg, SyncSchedule::uniform(m, n, h));
+            cfg.n_facts = 5;
+            let r = match run_point(&engine, &cfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("{n:>4} skipped: {e}");
+                    continue;
+                }
+            };
+            // Analytic per-participant cost at the mean shard size.
+            let eps = fixed_episodes(cfg.seed, 1, cfg.n_facts);
+            let part = partition(&eps[0], n, seg);
+            let l = part.max_span_len();
+            let g = part.len();
+            let rounds = m / h;
+            let cost = cm.prefill_cost(l, g, m - rounds, rounds);
+            println!(
+                "{:>4} {:>8.3} {:>8.3} {:>14.3e} {:>12} {:>10.1}",
+                n,
+                r.em_publisher,
+                r.em_mean,
+                cost.flops,
+                fmt_bytes(cost.peak_mem_bytes),
+                r.prefill_ms + r.decode_ms
+            );
+            let mut j = point_json(&format!("{}:N{}", seg.as_str(), n), n as f64, &r);
+            if let fedattn::util::json::Json::Obj(map) = &mut j {
+                map.insert("prefill_flops".into(), Json::Num(cost.flops));
+                map.insert("peak_mem_bytes".into(), Json::Num(cost.peak_mem_bytes));
+            }
+            rows.push(j);
+        }
+    }
+    write_json("fig6_quality_vs_compute", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Fig. 7 — response quality under four KV-exchange placement schemes.
+//!
+//! Shallow-Half vs Deep-Half and Progressive vs Regressive with 4 sync
+//! rounds in M blocks, 4 participants.  The paper's headline experimental
+//! surprise: deep placements win, contradicting the Theorem 2 prediction
+//! under uniform constants (see the theory_validation bench for why).
+//!
+//!     cargo bench --bench fig7_sync_schemes
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::Segmentation;
+use fedattn::fedattn::{Scheme, SyncSchedule};
+use fedattn::util::json::Json;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let n = 4usize;
+    let rounds = 4usize;
+    let schemes = [
+        Scheme::Uniform { h: m / rounds },
+        Scheme::ShallowHalf { rounds },
+        Scheme::DeepHalf { rounds },
+        Scheme::Progressive { rounds },
+        Scheme::Regressive { rounds },
+    ];
+    let mut rows = Vec::new();
+
+    println!("== Fig. 7: sync-placement schemes ({rounds} rounds, N = {n}) ==");
+    for seg in [Segmentation::SemQEx, Segmentation::TokQAg] {
+        println!("\n-- segmentation {} --", seg.as_str());
+        println!("{:>14} {:>18} {:>8} {:>8} {:>8}", "scheme", "sync blocks", "EM mean", "EM min", "EM max");
+        for scheme in schemes {
+            let blocks = scheme.sync_blocks(m);
+            let mut cfg = PointCfg::new(n, seg, SyncSchedule::from_scheme(scheme, m, n));
+            let r = run_point(&engine, &cfg)?;
+            println!(
+                "{:>14} {:>18} {:>8.3} {:>8.3} {:>8.3}",
+                scheme.as_str(),
+                format!("{blocks:?}"),
+                r.em_mean,
+                r.em_min,
+                r.em_max
+            );
+            rows.push(point_json(
+                &format!("{}:{}", seg.as_str(), scheme.as_str()),
+                blocks.iter().sum::<usize>() as f64 / rounds as f64,
+                &r,
+            ));
+        }
+    }
+    write_json("fig7_sync_schemes", Json::Arr(rows));
+    Ok(())
+}

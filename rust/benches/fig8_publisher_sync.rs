@@ -1,0 +1,54 @@
+//! Fig. 8 — response quality under varying synchronization intervals for
+//! the task publisher (others fixed at H = M).
+//!
+//! The adaptive-KV-aggregation result: increasing the *critical*
+//! participant's sync frequency monotonically improves its response
+//! quality.
+//!
+//!     cargo bench --bench fig8_publisher_sync
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::Segmentation;
+use fedattn::fedattn::SyncSchedule;
+use fedattn::util::json::Json;
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let n = 4usize;
+    let mut rows = Vec::new();
+
+    println!("== Fig. 8: publisher sync interval sweep (others H = {m}, N = {n}) ==");
+    for seg in [Segmentation::SemQEx, Segmentation::TokQEx] {
+        println!("\n-- segmentation {} --", seg.as_str());
+        println!(
+            "{:>8} {:>10} {:>14} {:>10}",
+            "H_pub", "EM (pub)", "tx/participant", "comm ms"
+        );
+        for &h_pub in &[1usize, 2, 4, 8] {
+            let mut hs = vec![m; n];
+            hs[n - 1] = h_pub; // the publisher is the last participant
+            let cfg = PointCfg::new(n, seg, SyncSchedule::per_participant(m, &hs));
+            let r = run_point(&engine, &cfg)?;
+            println!(
+                "{:>8} {:>10.3} {:>14} {:>10.2}",
+                h_pub,
+                r.em_publisher,
+                fmt_bytes(r.avg_tx_bytes),
+                r.comm_time_ms
+            );
+            rows.push(point_json(
+                &format!("{}:Hpub{}", seg.as_str(), h_pub),
+                h_pub as f64,
+                &r,
+            ));
+        }
+    }
+    write_json("fig8_publisher_sync", Json::Arr(rows));
+    Ok(())
+}

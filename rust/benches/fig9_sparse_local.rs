@@ -1,0 +1,40 @@
+//! Fig. 9 — response quality under sparse *local* attention.
+//!
+//! Participants randomly drop input tokens before inference.  Information
+//! loss is irreversible, so EM decays monotonically with the drop rate —
+//! in contrast to sparse KV exchange (Fig. 10).
+//!
+//!     cargo bench --bench fig9_sparse_local
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::Segmentation;
+use fedattn::fedattn::SyncSchedule;
+use fedattn::util::json::Json;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let n = 4usize;
+    let h = 2usize;
+    let ratios = [1.0f64, 0.9, 0.75, 0.5, 0.25];
+    let mut rows = Vec::new();
+
+    println!("== Fig. 9: sparse local attention (uniform H = {h}, N = {n}) ==");
+    for seg in [Segmentation::SemQAg, Segmentation::SemQEx, Segmentation::TokQEx] {
+        println!("\n-- segmentation {} --", seg.as_str());
+        println!("{:>8} {:>10} {:>10}", "keep", "EM (pub)", "EM mean");
+        for &ratio in &ratios {
+            let mut cfg = PointCfg::new(n, seg, SyncSchedule::uniform(m, n, h));
+            cfg.local_ratio = ratio;
+            let r = run_point(&engine, &cfg)?;
+            println!("{:>8.2} {:>10.3} {:>10.3}", ratio, r.em_publisher, r.em_mean);
+            rows.push(point_json(&format!("{}:r{}", seg.as_str(), ratio), ratio, &r));
+        }
+    }
+    write_json("fig9_sparse_local", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Microbenchmarks of the Layer-3 hot-path pieces: KV packing, mask
+//! building, engine dispatch (block execution / logits), network-sim
+//! rounds, thread-pool overhead, tokenizer and workload generation.
+//! These feed the §Perf iteration log in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench micro
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::gen_episode;
+use fedattn::exec::Pool;
+use fedattn::fedattn::{global_mask, local_mask, GlobalKv};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::tensor::HostTensor;
+use fedattn::tokenizer;
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::prng::SplitMix64;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let md = engine.manifest.model.clone();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut emit = |name: &str, ms: f64, note: &str| {
+        println!("{name:>28}: {ms:>10.4} ms  {note}");
+        rows.push(JsonBuilder::new().str("name", name).num("ms", ms).str("note", note).build());
+    };
+
+    println!("== Layer-3 microbenchmarks (median of 20) ==");
+
+    // KV packing: 4 participants x 64 rows.
+    let k = HostTensor::zeros(&[64, md.n_kv_heads, md.head_dim]);
+    let v = k.clone();
+    let pos: Vec<i32> = (0..64).collect();
+    let tx = vec![true; 64];
+    let ms = time_median_ms(3, 20, || {
+        let refs: Vec<_> = (0..4).map(|_| (&k, &v, &pos[..], 64usize, &tx[..])).collect();
+        let g = GlobalKv::pack(&refs, 384).unwrap();
+        std::hint::black_box(g.rows());
+    });
+    emit("kv_pack_4x64", ms, "[256 rows -> G=384]");
+
+    // Mask builders.
+    let pos_pad: Vec<i32> = (0..64).collect();
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(local_mask(&pos_pad, 60));
+    });
+    emit("local_mask_64", ms, "[64x64]");
+
+    let kv_pos: Vec<i32> = (0..256).collect();
+    let kv_owner: Vec<usize> = (0..256).map(|i| i / 64).collect();
+    let kv_tx = vec![true; 256];
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(global_mask(&pos_pad, 60, 384, &kv_pos, &kv_owner, &kv_tx, 256, 1));
+    });
+    emit("global_mask_64x384", ms, "[64x384]");
+
+    // Engine dispatch: logits (smallest artifact) = fixed overhead floor.
+    let h = HostTensor::zeros(&[1, md.d_model]);
+    let _ = engine.logits(&h)?; // compile
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(engine.logits(&h).unwrap());
+    });
+    emit("engine_logits", ms, "[upload + execute + download]");
+
+    // One fused local block at L = 64.
+    let l = 64usize;
+    let x = HostTensor::zeros(&[l, md.d_model]);
+    let posv: Vec<i32> = (0..l as i32).collect();
+    let mask = local_mask(&posv, l);
+    let _ = engine.block_fused(0, &x, &posv, &mask)?;
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(engine.block_fused(0, &x, &posv, &mask).unwrap());
+    });
+    emit("engine_block_fused_L64", ms, "[one Transformer block]");
+
+    // Decode block.
+    let c = engine.manifest.decode_cache;
+    let x1 = HostTensor::zeros(&[1, md.d_model]);
+    let kc = HostTensor::zeros(&[c, md.n_kv_heads, md.head_dim]);
+    let vc = kc.clone();
+    let dmask = HostTensor::zeros(&[1, c]);
+    let _ = engine.decode_block(0, &x1, 0, &kc, &vc, &dmask)?;
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(engine.decode_block(0, &x1, 0, &kc, &vc, &dmask).unwrap());
+    });
+    emit("engine_decode_block", ms, &format!("[C={c}]"));
+
+    // Network sim round.
+    let ms = time_median_ms(3, 20, || {
+        let mut net = NetSim::uniform(Topology::Star, 8, LinkSpec::default(), 1);
+        for _ in 0..8 {
+            net.exchange_round(&[10_000; 8], &[true; 8]);
+        }
+        std::hint::black_box(net.report().rounds);
+    });
+    emit("netsim_8rounds_8p", ms, "[accounting only]");
+
+    // Thread-pool scope overhead.
+    let pool = Pool::new(2);
+    let ms = time_median_ms(3, 20, || {
+        let out = pool.scope_map(16, |i| i * 2).unwrap();
+        std::hint::black_box(out.len());
+    });
+    emit("pool_scope_map_16", ms, "[spawn+join 16 no-op tasks]");
+
+    // Tokenizer + episode generation.
+    let ms = time_median_ms(3, 20, || {
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..100 {
+            let ep = gen_episode(&mut rng, 4);
+            std::hint::black_box(tokenizer::encode_with_bos(&ep.prompt()).len());
+        }
+    });
+    emit("gen+tokenize_100eps", ms, "[workload generation]");
+
+    write_json("micro", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Serving-layer bench: throughput / latency of the coordinator under
+//! Poisson load (the deployment-facing counterpart of the paper's
+//! efficiency claims; no direct paper figure — see DESIGN.md §4).
+//!
+//!     cargo bench --bench serving_throughput
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::config::SystemConfig;
+use fedattn::coordinator::{Coordinator, CoordinatorConfig};
+use fedattn::data::{TraceConfig, WorkloadTrace};
+use fedattn::util::json::{Json, JsonBuilder};
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let mut rows = Vec::new();
+
+    println!("== Serving throughput/latency under load ==");
+    println!(
+        "{:>8} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "engines", "arrival ms", "thru t/s", "p50 ms", "p95 ms", "EM"
+    );
+    for &engines in &[1usize, 2] {
+        for &inter_ms in &[800.0f64, 300.0] {
+            let mut sc = SystemConfig::default();
+            sc.federation.participants = 3;
+            sc.serving.engines = engines;
+            let mut ccfg = CoordinatorConfig::from_system(&sc);
+            ccfg.time_scale = 4.0;
+            let coord = Coordinator::new(engine.clone(), ccfg);
+            let trace = WorkloadTrace::generate(&TraceConfig {
+                seed: 99,
+                n_tasks: 20,
+                mean_interarrival_ms: inter_ms,
+                ..Default::default()
+            });
+            let rep = coord.serve_trace(&trace)?;
+            println!(
+                "{:>8} {:>12.0} {:>10.2} {:>10.1} {:>10.1} {:>8.2}",
+                engines,
+                inter_ms,
+                rep.throughput_tasks_per_s(),
+                rep.latency_percentile(50.0),
+                rep.latency_percentile(95.0),
+                rep.em_rate()
+            );
+            rows.push(
+                JsonBuilder::new()
+                    .num("engines", engines as f64)
+                    .num("interarrival_ms", inter_ms)
+                    .num("throughput", rep.throughput_tasks_per_s())
+                    .num("p50_ms", rep.latency_percentile(50.0))
+                    .num("p95_ms", rep.latency_percentile(95.0))
+                    .num("em", rep.em_rate())
+                    .build(),
+            );
+        }
+    }
+    write_json("serving_throughput", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Baselines the paper compares against.
+//!
+//! * **CenAttn / LocAttn** are degenerate FedAttn configurations
+//!   (`H = 1` with `N = 1` span, and no sync, respectively) — built from
+//!   the same session machinery so comparisons are apples-to-apples.
+//! * **Pipeline / Tensor parallelism** communication-cost models (§II-B):
+//!   FedAttn's headline efficiency claim is against these; they are
+//!   analytic functions of the architecture, reproduced here exactly as
+//!   the paper describes them.
+
+mod parallelism;
+
+pub use parallelism::{CommCost, ParallelismKind};

@@ -1,0 +1,135 @@
+//! Communication-cost models for the conventional model-parallel paradigms
+//! (paper §II-B) vs FedAttn (§II-C.2).
+
+use crate::model::ModelDims;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelismKind {
+    /// Layer-wise partitioning: activations [L, d] cross nodes once per
+    /// stage boundary.
+    Pipeline,
+    /// Hidden-dimension sharding: all-reduce of [L, d] after the attention
+    /// and FFN linear transformations of *every* block.
+    Tensor,
+    /// This paper: K/V matrices [L, 2·kv_dim] exchanged every H blocks.
+    FedAttn,
+}
+
+impl ParallelismKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ParallelismKind::Pipeline => "pipeline",
+            ParallelismKind::Tensor => "tensor",
+            ParallelismKind::FedAttn => "fedattn",
+        }
+    }
+}
+
+/// Analytic per-inference communication cost.
+#[derive(Debug, Clone, Copy)]
+pub struct CommCost {
+    pub dims_bytes_per_elem: usize,
+}
+
+impl Default for CommCost {
+    fn default() -> Self {
+        Self { dims_bytes_per_elem: 4 }
+    }
+}
+
+impl CommCost {
+    /// Total bytes moved across node boundaries during one prefill of a
+    /// length-`l` sequence on `n` nodes with sync interval `h` (FedAttn
+    /// only; ignored otherwise).
+    pub fn prefill_bytes(
+        &self,
+        kind: ParallelismKind,
+        md: &ModelDims,
+        l: usize,
+        n: usize,
+        h: usize,
+    ) -> f64 {
+        let b = self.dims_bytes_per_elem as f64;
+        let d = md.d_model as f64;
+        let lf = l as f64;
+        match kind {
+            ParallelismKind::Pipeline => {
+                // n stages ⇒ (n-1) boundary crossings of the [L, d]
+                // activations.
+                (n as f64 - 1.0) * lf * d * b
+            }
+            ParallelismKind::Tensor => {
+                // Ring all-reduce of [L, d] after each of the 2 linear
+                // groups per block: 2(n-1)/n · L·d per all-reduce, on every
+                // node ⇒ total 2·2(n-1)·L·d per block.
+                let per_allreduce = 2.0 * (n as f64 - 1.0) * lf * d * b;
+                2.0 * md.n_layers as f64 * per_allreduce
+            }
+            ParallelismKind::FedAttn => {
+                // Every H blocks each node uplinks its local K/V
+                // ([L/n, 2·kv_dim]) and downlinks the remote rows.
+                let rounds = (md.n_layers as f64 / h as f64).floor();
+                let kv_row = 2.0 * md.kv_dim() as f64 * b;
+                let up = lf * kv_row; // all rows cross once (sum over nodes)
+                let down = (n as f64 - 1.0) / n as f64 * lf * kv_row * n as f64;
+                rounds * (up + down)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            vocab_size: 128,
+            d_model: 96,
+            n_layers: 8,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 24,
+            d_ff: 256,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+        }
+    }
+
+    #[test]
+    fn tensor_parallelism_most_expensive() {
+        let cc = CommCost::default();
+        let md = dims();
+        let tp = cc.prefill_bytes(ParallelismKind::Tensor, &md, 256, 4, 2);
+        let pp = cc.prefill_bytes(ParallelismKind::Pipeline, &md, 256, 4, 2);
+        let fa = cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 2);
+        assert!(tp > pp, "tensor {tp} vs pipeline {pp}");
+        assert!(tp > fa, "tensor {tp} vs fedattn {fa}");
+    }
+
+    #[test]
+    fn fedattn_cost_decreases_with_h() {
+        let cc = CommCost::default();
+        let md = dims();
+        let c2 = cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 2);
+        let c4 = cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 4);
+        let c8 = cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 8);
+        assert!(c2 > c4 && c4 > c8);
+        assert!((c2 / c4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gqa_reduces_fedattn_cost() {
+        // §II-C: FedAttn directly benefits from grouped-query attention.
+        let cc = CommCost::default();
+        let mut md = dims();
+        let full = {
+            md.n_kv_heads = 4;
+            cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 2)
+        };
+        md.n_kv_heads = 2;
+        let gqa = cc.prefill_bytes(ParallelismKind::FedAttn, &md, 256, 4, 2);
+        assert!((full / gqa - 2.0).abs() < 1e-9);
+    }
+}

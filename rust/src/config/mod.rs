@@ -1,0 +1,8 @@
+//! Configuration substrate: a TOML-subset parser plus the typed
+//! `SystemConfig` consumed by the CLI, coordinator and benches.
+
+mod toml;
+mod system;
+
+pub use system::{FederationConfig, NetworkConfig, ServingConfig, SystemConfig};
+pub use toml::{TomlDoc, TomlError, TomlValue};

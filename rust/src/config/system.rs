@@ -1,0 +1,191 @@
+//! Typed system configuration assembled from a TOML file + CLI overrides.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::toml::TomlDoc;
+use crate::data::Segmentation;
+use crate::fedattn::KvExchangePolicy;
+use crate::net::{LinkSpec, Topology};
+
+/// Federation-level knobs (maps to Alg. 1 parameters).
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Number of participants N.
+    pub participants: usize,
+    /// Uniform sync interval H (Alg. 1).
+    pub sync_h: usize,
+    /// Input segmentation setting (paper Fig. 4).
+    pub segmentation: Segmentation,
+    /// Local-attention token sparsity ratio (Fig. 9; 1.0 = dense).
+    pub local_sparsity: f64,
+    /// KV-exchange policy (Fig. 10 / §V Obs. 4).
+    pub kv_policy: KvExchangePolicy,
+    pub max_new_tokens: usize,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            participants: 3,
+            sync_h: 2,
+            segmentation: Segmentation::SemQEx,
+            local_sparsity: 1.0,
+            kv_policy: KvExchangePolicy::Full,
+            max_new_tokens: 12,
+        }
+    }
+}
+
+/// Edge-network model parameters.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub topology: Topology,
+    pub link: LinkSpec,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self { topology: Topology::Star, link: LinkSpec::default() }
+    }
+}
+
+/// Serving-layer knobs.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Engine worker threads.
+    pub engines: usize,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { engines: 1, queue_depth: 64 }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub artifacts_dir: PathBuf,
+    pub weights_file: String,
+    pub seed: u64,
+    pub federation: FederationConfig,
+    pub network: NetworkConfig,
+    pub serving: ServingConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            weights_file: "weights.npz".to_string(),
+            seed: 7,
+            federation: FederationConfig::default(),
+            network: NetworkConfig::default(),
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut c = Self::default();
+        c.artifacts_dir = PathBuf::from(doc.str_or("artifacts_dir", "artifacts"));
+        c.weights_file = doc.str_or("weights_file", "weights.npz").to_string();
+        c.seed = doc.usize_or("seed", 7) as u64;
+
+        let f = &mut c.federation;
+        f.participants = doc.usize_or("federation.participants", f.participants);
+        f.sync_h = doc.usize_or("federation.sync_h", f.sync_h);
+        if let Some(seg) = doc.get("federation.segmentation").and_then(|v| v.as_str()) {
+            f.segmentation = Segmentation::parse(seg)
+                .ok_or_else(|| anyhow::anyhow!("unknown segmentation {seg:?}"))?;
+        }
+        f.local_sparsity = doc.f64_or("federation.local_sparsity", 1.0);
+        let kv_ratio = doc.f64_or("federation.kv_exchange_ratio", 1.0);
+        f.kv_policy = match doc.str_or("federation.kv_policy", "full") {
+            "full" if kv_ratio >= 1.0 => KvExchangePolicy::Full,
+            "full" | "random" => KvExchangePolicy::Random { ratio: kv_ratio },
+            "publisher-priority" => {
+                KvExchangePolicy::PublisherPriority { remote_ratio: kv_ratio }
+            }
+            "recent-budget" => KvExchangePolicy::RecentBudget {
+                budget_rows: doc.usize_or("federation.kv_budget_rows", 64),
+            },
+            other => anyhow::bail!("unknown kv_policy {other:?}"),
+        };
+        f.max_new_tokens = doc.usize_or("federation.max_new_tokens", f.max_new_tokens);
+
+        c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
+            Topology::Mesh
+        } else {
+            Topology::Star
+        };
+        c.network.link = LinkSpec {
+            bandwidth_mbps: doc.f64_or("network.bandwidth_mbps", 100.0),
+            latency_ms: doc.f64_or("network.latency_ms", 5.0),
+            jitter: doc.f64_or("network.jitter", 0.0),
+        };
+
+        c.serving.engines = doc.usize_or("serving.engines", 1);
+        c.serving.queue_depth = doc.usize_or("serving.queue_depth", 64);
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = TomlDoc::parse(&text).map_err(anyhow::Error::from)?;
+        Self::from_toml(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.federation.participants, 3);
+        assert_eq!(c.federation.kv_policy, KvExchangePolicy::Full);
+    }
+
+    #[test]
+    fn full_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            seed = 42
+            [federation]
+            participants = 4
+            sync_h = 4
+            segmentation = "tok-seg:q-ex"
+            kv_policy = "random"
+            kv_exchange_ratio = 0.5
+            [network]
+            topology = "mesh"
+            bandwidth_mbps = 20.0
+            latency_ms = 10.0
+            [serving]
+            engines = 2
+        "#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.federation.participants, 4);
+        assert_eq!(c.federation.segmentation, Segmentation::TokQEx);
+        assert_eq!(c.federation.kv_policy, KvExchangePolicy::Random { ratio: 0.5 });
+        assert_eq!(c.network.topology, Topology::Mesh);
+        assert_eq!(c.serving.engines, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_segmentation() {
+        let doc = TomlDoc::parse("[federation]\nsegmentation = \"nope\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays; `#` comments.
+//! This covers every config file shipped in this repo.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: `section.key -> value` (top-level keys use `""`
+/// section, nested tables are flattened with dots).
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(TomlValue::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for item in inner.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue;
+                }
+                items.push(parse_value(item)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # top comment
+        name = "fedattn"   # trailing comment
+        [federation]
+        participants = 4
+        sync_h = 2
+        kv_ratio = 0.75
+        schemes = ["uniform", "deep-half"]
+        [network]
+        star = true
+        bandwidth_mbps = 100.5
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("name", ""), "fedattn");
+        assert_eq!(d.usize_or("federation.participants", 0), 4);
+        assert_eq!(d.f64_or("federation.kv_ratio", 0.0), 0.75);
+        assert!(d.bool_or("network.star", false));
+        assert_eq!(d.f64_or("network.bandwidth_mbps", 0.0), 100.5);
+        match d.get("federation.schemes").unwrap() {
+            TomlValue::Array(a) => {
+                assert_eq!(a[1].as_str(), Some("deep-half"));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let d = TomlDoc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(d.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let d = TomlDoc::parse("a = 3\nb = 3.5\nc = 1e3").unwrap();
+        assert_eq!(d.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(d.get("b").unwrap().as_f64(), Some(3.5));
+        assert_eq!(d.get("c").unwrap().as_f64(), Some(1000.0));
+    }
+}

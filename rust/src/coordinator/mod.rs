@@ -1,0 +1,5 @@
+//! Serving coordinator: task queue, engine pool, router, metrics.
+
+mod server;
+
+pub use server::{CoordinatorConfig, Coordinator, TaskResult, ServeReport};

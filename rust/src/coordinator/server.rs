@@ -1,0 +1,314 @@
+//! The serving layer: a bounded task queue feeding an engine-worker pool,
+//! with per-task federated sessions, backpressure, and latency accounting.
+//!
+//! One `Coordinator` owns one compiled `Engine` (artifacts + weights are
+//! shared; PJRT executions are thread-safe) and `engines` worker threads.
+//! Collaborative tasks arrive on a workload trace (Poisson arrivals); each
+//! is partitioned per the configured segmentation, prefilled under the
+//! configured schedule and decoded by its publisher.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::data::{partition, Segmentation, WorkloadTrace};
+use crate::fedattn::{FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule};
+use crate::metrics::em_score;
+use crate::net::NetSim;
+use crate::runtime::Engine;
+use crate::util::stats::{percentile, Summary};
+
+/// Coordinator knobs (subset of [`SystemConfig`] plus scheduling).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub engines: usize,
+    pub queue_depth: usize,
+    pub participants: usize,
+    pub sync_h: usize,
+    pub segmentation: Segmentation,
+    pub local_sparsity: f64,
+    pub kv_policy: KvExchangePolicy,
+    pub max_new_tokens: usize,
+    pub topology: crate::net::Topology,
+    pub link: crate::net::LinkSpec,
+    pub seed: u64,
+    /// Compress trace inter-arrival gaps by this factor (benches use > 1 to
+    /// avoid waiting out real think-time).
+    pub time_scale: f64,
+}
+
+impl CoordinatorConfig {
+    pub fn from_system(sc: &SystemConfig) -> Self {
+        Self {
+            engines: sc.serving.engines,
+            queue_depth: sc.serving.queue_depth,
+            participants: sc.federation.participants,
+            sync_h: sc.federation.sync_h,
+            segmentation: sc.federation.segmentation,
+            local_sparsity: sc.federation.local_sparsity,
+            kv_policy: sc.federation.kv_policy,
+            max_new_tokens: sc.federation.max_new_tokens,
+            topology: sc.network.topology,
+            link: sc.network.link,
+            seed: sc.seed,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Outcome of one served task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task_id: usize,
+    pub answer: String,
+    pub gold: String,
+    pub em: bool,
+    pub queue_ms: f64,
+    pub service_ms: f64,
+    pub latency_ms: f64,
+    pub comm_bytes: u64,
+    pub comm_time_ms: f64,
+    pub generated_tokens: usize,
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub results: Vec<TaskResult>,
+    pub makespan_ms: f64,
+}
+
+impl ServeReport {
+    pub fn em_rate(&self) -> f64 {
+        if self.results.is_empty() {
+            return 0.0;
+        }
+        self.results.iter().filter(|r| r.em).count() as f64 / self.results.len() as f64
+    }
+
+    pub fn throughput_tasks_per_s(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.results.len() as f64 / (self.makespan_ms / 1e3)
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.results.iter().map(|r| r.latency_ms).collect();
+        percentile(&xs, p)
+    }
+
+    pub fn service_summary(&self) -> Summary {
+        Summary::from_slice(
+            &self.results.iter().map(|r| r.service_ms).collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Bounded FIFO of pending tasks (the backpressure point).
+struct TaskQueue<T> {
+    inner: Mutex<std::collections::VecDeque<T>>,
+    cv: Condvar,
+    capacity: usize,
+    closed: Mutex<bool>,
+}
+
+impl<T> TaskQueue<T> {
+    fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            capacity,
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Blocking push (backpressure when the queue is full).
+    fn push(&self, item: T) {
+        let mut q = self.inner.lock().unwrap();
+        while q.len() >= self.capacity {
+            q = self.cv.wait(q).unwrap();
+        }
+        q.push_back(item);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if *self.closed.lock().unwrap() {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+pub struct Coordinator {
+    engine: Engine,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine, cfg: CoordinatorConfig) -> Self {
+        Self { engine, cfg }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Serve one episode synchronously (the `run` CLI subcommand).
+    pub fn run_one(&self, episode: &crate::data::Episode, task_seed: u64) -> Result<TaskResult> {
+        let cfg = &self.cfg;
+        let part = partition(episode, cfg.participants, cfg.segmentation);
+        let md = &self.engine.manifest.model;
+        let schedule = SyncSchedule::uniform(md.n_layers, cfg.participants, cfg.sync_h);
+        let mut scfg = SessionConfig::new(schedule);
+        scfg.local_sparsity = LocalSparsity { ratio: cfg.local_sparsity };
+        scfg.kv_policy = cfg.kv_policy;
+        scfg.max_new_tokens = cfg.max_new_tokens;
+        scfg.seed = task_seed;
+        let net = NetSim::uniform(cfg.topology, cfg.participants, cfg.link, task_seed);
+        let t0 = Instant::now();
+        let session = FedSession::new(&self.engine, &part, scfg, net)?;
+        let rep = session.run()?;
+        let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(TaskResult {
+            task_id: 0,
+            em: em_score(&rep.answer, &episode.answer),
+            answer: rep.answer,
+            gold: episode.answer.clone(),
+            queue_ms: 0.0,
+            service_ms,
+            latency_ms: service_ms,
+            comm_bytes: rep.net.total_bytes(),
+            comm_time_ms: rep.net.comm_time_ms,
+            generated_tokens: rep.generated_tokens,
+        })
+    }
+
+    /// Serve a whole trace through `engines` workers with Poisson arrivals.
+    pub fn serve_trace(&self, trace: &WorkloadTrace) -> Result<ServeReport> {
+        let queue: Arc<TaskQueue<(usize, Instant)>> =
+            Arc::new(TaskQueue::new(self.cfg.queue_depth));
+        let results: Arc<Mutex<Vec<TaskResult>>> = Arc::new(Mutex::new(Vec::new()));
+        let next_seed = AtomicUsize::new(self.cfg.seed as usize);
+        let start = Instant::now();
+
+        std::thread::scope(|s| -> Result<()> {
+            // Workers.
+            for _ in 0..self.cfg.engines.max(1) {
+                let queue = Arc::clone(&queue);
+                let results = Arc::clone(&results);
+                let next_seed = &next_seed;
+                s.spawn(move || {
+                    while let Some((task_id, enqueued_at)) = queue.pop() {
+                        let queue_ms = enqueued_at.elapsed().as_secs_f64() * 1e3;
+                        let seed = next_seed.fetch_add(1, Ordering::Relaxed) as u64;
+                        let task = &trace.tasks[task_id];
+                        match self.run_one(&task.episode, seed) {
+                            Ok(mut r) => {
+                                r.task_id = task_id;
+                                r.queue_ms = queue_ms;
+                                r.latency_ms = queue_ms + r.service_ms;
+                                results.lock().unwrap().push(r);
+                            }
+                            Err(e) => {
+                                log::error!("task {task_id} failed: {e:#}");
+                            }
+                        }
+                    }
+                });
+            }
+
+            // Arrival loop (trace replay with optional time compression).
+            for task in &trace.tasks {
+                let due_ms = task.arrival_ms / self.cfg.time_scale.max(1e-9);
+                let elapsed = start.elapsed().as_secs_f64() * 1e3;
+                if due_ms > elapsed {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        (due_ms - elapsed) / 1e3,
+                    ));
+                }
+                queue.push((task.id, Instant::now()));
+            }
+            queue.close();
+            Ok(())
+        })?;
+
+        let mut results = Arc::try_unwrap(results)
+            .map_err(|_| anyhow::anyhow!("results still shared"))?
+            .into_inner()
+            .unwrap();
+        results.sort_by_key(|r| r.task_id);
+        Ok(ServeReport { results, makespan_ms: start.elapsed().as_secs_f64() * 1e3 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q: TaskQueue<u32> = TaskQueue::new(8);
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_until_pop() {
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new(1));
+        q.push(1);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            q2.push(2); // blocks until main pops
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!h.is_finished(), "push should be blocked by backpressure");
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn serve_report_stats() {
+        let mk = |id: usize, lat: f64, em: bool| TaskResult {
+            task_id: id,
+            answer: String::new(),
+            gold: String::new(),
+            em,
+            queue_ms: 0.0,
+            service_ms: lat,
+            latency_ms: lat,
+            comm_bytes: 0,
+            comm_time_ms: 0.0,
+            generated_tokens: 1,
+        };
+        let rep = ServeReport {
+            results: vec![mk(0, 10.0, true), mk(1, 20.0, false), mk(2, 30.0, true)],
+            makespan_ms: 1000.0,
+        };
+        assert!((rep.em_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((rep.throughput_tasks_per_s() - 3.0).abs() < 1e-12);
+        assert_eq!(rep.latency_percentile(100.0), 30.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! MicroFact episode generator — **bit-identical** to
+//! `python/compile/data.py::gen_episode` (same SplitMix64 stream, same pool
+//! order, same draw order).  Cross-language agreement is covered by a test
+//! against episode fixtures generated at AOT time.
+
+use crate::util::prng::SplitMix64;
+
+pub const NAMES: [&str; 16] = [
+    "Lia", "Omar", "Tess", "Ravi", "Noa", "Kai", "Mia", "Jon",
+    "Zoe", "Eli", "Ana", "Max", "Ida", "Sam", "Uma", "Leo",
+];
+pub const ITEMS: [&str; 12] = [
+    "plums", "coins", "books", "pens", "cards", "nuts", "cups", "keys",
+    "bags", "hats", "rocks", "seeds",
+];
+pub const MIN_COUNT: u64 = 2;
+pub const MAX_COUNT: u64 = 9;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QKind {
+    /// Single-fact retrieval: "how many X does NAME have?"
+    Get,
+    /// Comparison: "who has more X, A or B?"
+    Most,
+    /// Two-fact sum: "how many X do A and B have in total?"
+    Sum,
+}
+
+impl QKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QKind::Get => "get",
+            QKind::Most => "most",
+            QKind::Sum => "sum",
+        }
+    }
+}
+
+/// One collaborative-QA episode.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub facts: Vec<String>,
+    pub question: String,
+    pub answer: String,
+    pub kind: QKind,
+}
+
+impl Episode {
+    /// Full prompt text: facts joined by spaces + question (ends in "A:").
+    pub fn prompt(&self) -> String {
+        format!("{} {}", self.facts.join(" "), self.question)
+    }
+
+    /// Character offset of each fact start and of the question start within
+    /// [`Episode::prompt`] — the *semantic boundaries* used by Sem-seg.
+    pub fn boundaries(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.facts.len() + 1);
+        let mut pos = 0usize;
+        for f in &self.facts {
+            offs.push(pos);
+            pos += f.len() + 1; // trailing space
+        }
+        offs.push(pos); // question start
+        offs
+    }
+}
+
+/// Mirror of the Python generator; draw order must not change.
+pub fn gen_episode(rng: &mut SplitMix64, n_facts: usize) -> Episode {
+    let item = ITEMS[rng.below(ITEMS.len() as u64) as usize];
+    let mut idxs: Vec<usize> = Vec::with_capacity(n_facts);
+    while idxs.len() < n_facts {
+        let c = rng.below(NAMES.len() as u64) as usize;
+        if !idxs.contains(&c) {
+            idxs.push(c);
+        }
+    }
+    let names: Vec<&str> = idxs.iter().map(|&i| NAMES[i]).collect();
+    let counts: Vec<u64> = (0..n_facts)
+        .map(|_| MIN_COUNT + rng.below(MAX_COUNT - MIN_COUNT + 1))
+        .collect();
+    let facts: Vec<String> = names
+        .iter()
+        .zip(&counts)
+        .map(|(n, c)| format!("{n} has {c} {item}."))
+        .collect();
+
+    let a = rng.below(n_facts as u64) as usize;
+    let mut b = rng.below(n_facts as u64) as usize;
+    while b == a {
+        b = rng.below(n_facts as u64) as usize;
+    }
+    let r = rng.below(10);
+    let (kind, question, answer) = if r < 4 {
+        (
+            QKind::Get,
+            format!("Q: how many {item} does {} have? A:", names[a]),
+            counts[a].to_string(),
+        )
+    } else if r < 7 {
+        let hi = if counts[a] >= counts[b] { a } else { b };
+        (
+            QKind::Most,
+            format!("Q: who has more {item}, {} or {}? A:", names[a], names[b]),
+            names[hi].to_string(),
+        )
+    } else {
+        (
+            QKind::Sum,
+            format!(
+                "Q: how many {item} do {} and {} have in total? A:",
+                names[a], names[b]
+            ),
+            (counts[a] + counts[b]).to_string(),
+        )
+    };
+    Episode { facts, question, answer, kind }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut r1 = SplitMix64::new(99);
+        let mut r2 = SplitMix64::new(99);
+        let e1 = gen_episode(&mut r1, 4);
+        let e2 = gen_episode(&mut r2, 4);
+        assert_eq!(e1.prompt(), e2.prompt());
+        assert_eq!(e1.answer, e2.answer);
+    }
+
+    #[test]
+    fn facts_count_and_format() {
+        let mut rng = SplitMix64::new(1);
+        for nf in 2..=6 {
+            let ep = gen_episode(&mut rng, nf);
+            assert_eq!(ep.facts.len(), nf);
+            for f in &ep.facts {
+                assert!(f.ends_with('.'), "fact should end with period: {f}");
+                assert!(f.contains(" has "), "fact format: {f}");
+            }
+            assert!(ep.question.starts_with("Q: "));
+            assert!(ep.question.ends_with("A:"));
+        }
+    }
+
+    #[test]
+    fn answer_is_consistent_with_facts() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..200 {
+            let ep = gen_episode(&mut rng, 4);
+            match ep.kind {
+                QKind::Get | QKind::Sum => {
+                    let v: u64 = ep.answer.parse().expect("numeric answer");
+                    assert!(v >= MIN_COUNT && v <= 2 * MAX_COUNT);
+                }
+                QKind::Most => {
+                    assert!(NAMES.contains(&ep.answer.as_str()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_cover_prompt() {
+        let mut rng = SplitMix64::new(3);
+        let ep = gen_episode(&mut rng, 5);
+        let b = ep.boundaries();
+        assert_eq!(b.len(), 6);
+        assert_eq!(b[0], 0);
+        let prompt = ep.prompt();
+        // Question boundary points exactly at "Q:".
+        assert!(prompt[b[5]..].starts_with("Q:"));
+        // Each fact boundary points at the fact text.
+        for (i, f) in ep.facts.iter().enumerate() {
+            assert!(prompt[b[i]..].starts_with(f.as_str()));
+        }
+    }
+}

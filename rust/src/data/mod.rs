@@ -1,0 +1,11 @@
+//! Workload data: the MicroFact collaborative-QA generator (bit-identical
+//! mirror of `python/compile/data.py`), the 2×2 input-segmentation grid of
+//! the paper's §VII-A2, and workload traces for the serving benches.
+
+pub mod microfact;
+pub mod segmentation;
+pub mod trace;
+
+pub use microfact::{gen_episode, Episode, QKind};
+pub use segmentation::{partition, Partition, Segmentation};
+pub use trace::{TraceConfig, WorkloadTrace};

@@ -1,0 +1,323 @@
+//! The paper's 2×2 input-segmentation grid (§VII-A2, Fig. 4).
+//!
+//! The global token sequence (BOS + facts + question) is partitioned into
+//! `N` contiguous spans, one per participant; the N-th participant is the
+//! *task publisher*.
+//!
+//!  * **TokQAg**  — Tok-seg : Q-ag.  Uniform split by token count; the
+//!    question is distributed like any other tokens.
+//!  * **TokQEx**  — Tok-seg : Q-ex.  Publisher gets exactly the question
+//!    tokens; the fact tokens are split uniformly among the others.
+//!  * **SemQAg**  — Sem-seg : Q-ag.  Split at semantic boundaries (whole
+//!    facts / the question), balancing token counts.
+//!  * **SemQEx**  — Sem-seg : Q-ex.  Publisher gets the question; whole
+//!    facts are distributed among the others.
+
+use super::microfact::Episode;
+use crate::tokenizer;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Segmentation {
+    TokQAg,
+    TokQEx,
+    SemQAg,
+    SemQEx,
+}
+
+impl Segmentation {
+    pub const ALL: [Segmentation; 4] = [
+        Segmentation::TokQAg,
+        Segmentation::TokQEx,
+        Segmentation::SemQAg,
+        Segmentation::SemQEx,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Segmentation::TokQAg => "tok-seg:q-ag",
+            Segmentation::TokQEx => "tok-seg:q-ex",
+            Segmentation::SemQAg => "sem-seg:q-ag",
+            Segmentation::SemQEx => "sem-seg:q-ex",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|x| x.as_str() == s)
+    }
+}
+
+/// A disjoint contiguous partition of the global prompt tokens.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Global token ids (BOS + prompt).
+    pub ids: Vec<i32>,
+    /// `spans[n] = (start, end)` global index range of participant `n`.
+    pub spans: Vec<(usize, usize)>,
+}
+
+impl Partition {
+    pub fn n_participants(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn publisher(&self) -> usize {
+        self.spans.len() - 1
+    }
+
+    /// owners[i] = participant holding global token i.
+    pub fn owners(&self) -> Vec<usize> {
+        let mut o = vec![0usize; self.ids.len()];
+        for (n, &(s, e)) in self.spans.iter().enumerate() {
+            for i in s..e {
+                o[i] = n;
+            }
+        }
+        o
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn span_len(&self, n: usize) -> usize {
+        self.spans[n].1 - self.spans[n].0
+    }
+
+    /// Longest span — determines the padded per-participant L variant.
+    pub fn max_span_len(&self) -> usize {
+        (0..self.spans.len()).map(|n| self.span_len(n)).max().unwrap_or(0)
+    }
+
+    fn check(&self) {
+        debug_assert!(!self.spans.is_empty());
+        debug_assert_eq!(self.spans[0].0, 0);
+        debug_assert_eq!(self.spans.last().unwrap().1, self.ids.len());
+        for w in self.spans.windows(2) {
+            debug_assert_eq!(w[0].1, w[1].0, "spans must be contiguous");
+        }
+    }
+}
+
+/// Split `[0, total)` into `n` near-equal contiguous chunks (first chunks
+/// get the remainder), never producing an empty chunk when `total >= n`.
+fn even_spans(offset: usize, total: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = total / n;
+    let rem = total % n;
+    let mut out = Vec::with_capacity(n);
+    let mut cur = offset;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((cur, cur + len));
+        cur += len;
+    }
+    out
+}
+
+/// Group `unit_lens` into `n` contiguous groups with near-balanced token
+/// mass (greedy by target cumulative share).
+fn balanced_groups(offset: usize, unit_lens: &[usize], n: usize) -> Vec<(usize, usize)> {
+    let total: usize = unit_lens.iter().sum();
+    let mut out = Vec::with_capacity(n);
+    let mut cur = offset;
+    let mut unit = 0usize;
+    for g in 0..n {
+        let target = total * (g + 1) / n;
+        let mut end = cur;
+        let mut acc: usize = unit_lens[..unit].iter().sum();
+        // Advance units until reaching this group's cumulative target, but
+        // always leave at least (n - g - 1) units for the remaining groups.
+        while unit < unit_lens.len()
+            && (acc < target || end == cur)
+            && unit_lens.len() - unit > n - g - 1
+        {
+            acc += unit_lens[unit];
+            end += unit_lens[unit];
+            unit += 1;
+        }
+        if g == n - 1 {
+            // Last group takes everything left.
+            while unit < unit_lens.len() {
+                end += unit_lens[unit];
+                unit += 1;
+            }
+        }
+        out.push((cur, end));
+        cur = end;
+    }
+    out
+}
+
+/// Build the partition of an episode for `n` participants under `seg`.
+///
+/// Token layout: `[BOS] facts... question` — BOS is assigned to the first
+/// participant's span.
+pub fn partition(ep: &Episode, n: usize, seg: Segmentation) -> Partition {
+    assert!(n >= 1);
+    let prompt = ep.prompt();
+    let ids = tokenizer::encode_with_bos(&prompt);
+    let total = ids.len();
+    // +1 for BOS on all char offsets.
+    let bounds = ep.boundaries();
+    let q_start = bounds[bounds.len() - 1] + 1;
+
+    if n == 1 {
+        return Partition { ids, spans: vec![(0, total)] };
+    }
+
+    let spans = match seg {
+        Segmentation::TokQAg => even_spans(0, total, n),
+        Segmentation::TokQEx => {
+            // Publisher (last) takes the question; others split the rest.
+            let mut spans = even_spans(0, q_start, n - 1);
+            spans.push((q_start, total));
+            spans
+        }
+        Segmentation::SemQAg => {
+            // Units: [BOS+fact0, fact1, ..., factK-1, question].
+            let mut unit_lens = Vec::with_capacity(ep.facts.len() + 1);
+            for i in 0..ep.facts.len() {
+                let start = bounds[i] + 1;
+                let end = if i + 1 < ep.facts.len() { bounds[i + 1] + 1 } else { q_start };
+                let mut len = end - start;
+                if i == 0 {
+                    len += 1; // BOS rides with the first fact
+                }
+                unit_lens.push(len);
+            }
+            unit_lens.push(total - q_start);
+            balanced_groups(0, &unit_lens, n)
+        }
+        Segmentation::SemQEx => {
+            let mut unit_lens = Vec::with_capacity(ep.facts.len());
+            for i in 0..ep.facts.len() {
+                let start = bounds[i] + 1;
+                let end = if i + 1 < ep.facts.len() { bounds[i + 1] + 1 } else { q_start };
+                let mut len = end - start;
+                if i == 0 {
+                    len += 1;
+                }
+                unit_lens.push(len);
+            }
+            let mut spans = balanced_groups(0, &unit_lens, n - 1);
+            spans.push((q_start, total));
+            spans
+        }
+    };
+    let p = Partition { ids, spans };
+    p.check();
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::microfact::gen_episode;
+    use crate::util::prng::{SplitMix64, Xoshiro256ss};
+    use crate::util::propcheck::propcheck;
+
+    fn check_partition(p: &Partition, n: usize) -> Result<(), String> {
+        if p.spans.len() != n {
+            return Err(format!("expected {n} spans, got {}", p.spans.len()));
+        }
+        if p.spans[0].0 != 0 || p.spans.last().unwrap().1 != p.ids.len() {
+            return Err("spans do not cover sequence".into());
+        }
+        for w in p.spans.windows(2) {
+            if w[0].1 != w[1].0 {
+                return Err(format!("gap/overlap between spans: {w:?}"));
+            }
+        }
+        for (i, &(s, e)) in p.spans.iter().enumerate() {
+            if e <= s {
+                return Err(format!("empty span {i}: ({s},{e})"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn all_settings_produce_disjoint_cover() {
+        propcheck(120, |rng| {
+            let seed = rng.next_u64();
+            let mut sm = SplitMix64::new(seed);
+            let nf = 3 + rng.below(4) as usize;
+            let ep = gen_episode(&mut sm, nf);
+            let n = 2 + rng.below(4) as usize;
+            if n - 1 > nf {
+                return Ok(()); // Sem Q-ex needs >= one unit per non-publisher
+            }
+            for seg in Segmentation::ALL {
+                let p = partition(&ep, n, seg);
+                check_partition(&p, n)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q_ex_publisher_holds_question() {
+        let mut sm = SplitMix64::new(5);
+        let ep = gen_episode(&mut sm, 4);
+        for seg in [Segmentation::TokQEx, Segmentation::SemQEx] {
+            let p = partition(&ep, 3, seg);
+            let (s, e) = p.spans[p.publisher()];
+            let text = tokenizer::decode(&p.ids[s..e]);
+            assert!(text.starts_with("Q:"), "{seg:?}: publisher text {text:?}");
+            assert!(text.ends_with("A:"));
+        }
+    }
+
+    #[test]
+    fn sem_q_ag_respects_fact_boundaries() {
+        let mut sm = SplitMix64::new(6);
+        let ep = gen_episode(&mut sm, 5);
+        let p = partition(&ep, 3, Segmentation::SemQAg);
+        // Every span must start at a unit boundary (BOS, a fact, or Q).
+        for &(s, _) in &p.spans[1..] {
+            let text = tokenizer::decode(&p.ids[s..]);
+            let ok = text.starts_with("Q:")
+                || ep.facts.iter().any(|f| text.starts_with(f.as_str()));
+            assert!(ok, "span start not on a semantic boundary: {text:?}");
+        }
+    }
+
+    #[test]
+    fn n1_is_single_span() {
+        let mut sm = SplitMix64::new(7);
+        let ep = gen_episode(&mut sm, 4);
+        let p = partition(&ep, 1, Segmentation::TokQAg);
+        assert_eq!(p.spans, vec![(0, p.ids.len())]);
+    }
+
+    #[test]
+    fn owners_match_spans() {
+        let mut sm = SplitMix64::new(8);
+        let ep = gen_episode(&mut sm, 4);
+        let p = partition(&ep, 4, Segmentation::TokQAg);
+        let o = p.owners();
+        for (n, &(s, e)) in p.spans.iter().enumerate() {
+            for i in s..e {
+                assert_eq!(o[i], n);
+            }
+        }
+    }
+
+    #[test]
+    fn even_spans_balanced() {
+        let mut rng = Xoshiro256ss::new(1);
+        for _ in 0..50 {
+            let total = 1 + rng.below(500) as usize;
+            let n = 1 + rng.below(8.min(total as u64)) as usize;
+            let spans = even_spans(0, total, n);
+            let lens: Vec<usize> = spans.iter().map(|&(s, e)| e - s).collect();
+            let min = *lens.iter().min().unwrap();
+            let max = *lens.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced: {lens:?}");
+            assert_eq!(lens.iter().sum::<usize>(), total);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Workload traces for the serving benches: Poisson task arrivals with
+//! MicroFact episodes, mirroring the request traces used by serving-paper
+//! evaluations (the paper's testbed traces are not public — substitution
+//! per DESIGN.md).
+
+use super::microfact::{gen_episode, Episode};
+use crate::util::prng::{SplitMix64, Xoshiro256ss};
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub n_tasks: usize,
+    /// Mean task inter-arrival time in milliseconds (exponential).
+    pub mean_interarrival_ms: f64,
+    pub min_facts: usize,
+    pub max_facts: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { seed: 17, n_tasks: 32, mean_interarrival_ms: 50.0, min_facts: 3, max_facts: 6 }
+    }
+}
+
+/// One queued collaborative-inference task.
+#[derive(Debug, Clone)]
+pub struct TraceTask {
+    pub id: usize,
+    /// Arrival offset from trace start, milliseconds.
+    pub arrival_ms: f64,
+    pub episode: Episode,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadTrace {
+    pub tasks: Vec<TraceTask>,
+}
+
+impl WorkloadTrace {
+    pub fn generate(cfg: &TraceConfig) -> Self {
+        let mut ep_rng = SplitMix64::new(cfg.seed);
+        let mut arr_rng = Xoshiro256ss::new(cfg.seed ^ 0xA77);
+        let mut t = 0.0f64;
+        let tasks = (0..cfg.n_tasks)
+            .map(|id| {
+                let span = cfg.max_facts - cfg.min_facts + 1;
+                let nf = cfg.min_facts + ep_rng.below(span as u64) as usize;
+                let episode = gen_episode(&mut ep_rng, nf);
+                // Exponential inter-arrival.
+                let u = arr_rng.next_f64().max(1e-12);
+                t += -cfg.mean_interarrival_ms * u.ln();
+                TraceTask { id, arrival_ms: t, episode }
+            })
+            .collect();
+        Self { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_tasks() {
+        let tr = WorkloadTrace::generate(&TraceConfig { n_tasks: 10, ..Default::default() });
+        assert_eq!(tr.len(), 10);
+        // Arrivals are strictly increasing.
+        for w in tr.tasks.windows(2) {
+            assert!(w[0].arrival_ms < w[1].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig { seed: 5, n_tasks: 6, ..Default::default() };
+        let a = WorkloadTrace::generate(&cfg);
+        let b = WorkloadTrace::generate(&cfg);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.episode.prompt(), y.episode.prompt());
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+        }
+    }
+
+    #[test]
+    fn mean_interarrival_approximate() {
+        let cfg = TraceConfig {
+            seed: 9,
+            n_tasks: 2000,
+            mean_interarrival_ms: 20.0,
+            ..Default::default()
+        };
+        let tr = WorkloadTrace::generate(&cfg);
+        let total = tr.tasks.last().unwrap().arrival_ms;
+        let mean = total / tr.len() as f64;
+        assert!((mean - 20.0).abs() < 2.0, "mean inter-arrival {mean}");
+    }
+}

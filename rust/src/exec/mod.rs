@@ -1,0 +1,10 @@
+//! Execution substrate: a work-stealing-free, bounded thread pool with
+//! scoped parallel-for — the offline-image substitute for tokio.
+//!
+//! FedAttn participants are CPU-bound (each drives PJRT executions), so a
+//! plain pool with bounded channels gives the same concurrency structure an
+//! async runtime would, with simpler reasoning about backpressure.
+
+pub mod pool;
+
+pub use pool::{Pool, ScopeError};

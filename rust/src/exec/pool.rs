@@ -1,0 +1,183 @@
+//! Fixed-size thread pool with task submission and a scoped parallel map.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Error from a scoped parallel region: some closure panicked.
+#[derive(Debug, thiserror::Error)]
+#[error("{panicked} of {total} parallel tasks panicked")]
+pub struct ScopeError {
+    pub panicked: usize,
+    pub total: usize,
+}
+
+/// A fixed pool of worker threads consuming from one shared queue.
+pub struct Pool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Pool {
+    /// Create a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inf = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("fedattn-worker-{i}"))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(t) => {
+                                let _ = catch_unwind(AssertUnwindSafe(t));
+                                inf.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Pool sized to the machine (min 1; this image exposes 1 core).
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+
+    /// Fire-and-forget task.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Number of tasks submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool and collect results in
+    /// order.  Blocks until all complete.  Panics inside closures are
+    /// reported as a [`ScopeError`].
+    pub fn scope_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, ScopeError>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, Option<T>)>, Receiver<(usize, Option<T>)>) =
+            channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.spawn(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(i))).ok();
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        let mut panicked = 0usize;
+        while got < n {
+            let (i, v) = rrx.recv().expect("scope worker vanished");
+            if let Some(v) = v {
+                slots[i] = Some(v);
+            } else {
+                panicked += 1;
+            }
+            got += 1;
+        }
+        if panicked > 0 {
+            return Err(ScopeError { panicked, total: n });
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = Pool::new(4);
+        let out = pool.scope_map(100, |i| i * i).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_runs_all_tasks() {
+        let pool = Pool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn scope_map_reports_panics() {
+        let pool = Pool::new(2);
+        let err = pool
+            .scope_map(10, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+                i
+            })
+            .unwrap_err();
+        assert_eq!(err.panicked, 1);
+        assert_eq!(err.total, 10);
+    }
+
+    #[test]
+    fn empty_scope() {
+        let pool = Pool::new(1);
+        assert!(pool.scope_map(0, |i| i).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pool_survives_task_panic() {
+        let pool = Pool::new(1);
+        pool.spawn(|| panic!("ignored"));
+        let out = pool.scope_map(3, |i| i + 1).unwrap();
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

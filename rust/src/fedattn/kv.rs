@@ -1,0 +1,203 @@
+//! Global KV aggregation (Eq. 20): packing per-participant K/V rows into
+//! one global buffer.
+//!
+//! The paper's Π_n indicator matrices scatter local rows to their global
+//! positions.  Because attention is permutation-invariant in the KV axis
+//! once positions ride along (RoPE is applied at projection time and the
+//! mask is position-based), we *pack* valid rows contiguously and carry
+//! `(pos, owner, transmitted)` metadata per row instead of materialising an
+//! L-sized scatter — the packed form is what a real edge implementation
+//! ships over the wire.
+
+use anyhow::Result;
+
+use crate::tensor::HostTensor;
+
+/// Metadata of one packed KV row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvRowMeta {
+    /// Global token position (drives the causal mask).
+    pub pos: i32,
+    /// Owning participant.
+    pub owner: usize,
+    /// Whether the row was transmitted this round (sparse KV exchange);
+    /// untransmitted rows are visible only to their owner.
+    pub transmitted: bool,
+}
+
+/// A packed global KV buffer padded to a G variant.
+#[derive(Debug, Clone)]
+pub struct GlobalKv {
+    /// `[g_pad, Hkv, hd]`.
+    pub k: HostTensor,
+    pub v: HostTensor,
+    /// Valid packed rows (`meta.len() <= g_pad`).
+    pub meta: Vec<KvRowMeta>,
+}
+
+impl GlobalKv {
+    pub fn rows(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn g_pad(&self) -> usize {
+        self.k.shape()[0]
+    }
+
+    /// Bytes a participant contributes when transmitting `rows` KV rows.
+    pub fn row_bytes(kv_heads: usize, head_dim: usize) -> usize {
+        2 * kv_heads * head_dim * 4
+    }
+
+    /// Pack per-participant KV into a global buffer.
+    ///
+    /// * `parts[n] = (k, v, pos, valid, transmitted)` where `k`/`v` are the
+    ///   participant's padded `[l_pad, Hkv, hd]` tensors, `pos` its global
+    ///   positions, `valid` its real row count and `transmitted[i]` the
+    ///   sparse-exchange flag for local row `i`.
+    /// * `g_pad` — the padded global size (a manifest G variant).
+    ///
+    /// Rows are packed participant-major, position-ascending — the same
+    /// order the Python reference uses when concatenating Π_n blocks.
+    pub fn pack(
+        parts: &[(&HostTensor, &HostTensor, &[i32], usize, &[bool])],
+        g_pad: usize,
+    ) -> Result<Self> {
+        let (hkv, hd) = {
+            let s = parts[0].0.shape();
+            (s[1], s[2])
+        };
+        let total: usize = parts.iter().map(|p| p.3).sum();
+        anyhow::ensure!(
+            total <= g_pad,
+            "packed KV rows {total} exceed padded size {g_pad}"
+        );
+        let mut k = HostTensor::zeros(&[g_pad, hkv, hd]);
+        let mut v = HostTensor::zeros(&[g_pad, hkv, hd]);
+        let mut meta = Vec::with_capacity(total);
+        let mut cursor = 0usize;
+        for (owner, (pk, pv, pos, valid, tx)) in parts.iter().enumerate() {
+            anyhow::ensure!(pk.shape() == pv.shape(), "k/v shape mismatch");
+            anyhow::ensure!(*valid <= pos.len() && *valid <= tx.len());
+            k.copy_rows_from(pk, 0..*valid, cursor);
+            v.copy_rows_from(pv, 0..*valid, cursor);
+            for i in 0..*valid {
+                meta.push(KvRowMeta { pos: pos[i], owner, transmitted: tx[i] });
+            }
+            cursor += valid;
+        }
+        Ok(Self { k, v, meta })
+    }
+
+    /// Per-participant transmitted-row counts (for comm accounting).
+    pub fn tx_rows_by_owner(&self, n_participants: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_participants];
+        for m in &self.meta {
+            if m.transmitted {
+                counts[m.owner] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Decomposed metadata columns for the mask builder.
+    pub fn meta_columns(&self) -> (Vec<i32>, Vec<usize>, Vec<bool>) {
+        let pos = self.meta.iter().map(|m| m.pos).collect();
+        let owner = self.meta.iter().map(|m| m.owner).collect();
+        let tx = self.meta.iter().map(|m| m.transmitted).collect();
+        (pos, owner, tx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    fn part(rows: usize, hkv: usize, hd: usize, base: f32) -> (HostTensor, HostTensor) {
+        let mut k = HostTensor::zeros(&[rows, hkv, hd]);
+        let mut v = HostTensor::zeros(&[rows, hkv, hd]);
+        for i in 0..rows {
+            k.row_mut(i).fill(base + i as f32);
+            v.row_mut(i).fill(-(base + i as f32));
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn pack_two_participants() {
+        let (k0, v0) = part(4, 2, 3, 10.0);
+        let (k1, v1) = part(4, 2, 3, 100.0);
+        let pos0 = [0, 1, 2, 3];
+        let pos1 = [4, 5, 6, 7];
+        let tx = [true, true, false, true];
+        let g = GlobalKv::pack(
+            &[
+                (&k0, &v0, &pos0, 3, &tx),
+                (&k1, &v1, &pos1, 2, &tx),
+            ],
+            8,
+        )
+        .unwrap();
+        assert_eq!(g.rows(), 5);
+        assert_eq!(g.k.row(0)[0], 10.0);
+        assert_eq!(g.k.row(3)[0], 100.0);
+        assert_eq!(g.meta[3], KvRowMeta { pos: 4, owner: 1, transmitted: true });
+        assert_eq!(g.meta[2].transmitted, false);
+        assert_eq!(g.tx_rows_by_owner(2), vec![2, 2]);
+        // padding rows zero
+        assert!(g.k.row(5).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pack_rejects_overflow() {
+        let (k0, v0) = part(4, 1, 2, 0.0);
+        let pos = [0, 1, 2, 3];
+        let tx = [true; 4];
+        assert!(GlobalKv::pack(&[(&k0, &v0, &pos, 4, &tx)], 3).is_err());
+    }
+
+    #[test]
+    fn every_valid_row_packed_exactly_once() {
+        propcheck(60, |rng| {
+            let n = 1 + rng.below(4) as usize;
+            let hkv = 1 + rng.below(2) as usize;
+            let hd = 2usize;
+            let mut parts_data = Vec::new();
+            let mut next_pos = 0i32;
+            for pi in 0..n {
+                let rows = 1 + rng.below(6) as usize;
+                let valid = 1 + rng.below(rows as u64) as usize;
+                let (k, v) = part(rows, hkv, hd, (pi * 1000) as f32);
+                let pos: Vec<i32> = (0..rows as i32).map(|i| next_pos + i).collect();
+                next_pos += valid as i32;
+                let tx: Vec<bool> = (0..rows).map(|_| rng.bernoulli(0.7)).collect();
+                parts_data.push((k, v, pos, valid, tx));
+            }
+            let refs: Vec<_> = parts_data
+                .iter()
+                .map(|(k, v, p, val, tx)| (k, v, p.as_slice(), *val, tx.as_slice()))
+                .collect();
+            let total: usize = refs.iter().map(|r| r.3).sum();
+            let g = GlobalKv::pack(&refs, total.max(1)).map_err(|e| e.to_string())?;
+            if g.rows() != total {
+                return Err(format!("rows {} != total {total}", g.rows()));
+            }
+            // owner-major, each owner's rows in local order
+            let mut idx = 0usize;
+            for (owner, r) in refs.iter().enumerate() {
+                for i in 0..r.3 {
+                    let m = g.meta[idx];
+                    if m.owner != owner || m.pos != r.2[i] {
+                        return Err(format!("meta mismatch at {idx}: {m:?}"));
+                    }
+                    if g.k.row(idx)[0] != r.0.row(i)[0] {
+                        return Err("k row content mismatch".into());
+                    }
+                    idx += 1;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! Additive attention-mask builders.
+//!
+//! All FedAttn semantics that the HLO artifacts do *not* know about —
+//! causality by global position, padding validity, cross-participant
+//! visibility and sparse-KV-exchange filtering — are carried by these
+//! masks, built on the host per block.
+
+use crate::tensor::{HostTensor, NEG_MASK};
+
+/// Local causal mask `[l_pad, l_pad]` for one participant's padded slice.
+///
+/// `pos[i]` is the *global* position of local row `i`; rows `>= valid` are
+/// padding (fully masked, and invisible as keys).
+pub fn local_mask(pos: &[i32], valid: usize) -> HostTensor {
+    let l = pos.len();
+    let mut m = HostTensor::full(&[l, l], NEG_MASK);
+    let data = m.data_mut();
+    for i in 0..valid {
+        for j in 0..valid {
+            if pos[j] <= pos[i] {
+                data[i * l + j] = 0.0;
+            }
+        }
+    }
+    m
+}
+
+/// Global-attention mask `[l_pad, g_pad]` for one attending participant.
+///
+/// * `q_pos` / `q_valid` — the participant's padded query rows.
+/// * `kv_pos[j]` — global position of packed KV row `j` (`kv_rows` valid).
+/// * `kv_owner[j]` — owning participant of row `j`.
+/// * `kv_transmitted[j]` — whether row `j` was actually exchanged this
+///   round (sparse KV exchange drops remote rows; own rows are always
+///   visible to their owner regardless — paper §VII-B6).
+/// * `me` — the attending participant.
+#[allow(clippy::too_many_arguments)]
+pub fn global_mask(
+    q_pos: &[i32],
+    q_valid: usize,
+    g_pad: usize,
+    kv_pos: &[i32],
+    kv_owner: &[usize],
+    kv_transmitted: &[bool],
+    kv_rows: usize,
+    me: usize,
+) -> HostTensor {
+    let l = q_pos.len();
+    let mut m = HostTensor::full(&[l, g_pad], NEG_MASK);
+    let data = m.data_mut();
+    for i in 0..q_valid {
+        let pi = q_pos[i];
+        let row = &mut data[i * g_pad..(i + 1) * g_pad];
+        for j in 0..kv_rows {
+            let own = kv_owner[j] == me;
+            if kv_pos[j] <= pi && (own || kv_transmitted[j]) {
+                row[j] = 0.0;
+            }
+        }
+    }
+    m
+}
+
+/// Decode-cache mask `[1, c]`: visible rows are the `valid_rows` prefix
+/// flagged in `row_visible`.
+pub fn decode_mask(c: usize, row_visible: &[bool]) -> HostTensor {
+    let mut m = HostTensor::full(&[1, c], NEG_MASK);
+    let data = m.data_mut();
+    for (j, &vis) in row_visible.iter().enumerate().take(c) {
+        if vis {
+            data[j] = 0.0;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn local_mask_is_causal() {
+        let pos = [5, 6, 7, 0]; // last row is padding
+        let m = local_mask(&pos, 3);
+        // row 0 (pos 5) sees only itself among valid rows
+        assert_eq!(m.row(0), &[0.0, NEG_MASK, NEG_MASK, NEG_MASK]);
+        // row 2 (pos 7) sees all three valid
+        assert_eq!(m.row(2), &[0.0, 0.0, 0.0, NEG_MASK]);
+        // padding row fully masked
+        assert!(m.row(3).iter().all(|&v| v == NEG_MASK));
+    }
+
+    #[test]
+    fn global_mask_visibility_rules() {
+        // q from participant 0 at positions 10,11; kv rows:
+        //   j0: own  (p=1,  owner 0, not transmitted)  -> visible (own)
+        //   j1: rem  (p=2,  owner 1, transmitted)      -> visible
+        //   j2: rem  (p=3,  owner 1, NOT transmitted)  -> hidden (sparse)
+        //   j3: rem  (p=12, owner 1, transmitted)      -> hidden (future)
+        let m = global_mask(
+            &[10, 11],
+            2,
+            6,
+            &[1, 2, 3, 12],
+            &[0, 1, 1, 1],
+            &[false, true, false, true],
+            4,
+            0,
+        );
+        assert_eq!(m.row(0)[..4], [0.0, 0.0, NEG_MASK, NEG_MASK]);
+        // padding KV columns hidden
+        assert_eq!(m.row(0)[4..], [NEG_MASK, NEG_MASK]);
+    }
+
+    #[test]
+    fn global_mask_full_exchange_equals_causal() {
+        // With everything transmitted and one owner per row, the global mask
+        // must be exactly the causal mask over global positions.
+        propcheck(50, |rng| {
+            let l = 1 + rng.below(16) as usize;
+            let g = l;
+            let q_pos: Vec<i32> = (0..l as i32).collect();
+            let owners: Vec<usize> = (0..g).map(|_| rng.below(3) as usize).collect();
+            let tx = vec![true; g];
+            let m = global_mask(&q_pos, l, g, &q_pos, &owners, &tx, g, 0);
+            for i in 0..l {
+                for j in 0..g {
+                    let want = if j <= i { 0.0 } else { NEG_MASK };
+                    if m.row(i)[j] != want {
+                        return Err(format!("({i},{j}) = {}", m.row(i)[j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_mask_flags() {
+        let m = decode_mask(5, &[true, false, true]);
+        assert_eq!(m.data(), &[0.0, NEG_MASK, 0.0, NEG_MASK, NEG_MASK]);
+    }
+}

@@ -1,0 +1,27 @@
+//! The FedAttn paradigm (paper Alg. 1 + §V toolkit): participant state,
+//! sync schedules, KV exchange & aggregation, sparsity policies, masks and
+//! the per-task session driving prefill + decode through the runtime.
+//!
+//! Semantics (matching the paper):
+//!  * Every participant runs every Transformer block over its own tokens.
+//!  * A participant *attending* globally at block `m` projects Q/K/V
+//!    (Eq. 17), receives the other participants' transmitted KV rows for
+//!    block `m`, aggregates them positionally (Eq. 20, the Π_n scatter) and
+//!    attends with its local Q over the global KV (Eq. 21).
+//!  * Non-attending participants perform plain local self-attention
+//!    (Eq. 18).  Their K/V for the block exist anyway (computed by the
+//!    fused block) and are what gets transmitted to attendees.
+//!  * Sparse KV exchange (§V Obs. 4 / Fig. 10) drops *remote* rows only;
+//!    a participant always sees its own full KV.
+
+pub mod kv;
+pub mod masks;
+pub mod schedule;
+pub mod session;
+pub mod sparse;
+
+pub use kv::{GlobalKv, KvRowMeta};
+pub use masks::{global_mask, local_mask};
+pub use schedule::{Scheme, SyncSchedule};
+pub use session::{FedSession, PrefillOutput, SessionConfig, SessionReport};
+pub use sparse::{KvExchangePolicy, LocalSparsity};

@@ -1,0 +1,256 @@
+//! Synchronization schedules: which participants attend globally at which
+//! Transformer blocks.
+//!
+//! Covers the paper's experiments: uniform H (Fig. 5), the four placement
+//! schemes of Fig. 7 (Shallow-Half / Deep-Half / Progressive / Regressive),
+//! and per-participant intervals (Fig. 8's publisher sweep).
+
+/// Per-block, per-participant attendance matrix.
+#[derive(Debug, Clone)]
+pub struct SyncSchedule {
+    /// `attend[m][n]` — participant `n` performs global attention at block `m`.
+    pub attend: Vec<Vec<bool>>,
+}
+
+/// Named schemes from the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Eq. Alg.1: every participant attends every `h`-th block.
+    Uniform { h: usize },
+    /// All sync rounds concentrated in the shallower half (Fig. 7a).
+    ShallowHalf { rounds: usize },
+    /// All sync rounds concentrated in the deeper half (Fig. 7b).
+    DeepHalf { rounds: usize },
+    /// Sync intervals increase with depth (Fig. 7c).
+    Progressive { rounds: usize },
+    /// Sync intervals decrease with depth (Fig. 7d).
+    Regressive { rounds: usize },
+}
+
+impl Scheme {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Scheme::Uniform { .. } => "uniform",
+            Scheme::ShallowHalf { .. } => "shallow-half",
+            Scheme::DeepHalf { .. } => "deep-half",
+            Scheme::Progressive { .. } => "progressive",
+            Scheme::Regressive { .. } => "regressive",
+        }
+    }
+
+    /// The set of sync blocks (0-indexed) this scheme places in `m` blocks.
+    pub fn sync_blocks(self, m: usize) -> Vec<usize> {
+        match self {
+            Scheme::Uniform { h } => {
+                let h = h.clamp(1, m);
+                (0..m).filter(|b| (b + 1) % h == 0).collect()
+            }
+            Scheme::ShallowHalf { rounds } => {
+                let r = rounds.min(m / 2);
+                (0..r).collect()
+            }
+            Scheme::DeepHalf { rounds } => {
+                let r = rounds.min(m - m / 2);
+                (m - r..m).collect()
+            }
+            Scheme::Progressive { rounds } => spaced_blocks(m, rounds, false),
+            Scheme::Regressive { rounds } => spaced_blocks(m, rounds, true),
+        }
+    }
+}
+
+/// Place `rounds` sync blocks with geometrically growing gaps; `reverse`
+/// mirrors the placement (gaps shrink with depth).
+fn spaced_blocks(m: usize, rounds: usize, reverse: bool) -> Vec<usize> {
+    let rounds = rounds.clamp(1, m);
+    // Positions at geometric depths: block index ~ m * (2^i - 1)/(2^r - 1).
+    let denom = (1u64 << rounds) - 1;
+    let blocks: Vec<usize> = (1..=rounds)
+        .map(|i| {
+            let num = (1u64 << i) - 1;
+            (((m as u64) * num) / denom).saturating_sub(1) as usize
+        })
+        .collect();
+    // Resolve collisions by pushing later blocks forward.
+    let mut used = vec![false; m];
+    let mut out = Vec::with_capacity(rounds);
+    for b in blocks {
+        let mut b = b.min(m - 1);
+        while used[b] {
+            b = (b + 1) % m;
+        }
+        used[b] = true;
+        out.push(b);
+    }
+    out.sort_unstable();
+    if reverse {
+        let rev: Vec<usize> = out.iter().map(|&b| m - 1 - b).collect();
+        let mut rev: Vec<usize> = rev.into_iter().collect();
+        rev.sort_unstable();
+        rev
+    } else {
+        out
+    }
+}
+
+impl SyncSchedule {
+    /// All participants attend at the scheme's sync blocks.
+    pub fn from_scheme(scheme: Scheme, m: usize, n: usize) -> Self {
+        let sync = scheme.sync_blocks(m);
+        let mut attend = vec![vec![false; n]; m];
+        for b in sync {
+            attend[b] = vec![true; n];
+        }
+        Self { attend }
+    }
+
+    /// Uniform interval `h` for every participant (Alg. 1).
+    pub fn uniform(m: usize, n: usize, h: usize) -> Self {
+        Self::from_scheme(Scheme::Uniform { h }, m, n)
+    }
+
+    /// Per-participant intervals: participant `i` attends every `hs[i]`-th
+    /// block (Fig. 8's publisher sweep).
+    pub fn per_participant(m: usize, hs: &[usize]) -> Self {
+        let attend = (0..m)
+            .map(|b| {
+                hs.iter()
+                    .map(|&h| {
+                        let h = h.clamp(1, m);
+                        (b + 1) % h == 0
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { attend }
+    }
+
+    /// Fully local (H = M): LocAttn baseline.
+    pub fn local_only(m: usize, n: usize) -> Self {
+        let mut s = Self { attend: vec![vec![false; n]; m] };
+        if m > 0 {
+            // H = M still syncs once at the last block per Alg. 1.
+            s.attend[m - 1] = vec![true; n];
+        }
+        s
+    }
+
+    /// No sync at all (strictly local inference; used for ablations).
+    pub fn never(m: usize, n: usize) -> Self {
+        Self { attend: vec![vec![false; n]; m] }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.attend.len()
+    }
+
+    pub fn n_participants(&self) -> usize {
+        self.attend.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Does anyone attend globally at block `m`?
+    pub fn any_attending(&self, m: usize) -> bool {
+        self.attend[m].iter().any(|&b| b)
+    }
+
+    /// Blocks at which at least one participant attends.
+    pub fn sync_blocks(&self) -> Vec<usize> {
+        (0..self.n_blocks()).filter(|&m| self.any_attending(m)).collect()
+    }
+
+    /// Total attendance events (= global-attention executions).
+    pub fn total_attendances(&self) -> usize {
+        self.attend.iter().flatten().filter(|&&b| b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_h1_syncs_everywhere() {
+        let s = SyncSchedule::uniform(8, 3, 1);
+        assert_eq!(s.sync_blocks(), (0..8).collect::<Vec<_>>());
+        assert_eq!(s.total_attendances(), 24);
+    }
+
+    #[test]
+    fn uniform_h2_syncs_every_other() {
+        let s = SyncSchedule::uniform(8, 2, 2);
+        assert_eq!(s.sync_blocks(), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn uniform_hm_syncs_last_only() {
+        let s = SyncSchedule::uniform(8, 2, 8);
+        assert_eq!(s.sync_blocks(), vec![7]);
+    }
+
+    #[test]
+    fn halves_are_disjoint() {
+        let sh = Scheme::ShallowHalf { rounds: 4 }.sync_blocks(8);
+        let dh = Scheme::DeepHalf { rounds: 4 }.sync_blocks(8);
+        assert_eq!(sh, vec![0, 1, 2, 3]);
+        assert_eq!(dh, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn progressive_gaps_grow() {
+        let p = Scheme::Progressive { rounds: 4 }.sync_blocks(8);
+        assert_eq!(p.len(), 4);
+        let gaps: Vec<isize> =
+            p.windows(2).map(|w| w[1] as isize - w[0] as isize).collect();
+        for w in gaps.windows(2) {
+            assert!(w[1] >= w[0], "gaps should not shrink: {p:?}");
+        }
+        assert!(p[0] <= 1, "progressive starts shallow: {p:?}");
+    }
+
+    #[test]
+    fn regressive_is_mirror_of_progressive() {
+        let p = Scheme::Progressive { rounds: 4 }.sync_blocks(8);
+        let r = Scheme::Regressive { rounds: 4 }.sync_blocks(8);
+        let mirrored: Vec<usize> = p.iter().map(|&b| 7 - b).rev().collect();
+        assert_eq!(r, mirrored);
+    }
+
+    #[test]
+    fn per_participant_intervals() {
+        let s = SyncSchedule::per_participant(8, &[2, 8]);
+        // participant 0 attends blocks 1,3,5,7; participant 1 only block 7.
+        assert!(s.attend[1][0] && !s.attend[1][1]);
+        assert!(s.attend[7][0] && s.attend[7][1]);
+        assert_eq!(s.total_attendances(), 5);
+    }
+
+    #[test]
+    fn schemes_have_requested_rounds() {
+        for scheme in [
+            Scheme::ShallowHalf { rounds: 4 },
+            Scheme::DeepHalf { rounds: 4 },
+            Scheme::Progressive { rounds: 4 },
+            Scheme::Regressive { rounds: 4 },
+        ] {
+            assert_eq!(scheme.sync_blocks(8).len(), 4, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn sync_blocks_sorted_unique() {
+        for m in [4usize, 6, 8, 12, 16] {
+            for rounds in 1..=4usize {
+                for scheme in [
+                    Scheme::Progressive { rounds },
+                    Scheme::Regressive { rounds },
+                ] {
+                    let b = scheme.sync_blocks(m);
+                    for w in b.windows(2) {
+                        assert!(w[0] < w[1], "{scheme:?} m={m}: {b:?}");
+                    }
+                    assert!(b.iter().all(|&x| x < m));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! One collaborative-inference task: the federated prefill (Alg. 1) and the
+//! publisher's autoregressive decode over the per-block KV caches (§IV-C).
+
+use anyhow::{Context, Result};
+
+use crate::data::Partition;
+use crate::fedattn::kv::GlobalKv;
+use crate::fedattn::masks::{decode_mask, global_mask, local_mask};
+use crate::fedattn::schedule::SyncSchedule;
+use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity};
+use crate::net::{NetReport, NetSim};
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::tokenizer;
+use crate::util::prng::Xoshiro256ss;
+
+/// Session knobs (one FedAttn task).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub schedule: SyncSchedule,
+    pub local_sparsity: LocalSparsity,
+    pub kv_policy: KvExchangePolicy,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// Collect every participant's final hidden states (error analysis /
+    /// divergence metrics; costs memory, off for serving).
+    pub record_hidden: bool,
+    /// Keep KV caches and decode a response for *every* participant (the
+    /// paper's Fig. 5 reports mean/min/max EM across participants).  The
+    /// default caches and decodes only the task publisher.
+    pub decode_all: bool,
+}
+
+impl SessionConfig {
+    pub fn new(schedule: SyncSchedule) -> Self {
+        Self {
+            schedule,
+            local_sparsity: LocalSparsity::full(),
+            kv_policy: KvExchangePolicy::Full,
+            max_new_tokens: 12,
+            seed: 0,
+            record_hidden: false,
+            decode_all: false,
+        }
+    }
+}
+
+/// Per-participant mutable state during prefill.
+struct PState {
+    /// Global positions of the kept tokens (after local sparsity).
+    pos: Vec<i32>,
+    /// Padded positions array (`l_pad` long; padding repeats the last pos).
+    pos_pad: Vec<i32>,
+    valid: usize,
+    /// Hidden states `[l_pad, d]`.
+    x: HostTensor,
+    /// Cached local causal mask (reused across local blocks).
+    lmask: HostTensor,
+}
+
+/// The publisher's KV cache for one block, sized to the decode-cache
+/// capacity `C`.
+struct BlockCache {
+    k: HostTensor,
+    v: HostTensor,
+    /// Visibility flags per cache row (for the decode mask).
+    visible: Vec<bool>,
+    /// Next free row.
+    len: usize,
+}
+
+impl BlockCache {
+    fn new(c: usize, kv_heads: usize, head_dim: usize) -> Self {
+        Self {
+            k: HostTensor::zeros(&[c, kv_heads, head_dim]),
+            v: HostTensor::zeros(&[c, kv_heads, head_dim]),
+            visible: vec![false; c],
+            len: 0,
+        }
+    }
+
+    fn push_rows(&mut self, k: &HostTensor, v: &HostTensor, rows: usize, visible: &[bool]) {
+        let c = self.k.shape()[0];
+        assert!(self.len + rows <= c, "decode cache overflow: {} + {rows} > {c}", self.len);
+        self.k.copy_rows_from(k, 0..rows, self.len);
+        self.v.copy_rows_from(v, 0..rows, self.len);
+        self.visible[self.len..self.len + rows].copy_from_slice(&visible[..rows]);
+        self.len += rows;
+    }
+}
+
+/// Prefill result (before decoding).
+pub struct PrefillOutput {
+    /// Final hidden states per participant (only when `record_hidden`),
+    /// trimmed to valid rows.
+    pub hidden: Vec<Option<HostTensor>>,
+    /// Positions of each participant's valid tokens.
+    pub positions: Vec<Vec<i32>>,
+    pub net: NetReport,
+    pub wall_ms: f64,
+}
+
+/// Full session result.
+pub struct SessionReport {
+    /// The task publisher's decoded answer.
+    pub answer: String,
+    pub generated_tokens: usize,
+    /// Per-participant answers (only participants that kept caches decode;
+    /// others are `None`).  `answers[publisher]` equals `answer`.
+    pub answers: Vec<Option<String>>,
+    pub net: NetReport,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    /// Final hidden per participant (when `record_hidden`).
+    pub hidden: Vec<Option<HostTensor>>,
+    pub positions: Vec<Vec<i32>>,
+}
+
+/// Drives one collaborative task through the engine.
+pub struct FedSession<'a> {
+    engine: &'a Engine,
+    cfg: SessionConfig,
+    parts: Vec<PState>,
+    /// `caches[p]` — per-layer KV caches for participant `p`; empty vec for
+    /// participants that will not decode.
+    caches: Vec<Vec<BlockCache>>,
+    net: NetSim,
+    rng: Xoshiro256ss,
+    publisher: usize,
+    total_len: usize,
+}
+
+impl<'a> FedSession<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        partition: &'a Partition,
+        cfg: SessionConfig,
+        net: NetSim,
+    ) -> Result<Self> {
+        let n = partition.n_participants();
+        anyhow::ensure!(net.n_participants() == n, "net sim participant count");
+        anyhow::ensure!(cfg.schedule.n_participants() == n, "schedule participant count");
+        anyhow::ensure!(
+            cfg.schedule.n_blocks() == engine.manifest.model.n_layers,
+            "schedule block count"
+        );
+        let mut rng = Xoshiro256ss::new(cfg.seed ^ 0x5E55_10);
+        let md = &engine.manifest.model;
+
+        // Build per-participant state: apply local sparsity, pad, embed.
+        let mut parts = Vec::with_capacity(n);
+        for p in 0..n {
+            let (s, e) = partition.spans[p];
+            let span_ids = &partition.ids[s..e];
+            // Protect the tail of the publisher (the "A:" anchor) from
+            // local-sparsity dropping.
+            let protect = if p == partition.publisher() { 3 } else { 0 };
+            let keep = cfg.local_sparsity.select(span_ids.len(), protect, &mut rng);
+            let ids: Vec<i32> = keep.iter().map(|&i| span_ids[i]).collect();
+            let pos: Vec<i32> = keep.iter().map(|&i| (s + i) as i32).collect();
+            let l_pad = engine.manifest.pick_l(ids.len())?;
+            let mut pos_pad = pos.clone();
+            let last = *pos_pad.last().unwrap_or(&0);
+            pos_pad.resize(l_pad, last);
+            let mut x = HostTensor::zeros(&[l_pad, md.d_model]);
+            let emb = engine.embed(&ids)?;
+            x.copy_rows_from(&emb, 0..ids.len(), 0);
+            let valid = ids.len();
+            let lmask = local_mask(&pos_pad, valid);
+            parts.push(PState { pos, pos_pad, valid, x, lmask });
+        }
+
+        let c = engine.manifest.decode_cache;
+        let publisher = partition.publisher();
+        let caches: Vec<Vec<BlockCache>> = (0..n)
+            .map(|p| {
+                if p == publisher || cfg.decode_all {
+                    (0..md.n_layers)
+                        .map(|_| BlockCache::new(c, md.n_kv_heads, md.head_dim))
+                        .collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+
+        Ok(Self {
+            engine,
+            cfg,
+            parts,
+            caches,
+            net,
+            rng,
+            publisher,
+            total_len: partition.len(),
+        })
+    }
+
+    /// Run the federated prefill (Alg. 1 lines 2–14).
+    pub fn prefill(&mut self) -> Result<PrefillOutput> {
+        let t0 = std::time::Instant::now();
+        let md = self.engine.manifest.model.clone();
+        let n = self.parts.len();
+        let n_layers = md.n_layers;
+        let row_bytes = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim) as u64;
+
+        for m in 0..n_layers {
+            let attend = self.cfg.schedule.attend[m].clone();
+            let any = attend.iter().any(|&b| b);
+
+            if !any {
+                // Phase I only: every participant runs a fused local block.
+                for p in 0..n {
+                    let st = &mut self.parts[p];
+                    let (xo, k, v) =
+                        self.engine.block_fused(m, &st.x, &st.pos_pad, &st.lmask)?;
+                    st.x = xo;
+                    if !self.caches[p].is_empty() {
+                        let valid = self.parts[p].valid;
+                        let vis = vec![true; valid];
+                        self.caches[p][m].push_rows(&k, &v, valid, &vis);
+                    }
+                }
+                continue;
+            }
+
+            // Sync block: everyone produces (q,)k,v; attendees do global
+            // attention over the aggregated KV.
+            let mut qs: Vec<Option<HostTensor>> = (0..n).map(|_| None).collect();
+            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
+            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
+            for p in 0..n {
+                let st = &self.parts[p];
+                if attend[p] {
+                    let (q, k, v) = self.engine.qkv_project(m, &st.x, &st.pos_pad)?;
+                    qs[p] = Some(q);
+                    ks.push(k);
+                    vs.push(v);
+                } else {
+                    // Non-attendee: plain local block; its fresh K/V are
+                    // what it would transmit to attendees.
+                    let (xo, k, v) =
+                        self.engine.block_fused(m, &st.x, &st.pos_pad, &st.lmask)?;
+                    ks.push(k);
+                    vs.push(v);
+                    self.parts[p].x = xo;
+                }
+            }
+
+            // Sparse KV exchange: per-participant transmitted-row flags.
+            let tx_flags: Vec<Vec<bool>> = (0..n)
+                .map(|p| {
+                    self.cfg.kv_policy.transmitted(
+                        p,
+                        self.publisher,
+                        self.parts[p].valid,
+                        &mut self.rng,
+                    )
+                })
+                .collect();
+
+            // Pack the global KV (Eq. 20).
+            let rows_total: usize = self.parts.iter().map(|s| s.valid).sum();
+            let g_pad = self.engine.manifest.pick_g(rows_total)?;
+            let parts_refs: Vec<_> = (0..n)
+                .map(|p| {
+                    (
+                        &ks[p],
+                        &vs[p],
+                        self.parts[p].pos.as_slice(),
+                        self.parts[p].valid,
+                        tx_flags[p].as_slice(),
+                    )
+                })
+                .collect();
+            let gkv = GlobalKv::pack(&parts_refs, g_pad)?;
+            let (kv_pos, kv_owner, kv_tx) = gkv.meta_columns();
+
+            // Communication accounting + simulated transfer time.
+            let tx_rows = gkv.tx_rows_by_owner(n);
+            let tx_bytes: Vec<u64> =
+                tx_rows.iter().map(|&r| r as u64 * row_bytes).collect();
+            self.net.exchange_round(&tx_bytes, &attend);
+
+            // Global attention + FFN for attendees (Eq. 21 + 19).
+            for p in 0..n {
+                if !attend[p] {
+                    continue;
+                }
+                let st = &self.parts[p];
+                let q = qs[p].take().context("missing q for attendee")?;
+                let mask = global_mask(
+                    &st.pos_pad,
+                    st.valid,
+                    g_pad,
+                    &kv_pos,
+                    &kv_owner,
+                    &kv_tx,
+                    gkv.rows(),
+                    p,
+                );
+                let xo = self.engine.attn_ffn(m, &st.x, &q, &gkv.k, &gkv.v, &mask)?;
+                self.parts[p].x = xo;
+            }
+
+            // Decode caches for this block (paper §IV-C): participants that
+            // attended cache the global KV (restricted to what they could
+            // see); others cache their own local KV.
+            for p in 0..n {
+                if self.caches[p].is_empty() {
+                    continue;
+                }
+                if attend[p] {
+                    let vis: Vec<bool> = gkv
+                        .meta
+                        .iter()
+                        .map(|r| r.owner == p || r.transmitted)
+                        .collect();
+                    self.caches[p][m].push_rows(&gkv.k, &gkv.v, gkv.rows(), &vis);
+                } else {
+                    let vis = vec![true; self.parts[p].valid];
+                    self.caches[p][m].push_rows(&ks[p], &vs[p], self.parts[p].valid, &vis);
+                }
+            }
+        }
+
+        let hidden = self.collect_hidden();
+        Ok(PrefillOutput {
+            hidden,
+            positions: self.parts.iter().map(|s| s.pos.clone()).collect(),
+            net: self.net.report().clone(),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    fn collect_hidden(&self) -> Vec<Option<HostTensor>> {
+        self.parts
+            .iter()
+            .map(|st| {
+                if self.cfg.record_hidden {
+                    let mut h = HostTensor::zeros(&[st.valid, st.x.shape()[1]]);
+                    h.copy_rows_from(&st.x, 0..st.valid, 0);
+                    Some(h)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Greedy decode from participant `p`'s KV caches (requires that `p`
+    /// kept caches).  Returns the decoded text and token count.
+    pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
+        anyhow::ensure!(!self.caches[p].is_empty(), "participant {p} has no caches");
+        let md = self.engine.manifest.model.clone();
+        let c = self.engine.manifest.decode_cache;
+
+        // Kick-off logits from the participant's final prompt token.
+        let last_row = self.parts[p].valid - 1;
+        let mut h_last = HostTensor::zeros(&[1, md.d_model]);
+        h_last.copy_rows_from(&self.parts[p].x, last_row..last_row + 1, 0);
+        let mut logits = self.engine.logits(&h_last)?;
+
+        let mut out_ids: Vec<i32> = Vec::new();
+        for step in 0..self.cfg.max_new_tokens {
+            let next = argmax(&logits);
+            if next == tokenizer::EOS {
+                break;
+            }
+            out_ids.push(next);
+            if step + 1 == self.cfg.max_new_tokens {
+                break;
+            }
+            // One decode pass to produce logits for the following token.
+            let pos = (self.total_len + step) as i32;
+            let mut x = self.engine.embed(&[next])?;
+            for m in 0..md.n_layers {
+                let cache = &self.caches[p][m];
+                let mask = decode_mask(c, &cache.visible);
+                let (xo, kn, vn) =
+                    self.engine
+                        .decode_block(m, &x, pos, &cache.k, &cache.v, &mask)?;
+                x = xo;
+                let cache = &mut self.caches[p][m];
+                cache.push_rows(&kn, &vn, 1, &[true]);
+            }
+            logits = self.engine.logits(&x)?;
+        }
+        Ok((tokenizer::decode(&out_ids), out_ids.len()))
+    }
+
+    /// Decode the task publisher.
+    pub fn decode(&mut self) -> Result<(String, usize)> {
+        self.decode_participant(self.publisher)
+    }
+
+    /// Prefill + decode, returning the full report.
+    pub fn run(mut self) -> Result<SessionReport> {
+        let pre = self.prefill()?;
+        let t0 = std::time::Instant::now();
+        let n = self.parts.len();
+        let mut answers: Vec<Option<String>> = vec![None; n];
+        let mut generated = 0usize;
+        let mut answer = String::new();
+        for p in 0..n {
+            if self.caches[p].is_empty() {
+                continue;
+            }
+            let (text, tokens) = self.decode_participant(p)?;
+            if p == self.publisher {
+                answer = text.clone();
+                generated = tokens;
+            }
+            answers[p] = Some(text);
+        }
+        Ok(SessionReport {
+            answer,
+            generated_tokens: generated,
+            answers,
+            net: self.net.into_report(),
+            prefill_ms: pre.wall_ms,
+            decode_ms: t0.elapsed().as_secs_f64() * 1e3,
+            hidden: pre.hidden,
+            positions: pre.positions,
+        })
+    }
+
+    /// Prefill only (error-analysis paths that do not decode).
+    pub fn run_prefill_only(mut self) -> Result<PrefillOutput> {
+        self.prefill()
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn block_cache_push_and_overflow() {
+        let mut c = BlockCache::new(4, 1, 2);
+        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
+        let v = k.clone();
+        c.push_rows(&k, &v, 2, &[true, false]);
+        assert_eq!(c.len, 2);
+        assert_eq!(c.visible[..2], [true, false]);
+        c.push_rows(&k, &v, 2, &[true, true]);
+        assert_eq!(c.len, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode cache overflow")]
+    fn block_cache_overflow_panics() {
+        let mut c = BlockCache::new(2, 1, 2);
+        let k = HostTensor::new(&[2, 1, 2], vec![0.0; 4]).unwrap();
+        c.push_rows(&k, &k.clone(), 2, &[true, true]);
+        c.push_rows(&k, &k.clone(), 1, &[true]);
+    }
+}

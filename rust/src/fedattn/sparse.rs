@@ -1,0 +1,190 @@
+//! Sparsity policies from the paper's §V duality toolkit.
+//!
+//! * `LocalSparsity` — sparse local attention (Fig. 9): each participant
+//!   randomly subsamples its input tokens *before* inference.  Irreversible
+//!   information loss ⇒ monotone quality degradation.
+//! * `KvExchangePolicy` — sparse / adaptive KV exchange (Fig. 10 and §V
+//!   Obs. 4): which of a participant's KV rows are transmitted at a sync
+//!   block.  Own rows remain visible to their owner regardless.
+
+use crate::util::prng::Xoshiro256ss;
+
+/// Sparse local attention: keep each token independently with probability
+/// `ratio` (the question-final "A:" anchor tokens are always kept so the
+/// publisher can still decode).
+#[derive(Debug, Clone, Copy)]
+pub struct LocalSparsity {
+    pub ratio: f64,
+}
+
+impl LocalSparsity {
+    pub fn full() -> Self {
+        Self { ratio: 1.0 }
+    }
+
+    /// Select which local indices (0..len) survive; always keeps at least
+    /// one token and the final `protect_tail` tokens.
+    pub fn select(&self, len: usize, protect_tail: usize, rng: &mut Xoshiro256ss) -> Vec<usize> {
+        if self.ratio >= 1.0 || len == 0 {
+            return (0..len).collect();
+        }
+        let protected_from = len.saturating_sub(protect_tail);
+        let mut keep: Vec<usize> = (0..len)
+            .filter(|&i| i >= protected_from || rng.bernoulli(self.ratio))
+            .collect();
+        if keep.is_empty() {
+            keep.push(len - 1);
+        }
+        keep
+    }
+}
+
+/// KV-exchange policy applied per participant per sync block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvExchangePolicy {
+    /// Transmit every valid row (Alg. 1 baseline).
+    Full,
+    /// Transmit a uniform random subset of rows (Fig. 10).
+    Random { ratio: f64 },
+    /// Adaptive aggregation (§V Obs. 4): the publisher transmits all rows,
+    /// other participants transmit a random `remote_ratio` subset.
+    PublisherPriority { remote_ratio: f64 },
+    /// Per-round budget: the `budget_rows` most recent rows (temporal
+    /// recency heuristic from the sparse-attention literature [37]–[40]).
+    RecentBudget { budget_rows: usize },
+}
+
+impl KvExchangePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvExchangePolicy::Full => "full",
+            KvExchangePolicy::Random { .. } => "random",
+            KvExchangePolicy::PublisherPriority { .. } => "publisher-priority",
+            KvExchangePolicy::RecentBudget { .. } => "recent-budget",
+        }
+    }
+
+    /// Which of `len` valid rows participant `who` transmits this round.
+    /// Returns a boolean row mask.
+    pub fn transmitted(
+        &self,
+        who: usize,
+        publisher: usize,
+        len: usize,
+        rng: &mut Xoshiro256ss,
+    ) -> Vec<bool> {
+        match *self {
+            KvExchangePolicy::Full => vec![true; len],
+            KvExchangePolicy::Random { ratio } => {
+                let mut tx: Vec<bool> =
+                    (0..len).map(|_| rng.bernoulli(ratio)).collect();
+                if ratio > 0.0 && !tx.iter().any(|&b| b) && len > 0 {
+                    tx[len - 1] = true; // never transmit an empty set
+                }
+                tx
+            }
+            KvExchangePolicy::PublisherPriority { remote_ratio } => {
+                if who == publisher {
+                    vec![true; len]
+                } else {
+                    KvExchangePolicy::Random { ratio: remote_ratio }
+                        .transmitted(who, publisher, len, rng)
+                }
+            }
+            KvExchangePolicy::RecentBudget { budget_rows } => {
+                let start = len.saturating_sub(budget_rows);
+                (0..len).map(|i| i >= start).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn full_policy_transmits_all() {
+        let mut rng = Xoshiro256ss::new(1);
+        let tx = KvExchangePolicy::Full.transmitted(0, 2, 10, &mut rng);
+        assert!(tx.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn random_ratio_approximate() {
+        let mut rng = Xoshiro256ss::new(2);
+        let mut kept = 0usize;
+        let n = 20_000;
+        let tx = KvExchangePolicy::Random { ratio: 0.3 };
+        for _ in 0..n / 100 {
+            kept += tx
+                .transmitted(0, 1, 100, &mut rng)
+                .iter()
+                .filter(|&&b| b)
+                .count();
+        }
+        let frac = kept as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.05, "kept fraction {frac}");
+    }
+
+    #[test]
+    fn publisher_priority_keeps_publisher_full() {
+        let mut rng = Xoshiro256ss::new(3);
+        let p = KvExchangePolicy::PublisherPriority { remote_ratio: 0.2 };
+        assert!(p.transmitted(2, 2, 50, &mut rng).iter().all(|&b| b));
+        let remote = p.transmitted(0, 2, 50, &mut rng);
+        assert!(remote.iter().filter(|&&b| b).count() < 40);
+    }
+
+    #[test]
+    fn recent_budget_keeps_tail() {
+        let mut rng = Xoshiro256ss::new(4);
+        let p = KvExchangePolicy::RecentBudget { budget_rows: 3 };
+        let tx = p.transmitted(0, 1, 8, &mut rng);
+        assert_eq!(tx, vec![false, false, false, false, false, true, true, true]);
+    }
+
+    #[test]
+    fn random_never_empty() {
+        propcheck(100, |rng| {
+            let len = 1 + rng.below(30) as usize;
+            let tx = KvExchangePolicy::Random { ratio: 0.05 }
+                .transmitted(0, 1, len, rng);
+            if tx.iter().any(|&b| b) {
+                Ok(())
+            } else {
+                Err("empty transmission set".into())
+            }
+        });
+    }
+
+    #[test]
+    fn local_sparsity_protects_tail() {
+        propcheck(100, |rng| {
+            let len = 5 + rng.below(100) as usize;
+            let keep = LocalSparsity { ratio: 0.3 }.select(len, 4, rng);
+            for t in len - 4..len {
+                if !keep.contains(&t) {
+                    return Err(format!("tail token {t} dropped"));
+                }
+            }
+            // strictly increasing
+            for w in keep.windows(2) {
+                if w[0] >= w[1] {
+                    return Err("not sorted".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_sparsity_keeps_everything() {
+        let mut rng = Xoshiro256ss::new(9);
+        assert_eq!(
+            LocalSparsity::full().select(7, 0, &mut rng),
+            (0..7).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! # FedAttn — Federated Attention for collaborative LLM inference
+//!
+//! A production-shaped reproduction of *"Federated Attention: A Distributed
+//! Paradigm for Collaborative LLM Inference over Edge Networks"* (Deng et
+//! al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (build time)** — Pallas attention kernel
+//!   (`python/compile/kernels/`), lowered in interpret mode.
+//! * **Layer 2 (build time)** — TinyQwen JAX model pieces AOT-lowered to
+//!   HLO text (`python/compile/aot.py` → `artifacts/`).
+//! * **Layer 3 (this crate)** — the Rust coordinator: participants, sync
+//!   schedules, KV exchange/aggregation, sparsity policies, the edge
+//!   network simulator and the serving layer, all executing the AOT
+//!   artifacts via PJRT.  Python never runs on the request path.
+//!
+//! Start with [`runtime::Engine`] + [`fedattn::FedSession`], or the
+//! serving-level [`coordinator::Coordinator`].  See `examples/` for
+//! runnable entry points and `rust/benches/` for the paper-figure
+//! reproductions.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod fedattn;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod tokenizer;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$FEDATTN_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (where `make artifacts` puts it).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FEDATTN_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from CWD looking for artifacts/manifest.json (tests and
+    // benches run from target subdirectories).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..5 {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,240 @@
+//! `fedattn` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info       — print model/artifact/weight information
+//!   run        — run one collaborative task and print the answer + costs
+//!   serve      — replay a workload trace through the coordinator
+//!   gen-data   — print sample MicroFact episodes (workload inspection)
+//!   validate   — H=1 FedAttn ≡ CenAttn sanity check on live artifacts
+
+use anyhow::{Context, Result};
+
+use fedattn::cli::Args;
+use fedattn::config::SystemConfig;
+use fedattn::coordinator::{Coordinator, CoordinatorConfig};
+use fedattn::data::{gen_episode, partition, Segmentation, TraceConfig, WorkloadTrace};
+use fedattn::fedattn::{FedSession, SessionConfig, SyncSchedule};
+use fedattn::metrics::CostModel;
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::runtime::Engine;
+use fedattn::util::prng::SplitMix64;
+use fedattn::util::stats::fmt_bytes;
+
+fn main() {
+    fedattn::util::log::init();
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional(0).unwrap_or("help") {
+        "info" => cmd_info(args),
+        "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
+        "gen-data" => cmd_gen_data(args),
+        "validate" => cmd_validate(args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedattn — federated attention coordinator\n\
+         \n\
+         USAGE: fedattn <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+           info                       model + artifact summary\n\
+           run                        one collaborative task\n\
+           serve                      replay a workload trace\n\
+           gen-data                   sample MicroFact episodes\n\
+           validate                   H=1 == CenAttn end-to-end check\n\
+         \n\
+         COMMON OPTIONS\n\
+           --config <file.toml>       load a system config\n\
+           --participants <N>         number of participants (default 3)\n\
+           --h <H>                    uniform sync interval (default 2)\n\
+           --seg <setting>            tok-seg:q-ag|tok-seg:q-ex|sem-seg:q-ag|sem-seg:q-ex\n\
+           --kv-ratio <r>             sparse KV-exchange keep ratio\n\
+           --local-ratio <r>          sparse local-attention keep ratio\n\
+           --tasks <n>, --seed <s>    workload size / determinism\n\
+           --engines <n>              serving worker threads"
+    );
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig> {
+    let mut sc = match args.opt("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path))
+            .with_context(|| format!("loading config {path}"))?,
+        None => SystemConfig::default(),
+    };
+    sc.artifacts_dir = args
+        .opt("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(fedattn::default_artifacts_dir);
+    sc.seed = args.u64_or("seed", sc.seed);
+    let f = &mut sc.federation;
+    f.participants = args.usize_or("participants", f.participants);
+    f.sync_h = args.usize_or("h", f.sync_h);
+    if let Some(seg) = args.opt("seg") {
+        f.segmentation =
+            Segmentation::parse(seg).with_context(|| format!("unknown --seg {seg:?}"))?;
+    }
+    f.local_sparsity = args.f64_or("local-ratio", f.local_sparsity);
+    let kv_ratio = args.f64_or("kv-ratio", 1.0);
+    if kv_ratio < 1.0 {
+        f.kv_policy = fedattn::fedattn::KvExchangePolicy::Random { ratio: kv_ratio };
+    }
+    f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
+    sc.serving.engines = args.usize_or("engines", sc.serving.engines);
+    Ok(sc)
+}
+
+fn build_engine(sc: &SystemConfig) -> Result<Engine> {
+    Engine::load(&sc.artifacts_dir, &sc.weights_file)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let sc = load_config(args)?;
+    let engine = build_engine(&sc)?;
+    let md = &engine.manifest.model;
+    let cm = CostModel::new(md.clone());
+    println!("model       : {}", md.name);
+    println!(
+        "layers      : {}  d_model {}  heads {}/{}  head_dim {}  d_ff {}",
+        md.n_layers, md.d_model, md.n_heads, md.n_kv_heads, md.head_dim, md.d_ff
+    );
+    println!("params      : {}", engine.weights().param_count());
+    println!("weights     : {}", fmt_bytes(cm.weight_bytes()));
+    println!(
+        "kv row      : {} bytes (GQA {}x)",
+        md.kv_row_bytes(),
+        md.n_heads / md.n_kv_heads
+    );
+    println!(
+        "artifacts   : {} entries in {:?}",
+        engine.manifest.entries.len(),
+        engine.manifest.dir
+    );
+    println!("l variants  : {:?}", engine.manifest.l_variants);
+    println!("g variants  : {:?}", engine.manifest.g_variants);
+    println!("decode cache: {}", engine.manifest.decode_cache);
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let n = args.usize_or("tasks", 5);
+    let mut rng = SplitMix64::new(args.u64_or("seed", 7));
+    for i in 0..n {
+        let ep = gen_episode(&mut rng, 4);
+        println!("--- episode {i} [{}]", ep.kind.as_str());
+        println!("{}", ep.prompt());
+        println!("gold: {}", ep.answer);
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let sc = load_config(args)?;
+    let engine = build_engine(&sc)?;
+    let coord = Coordinator::new(engine, CoordinatorConfig::from_system(&sc));
+    let mut rng = SplitMix64::new(sc.seed);
+    let ep = gen_episode(&mut rng, args.usize_or("facts", 4));
+    println!(
+        "prompt ({} participants, {}):",
+        sc.federation.participants,
+        sc.federation.segmentation.as_str()
+    );
+    println!("  {}", ep.prompt());
+    let r = coord.run_one(&ep, sc.seed)?;
+    println!("answer      : {:?} (gold {:?}) -> EM {}", r.answer, r.gold, r.em);
+    println!("service     : {:.1} ms ({} tokens)", r.service_ms, r.generated_tokens);
+    println!(
+        "comm        : {} over simulated net ({:.2} ms)",
+        fmt_bytes(r.comm_bytes as f64),
+        r.comm_time_ms
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let sc = load_config(args)?;
+    let engine = build_engine(&sc)?;
+    let mut ccfg = CoordinatorConfig::from_system(&sc);
+    ccfg.time_scale = args.f64_or("time-scale", 10.0);
+    let coord = Coordinator::new(engine, ccfg);
+    let trace = WorkloadTrace::generate(&TraceConfig {
+        seed: sc.seed,
+        n_tasks: args.usize_or("tasks", 16),
+        mean_interarrival_ms: args.f64_or("interarrival-ms", 200.0),
+        ..Default::default()
+    });
+    println!("serving {} tasks ...", trace.len());
+    let rep = coord.serve_trace(&trace)?;
+    println!("tasks       : {}", rep.results.len());
+    println!("EM          : {:.3}", rep.em_rate());
+    println!("throughput  : {:.2} tasks/s", rep.throughput_tasks_per_s());
+    println!("latency p50 : {:.1} ms", rep.latency_percentile(50.0));
+    println!("latency p95 : {:.1} ms", rep.latency_percentile(95.0));
+    let comm: u64 = rep.results.iter().map(|r| r.comm_bytes).sum();
+    println!("comm total  : {}", fmt_bytes(comm as f64));
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let sc = load_config(args)?;
+    let engine = build_engine(&sc)?;
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(sc.seed);
+    let ep = gen_episode(&mut rng, 4);
+    let n = sc.federation.participants;
+
+    // FedAttn with H=1 (every block global).
+    let part = partition(&ep, n, sc.federation.segmentation);
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 1));
+    cfg.record_hidden = true;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 1);
+    let fed = FedSession::new(&engine, &part, cfg, net)?.run()?;
+
+    // CenAttn: one participant holding everything.
+    let cen_part = partition(&ep, 1, Segmentation::TokQAg);
+    let mut cen_cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 1, md.n_layers));
+    cen_cfg.record_hidden = true;
+    let cen_net = NetSim::uniform(Topology::Star, 1, LinkSpec::default(), 1);
+    let cen = FedSession::new(&engine, &cen_part, cen_cfg, cen_net)?.run()?;
+
+    // Compare the answers + hidden states row-by-row by global position.
+    println!("fed answer  : {:?}", fed.answer);
+    println!("cen answer  : {:?}", cen.answer);
+    let cen_h = cen.hidden[0].as_ref().unwrap();
+    let mut max_diff = 0f32;
+    for (p, h) in fed.hidden.iter().enumerate() {
+        let h = h.as_ref().unwrap();
+        for (i, &gpos) in fed.positions[p].iter().enumerate() {
+            let a = h.row(i);
+            let b = cen_h.row(gpos as usize);
+            for (x, y) in a.iter().zip(b) {
+                max_diff = max_diff.max((x - y).abs());
+            }
+        }
+    }
+    println!("max |h_fed - h_cen| = {max_diff:e}");
+    anyhow::ensure!(max_diff < 2e-4, "H=1 must match CenAttn (got {max_diff})");
+    anyhow::ensure!(fed.answer == cen.answer, "answers must match");
+    println!("validate OK");
+    Ok(())
+}

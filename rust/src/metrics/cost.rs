@@ -1,0 +1,172 @@
+//! Analytic computational-cost models.
+//!
+//! The paper reports per-participant FLOPs and peak memory for Prefilling
+//! and Decoding (§VII-A3b, Fig. 6).  These are *model* quantities — a
+//! function of sequence/visibility sizes and the architecture — exactly as
+//! the paper computes them; wall-clock on this CPU testbed is reported
+//! separately by the benches.
+
+use crate::model::ModelDims;
+
+/// Cost of one phase for one participant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseCost {
+    pub flops: f64,
+    pub peak_mem_bytes: f64,
+}
+
+impl PhaseCost {
+    pub fn add(&mut self, other: PhaseCost) {
+        self.flops += other.flops;
+        self.peak_mem_bytes = self.peak_mem_bytes.max(other.peak_mem_bytes);
+    }
+}
+
+/// Analytic cost model for the TinyQwen block structure.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub dims: ModelDims,
+}
+
+impl CostModel {
+    pub fn new(dims: ModelDims) -> Self {
+        Self { dims }
+    }
+
+    /// FLOPs of one Transformer block where `l` query rows attend to `g`
+    /// KV rows: QKV projection (O(l·d²)), attention (O(l·g·d)), output
+    /// projection and SwiGLU FFN.
+    pub fn block_flops(&self, l: usize, g: usize) -> f64 {
+        let d = self.dims.d_model as f64;
+        let qd = self.dims.q_dim() as f64;
+        let kd = self.dims.kv_dim() as f64;
+        let dff = self.dims.d_ff as f64;
+        let (l, g) = (l as f64, g as f64);
+        let proj = 2.0 * l * d * (qd + 2.0 * kd);
+        let scores = 2.0 * l * g * qd; // Q·Kᵀ over all query heads
+        let av = 2.0 * l * g * qd; // P·V
+        let out = 2.0 * l * qd * d;
+        let ffn = 2.0 * l * d * dff * 3.0; // gate + up + down
+        proj + scores + av + out + ffn
+    }
+
+    /// Peak live bytes while executing one block (activations + scores +
+    /// KV + weights), f32.
+    pub fn block_peak_mem(&self, l: usize, g: usize) -> f64 {
+        let d = self.dims.d_model as f64;
+        let qd = self.dims.q_dim() as f64;
+        let kd = self.dims.kv_dim() as f64;
+        let dff = self.dims.d_ff as f64;
+        let (lf, gf) = (l as f64, g as f64);
+        let acts = lf * d * 3.0; // x, residual, normed
+        let qkv = lf * qd + 2.0 * gf * kd;
+        // Flash-style tiles keep only an l×tile score panel live; the
+        // additive mask is l×g.
+        let tile = 64.0f64.min(gf);
+        let scores = lf * tile + lf * gf;
+        let ffn = lf * dff * 2.0;
+        let weights = d * (qd + 2.0 * kd) + qd * d + 3.0 * d * dff + 2.0 * d;
+        4.0 * (acts + qkv + scores + ffn + weights)
+    }
+
+    /// Prefill cost for one participant with `l` local tokens: `local`
+    /// blocks at visibility `l` plus `global` blocks at visibility `g`.
+    pub fn prefill_cost(&self, l: usize, g: usize, local_blocks: usize, global_blocks: usize) -> PhaseCost {
+        let mut c = PhaseCost::default();
+        for _ in 0..local_blocks {
+            c.flops += self.block_flops(l, l);
+            c.peak_mem_bytes = c.peak_mem_bytes.max(self.block_peak_mem(l, l));
+        }
+        for _ in 0..global_blocks {
+            c.flops += self.block_flops(l, g);
+            c.peak_mem_bytes = c.peak_mem_bytes.max(self.block_peak_mem(l, g));
+        }
+        c
+    }
+
+    /// Decode cost for `t` generated tokens against an average cache of
+    /// `cache` rows across all layers (KV caching ⇒ O(cache) per step).
+    pub fn decode_cost(&self, t: usize, cache: usize) -> PhaseCost {
+        let mut c = PhaseCost::default();
+        for _ in 0..t {
+            for _ in 0..self.dims.n_layers {
+                c.flops += self.block_flops(1, cache);
+            }
+        }
+        // Peak memory: the persistent KV caches dominate.
+        let kv_cache_bytes =
+            (self.dims.n_layers * cache * self.dims.kv_dim() * 2 * 4) as f64;
+        c.peak_mem_bytes = self.block_peak_mem(1, cache) + kv_cache_bytes;
+        c
+    }
+
+    /// Weight bytes (f32) — the floor under any peak-memory number.
+    pub fn weight_bytes(&self) -> f64 {
+        let d = self.dims.d_model as f64;
+        let v = self.dims.vocab_size as f64;
+        let qd = self.dims.q_dim() as f64;
+        let kd = self.dims.kv_dim() as f64;
+        let dff = self.dims.d_ff as f64;
+        let per_block = d * (qd + 2.0 * kd) + qd + 2.0 * kd + qd * d + 3.0 * d * dff + 2.0 * d;
+        4.0 * (v * d + self.dims.n_layers as f64 * per_block + d + d * v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            vocab_size: 128,
+            d_model: 96,
+            n_layers: 8,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 24,
+            d_ff: 256,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+        }
+    }
+
+    #[test]
+    fn flops_scale_quadratically_with_visibility() {
+        let cm = CostModel::new(dims());
+        let f1 = cm.block_flops(64, 64);
+        let f2 = cm.block_flops(128, 128);
+        // attention term is quadratic, projections linear: 2x seq ⇒ between
+        // 2x and 4x FLOPs.
+        assert!(f2 > 2.0 * f1 && f2 < 4.0 * f1, "{f1} {f2}");
+    }
+
+    #[test]
+    fn fedattn_prefill_cheaper_than_centralized() {
+        // N participants with L/N tokens each, H=M local blocks, vs one
+        // participant with all L tokens — the paper's computational saving.
+        let cm = CostModel::new(dims());
+        let central = cm.prefill_cost(256, 256, 8, 0).flops;
+        let fed_per_participant = cm.prefill_cost(64, 256, 7, 1).flops;
+        assert!(
+            fed_per_participant < central / 2.0,
+            "fed {fed_per_participant} vs central {central}"
+        );
+    }
+
+    #[test]
+    fn decode_linear_in_tokens() {
+        let cm = CostModel::new(dims());
+        let c1 = cm.decode_cost(10, 300).flops;
+        let c2 = cm.decode_cost(20, 300).flops;
+        assert!((c2 / c1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_bytes_close_to_param_count() {
+        let cm = CostModel::new(dims());
+        // 838752 params for the base preset (from python config).
+        let params = cm.weight_bytes() / 4.0;
+        assert!((params - 838_752.0).abs() < 1_000.0, "params {params}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Exact-match scoring (the paper's Pass@1 EM on GSM8K; here on MicroFact).
+
+/// Extract the model's answer from generated text: everything up to the
+/// first sentence/terminator, trimmed.
+pub fn extract_answer(generated: &str) -> String {
+    let s = generated.trim_start();
+    let end = s
+        .find(|c: char| c == '.' || c == '\n' || c == 'Q')
+        .unwrap_or(s.len());
+    s[..end].trim().to_string()
+}
+
+/// Pass@1 exact match.
+pub fn em_score(generated: &str, gold: &str) -> bool {
+    extract_answer(generated) == gold.trim()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_plain_number() {
+        assert_eq!(extract_answer(" 12"), "12");
+        assert_eq!(extract_answer(" 12. Lia has"), "12");
+        assert_eq!(extract_answer(" Lia Q: who"), "Lia");
+    }
+
+    #[test]
+    fn exact_match() {
+        assert!(em_score(" 7", "7"));
+        assert!(em_score(" Lia. Omar has 3", "Lia"));
+        assert!(!em_score(" 8", "7"));
+        assert!(!em_score("", "7"));
+    }
+}

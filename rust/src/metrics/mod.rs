@@ -1,0 +1,8 @@
+//! Metrics: analytic FLOPs / peak-memory models (paper §III-C), exact-match
+//! scoring, and aggregate reporting for the paper-figure benches.
+
+mod cost;
+mod em;
+
+pub use cost::{CostModel, PhaseCost};
+pub use em::{em_score, extract_answer};

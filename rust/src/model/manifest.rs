@@ -1,0 +1,248 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT exporter
+//! and the Rust runtime.  Describes the model dimensions and every lowered
+//! HLO entry point (name, file, variant sizes, parameter order).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    BlockFused,
+    QkvProject,
+    AttnFfn,
+    DecodeBlock,
+    Logits,
+    Embed,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "block_fused" => Self::BlockFused,
+            "qkv_project" => Self::QkvProject,
+            "attn_ffn" => Self::AttnFfn,
+            "decode_block" => Self::DecodeBlock,
+            "logits" => Self::Logits,
+            "embed" => Self::Embed,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Model dimensions mirrored from `python/compile/config.py::ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+impl ModelDims {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Bytes of one token's K+V pair (f32) — the unit of FedAttn's
+    /// communication accounting (paper §VII-A3a).
+    pub fn kv_row_bytes(&self) -> usize {
+        2 * self.kv_dim() * 4
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub l: Option<usize>,
+    pub g: Option<usize>,
+    pub c: Option<usize>,
+    /// Input names in call order (weights included).
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub l_variants: Vec<usize>,
+    pub g_variants: Vec<usize>,
+    pub decode_cache: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let m = j.get("model").context("manifest: missing model")?;
+        let get_usize = |obj: &Json, k: &str| -> Result<usize> {
+            obj.get(k).and_then(Json::as_usize).with_context(|| format!("manifest: {k}"))
+        };
+        let model = ModelDims {
+            name: m.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            vocab_size: get_usize(m, "vocab_size")?,
+            d_model: get_usize(m, "d_model")?,
+            n_layers: get_usize(m, "n_layers")?,
+            n_heads: get_usize(m, "n_heads")?,
+            n_kv_heads: get_usize(m, "n_kv_heads")?,
+            head_dim: get_usize(m, "head_dim")?,
+            d_ff: get_usize(m, "d_ff")?,
+            rope_theta: m.get("rope_theta").and_then(Json::as_f64).unwrap_or(10_000.0),
+            rms_eps: m.get("rms_eps").and_then(Json::as_f64).unwrap_or(1e-6),
+        };
+        let aot = j.get("aot").context("manifest: missing aot")?;
+        let arr_usize = |k: &str| -> Result<Vec<usize>> {
+            Ok(aot
+                .get(k)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("manifest: aot.{k}"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let entries_json =
+            j.get("entries").and_then(Json::as_arr).context("manifest: entries")?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let name =
+                e.get("name").and_then(Json::as_str).context("entry name")?.to_string();
+            let file = dir.join(e.get("file").and_then(Json::as_str).context("entry file")?);
+            let kind =
+                ArtifactKind::parse(e.get("kind").and_then(Json::as_str).context("kind")?)?;
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("entry inputs")?
+                .iter()
+                .filter_map(|i| i.get("name").and_then(Json::as_str))
+                .map(str::to_string)
+                .collect();
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("entry outputs")?
+                .iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect();
+            entries.push(ArtifactEntry {
+                name,
+                file,
+                kind,
+                l: e.get("l").and_then(Json::as_usize),
+                g: e.get("g").and_then(Json::as_usize),
+                c: e.get("c").and_then(Json::as_usize),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            model,
+            l_variants: arr_usize("l_variants")?,
+            g_variants: arr_usize("g_variants")?,
+            decode_cache: aot.get("decode_cache").and_then(Json::as_usize).unwrap_or(0),
+            entries,
+        })
+    }
+
+    /// Smallest L variant that fits `len` tokens.
+    pub fn pick_l(&self, len: usize) -> Result<usize> {
+        self.l_variants
+            .iter()
+            .copied()
+            .filter(|&l| l >= len)
+            .min()
+            .with_context(|| format!("no L variant fits {len} tokens (max {:?})", self.l_variants.iter().max()))
+    }
+
+    /// Smallest G variant that fits `len` global KV rows.
+    pub fn pick_g(&self, len: usize) -> Result<usize> {
+        self.g_variants
+            .iter()
+            .copied()
+            .filter(|&g| g >= len)
+            .min()
+            .with_context(|| format!("no G variant fits {len} KV rows (max {:?})", self.g_variants.iter().max()))
+    }
+
+    pub fn find(&self, kind: ArtifactKind, l: Option<usize>, g: Option<usize>) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.l == l && (g.is_none() || e.g == g))
+            .with_context(|| format!("no artifact kind={kind:?} l={l:?} g={g:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "model": {"name":"t","vocab_size":128,"d_model":96,"n_layers":8,
+                "n_heads":4,"n_kv_heads":2,"head_dim":24,"d_ff":256,
+                "rope_theta":10000.0,"rms_eps":1e-6,"qkv_bias":true},
+      "aot": {"l_variants":[32,64],"g_variants":[128],"decode_cache":448,
+              "block_q":32,"block_kv":64},
+      "entries": [
+        {"name":"block_fused_L32","file":"block_fused_L32.hlo.txt",
+         "kind":"block_fused","l":32,"g":32,
+         "inputs":[{"name":"x","dtype":"float32","shape":[32,96]}],
+         "outputs":["x_out","k","v"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.model.d_model, 96);
+        assert_eq!(m.model.kv_row_bytes(), 2 * 48 * 4);
+        assert_eq!(m.l_variants, vec![32, 64]);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].kind, ArtifactKind::BlockFused);
+        assert_eq!(m.entries[0].outputs, vec!["x_out", "k", "v"]);
+    }
+
+    #[test]
+    fn pick_variants() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.pick_l(10).unwrap(), 32);
+        assert_eq!(m.pick_l(33).unwrap(), 64);
+        assert!(m.pick_l(65).is_err());
+        assert_eq!(m.pick_g(100).unwrap(), 128);
+    }
+
+    #[test]
+    fn find_artifact() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert!(m.find(ArtifactKind::BlockFused, Some(32), None).is_ok());
+        assert!(m.find(ArtifactKind::BlockFused, Some(64), None).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Model metadata: AOT manifest parsing, model configuration, weights.
+
+mod manifest;
+mod weights;
+
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ModelDims};
+pub use weights::{Weights, BLOCK_PARAM_NAMES};
+
+/// Ordered weight names for layer `m` (full block: 12 tensors).
+pub fn weights_block_names(m: usize) -> Vec<String> {
+    BLOCK_PARAM_NAMES.iter().map(|n| format!("blk{m}.{n}")).collect()
+}
+
+/// QKV-projection weight names (ln1, wq, bq, wk, bk, wv, bv).
+pub fn weights_proj_names(m: usize) -> Vec<String> {
+    BLOCK_PARAM_NAMES[..7].iter().map(|n| format!("blk{m}.{n}")).collect()
+}
+
+/// Attention-output + FFN weight names (wo, ln2, wg, wu, wd).
+pub fn weights_attn_names(m: usize) -> Vec<String> {
+    BLOCK_PARAM_NAMES[7..].iter().map(|n| format!("blk{m}.{n}")).collect()
+}

@@ -1,0 +1,163 @@
+//! Model weights: loaded once from `artifacts/weights.npz` (written by the
+//! Python trainer) and uploaded to the PJRT device as persistent buffers so
+//! the request path never re-copies parameters (`execute_b`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::FromRawBytes;
+
+/// Named weight literals, host-side.  The runtime turns these into device
+/// buffers at engine construction.
+pub struct Weights {
+    tensors: HashMap<String, xla::Literal>,
+}
+
+// SAFETY: `xla::Literal` owns immutable host memory; after construction the
+// map is only ever read.  The raw pointer inside the wrapper is non-Send
+// only because the xla crate does not assert thread-safety.
+unsafe impl Send for Weights {}
+unsafe impl Sync for Weights {}
+
+/// Per-block weight order — must match
+/// `python/compile/model.py::BLOCK_PARAM_NAMES` and the AOT input order.
+pub const BLOCK_PARAM_NAMES: [&str; 12] = [
+    "ln1", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "ln2", "wg", "wu", "wd",
+];
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let pairs = xla::Literal::read_npz(path, &())
+            .with_context(|| format!("reading weights npz {path:?}"))?;
+        let tensors: HashMap<String, xla::Literal> = pairs.into_iter().collect();
+        anyhow::ensure!(!tensors.is_empty(), "weights file {path:?} is empty");
+        Ok(Self { tensors })
+    }
+
+    pub fn from_literals(tensors: HashMap<String, xla::Literal>) -> Self {
+        Self { tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::Literal> {
+        self.tensors.get(name).with_context(|| format!("missing weight {name:?}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Ordered per-block weights for layer `m`.
+    pub fn block(&self, m: usize) -> Result<Vec<&xla::Literal>> {
+        BLOCK_PARAM_NAMES
+            .iter()
+            .map(|n| self.get(&format!("blk{m}.{n}")))
+            .collect()
+    }
+
+    /// The QKV-projection prefix (ln1, wq, bq, wk, bk, wv, bv) of layer `m`.
+    pub fn block_proj(&self, m: usize) -> Result<Vec<&xla::Literal>> {
+        BLOCK_PARAM_NAMES[..7]
+            .iter()
+            .map(|n| self.get(&format!("blk{m}.{n}")))
+            .collect()
+    }
+
+    /// The attention-output + FFN suffix (wo, ln2, wg, wu, wd) of layer `m`.
+    pub fn block_attn(&self, m: usize) -> Result<Vec<&xla::Literal>> {
+        BLOCK_PARAM_NAMES[7..]
+            .iter()
+            .map(|n| self.get(&format!("blk{m}.{n}")))
+            .collect()
+    }
+
+    /// Validate completeness against the model dims.
+    pub fn validate(&self, n_layers: usize) -> Result<()> {
+        for name in ["emb", "ln_f", "w_out"] {
+            self.get(name)?;
+        }
+        for m in 0..n_layers {
+            self.block(m)?;
+        }
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|l| l.element_count()).sum()
+    }
+
+    /// Embedding row lookup on the host (tokenizer+embedding run locally at
+    /// each participant per the paper; a [V, d] table gather is not worth a
+    /// device round-trip).
+    pub fn embed_rows(&self, ids: &[i32], d_model: usize) -> Result<Vec<f32>> {
+        let emb = self.get("emb")?;
+        let table = emb.to_vec::<f32>()?;
+        let vocab = table.len() / d_model;
+        let mut out = vec![0f32; ids.len() * d_model];
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            anyhow::ensure!(id < vocab, "token id {id} out of vocab {vocab}");
+            out[i * d_model..(i + 1) * d_model]
+                .copy_from_slice(&table[id * d_model..(id + 1) * d_model]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_weights(n_layers: usize, d: usize) -> Weights {
+        let mut t = HashMap::new();
+        let mk = |n: usize| xla::Literal::vec1(&vec![0.5f32; n][..]);
+        t.insert("emb".into(), mk(4 * d));
+        t.insert("ln_f".into(), mk(d));
+        t.insert("w_out".into(), mk(d * 4));
+        for m in 0..n_layers {
+            for name in BLOCK_PARAM_NAMES {
+                t.insert(format!("blk{m}.{name}"), mk(d));
+            }
+        }
+        Weights::from_literals(t)
+    }
+
+    #[test]
+    fn validate_complete() {
+        let w = fake_weights(2, 8);
+        w.validate(2).unwrap();
+        assert!(w.validate(3).is_err());
+    }
+
+    #[test]
+    fn block_ordering() {
+        let w = fake_weights(1, 8);
+        let b = w.block(0).unwrap();
+        assert_eq!(b.len(), 12);
+        assert_eq!(w.block_proj(0).unwrap().len(), 7);
+        assert_eq!(w.block_attn(0).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn embed_rows_lookup() {
+        let mut t = HashMap::new();
+        // vocab 3, d 2: rows [0,1],[2,3],[4,5]
+        t.insert(
+            "emb".to_string(),
+            xla::Literal::vec1(&[0f32, 1., 2., 3., 4., 5.][..]),
+        );
+        let w = Weights::from_literals(t);
+        let rows = w.embed_rows(&[2, 0], 2).unwrap();
+        assert_eq!(rows, vec![4., 5., 0., 1.]);
+        assert!(w.embed_rows(&[3], 2).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Edge-network simulator.
+//!
+//! The paper measures communication cost as *bits transmitted per
+//! participant* and motivates FedAttn with bandwidth-constrained edge
+//! links.  This module provides byte-accurate accounting plus a simple
+//! timing model over a configurable topology:
+//!
+//! * **Star** — participants ↔ edge aggregator (the leader).  A KV
+//!   exchange is one uplink per transmitting participant followed by one
+//!   downlink per attending participant; parallel links, so round time is
+//!   `max(uplink) + max(downlink) + 2·latency`.
+//! * **Mesh** — direct participant↔participant links; each attendee pulls
+//!   from every transmitter in parallel.
+//!
+//! Links have bandwidth (Mbit/s), propagation latency (ms) and optional
+//! lognormal-ish jitter.  No packet-level simulation — transfer time =
+//! `bytes·8 / bw + latency (+ jitter)`, the granularity the paper reasons
+//! at.
+
+mod sim;
+
+pub use sim::{LinkSpec, NetReport, NetSim, Topology};

@@ -1,0 +1,212 @@
+//! Byte accounting + transfer-time model.
+
+use crate::util::prng::Xoshiro256ss;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Participants ↔ leader/edge-server.
+    Star,
+    /// Full mesh between participants.
+    Mesh,
+}
+
+/// Per-participant link characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+    /// Multiplicative jitter amplitude (0 = deterministic); each transfer
+    /// is scaled by `1 + U(-jitter, +jitter)`.
+    pub jitter: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        // A mid-band 5G / Wi-Fi edge link.
+        Self { bandwidth_mbps: 100.0, latency_ms: 5.0, jitter: 0.0 }
+    }
+}
+
+impl LinkSpec {
+    /// Transfer time for `bytes` over this link.
+    pub fn transfer_ms(&self, bytes: u64, rng: Option<&mut Xoshiro256ss>) -> f64 {
+        let base = bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6) * 1e3;
+        let jit = match (self.jitter, rng) {
+            (j, Some(r)) if j > 0.0 => 1.0 + (r.next_f64() * 2.0 - 1.0) * j,
+            _ => 1.0,
+        };
+        base * jit + self.latency_ms
+    }
+}
+
+/// Accumulated communication report.
+#[derive(Debug, Clone, Default)]
+pub struct NetReport {
+    /// Bytes sent by each participant (uplink).
+    pub tx_bytes: Vec<u64>,
+    /// Bytes received by each participant (downlink).
+    pub rx_bytes: Vec<u64>,
+    /// Total simulated communication time (ms) across rounds.
+    pub comm_time_ms: f64,
+    /// Number of exchange rounds executed.
+    pub rounds: usize,
+}
+
+impl NetReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.tx_bytes.iter().sum::<u64>() + self.rx_bytes.iter().sum::<u64>()
+    }
+
+    /// The paper's Fig. 5 metric: mean bytes *transmitted* per participant.
+    pub fn avg_tx_bytes_per_participant(&self) -> f64 {
+        if self.tx_bytes.is_empty() {
+            return 0.0;
+        }
+        self.tx_bytes.iter().sum::<u64>() as f64 / self.tx_bytes.len() as f64
+    }
+}
+
+/// Network simulator for one collaborative task.
+pub struct NetSim {
+    topology: Topology,
+    links: Vec<LinkSpec>,
+    rng: Xoshiro256ss,
+    report: NetReport,
+}
+
+impl NetSim {
+    pub fn new(topology: Topology, links: Vec<LinkSpec>, seed: u64) -> Self {
+        let n = links.len();
+        Self {
+            topology,
+            links,
+            rng: Xoshiro256ss::new(seed),
+            report: NetReport { tx_bytes: vec![0; n], rx_bytes: vec![0; n], ..Default::default() },
+        }
+    }
+
+    /// Homogeneous links.
+    pub fn uniform(topology: Topology, n: usize, link: LinkSpec, seed: u64) -> Self {
+        Self::new(topology, vec![link; n], seed)
+    }
+
+    pub fn n_participants(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Execute one KV-exchange round.
+    ///
+    /// * `tx_bytes[n]` — bytes participant `n` contributes this round (0 if
+    ///   it transmits nothing).
+    /// * `attending[n]` — whether participant `n` receives the aggregate.
+    ///
+    /// Each attendee receives the sum of the *other* participants' payloads
+    /// (it already holds its own rows).  Returns the simulated round time.
+    pub fn exchange_round(&mut self, tx_bytes: &[u64], attending: &[bool]) -> f64 {
+        assert_eq!(tx_bytes.len(), self.links.len());
+        assert_eq!(attending.len(), self.links.len());
+        let total: u64 = tx_bytes.iter().sum();
+        let mut up_max = 0.0f64;
+        let mut down_max = 0.0f64;
+        for (n, (&tb, link)) in tx_bytes.iter().zip(&self.links).enumerate() {
+            if tb > 0 {
+                self.report.tx_bytes[n] += tb;
+                let t = link.transfer_ms(tb, Some(&mut self.rng));
+                up_max = up_max.max(t);
+            }
+            if attending[n] {
+                let rx = total - tb;
+                self.report.rx_bytes[n] += rx;
+                let t = match self.topology {
+                    Topology::Star => link.transfer_ms(rx, Some(&mut self.rng)),
+                    Topology::Mesh => {
+                        // Parallel pulls from each peer; bottleneck is the
+                        // largest single peer payload on our own link.
+                        let max_peer =
+                            tx_bytes.iter().enumerate().filter(|&(m, _)| m != n).map(|(_, &b)| b).max().unwrap_or(0);
+                        link.transfer_ms(max_peer, Some(&mut self.rng))
+                    }
+                };
+                down_max = down_max.max(t);
+            }
+        }
+        let round = match self.topology {
+            Topology::Star => up_max + down_max,
+            Topology::Mesh => up_max.max(down_max),
+        };
+        self.report.comm_time_ms += round;
+        self.report.rounds += 1;
+        round
+    }
+
+    pub fn report(&self) -> &NetReport {
+        &self.report
+    }
+
+    pub fn into_report(self) -> NetReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(n: usize) -> NetSim {
+        NetSim::uniform(
+            Topology::Star,
+            n,
+            LinkSpec { bandwidth_mbps: 80.0, latency_ms: 2.0, jitter: 0.0 },
+            1,
+        )
+    }
+
+    #[test]
+    fn byte_conservation() {
+        let mut s = sim(3);
+        s.exchange_round(&[100, 200, 300], &[true, true, true]);
+        let r = s.report();
+        assert_eq!(r.tx_bytes, vec![100, 200, 300]);
+        // each attendee receives total - own
+        assert_eq!(r.rx_bytes, vec![500, 400, 300]);
+    }
+
+    #[test]
+    fn non_attendee_receives_nothing() {
+        let mut s = sim(3);
+        s.exchange_round(&[100, 100, 100], &[false, false, true]);
+        assert_eq!(s.report().rx_bytes, vec![0, 0, 200]);
+    }
+
+    #[test]
+    fn round_time_scales_with_bytes() {
+        let mut s = sim(2);
+        let t1 = s.exchange_round(&[1_000_000, 0], &[false, true]);
+        let mut s2 = sim(2);
+        let t2 = s2.exchange_round(&[2_000_000, 0], &[false, true]);
+        assert!(t2 > t1);
+        // 1 MB at 80 Mbps = 100 ms + latency on both legs.
+        assert!((t1 - (100.0 + 2.0 + 100.0 + 2.0)).abs() < 1.0, "t1 = {t1}");
+    }
+
+    #[test]
+    fn mesh_faster_than_star_for_broadcast() {
+        let link = LinkSpec { bandwidth_mbps: 10.0, latency_ms: 1.0, jitter: 0.0 };
+        let mut star = NetSim::uniform(Topology::Star, 4, link, 2);
+        let mut mesh = NetSim::uniform(Topology::Mesh, 4, link, 2);
+        let bytes = [50_000u64; 4];
+        let att = [true; 4];
+        let ts = star.exchange_round(&bytes, &att);
+        let tm = mesh.exchange_round(&bytes, &att);
+        assert!(tm < ts, "mesh {tm} vs star {ts}");
+    }
+
+    #[test]
+    fn jitter_varies_times() {
+        let link = LinkSpec { bandwidth_mbps: 10.0, latency_ms: 0.0, jitter: 0.5 };
+        let mut s = NetSim::uniform(Topology::Star, 2, link, 3);
+        let t1 = s.exchange_round(&[1_000_000, 0], &[false, true]);
+        let t2 = s.exchange_round(&[1_000_000, 0], &[false, true]);
+        assert!((t1 - t2).abs() > 1e-6);
+    }
+}

@@ -1,0 +1,321 @@
+//! The execution engine.
+//!
+//! * HLO **text** artifacts (not serialized protos — xla_extension 0.5.1
+//!   rejects jax≥0.5 64-bit instruction ids) are parsed with
+//!   `HloModuleProto::from_text_file` and compiled lazily per variant.
+//! * Weights are uploaded to the device **once** and every call passes
+//!   device buffers (`execute_b`), so the hot path only uploads activations.
+//! * Thread safety: the PJRT CPU client is thread-safe (XLA guarantees
+//!   thread-safe `Compile`/`Execute`); Rust-side maps are guarded by locks.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::model::{ArtifactKind, Manifest, Weights};
+use crate::tensor::HostTensor;
+
+/// Cumulative engine counters (perf accounting).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub compiles: AtomicU64,
+    pub bytes_uploaded: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, f64) {
+        (
+            self.executions.load(Ordering::Relaxed),
+            self.compiles.load(Ordering::Relaxed),
+            self.bytes_uploaded.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    wbufs: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
+}
+
+// SAFETY: PJRT's C API guarantees thread-safe client/executable/buffer use
+// (XLA PjRtClient is documented thread-safe); the raw pointers inside the
+// xla crate wrappers are only non-Send because the crate does not assert
+// this.  All Rust-side shared state is behind Mutexes.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// Compiled-model execution engine (cheaply cloneable via `Arc`).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<Inner>,
+    pub manifest: Arc<Manifest>,
+    weights: Arc<Weights>,
+    pub stats: Arc<EngineStats>,
+}
+
+impl Engine {
+    /// Build an engine from an artifacts directory (manifest + weights).
+    pub fn load(artifacts_dir: &Path, weights_file: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = Weights::load(&artifacts_dir.join(weights_file))?;
+        weights.validate(manifest.model.n_layers)?;
+        Self::new(manifest, weights)
+    }
+
+    pub fn new(manifest: Manifest, weights: Weights) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            inner: Arc::new(Inner {
+                client,
+                exes: Mutex::new(HashMap::new()),
+                wbufs: Mutex::new(HashMap::new()),
+            }),
+            manifest: Arc::new(manifest),
+            weights: Arc::new(weights),
+            stats: Arc::new(EngineStats::default()),
+        })
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.exes.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parsing HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        let exe = Arc::new(exe);
+        self.inner
+            .exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact needed for a session with the given
+    /// L/G variants (avoids first-request latency spikes).
+    pub fn warmup(&self, ls: &[usize], gs: &[usize]) -> Result<()> {
+        for e in &self.manifest.entries {
+            let want = match e.kind {
+                ArtifactKind::BlockFused | ArtifactKind::QkvProject | ArtifactKind::Embed => {
+                    e.l.map(|l| ls.contains(&l)).unwrap_or(false)
+                }
+                ArtifactKind::AttnFfn => {
+                    e.l.map(|l| ls.contains(&l)).unwrap_or(false)
+                        && e.g.map(|g| gs.contains(&g)).unwrap_or(false)
+                }
+                ArtifactKind::DecodeBlock | ArtifactKind::Logits => true,
+            };
+            if want {
+                self.executable(&e.name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Device buffer for a named weight (uploaded once, then cached).
+    fn weight_buf(&self, name: &str) -> Result<Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.inner.wbufs.lock().unwrap().get(name) {
+            return Ok(Arc::clone(b));
+        }
+        let lit = self.weights.get(name)?;
+        let buf = self
+            .inner
+            .client
+            .buffer_from_host_literal(None, lit)
+            .with_context(|| format!("uploading weight {name}"))?;
+        let buf = Arc::new(buf);
+        self.inner
+            .wbufs
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&buf));
+        Ok(buf)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats
+            .bytes_uploaded
+            .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        Ok(self.inner.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats
+            .bytes_uploaded
+            .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        Ok(self.inner.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Run `name` with activation buffers + per-layer weight buffers; the
+    /// lowered entry returns a tuple, decomposed into `HostTensor`s.
+    fn run(
+        &self,
+        name: &str,
+        activations: Vec<xla::PjRtBuffer>,
+        weight_names: &[String],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(name)?;
+        let mut args: Vec<Arc<xla::PjRtBuffer>> =
+            activations.into_iter().map(Arc::new).collect();
+        for w in weight_names {
+            args.push(self.weight_buf(w)?);
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+        let t0 = std::time::Instant::now();
+        let out = exe.execute_b(&arg_refs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let parts = lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn block_weight_names(&self, m: usize) -> Vec<String> {
+        crate::model::weights_block_names(m)
+    }
+
+    // ------------------------------------------------------------------
+    // Typed entry points
+    // ------------------------------------------------------------------
+
+    /// Host-side embedding lookup (tokenizer + embedding run locally).
+    pub fn embed(&self, ids: &[i32]) -> Result<HostTensor> {
+        let d = self.manifest.model.d_model;
+        let data = self.weights.embed_rows(ids, d)?;
+        Ok(HostTensor::new(&[ids.len(), d], data)?)
+    }
+
+    /// One local-attention Transformer block.  Shapes: x [L,d], pos [L],
+    /// mask [L,L].  Returns (x_out [L,d], k [L,Hkv,hd], v [L,Hkv,hd]).
+    pub fn block_fused(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+        mask: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let l = x.shape()[0];
+        let name = format!("block_fused_L{l}");
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_i32(pos, &[l])?,
+            self.upload_f32(mask.data(), mask.shape())?,
+        ];
+        let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        anyhow::ensure!(out.len() == 3, "block_fused returns 3 tensors");
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let xo = out.pop().unwrap();
+        Ok((xo, k, v))
+    }
+
+    /// QKV projection + RoPE (sync-block phase 1, Eq. 17).
+    pub fn qkv_project(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let l = x.shape()[0];
+        let name = format!("qkv_project_L{l}");
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_i32(pos, &[l])?,
+        ];
+        let wnames: Vec<String> = crate::model::weights_proj_names(layer);
+        let mut out = self.run(&name, acts, &wnames)?;
+        anyhow::ensure!(out.len() == 3, "qkv_project returns 3 tensors");
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let q = out.pop().unwrap();
+        Ok((q, k, v))
+    }
+
+    /// Local Q over (global) KV + FFN (sync-block phase 2, Eq. 20–21).
+    pub fn attn_ffn(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        mask: &HostTensor,
+    ) -> Result<HostTensor> {
+        let l = x.shape()[0];
+        let g = k.shape()[0];
+        let name = format!("attn_ffn_L{l}_G{g}");
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_f32(q.data(), q.shape())?,
+            self.upload_f32(k.data(), k.shape())?,
+            self.upload_f32(v.data(), v.shape())?,
+            self.upload_f32(mask.data(), mask.shape())?,
+        ];
+        let wnames: Vec<String> = crate::model::weights_attn_names(layer);
+        let mut out = self.run(&name, acts, &wnames)?;
+        anyhow::ensure!(out.len() == 1, "attn_ffn returns 1 tensor");
+        Ok(out.pop().unwrap())
+    }
+
+    /// One decode block over a padded KV cache (paper §IV-C).
+    pub fn decode_block(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        pos: i32,
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+        mask: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = self.manifest.decode_cache;
+        let name = format!("decode_block_C{c}");
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_i32(&[pos], &[1])?,
+            self.upload_f32(k_cache.data(), k_cache.shape())?,
+            self.upload_f32(v_cache.data(), v_cache.shape())?,
+            self.upload_f32(mask.data(), mask.shape())?,
+        ];
+        let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        anyhow::ensure!(out.len() == 3, "decode_block returns 3 tensors");
+        let vn = out.pop().unwrap();
+        let kn = out.pop().unwrap();
+        let xo = out.pop().unwrap();
+        Ok((xo, kn, vn))
+    }
+
+    /// Final norm + LM head for a [1, d] hidden state.
+    pub fn logits(&self, x: &HostTensor) -> Result<Vec<f32>> {
+        let acts = vec![self.upload_f32(x.data(), x.shape())?];
+        let wnames = vec!["ln_f".to_string(), "w_out".to_string()];
+        let out = self.run("logits", acts, &wnames)?;
+        Ok(out[0].data().to_vec())
+    }
+}

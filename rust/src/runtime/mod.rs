@@ -1,0 +1,9 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, uploads weights once as device buffers, and exposes
+//! typed execute wrappers for every entry point.
+//!
+//! Python never appears here — this is the request path.
+
+mod engine;
+
+pub use engine::{Engine, EngineStats};

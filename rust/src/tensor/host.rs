@@ -1,0 +1,180 @@
+//! Dense row-major f32 host tensor with Literal conversion.
+
+use anyhow::Result;
+
+/// Additive-mask value for invisible positions.  Must match
+/// `python/compile/kernels/ref.py::NEG`.
+pub const NEG_MASK: f32 = -1e30;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TensorError {
+    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
+    Shape { expected: Vec<usize>, got: Vec<usize> },
+    #[error("length {len} does not match shape {shape:?}")]
+    Length { len: usize, shape: Vec<usize> },
+}
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self, TensorError> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(TensorError::Length { len: data.len(), shape: shape.to_vec() });
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let numel: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; numel] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row stride for a 2-D-style view: elements per leading-index slice.
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Borrow row `i` (leading dimension index).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let rl = self.row_len();
+        &self.data[i * rl..(i + 1) * rl]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let rl = self.row_len();
+        &mut self.data[i * rl..(i + 1) * rl]
+    }
+
+    /// Copy `src`'s rows `[0, n)` into our rows starting at `dst_row`.
+    pub fn copy_rows_from(&mut self, src: &HostTensor, src_rows: std::ops::Range<usize>, dst_row: usize) {
+        let rl = self.row_len();
+        assert_eq!(rl, src.row_len(), "row length mismatch");
+        let n = src_rows.end - src_rows.start;
+        let dst = &mut self.data[dst_row * rl..(dst_row + n) * rl];
+        dst.copy_from_slice(&src.data[src_rows.start * rl..src_rows.end * rl]);
+    }
+
+    /// Frobenius norm of (self - other) over the first `rows` rows.
+    pub fn frob_dist_rows(&self, other: &HostTensor, rows: usize) -> f64 {
+        let rl = self.row_len();
+        assert_eq!(rl, other.row_len());
+        let n = rows * rl;
+        self.data[..n]
+            .iter()
+            .zip(&other.data[..n])
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max absolute difference over all elements.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    // ---- Literal interop -------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(self.data.as_slice());
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self::new(&dims, data).map_err(anyhow::Error::from)?)
+    }
+}
+
+/// i32 companion used for token ids / positions.
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "i32 literal shape mismatch");
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_length() {
+        assert!(HostTensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_copy() {
+        let mut a = HostTensor::zeros(&[4, 3]);
+        let b = HostTensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        a.copy_rows_from(&b, 0..2, 1);
+        assert_eq!(a.row(0), &[0., 0., 0.]);
+        assert_eq!(a.row(1), &[1., 2., 3.]);
+        assert_eq!(a.row(2), &[4., 5., 6.]);
+        assert_eq!(a.row(3), &[0., 0., 0.]);
+    }
+
+    #[test]
+    fn frobenius_distance() {
+        let a = HostTensor::new(&[2, 2], vec![1., 0., 0., 0.]).unwrap();
+        let b = HostTensor::zeros(&[2, 2]);
+        assert!((a.frob_dist_rows(&b, 2) - 1.0).abs() < 1e-12);
+        assert!((a.frob_dist_rows(&b, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let lit = i32_literal(&[4], &[1, 2, 3, 4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Minimal host-side tensor type + `xla::Literal` interop.
+//!
+//! The coordinator only needs dense f32/i32 arrays with shape bookkeeping:
+//! hidden states, K/V buffers and additive masks that it scatters/gathers
+//! between participants.  All heavy math lives in the AOT HLO artifacts.
+
+mod host;
+pub use host::{i32_literal, HostTensor, TensorError, NEG_MASK};

@@ -1,0 +1,167 @@
+//! Closed-form evaluation of the paper's error bounds.
+
+/// Per-block constants: FFN Lipschitz θ_m, attention Lipschitz ϱ_m, and the
+/// summed local-attention deviation Σ_n σ_n^m (Assumptions 1–2).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockConstants {
+    pub theta: f64,
+    pub rho: f64,
+    /// Σ_{n=1}^N σ_n^m — total local-vs-global attention deviation.
+    pub sigma_sum: f64,
+}
+
+/// Lipschitz gain γ_m = (1 + θ_m)(1 + ϱ_m) (Remark 1).
+pub fn gamma(c: &BlockConstants) -> f64 {
+    (1.0 + c.theta) * (1.0 + c.rho)
+}
+
+/// **Theorem 1** (Eq. 42): error bound for a uniform schedule with local
+/// forwards `h` over `m = h·t_rounds` blocks.
+///
+/// `consts[m]` are per-block constants (len = total blocks).  Blocks at
+/// indices `h-1, 2h-1, ...` are the sync blocks (no error injection).
+pub fn theorem1_bound(consts: &[BlockConstants], h: usize) -> f64 {
+    let m_total = consts.len();
+    if h == 0 || m_total == 0 {
+        return 0.0;
+    }
+    let is_sync = |m: usize| (m + 1) % h == 0;
+    let mut bound = 0.0;
+    for m in 0..m_total {
+        if is_sync(m) {
+            continue; // the h-th local forward injects no deviation
+        }
+        // (a): injection at block m.
+        let inj = (1.0 + consts[m].theta) * consts[m].sigma_sum;
+        // (b)+(c): amplification through all subsequent blocks.
+        let amp: f64 = (m + 1..m_total).map(|i| gamma(&consts[i])).product();
+        bound += inj * amp;
+    }
+    bound
+}
+
+/// **Corollary 1** (Eq. 44): uniform-constant closed form.
+///
+/// `sigma_sum` = Σ_n σ_n, `m_total` = H·T blocks.
+pub fn corollary1_bound(theta: f64, rho: f64, sigma_sum: f64, m_total: usize, h: usize) -> f64 {
+    let g = (1.0 + theta) * (1.0 + rho);
+    if m_total == 0 || h == 0 {
+        return 0.0;
+    }
+    let term_d = (g.powi(m_total as i32) - 1.0) / (g - 1.0);
+    let term_e = 1.0 - (g - 1.0) / (g.powi(h as i32) - 1.0);
+    (1.0 + theta) * sigma_sum * term_d * term_e
+}
+
+/// **Theorem 2** (Eq. 47): bound for an arbitrary set of sync blocks.
+/// `sync[m] = true` marks blocks performing global attention.
+pub fn theorem2_bound(consts: &[BlockConstants], sync: &[bool]) -> f64 {
+    assert_eq!(consts.len(), sync.len());
+    let m_total = consts.len();
+    let mut bound = 0.0;
+    for m in 0..m_total {
+        if sync[m] {
+            continue;
+        }
+        let inj = (1.0 + consts[m].theta) * consts[m].sigma_sum;
+        let amp: f64 = (m + 1..m_total).map(|i| gamma(&consts[i])).product();
+        bound += inj * amp;
+    }
+    bound
+}
+
+/// Γ_m (Eq. 48): error reduction achieved by performing global attention at
+/// block `m` — the paper's "where to sync" score (Remark 6).
+pub fn gamma_reduction(consts: &[BlockConstants], m: usize) -> f64 {
+    let inj = (1.0 + consts[m].theta) * consts[m].sigma_sum;
+    let amp: f64 = (m + 1..consts.len()).map(|i| gamma(&consts[i])).product();
+    inj * amp
+}
+
+/// Remark 5: marginal communication saving from H → H+1 is 1/(H(H+1)).
+pub fn marginal_comm_gain(h: usize) -> f64 {
+    1.0 / (h as f64 * (h + 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_consts(m: usize, theta: f64, rho: f64, sigma: f64) -> Vec<BlockConstants> {
+        vec![BlockConstants { theta, rho, sigma_sum: sigma }; m]
+    }
+
+    #[test]
+    fn h1_bound_is_zero() {
+        let c = uniform_consts(8, 0.1, 0.2, 0.5);
+        assert_eq!(theorem1_bound(&c, 1), 0.0);
+        assert!(corollary1_bound(0.1, 0.2, 0.5, 8, 1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_monotone_in_h() {
+        let c = uniform_consts(8, 0.05, 0.05, 1.0);
+        let bounds: Vec<f64> = [1, 2, 4, 8].iter().map(|&h| theorem1_bound(&c, h)).collect();
+        for w in bounds.windows(2) {
+            assert!(w[1] > w[0], "bound should grow with H: {bounds:?}");
+        }
+    }
+
+    #[test]
+    fn theorem1_matches_corollary1_at_uniform_constants() {
+        // Corollary 1 is derived from Theorem 1 by bounding per-block
+        // constants; at exactly uniform constants the two coincide.
+        let (theta, rho, sigma, m) = (0.07, 0.11, 0.9, 12usize);
+        let c = uniform_consts(m, theta, rho, sigma);
+        for h in [2usize, 3, 4, 6] {
+            if m % h != 0 {
+                continue;
+            }
+            let t1 = theorem1_bound(&c, h);
+            let c1 = corollary1_bound(theta, rho, sigma, m, h);
+            assert!(
+                (t1 - c1).abs() / c1 < 1e-9,
+                "h={h}: theorem1 {t1} vs corollary1 {c1}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem2_generalizes_theorem1() {
+        let c = uniform_consts(8, 0.1, 0.1, 0.3);
+        let sync: Vec<bool> = (0..8).map(|m| (m + 1) % 2 == 0).collect();
+        assert!((theorem2_bound(&c, &sync) - theorem1_bound(&c, 2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shallow_sync_reduces_bound_more() {
+        // Under the theory (uniform constants), syncing a shallow block
+        // removes a more-amplified term than a deep block (Remark 6) —
+        // the prediction the paper's Fig. 7 experimentally contradicts.
+        let c = uniform_consts(8, 0.1, 0.1, 0.5);
+        let g0 = gamma_reduction(&c, 0);
+        let g7 = gamma_reduction(&c, 7);
+        assert!(g0 > g7);
+        let mut shallow = vec![false; 8];
+        shallow[0] = true;
+        let mut deep = vec![false; 8];
+        deep[7] = true;
+        assert!(theorem2_bound(&c, &shallow) < theorem2_bound(&c, &deep));
+    }
+
+    #[test]
+    fn marginal_gain_quadratic_decay() {
+        assert!((marginal_comm_gain(1) - 0.5).abs() < 1e-12);
+        assert!((marginal_comm_gain(2) - 1.0 / 6.0).abs() < 1e-12);
+        assert!((marginal_comm_gain(3) - 1.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_sigma_blocks_prioritized() {
+        // Deeper blocks with larger σ can out-score shallow ones — the
+        // mechanism the paper invokes to explain Fig. 7.
+        let mut c = uniform_consts(8, 0.02, 0.02, 0.1);
+        c[6].sigma_sum = 5.0;
+        assert!(gamma_reduction(&c, 6) > gamma_reduction(&c, 0));
+    }
+}

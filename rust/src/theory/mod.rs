@@ -1,0 +1,11 @@
+//! The paper's error theory (§VI): Theorem 1, Corollary 1 and Theorem 2
+//! bound evaluation, plus empirical estimation of the constants
+//! (Lipschitz gains ϱ_m, θ_m and attention deviations σ_n^m) from measured
+//! activations so bounds and measurements live in the same units.
+
+mod bounds;
+
+pub use bounds::{
+    corollary1_bound, gamma_reduction, marginal_comm_gain, theorem1_bound,
+    theorem2_bound, BlockConstants,
+};

@@ -1,0 +1,85 @@
+//! Byte-level ASCII tokenizer — mirrors `python/compile/data.py`.
+//!
+//! Printable ASCII chars (32..=126) map to their own codes; `PAD=0`,
+//! `BOS=1`, `EOS=2`.  Vocab size 128 matches the model's embedding table.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const VOCAB_SIZE: usize = 128;
+
+/// Encode text; non-ASCII and control characters are dropped (same as the
+/// Python side's `errors="ignore"` + printable filter).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes()
+        .filter(|&b| (32..127).contains(&b))
+        .map(|b| b as i32)
+        .collect()
+}
+
+/// Encode with a leading BOS.
+pub fn encode_with_bos(text: &str) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(text.len() + 1);
+    ids.push(BOS);
+    ids.extend(encode(text));
+    ids
+}
+
+/// Decode ids back to text, skipping specials / padding.
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter()
+        .filter(|&&i| (32..127).contains(&i))
+        .map(|&i| i as u8 as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn roundtrip_printable() {
+        let s = "Lia has 7 plums. Q: who? A: Lia";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn drops_non_ascii_and_controls() {
+        assert_eq!(decode(&encode("a\nb\tc\u{e9}d")), "abcd");
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let ids = encode_with_bos("hi");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(&ids[1..], &encode("hi")[..]);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        assert_eq!(decode(&[BOS, 72, 105, EOS, PAD]), "Hi");
+    }
+
+    #[test]
+    fn encode_ids_in_vocab_property() {
+        propcheck(100, |rng| {
+            let len = rng.below(64) as usize;
+            let s: String = (0..len)
+                .map(|_| char::from_u32(rng.below(0x250) as u32).unwrap_or('x'))
+                .collect();
+            let ids = encode(&s);
+            for &i in &ids {
+                if !(0..VOCAB_SIZE as i32).contains(&i) {
+                    return Err(format!("id {i} out of vocab"));
+                }
+            }
+            // Round-trip through decode must be a fixed point.
+            let d = decode(&ids);
+            if encode(&d) != ids {
+                return Err("decode/encode not a fixed point".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! Tiny leveled logger to stderr (the `log` crate facade is wired to this).
+//!
+//! Controlled by `FEDATTN_LOG` = `error|warn|info|debug|trace` (default
+//! `info`).  The serving hot path logs nothing below `debug`.
+
+use std::sync::OnceLock;
+
+struct StderrLogger {
+    max: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, md: &log::Metadata) -> bool {
+        md.level() <= self.max
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:5}] {}: {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger once; later calls are no-ops.
+pub fn init() {
+    let level = std::env::var("FEDATTN_LOG").unwrap_or_default();
+    let max = match level.as_str() {
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        "off" => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { max });
+    let _ = log::set_logger(logger);
+    log::set_max_level(max);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared utilities: PRNGs, JSON, statistics, property testing, logging.
+
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

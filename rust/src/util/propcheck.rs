@@ -1,0 +1,87 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline).  Runs a property against many PRNG-generated cases and, on
+//! failure, reports the seed so the case can be replayed deterministically.
+//!
+//! ```ignore
+//! propcheck(100, |rng| {
+//!     let n = 1 + rng.below(50) as usize;
+//!     let v = gen_partition(rng, n);
+//!     check_partition_invariants(&v)   // -> Result<(), String>
+//! });
+//! ```
+
+use super::prng::Xoshiro256ss;
+
+/// Run `cases` random cases of `prop`.  Panics with the failing seed and
+/// message on the first violation.
+pub fn propcheck<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256ss) -> Result<(), String>,
+{
+    propcheck_seeded(0xFEDA_77_u64, cases, &mut prop);
+}
+
+/// Like [`propcheck`] with an explicit base seed (replay a failure by
+/// passing the seed printed in the panic message).
+pub fn propcheck_seeded<F>(base_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut Xoshiro256ss) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256ss::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        propcheck(50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        propcheck(50, |rng| {
+            let a = rng.below(100);
+            if a < 90 {
+                Ok(())
+            } else {
+                Err(format!("a = {a}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        propcheck(10, |rng| {
+            let x = rng.next_f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+}

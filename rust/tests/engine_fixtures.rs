@@ -1,0 +1,152 @@
+//! Cross-language numerics: the Rust runtime executing the AOT artifacts
+//! must reproduce the JAX reference outputs dumped by
+//! `python -m compile.aot --fixtures` (random fixture weights, so these
+//! tests are independent of training).
+//!
+//! Skipped (with a notice) when artifacts are absent — run `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use fedattn::model::{Manifest, Weights};
+use fedattn::runtime::Engine;
+use fedattn::tensor::HostTensor;
+use xla::FromRawBytes;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = fedattn::default_artifacts_dir();
+    if dir.join("manifest.json").exists() && dir.join("fixtures.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/fixtures not found (run `make artifacts`)");
+        None
+    }
+}
+
+struct Fx {
+    map: HashMap<String, xla::Literal>,
+}
+
+impl Fx {
+    fn load(dir: &std::path::Path) -> Self {
+        let pairs = xla::Literal::read_npz(dir.join("fixtures.npz"), &()).unwrap();
+        Self { map: pairs.into_iter().collect() }
+    }
+
+    fn tensor(&self, name: &str) -> HostTensor {
+        HostTensor::from_literal(self.map.get(name).unwrap_or_else(|| panic!("fixture {name}")))
+            .unwrap()
+    }
+
+    fn i32s(&self, name: &str) -> Vec<i32> {
+        self.map.get(name).unwrap().to_vec::<i32>().unwrap()
+    }
+}
+
+fn fixture_engine(dir: &std::path::Path) -> Engine {
+    let manifest = Manifest::load(dir).unwrap();
+    let weights = Weights::load(&dir.join("fixture_weights.npz")).unwrap();
+    Engine::new(manifest, weights).unwrap()
+}
+
+fn assert_close(got: &HostTensor, want: &HostTensor, tol: f32, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    let d = got.max_abs_diff(want);
+    assert!(d < tol, "{what}: max abs diff {d} >= {tol}");
+}
+
+#[test]
+fn block_fused_matches_jax() {
+    let Some(dir) = artifacts() else { return };
+    let fx = Fx::load(&dir);
+    let engine = fixture_engine(&dir);
+    let x = fx.tensor("bf.x");
+    let pos = fx.i32s("bf.pos");
+    let mask = fx.tensor("bf.mask");
+    let (xo, k, v) = engine.block_fused(0, &x, &pos, &mask).unwrap();
+    assert_close(&xo, &fx.tensor("bf.x_out"), 1e-4, "block_fused x_out");
+    assert_close(&k, &fx.tensor("bf.k"), 1e-4, "block_fused k");
+    assert_close(&v, &fx.tensor("bf.v"), 1e-4, "block_fused v");
+}
+
+#[test]
+fn qkv_and_attn_ffn_match_jax() {
+    let Some(dir) = artifacts() else { return };
+    let fx = Fx::load(&dir);
+    let engine = fixture_engine(&dir);
+    let x = fx.tensor("bf.x");
+    let pos = fx.i32s("bf.pos");
+    let (q, k, v) = engine.qkv_project(0, &x, &pos).unwrap();
+    assert_close(&q, &fx.tensor("af.q"), 1e-4, "qkv q");
+    assert_close(&k, &fx.tensor("qkv.k"), 1e-4, "qkv k");
+    assert_close(&v, &fx.tensor("qkv.v"), 1e-4, "qkv v");
+
+    let xo = engine
+        .attn_ffn(0, &x, &q, &fx.tensor("af.kg"), &fx.tensor("af.vg"), &fx.tensor("af.mask"))
+        .unwrap();
+    assert_close(&xo, &fx.tensor("af.x_out"), 1e-4, "attn_ffn x_out");
+}
+
+#[test]
+fn decode_block_matches_jax() {
+    let Some(dir) = artifacts() else { return };
+    let fx = Fx::load(&dir);
+    let engine = fixture_engine(&dir);
+    let x = fx.tensor("dec.x");
+    let pos = fx.i32s("dec.pos")[0];
+    let (xo, kn, vn) = engine
+        .decode_block(0, &x, pos, &fx.tensor("dec.kc"), &fx.tensor("dec.vc"), &fx.tensor("dec.mask"))
+        .unwrap();
+    assert_close(&xo, &fx.tensor("dec.x_out"), 1e-4, "decode x_out");
+    assert_close(&kn, &fx.tensor("dec.k_new"), 1e-4, "decode k_new");
+    assert_close(&vn, &fx.tensor("dec.v_new"), 1e-4, "decode v_new");
+}
+
+#[test]
+fn full_fedattn_prefill_matches_python_reference() {
+    // The big one: the Rust coordinator (schedules, masks, packing,
+    // positions) must reproduce the pure-JAX FedAttn simulator on the same
+    // weights — uniform H=2, 3 participants, matching fixture `fed.*`.
+    use fedattn::data::Partition;
+    use fedattn::fedattn::{FedSession, SessionConfig, SyncSchedule};
+    use fedattn::net::{LinkSpec, NetSim, Topology};
+
+    let Some(dir) = artifacts() else { return };
+    let fx = Fx::load(&dir);
+    let engine = fixture_engine(&dir);
+    let md = engine.manifest.model.clone();
+
+    let ids = fx.i32s("fed.ids");
+    let owners = fx.i32s("fed.owners");
+    let n = (*owners.iter().max().unwrap() + 1) as usize;
+    // owners are contiguous spans by construction.
+    let mut spans = Vec::new();
+    let mut start = 0usize;
+    for p in 0..n as i32 {
+        let end = owners.iter().rposition(|&o| o == p).unwrap() + 1;
+        spans.push((start, end));
+        start = end;
+    }
+    let part = Partition { ids, spans };
+
+    let h = fx.i32s("fed.h")[0] as usize;
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, h));
+    cfg.record_hidden = true;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 3);
+    let out = FedSession::new(&engine, &part, cfg, net)
+        .unwrap()
+        .run_prefill_only()
+        .unwrap();
+
+    let want = fx.tensor("fed.x_final");
+    let mut max_diff = 0f32;
+    for (p, h_opt) in out.hidden.iter().enumerate() {
+        let h = h_opt.as_ref().unwrap();
+        for (i, &gpos) in out.positions[p].iter().enumerate() {
+            for (a, b) in h.row(i).iter().zip(want.row(gpos as usize)) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+        }
+    }
+    assert!(max_diff < 2e-4, "fedattn vs python reference: max diff {max_diff}");
+}

@@ -1,0 +1,217 @@
+//! End-to-end algorithmic invariants on live artifacts (trained weights).
+//! Skipped with a notice when artifacts are absent.
+
+use std::path::PathBuf;
+
+use fedattn::data::{gen_episode, partition, Segmentation};
+use fedattn::fedattn::{
+    FedSession, KvExchangePolicy, SessionConfig, SyncSchedule,
+};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::runtime::Engine;
+use fedattn::util::prng::SplitMix64;
+
+fn engine() -> Option<Engine> {
+    let dir: PathBuf = fedattn::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("weights.npz").exists() {
+        eprintln!("SKIP: artifacts not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir, "weights.npz").unwrap())
+}
+
+fn net(n: usize) -> NetSim {
+    NetSim::uniform(Topology::Star, n, LinkSpec::default(), 9)
+}
+
+/// H=1 FedAttn must equal CenAttn on every token's final hidden state —
+/// the keystone correctness invariant (exercises positions, masks, packing
+/// and artifact plumbing at once).
+#[test]
+fn h1_equals_cenattn() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(21);
+    for seg in [Segmentation::TokQAg, Segmentation::SemQEx] {
+        let ep = gen_episode(&mut rng, 4);
+        let part = partition(&ep, 3, seg);
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 3, 1));
+        cfg.record_hidden = true;
+        let fed = FedSession::new(&engine, &part, cfg, net(3))
+            .unwrap()
+            .run_prefill_only()
+            .unwrap();
+
+        let cen_part = partition(&ep, 1, Segmentation::TokQAg);
+        let mut ccfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 1, 1));
+        ccfg.record_hidden = true;
+        let cen = FedSession::new(&engine, &cen_part, ccfg, net(1))
+            .unwrap()
+            .run_prefill_only()
+            .unwrap();
+        let cen_h = cen.hidden[0].as_ref().unwrap();
+
+        let mut max_diff = 0f32;
+        for (p, h) in fed.hidden.iter().enumerate() {
+            let h = h.as_ref().unwrap();
+            for (i, &gpos) in fed.positions[p].iter().enumerate() {
+                for (a, b) in h.row(i).iter().zip(cen_h.row(gpos as usize)) {
+                    max_diff = max_diff.max((a - b).abs());
+                }
+            }
+        }
+        assert!(max_diff < 2e-4, "{seg:?}: H=1 vs CenAttn diff {max_diff}");
+    }
+}
+
+/// Deviation from CenAttn grows with H (Remark 4's monotonicity, measured).
+#[test]
+fn deviation_monotone_in_h() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(22);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, 3, Segmentation::SemQEx);
+
+    let cen_part = partition(&ep, 1, Segmentation::TokQAg);
+    let mut ccfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 1, 1));
+    ccfg.record_hidden = true;
+    let cen = FedSession::new(&engine, &cen_part, ccfg, net(1))
+        .unwrap()
+        .run_prefill_only()
+        .unwrap();
+    let cen_h = cen.hidden[0].as_ref().unwrap();
+
+    let mut devs = Vec::new();
+    for h in [1usize, 2, 4, 8] {
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 3, h));
+        cfg.record_hidden = true;
+        let fed = FedSession::new(&engine, &part, cfg, net(3))
+            .unwrap()
+            .run_prefill_only()
+            .unwrap();
+        let mut sq = 0f64;
+        for (p, hh) in fed.hidden.iter().enumerate() {
+            let hh = hh.as_ref().unwrap();
+            for (i, &gpos) in fed.positions[p].iter().enumerate() {
+                for (a, b) in hh.row(i).iter().zip(cen_h.row(gpos as usize)) {
+                    let d = (*a - *b) as f64;
+                    sq += d * d;
+                }
+            }
+        }
+        devs.push(sq.sqrt());
+    }
+    assert!(devs[0] < 1e-2, "H=1 deviation should be ~0: {devs:?}");
+    for w in devs.windows(2) {
+        assert!(w[1] >= w[0] * 0.5, "deviation trend violated: {devs:?}");
+    }
+    assert!(
+        devs.last().unwrap() > &(devs[0] + 1e-3),
+        "H=M must deviate more than H=1: {devs:?}"
+    );
+}
+
+/// Sparse KV exchange with ratio 1.0 must be identical to Full.
+#[test]
+fn kv_ratio_one_equals_full() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(23);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, 3, Segmentation::SemQEx);
+
+    let run = |policy: KvExchangePolicy| {
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 3, 2));
+        cfg.kv_policy = policy;
+        cfg.record_hidden = true;
+        cfg.seed = 5;
+        FedSession::new(&engine, &part, cfg, net(3))
+            .unwrap()
+            .run_prefill_only()
+            .unwrap()
+    };
+    let a = run(KvExchangePolicy::Full);
+    let b = run(KvExchangePolicy::Random { ratio: 1.0 });
+    for (x, y) in a.hidden.iter().zip(&b.hidden) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert!(x.max_abs_diff(y) == 0.0, "ratio-1.0 sparse must be bit-identical");
+    }
+}
+
+/// Communication accounting matches the closed-form payload size.
+#[test]
+fn comm_bytes_match_formula() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(24);
+    let ep = gen_episode(&mut rng, 4);
+    let n = 3;
+    let part = partition(&ep, n, Segmentation::TokQAg);
+    let h = 2usize;
+    let cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, h));
+    let out = FedSession::new(&engine, &part, cfg, net(n))
+        .unwrap()
+        .run_prefill_only()
+        .unwrap();
+
+    let rounds = md.n_layers / h;
+    let row_bytes = md.kv_row_bytes() as u64;
+    let total_rows: u64 = part.ids.len() as u64;
+    // Uplink: every participant sends all its rows each round.
+    let expect_tx: u64 = rounds as u64 * total_rows * row_bytes;
+    let got_tx: u64 = out.net.tx_bytes.iter().sum();
+    assert_eq!(got_tx, expect_tx);
+    // Downlink per attendee: total minus its own rows.
+    for p in 0..n {
+        let own = part.span_len(p) as u64;
+        let expect_rx = rounds as u64 * (total_rows - own) * row_bytes;
+        assert_eq!(out.net.rx_bytes[p], expect_rx, "participant {p}");
+    }
+    assert_eq!(out.net.rounds, rounds);
+}
+
+/// decode_all produces an answer for every participant; the publisher's
+/// equals the canonical `answer`.
+#[test]
+fn decode_all_answers() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(25);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, 3, Segmentation::SemQEx);
+    let publisher = part.publisher();
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 3, 2));
+    cfg.decode_all = true;
+    let rep = FedSession::new(&engine, &part, cfg, net(3)).unwrap().run().unwrap();
+    assert!(rep.answers.iter().all(Option::is_some));
+    assert_eq!(rep.answers[publisher].as_deref(), Some(rep.answer.as_str()));
+}
+
+/// Local sparsity at ratio 1.0 must not change anything; lower ratios must
+/// reduce the tokens entering the session (observable through comm bytes).
+#[test]
+fn local_sparsity_reduces_comm() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let mut rng = SplitMix64::new(26);
+    let ep = gen_episode(&mut rng, 5);
+    let part = partition(&ep, 3, Segmentation::TokQAg);
+    let run = |ratio: f64| {
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, 3, 2));
+        cfg.local_sparsity = fedattn::fedattn::LocalSparsity { ratio };
+        cfg.seed = 7;
+        FedSession::new(&engine, &part, cfg, net(3))
+            .unwrap()
+            .run_prefill_only()
+            .unwrap()
+    };
+    let full = run(1.0);
+    let sparse = run(0.5);
+    let full_tx: u64 = full.net.tx_bytes.iter().sum();
+    let sparse_tx: u64 = sparse.net.tx_bytes.iter().sum();
+    assert!(
+        sparse_tx < full_tx,
+        "dropping half the tokens must shrink KV payloads ({sparse_tx} vs {full_tx})"
+    );
+}
