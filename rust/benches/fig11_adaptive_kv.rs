@@ -1,0 +1,125 @@
+//! Fig. 11 (extension) — adaptive KV aggregation at matched byte budgets.
+//!
+//! The paper's §V Obs. 4 names adaptive aggregation as the headline
+//! optimization opportunity but only evaluates blind policies.  This bench
+//! pits all five sparse `KvExchangePolicy` variants against each other at
+//! the *same* transmitted-byte budget, so any EM difference is pure
+//! selection quality:
+//!
+//! * `random`             — uniform keep-ratio f (Fig. 10 baseline)
+//! * `publisher-priority` — publisher full, remotes thinned to match f
+//! * `recent-budget`      — newest ⌈f·rows⌉ rows per participant
+//! * `top-k-relevance`    — highest accumulated attention mass (adaptive)
+//! * `byte-budget`        — relevance selection under a coordinator-split
+//!                          byte budget (equal links ⇒ equal row budgets)
+//!
+//! plus the `full` reference.  Expected: `top-k-relevance` ≥ `random` EM
+//! at equal comm bytes on the MicroFact workload.
+//!
+//!     cargo bench --bench fig11_adaptive_kv
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::{partition, Segmentation};
+use fedattn::fedattn::{KvExchangePolicy, SyncSchedule};
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let md = engine.manifest.model.clone();
+    let m = md.n_layers;
+    let n = 4usize;
+    let h = 2usize;
+    let seg = Segmentation::SemQEx;
+    let row_bytes = md.kv_row_bytes();
+
+    // Probe the evaluation episodes (same seed/stream as run_point) for
+    // the mean per-participant row count, so row budgets match the random
+    // policy's expected byte volume at each keep fraction.
+    let eps = fixed_episodes(1234, episodes_per_point(), 4);
+    let mean_rows: f64 = eps
+        .iter()
+        .map(|ep| partition(ep, n, seg).len() as f64 / n as f64)
+        .sum::<f64>()
+        / eps.len().max(1) as f64;
+
+    println!("== Fig. 11: adaptive KV aggregation (H = {h}, N = {n}, {}) ==", seg.as_str());
+    println!("mean rows/participant: {mean_rows:.1}  ({row_bytes} B/row)");
+    println!(
+        "\n{:>20} {:>6} {:>10} {:>14} {:>10}",
+        "policy", "f", "EM (pub)", "tx/participant", "comm ms"
+    );
+
+    let mut rows_json = Vec::new();
+
+    // Full-exchange reference.
+    let mut cfg = PointCfg::new(n, seg, SyncSchedule::uniform(m, n, h));
+    cfg.kv_policy = KvExchangePolicy::Full;
+    let full = run_point(&engine, &cfg)?;
+    println!(
+        "{:>20} {:>6.2} {:>10.3} {:>14} {:>10.2}",
+        "full",
+        1.0,
+        full.em_publisher,
+        fmt_bytes(full.avg_tx_bytes),
+        full.comm_time_ms
+    );
+    rows_json.push(point_json("full:f1", 1.0, &full));
+
+    for &f in &[0.25f64, 0.5, 0.75] {
+        let budget = ((mean_rows * f).round() as usize).max(1);
+        let total_bytes = n * budget * row_bytes;
+        // Publisher sends everything; thin the remotes so the *expected*
+        // total matches f (assumes roughly equal spans).
+        let remote_ratio = ((f * n as f64 - 1.0) / (n as f64 - 1.0)).clamp(0.0, 1.0);
+        let policies = [
+            KvExchangePolicy::Random { ratio: f },
+            KvExchangePolicy::PublisherPriority { remote_ratio },
+            KvExchangePolicy::RecentBudget { budget_rows: budget },
+            KvExchangePolicy::TopKRelevance { budget_rows: budget },
+            KvExchangePolicy::ByteBudget { bytes_per_round: total_bytes },
+        ];
+        println!("\n-- keep fraction {f} (budget {budget} rows, {} total/round) --",
+            fmt_bytes(total_bytes as f64));
+        let mut em_random = f64::NAN;
+        let mut em_topk = f64::NAN;
+        for policy in policies {
+            let mut cfg = PointCfg::new(n, seg, SyncSchedule::uniform(m, n, h));
+            cfg.kv_policy = policy;
+            let r = run_point(&engine, &cfg)?;
+            match policy {
+                KvExchangePolicy::Random { .. } => em_random = r.em_publisher,
+                KvExchangePolicy::TopKRelevance { .. } => em_topk = r.em_publisher,
+                _ => {}
+            }
+            println!(
+                "{:>20} {:>6.2} {:>10.3} {:>14} {:>10.2}",
+                policy.as_str(),
+                f,
+                r.em_publisher,
+                fmt_bytes(r.avg_tx_bytes),
+                r.comm_time_ms
+            );
+            rows_json.push(point_json(&format!("{}:f{f}", policy.as_str()), f, &r));
+        }
+        let delta = em_topk - em_random;
+        println!(
+            "   => top-k-relevance vs random at matched bytes: {delta:+.3} EM {}",
+            if delta >= 0.0 { "(adaptive wins/ties)" } else { "(adaptive LOSES - investigate)" }
+        );
+        rows_json.push(
+            JsonBuilder::new()
+                .str("label", &format!("summary:f{f}"))
+                .num("x", f)
+                .num("em_topk_minus_random", delta)
+                .build(),
+        );
+    }
+
+    write_json("fig11_adaptive_kv", Json::Arr(rows_json));
+    Ok(())
+}

@@ -1,9 +1,13 @@
 //! Minimal CLI argument parser (clap is unavailable offline).
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments; subcommand dispatch is done by the caller from `positional(0)`.
+//! arguments; subcommand dispatch is done by the caller from
+//! `positional(0)`.  Domain-specific selectors (KV-exchange policy) live
+//! here too so `main.rs` and future frontends share one parsing path.
 
 use std::collections::BTreeMap;
+
+use crate::fedattn::KvExchangePolicy;
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -71,6 +75,32 @@ impl Args {
     }
 }
 
+/// Select a KV-exchange policy from `--kv-policy` plus its companions
+/// (`--kv-ratio`, `--kv-budget-rows`, `--kv-bytes`).  Returns `Ok(None)`
+/// when `--kv-policy` is absent so callers can keep their default.
+pub fn parse_kv_policy(args: &Args) -> anyhow::Result<Option<KvExchangePolicy>> {
+    let Some(name) = args.opt("kv-policy") else {
+        return Ok(None);
+    };
+    let ratio = args.f64_or("kv-ratio", 1.0);
+    let budget_rows = args.usize_or("kv-budget-rows", 64);
+    let policy = match name {
+        "full" => KvExchangePolicy::Full,
+        "random" => KvExchangePolicy::Random { ratio },
+        "publisher-priority" => KvExchangePolicy::PublisherPriority { remote_ratio: ratio },
+        "recent-budget" => KvExchangePolicy::RecentBudget { budget_rows },
+        "top-k-relevance" => KvExchangePolicy::TopKRelevance { budget_rows },
+        "byte-budget" => KvExchangePolicy::ByteBudget {
+            bytes_per_round: args.usize_or("kv-bytes", 64 * 1024),
+        },
+        other => anyhow::bail!(
+            "unknown --kv-policy {other:?} (expected full|random|publisher-priority|\
+             recent-budget|top-k-relevance|byte-budget)"
+        ),
+    };
+    Ok(Some(policy))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +131,24 @@ mod tests {
         let a = parse(&[]);
         assert_eq!(a.positional(0), None);
         assert_eq!(a.f64_or("ratio", 0.5), 0.5);
+    }
+
+    #[test]
+    fn kv_policy_selection() {
+        assert_eq!(parse_kv_policy(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_kv_policy(&parse(&["--kv-policy", "top-k-relevance", "--kv-budget-rows", "8"]))
+                .unwrap(),
+            Some(KvExchangePolicy::TopKRelevance { budget_rows: 8 })
+        );
+        assert_eq!(
+            parse_kv_policy(&parse(&["--kv-policy=byte-budget", "--kv-bytes=2048"])).unwrap(),
+            Some(KvExchangePolicy::ByteBudget { bytes_per_round: 2048 })
+        );
+        assert_eq!(
+            parse_kv_policy(&parse(&["--kv-policy", "random", "--kv-ratio", "0.5"])).unwrap(),
+            Some(KvExchangePolicy::Random { ratio: 0.5 })
+        );
+        assert!(parse_kv_policy(&parse(&["--kv-policy", "nope"])).is_err());
     }
 }

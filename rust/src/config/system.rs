@@ -43,11 +43,35 @@ impl Default for FederationConfig {
 pub struct NetworkConfig {
     pub topology: Topology,
     pub link: LinkSpec,
+    /// Per-participant uplink bandwidths (Mbit/s) for heterogeneous-link
+    /// scenarios (`network.bandwidths_mbps = [...]`); participants beyond
+    /// the list reuse the uniform `link` spec.
+    pub bandwidths_mbps: Option<Vec<f64>>,
 }
 
 impl Default for NetworkConfig {
     fn default() -> Self {
-        Self { topology: Topology::Star, link: LinkSpec::default() }
+        Self {
+            topology: Topology::Star,
+            link: LinkSpec::default(),
+            bandwidths_mbps: None,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// Materialise per-participant link specs (heterogeneous bandwidths
+    /// when configured, otherwise `n` copies of the uniform link).
+    pub fn links(&self, n: usize) -> Vec<LinkSpec> {
+        (0..n)
+            .map(|p| {
+                let mut l = self.link;
+                if let Some(bw) = self.bandwidths_mbps.as_ref().and_then(|b| b.get(p)) {
+                    l.bandwidth_mbps = *bw;
+                }
+                l
+            })
+            .collect()
     }
 }
 
@@ -115,6 +139,12 @@ impl SystemConfig {
             "recent-budget" => KvExchangePolicy::RecentBudget {
                 budget_rows: doc.usize_or("federation.kv_budget_rows", 64),
             },
+            "top-k-relevance" => KvExchangePolicy::TopKRelevance {
+                budget_rows: doc.usize_or("federation.kv_budget_rows", 64),
+            },
+            "byte-budget" => KvExchangePolicy::ByteBudget {
+                bytes_per_round: doc.usize_or("federation.kv_bytes_per_round", 64 * 1024),
+            },
             other => anyhow::bail!("unknown kv_policy {other:?}"),
         };
         f.max_new_tokens = doc.usize_or("federation.max_new_tokens", f.max_new_tokens);
@@ -129,6 +159,14 @@ impl SystemConfig {
             latency_ms: doc.f64_or("network.latency_ms", 5.0),
             jitter: doc.f64_or("network.jitter", 0.0),
         };
+        if doc.get("network.bandwidths_mbps").is_some() {
+            // Present but malformed must fail loudly — silently falling
+            // back to uniform links would corrupt hetero-link experiments.
+            c.network.bandwidths_mbps =
+                Some(doc.f64_array("network.bandwidths_mbps").ok_or_else(|| {
+                    anyhow::anyhow!("network.bandwidths_mbps must be a numeric array")
+                })?);
+        }
 
         c.serving.engines = doc.usize_or("serving.engines", 1);
         c.serving.queue_depth = doc.usize_or("serving.queue_depth", 64);
@@ -181,6 +219,47 @@ mod tests {
         assert_eq!(c.federation.kv_policy, KvExchangePolicy::Random { ratio: 0.5 });
         assert_eq!(c.network.topology, Topology::Mesh);
         assert_eq!(c.serving.engines, 2);
+    }
+
+    #[test]
+    fn hetero_links_from_array() {
+        let doc = TomlDoc::parse(
+            "[network]\nbandwidth_mbps = 80.0\nbandwidths_mbps = [100.0, 20.0]",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        let links = c.network.links(3);
+        assert_eq!(links[0].bandwidth_mbps, 100.0);
+        assert_eq!(links[1].bandwidth_mbps, 20.0);
+        // Beyond the list: uniform fallback.
+        assert_eq!(links[2].bandwidth_mbps, 80.0);
+        // Present-but-malformed must error, not silently degrade.
+        let doc =
+            TomlDoc::parse("[network]\nbandwidths_mbps = \"fast\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn adaptive_policies_parse() {
+        let doc = TomlDoc::parse(
+            "[federation]\nkv_policy = \"top-k-relevance\"\nkv_budget_rows = 12",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(
+            c.federation.kv_policy,
+            KvExchangePolicy::TopKRelevance { budget_rows: 12 }
+        );
+
+        let doc = TomlDoc::parse(
+            "[federation]\nkv_policy = \"byte-budget\"\nkv_bytes_per_round = 4096",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(
+            c.federation.kv_policy,
+            KvExchangePolicy::ByteBudget { bytes_per_round: 4096 }
+        );
     }
 
     #[test]

@@ -119,6 +119,17 @@ impl TomlDoc {
         self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
     }
 
+    /// Numeric array (ints coerce to floats); `None` when the key is
+    /// absent, not an array, or contains non-numeric items.
+    pub fn f64_array(&self, key: &str) -> Option<Vec<f64>> {
+        match self.get(key)? {
+            TomlValue::Array(items) => {
+                items.iter().map(TomlValue::as_f64).collect::<Option<Vec<f64>>>()
+            }
+            _ => None,
+        }
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(String::as_str)
     }
@@ -231,6 +242,16 @@ mod tests {
         assert!(TomlDoc::parse("novalue").is_err());
         assert!(TomlDoc::parse("x = ").is_err());
         assert!(TomlDoc::parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn f64_array_accessor() {
+        let d = TomlDoc::parse("bw = [100.0, 20, 50.5]\ns = \"x\"").unwrap();
+        assert_eq!(d.f64_array("bw"), Some(vec![100.0, 20.0, 50.5]));
+        assert_eq!(d.f64_array("s"), None);
+        assert_eq!(d.f64_array("missing"), None);
+        let d = TomlDoc::parse("mixed = [1, \"a\"]").unwrap();
+        assert_eq!(d.f64_array("mixed"), None);
     }
 
     #[test]

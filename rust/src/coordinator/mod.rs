@@ -2,4 +2,4 @@
 
 mod server;
 
-pub use server::{CoordinatorConfig, Coordinator, TaskResult, ServeReport};
+pub use server::{CoordinatorConfig, Coordinator, TaskQueue, TaskResult, ServeReport};

@@ -34,6 +34,9 @@ pub struct CoordinatorConfig {
     pub max_new_tokens: usize,
     pub topology: crate::net::Topology,
     pub link: crate::net::LinkSpec,
+    /// Heterogeneous per-participant links; `None` = `participants` copies
+    /// of `link`.  Drives byte-budget allocation for adaptive KV policies.
+    pub hetero_links: Option<Vec<crate::net::LinkSpec>>,
     pub seed: u64,
     /// Compress trace inter-arrival gaps by this factor (benches use > 1 to
     /// avoid waiting out real think-time).
@@ -53,8 +56,21 @@ impl CoordinatorConfig {
             max_new_tokens: sc.federation.max_new_tokens,
             topology: sc.network.topology,
             link: sc.network.link,
+            hetero_links: sc
+                .network
+                .bandwidths_mbps
+                .is_some()
+                .then(|| sc.network.links(sc.federation.participants)),
             seed: sc.seed,
             time_scale: 1.0,
+        }
+    }
+
+    /// Per-participant link specs (heterogeneous when configured).
+    pub fn links(&self) -> Vec<crate::net::LinkSpec> {
+        match &self.hetero_links {
+            Some(l) => l.clone(),
+            None => vec![self.link; self.participants],
         }
     }
 }
@@ -109,7 +125,12 @@ impl ServeReport {
 }
 
 /// Bounded FIFO of pending tasks (the backpressure point).
-struct TaskQueue<T> {
+///
+/// Public so stress tests and alternative frontends can exercise the
+/// serving layer's admission control without a compiled engine: `push`
+/// blocks once `capacity` items are pending, `pop` blocks until an item or
+/// `close`, and no item is ever dropped.
+pub struct TaskQueue<T> {
     inner: Mutex<std::collections::VecDeque<T>>,
     cv: Condvar,
     capacity: usize,
@@ -117,7 +138,7 @@ struct TaskQueue<T> {
 }
 
 impl<T> TaskQueue<T> {
-    fn new(capacity: usize) -> Self {
+    pub fn new(capacity: usize) -> Self {
         Self {
             inner: Mutex::new(std::collections::VecDeque::new()),
             cv: Condvar::new(),
@@ -127,7 +148,7 @@ impl<T> TaskQueue<T> {
     }
 
     /// Blocking push (backpressure when the queue is full).
-    fn push(&self, item: T) {
+    pub fn push(&self, item: T) {
         let mut q = self.inner.lock().unwrap();
         while q.len() >= self.capacity {
             q = self.cv.wait(q).unwrap();
@@ -136,7 +157,8 @@ impl<T> TaskQueue<T> {
         self.cv.notify_all();
     }
 
-    fn pop(&self) -> Option<T> {
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
         let mut q = self.inner.lock().unwrap();
         loop {
             if let Some(item) = q.pop_front() {
@@ -150,9 +172,28 @@ impl<T> TaskQueue<T> {
         }
     }
 
-    fn close(&self) {
+    pub fn close(&self) {
+        // Hold the queue lock while flipping the flag: a consumer in
+        // `pop` is either before its closed-check (will see true) or
+        // already parked in `cv.wait` (will get the notify).  Without
+        // this, close() could set+notify inside a consumer's
+        // check-then-wait window and strand it forever.
+        let _guard = self.inner.lock().unwrap();
         *self.closed.lock().unwrap() = true;
         self.cv.notify_all();
+    }
+
+    /// Currently queued items (bounded by `capacity` between operations).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 }
 
@@ -181,7 +222,27 @@ impl Coordinator {
         scfg.kv_policy = cfg.kv_policy;
         scfg.max_new_tokens = cfg.max_new_tokens;
         scfg.seed = task_seed;
-        let net = NetSim::uniform(cfg.topology, cfg.participants, cfg.link, task_seed);
+        let links = self.cfg.links();
+        anyhow::ensure!(
+            links.len() == cfg.participants,
+            "hetero_links length {} != participants {}",
+            links.len(),
+            cfg.participants
+        );
+        // Byte-budget adaptive aggregation: the coordinator splits the
+        // round's byte budget into per-participant row budgets weighted by
+        // uplink bandwidth (§V Obs. 4 meets heterogeneous edge links).
+        // Must stay in lockstep with FedSession::prefill's fallback, which
+        // derives the identical allocation from the NetSim links when no
+        // explicit budget is set — both defer to allocate_row_budgets.
+        if let KvExchangePolicy::ByteBudget { bytes_per_round } = cfg.kv_policy {
+            let row_bytes = md.kv_row_bytes().max(1);
+            scfg.kv_row_budgets = Some(crate::net::allocate_row_budgets(
+                &links,
+                bytes_per_round / row_bytes,
+            ));
+        }
+        let net = NetSim::new(cfg.topology, links, task_seed);
         let t0 = Instant::now();
         let session = FedSession::new(&self.engine, &part, scfg, net)?;
         let rep = session.run()?;

@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::tensor::HostTensor;
 
 /// Metadata of one packed KV row.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KvRowMeta {
     /// Global token position (drives the causal mask).
     pub pos: i32,
@@ -23,6 +23,9 @@ pub struct KvRowMeta {
     /// Whether the row was transmitted this round (sparse KV exchange);
     /// untransmitted rows are visible only to their owner.
     pub transmitted: bool,
+    /// Accumulated attention mass on this row at selection time (adaptive
+    /// aggregation, §V Obs. 4); 0 when relevance is not tracked.
+    pub relevance: f32,
 }
 
 /// A packed global KV buffer padded to a G variant.
@@ -82,11 +85,32 @@ impl GlobalKv {
             k.copy_rows_from(pk, 0..*valid, cursor);
             v.copy_rows_from(pv, 0..*valid, cursor);
             for i in 0..*valid {
-                meta.push(KvRowMeta { pos: pos[i], owner, transmitted: tx[i] });
+                meta.push(KvRowMeta {
+                    pos: pos[i],
+                    owner,
+                    transmitted: tx[i],
+                    relevance: 0.0,
+                });
             }
             cursor += valid;
         }
         Ok(Self { k, v, meta })
+    }
+
+    /// Stamp each packed row's metadata with the owner's accumulated
+    /// relevance score (`scores_by_owner[owner][local_row]`, same
+    /// packing order as [`GlobalKv::pack`]).  Rows beyond a participant's
+    /// score vector keep relevance 0.
+    pub fn attach_relevance(&mut self, scores_by_owner: &[Vec<f64>]) {
+        let mut cursor = vec![0usize; scores_by_owner.len()];
+        for m in &mut self.meta {
+            let Some(c) = cursor.get_mut(m.owner) else { continue };
+            let i = *c;
+            *c += 1;
+            if let Some(&s) = scores_by_owner[m.owner].get(i) {
+                m.relevance = s as f32;
+            }
+        }
     }
 
     /// Per-participant transmitted-row counts (for comm accounting).
@@ -142,11 +166,31 @@ mod tests {
         assert_eq!(g.rows(), 5);
         assert_eq!(g.k.row(0)[0], 10.0);
         assert_eq!(g.k.row(3)[0], 100.0);
-        assert_eq!(g.meta[3], KvRowMeta { pos: 4, owner: 1, transmitted: true });
+        assert_eq!(
+            g.meta[3],
+            KvRowMeta { pos: 4, owner: 1, transmitted: true, relevance: 0.0 }
+        );
         assert_eq!(g.meta[2].transmitted, false);
         assert_eq!(g.tx_rows_by_owner(2), vec![2, 2]);
         // padding rows zero
         assert!(g.k.row(5).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn attach_relevance_scatters_by_owner() {
+        let (k0, v0) = part(3, 1, 2, 0.0);
+        let (k1, v1) = part(2, 1, 2, 10.0);
+        let pos0 = [0, 1, 2];
+        let pos1 = [3, 4];
+        let tx = [true; 3];
+        let mut g = GlobalKv::pack(
+            &[(&k0, &v0, &pos0, 3, &tx), (&k1, &v1, &pos1, 2, &tx[..2])],
+            5,
+        )
+        .unwrap();
+        g.attach_relevance(&[vec![0.5, 1.5, 2.5], vec![9.0, 8.0]]);
+        let rel: Vec<f32> = g.meta.iter().map(|m| m.relevance).collect();
+        assert_eq!(rel, vec![0.5, 1.5, 2.5, 9.0, 8.0]);
     }
 
     #[test]

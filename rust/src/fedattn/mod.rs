@@ -16,12 +16,14 @@
 
 pub mod kv;
 pub mod masks;
+pub mod relevance;
 pub mod schedule;
 pub mod session;
 pub mod sparse;
 
 pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{global_mask, local_mask};
+pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};
 pub use session::{FedSession, PrefillOutput, SessionConfig, SessionReport};
-pub use sparse::{KvExchangePolicy, LocalSparsity};
+pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};

@@ -1,0 +1,318 @@
+//! Relevance-tracking adaptive KV aggregation (§V Obs. 4).
+//!
+//! The paper observes that blind KV-exchange heuristics (uniform random,
+//! recency) leave the biggest efficiency lever on the table: most of the
+//! attention mass a participant's queries place on *remote* KV rows
+//! concentrates on a small subset of those rows.  This module turns that
+//! observation into a measurable policy input:
+//!
+//! * [`attention_mass`] — the per-KV-row *row-sum of attention weights*
+//!   for one attendee at a sync block, recomputed on the host from the
+//!   Q/K tensors and the additive mask the engine already produced.  It is
+//!   exactly `sum_i sum_h softmax_j(q_ih · k_j / sqrt(hd) + mask_ij)` —
+//!   the column marginal of the attention matrix, i.e. how much total
+//!   probability mass every global KV row received.
+//! * [`RelevanceTracker`] — accumulates that mass per participant-local
+//!   KV row across sync rounds with exponential decay, so early-layer
+//!   observations inform later-layer (and heterogeneous-budget) selection.
+//! * [`select_rows_by_budget`] — picks a participant's `budget` most
+//!   relevant rows, falling back to temporal recency on cold start (no
+//!   mass observed yet) and never returning an empty transmission set.
+//!
+//! The selection is *causal*: the transmission decision at sync round `r`
+//! uses only mass accumulated through round `r - 1`, matching what a real
+//! edge deployment could compute (each attendee reports the column
+//! marginals of its own attention — `G` floats, negligible next to the KV
+//! payload itself).
+//!
+//! Used by [`KvExchangePolicy::TopKRelevance`] and
+//! [`KvExchangePolicy::ByteBudget`]; per-participant budgets for the
+//! latter are allocated from heterogeneous link specs by
+//! [`crate::net::allocate_row_budgets`].
+//!
+//! [`KvExchangePolicy::TopKRelevance`]: crate::fedattn::KvExchangePolicy::TopKRelevance
+//! [`KvExchangePolicy::ByteBudget`]: crate::fedattn::KvExchangePolicy::ByteBudget
+
+use crate::fedattn::kv::KvRowMeta;
+use crate::tensor::{HostTensor, NEG_MASK};
+
+/// Default exponential-decay factor applied to accumulated mass at every
+/// sync round (recent rounds dominate, old layers still contribute).
+pub const DEFAULT_DECAY: f64 = 0.8;
+
+/// Per-participant, per-local-KV-row attention-mass accumulator.
+#[derive(Debug, Clone)]
+pub struct RelevanceTracker {
+    /// `scores[p][i]` — decayed attention mass on participant `p`'s local
+    /// row `i` (indices follow the participant's packed row order).
+    scores: Vec<Vec<f64>>,
+    decay: f64,
+    rounds: usize,
+}
+
+impl RelevanceTracker {
+    /// Tracker for participants holding `row_counts[p]` valid KV rows.
+    pub fn new(row_counts: &[usize]) -> Self {
+        Self::with_decay(row_counts, DEFAULT_DECAY)
+    }
+
+    pub fn with_decay(row_counts: &[usize], decay: f64) -> Self {
+        Self {
+            scores: row_counts.iter().map(|&c| vec![0.0; c]).collect(),
+            decay,
+            rounds: 0,
+        }
+    }
+
+    pub fn n_participants(&self) -> usize {
+        self.scores.len()
+    }
+
+    /// Accumulated scores for participant `p`'s local rows.
+    pub fn scores(&self, p: usize) -> &[f64] {
+        &self.scores[p]
+    }
+
+    /// All per-participant score vectors (packing-order aligned).
+    pub fn all_scores(&self) -> &[Vec<f64>] {
+        &self.scores
+    }
+
+    /// Sync rounds observed so far (0 = cold start).
+    pub fn rounds_observed(&self) -> usize {
+        self.rounds
+    }
+
+    /// Fold one sync round's packed-row attention mass back onto the
+    /// owning participants' local rows.  `meta[j]` describes packed row
+    /// `j` (participant-major, local order — the [`GlobalKv::pack`]
+    /// layout), `mass[j]` its observed attention mass.
+    ///
+    /// [`GlobalKv::pack`]: crate::fedattn::GlobalKv::pack
+    pub fn observe(&mut self, meta: &[KvRowMeta], mass: &[f64]) {
+        for s in &mut self.scores {
+            for x in s.iter_mut() {
+                *x *= self.decay;
+            }
+        }
+        let mut cursor = vec![0usize; self.scores.len()];
+        for (j, m) in meta.iter().enumerate() {
+            if m.owner >= self.scores.len() {
+                continue;
+            }
+            let i = cursor[m.owner];
+            cursor[m.owner] += 1;
+            if let Some(slot) = self.scores[m.owner].get_mut(i) {
+                *slot += mass.get(j).copied().unwrap_or(0.0);
+            }
+        }
+        self.rounds += 1;
+    }
+}
+
+/// Column marginals of one attendee's attention at a sync block: for every
+/// packed global KV row `j`, the total softmax probability the attendee's
+/// valid queries (all heads) placed on it.
+///
+/// * `q` — `[l_pad, Hq, hd]` query tensor (RoPE already applied).
+/// * `k` — `[g_pad, Hkv, hd]` packed global keys; GQA maps query head `h`
+///   to KV head `h / (Hq / Hkv)`.
+/// * `mask` — the additive `[l_pad, g_pad]` mask the engine attends with
+///   (causality + sparse-exchange visibility), so the host-side softmax
+///   reproduces the device attention weights exactly.
+/// * `q_valid` / `kv_rows` — valid (non-padding) query and KV row counts.
+pub fn attention_mass(
+    q: &HostTensor,
+    k: &HostTensor,
+    mask: &HostTensor,
+    q_valid: usize,
+    kv_rows: usize,
+) -> Vec<f64> {
+    let (hq, hd) = (q.shape()[1], q.shape()[2]);
+    let hkv = k.shape()[1];
+    assert!(hkv > 0 && hq % hkv == 0, "GQA head mismatch: {hq} q vs {hkv} kv");
+    let group = hq / hkv;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let kv_rows = kv_rows.min(k.shape()[0]);
+
+    let mut mass = vec![0.0f64; kv_rows];
+    let mut logits = vec![0.0f64; kv_rows];
+    for i in 0..q_valid {
+        let mrow = mask.row(i);
+        let qrow = q.row(i);
+        for h in 0..hq {
+            let qh = &qrow[h * hd..(h + 1) * hd];
+            let kh = h / group;
+            let mut max_logit = f64::NEG_INFINITY;
+            for j in 0..kv_rows {
+                // Masked-out rows contribute nothing (exp(-1e30) == 0).
+                if mrow[j] <= NEG_MASK * 0.5 {
+                    logits[j] = f64::NEG_INFINITY;
+                    continue;
+                }
+                let krow = &k.row(j)[kh * hd..(kh + 1) * hd];
+                let dot: f64 = qh
+                    .iter()
+                    .zip(krow)
+                    .map(|(a, b)| (*a as f64) * (*b as f64))
+                    .sum();
+                let lg = dot * scale + mrow[j] as f64;
+                logits[j] = lg;
+                max_logit = max_logit.max(lg);
+            }
+            if !max_logit.is_finite() {
+                continue; // query sees nothing (padding row)
+            }
+            let mut denom = 0.0f64;
+            for l in logits.iter_mut() {
+                if l.is_finite() {
+                    *l = (*l - max_logit).exp();
+                    denom += *l;
+                } else {
+                    *l = 0.0;
+                }
+            }
+            if denom <= 0.0 {
+                continue;
+            }
+            for (m, l) in mass.iter_mut().zip(&logits) {
+                *m += l / denom;
+            }
+        }
+    }
+    mass
+}
+
+/// Transmission mask selecting up to `budget` of `len` rows by descending
+/// relevance score; ties break toward recency (higher local index first).
+///
+/// Cold start — no scores yet, or no positive mass observed — falls back
+/// to pure temporal recency, which is the best available prior before the
+/// first sync round.  For `len > 0` the result always transmits at least
+/// one row (the never-empty invariant all policies share).
+pub fn select_rows_by_budget(len: usize, budget: usize, scores: Option<&[f64]>) -> Vec<bool> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let budget = budget.clamp(1, len);
+    let mut idx: Vec<usize> = (0..len).collect();
+    match scores {
+        Some(s) if s.len() >= len && s[..len].iter().any(|&x| x > 0.0) => {
+            idx.sort_by(|&a, &b| {
+                s[b].partial_cmp(&s[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.cmp(&a))
+            });
+        }
+        _ => idx.reverse(),
+    }
+    let mut tx = vec![false; len];
+    for &i in idx.iter().take(budget) {
+        tx[i] = true;
+    }
+    tx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    fn meta_row(owner: usize) -> KvRowMeta {
+        KvRowMeta { pos: 0, owner, transmitted: true, relevance: 0.0 }
+    }
+
+    #[test]
+    fn tracker_scatters_mass_by_owner() {
+        let mut t = RelevanceTracker::with_decay(&[2, 3], 0.5);
+        // Packed layout: owner 0 rows [a, b], owner 1 rows [c, d, e].
+        let meta: Vec<KvRowMeta> =
+            [0, 0, 1, 1, 1].iter().map(|&o| meta_row(o)).collect();
+        t.observe(&meta, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(t.scores(0), &[1.0, 2.0]);
+        assert_eq!(t.scores(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.rounds_observed(), 1);
+        // Second round decays the first by 0.5 before adding.
+        t.observe(&meta, &[2.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(t.scores(0), &[2.5, 1.0]);
+        assert_eq!(t.scores(1), &[1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn attention_mass_is_column_marginal() {
+        // 2 valid queries, 1 head, 2 kv rows, trivial mask -> each query's
+        // softmax sums to 1, so total mass sums to q_valid.
+        let q = HostTensor::new(&[2, 1, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let k = HostTensor::new(&[2, 1, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let mask = HostTensor::zeros(&[2, 2]);
+        let mass = attention_mass(&q, &k, &mask, 2, 2);
+        let total: f64 = mass.iter().sum();
+        assert!((total - 2.0).abs() < 1e-9, "mass {mass:?}");
+        // Symmetric setup: both rows share the mass equally.
+        assert!((mass[0] - mass[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_mass_respects_mask() {
+        let q = HostTensor::new(&[1, 1, 2], vec![1.0, 1.0]).unwrap();
+        let k = HostTensor::new(&[3, 1, 2], vec![1.0, 1.0, 5.0, 5.0, 1.0, 1.0]).unwrap();
+        let mut mask = HostTensor::zeros(&[1, 3]);
+        mask.data_mut()[1] = NEG_MASK; // hide the dominant row
+        let mass = attention_mass(&q, &k, &mask, 1, 3);
+        assert_eq!(mass[1], 0.0);
+        assert!((mass[0] + mass[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_mass_gqa_heads() {
+        // 4 query heads over 2 kv heads: h0,h1 -> kv0, h2,h3 -> kv1.
+        let q = HostTensor::full(&[1, 4, 2], 1.0);
+        let k = HostTensor::full(&[2, 2, 2], 0.5);
+        let mask = HostTensor::zeros(&[1, 2]);
+        let mass = attention_mass(&q, &k, &mask, 1, 2);
+        let total: f64 = mass.iter().sum();
+        assert!((total - 4.0).abs() < 1e-9, "4 heads x 1 query: {mass:?}");
+    }
+
+    #[test]
+    fn select_prefers_high_scores() {
+        let s = [0.1, 5.0, 0.2, 3.0];
+        let tx = select_rows_by_budget(4, 2, Some(&s));
+        assert_eq!(tx, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn select_cold_start_falls_back_to_recency() {
+        let tx = select_rows_by_budget(5, 2, Some(&[0.0; 5]));
+        assert_eq!(tx, vec![false, false, false, true, true]);
+        let tx = select_rows_by_budget(5, 2, None);
+        assert_eq!(tx, vec![false, false, false, true, true]);
+    }
+
+    #[test]
+    fn select_never_empty_and_budget_bounded() {
+        propcheck(200, |rng| {
+            let len = 1 + rng.below(40) as usize;
+            let budget = rng.below(50) as usize; // includes 0 and > len
+            let scores: Vec<f64> = (0..len).map(|_| rng.next_f64()).collect();
+            let with = rng.bernoulli(0.5);
+            let tx =
+                select_rows_by_budget(len, budget, with.then_some(scores.as_slice()));
+            let k = tx.iter().filter(|&&b| b).count();
+            if k == 0 {
+                return Err("empty transmission set".into());
+            }
+            if k > budget.clamp(1, len) {
+                return Err(format!("budget exceeded: {k} > {budget}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_ties_break_toward_recency() {
+        let s = [1.0, 1.0, 1.0];
+        let tx = select_rows_by_budget(3, 1, Some(&s));
+        assert_eq!(tx, vec![false, false, true]);
+    }
+}

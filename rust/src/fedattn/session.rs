@@ -6,8 +6,9 @@ use anyhow::{Context, Result};
 use crate::data::Partition;
 use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::masks::{decode_mask, global_mask, local_mask};
+use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
-use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity};
+use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
 use crate::net::{NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::tensor::HostTensor;
@@ -29,6 +30,11 @@ pub struct SessionConfig {
     /// paper's Fig. 5 reports mean/min/max EM across participants).  The
     /// default caches and decodes only the task publisher.
     pub decode_all: bool,
+    /// Coordinator-allocated per-participant KV row budgets (heterogeneous
+    /// links); overrides the budget embedded in budgeted policies.  For
+    /// [`KvExchangePolicy::ByteBudget`] with no explicit allocation the
+    /// session derives one from the network simulator's link specs.
+    pub kv_row_budgets: Option<Vec<usize>>,
 }
 
 impl SessionConfig {
@@ -41,6 +47,7 @@ impl SessionConfig {
             seed: 0,
             record_hidden: false,
             decode_all: false,
+            kv_row_budgets: None,
         }
     }
 }
@@ -128,6 +135,8 @@ pub struct FedSession<'a> {
     rng: Xoshiro256ss,
     publisher: usize,
     total_len: usize,
+    /// Per-row attention-mass accumulator (only for relevance policies).
+    relevance: Option<RelevanceTracker>,
 }
 
 impl<'a> FedSession<'a> {
@@ -184,6 +193,13 @@ impl<'a> FedSession<'a> {
             })
             .collect();
 
+        if let Some(b) = &cfg.kv_row_budgets {
+            anyhow::ensure!(b.len() == n, "kv_row_budgets length {} != {n}", b.len());
+        }
+        let relevance = cfg.kv_policy.needs_relevance().then(|| {
+            RelevanceTracker::new(&parts.iter().map(|s| s.valid).collect::<Vec<_>>())
+        });
+
         Ok(Self {
             engine,
             cfg,
@@ -193,6 +209,7 @@ impl<'a> FedSession<'a> {
             rng,
             publisher,
             total_len: partition.len(),
+            relevance,
         })
     }
 
@@ -202,7 +219,23 @@ impl<'a> FedSession<'a> {
         let md = self.engine.manifest.model.clone();
         let n = self.parts.len();
         let n_layers = md.n_layers;
-        let row_bytes = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim) as u64;
+        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
+        let row_bytes = row_bytes_usize as u64;
+
+        // Budgeted policies: resolve per-participant row budgets once per
+        // session.  ByteBudget's total is split across heterogeneous links
+        // proportionally to bandwidth unless the coordinator already did.
+        let budgets: Option<Vec<usize>> =
+            match (&self.cfg.kv_row_budgets, self.cfg.kv_policy) {
+                (Some(b), _) => Some(b.clone()),
+                (None, KvExchangePolicy::ByteBudget { bytes_per_round }) => {
+                    Some(crate::net::allocate_row_budgets(
+                        self.net.links(),
+                        bytes_per_round / row_bytes_usize.max(1),
+                    ))
+                }
+                _ => None,
+            };
 
         for m in 0..n_layers {
             let attend = self.cfg.schedule.attend[m].clone();
@@ -247,15 +280,20 @@ impl<'a> FedSession<'a> {
                 }
             }
 
-            // Sparse KV exchange: per-participant transmitted-row flags.
+            // Sparse/adaptive KV exchange: per-participant transmitted-row
+            // flags.  Relevance policies see only mass accumulated at
+            // *earlier* sync rounds (causal selection).
             let tx_flags: Vec<Vec<bool>> = (0..n)
                 .map(|p| {
-                    self.cfg.kv_policy.transmitted(
-                        p,
-                        self.publisher,
-                        self.parts[p].valid,
-                        &mut self.rng,
-                    )
+                    let ctx = TxContext {
+                        who: p,
+                        publisher: self.publisher,
+                        len: self.parts[p].valid,
+                        row_bytes: row_bytes_usize,
+                        relevance: self.relevance.as_ref().map(|t| t.scores(p)),
+                        row_budget: budgets.as_ref().map(|b| b[p]),
+                    };
+                    self.cfg.kv_policy.transmitted_ctx(&ctx, &mut self.rng)
                 })
                 .collect();
 
@@ -273,7 +311,10 @@ impl<'a> FedSession<'a> {
                     )
                 })
                 .collect();
-            let gkv = GlobalKv::pack(&parts_refs, g_pad)?;
+            let mut gkv = GlobalKv::pack(&parts_refs, g_pad)?;
+            if let Some(tr) = &self.relevance {
+                gkv.attach_relevance(tr.all_scores());
+            }
             let (kv_pos, kv_owner, kv_tx) = gkv.meta_columns();
 
             // Communication accounting + simulated transfer time.
@@ -282,7 +323,12 @@ impl<'a> FedSession<'a> {
                 tx_rows.iter().map(|&r| r as u64 * row_bytes).collect();
             self.net.exchange_round(&tx_bytes, &attend);
 
-            // Global attention + FFN for attendees (Eq. 21 + 19).
+            // Global attention + FFN for attendees (Eq. 21 + 19).  When a
+            // relevance policy is active, also accumulate the column
+            // marginals of every attendee's attention (row-sum of the
+            // attention weights) for the tracker.
+            let mut round_mass: Option<Vec<f64>> =
+                self.relevance.as_ref().map(|_| vec![0.0; gkv.rows()]);
             for p in 0..n {
                 if !attend[p] {
                     continue;
@@ -299,8 +345,18 @@ impl<'a> FedSession<'a> {
                     gkv.rows(),
                     p,
                 );
+                if let Some(acc) = round_mass.as_mut() {
+                    let mass =
+                        relevance::attention_mass(&q, &gkv.k, &mask, st.valid, gkv.rows());
+                    for (a, x) in acc.iter_mut().zip(&mass) {
+                        *a += x;
+                    }
+                }
                 let xo = self.engine.attn_ffn(m, &st.x, &q, &gkv.k, &gkv.v, &mask)?;
                 self.parts[p].x = xo;
+            }
+            if let (Some(tr), Some(acc)) = (self.relevance.as_mut(), round_mass) {
+                tr.observe(&gkv.meta, &acc);
             }
 
             // Decode caches for this block (paper §IV-C): participants that

@@ -6,7 +6,12 @@
 //! * `KvExchangePolicy` — sparse / adaptive KV exchange (Fig. 10 and §V
 //!   Obs. 4): which of a participant's KV rows are transmitted at a sync
 //!   block.  Own rows remain visible to their owner regardless.
+//!
+//! Invariant shared by every policy: a participant with `len > 0` valid
+//! rows never transmits an *empty* set — an empty exchange would silently
+//! degenerate the sync round into local attention for its peers.
 
+use crate::fedattn::relevance::select_rows_by_budget;
 use crate::util::prng::Xoshiro256ss;
 
 /// Sparse local attention: keep each token independently with probability
@@ -39,6 +44,35 @@ impl LocalSparsity {
     }
 }
 
+/// Per-participant inputs to a transmission decision beyond the policy's
+/// own parameters (relevance scores and coordinator-allocated budgets).
+#[derive(Debug, Clone, Copy)]
+pub struct TxContext<'a> {
+    /// Deciding participant.
+    pub who: usize,
+    /// Task publisher.
+    pub publisher: usize,
+    /// Valid local KV rows `who` holds this round.
+    pub len: usize,
+    /// Wire size of one KV row (converts `ByteBudget` bytes to rows).
+    pub row_bytes: usize,
+    /// Accumulated per-row attention mass for `who`'s rows
+    /// ([`crate::fedattn::relevance::RelevanceTracker`]); `None` before
+    /// the first sync round or for non-adaptive policies.
+    pub relevance: Option<&'a [f64]>,
+    /// Coordinator-allocated per-participant row budget (heterogeneous
+    /// links); overrides the budget embedded in the policy when present.
+    pub row_budget: Option<usize>,
+}
+
+impl<'a> TxContext<'a> {
+    /// Context with no relevance history and no budget override (the
+    /// legacy call path; `row_bytes = 1` makes `ByteBudget` count rows).
+    pub fn basic(who: usize, publisher: usize, len: usize) -> Self {
+        Self { who, publisher, len, row_bytes: 1, relevance: None, row_budget: None }
+    }
+}
+
 /// KV-exchange policy applied per participant per sync block.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum KvExchangePolicy {
@@ -52,6 +86,17 @@ pub enum KvExchangePolicy {
     /// Per-round budget: the `budget_rows` most recent rows (temporal
     /// recency heuristic from the sparse-attention literature [37]–[40]).
     RecentBudget { budget_rows: usize },
+    /// Relevance-aware adaptive aggregation (§V Obs. 4): transmit the
+    /// `budget_rows` rows with the highest accumulated attention mass
+    /// observed at earlier sync rounds; cold start falls back to recency.
+    TopKRelevance { budget_rows: usize },
+    /// Relevance selection under an explicit byte budget per sync round.
+    /// `bytes_per_round` is the *total* across participants; the session
+    /// splits it into per-participant row budgets proportional to link
+    /// bandwidth ([`crate::net::allocate_row_budgets`]).  Standalone (no
+    /// allocation in the context) it acts as a per-participant budget of
+    /// `bytes_per_round / row_bytes` rows.
+    ByteBudget { bytes_per_round: usize },
 }
 
 impl KvExchangePolicy {
@@ -61,11 +106,33 @@ impl KvExchangePolicy {
             KvExchangePolicy::Random { .. } => "random",
             KvExchangePolicy::PublisherPriority { .. } => "publisher-priority",
             KvExchangePolicy::RecentBudget { .. } => "recent-budget",
+            KvExchangePolicy::TopKRelevance { .. } => "top-k-relevance",
+            KvExchangePolicy::ByteBudget { .. } => "byte-budget",
         }
     }
 
+    /// Whether the session must track per-row attention mass for this
+    /// policy (adaptive aggregation).
+    pub fn needs_relevance(&self) -> bool {
+        matches!(
+            self,
+            KvExchangePolicy::TopKRelevance { .. } | KvExchangePolicy::ByteBudget { .. }
+        )
+    }
+
+    /// Whether the policy selects under an explicit row/byte budget.
+    pub fn is_budgeted(&self) -> bool {
+        matches!(
+            self,
+            KvExchangePolicy::RecentBudget { .. }
+                | KvExchangePolicy::TopKRelevance { .. }
+                | KvExchangePolicy::ByteBudget { .. }
+        )
+    }
+
     /// Which of `len` valid rows participant `who` transmits this round.
-    /// Returns a boolean row mask.
+    /// Returns a boolean row mask.  Legacy entry point: no relevance
+    /// history, no budget override.
     pub fn transmitted(
         &self,
         who: usize,
@@ -73,27 +140,44 @@ impl KvExchangePolicy {
         len: usize,
         rng: &mut Xoshiro256ss,
     ) -> Vec<bool> {
+        self.transmitted_ctx(&TxContext::basic(who, publisher, len), rng)
+    }
+
+    /// Which rows `ctx.who` transmits this round, with relevance history
+    /// and coordinator budgets available.  For `ctx.len > 0` the returned
+    /// mask is never all-false (see module docs).
+    pub fn transmitted_ctx(&self, ctx: &TxContext, rng: &mut Xoshiro256ss) -> Vec<bool> {
+        let len = ctx.len;
         match *self {
             KvExchangePolicy::Full => vec![true; len],
             KvExchangePolicy::Random { ratio } => {
-                let mut tx: Vec<bool> =
-                    (0..len).map(|_| rng.bernoulli(ratio)).collect();
-                if ratio > 0.0 && !tx.iter().any(|&b| b) && len > 0 {
+                let mut tx: Vec<bool> = (0..len).map(|_| rng.bernoulli(ratio)).collect();
+                if !tx.iter().any(|&b| b) && len > 0 {
                     tx[len - 1] = true; // never transmit an empty set
                 }
                 tx
             }
             KvExchangePolicy::PublisherPriority { remote_ratio } => {
-                if who == publisher {
+                if ctx.who == ctx.publisher {
                     vec![true; len]
                 } else {
-                    KvExchangePolicy::Random { ratio: remote_ratio }
-                        .transmitted(who, publisher, len, rng)
+                    KvExchangePolicy::Random { ratio: remote_ratio }.transmitted_ctx(ctx, rng)
                 }
             }
             KvExchangePolicy::RecentBudget { budget_rows } => {
-                let start = len.saturating_sub(budget_rows);
+                let b = ctx.row_budget.unwrap_or(budget_rows).max(1);
+                let start = len.saturating_sub(b);
                 (0..len).map(|i| i >= start).collect()
+            }
+            KvExchangePolicy::TopKRelevance { budget_rows } => {
+                let b = ctx.row_budget.unwrap_or(budget_rows);
+                select_rows_by_budget(len, b, ctx.relevance)
+            }
+            KvExchangePolicy::ByteBudget { bytes_per_round } => {
+                let b = ctx
+                    .row_budget
+                    .unwrap_or(bytes_per_round / ctx.row_bytes.max(1));
+                select_rows_by_budget(len, b, ctx.relevance)
             }
         }
     }
@@ -146,16 +230,87 @@ mod tests {
     }
 
     #[test]
-    fn random_never_empty() {
+    fn recent_budget_zero_transmits_one_row() {
+        // Regression: budget 0 used to produce an empty transmission set.
+        let mut rng = Xoshiro256ss::new(5);
+        let p = KvExchangePolicy::RecentBudget { budget_rows: 0 };
+        let tx = p.transmitted(0, 1, 6, &mut rng);
+        assert_eq!(tx, vec![false, false, false, false, false, true]);
+    }
+
+    #[test]
+    fn top_k_relevance_selects_by_score() {
+        let mut rng = Xoshiro256ss::new(6);
+        let p = KvExchangePolicy::TopKRelevance { budget_rows: 2 };
+        let scores = [0.5, 9.0, 0.1, 4.0];
+        let ctx = TxContext { relevance: Some(&scores), ..TxContext::basic(0, 1, 4) };
+        assert_eq!(p.transmitted_ctx(&ctx, &mut rng), vec![false, true, false, true]);
+        // Cold start (no scores): recency fallback.
+        let tx = p.transmitted(0, 1, 4, &mut rng);
+        assert_eq!(tx, vec![false, false, true, true]);
+    }
+
+    #[test]
+    fn byte_budget_converts_bytes_to_rows() {
+        let mut rng = Xoshiro256ss::new(7);
+        let p = KvExchangePolicy::ByteBudget { bytes_per_round: 256 };
+        let ctx = TxContext { row_bytes: 128, ..TxContext::basic(0, 1, 5) };
+        // 256 B / 128 B-per-row = 2 rows; cold start picks the 2 most recent.
+        assert_eq!(
+            p.transmitted_ctx(&ctx, &mut rng),
+            vec![false, false, false, true, true]
+        );
+    }
+
+    #[test]
+    fn coordinator_budget_overrides_policy_budget() {
+        let mut rng = Xoshiro256ss::new(8);
+        for p in [
+            KvExchangePolicy::RecentBudget { budget_rows: 5 },
+            KvExchangePolicy::TopKRelevance { budget_rows: 5 },
+            KvExchangePolicy::ByteBudget { bytes_per_round: 5000 },
+        ] {
+            let ctx = TxContext { row_budget: Some(1), ..TxContext::basic(0, 1, 6) };
+            let tx = p.transmitted_ctx(&ctx, &mut rng);
+            assert_eq!(tx.iter().filter(|&&b| b).count(), 1, "{}", p.as_str());
+        }
+    }
+
+    /// The never-empty invariant pinned across *all* policy variants
+    /// (including adversarial parameters: ratio 0, budget 0).
+    #[test]
+    fn no_policy_transmits_empty_set() {
+        let policies = [
+            KvExchangePolicy::Full,
+            KvExchangePolicy::Random { ratio: 0.0 },
+            KvExchangePolicy::Random { ratio: 0.05 },
+            KvExchangePolicy::PublisherPriority { remote_ratio: 0.0 },
+            KvExchangePolicy::RecentBudget { budget_rows: 0 },
+            KvExchangePolicy::RecentBudget { budget_rows: 3 },
+            KvExchangePolicy::TopKRelevance { budget_rows: 0 },
+            KvExchangePolicy::TopKRelevance { budget_rows: 4 },
+            KvExchangePolicy::ByteBudget { bytes_per_round: 0 },
+            KvExchangePolicy::ByteBudget { bytes_per_round: 1024 },
+        ];
         propcheck(100, |rng| {
             let len = 1 + rng.below(30) as usize;
-            let tx = KvExchangePolicy::Random { ratio: 0.05 }
-                .transmitted(0, 1, len, rng);
-            if tx.iter().any(|&b| b) {
-                Ok(())
-            } else {
-                Err("empty transmission set".into())
+            let who = rng.below(3) as usize;
+            let scores: Vec<f64> = (0..len).map(|_| rng.next_f64()).collect();
+            for p in &policies {
+                let ctx = TxContext {
+                    row_bytes: 64,
+                    relevance: rng.bernoulli(0.5).then_some(scores.as_slice()),
+                    ..TxContext::basic(who, 1, len)
+                };
+                let tx = p.transmitted_ctx(&ctx, rng);
+                if tx.len() != len {
+                    return Err(format!("{}: mask length {}", p.as_str(), tx.len()));
+                }
+                if !tx.iter().any(|&b| b) {
+                    return Err(format!("{}: empty transmission set", p.as_str()));
+                }
             }
+            Ok(())
         });
     }
 

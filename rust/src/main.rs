@@ -69,7 +69,11 @@ fn print_help() {
            --participants <N>         number of participants (default 3)\n\
            --h <H>                    uniform sync interval (default 2)\n\
            --seg <setting>            tok-seg:q-ag|tok-seg:q-ex|sem-seg:q-ag|sem-seg:q-ex\n\
-           --kv-ratio <r>             sparse KV-exchange keep ratio\n\
+           --kv-policy <p>            full|random|publisher-priority|recent-budget|\n\
+                                      top-k-relevance|byte-budget\n\
+           --kv-ratio <r>             sparse KV-exchange keep ratio (random policies)\n\
+           --kv-budget-rows <k>       row budget for recent-budget / top-k-relevance\n\
+           --kv-bytes <b>             total bytes per sync round for byte-budget\n\
            --local-ratio <r>          sparse local-attention keep ratio\n\
            --tasks <n>, --seed <s>    workload size / determinism\n\
            --engines <n>              serving worker threads"
@@ -98,6 +102,10 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     let kv_ratio = args.f64_or("kv-ratio", 1.0);
     if kv_ratio < 1.0 {
         f.kv_policy = fedattn::fedattn::KvExchangePolicy::Random { ratio: kv_ratio };
+    }
+    // Explicit --kv-policy takes precedence over the --kv-ratio shorthand.
+    if let Some(policy) = fedattn::cli::parse_kv_policy(args)? {
+        f.kv_policy = policy;
     }
     f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);

@@ -19,4 +19,4 @@
 
 mod sim;
 
-pub use sim::{LinkSpec, NetReport, NetSim, Topology};
+pub use sim::{allocate_row_budgets, LinkSpec, NetReport, NetSim, Topology};

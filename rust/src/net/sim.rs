@@ -50,6 +50,9 @@ pub struct NetReport {
     pub comm_time_ms: f64,
     /// Number of exchange rounds executed.
     pub rounds: usize,
+    /// Total bytes transmitted in each round, in order (`len() == rounds`);
+    /// lets tests and the golden fixture pin per-round payloads.
+    pub round_bytes: Vec<u64>,
 }
 
 impl NetReport {
@@ -136,7 +139,13 @@ impl NetSim {
         };
         self.report.comm_time_ms += round;
         self.report.rounds += 1;
+        self.report.round_bytes.push(total);
         round
+    }
+
+    /// Per-participant link specifications.
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
     }
 
     pub fn report(&self) -> &NetReport {
@@ -148,9 +157,54 @@ impl NetSim {
     }
 }
 
+/// Split `total_rows` KV-row transmission slots across participants
+/// proportionally to their uplink bandwidth (largest-remainder rounding).
+/// Every participant gets at least one row — the never-empty exchange
+/// invariant — so the result sums to `max(total_rows, links.len())`.
+///
+/// This is the coordinator's budget-allocation step for
+/// [`crate::fedattn::KvExchangePolicy::ByteBudget`]: heterogeneous edge
+/// links (§VI) mean a uniform per-participant budget would leave fast
+/// links idle while slow links throttle the round.
+pub fn allocate_row_budgets(links: &[LinkSpec], total_rows: usize) -> Vec<usize> {
+    let n = links.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = total_rows.max(n);
+    let bw_sum: f64 = links.iter().map(|l| l.bandwidth_mbps.max(1e-9)).sum();
+    let shares: Vec<f64> = links
+        .iter()
+        .map(|l| l.bandwidth_mbps.max(1e-9) / bw_sum * total as f64)
+        .collect();
+    let mut out: Vec<usize> = shares.iter().map(|&s| s.floor() as usize).collect();
+    let assigned: usize = out.iter().sum();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = shares[a] - shares[a].floor();
+        let fb = shares[b] - shares[b].floor();
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for &i in order.iter().take(total - assigned) {
+        out[i] += 1;
+    }
+    // Never-empty: steal from the largest allocation for starved links.
+    for i in 0..n {
+        if out[i] == 0 {
+            let j = (0..n).max_by_key(|&j| out[j]).unwrap();
+            if out[j] > 1 {
+                out[j] -= 1;
+            }
+            out[i] = 1;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::propcheck;
 
     fn sim(n: usize) -> NetSim {
         NetSim::uniform(
@@ -169,6 +223,44 @@ mod tests {
         assert_eq!(r.tx_bytes, vec![100, 200, 300]);
         // each attendee receives total - own
         assert_eq!(r.rx_bytes, vec![500, 400, 300]);
+        assert_eq!(r.round_bytes, vec![600]);
+    }
+
+    #[test]
+    fn budgets_proportional_to_bandwidth() {
+        let links = vec![
+            LinkSpec { bandwidth_mbps: 100.0, latency_ms: 5.0, jitter: 0.0 },
+            LinkSpec { bandwidth_mbps: 50.0, latency_ms: 5.0, jitter: 0.0 },
+            LinkSpec { bandwidth_mbps: 50.0, latency_ms: 5.0, jitter: 0.0 },
+        ];
+        assert_eq!(allocate_row_budgets(&links, 40), vec![20, 10, 10]);
+    }
+
+    #[test]
+    fn budgets_conserve_total_and_never_starve() {
+        propcheck(100, |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let total = rng.below(200) as usize;
+            let links: Vec<LinkSpec> = (0..n)
+                .map(|_| LinkSpec {
+                    bandwidth_mbps: 0.5 + rng.next_f64() * 500.0,
+                    latency_ms: 1.0,
+                    jitter: 0.0,
+                })
+                .collect();
+            let b = allocate_row_budgets(&links, total);
+            if b.len() != n {
+                return Err("length mismatch".into());
+            }
+            if b.iter().any(|&x| x == 0) {
+                return Err(format!("starved participant: {b:?}"));
+            }
+            let sum: usize = b.iter().sum();
+            if sum != total.max(n) {
+                return Err(format!("sum {sum} != {}", total.max(n)));
+            }
+            Ok(())
+        });
     }
 
     #[test]

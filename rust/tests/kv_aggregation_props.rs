@@ -1,0 +1,183 @@
+//! Policy-agnostic KV-aggregation properties (host-side only — these run
+//! without compiled artifacts, so CI always exercises them):
+//!
+//! * every valid row is packed into `GlobalKv` exactly once, in
+//!   participant-major local order (owner-visible rows are never lost,
+//!   whatever the exchange policy decided);
+//! * no participant's transmission set is empty;
+//! * `tx_rows_by_owner() × row_bytes()` exactly matches the `NetSim`
+//!   uplink/downlink byte accounting, including the per-round record.
+
+use fedattn::fedattn::{GlobalKv, KvExchangePolicy, TxContext};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::tensor::HostTensor;
+use fedattn::util::prng::Xoshiro256ss;
+use fedattn::util::propcheck::propcheck;
+
+fn random_policy(rng: &mut Xoshiro256ss) -> KvExchangePolicy {
+    match rng.below(6) {
+        0 => KvExchangePolicy::Full,
+        1 => KvExchangePolicy::Random { ratio: rng.next_f64() },
+        2 => KvExchangePolicy::PublisherPriority { remote_ratio: rng.next_f64() },
+        3 => KvExchangePolicy::RecentBudget { budget_rows: rng.below(10) as usize },
+        4 => KvExchangePolicy::TopKRelevance { budget_rows: rng.below(10) as usize },
+        _ => KvExchangePolicy::ByteBudget { bytes_per_round: rng.below(4096) as usize },
+    }
+}
+
+#[test]
+fn aggregation_conserves_rows_and_byte_accounting() {
+    propcheck(120, |rng| {
+        let n = 1 + rng.below(4) as usize;
+        let hkv = 1 + rng.below(2) as usize;
+        let hd = 2usize;
+        let row_bytes = GlobalKv::row_bytes(hkv, hd);
+        let publisher = rng.below(n as u64) as usize;
+        let policy = random_policy(rng);
+
+        // Per-participant KV and transmission decisions.
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let mut poss: Vec<Vec<i32>> = Vec::new();
+        let mut valids = Vec::new();
+        let mut txs: Vec<Vec<bool>> = Vec::new();
+        let mut next_pos = 0i32;
+        for p in 0..n {
+            let valid = 1 + rng.below(6) as usize;
+            let mut k = HostTensor::zeros(&[valid, hkv, hd]);
+            for i in 0..valid {
+                k.row_mut(i).fill((p * 100 + i) as f32);
+            }
+            vs.push(k.clone());
+            ks.push(k);
+            poss.push((0..valid as i32).map(|i| next_pos + i).collect());
+            next_pos += valid as i32;
+            let scores: Vec<f64> = (0..valid).map(|_| rng.next_f64()).collect();
+            let ctx = TxContext {
+                who: p,
+                publisher,
+                len: valid,
+                row_bytes,
+                relevance: rng.bernoulli(0.5).then_some(scores.as_slice()),
+                row_budget: rng.bernoulli(0.3).then(|| 1 + rng.below(6) as usize),
+            };
+            txs.push(policy.transmitted_ctx(&ctx, rng));
+            valids.push(valid);
+        }
+
+        let refs: Vec<_> = (0..n)
+            .map(|p| {
+                (
+                    &ks[p],
+                    &vs[p],
+                    poss[p].as_slice(),
+                    valids[p],
+                    txs[p].as_slice(),
+                )
+            })
+            .collect();
+        let total: usize = valids.iter().sum();
+        let gkv = GlobalKv::pack(&refs, total).map_err(|e| e.to_string())?;
+
+        // Row conservation: every valid row appears exactly once, in
+        // participant-major local order, with its owner and position.
+        if gkv.rows() != total {
+            return Err(format!("packed {} rows, expected {total}", gkv.rows()));
+        }
+        let mut idx = 0usize;
+        for p in 0..n {
+            for i in 0..valids[p] {
+                let m = gkv.meta[idx];
+                if m.owner != p || m.pos != poss[p][i] || m.transmitted != txs[p][i] {
+                    return Err(format!("meta mismatch at {idx}: {m:?}"));
+                }
+                idx += 1;
+            }
+        }
+        // Owner-visible rows never lost: every owner keeps all its rows.
+        for p in 0..n {
+            let owned = gkv.meta.iter().filter(|m| m.owner == p).count();
+            if owned != valids[p] {
+                return Err(format!("participant {p} lost rows: {owned}/{}", valids[p]));
+            }
+        }
+
+        // Never-empty transmission per participant ({} < valid rows).
+        let tx_rows = gkv.tx_rows_by_owner(n);
+        for (p, (&r, &v)) in tx_rows.iter().zip(&valids).enumerate() {
+            if v > 0 && r == 0 {
+                return Err(format!(
+                    "participant {p} transmitted nothing under {}",
+                    policy.as_str()
+                ));
+            }
+            if r > v {
+                return Err(format!("participant {p} transmitted {r} > {v} rows"));
+            }
+        }
+
+        // Byte accounting: tx_rows x row_bytes must equal the NetReport.
+        let tx_bytes: Vec<u64> = tx_rows.iter().map(|&r| (r * row_bytes) as u64).collect();
+        let attending: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        let mut sim = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 5);
+        sim.exchange_round(&tx_bytes, &attending);
+        let rep = sim.report();
+        if rep.tx_bytes != tx_bytes {
+            return Err(format!("uplink mismatch: {:?} vs {:?}", rep.tx_bytes, tx_bytes));
+        }
+        let round_total: u64 = tx_bytes.iter().sum();
+        for p in 0..n {
+            let want_rx = if attending[p] { round_total - tx_bytes[p] } else { 0 };
+            if rep.rx_bytes[p] != want_rx {
+                return Err(format!(
+                    "downlink mismatch for {p}: {} vs {want_rx}",
+                    rep.rx_bytes[p]
+                ));
+            }
+        }
+        if rep.round_bytes != vec![round_total] {
+            return Err(format!("round record {:?} vs {round_total}", rep.round_bytes));
+        }
+        Ok(())
+    });
+}
+
+/// Relevance metadata rides along with packed rows: scores attached via
+/// `attach_relevance` land on the owning participant's rows in order.
+#[test]
+fn relevance_metadata_follows_rows() {
+    propcheck(60, |rng| {
+        let n = 1 + rng.below(3) as usize;
+        let hkv = 1usize;
+        let hd = 2usize;
+        let mut parts = Vec::new();
+        let mut scores: Vec<Vec<f64>> = Vec::new();
+        let mut next_pos = 0i32;
+        for _ in 0..n {
+            let valid = 1 + rng.below(5) as usize;
+            let k = HostTensor::zeros(&[valid, hkv, hd]);
+            let pos: Vec<i32> = (0..valid as i32).map(|i| next_pos + i).collect();
+            next_pos += valid as i32;
+            let tx = vec![true; valid];
+            scores.push((0..valid).map(|_| rng.next_f64() * 10.0).collect());
+            parts.push((k.clone(), k, pos, valid, tx));
+        }
+        let refs: Vec<_> = parts
+            .iter()
+            .map(|(k, v, p, val, tx)| (k, v, p.as_slice(), *val, tx.as_slice()))
+            .collect();
+        let total: usize = refs.iter().map(|r| r.3).sum();
+        let mut gkv = GlobalKv::pack(&refs, total).map_err(|e| e.to_string())?;
+        gkv.attach_relevance(&scores);
+        let mut cursor = vec![0usize; n];
+        for m in &gkv.meta {
+            let i = cursor[m.owner];
+            cursor[m.owner] += 1;
+            let want = scores[m.owner][i] as f32;
+            if m.relevance != want {
+                return Err(format!("relevance {} != {want} for {m:?}", m.relevance));
+            }
+        }
+        Ok(())
+    });
+}

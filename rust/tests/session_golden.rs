@@ -1,0 +1,109 @@
+//! Golden-fixture regression for `FedSession`: fixed seed + config must
+//! produce byte-identical answers, comm bytes, and per-round tx byte
+//! counts, so refactors of the sync loop can't silently drift.
+//!
+//! Two layers of protection:
+//! 1. **Determinism** — every configuration is run twice in-process and
+//!    the fingerprints must match exactly.
+//! 2. **Golden file** — fingerprints are compared against
+//!    `tests/golden/session_golden.json`.  On first run (or with
+//!    `FEDATTN_UPDATE_GOLDEN=1`) the file is (re)written instead.
+//!
+//! Skipped with a notice when artifacts are absent (run `make artifacts`).
+
+use std::path::PathBuf;
+
+use fedattn::data::{gen_episode, partition, Segmentation};
+use fedattn::fedattn::{FedSession, KvExchangePolicy, SessionConfig, SyncSchedule};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::runtime::Engine;
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::prng::SplitMix64;
+
+fn engine() -> Option<Engine> {
+    let dir: PathBuf = fedattn::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("weights.npz").exists() {
+        eprintln!("SKIP: artifacts not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir, "weights.npz").unwrap())
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/session_golden.json")
+}
+
+/// One deterministic session fingerprint: integer byte counts and the
+/// decoded answer only (no floats, no timings).
+fn fingerprint(engine: &Engine, name: &str, policy: KvExchangePolicy) -> Json {
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.kv_policy = policy;
+    cfg.seed = 11;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+    let rep = FedSession::new(engine, &part, cfg, net).unwrap().run().unwrap();
+    JsonBuilder::new()
+        .str("policy", name)
+        .str("answer", &rep.answer)
+        .num("generated_tokens", rep.generated_tokens as f64)
+        .num("rounds", rep.net.rounds as f64)
+        .arr_num(
+            "tx_bytes",
+            &rep.net.tx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "rx_bytes",
+            &rep.net.rx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "round_bytes",
+            &rep.net.round_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .build()
+}
+
+#[test]
+fn session_deterministic_and_matches_golden() {
+    let Some(engine) = engine() else { return };
+    let policies = [
+        ("full", KvExchangePolicy::Full),
+        ("random", KvExchangePolicy::Random { ratio: 0.5 }),
+        ("publisher-priority", KvExchangePolicy::PublisherPriority { remote_ratio: 0.5 }),
+        ("recent-budget", KvExchangePolicy::RecentBudget { budget_rows: 8 }),
+        ("top-k-relevance", KvExchangePolicy::TopKRelevance { budget_rows: 8 }),
+        ("byte-budget", KvExchangePolicy::ByteBudget { bytes_per_round: 8192 }),
+    ];
+
+    let mut records = Vec::new();
+    for (name, policy) in policies {
+        let a = fingerprint(&engine, name, policy);
+        let b = fingerprint(&engine, name, policy);
+        assert_eq!(
+            a.to_string_compact(),
+            b.to_string_compact(),
+            "session not deterministic under {name}"
+        );
+        records.push(a);
+    }
+    let got = Json::Arr(records).to_string_compact();
+
+    let path = golden_path();
+    let update = std::env::var("FEDATTN_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        eprintln!("golden fixture written to {path:?} — commit it to pin the behaviour");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got.trim(),
+        want.trim(),
+        "session fingerprint drifted from {path:?}; if the change is \
+         intentional, regenerate with FEDATTN_UPDATE_GOLDEN=1"
+    );
+}
