@@ -123,6 +123,23 @@ def build_entries(mc: ModelConfig, ac: AotConfig):
         {"kind": "decode_block", "c": c},
     ))
 
+    # Device-resident decode: the [C] cache + its [1, C] mask are frozen
+    # device buffers; only the [R] tail uploads per step.
+    for r in ac.decode_tail:
+        def dect(x, pos, kc, vc, mc_, kt, vt, mt, *w):
+            return M.decode_block_tail(mc, x, pos, kc, vc, mc_, kt, vt, mt, *w)
+
+        entries.append((
+            f"decode_tail_C{c}_R{r}", dect,
+            [("x", _f32(1, d)), ("pos", _i32(1)),
+             ("k_cache", _f32(c, hkv, hd)), ("v_cache", _f32(c, hkv, hd)),
+             ("mask_cache", _f32(1, c)),
+             ("k_tail", _f32(r, hkv, hd)), ("v_tail", _f32(r, hkv, hd)),
+             ("mask_tail", _f32(1, r))] + wspecs,
+            ["x_out", "k_new", "v_new"],
+            {"kind": "decode_tail", "c": c, "r": r},
+        ))
+
     def logits(x, ln_f, w_out):
         return (M.logits_head(mc, x, ln_f, w_out),)
 
@@ -228,6 +245,24 @@ def dump_fixtures(mc: ModelConfig, ac: AotConfig, out_dir: str, seed=3):
     fx.update({"dec.x": xd, "dec.pos": posd, "dec.kc": kc, "dec.vc": vc,
                "dec.mask": maskd, "dec.x_out": np.asarray(xd2),
                "dec.k_new": np.asarray(kn), "dec.v_new": np.asarray(vn)})
+
+    # --- decode_block_tail: same cache split as frozen prefix + tail ---
+    # (skipped for configs without tail variants; the Rust fixture test
+    # skips on the absent dt.* keys.)
+    if ac.decode_tail:
+        r = ac.decode_tail[0]
+        kt = rng.standard_normal((r, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+        vt = rng.standard_normal((r, mc.n_kv_heads, mc.head_dim)).astype(np.float32)
+        tail_used = min(3, r)
+        maskt = np.where(np.arange(r)[None, :] < tail_used, 0.0,
+                         -1e30).astype(np.float32)
+        xt2, ktn, vtn = M.decode_block_tail(
+            mc, jnp.asarray(xd), jnp.asarray(posd), jnp.asarray(kc),
+            jnp.asarray(vc), jnp.asarray(maskd), jnp.asarray(kt),
+            jnp.asarray(vt), jnp.asarray(maskt), *bp)
+        fx.update({"dt.k_tail": kt, "dt.v_tail": vt, "dt.mask_tail": maskt,
+                   "dt.x_out": np.asarray(xt2), "dt.k_new": np.asarray(ktn),
+                   "dt.v_new": np.asarray(vtn)})
 
     # --- full FedAttn scenario: 3 participants, uniform H=2 ---
     drng = D.SplitMix64(seed)

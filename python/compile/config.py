@@ -75,12 +75,18 @@ class AotConfig:
                       qkv_project / attn_ffn L dimension).
     ``g_variants``  — global KV buffer lengths for sync-block attention.
     ``decode_cache``— KV cache capacity for autoregressive decode blocks.
-    All lengths are multiples of the Pallas query tile (32).
+    ``decode_tail`` — tail capacities for the device-resident decode
+                      variants (``decode_tail_C{c}_R{r}``): the ``[C]``
+                      cache is uploaded once and frozen, each step ships
+                      only the ``[R]`` tail of decode-appended rows.
+    All lengths are multiples of the Pallas query tile (32), except the
+    decode tail (decode uses the jnp reference attention, untiled).
     """
 
     l_variants: Tuple[int, ...] = (32, 64, 128, 256, 384)
     g_variants: Tuple[int, ...] = (128, 256, 384)
     decode_cache: int = 448
+    decode_tail: Tuple[int, ...] = (16, 32)
     block_q: int = 32              # Pallas query tile
     block_kv: int = 64             # Pallas KV tile
 
@@ -100,6 +106,7 @@ def manifest_dict(mc: ModelConfig, ac: AotConfig) -> dict:
             "l_variants": list(ac.l_variants),
             "g_variants": list(ac.g_variants),
             "decode_cache": ac.decode_cache,
+            "decode_tail": list(ac.decode_tail),
             "block_q": ac.block_q,
             "block_kv": ac.block_kv,
         },

@@ -136,6 +136,45 @@ def decode_block(mc: ModelConfig, x, pos, k_cache, v_cache, mask,
     return x, k_new, v_new
 
 
+def decode_block_tail(mc: ModelConfig, x, pos, k_cache, v_cache, mask_cache,
+                      k_tail, v_tail, mask_tail,
+                      ln1, wq, bq, wk, bk, wv, bv, wo, ln2, wg, wu, wd):
+    """Decode over a *frozen* cache plus a small growing tail.
+
+    Device-resident execution: the ``[C]`` cache and its ``[1, C]`` mask
+    stay on the device across the whole decode (uploaded once after
+    prefill), while rows appended during decode ride in the ``[R]`` tail —
+    so per-step upload bytes are O(R), independent of C.
+
+    Semantically identical to :func:`decode_block` over
+    ``concat(cache, tail)`` with visibility ``concat(mask_cache,
+    mask_tail)``; masked rows (cache padding, unused tail slots) drop out
+    of the softmax exactly.
+
+    Args:
+      x:          [1, d] current token hidden state.
+      pos:        [1] global position of the token.
+      k_cache:    [C, Hkv, hd] frozen prefill-time cache.
+      mask_cache: [1, C] additive visibility of the frozen cache rows.
+      k_tail:     [R, Hkv, hd] decode-appended rows (zero-padded).
+      mask_tail:  [1, R] additive visibility of the tail rows.
+
+    Returns (x_out [1,d], k_new [1,Hkv,hd], v_new [1,Hkv,hd]); the Rust
+    coordinator appends k_new/v_new to the tail.
+    """
+    q, k_new, v_new = qkv_project(mc, x, pos, ln1, wq, bq, wk, bk, wv, bv)
+    k_all = jnp.concatenate([k_cache, k_tail, k_new], axis=0)
+    v_all = jnp.concatenate([v_cache, v_tail, v_new], axis=0)
+    mask_all = jnp.concatenate(
+        [mask_cache, mask_tail, jnp.zeros((1, 1), dtype=mask_cache.dtype)],
+        axis=1)
+    o = mha_ref(q, k_all, v_all, mask_all)
+    o = o.reshape(1, mc.q_dim) @ wo
+    x = x + o
+    x = x + swiglu(rms_norm(x, ln2, mc.rms_eps), wg, wu, wd)
+    return x, k_new, v_new
+
+
 def logits_head(mc: ModelConfig, x, ln_f, w_out):
     """Final RMSNorm + LM head for the last-position hidden state [1, d]."""
     return rms_norm(x, ln_f, mc.rms_eps) @ w_out

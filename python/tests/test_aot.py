@@ -23,11 +23,23 @@ def test_entry_coverage():
         assert len(args) >= 2
     # Every kind the Rust runtime calls must be present.
     for kind in ["block_fused", "qkv_project", "attn_ffn", "decode_block",
-                 "logits", "embed"]:
+                 "decode_tail", "logits", "embed"]:
         assert kind in kinds, kind
     # One block_fused / qkv / embed per L variant.
     assert len(kinds["block_fused"]) == len(DEFAULT_AOT.l_variants)
     assert len(kinds["attn_ffn"]) == len(DEFAULT_AOT.attn_pairs())
+    # One decode_tail per R variant, each carrying the (c, r) pair the
+    # runtime keys its `decode_tail_C{c}_R{r}` lookup on.
+    assert len(kinds["decode_tail"]) == len(DEFAULT_AOT.decode_tail)
+    tails = [e for e in entries if e[4]["kind"] == "decode_tail"]
+    for name, _, args, outs, meta in tails:
+        assert name == f"decode_tail_C{meta['c']}_R{meta['r']}"
+        assert outs == ["x_out", "k_new", "v_new"]
+
+
+def test_manifest_dict_lists_decode_tail():
+    m = manifest_dict(MC, DEFAULT_AOT)
+    assert m["aot"]["decode_tail"] == list(DEFAULT_AOT.decode_tail)
 
 
 def test_block_weight_order_matches_model():

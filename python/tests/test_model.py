@@ -92,6 +92,37 @@ def test_decode_block_matches_prefill_last_row(params):
         np.asarray(k_new[0]), np.asarray(full_k[L - 1]), atol=1e-5)
 
 
+def test_decode_block_tail_equals_decode_block(params):
+    """decode_block_tail over (frozen cache, tail) must equal decode_block
+    over the concatenated cache — the device-resident decode invariant."""
+    rng = np.random.default_rng(5)
+    C, R = 24, 8
+    used_c, used_t = 13, 3  # visible rows in cache / tail
+    bp = M.block_params(params, 0)
+    x = jnp.asarray(rng.standard_normal((1, MC.d_model)), jnp.float32)
+    pos = jnp.asarray([used_c + used_t], jnp.int32)
+    kc = jnp.asarray(rng.standard_normal((C, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((C, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((R, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((R, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    mask_c = jnp.where(jnp.arange(C)[None, :] < used_c, 0.0, -1e30).astype(jnp.float32)
+    mask_t = jnp.where(jnp.arange(R)[None, :] < used_t, 0.0, -1e30).astype(jnp.float32)
+
+    xt, kt_new, vt_new = M.decode_block_tail(
+        MC, x, pos, kc, vc, mask_c, kt, vt, mask_t, *bp)
+
+    # Reference: one flat cache of capacity C+R holding the same rows.
+    k_flat = jnp.concatenate([kc, kt], axis=0)
+    v_flat = jnp.concatenate([vc, vt], axis=0)
+    mask_flat = jnp.concatenate([mask_c, mask_t], axis=1)
+    xd, k_new, v_new = M.decode_block(
+        MC, x, pos, k_flat, v_flat, mask_flat, *bp)
+
+    np.testing.assert_allclose(np.asarray(xt), np.asarray(xd), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kt_new), np.asarray(k_new), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vt_new), np.asarray(v_new), atol=1e-6)
+
+
 def test_forward_logits_shape(params):
     ids = jnp.asarray(np.arange(10) % MC.vocab_size, jnp.int32)
     logits = M.forward_logits(MC, params, ids)

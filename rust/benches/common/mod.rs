@@ -162,6 +162,18 @@ pub fn write_json(name: &str, value: Json) {
     }
 }
 
+/// Write a machine-readable trajectory report at the repo root
+/// (`BENCH_<name>.json`), so per-PR perf deltas (tokens/s, upload bytes)
+/// are diffable from the repo's top level.
+pub fn write_bench_json(name: &str, value: Json) {
+    let path = repo_root().join(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, value.to_string_compact()) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    } else {
+        eprintln!("(trajectory report written to {path:?})");
+    }
+}
+
 fn repo_root() -> PathBuf {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
     for _ in 0..5 {

@@ -120,6 +120,16 @@ fn main() -> Result<()> {
         );
     }
 
+    // Trajectory report at the repo root: policy sweep plus the engine's
+    // upload accounting (shared device KV handles vs host re-uploads).
+    let s = engine.stats.view();
+    let report = JsonBuilder::new()
+        .set("points", Json::Arr(rows_json.clone()))
+        .num("bytes_uploaded", s.bytes_uploaded as f64)
+        .num("upload_bytes_saved", s.upload_bytes_saved as f64)
+        .num("executions", s.executions as f64)
+        .build();
     write_json("fig11_adaptive_kv", Json::Arr(rows_json));
+    write_bench_json("fig11_adaptive_kv", report);
     Ok(())
 }

@@ -86,7 +86,49 @@ fn main() -> Result<()> {
     let ms = time_median_ms(3, 20, || {
         std::hint::black_box(engine.decode_block(0, &x1, 0, &kc, &vc, &dmask).unwrap());
     });
-    emit("engine_decode_block", ms, &format!("[C={c}]"));
+    emit("engine_decode_block", ms, &format!("[C={c}] full-cache upload/step"));
+
+    // Device-resident decode: frozen cache handles + O(1) tail upload.
+    if let Some(r) = engine.manifest.pick_decode_tail(8) {
+        let kcd = engine.upload(&kc)?;
+        let vcd = engine.upload(&vc)?;
+        let dmd = engine.upload(&dmask)?;
+        let kt = HostTensor::zeros(&[r, md.n_kv_heads, md.head_dim]);
+        let vt = kt.clone();
+        let tmask = HostTensor::zeros(&[1, r]);
+        let _ = engine.decode_block_tail(0, &x1, 0, &kcd, &vcd, &dmd, &kt, &vt, &tmask)?;
+        let ms = time_median_ms(3, 20, || {
+            std::hint::black_box(
+                engine
+                    .decode_block_tail(0, &x1, 0, &kcd, &vcd, &dmd, &kt, &vt, &tmask)
+                    .unwrap(),
+            );
+        });
+        emit("engine_decode_tail", ms, &format!("[C={c} R={r}] tail upload/step"));
+    } else {
+        eprintln!("(decode-tail variants absent — re-run `make artifacts` to bench them)");
+    }
+
+    // Shared global KV: attn_ffn with per-call K/V upload vs shared
+    // device handles (the once-per-sync-round upload path).
+    let l = engine.manifest.l_variants[0];
+    let g = engine.manifest.g_variants[0];
+    let xg = HostTensor::zeros(&[l, md.d_model]);
+    let qg = HostTensor::zeros(&[l, md.n_heads, md.head_dim]);
+    let kg = HostTensor::zeros(&[g, md.n_kv_heads, md.head_dim]);
+    let vg = kg.clone();
+    let gmask = HostTensor::zeros(&[l, g]);
+    let _ = engine.attn_ffn(0, &xg, &qg, &kg, &vg, &gmask)?;
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(engine.attn_ffn(0, &xg, &qg, &kg, &vg, &gmask).unwrap());
+    });
+    emit("engine_attn_ffn_host_kv", ms, &format!("[L={l} G={g}] K/V upload per call"));
+    let kgd = engine.upload(&kg)?;
+    let vgd = engine.upload(&vg)?;
+    let ms = time_median_ms(3, 20, || {
+        std::hint::black_box(engine.attn_ffn_dev(0, &xg, &qg, &kgd, &vgd, &gmask).unwrap());
+    });
+    emit("engine_attn_ffn_shared_kv", ms, &format!("[L={l} G={g}] shared device K/V"));
 
     // Network sim round.
     let ms = time_median_ms(3, 20, || {
@@ -115,6 +157,41 @@ fn main() -> Result<()> {
         }
     });
     emit("gen+tokenize_100eps", ms, "[workload generation]");
+
+    // Engine dispatch/upload accounting for the whole bench run.
+    let s = engine.stats.view();
+    println!("\n== Engine counters (this run) ==");
+    println!(
+        "executions {} (block_fused {} qkv {} attn_ffn {} decode {} decode_tail {} logits {})",
+        s.executions,
+        s.exec_block_fused,
+        s.exec_qkv_project,
+        s.exec_attn_ffn,
+        s.exec_decode_block,
+        s.exec_decode_tail,
+        s.exec_logits
+    );
+    println!(
+        "uploaded {:.2} MB activations + {:.2} MB weights; {:.2} MB saved by device handles",
+        s.bytes_uploaded as f64 / 1e6,
+        s.weight_bytes_uploaded as f64 / 1e6,
+        s.upload_bytes_saved as f64 / 1e6
+    );
+    rows.push(
+        JsonBuilder::new()
+            .str("name", "engine_stats")
+            .num("executions", s.executions as f64)
+            .num("exec_block_fused", s.exec_block_fused as f64)
+            .num("exec_qkv_project", s.exec_qkv_project as f64)
+            .num("exec_attn_ffn", s.exec_attn_ffn as f64)
+            .num("exec_decode_block", s.exec_decode_block as f64)
+            .num("exec_decode_tail", s.exec_decode_tail as f64)
+            .num("exec_logits", s.exec_logits as f64)
+            .num("bytes_uploaded", s.bytes_uploaded as f64)
+            .num("weight_bytes_uploaded", s.weight_bytes_uploaded as f64)
+            .num("upload_bytes_saved", s.upload_bytes_saved as f64)
+            .build(),
+    );
 
     write_json("micro", Json::Arr(rows));
     Ok(())

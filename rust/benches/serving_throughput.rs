@@ -2,6 +2,12 @@
 //! Poisson load (the deployment-facing counterpart of the paper's
 //! efficiency claims; no direct paper figure — see DESIGN.md §4).
 //!
+//! Sweeps the two parallelism knobs — `engines` (concurrent sessions) and
+//! `workers` (per-session participant parallelism) — and reports the
+//! device-resident-execution counters (activation bytes uploaded, bytes
+//! saved by shared device handles) alongside tokens/s.  A machine-readable
+//! trajectory report lands at the repo root (`BENCH_serving.json`).
+//!
 //!     cargo bench --bench serving_throughput
 
 mod common;
@@ -20,45 +26,73 @@ fn main() -> Result<()> {
 
     println!("== Serving throughput/latency under load ==");
     println!(
-        "{:>8} {:>12} {:>10} {:>10} {:>10} {:>8}",
-        "engines", "arrival ms", "thru t/s", "p50 ms", "p95 ms", "EM"
+        "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>12} {:>12}",
+        "engines", "workers", "arrival ms", "thru t/s", "tok/s", "p50 ms", "p95 ms", "EM",
+        "up MB", "saved MB"
     );
     for &engines in &[1usize, 2] {
-        for &inter_ms in &[800.0f64, 300.0] {
-            let mut sc = SystemConfig::default();
-            sc.federation.participants = 3;
-            sc.serving.engines = engines;
-            let mut ccfg = CoordinatorConfig::from_system(&sc);
-            ccfg.time_scale = 4.0;
-            let coord = Coordinator::new(engine.clone(), ccfg);
-            let trace = WorkloadTrace::generate(&TraceConfig {
-                seed: 99,
-                n_tasks: 20,
-                mean_interarrival_ms: inter_ms,
-                ..Default::default()
-            });
-            let rep = coord.serve_trace(&trace)?;
-            println!(
-                "{:>8} {:>12.0} {:>10.2} {:>10.1} {:>10.1} {:>8.2}",
-                engines,
-                inter_ms,
-                rep.throughput_tasks_per_s(),
-                rep.latency_percentile(50.0),
-                rep.latency_percentile(95.0),
-                rep.em_rate()
-            );
-            rows.push(
-                JsonBuilder::new()
-                    .num("engines", engines as f64)
-                    .num("interarrival_ms", inter_ms)
-                    .num("throughput", rep.throughput_tasks_per_s())
-                    .num("p50_ms", rep.latency_percentile(50.0))
-                    .num("p95_ms", rep.latency_percentile(95.0))
-                    .num("em", rep.em_rate())
-                    .build(),
-            );
+        for &workers in &[1usize, 2] {
+            for &inter_ms in &[800.0f64, 300.0] {
+                let mut sc = SystemConfig::default();
+                sc.federation.participants = 3;
+                sc.serving.engines = engines;
+                sc.serving.workers = workers;
+                let mut ccfg = CoordinatorConfig::from_system(&sc);
+                ccfg.time_scale = 4.0;
+                let coord = Coordinator::new(engine.clone(), ccfg);
+                let trace = WorkloadTrace::generate(&TraceConfig {
+                    seed: 99,
+                    n_tasks: 20,
+                    mean_interarrival_ms: inter_ms,
+                    ..Default::default()
+                });
+                let before = engine.stats.view();
+                let rep = coord.serve_trace(&trace)?;
+                let after = engine.stats.view();
+                let up_bytes = after.bytes_uploaded - before.bytes_uploaded;
+                let saved_bytes = after.upload_bytes_saved - before.upload_bytes_saved;
+                let tokens: usize =
+                    rep.results.iter().map(|r| r.generated_tokens).sum();
+                let tokens_per_s = tokens as f64 / (rep.makespan_ms / 1e3).max(1e-9);
+                println!(
+                    "{:>8} {:>8} {:>12.0} {:>10.2} {:>10.2} {:>10.1} {:>10.1} {:>8.2} {:>12.2} {:>12.2}",
+                    engines,
+                    workers,
+                    inter_ms,
+                    rep.throughput_tasks_per_s(),
+                    tokens_per_s,
+                    rep.latency_percentile(50.0),
+                    rep.latency_percentile(95.0),
+                    rep.em_rate(),
+                    up_bytes as f64 / 1e6,
+                    saved_bytes as f64 / 1e6,
+                );
+                rows.push(
+                    JsonBuilder::new()
+                        .num("engines", engines as f64)
+                        .num("workers", workers as f64)
+                        .num("interarrival_ms", inter_ms)
+                        .num("throughput", rep.throughput_tasks_per_s())
+                        .num("tokens_per_s", tokens_per_s)
+                        .num("p50_ms", rep.latency_percentile(50.0))
+                        .num("p95_ms", rep.latency_percentile(95.0))
+                        .num("em", rep.em_rate())
+                        .num("bytes_uploaded", up_bytes as f64)
+                        .num("upload_bytes_saved", saved_bytes as f64)
+                        .build(),
+                );
+            }
         }
     }
+    let stats = engine.stats.view();
+    let report = JsonBuilder::new()
+        .set("points", Json::Arr(rows.clone()))
+        .num("total_bytes_uploaded", stats.bytes_uploaded as f64)
+        .num("total_upload_bytes_saved", stats.upload_bytes_saved as f64)
+        .num("weight_bytes_uploaded", stats.weight_bytes_uploaded as f64)
+        .num("executions", stats.executions as f64)
+        .build();
     write_json("serving_throughput", Json::Arr(rows));
+    write_bench_json("serving", report);
     Ok(())
 }

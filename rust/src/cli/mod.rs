@@ -101,6 +101,14 @@ pub fn parse_kv_policy(args: &Args) -> anyhow::Result<Option<KvExchangePolicy>> 
     Ok(Some(policy))
 }
 
+/// Per-session participant-parallelism width from `--workers`, floored at
+/// 1 (an accidental `--workers 0` means sequential, not an empty pool).
+/// Shared by `main.rs` and future frontends so every entry point clamps
+/// identically.
+pub fn parse_workers(args: &Args, default: usize) -> usize {
+    args.usize_or("workers", default).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +139,14 @@ mod tests {
         let a = parse(&[]);
         assert_eq!(a.positional(0), None);
         assert_eq!(a.f64_or("ratio", 0.5), 0.5);
+    }
+
+    #[test]
+    fn workers_parse_and_floor() {
+        assert_eq!(parse_workers(&parse(&[]), 1), 1);
+        assert_eq!(parse_workers(&parse(&[]), 4), 4);
+        assert_eq!(parse_workers(&parse(&["--workers", "8"]), 1), 8);
+        assert_eq!(parse_workers(&parse(&["--workers", "0"]), 4), 1);
     }
 
     #[test]

@@ -82,11 +82,16 @@ pub struct ServingConfig {
     pub engines: usize,
     /// Bounded queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Per-session participant-parallelism width (`--workers`): the
+    /// per-participant prefill/decode loops run on a pool of this many
+    /// threads.  1 = sequential; parallel sessions are byte-identical to
+    /// sequential ones.
+    pub workers: usize,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        Self { engines: 1, queue_depth: 64 }
+        Self { engines: 1, queue_depth: 64, workers: 1 }
     }
 }
 
@@ -170,6 +175,7 @@ impl SystemConfig {
 
         c.serving.engines = doc.usize_or("serving.engines", 1);
         c.serving.queue_depth = doc.usize_or("serving.queue_depth", 64);
+        c.serving.workers = doc.usize_or("serving.workers", 1).max(1);
         Ok(c)
     }
 
@@ -209,6 +215,7 @@ mod tests {
             latency_ms = 10.0
             [serving]
             engines = 2
+            workers = 3
         "#,
         )
         .unwrap();
@@ -219,6 +226,16 @@ mod tests {
         assert_eq!(c.federation.kv_policy, KvExchangePolicy::Random { ratio: 0.5 });
         assert_eq!(c.network.topology, Topology::Mesh);
         assert_eq!(c.serving.engines, 2);
+        assert_eq!(c.serving.workers, 3);
+    }
+
+    #[test]
+    fn workers_default_and_floor() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(SystemConfig::from_toml(&doc).unwrap().serving.workers, 1);
+        // 0 is clamped to sequential rather than an empty pool.
+        let doc = TomlDoc::parse("[serving]\nworkers = 0").unwrap();
+        assert_eq!(SystemConfig::from_toml(&doc).unwrap().serving.workers, 1);
     }
 
     #[test]

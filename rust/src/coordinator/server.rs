@@ -26,6 +26,9 @@ use crate::util::stats::{percentile, Summary};
 pub struct CoordinatorConfig {
     pub engines: usize,
     pub queue_depth: usize,
+    /// Per-session participant-parallelism width (1 = sequential); the
+    /// session's per-participant loops run on a pool of this many threads.
+    pub workers: usize,
     pub participants: usize,
     pub sync_h: usize,
     pub segmentation: Segmentation,
@@ -48,6 +51,7 @@ impl CoordinatorConfig {
         Self {
             engines: sc.serving.engines,
             queue_depth: sc.serving.queue_depth,
+            workers: sc.serving.workers,
             participants: sc.federation.participants,
             sync_h: sc.federation.sync_h,
             segmentation: sc.federation.segmentation,
@@ -200,11 +204,17 @@ impl<T> TaskQueue<T> {
 pub struct Coordinator {
     engine: Engine,
     cfg: CoordinatorConfig,
+    /// One participant-parallelism pool shared by every served session
+    /// (spawning/joining `workers` OS threads per task would dominate
+    /// short tasks); `None` when `workers <= 1`.
+    session_pool: Option<Arc<crate::exec::Pool>>,
 }
 
 impl Coordinator {
     pub fn new(engine: Engine, cfg: CoordinatorConfig) -> Self {
-        Self { engine, cfg }
+        let session_pool =
+            (cfg.workers > 1).then(|| Arc::new(crate::exec::Pool::new(cfg.workers)));
+        Self { engine, cfg, session_pool }
     }
 
     pub fn engine(&self) -> &Engine {
@@ -222,6 +232,9 @@ impl Coordinator {
         scfg.kv_policy = cfg.kv_policy;
         scfg.max_new_tokens = cfg.max_new_tokens;
         scfg.seed = task_seed;
+        // The session borrows the coordinator's shared pool below; keep
+        // workers = 1 so FedSession::new doesn't spawn a throwaway one.
+        scfg.workers = 1;
         let links = self.cfg.links();
         anyhow::ensure!(
             links.len() == cfg.participants,
@@ -244,7 +257,10 @@ impl Coordinator {
         }
         let net = NetSim::new(cfg.topology, links, task_seed);
         let t0 = Instant::now();
-        let session = FedSession::new(&self.engine, &part, scfg, net)?;
+        let mut session = FedSession::new(&self.engine, &part, scfg, net)?;
+        if let Some(pool) = &self.session_pool {
+            session = session.with_shared_pool(Arc::clone(pool));
+        }
         let rep = session.run()?;
         let service_ms = t0.elapsed().as_secs_f64() * 1e3;
         Ok(TaskResult {

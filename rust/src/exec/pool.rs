@@ -17,8 +17,13 @@ pub struct ScopeError {
 }
 
 /// A fixed pool of worker threads consuming from one shared queue.
+///
+/// `Sync` regardless of toolchain (the submission side is behind a
+/// `Mutex`), so one pool can be shared across serving workers via
+/// `Arc<Pool>`; concurrent `scope_map` calls interleave safely — each
+/// call collects its results on its own channel.
 pub struct Pool {
-    tx: Option<Sender<Task>>,
+    tx: Option<Mutex<Sender<Task>>>,
     workers: Vec<JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
 }
@@ -52,7 +57,7 @@ impl Pool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers, in_flight }
+        Self { tx: Some(Mutex::new(tx)), workers, in_flight }
     }
 
     /// Pool sized to the machine (min 1; this image exposes 1 core).
@@ -66,6 +71,8 @@ impl Pool {
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(f))
             .expect("worker channel closed");
     }
@@ -171,6 +178,29 @@ mod tests {
     fn empty_scope() {
         let pool = Pool::new(1);
         assert!(pool.scope_map(0, |i| i).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        // The coordinator shares one pool across serving workers via
+        // Arc<Pool>; pin the auto-traits that relies on.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Pool>();
+    }
+
+    #[test]
+    fn concurrent_scope_maps_do_not_cross_results() {
+        let pool = Arc::new(Pool::new(3));
+        let handles: Vec<_> = (0..4)
+            .map(|base: usize| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || pool.scope_map(20, move |i| base * 100 + i))
+            })
+            .collect();
+        for (base, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap().unwrap();
+            assert_eq!(out, (0..20).map(|i| base * 100 + i).collect::<Vec<_>>());
+        }
     }
 
     #[test]

@@ -74,6 +74,14 @@ pub fn decode_mask(c: usize, row_visible: &[bool]) -> HostTensor {
     m
 }
 
+/// Flip one column of a `[1, c]` decode mask to visible, in place — the
+/// O(1) incremental counterpart of rebuilding [`decode_mask`] after a
+/// cache append (the session keeps one mask per block cache and flips
+/// only the newly appended column).
+pub fn decode_mask_set_visible(mask: &mut HostTensor, col: usize) {
+    mask.data_mut()[col] = 0.0;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +148,29 @@ mod tests {
     fn decode_mask_flags() {
         let m = decode_mask(5, &[true, false, true]);
         assert_eq!(m.data(), &[0.0, NEG_MASK, 0.0, NEG_MASK, NEG_MASK]);
+    }
+
+    #[test]
+    fn incremental_decode_mask_matches_fresh_build() {
+        // Start empty, append visibility flags one at a time via the
+        // incremental flip; the mask must equal the fresh build at every
+        // intermediate state.
+        propcheck(40, |rng| {
+            let c = 1 + rng.below(24) as usize;
+            let mut visible = vec![false; c];
+            let mut m = HostTensor::full(&[1, c], NEG_MASK);
+            let appended = rng.below(c as u64 + 1) as usize;
+            for j in 0..appended {
+                let vis = rng.bernoulli(0.7);
+                visible[j] = vis;
+                if vis {
+                    decode_mask_set_visible(&mut m, j);
+                }
+                if m != decode_mask(c, &visible) {
+                    return Err(format!("mask drift after append {j} of {appended}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

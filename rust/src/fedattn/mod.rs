@@ -22,7 +22,7 @@ pub mod session;
 pub mod sparse;
 
 pub use kv::{GlobalKv, KvRowMeta};
-pub use masks::{global_mask, local_mask};
+pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};
 pub use session::{FedSession, PrefillOutput, SessionConfig, SessionReport};

@@ -1,17 +1,41 @@
 //! One collaborative-inference task: the federated prefill (Alg. 1) and the
 //! publisher's autoregressive decode over the per-block KV caches (§IV-C).
+//!
+//! Device-resident execution (paper §VI computation/communication
+//! co-design):
+//!
+//! * At every sync block the packed global KV is uploaded to the device
+//!   **once** and all attendees attend over the shared handles
+//!   ([`Engine::attn_ffn_dev`]); upload bytes per round no longer scale
+//!   with the attendee count.
+//! * At decode time each block cache is **frozen** on the device after
+//!   prefill ([`BlockCache::freeze_device`]): the `[C]` K/V buffers and
+//!   the `[1, C]` visibility mask ship once, and each token step uploads
+//!   only the small `[R]` decode tail — O(1) bytes per step in `C`.
+//!   Falls back to full-cache uploads when the artifact set has no
+//!   decode-tail variants.
+//! * The per-participant loops (local blocks, QKV projection, attendee
+//!   attention, multi-participant decode) run on an [`exec::Pool`] when
+//!   `SessionConfig::workers > 1`.  Results are collected in participant
+//!   order and all host-side reductions stay sequential, so a parallel
+//!   session is byte-identical to the sequential one.
+//!
+//! [`exec::Pool`]: crate::exec::Pool
 
-use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
 
 use crate::data::Partition;
+use crate::exec::Pool;
 use crate::fedattn::kv::GlobalKv;
-use crate::fedattn::masks::{decode_mask, global_mask, local_mask};
+use crate::fedattn::masks::{decode_mask_set_visible, global_mask, local_mask};
 use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
 use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
 use crate::net::{NetReport, NetSim};
 use crate::runtime::Engine;
-use crate::tensor::HostTensor;
+use crate::tensor::{DeviceTensor, HostTensor, NEG_MASK};
 use crate::tokenizer;
 use crate::util::prng::Xoshiro256ss;
 
@@ -35,6 +59,14 @@ pub struct SessionConfig {
     /// [`KvExchangePolicy::ByteBudget`] with no explicit allocation the
     /// session derives one from the network simulator's link specs.
     pub kv_row_budgets: Option<Vec<usize>>,
+    /// Thread-pool width for the per-participant loops (1 = sequential).
+    /// Parallel sessions are byte-identical to sequential ones (ordered
+    /// result collection + sequential host-side reductions).
+    pub workers: usize,
+    /// Freeze decode caches on the device and ship only the decode tail
+    /// per token step.  Ignored (with a host-path fallback) when the
+    /// artifact set predates decode-tail variants.
+    pub device_decode: bool,
 }
 
 impl SessionConfig {
@@ -48,21 +80,43 @@ impl SessionConfig {
             record_hidden: false,
             decode_all: false,
             kv_row_budgets: None,
+            workers: 1,
+            device_decode: true,
         }
     }
 }
 
-/// Per-participant mutable state during prefill.
+/// Per-participant mutable state during prefill.  The per-layer tensors
+/// are `Arc`'d so the parallel loops can borrow them from `'static` pool
+/// closures without copying.
 struct PState {
     /// Global positions of the kept tokens (after local sparsity).
     pos: Vec<i32>,
     /// Padded positions array (`l_pad` long; padding repeats the last pos).
-    pos_pad: Vec<i32>,
+    pos_pad: Arc<Vec<i32>>,
     valid: usize,
     /// Hidden states `[l_pad, d]`.
-    x: HostTensor,
+    x: Arc<HostTensor>,
     /// Cached local causal mask (reused across local blocks).
-    lmask: HostTensor,
+    lmask: Arc<HostTensor>,
+}
+
+/// The frozen device half of a [`BlockCache`]: the prefill-time cache and
+/// its visibility mask live on the device (uploaded once), while rows
+/// appended during decode accumulate in a small host-side tail that is
+/// re-uploaded per step.
+struct DevCache {
+    k: DeviceTensor,
+    v: DeviceTensor,
+    mask: DeviceTensor,
+    /// Cache rows at freeze time; later appends land in the tail.
+    base_len: usize,
+    /// `[R, Hkv, hd]` decode-appended rows (zero-padded; occupancy is
+    /// encoded by `tail_mask`).
+    k_tail: HostTensor,
+    v_tail: HostTensor,
+    /// `[1, R]` tail visibility mask.
+    tail_mask: HostTensor,
 }
 
 /// The publisher's KV cache for one block, sized to the decode-cache
@@ -74,6 +128,11 @@ struct BlockCache {
     visible: Vec<bool>,
     /// Next free row.
     len: usize,
+    /// Incremental `[1, C]` decode mask, kept in lockstep with `visible`
+    /// (only the newly appended columns flip on `push_rows`).
+    dmask: HostTensor,
+    /// Device-frozen prefix + growing tail (device-resident decode).
+    dev: Option<DevCache>,
 }
 
 impl BlockCache {
@@ -83,6 +142,8 @@ impl BlockCache {
             v: HostTensor::zeros(&[c, kv_heads, head_dim]),
             visible: vec![false; c],
             len: 0,
+            dmask: HostTensor::full(&[1, c], NEG_MASK),
+            dev: None,
         }
     }
 
@@ -92,7 +153,53 @@ impl BlockCache {
         self.k.copy_rows_from(k, 0..rows, self.len);
         self.v.copy_rows_from(v, 0..rows, self.len);
         self.visible[self.len..self.len + rows].copy_from_slice(&visible[..rows]);
+        for (i, &vis) in visible[..rows].iter().enumerate() {
+            if vis {
+                decode_mask_set_visible(&mut self.dmask, self.len + i);
+            }
+        }
+        // The device prefix is frozen: post-freeze rows go to the tail.  A
+        // full tail (e.g. repeated decodes on one participant) drops the
+        // frozen prefix — the host cache is always complete, so the
+        // session falls back to full-cache uploads (or re-freezes a fresh
+        // prefix at the next decode) instead of failing.
+        let len = self.len;
+        let tail_full = self
+            .dev
+            .as_ref()
+            .is_some_and(|dev| len + rows - dev.base_len > dev.k_tail.shape()[0]);
+        if tail_full {
+            self.dev = None;
+        } else if let Some(dev) = self.dev.as_mut() {
+            for i in 0..rows {
+                let t = len + i - dev.base_len;
+                dev.k_tail.copy_rows_from(k, i..i + 1, t);
+                dev.v_tail.copy_rows_from(v, i..i + 1, t);
+                if visible[i] {
+                    decode_mask_set_visible(&mut dev.tail_mask, t);
+                }
+            }
+        }
         self.len += rows;
+    }
+
+    /// Upload the cache (K, V, visibility mask) to the device once and
+    /// start routing appended rows into an `[R]` tail.  Idempotent.
+    fn freeze_device(&mut self, engine: &Engine, r: usize) -> Result<()> {
+        if self.dev.is_some() {
+            return Ok(());
+        }
+        let (hkv, hd) = (self.k.shape()[1], self.k.shape()[2]);
+        self.dev = Some(DevCache {
+            k: engine.upload(&self.k)?,
+            v: engine.upload(&self.v)?,
+            mask: engine.upload(&self.dmask)?,
+            base_len: self.len,
+            k_tail: HostTensor::zeros(&[r, hkv, hd]),
+            v_tail: HostTensor::zeros(&[r, hkv, hd]),
+            tail_mask: HostTensor::full(&[1, r], NEG_MASK),
+        });
+        Ok(())
     }
 }
 
@@ -123,6 +230,23 @@ pub struct SessionReport {
     pub positions: Vec<Vec<i32>>,
 }
 
+/// Run `f(0..n)` across the pool (ordered results) or inline when no pool
+/// is configured.  Errors are stringly-typed so closure results satisfy
+/// the pool's `Send + 'static` bound.
+fn run_parallel<T, F>(pool: Option<&Arc<Pool>>, n: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> Result<T, String> + Send + Sync + 'static,
+{
+    let outs: Vec<Result<T, String>> = match pool {
+        Some(pool) => pool
+            .scope_map(n, f)
+            .map_err(|e| anyhow::anyhow!("parallel section failed: {e}"))?,
+        None => (0..n).map(f).collect(),
+    };
+    outs.into_iter().map(|r| r.map_err(anyhow::Error::msg)).collect()
+}
+
 /// Drives one collaborative task through the engine.
 pub struct FedSession<'a> {
     engine: &'a Engine,
@@ -137,6 +261,8 @@ pub struct FedSession<'a> {
     total_len: usize,
     /// Per-row attention-mass accumulator (only for relevance policies).
     relevance: Option<RelevanceTracker>,
+    /// Worker pool for the per-participant loops (`workers > 1`).
+    pool: Option<Arc<Pool>>,
 }
 
 impl<'a> FedSession<'a> {
@@ -176,7 +302,13 @@ impl<'a> FedSession<'a> {
             x.copy_rows_from(&emb, 0..ids.len(), 0);
             let valid = ids.len();
             let lmask = local_mask(&pos_pad, valid);
-            parts.push(PState { pos, pos_pad, valid, x, lmask });
+            parts.push(PState {
+                pos,
+                pos_pad: Arc::new(pos_pad),
+                valid,
+                x: Arc::new(x),
+                lmask: Arc::new(lmask),
+            });
         }
 
         let c = engine.manifest.decode_cache;
@@ -199,6 +331,7 @@ impl<'a> FedSession<'a> {
         let relevance = cfg.kv_policy.needs_relevance().then(|| {
             RelevanceTracker::new(&parts.iter().map(|s| s.valid).collect::<Vec<_>>())
         });
+        let pool = (cfg.workers > 1).then(|| Arc::new(Pool::new(cfg.workers)));
 
         Ok(Self {
             engine,
@@ -210,6 +343,7 @@ impl<'a> FedSession<'a> {
             publisher,
             total_len: partition.len(),
             relevance,
+            pool,
         })
     }
 
@@ -242,12 +376,22 @@ impl<'a> FedSession<'a> {
             let any = attend.iter().any(|&b| b);
 
             if !any {
-                // Phase I only: every participant runs a fused local block.
-                for p in 0..n {
-                    let st = &mut self.parts[p];
-                    let (xo, k, v) =
-                        self.engine.block_fused(m, &st.x, &st.pos_pad, &st.lmask)?;
-                    st.x = xo;
+                // Phase I only: every participant runs a fused local block
+                // (pool-parallel; ordered collection keeps determinism).
+                let inputs: Vec<_> = self
+                    .parts
+                    .iter()
+                    .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
+                    .collect();
+                let engine = self.engine.clone();
+                let outs = run_parallel(self.pool.as_ref(), n, move |p| {
+                    let (x, pos, lmask) = &inputs[p];
+                    engine
+                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
+                        .map_err(|e| format!("{e:#}"))
+                })?;
+                for (p, (xo, k, v)) in outs.into_iter().enumerate() {
+                    self.parts[p].x = Arc::new(xo);
                     if !self.caches[p].is_empty() {
                         let valid = self.parts[p].valid;
                         let vis = vec![true; valid];
@@ -258,25 +402,38 @@ impl<'a> FedSession<'a> {
             }
 
             // Sync block: everyone produces (q,)k,v; attendees do global
-            // attention over the aggregated KV.
-            let mut qs: Vec<Option<HostTensor>> = (0..n).map(|_| None).collect();
-            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
-            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
-            for p in 0..n {
-                let st = &self.parts[p];
-                if attend[p] {
-                    let (q, k, v) = self.engine.qkv_project(m, &st.x, &st.pos_pad)?;
-                    qs[p] = Some(q);
-                    ks.push(k);
-                    vs.push(v);
+            // attention over the aggregated KV.  Phase 1 is pool-parallel.
+            let inputs: Vec<_> = self
+                .parts
+                .iter()
+                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
+                .collect();
+            let attend_in = Arc::new(attend.clone());
+            let engine = self.engine.clone();
+            let phase1 = run_parallel(self.pool.as_ref(), n, move |p| {
+                let (x, pos, lmask) = &inputs[p];
+                if attend_in[p] {
+                    engine
+                        .qkv_project(m, x.as_ref(), pos.as_slice())
+                        .map(|(q, k, v)| (Some(q), k, v, None))
                 } else {
                     // Non-attendee: plain local block; its fresh K/V are
                     // what it would transmit to attendees.
-                    let (xo, k, v) =
-                        self.engine.block_fused(m, &st.x, &st.pos_pad, &st.lmask)?;
-                    ks.push(k);
-                    vs.push(v);
-                    self.parts[p].x = xo;
+                    engine
+                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
+                        .map(|(xo, k, v)| (None, k, v, Some(xo)))
+                }
+                .map_err(|e| format!("{e:#}"))
+            })?;
+            let mut qs: Vec<Option<HostTensor>> = Vec::with_capacity(n);
+            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
+            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
+            for (p, (q, k, v, xo)) in phase1.into_iter().enumerate() {
+                qs.push(q);
+                ks.push(k);
+                vs.push(v);
+                if let Some(xo) = xo {
+                    self.parts[p].x = Arc::new(xo);
                 }
             }
 
@@ -323,37 +480,67 @@ impl<'a> FedSession<'a> {
                 tx_rows.iter().map(|&r| r as u64 * row_bytes).collect();
             self.net.exchange_round(&tx_bytes, &attend);
 
-            // Global attention + FFN for attendees (Eq. 21 + 19).  When a
-            // relevance policy is active, also accumulate the column
-            // marginals of every attendee's attention (row-sum of the
-            // attention weights) for the tracker.
-            let mut round_mass: Option<Vec<f64>> =
-                self.relevance.as_ref().map(|_| vec![0.0; gkv.rows()]);
-            for p in 0..n {
-                if !attend[p] {
-                    continue;
+            // Upload the packed global KV to the device ONCE per sync
+            // round; every attendee's attention shares the handles (the
+            // buffers are immutable, so read-only sharing holds by
+            // construction).
+            let gk_dev = self.engine.upload(&gkv.k)?;
+            let gv_dev = self.engine.upload(&gkv.v)?;
+
+            // Global attention + FFN for attendees (Eq. 21 + 19),
+            // pool-parallel.  When a relevance policy is active, each
+            // attendee also computes the column marginals of its attention
+            // (row-sum of the attention weights) inside its task; the
+            // accumulation below stays sequential in participant order so
+            // the result is bit-identical to a sequential session.
+            let gkv = Arc::new(gkv);
+            let qs = Arc::new(qs);
+            let kv_meta = Arc::new((kv_pos, kv_owner, kv_tx));
+            let pinputs: Vec<_> = self
+                .parts
+                .iter()
+                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), st.valid))
+                .collect();
+            let attend_in = Arc::new(attend.clone());
+            let track_mass = self.relevance.is_some();
+            let engine = self.engine.clone();
+            let rows = gkv.rows();
+            let gkv_in = Arc::clone(&gkv);
+            type AttnOut = Option<(HostTensor, Option<Vec<f64>>)>;
+            let outs: Vec<AttnOut> = run_parallel(self.pool.as_ref(), n, move |p| {
+                if !attend_in[p] {
+                    return Ok(None);
                 }
-                let st = &self.parts[p];
-                let q = qs[p].take().context("missing q for attendee")?;
+                let (x, pos_pad, valid) = &pinputs[p];
+                let q = qs[p].as_ref().ok_or("missing q for attendee")?;
+                let (kv_pos, kv_owner, kv_tx) = &*kv_meta;
                 let mask = global_mask(
-                    &st.pos_pad,
-                    st.valid,
+                    pos_pad.as_slice(),
+                    *valid,
                     g_pad,
-                    &kv_pos,
-                    &kv_owner,
-                    &kv_tx,
-                    gkv.rows(),
+                    kv_pos,
+                    kv_owner,
+                    kv_tx,
+                    rows,
                     p,
                 );
-                if let Some(acc) = round_mass.as_mut() {
-                    let mass =
-                        relevance::attention_mass(&q, &gkv.k, &mask, st.valid, gkv.rows());
+                let mass = track_mass
+                    .then(|| relevance::attention_mass(q, &gkv_in.k, &mask, *valid, rows));
+                let xo = engine
+                    .attn_ffn_dev(m, x.as_ref(), q, &gk_dev, &gv_dev, &mask)
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok(Some((xo, mass)))
+            })?;
+            let mut round_mass: Option<Vec<f64>> =
+                self.relevance.as_ref().map(|_| vec![0.0; gkv.rows()]);
+            for (p, out) in outs.into_iter().enumerate() {
+                let Some((xo, mass)) = out else { continue };
+                if let (Some(acc), Some(mass)) = (round_mass.as_mut(), mass) {
                     for (a, x) in acc.iter_mut().zip(&mass) {
                         *a += x;
                     }
                 }
-                let xo = self.engine.attn_ffn(m, &st.x, &q, &gkv.k, &gkv.v, &mask)?;
-                self.parts[p].x = xo;
+                self.parts[p].x = Arc::new(xo);
             }
             if let (Some(tr), Some(acc)) = (self.relevance.as_mut(), round_mass) {
                 tr.observe(&gkv.meta, &acc);
@@ -395,7 +582,7 @@ impl<'a> FedSession<'a> {
             .map(|st| {
                 if self.cfg.record_hidden {
                     let mut h = HostTensor::zeros(&[st.valid, st.x.shape()[1]]);
-                    h.copy_rows_from(&st.x, 0..st.valid, 0);
+                    h.copy_rows_from(st.x.as_ref(), 0..st.valid, 0);
                     Some(h)
                 } else {
                     None
@@ -404,45 +591,32 @@ impl<'a> FedSession<'a> {
             .collect()
     }
 
+    /// The publisher's final prompt hidden state `[1, d]` for participant
+    /// `p` (decode kick-off).
+    fn last_hidden(&self, p: usize) -> HostTensor {
+        let last_row = self.parts[p].valid - 1;
+        let d = self.engine.manifest.model.d_model;
+        let mut h = HostTensor::zeros(&[1, d]);
+        h.copy_rows_from(self.parts[p].x.as_ref(), last_row..last_row + 1, 0);
+        h
+    }
+
     /// Greedy decode from participant `p`'s KV caches (requires that `p`
     /// kept caches).  Returns the decoded text and token count.
     pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
         anyhow::ensure!(!self.caches[p].is_empty(), "participant {p} has no caches");
-        let md = self.engine.manifest.model.clone();
-        let c = self.engine.manifest.decode_cache;
-
-        // Kick-off logits from the participant's final prompt token.
-        let last_row = self.parts[p].valid - 1;
-        let mut h_last = HostTensor::zeros(&[1, md.d_model]);
-        h_last.copy_rows_from(&self.parts[p].x, last_row..last_row + 1, 0);
-        let mut logits = self.engine.logits(&h_last)?;
-
-        let mut out_ids: Vec<i32> = Vec::new();
-        for step in 0..self.cfg.max_new_tokens {
-            let next = argmax(&logits);
-            if next == tokenizer::EOS {
-                break;
-            }
-            out_ids.push(next);
-            if step + 1 == self.cfg.max_new_tokens {
-                break;
-            }
-            // One decode pass to produce logits for the following token.
-            let pos = (self.total_len + step) as i32;
-            let mut x = self.engine.embed(&[next])?;
-            for m in 0..md.n_layers {
-                let cache = &self.caches[p][m];
-                let mask = decode_mask(c, &cache.visible);
-                let (xo, kn, vn) =
-                    self.engine
-                        .decode_block(m, &x, pos, &cache.k, &cache.v, &mask)?;
-                x = xo;
-                let cache = &mut self.caches[p][m];
-                cache.push_rows(&kn, &vn, 1, &[true]);
-            }
-            logits = self.engine.logits(&x)?;
-        }
-        Ok((tokenizer::decode(&out_ids), out_ids.len()))
+        let h_last = self.last_hidden(p);
+        let mut caches = std::mem::take(&mut self.caches[p]);
+        let res = decode_from_caches(
+            self.engine,
+            &mut caches,
+            &h_last,
+            self.total_len,
+            self.cfg.max_new_tokens,
+            self.cfg.device_decode,
+        );
+        self.caches[p] = caches;
+        res
     }
 
     /// Decode the task publisher.
@@ -450,19 +624,45 @@ impl<'a> FedSession<'a> {
         self.decode_participant(self.publisher)
     }
 
-    /// Prefill + decode, returning the full report.
+    /// Prefill + decode, returning the full report.  With `decode_all`
+    /// and `workers > 1` the per-participant decodes run pool-parallel
+    /// (each participant's caches are independent).
     pub fn run(mut self) -> Result<SessionReport> {
         let pre = self.prefill()?;
         let t0 = std::time::Instant::now();
         let n = self.parts.len();
+        let decoders: Vec<usize> =
+            (0..n).filter(|&p| !self.caches[p].is_empty()).collect();
+
+        // Move each decoding participant's caches + kick-off hidden state
+        // into a slot the (shared) pool closure can take exactly once.
+        let slots: Vec<Mutex<Option<(Vec<BlockCache>, HostTensor)>>> = decoders
+            .iter()
+            .map(|&p| {
+                let caches = std::mem::take(&mut self.caches[p]);
+                Mutex::new(Some((caches, self.last_hidden(p))))
+            })
+            .collect();
+        let slots = Arc::new(slots);
+        let engine = self.engine.clone();
+        let (total_len, max_new, device_decode) =
+            (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
+        let slots_in = Arc::clone(&slots);
+        let decoded: Vec<(String, usize)> =
+            run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
+                let (mut caches, h_last) = slots_in[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or("decode slot taken twice")?;
+                decode_from_caches(&engine, &mut caches, &h_last, total_len, max_new, device_decode)
+                    .map_err(|e| format!("{e:#}"))
+            })?;
+
         let mut answers: Vec<Option<String>> = vec![None; n];
         let mut generated = 0usize;
         let mut answer = String::new();
-        for p in 0..n {
-            if self.caches[p].is_empty() {
-                continue;
-            }
-            let (text, tokens) = self.decode_participant(p)?;
+        for (&p, (text, tokens)) in decoders.iter().zip(decoded) {
             if p == self.publisher {
                 answer = text.clone();
                 generated = tokens;
@@ -485,6 +685,98 @@ impl<'a> FedSession<'a> {
     pub fn run_prefill_only(mut self) -> Result<PrefillOutput> {
         self.prefill()
     }
+
+    /// Attach a shared worker pool (e.g. the coordinator's, reused across
+    /// tasks) instead of the session-owned one `workers > 1` would spawn.
+    /// Pass `workers = 1` in the config when using this to avoid creating
+    /// a throwaway pool in [`FedSession::new`].
+    pub fn with_shared_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+}
+
+/// Greedy decode over one participant's per-layer caches.
+///
+/// When `device_decode` is set and the artifact set has a decode-tail
+/// variant wide enough for the horizon, each cache is frozen on the
+/// device first and every step uploads only the `[R]` tail (O(1) bytes
+/// per step in the cache capacity); otherwise the host path uploads the
+/// full cache per layer per step, as before.
+fn decode_from_caches(
+    engine: &Engine,
+    caches: &mut [BlockCache],
+    h_last: &HostTensor,
+    total_len: usize,
+    max_new_tokens: usize,
+    device_decode: bool,
+) -> Result<(String, usize)> {
+    // A step appends at most one row per layer, and the final step never
+    // appends: at most max_new_tokens - 1 tail rows per decode.
+    let steps = max_new_tokens.saturating_sub(1);
+    let tail_r = (device_decode && steps > 0)
+        .then(|| engine.manifest.pick_decode_tail(steps))
+        .flatten();
+    // Freeze lazily, right before the first real decode pass — a decode
+    // that terminates on its kick-off logits (immediate EOS) uploads
+    // nothing at all, same as the host path.
+    let mut frozen = false;
+
+    // Kick-off logits from the participant's final prompt token.
+    let mut logits = engine.logits(h_last)?;
+    let mut out_ids: Vec<i32> = Vec::new();
+    for step in 0..max_new_tokens {
+        let next = argmax(&logits);
+        if next == tokenizer::EOS {
+            break;
+        }
+        out_ids.push(next);
+        if step + 1 == max_new_tokens {
+            break;
+        }
+        if let (Some(r), false) = (tail_r, frozen) {
+            for cache in caches.iter_mut() {
+                // A previous decode may have part-filled this cache's
+                // tail; when the remaining capacity can't fit this
+                // horizon, drop the stale prefix so freeze_device
+                // re-uploads a fresh one (current cache state, empty
+                // tail).
+                let len = cache.len;
+                let stale = cache
+                    .dev
+                    .as_ref()
+                    .is_some_and(|dev| len - dev.base_len + steps > dev.k_tail.shape()[0]);
+                if stale {
+                    cache.dev = None;
+                }
+                cache.freeze_device(engine, r)?;
+            }
+            frozen = true;
+        }
+        // One decode pass to produce logits for the following token.
+        let pos = (total_len + step) as i32;
+        let mut x = engine.embed(&[next])?;
+        for (m, cache) in caches.iter_mut().enumerate() {
+            let (xo, kn, vn) = match cache.dev.as_ref() {
+                Some(dev) => engine.decode_block_tail(
+                    m,
+                    &x,
+                    pos,
+                    &dev.k,
+                    &dev.v,
+                    &dev.mask,
+                    &dev.k_tail,
+                    &dev.v_tail,
+                    &dev.tail_mask,
+                )?,
+                None => engine.decode_block(m, &x, pos, &cache.k, &cache.v, &cache.dmask)?,
+            };
+            x = xo;
+            cache.push_rows(&kn, &vn, 1, &[true]);
+        }
+        logits = engine.logits(&x)?;
+    }
+    Ok((tokenizer::decode(&out_ids), out_ids.len()))
 }
 
 fn argmax(xs: &[f32]) -> i32 {
@@ -500,6 +792,7 @@ fn argmax(xs: &[f32]) -> i32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fedattn::masks::decode_mask;
 
     #[test]
     fn argmax_picks_largest() {
@@ -526,5 +819,37 @@ mod tests {
         let k = HostTensor::new(&[2, 1, 2], vec![0.0; 4]).unwrap();
         c.push_rows(&k, &k.clone(), 2, &[true, true]);
         c.push_rows(&k, &k.clone(), 1, &[true]);
+    }
+
+    #[test]
+    fn block_cache_incremental_mask_matches_fresh_build() {
+        // The per-cache [1, C] mask flips only the newly appended columns
+        // on push_rows; it must equal a from-scratch decode_mask build at
+        // every state.
+        let mut c = BlockCache::new(6, 1, 2);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
+        c.push_rows(&k, &k.clone(), 2, &[true, false]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        c.push_rows(&k, &k.clone(), 2, &[false, true]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        c.push_rows(&k, &k.clone(), 1, &[true]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+    }
+
+    #[test]
+    fn run_parallel_matches_sequential_and_reports_errors() {
+        let pool = Arc::new(Pool::new(3));
+        let seq = run_parallel(None, 8, |i| Ok::<usize, String>(i * i)).unwrap();
+        let par = run_parallel(Some(&pool), 8, |i| Ok::<usize, String>(i * i)).unwrap();
+        assert_eq!(seq, par);
+        let err = run_parallel(Some(&pool), 4, |i| {
+            if i == 2 {
+                Err("boom".to_string())
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(err.is_err());
     }
 }

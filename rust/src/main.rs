@@ -76,7 +76,10 @@ fn print_help() {
            --kv-bytes <b>             total bytes per sync round for byte-budget\n\
            --local-ratio <r>          sparse local-attention keep ratio\n\
            --tasks <n>, --seed <s>    workload size / determinism\n\
-           --engines <n>              serving worker threads"
+           --engines <n>              serving worker threads\n\
+           --workers <n>              per-session participant parallelism\n\
+                                      (pool width; 1 = sequential, results\n\
+                                      are byte-identical either way)"
     );
 }
 
@@ -109,6 +112,7 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
+    sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
     Ok(sc)
 }
 

@@ -14,6 +14,10 @@ pub enum ArtifactKind {
     QkvProject,
     AttnFfn,
     DecodeBlock,
+    /// Decode over a frozen device-resident cache `[C]` plus a small
+    /// growing tail `[R]` (device-resident execution; uploads O(R) per
+    /// step instead of O(C)).
+    DecodeTail,
     Logits,
     Embed,
 }
@@ -25,6 +29,7 @@ impl ArtifactKind {
             "qkv_project" => Self::QkvProject,
             "attn_ffn" => Self::AttnFfn,
             "decode_block" => Self::DecodeBlock,
+            "decode_tail" => Self::DecodeTail,
             "logits" => Self::Logits,
             "embed" => Self::Embed,
             other => bail!("unknown artifact kind {other:?}"),
@@ -72,6 +77,9 @@ pub struct ArtifactEntry {
     pub l: Option<usize>,
     pub g: Option<usize>,
     pub c: Option<usize>,
+    /// Decode-tail capacity (rows appended during decode) for
+    /// [`ArtifactKind::DecodeTail`] entries.
+    pub r: Option<usize>,
     /// Input names in call order (weights included).
     pub inputs: Vec<String>,
     pub outputs: Vec<String>,
@@ -84,6 +92,10 @@ pub struct Manifest {
     pub l_variants: Vec<usize>,
     pub g_variants: Vec<usize>,
     pub decode_cache: usize,
+    /// Decode-tail variants (empty for artifact sets exported before the
+    /// device-resident decode path existed — the runtime falls back to
+    /// full-cache uploads).
+    pub decode_tail_variants: Vec<usize>,
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -155,6 +167,7 @@ impl Manifest {
                 l: e.get("l").and_then(Json::as_usize),
                 g: e.get("g").and_then(Json::as_usize),
                 c: e.get("c").and_then(Json::as_usize),
+                r: e.get("r").and_then(Json::as_usize),
                 inputs,
                 outputs,
             });
@@ -165,6 +178,12 @@ impl Manifest {
             l_variants: arr_usize("l_variants")?,
             g_variants: arr_usize("g_variants")?,
             decode_cache: aot.get("decode_cache").and_then(Json::as_usize).unwrap_or(0),
+            // Absent in pre-device-resident manifests: default to none.
+            decode_tail_variants: aot
+                .get("decode_tail")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
             entries,
         })
     }
@@ -187,6 +206,13 @@ impl Manifest {
             .filter(|&g| g >= len)
             .min()
             .with_context(|| format!("no G variant fits {len} KV rows (max {:?})", self.g_variants.iter().max()))
+    }
+
+    /// Smallest decode-tail variant with room for `len` appended rows;
+    /// `None` when the artifact set predates the device-resident decode
+    /// path (callers fall back to full-cache uploads).
+    pub fn pick_decode_tail(&self, len: usize) -> Option<usize> {
+        self.decode_tail_variants.iter().copied().filter(|&r| r >= len).min()
     }
 
     pub fn find(&self, kind: ArtifactKind, l: Option<usize>, g: Option<usize>) -> Result<&ArtifactEntry> {
@@ -236,6 +262,26 @@ mod tests {
         assert_eq!(m.pick_l(33).unwrap(), 64);
         assert!(m.pick_l(65).is_err());
         assert_eq!(m.pick_g(100).unwrap(), 128);
+    }
+
+    #[test]
+    fn decode_tail_variants_optional() {
+        // SAMPLE predates decode_tail: no variants, pick falls back to None.
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert!(m.decode_tail_variants.is_empty());
+        assert_eq!(m.pick_decode_tail(8), None);
+
+        let with_tail = SAMPLE.replace(
+            "\"decode_cache\":448,",
+            "\"decode_cache\":448,\"decode_tail\":[16,32],",
+        );
+        let j = Json::parse(&with_tail).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.decode_tail_variants, vec![16, 32]);
+        assert_eq!(m.pick_decode_tail(8), Some(16));
+        assert_eq!(m.pick_decode_tail(17), Some(32));
+        assert_eq!(m.pick_decode_tail(33), None);
     }
 
     #[test]

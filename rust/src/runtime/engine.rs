@@ -5,6 +5,11 @@
 //!   `HloModuleProto::from_text_file` and compiled lazily per variant.
 //! * Weights are uploaded to the device **once** and every call passes
 //!   device buffers (`execute_b`), so the hot path only uploads activations.
+//! * Device-resident activations: hot-path entry points accept
+//!   [`DeviceTensor`] handles for their large, reused inputs (the packed
+//!   global KV at sync blocks, the frozen decode caches), so one upload
+//!   serves many executions.  `EngineStats.upload_bytes_saved` measures
+//!   exactly the bytes those handles avoided re-uploading.
 //! * Thread safety: the PJRT CPU client is thread-safe (XLA guarantees
 //!   thread-safe `Compile`/`Execute`); Rust-side maps are guarded by locks.
 
@@ -16,25 +21,76 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::model::{ArtifactKind, Manifest, Weights};
-use crate::tensor::HostTensor;
+use crate::tensor::{DeviceTensor, HostTensor};
 
 /// Cumulative engine counters (perf accounting).
+///
+/// Byte counters:
+/// * `bytes_uploaded` — activation bytes shipped host→device on the
+///   request path (inputs to `execute_b`, including explicit
+///   [`Engine::upload`] calls).  Weight uploads are **not** included.
+/// * `weight_bytes_uploaded` — one-time weight-literal uploads (first use
+///   per weight; cached afterwards).
+/// * `upload_bytes_saved` — bytes a call did *not* upload because the
+///   caller passed an already-resident [`DeviceTensor`] handle instead of
+///   host data; counted **per call** consuming the handle.  Net savings
+///   vs an all-host-path engine are therefore `upload_bytes_saved` minus
+///   the one explicit upload each handle cost (already in
+///   `bytes_uploaded`) — with `a` consumers per handle, the host-only
+///   engine would ship `a×`, this one ships `1×`.
+///
+/// Per-entry-point execution counters (`exec_*`) split `executions` by
+/// lowered artifact family, so benches can report dispatch mixes.
 #[derive(Debug, Default)]
 pub struct EngineStats {
     pub executions: AtomicU64,
     pub compiles: AtomicU64,
     pub bytes_uploaded: AtomicU64,
+    pub weight_bytes_uploaded: AtomicU64,
+    pub upload_bytes_saved: AtomicU64,
     pub exec_nanos: AtomicU64,
+    pub exec_block_fused: AtomicU64,
+    pub exec_qkv_project: AtomicU64,
+    pub exec_attn_ffn: AtomicU64,
+    pub exec_decode_block: AtomicU64,
+    pub exec_decode_tail: AtomicU64,
+    pub exec_logits: AtomicU64,
+}
+
+/// Plain-value copy of [`EngineStats`] at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineStatsView {
+    pub executions: u64,
+    pub compiles: u64,
+    pub bytes_uploaded: u64,
+    pub weight_bytes_uploaded: u64,
+    pub upload_bytes_saved: u64,
+    pub exec_seconds: f64,
+    pub exec_block_fused: u64,
+    pub exec_qkv_project: u64,
+    pub exec_attn_ffn: u64,
+    pub exec_decode_block: u64,
+    pub exec_decode_tail: u64,
+    pub exec_logits: u64,
 }
 
 impl EngineStats {
-    pub fn snapshot(&self) -> (u64, u64, u64, f64) {
-        (
-            self.executions.load(Ordering::Relaxed),
-            self.compiles.load(Ordering::Relaxed),
-            self.bytes_uploaded.load(Ordering::Relaxed),
-            self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-        )
+    /// Full counter snapshot (all fields, plain values).
+    pub fn view(&self) -> EngineStatsView {
+        EngineStatsView {
+            executions: self.executions.load(Ordering::Relaxed),
+            compiles: self.compiles.load(Ordering::Relaxed),
+            bytes_uploaded: self.bytes_uploaded.load(Ordering::Relaxed),
+            weight_bytes_uploaded: self.weight_bytes_uploaded.load(Ordering::Relaxed),
+            upload_bytes_saved: self.upload_bytes_saved.load(Ordering::Relaxed),
+            exec_seconds: self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            exec_block_fused: self.exec_block_fused.load(Ordering::Relaxed),
+            exec_qkv_project: self.exec_qkv_project.load(Ordering::Relaxed),
+            exec_attn_ffn: self.exec_attn_ffn.load(Ordering::Relaxed),
+            exec_decode_block: self.exec_decode_block.load(Ordering::Relaxed),
+            exec_decode_tail: self.exec_decode_tail.load(Ordering::Relaxed),
+            exec_logits: self.exec_logits.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -88,6 +144,12 @@ impl Engine {
     }
 
     /// Compile (or fetch the cached) executable for an artifact.
+    ///
+    /// Double-checked: the (slow) XLA compile runs *outside* the cache
+    /// lock so concurrent calls for other artifacts never stall behind
+    /// it; if two threads race on the same cold artifact, the loser's
+    /// compile is dropped and only the retained one is counted, so
+    /// `stats.compiles` stays exact under `workers > 1`.
     fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.inner.exes.lock().unwrap().get(name) {
             return Ok(Arc::clone(exe));
@@ -106,14 +168,13 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
-        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
         let exe = Arc::new(exe);
-        self.inner
-            .exes
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&exe));
-        Ok(exe)
+        let mut exes = self.inner.exes.lock().unwrap();
+        let kept = exes.entry(name.to_string()).or_insert_with(|| {
+            self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+            Arc::clone(&exe)
+        });
+        Ok(Arc::clone(kept))
     }
 
     /// Eagerly compile every artifact needed for a session with the given
@@ -128,7 +189,9 @@ impl Engine {
                     e.l.map(|l| ls.contains(&l)).unwrap_or(false)
                         && e.g.map(|g| gs.contains(&g)).unwrap_or(false)
                 }
-                ArtifactKind::DecodeBlock | ArtifactKind::Logits => true,
+                ArtifactKind::DecodeBlock
+                | ArtifactKind::DecodeTail
+                | ArtifactKind::Logits => true,
             };
             if want {
                 self.executable(&e.name)?;
@@ -138,37 +201,52 @@ impl Engine {
     }
 
     /// Device buffer for a named weight (uploaded once, then cached).
+    /// Same double-checked shape as [`Engine::executable`]: the upload
+    /// runs outside the lock; a raced duplicate is dropped and only the
+    /// retained buffer is counted, keeping `weight_bytes_uploaded` the
+    /// true one-time weight footprint (all weights are f32).
     fn weight_buf(&self, name: &str) -> Result<Arc<xla::PjRtBuffer>> {
         if let Some(b) = self.inner.wbufs.lock().unwrap().get(name) {
             return Ok(Arc::clone(b));
         }
         let lit = self.weights.get(name)?;
-        let buf = self
-            .inner
-            .client
-            .buffer_from_host_literal(None, lit)
-            .with_context(|| format!("uploading weight {name}"))?;
-        let buf = Arc::new(buf);
-        self.inner
-            .wbufs
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&buf));
-        Ok(buf)
+        let buf = Arc::new(
+            self.inner
+                .client
+                .buffer_from_host_literal(None, lit)
+                .with_context(|| format!("uploading weight {name}"))?,
+        );
+        let mut wbufs = self.inner.wbufs.lock().unwrap();
+        let kept = wbufs.entry(name.to_string()).or_insert_with(|| {
+            self.stats
+                .weight_bytes_uploaded
+                .fetch_add(4 * lit.element_count() as u64, Ordering::Relaxed);
+            Arc::clone(&buf)
+        });
+        Ok(Arc::clone(kept))
     }
 
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Arc<xla::PjRtBuffer>> {
         self.stats
             .bytes_uploaded
             .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
-        Ok(self.inner.client.buffer_from_host_buffer(data, dims, None)?)
+        Ok(Arc::new(self.inner.client.buffer_from_host_buffer(data, dims, None)?))
     }
 
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Arc<xla::PjRtBuffer>> {
         self.stats
             .bytes_uploaded
             .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
-        Ok(self.inner.client.buffer_from_host_buffer(data, dims, None)?)
+        Ok(Arc::new(self.inner.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    /// Upload a host tensor and return a shareable device handle.  The
+    /// upload is counted in `stats.bytes_uploaded`; every subsequent call
+    /// that passes the handle instead of host data counts the avoided
+    /// re-upload in `stats.upload_bytes_saved`.
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let buf = self.upload_f32(t.data(), t.shape())?;
+        Ok(DeviceTensor::from_parts(buf, t.shape().to_vec()))
     }
 
     /// Run `name` with activation buffers + per-layer weight buffers; the
@@ -176,12 +254,11 @@ impl Engine {
     fn run(
         &self,
         name: &str,
-        activations: Vec<xla::PjRtBuffer>,
+        activations: Vec<Arc<xla::PjRtBuffer>>,
         weight_names: &[String],
     ) -> Result<Vec<HostTensor>> {
         let exe = self.executable(name)?;
-        let mut args: Vec<Arc<xla::PjRtBuffer>> =
-            activations.into_iter().map(Arc::new).collect();
+        let mut args = activations;
         for w in weight_names {
             args.push(self.weight_buf(w)?);
         }
@@ -229,6 +306,7 @@ impl Engine {
             self.upload_f32(mask.data(), mask.shape())?,
         ];
         let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        self.stats.exec_block_fused.fetch_add(1, Ordering::Relaxed);
         anyhow::ensure!(out.len() == 3, "block_fused returns 3 tensors");
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
@@ -251,6 +329,7 @@ impl Engine {
         ];
         let wnames: Vec<String> = crate::model::weights_proj_names(layer);
         let mut out = self.run(&name, acts, &wnames)?;
+        self.stats.exec_qkv_project.fetch_add(1, Ordering::Relaxed);
         anyhow::ensure!(out.len() == 3, "qkv_project returns 3 tensors");
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
@@ -259,6 +338,9 @@ impl Engine {
     }
 
     /// Local Q over (global) KV + FFN (sync-block phase 2, Eq. 20–21).
+    ///
+    /// Uploads K/V for this one call; when several attendees share the
+    /// same global KV, upload once and use [`Engine::attn_ffn_dev`].
     pub fn attn_ffn(
         &self,
         layer: usize,
@@ -268,23 +350,59 @@ impl Engine {
         v: &HostTensor,
         mask: &HostTensor,
     ) -> Result<HostTensor> {
+        let kd = self.upload(k)?;
+        let vd = self.upload(v)?;
+        self.attn_ffn_exec(layer, x, q, &kd, &vd, mask)
+    }
+
+    /// [`Engine::attn_ffn`] over an already-device-resident global KV.
+    /// The shared buffers must be treated as read-only across attendees
+    /// (PJRT buffers are immutable, so this holds by construction); the
+    /// avoided K/V re-upload is counted in `stats.upload_bytes_saved`.
+    pub fn attn_ffn_dev(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        q: &HostTensor,
+        k: &DeviceTensor,
+        v: &DeviceTensor,
+        mask: &HostTensor,
+    ) -> Result<HostTensor> {
+        self.stats
+            .upload_bytes_saved
+            .fetch_add(k.byte_len() + v.byte_len(), Ordering::Relaxed);
+        self.attn_ffn_exec(layer, x, q, k, v, mask)
+    }
+
+    fn attn_ffn_exec(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        q: &HostTensor,
+        k: &DeviceTensor,
+        v: &DeviceTensor,
+        mask: &HostTensor,
+    ) -> Result<HostTensor> {
         let l = x.shape()[0];
         let g = k.shape()[0];
         let name = format!("attn_ffn_L{l}_G{g}");
         let acts = vec![
             self.upload_f32(x.data(), x.shape())?,
             self.upload_f32(q.data(), q.shape())?,
-            self.upload_f32(k.data(), k.shape())?,
-            self.upload_f32(v.data(), v.shape())?,
+            k.buffer(),
+            v.buffer(),
             self.upload_f32(mask.data(), mask.shape())?,
         ];
         let wnames: Vec<String> = crate::model::weights_attn_names(layer);
         let mut out = self.run(&name, acts, &wnames)?;
+        self.stats.exec_attn_ffn.fetch_add(1, Ordering::Relaxed);
         anyhow::ensure!(out.len() == 1, "attn_ffn returns 1 tensor");
         Ok(out.pop().unwrap())
     }
 
-    /// One decode block over a padded KV cache (paper §IV-C).
+    /// One decode block over a padded KV cache (paper §IV-C).  Uploads the
+    /// full `[C]` cache per call; prefer [`Engine::decode_block_tail`]
+    /// when the artifact set provides decode-tail variants.
     pub fn decode_block(
         &self,
         layer: usize,
@@ -304,7 +422,53 @@ impl Engine {
             self.upload_f32(mask.data(), mask.shape())?,
         ];
         let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        self.stats.exec_decode_block.fetch_add(1, Ordering::Relaxed);
         anyhow::ensure!(out.len() == 3, "decode_block returns 3 tensors");
+        let vn = out.pop().unwrap();
+        let kn = out.pop().unwrap();
+        let xo = out.pop().unwrap();
+        Ok((xo, kn, vn))
+    }
+
+    /// Decode over a *frozen* device-resident cache plus a small growing
+    /// tail: attends over `concat(cache, tail)` with visibility
+    /// `concat(cache_mask, tail_mask)`.  The `[C]` cache and its `[1,C]`
+    /// mask are device handles uploaded once after prefill; each step only
+    /// uploads the `[R]` tail — O(1) bytes per step in `C`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_block_tail(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        pos: i32,
+        k_cache: &DeviceTensor,
+        v_cache: &DeviceTensor,
+        cache_mask: &DeviceTensor,
+        k_tail: &HostTensor,
+        v_tail: &HostTensor,
+        tail_mask: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = self.manifest.decode_cache;
+        let r = k_tail.shape()[0];
+        anyhow::ensure!(k_cache.shape()[0] == c, "decode cache capacity mismatch");
+        let name = format!("decode_tail_C{c}_R{r}");
+        self.stats.upload_bytes_saved.fetch_add(
+            k_cache.byte_len() + v_cache.byte_len() + cache_mask.byte_len(),
+            Ordering::Relaxed,
+        );
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_i32(&[pos], &[1])?,
+            k_cache.buffer(),
+            v_cache.buffer(),
+            cache_mask.buffer(),
+            self.upload_f32(k_tail.data(), k_tail.shape())?,
+            self.upload_f32(v_tail.data(), v_tail.shape())?,
+            self.upload_f32(tail_mask.data(), tail_mask.shape())?,
+        ];
+        let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        self.stats.exec_decode_tail.fetch_add(1, Ordering::Relaxed);
+        anyhow::ensure!(out.len() == 3, "decode_tail returns 3 tensors");
         let vn = out.pop().unwrap();
         let kn = out.pop().unwrap();
         let xo = out.pop().unwrap();
@@ -315,7 +479,11 @@ impl Engine {
     pub fn logits(&self, x: &HostTensor) -> Result<Vec<f32>> {
         let acts = vec![self.upload_f32(x.data(), x.shape())?];
         let wnames = vec!["ln_f".to_string(), "w_out".to_string()];
-        let out = self.run("logits", acts, &wnames)?;
-        Ok(out[0].data().to_vec())
+        let mut out = self.run("logits", acts, &wnames)?;
+        self.stats.exec_logits.fetch_add(1, Ordering::Relaxed);
+        anyhow::ensure!(out.len() == 1, "logits returns 1 tensor");
+        // `into_data` hands back the tensor's own backing Vec — no second
+        // full-vocab copy per decode token.
+        Ok(out.pop().unwrap().into_data())
     }
 }

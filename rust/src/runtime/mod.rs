@@ -6,4 +6,4 @@
 
 mod engine;
 
-pub use engine::{Engine, EngineStats};
+pub use engine::{Engine, EngineStats, EngineStatsView};

@@ -4,5 +4,7 @@
 //! hidden states, K/V buffers and additive masks that it scatters/gathers
 //! between participants.  All heavy math lives in the AOT HLO artifacts.
 
+mod device;
 mod host;
+pub use device::DeviceTensor;
 pub use host::{i32_literal, HostTensor, TensorError, NEG_MASK};

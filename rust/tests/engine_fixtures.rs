@@ -103,6 +103,39 @@ fn decode_block_matches_jax() {
 }
 
 #[test]
+fn decode_block_tail_matches_jax() {
+    let Some(dir) = artifacts() else { return };
+    let fx = Fx::load(&dir);
+    if !fx.map.contains_key("dt.x_out") {
+        eprintln!("SKIP: decode-tail fixtures absent (re-run `make artifacts`)");
+        return;
+    }
+    let engine = fixture_engine(&dir);
+    // The frozen half rides as device handles (uploaded once).
+    let kc = engine.upload(&fx.tensor("dec.kc")).unwrap();
+    let vc = engine.upload(&fx.tensor("dec.vc")).unwrap();
+    let mc = engine.upload(&fx.tensor("dec.mask")).unwrap();
+    let x = fx.tensor("dec.x");
+    let pos = fx.i32s("dec.pos")[0];
+    let (xo, kn, vn) = engine
+        .decode_block_tail(
+            0,
+            &x,
+            pos,
+            &kc,
+            &vc,
+            &mc,
+            &fx.tensor("dt.k_tail"),
+            &fx.tensor("dt.v_tail"),
+            &fx.tensor("dt.mask_tail"),
+        )
+        .unwrap();
+    assert_close(&xo, &fx.tensor("dt.x_out"), 1e-4, "decode_tail x_out");
+    assert_close(&kn, &fx.tensor("dt.k_new"), 1e-4, "decode_tail k_new");
+    assert_close(&vn, &fx.tensor("dt.v_new"), 1e-4, "decode_tail v_new");
+}
+
+#[test]
 fn full_fedattn_prefill_matches_python_reference() {
     // The big one: the Rust coordinator (schedules, masks, packing,
     // positions) must reproduce the pure-JAX FedAttn simulator on the same

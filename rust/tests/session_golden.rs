@@ -34,8 +34,16 @@ fn golden_path() -> PathBuf {
 }
 
 /// One deterministic session fingerprint: integer byte counts and the
-/// decoded answer only (no floats, no timings).
-fn fingerprint(engine: &Engine, name: &str, policy: KvExchangePolicy) -> Json {
+/// decoded answers only (no floats, no timings).  `workers > 1` runs the
+/// per-participant loops on the session pool; `decode_all` decodes every
+/// participant so the fingerprint covers all answer streams.
+fn fingerprint_with(
+    engine: &Engine,
+    name: &str,
+    policy: KvExchangePolicy,
+    workers: usize,
+    decode_all: bool,
+) -> Json {
     let md = engine.manifest.model.clone();
     let n = 3usize;
     let mut rng = SplitMix64::new(31);
@@ -44,9 +52,16 @@ fn fingerprint(engine: &Engine, name: &str, policy: KvExchangePolicy) -> Json {
     let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
     cfg.kv_policy = policy;
     cfg.seed = 11;
+    cfg.workers = workers;
+    cfg.decode_all = decode_all;
     let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
     let rep = FedSession::new(engine, &part, cfg, net).unwrap().run().unwrap();
-    JsonBuilder::new()
+    let answers: Vec<String> = rep
+        .answers
+        .iter()
+        .map(|a| a.clone().unwrap_or_default())
+        .collect();
+    let mut b = JsonBuilder::new()
         .str("policy", name)
         .str("answer", &rep.answer)
         .num("generated_tokens", rep.generated_tokens as f64)
@@ -62,8 +77,18 @@ fn fingerprint(engine: &Engine, name: &str, policy: KvExchangePolicy) -> Json {
         .arr_num(
             "round_bytes",
             &rep.net.round_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
-        )
-        .build()
+        );
+    if decode_all {
+        b = b.set(
+            "answers",
+            Json::Arr(answers.iter().map(|a| Json::Str(a.clone())).collect()),
+        );
+    }
+    b.build()
+}
+
+fn fingerprint(engine: &Engine, name: &str, policy: KvExchangePolicy) -> Json {
+    fingerprint_with(engine, name, policy, 1, false)
 }
 
 #[test]
@@ -106,4 +131,28 @@ fn session_deterministic_and_matches_golden() {
         "session fingerprint drifted from {path:?}; if the change is \
          intentional, regenerate with FEDATTN_UPDATE_GOLDEN=1"
     );
+}
+
+/// A `workers > 1` session must be byte-identical to the sequential one —
+/// answers (all participants, via `decode_all`), comm report, and the
+/// relevance-driven transmission byte counts (the `top-k-relevance`
+/// fingerprint's tx/round bytes are a function of the accumulated
+/// relevance scores, so score drift would surface here).
+#[test]
+fn parallel_session_is_byte_identical_to_sequential() {
+    let Some(engine) = engine() else { return };
+    let policies = [
+        ("full", KvExchangePolicy::Full),
+        ("random", KvExchangePolicy::Random { ratio: 0.5 }),
+        ("top-k-relevance", KvExchangePolicy::TopKRelevance { budget_rows: 8 }),
+    ];
+    for (name, policy) in policies {
+        let seq = fingerprint_with(&engine, name, policy, 1, true);
+        let par = fingerprint_with(&engine, name, policy, 4, true);
+        assert_eq!(
+            seq.to_string_compact(),
+            par.to_string_compact(),
+            "workers=4 session diverged from sequential under {name}"
+        );
+    }
 }
