@@ -44,6 +44,8 @@ pub struct PointCfg {
     pub schedule: SyncSchedule,
     pub kv_policy: KvExchangePolicy,
     pub local_ratio: f64,
+    /// Per-node attendance dropout probability (0.0 = off).
+    pub dropout_prob: f64,
     pub decode_all: bool,
     pub episodes: usize,
     pub seed: u64,
@@ -59,6 +61,7 @@ impl PointCfg {
             schedule,
             kv_policy: KvExchangePolicy::Full,
             local_ratio: 1.0,
+            dropout_prob: 0.0,
             decode_all: false,
             episodes: episodes_per_point(),
             seed: 1234,
@@ -103,6 +106,7 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         let mut scfg = SessionConfig::new(cfg.schedule.clone());
         scfg.kv_policy = cfg.kv_policy;
         scfg.local_sparsity = LocalSparsity { ratio: cfg.local_ratio };
+        scfg.dropout_prob = cfg.dropout_prob;
         scfg.decode_all = cfg.decode_all;
         scfg.seed = cfg.seed ^ (e as u64).wrapping_mul(0x9E37);
         let net = NetSim::uniform(Topology::Star, cfg.n, cfg.link, scfg.seed);

@@ -1,5 +1,7 @@
 //! Fig. 8 — response quality under varying synchronization intervals for
-//! the task publisher (others fixed at H = M).
+//! the task publisher (others fixed at H = M), plus a per-node attendance
+//! dropout sweep (the participant-protocol dropout knob): how quality and
+//! comm degrade as scheduled attendances are randomly dropped.
 //!
 //! The adaptive-KV-aggregation result: increasing the *critical*
 //! participant's sync frequency monotonically improves its response
@@ -49,6 +51,30 @@ fn main() -> Result<()> {
             ));
         }
     }
+    // Dropout sweep: uniform H = 2 for everyone, then drop each scheduled
+    // attendance with probability p.  Comm bytes shrink with p (fewer
+    // exchange rounds reach anyone) while publisher EM degrades — the
+    // federated-inference dropout/straggler scenario as a schedule input.
+    println!("\n== per-node attendance dropout sweep (uniform H = 2, N = {n}) ==");
+    println!(
+        "{:>8} {:>10} {:>14} {:>10}",
+        "dropout", "EM (pub)", "tx/participant", "comm ms"
+    );
+    for &p_drop in &[0.0f64, 0.1, 0.25, 0.5] {
+        let mut cfg =
+            PointCfg::new(n, Segmentation::SemQEx, SyncSchedule::uniform(m, n, 2));
+        cfg.dropout_prob = p_drop;
+        let r = run_point(&engine, &cfg)?;
+        println!(
+            "{:>8.2} {:>10.3} {:>14} {:>10.2}",
+            p_drop,
+            r.em_publisher,
+            fmt_bytes(r.avg_tx_bytes),
+            r.comm_time_ms
+        );
+        rows.push(point_json(&format!("dropout:{p_drop}"), p_drop, &r));
+    }
+
     write_json("fig8_publisher_sync", Json::Arr(rows));
     Ok(())
 }

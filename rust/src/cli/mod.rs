@@ -109,6 +109,35 @@ pub fn parse_workers(args: &Args, default: usize) -> usize {
     args.usize_or("workers", default).max(1)
 }
 
+/// Per-node attendance dropout probability from `--dropout`.  Returns
+/// `Ok(None)` when absent so callers keep their config default; values
+/// outside `[0, 1]` (or unparsable ones) are errors, not silent
+/// fallbacks — a typo'd dropout would otherwise corrupt an experiment.
+pub fn parse_dropout(args: &Args) -> anyhow::Result<Option<f64>> {
+    let Some(raw) = args.opt("dropout") else {
+        return Ok(None);
+    };
+    let p: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--dropout expects a number, got {raw:?}"))?;
+    anyhow::ensure!((0.0..=1.0).contains(&p), "--dropout must be in [0, 1], got {p}");
+    Ok(Some(p))
+}
+
+/// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
+/// when absent (callers fall back to TOML `serving.time_scale`, then
+/// their own default); non-positive or unparsable values are errors.
+pub fn parse_time_scale(args: &Args) -> anyhow::Result<Option<f64>> {
+    let Some(raw) = args.opt("time-scale") else {
+        return Ok(None);
+    };
+    let ts: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--time-scale expects a number, got {raw:?}"))?;
+    anyhow::ensure!(ts > 0.0, "--time-scale must be > 0, got {ts}");
+    Ok(Some(ts))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +176,27 @@ mod tests {
         assert_eq!(parse_workers(&parse(&[]), 4), 4);
         assert_eq!(parse_workers(&parse(&["--workers", "8"]), 1), 8);
         assert_eq!(parse_workers(&parse(&["--workers", "0"]), 4), 1);
+    }
+
+    #[test]
+    fn dropout_parse_and_range() {
+        assert_eq!(parse_dropout(&parse(&[])).unwrap(), None);
+        assert_eq!(parse_dropout(&parse(&["--dropout", "0.3"])).unwrap(), Some(0.3));
+        assert_eq!(parse_dropout(&parse(&["--dropout=1.0"])).unwrap(), Some(1.0));
+        assert!(parse_dropout(&parse(&["--dropout", "1.5"])).is_err());
+        assert!(parse_dropout(&parse(&["--dropout", "-0.2"])).is_err());
+        assert!(parse_dropout(&parse(&["--dropout", "often"])).is_err());
+    }
+
+    #[test]
+    fn time_scale_parse_and_range() {
+        assert_eq!(parse_time_scale(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_time_scale(&parse(&["--time-scale", "25"])).unwrap(),
+            Some(25.0)
+        );
+        assert!(parse_time_scale(&parse(&["--time-scale", "0"])).is_err());
+        assert!(parse_time_scale(&parse(&["--time-scale", "fast"])).is_err());
     }
 
     #[test]

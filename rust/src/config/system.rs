@@ -23,6 +23,11 @@ pub struct FederationConfig {
     /// KV-exchange policy (Fig. 10 / §V Obs. 4).
     pub kv_policy: KvExchangePolicy,
     pub max_new_tokens: usize,
+    /// Per-node, per-round attendance dropout probability (`--dropout` /
+    /// `federation.dropout_prob`): each scheduled attendance is dropped
+    /// independently with this probability.  0.0 (the default) disables
+    /// dropout and is byte-identical to the knob not existing.
+    pub dropout_prob: f64,
 }
 
 impl Default for FederationConfig {
@@ -34,6 +39,7 @@ impl Default for FederationConfig {
             local_sparsity: 1.0,
             kv_policy: KvExchangePolicy::Full,
             max_new_tokens: 12,
+            dropout_prob: 0.0,
         }
     }
 }
@@ -87,11 +93,17 @@ pub struct ServingConfig {
     /// threads.  1 = sequential; parallel sessions are byte-identical to
     /// sequential ones.
     pub workers: usize,
+    /// Trace time-compression factor (`serving.time_scale` / CLI
+    /// `--time-scale`): inter-arrival gaps are divided by this before
+    /// replay.  `None` = not configured; consumers fall back to their own
+    /// default (1.0 for real-time replay, 10.0 for the `serve`
+    /// subcommand's historical behaviour).
+    pub time_scale: Option<f64>,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        Self { engines: 1, queue_depth: 64, workers: 1 }
+        Self { engines: 1, queue_depth: 64, workers: 1, time_scale: None }
     }
 }
 
@@ -153,6 +165,12 @@ impl SystemConfig {
             other => anyhow::bail!("unknown kv_policy {other:?}"),
         };
         f.max_new_tokens = doc.usize_or("federation.max_new_tokens", f.max_new_tokens);
+        f.dropout_prob = doc.f64_or("federation.dropout_prob", 0.0);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&f.dropout_prob),
+            "federation.dropout_prob must be in [0, 1], got {}",
+            f.dropout_prob
+        );
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
             Topology::Mesh
@@ -176,6 +194,14 @@ impl SystemConfig {
         c.serving.engines = doc.usize_or("serving.engines", 1);
         c.serving.queue_depth = doc.usize_or("serving.queue_depth", 64);
         c.serving.workers = doc.usize_or("serving.workers", 1).max(1);
+        if let Some(v) = doc.get("serving.time_scale") {
+            // Present but malformed/non-positive must fail loudly.
+            let ts = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("serving.time_scale must be a number")
+            })?;
+            anyhow::ensure!(ts > 0.0, "serving.time_scale must be > 0, got {ts}");
+            c.serving.time_scale = Some(ts);
+        }
         Ok(c)
     }
 
@@ -277,6 +303,36 @@ mod tests {
             c.federation.kv_policy,
             KvExchangePolicy::ByteBudget { bytes_per_round: 4096 }
         );
+    }
+
+    #[test]
+    fn dropout_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(SystemConfig::from_toml(&doc).unwrap().federation.dropout_prob, 0.0);
+        let doc = TomlDoc::parse("[federation]\ndropout_prob = 0.25").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.dropout_prob,
+            0.25
+        );
+        let doc = TomlDoc::parse("[federation]\ndropout_prob = 1.5").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[federation]\ndropout_prob = -0.1").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn time_scale_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(SystemConfig::from_toml(&doc).unwrap().serving.time_scale, None);
+        let doc = TomlDoc::parse("[serving]\ntime_scale = 25.0").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().serving.time_scale,
+            Some(25.0)
+        );
+        let doc = TomlDoc::parse("[serving]\ntime_scale = 0.0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[serving]\ntime_scale = \"fast\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
     }
 
     #[test]

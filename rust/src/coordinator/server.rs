@@ -35,6 +35,9 @@ pub struct CoordinatorConfig {
     pub local_sparsity: f64,
     pub kv_policy: KvExchangePolicy,
     pub max_new_tokens: usize,
+    /// Per-node attendance dropout probability applied to every served
+    /// session's schedule (0.0 = off).
+    pub dropout_prob: f64,
     pub topology: crate::net::Topology,
     pub link: crate::net::LinkSpec,
     /// Heterogeneous per-participant links; `None` = `participants` copies
@@ -58,6 +61,7 @@ impl CoordinatorConfig {
             local_sparsity: sc.federation.local_sparsity,
             kv_policy: sc.federation.kv_policy,
             max_new_tokens: sc.federation.max_new_tokens,
+            dropout_prob: sc.federation.dropout_prob,
             topology: sc.network.topology,
             link: sc.network.link,
             hetero_links: sc
@@ -66,7 +70,7 @@ impl CoordinatorConfig {
                 .is_some()
                 .then(|| sc.network.links(sc.federation.participants)),
             seed: sc.seed,
-            time_scale: 1.0,
+            time_scale: sc.serving.time_scale.unwrap_or(1.0),
         }
     }
 
@@ -116,6 +120,8 @@ impl ServeReport {
         self.results.len() as f64 / (self.makespan_ms / 1e3)
     }
 
+    /// Nearest-rank latency percentile; 0.0 for a zero-task report (never
+    /// NaN — these values land verbatim in BENCH JSON).
     pub fn latency_percentile(&self, p: f64) -> f64 {
         let xs: Vec<f64> = self.results.iter().map(|r| r.latency_ms).collect();
         percentile(&xs, p)
@@ -231,6 +237,7 @@ impl Coordinator {
         scfg.local_sparsity = LocalSparsity { ratio: cfg.local_sparsity };
         scfg.kv_policy = cfg.kv_policy;
         scfg.max_new_tokens = cfg.max_new_tokens;
+        scfg.dropout_prob = cfg.dropout_prob;
         scfg.seed = task_seed;
         // The session borrows the coordinator's shared pool below; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.
@@ -387,5 +394,19 @@ mod tests {
         assert!((rep.em_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert!((rep.throughput_tasks_per_s() - 3.0).abs() < 1e-12);
         assert_eq!(rep.latency_percentile(100.0), 30.0);
+    }
+
+    #[test]
+    fn empty_serve_report_emits_finite_stats() {
+        // A trace where every task failed (or an empty trace) must not
+        // push NaN/inf into BENCH JSON or panic in the percentile sort.
+        let rep = ServeReport { results: Vec::new(), makespan_ms: 0.0 };
+        assert_eq!(rep.em_rate(), 0.0);
+        assert_eq!(rep.throughput_tasks_per_s(), 0.0);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            let v = rep.latency_percentile(p);
+            assert!(v.is_finite(), "p{p} = {v}");
+            assert_eq!(v, 0.0);
+        }
     }
 }

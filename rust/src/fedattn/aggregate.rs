@@ -1,0 +1,207 @@
+//! Pluggable KV aggregation — the FedAvg analogue of the paper's duality.
+//!
+//! Federated optimization separates *what clients send* (deltas, possibly
+//! compressed) from *how the server merges them* (averaging, weighting).
+//! FedAttn has the same split (§V): an exchange policy decides which KV
+//! rows each participant transmits, and the aggregation step merges the
+//! contributions into the global KV every attendee attends over (Eq. 20).
+//! The [`Aggregator`] trait packages both halves as one policy object the
+//! session driver treats as opaque:
+//!
+//! * [`ConcatAggregator`] — positional concatenation with a blind
+//!   selection policy (`full` / `random` / `publisher-priority` /
+//!   `recent-budget`): the FedSGD-style baseline.
+//! * [`AdaptiveAggregator`] — relevance-weighted adaptive aggregation
+//!   (`top-k-relevance` / `byte-budget`, §V Obs. 4): selection is driven
+//!   by accumulated attention mass, and the packed rows carry their
+//!   relevance scores so downstream consumers can re-weight.
+//!
+//! Both merge by packed concatenation (attention is KV-permutation
+//! invariant once positions ride along — see [`GlobalKv::pack`]), so the
+//! trait's `aggregate` has a shared default; an implementation that
+//! actually re-weights or deduplicates rows overrides it.
+
+use anyhow::Result;
+
+use crate::fedattn::kv::GlobalKv;
+use crate::fedattn::sparse::{KvExchangePolicy, TxContext};
+use crate::util::prng::Xoshiro256ss;
+
+/// Per-participant inputs to [`Aggregator::aggregate`]: the participant's
+/// padded K/V tensors, global positions, valid row count, and transmitted
+/// flags — the same tuple [`GlobalKv::pack`] consumes.
+pub type PartRows<'a> = (
+    &'a crate::tensor::HostTensor,
+    &'a crate::tensor::HostTensor,
+    &'a [i32],
+    usize,
+    &'a [bool],
+);
+
+/// A KV aggregation policy: row selection + contribution merging.
+///
+/// Implementations must be deterministic given the RNG handed to
+/// [`Aggregator::select`] — the driver's golden fixtures pin aggregation
+/// output byte-for-byte across refactors.
+pub trait Aggregator: Send + Sync {
+    /// The exchange policy this aggregator applies.
+    fn policy(&self) -> KvExchangePolicy;
+
+    /// Stable display name (bench labels, logs).
+    fn name(&self) -> &'static str {
+        self.policy().as_str()
+    }
+
+    /// Whether the driver must track per-row attention mass for this
+    /// aggregator (adaptive aggregation).
+    fn needs_relevance(&self) -> bool {
+        self.policy().needs_relevance()
+    }
+
+    /// Which of a participant's rows are transmitted this round.  Never
+    /// empty for `ctx.len > 0` (the invariant every policy shares).
+    fn select(&self, ctx: &TxContext, rng: &mut Xoshiro256ss) -> Vec<bool> {
+        self.policy().transmitted_ctx(ctx, rng)
+    }
+
+    /// Merge the participants' rows into the padded global KV, stamping
+    /// relevance metadata when tracked.  The default is positional
+    /// concatenation — the paper's Π_n scatter in packed form.
+    fn aggregate(
+        &self,
+        parts: &[PartRows<'_>],
+        g_pad: usize,
+        relevance: Option<&[Vec<f64>]>,
+    ) -> Result<GlobalKv> {
+        let mut gkv = GlobalKv::pack(parts, g_pad)?;
+        if let Some(scores) = relevance {
+            gkv.attach_relevance(scores);
+        }
+        Ok(gkv)
+    }
+}
+
+/// Concatenating aggregation with a blind (relevance-free) selection
+/// policy — the federated-inference baseline.
+pub struct ConcatAggregator {
+    policy: KvExchangePolicy,
+}
+
+impl ConcatAggregator {
+    /// Rejects relevance-driven policies; those belong to
+    /// [`AdaptiveAggregator`].
+    pub fn new(policy: KvExchangePolicy) -> Result<Self> {
+        anyhow::ensure!(
+            !policy.needs_relevance(),
+            "{} is relevance-driven; use AdaptiveAggregator",
+            policy.as_str()
+        );
+        Ok(Self { policy })
+    }
+
+    /// The Alg. 1 baseline: transmit every row.
+    pub fn full() -> Self {
+        Self { policy: KvExchangePolicy::Full }
+    }
+}
+
+impl Aggregator for ConcatAggregator {
+    fn policy(&self) -> KvExchangePolicy {
+        self.policy
+    }
+}
+
+/// Relevance-weighted adaptive aggregation (§V Obs. 4): rows are selected
+/// by accumulated attention mass and carry their scores in the packed
+/// metadata.
+pub struct AdaptiveAggregator {
+    policy: KvExchangePolicy,
+}
+
+impl AdaptiveAggregator {
+    /// Rejects blind policies; those belong to [`ConcatAggregator`].
+    pub fn new(policy: KvExchangePolicy) -> Result<Self> {
+        anyhow::ensure!(
+            policy.needs_relevance(),
+            "{} is not relevance-driven; use ConcatAggregator",
+            policy.as_str()
+        );
+        Ok(Self { policy })
+    }
+}
+
+impl Aggregator for AdaptiveAggregator {
+    fn policy(&self) -> KvExchangePolicy {
+        self.policy
+    }
+}
+
+/// The aggregator implementing `policy` (the driver's factory).
+pub fn for_policy(policy: KvExchangePolicy) -> Box<dyn Aggregator> {
+    if policy.needs_relevance() {
+        Box::new(AdaptiveAggregator { policy })
+    } else {
+        Box::new(ConcatAggregator { policy })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::HostTensor;
+
+    #[test]
+    fn factory_maps_policies_to_kinds() {
+        for policy in [
+            KvExchangePolicy::Full,
+            KvExchangePolicy::Random { ratio: 0.5 },
+            KvExchangePolicy::PublisherPriority { remote_ratio: 0.5 },
+            KvExchangePolicy::RecentBudget { budget_rows: 4 },
+        ] {
+            let a = for_policy(policy);
+            assert!(!a.needs_relevance(), "{}", a.name());
+            assert!(ConcatAggregator::new(policy).is_ok());
+            assert!(AdaptiveAggregator::new(policy).is_err());
+        }
+        for policy in [
+            KvExchangePolicy::TopKRelevance { budget_rows: 4 },
+            KvExchangePolicy::ByteBudget { bytes_per_round: 1024 },
+        ] {
+            let a = for_policy(policy);
+            assert!(a.needs_relevance(), "{}", a.name());
+            assert!(AdaptiveAggregator::new(policy).is_ok());
+            assert!(ConcatAggregator::new(policy).is_err());
+        }
+    }
+
+    #[test]
+    fn select_matches_policy() {
+        // The trait's default selection must be the policy's own — the
+        // golden fixtures depend on this byte-for-byte.
+        let policy = KvExchangePolicy::Random { ratio: 0.4 };
+        let agg = for_policy(policy);
+        let ctx = TxContext::basic(0, 1, 12);
+        let mut r1 = Xoshiro256ss::new(9);
+        let mut r2 = Xoshiro256ss::new(9);
+        assert_eq!(agg.select(&ctx, &mut r1), policy.transmitted_ctx(&ctx, &mut r2));
+    }
+
+    #[test]
+    fn aggregate_is_pack_plus_relevance() {
+        let mut k = HostTensor::zeros(&[3, 1, 2]);
+        for i in 0..3 {
+            k.row_mut(i).fill(i as f32);
+        }
+        let v = k.clone();
+        let pos = [0, 1, 2];
+        let tx = [true, false, true];
+        let parts: Vec<PartRows> = vec![(&k, &v, &pos, 3, &tx)];
+        let agg = for_policy(KvExchangePolicy::TopKRelevance { budget_rows: 2 });
+        let scores = vec![vec![0.5, 1.5, 2.5]];
+        let g = agg.aggregate(&parts, 4, Some(&scores)).unwrap();
+        let mut want = GlobalKv::pack(&parts, 4).unwrap();
+        want.attach_relevance(&scores);
+        assert_eq!(g.k, want.k);
+        assert_eq!(g.meta, want.meta);
+    }
+}

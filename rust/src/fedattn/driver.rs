@@ -1,0 +1,737 @@
+//! The session driver: one collaborative-inference task run as a typed
+//! message-passing protocol over [`ParticipantNode`]s.
+//!
+//! The driver owns no participant state.  Each round (Transformer block)
+//! it:
+//!
+//! 1. asks the [`Aggregator`] which rows every node transmits,
+//! 2. collects each node's [`KvContribution`] (the uplink message whose
+//!    encoded payload size **is** the round's byte accounting, fed
+//!    straight into [`NetSim::exchange_round`]),
+//! 3. merges contributions into the global KV (Eq. 20) and lets every
+//!    attendee attend over the shared device upload,
+//! 4. hands the frame (or, off-round, each node's own KV) back to the
+//!    nodes for their decode caches.
+//!
+//! Attendance is a *schedule input*: per-node dropout
+//! ([`SessionConfig::dropout_prob`]) masks attendance before the first
+//! round, so a dropped node simply runs the local path — no special case
+//! in the round loop.  Device-resident execution (shared per-round KV
+//! uploads, frozen decode caches + `[R]` tails) and pool-parallel
+//! per-participant loops carry over from the pre-protocol session; a
+//! parallel session is byte-identical to a sequential one (ordered
+//! collection, sequential host-side reductions).
+//!
+//! [`NetSim::exchange_round`]: crate::net::NetSim::exchange_round
+//! [`Aggregator`]: crate::fedattn::aggregate::Aggregator
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::data::Partition;
+use crate::exec::Pool;
+use crate::fedattn::aggregate::{self, Aggregator, PartRows};
+use crate::fedattn::kv::GlobalKv;
+use crate::fedattn::masks::global_mask;
+use crate::fedattn::node::{BlockCache, Participant, ParticipantNode};
+use crate::fedattn::protocol::KvContribution;
+use crate::fedattn::relevance::{self, RelevanceTracker};
+use crate::fedattn::schedule::SyncSchedule;
+use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
+use crate::net::{NetReport, NetSim};
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::tokenizer;
+use crate::util::prng::Xoshiro256ss;
+
+/// Session knobs (one FedAttn task).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub schedule: SyncSchedule,
+    pub local_sparsity: LocalSparsity,
+    pub kv_policy: KvExchangePolicy,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// Collect every participant's final hidden states (error analysis /
+    /// divergence metrics; costs memory, off for serving).
+    pub record_hidden: bool,
+    /// Keep KV caches and decode a response for *every* participant (the
+    /// paper's Fig. 5 reports mean/min/max EM across participants).  The
+    /// default caches and decodes only the task publisher.
+    pub decode_all: bool,
+    /// Coordinator-allocated per-participant KV row budgets (heterogeneous
+    /// links); overrides the budget embedded in budgeted policies.  For
+    /// [`KvExchangePolicy::ByteBudget`] with no explicit allocation the
+    /// session derives one from the network simulator's link specs.
+    pub kv_row_budgets: Option<Vec<usize>>,
+    /// Thread-pool width for the per-participant loops (1 = sequential).
+    /// Parallel sessions are byte-identical to sequential ones (ordered
+    /// result collection + sequential host-side reductions).
+    pub workers: usize,
+    /// Freeze decode caches on the device and ship only the decode tail
+    /// per token step.  Ignored (with a host-path fallback) when the
+    /// artifact set predates decode-tail variants.
+    pub device_decode: bool,
+    /// Per-node, per-round attendance dropout probability in `[0, 1]`:
+    /// each scheduled attendance is independently dropped with this
+    /// probability (its own seeded RNG stream, so `0.0` is byte-identical
+    /// to no dropout).  A dropped node runs the local path for that block
+    /// and its peers aggregate without it — the federated-inference
+    /// straggler/dropout scenario as a schedule input.
+    pub dropout_prob: f64,
+}
+
+impl SessionConfig {
+    pub fn new(schedule: SyncSchedule) -> Self {
+        Self {
+            schedule,
+            local_sparsity: LocalSparsity::full(),
+            kv_policy: KvExchangePolicy::Full,
+            max_new_tokens: 12,
+            seed: 0,
+            record_hidden: false,
+            decode_all: false,
+            kv_row_budgets: None,
+            workers: 1,
+            device_decode: true,
+            dropout_prob: 0.0,
+        }
+    }
+}
+
+/// Prefill result (before decoding).
+pub struct PrefillOutput {
+    /// Final hidden states per participant (only when `record_hidden`),
+    /// trimmed to valid rows.
+    pub hidden: Vec<Option<HostTensor>>,
+    /// Positions of each participant's valid tokens.
+    pub positions: Vec<Vec<i32>>,
+    pub net: NetReport,
+    pub wall_ms: f64,
+}
+
+/// Full session result.
+pub struct SessionReport {
+    /// The task publisher's decoded answer.
+    pub answer: String,
+    pub generated_tokens: usize,
+    /// Per-participant answers (only participants that kept caches decode;
+    /// others are `None`).  `answers[publisher]` equals `answer`.
+    pub answers: Vec<Option<String>>,
+    pub net: NetReport,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    /// Final hidden per participant (when `record_hidden`).
+    pub hidden: Vec<Option<HostTensor>>,
+    pub positions: Vec<Vec<i32>>,
+}
+
+/// Run `f(0..n)` across the pool (ordered results) or inline when no pool
+/// is configured.  Errors are stringly-typed so closure results satisfy
+/// the pool's `Send + 'static` bound.
+fn run_parallel<T, F>(pool: Option<&Arc<Pool>>, n: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> Result<T, String> + Send + Sync + 'static,
+{
+    let outs: Vec<Result<T, String>> = match pool {
+        Some(pool) => pool
+            .scope_map(n, f)
+            .map_err(|e| anyhow::anyhow!("parallel section failed: {e}"))?,
+        None => (0..n).map(f).collect(),
+    };
+    outs.into_iter().map(|r| r.map_err(anyhow::Error::msg)).collect()
+}
+
+/// Drives one collaborative task through the engine by exchanging typed
+/// round messages between [`ParticipantNode`]s.
+pub struct SessionDriver<'a> {
+    engine: &'a Engine,
+    cfg: SessionConfig,
+    /// One node per participant, each owning exactly its own state.
+    nodes: Vec<ParticipantNode>,
+    /// Effective attendance after dropout (== `cfg.schedule` when
+    /// `dropout_prob` is 0).
+    schedule: SyncSchedule,
+    /// Aggregation policy object (selection + merge).
+    aggregator: Box<dyn Aggregator>,
+    net: NetSim,
+    rng: Xoshiro256ss,
+    publisher: usize,
+    total_len: usize,
+    /// Per-row attention-mass accumulator (only for relevance policies).
+    relevance: Option<RelevanceTracker>,
+    /// Worker pool for the per-participant loops (`workers > 1`).
+    pool: Option<Arc<Pool>>,
+}
+
+impl<'a> SessionDriver<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        partition: &'a Partition,
+        cfg: SessionConfig,
+        net: NetSim,
+    ) -> Result<Self> {
+        let n = partition.n_participants();
+        anyhow::ensure!(net.n_participants() == n, "net sim participant count");
+        anyhow::ensure!(cfg.schedule.n_participants() == n, "schedule participant count");
+        anyhow::ensure!(
+            cfg.schedule.n_blocks() == engine.manifest.model.n_layers,
+            "schedule block count"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.dropout_prob),
+            "dropout_prob must be in [0, 1], got {}",
+            cfg.dropout_prob
+        );
+        let mut rng = Xoshiro256ss::new(cfg.seed ^ 0x5E55_10);
+        let publisher = partition.publisher();
+
+        // Build one node per participant: apply local sparsity, pad, embed.
+        let mut nodes = Vec::with_capacity(n);
+        for p in 0..n {
+            let (s, e) = partition.spans[p];
+            let span_ids = &partition.ids[s..e];
+            // Protect the tail of the publisher (the "A:" anchor) from
+            // local-sparsity dropping.
+            let protect = if p == publisher { 3 } else { 0 };
+            let keep = cfg.local_sparsity.select(span_ids.len(), protect, &mut rng);
+            let ids: Vec<i32> = keep.iter().map(|&i| span_ids[i]).collect();
+            let pos: Vec<i32> = keep.iter().map(|&i| (s + i) as i32).collect();
+            let keep_caches = p == publisher || cfg.decode_all;
+            nodes.push(ParticipantNode::build(engine, p, &ids, pos, keep_caches)?);
+        }
+
+        if let Some(b) = &cfg.kv_row_budgets {
+            anyhow::ensure!(b.len() == n, "kv_row_budgets length {} != {n}", b.len());
+        }
+        let relevance = cfg.kv_policy.needs_relevance().then(|| {
+            RelevanceTracker::new(&nodes.iter().map(|s| s.valid).collect::<Vec<_>>())
+        });
+        let pool = (cfg.workers > 1).then(|| Arc::new(Pool::new(cfg.workers)));
+        let aggregator = aggregate::for_policy(cfg.kv_policy);
+
+        // Dropout draws come from their own seeded stream: with prob 0 no
+        // stream is even created, so the default path stays byte-identical
+        // to the pre-dropout driver.
+        let schedule = if cfg.dropout_prob > 0.0 {
+            let mut drng = Xoshiro256ss::new(cfg.seed ^ 0xD80F_F00D);
+            cfg.schedule.with_dropout(cfg.dropout_prob, &mut drng)
+        } else {
+            cfg.schedule.clone()
+        };
+
+        Ok(Self {
+            engine,
+            cfg,
+            nodes,
+            schedule,
+            aggregator,
+            net,
+            rng,
+            publisher,
+            total_len: partition.len(),
+            relevance,
+            pool,
+        })
+    }
+
+    /// The effective attendance schedule (after dropout masking).
+    pub fn effective_schedule(&self) -> &SyncSchedule {
+        &self.schedule
+    }
+
+    /// Run the federated prefill (Alg. 1 lines 2–14).
+    pub fn prefill(&mut self) -> Result<PrefillOutput> {
+        let t0 = std::time::Instant::now();
+        let md = self.engine.manifest.model.clone();
+        let n = self.nodes.len();
+        let n_layers = md.n_layers;
+        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
+
+        // Budgeted policies: resolve per-participant row budgets once per
+        // session.  ByteBudget's total is split across heterogeneous links
+        // proportionally to bandwidth unless the coordinator already did.
+        let budgets: Option<Vec<usize>> =
+            match (&self.cfg.kv_row_budgets, self.cfg.kv_policy) {
+                (Some(b), _) => Some(b.clone()),
+                (None, KvExchangePolicy::ByteBudget { bytes_per_round }) => {
+                    Some(crate::net::allocate_row_budgets(
+                        self.net.links(),
+                        bytes_per_round / row_bytes_usize.max(1),
+                    ))
+                }
+                _ => None,
+            };
+
+        for m in 0..n_layers {
+            let attend = self.schedule.attend[m].clone();
+            let any = attend.iter().any(|&b| b);
+
+            if !any {
+                // Phase I only: every participant runs a fused local block
+                // (pool-parallel; ordered collection keeps determinism).
+                let inputs: Vec<_> = self
+                    .nodes
+                    .iter()
+                    .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
+                    .collect();
+                let engine = self.engine.clone();
+                let outs = run_parallel(self.pool.as_ref(), n, move |p| {
+                    let (x, pos, lmask) = &inputs[p];
+                    engine
+                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
+                        .map_err(|e| format!("{e:#}"))
+                })?;
+                for (p, (xo, k, v)) in outs.into_iter().enumerate() {
+                    self.nodes[p].set_hidden(xo);
+                    if self.nodes[p].keeps_caches() {
+                        self.nodes[p].absorb_local(m, &k, &v);
+                    }
+                }
+                continue;
+            }
+
+            // Sync block: everyone produces (q,)k,v; attendees do global
+            // attention over the aggregated KV.  Phase 1 is pool-parallel.
+            let inputs: Vec<_> = self
+                .nodes
+                .iter()
+                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
+                .collect();
+            let attend_in = Arc::new(attend.clone());
+            let engine = self.engine.clone();
+            let phase1 = run_parallel(self.pool.as_ref(), n, move |p| {
+                let (x, pos, lmask) = &inputs[p];
+                if attend_in[p] {
+                    engine
+                        .qkv_project(m, x.as_ref(), pos.as_slice())
+                        .map(|(q, k, v)| (Some(q), k, v, None))
+                } else {
+                    // Non-attendee: plain local block; its fresh K/V are
+                    // what it would transmit to attendees.
+                    engine
+                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
+                        .map(|(xo, k, v)| (None, k, v, Some(xo)))
+                }
+                .map_err(|e| format!("{e:#}"))
+            })?;
+            let mut qs: Vec<Option<HostTensor>> = Vec::with_capacity(n);
+            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
+            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
+            for (p, (q, k, v, xo)) in phase1.into_iter().enumerate() {
+                qs.push(q);
+                ks.push(k);
+                vs.push(v);
+                if let Some(xo) = xo {
+                    self.nodes[p].set_hidden(xo);
+                }
+            }
+
+            // Round messages: the aggregator selects each node's rows
+            // (relevance policies see only mass accumulated at *earlier*
+            // sync rounds — causal selection) and each node packages its
+            // uplink KvContribution.  The message carries the real row
+            // payload so accounting is measured, not estimated; the copy
+            // is bounded by the transmitted subset of what the pack below
+            // already copies per round.
+            let mut tx_flags: Vec<Vec<bool>> = Vec::with_capacity(n);
+            let mut contributions: Vec<KvContribution> = Vec::with_capacity(n);
+            for p in 0..n {
+                let ctx = TxContext {
+                    who: p,
+                    publisher: self.publisher,
+                    len: self.nodes[p].valid,
+                    row_bytes: row_bytes_usize,
+                    relevance: self.relevance.as_ref().map(|t| t.scores(p)),
+                    row_budget: budgets.as_ref().map(|b| b[p]),
+                };
+                let tx = self.aggregator.select(&ctx, &mut self.rng);
+                contributions.push(self.nodes[p].contribute(
+                    m,
+                    &ks[p],
+                    &vs[p],
+                    &tx,
+                    self.relevance.as_ref().map(|t| t.scores(p)),
+                ));
+                tx_flags.push(tx);
+            }
+
+            // Aggregate into the global KV (Eq. 20).
+            let rows_total: usize = self.nodes.iter().map(|s| s.valid).sum();
+            let g_pad = self.engine.manifest.pick_g(rows_total)?;
+            let parts_refs: Vec<PartRows<'_>> = (0..n)
+                .map(|p| {
+                    (
+                        &ks[p],
+                        &vs[p],
+                        self.nodes[p].pos.as_slice(),
+                        self.nodes[p].valid,
+                        tx_flags[p].as_slice(),
+                    )
+                })
+                .collect();
+            let gkv = self.aggregator.aggregate(
+                &parts_refs,
+                g_pad,
+                self.relevance.as_ref().map(|t| t.all_scores()),
+            )?;
+            let (kv_pos, kv_owner, kv_tx) = gkv.meta_columns();
+
+            // Communication accounting + simulated transfer time: the
+            // bytes on the wire are the encoded contribution payloads —
+            // the protocol messages are the single source of truth.
+            let tx_bytes: Vec<u64> =
+                contributions.iter().map(|c| c.payload_bytes()).collect();
+            #[cfg(debug_assertions)]
+            {
+                // The packed rows and the wire messages must tell the same
+                // story, uplink and downlink (also pinned, with real
+                // payloads, by tests/protocol_messages.rs).
+                let row_bytes = row_bytes_usize as u64;
+                let from_pack: Vec<u64> = gkv
+                    .tx_rows_by_owner(n)
+                    .iter()
+                    .map(|&r| r as u64 * row_bytes)
+                    .collect();
+                debug_assert_eq!(tx_bytes, from_pack, "uplink bytes drifted from pack");
+                let frame = crate::fedattn::protocol::GlobalKvFrame::from_global(m, &gkv);
+                let total: u64 = tx_bytes.iter().sum();
+                for p in 0..n {
+                    debug_assert_eq!(
+                        frame.payload_bytes_for(p),
+                        total - tx_bytes[p],
+                        "downlink bytes drifted from frame"
+                    );
+                }
+            }
+            self.net.exchange_round(&tx_bytes, &attend);
+
+            // Upload the packed global KV to the device ONCE per sync
+            // round; every attendee's attention shares the handles (the
+            // buffers are immutable, so read-only sharing holds by
+            // construction).
+            let gk_dev = self.engine.upload(&gkv.k)?;
+            let gv_dev = self.engine.upload(&gkv.v)?;
+
+            // Global attention + FFN for attendees (Eq. 21 + 19),
+            // pool-parallel.  When a relevance policy is active, each
+            // attendee also computes the column marginals of its attention
+            // (row-sum of the attention weights) inside its task; the
+            // accumulation below stays sequential in participant order so
+            // the result is bit-identical to a sequential session.
+            let gkv = Arc::new(gkv);
+            let qs = Arc::new(qs);
+            let kv_meta = Arc::new((kv_pos, kv_owner, kv_tx));
+            let pinputs: Vec<_> = self
+                .nodes
+                .iter()
+                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), st.valid))
+                .collect();
+            let attend_in = Arc::new(attend.clone());
+            let track_mass = self.relevance.is_some();
+            let engine = self.engine.clone();
+            let rows = gkv.rows();
+            let gkv_in = Arc::clone(&gkv);
+            type AttnOut = Option<(HostTensor, Option<Vec<f64>>)>;
+            let outs: Vec<AttnOut> = run_parallel(self.pool.as_ref(), n, move |p| {
+                if !attend_in[p] {
+                    return Ok(None);
+                }
+                let (x, pos_pad, valid) = &pinputs[p];
+                let q = qs[p].as_ref().ok_or("missing q for attendee")?;
+                let (kv_pos, kv_owner, kv_tx) = &*kv_meta;
+                let mask = global_mask(
+                    pos_pad.as_slice(),
+                    *valid,
+                    g_pad,
+                    kv_pos,
+                    kv_owner,
+                    kv_tx,
+                    rows,
+                    p,
+                );
+                let mass = track_mass
+                    .then(|| relevance::attention_mass(q, &gkv_in.k, &mask, *valid, rows));
+                let xo = engine
+                    .attn_ffn_dev(m, x.as_ref(), q, &gk_dev, &gv_dev, &mask)
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok(Some((xo, mass)))
+            })?;
+            let mut round_mass: Option<Vec<f64>> =
+                self.relevance.as_ref().map(|_| vec![0.0; gkv.rows()]);
+            for (p, out) in outs.into_iter().enumerate() {
+                let Some((xo, mass)) = out else { continue };
+                if let (Some(acc), Some(mass)) = (round_mass.as_mut(), mass) {
+                    for (a, x) in acc.iter_mut().zip(&mass) {
+                        *a += x;
+                    }
+                }
+                self.nodes[p].set_hidden(xo);
+            }
+            if let (Some(tr), Some(acc)) = (self.relevance.as_mut(), round_mass) {
+                tr.observe(&gkv.meta, &acc);
+            }
+
+            // Decode caches for this block (paper §IV-C): nodes that
+            // attended absorb the aggregated frame (restricted to what
+            // they could see); others absorb their own local KV.
+            for p in 0..n {
+                if !self.nodes[p].keeps_caches() {
+                    continue;
+                }
+                if attend[p] {
+                    self.nodes[p].absorb_frame(m, &gkv);
+                } else {
+                    self.nodes[p].absorb_local(m, &ks[p], &vs[p]);
+                }
+            }
+        }
+
+        let hidden = self.collect_hidden();
+        Ok(PrefillOutput {
+            hidden,
+            positions: self.nodes.iter().map(|s| s.pos.clone()).collect(),
+            net: self.net.report().clone(),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    fn collect_hidden(&self) -> Vec<Option<HostTensor>> {
+        self.nodes
+            .iter()
+            .map(|st| {
+                if self.cfg.record_hidden {
+                    let mut h = HostTensor::zeros(&[st.valid, st.x.shape()[1]]);
+                    h.copy_rows_from(st.x.as_ref(), 0..st.valid, 0);
+                    Some(h)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Greedy decode from participant `p`'s KV caches (requires that `p`
+    /// kept caches).  Returns the decoded text and token count.
+    pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
+        anyhow::ensure!(self.nodes[p].keeps_caches(), "participant {p} has no caches");
+        let h_last = self.nodes[p].last_hidden();
+        let mut caches = std::mem::take(&mut self.nodes[p].caches);
+        let res = decode_from_caches(
+            self.engine,
+            &mut caches,
+            &h_last,
+            self.total_len,
+            self.cfg.max_new_tokens,
+            self.cfg.device_decode,
+        );
+        self.nodes[p].caches = caches;
+        res
+    }
+
+    /// Decode the task publisher.
+    pub fn decode(&mut self) -> Result<(String, usize)> {
+        self.decode_participant(self.publisher)
+    }
+
+    /// Prefill + decode, returning the full report.  With `decode_all`
+    /// and `workers > 1` the per-participant decodes run pool-parallel
+    /// (each participant's caches are independent).
+    pub fn run(mut self) -> Result<SessionReport> {
+        let pre = self.prefill()?;
+        let t0 = std::time::Instant::now();
+        let n = self.nodes.len();
+        let decoders: Vec<usize> =
+            (0..n).filter(|&p| self.nodes[p].keeps_caches()).collect();
+
+        // Move each decoding participant's caches + kick-off hidden state
+        // into a slot the (shared) pool closure can take exactly once.
+        let slots: Vec<Mutex<Option<(Vec<BlockCache>, HostTensor)>>> = decoders
+            .iter()
+            .map(|&p| {
+                let caches = std::mem::take(&mut self.nodes[p].caches);
+                let h_last = self.nodes[p].last_hidden();
+                Mutex::new(Some((caches, h_last)))
+            })
+            .collect();
+        let slots = Arc::new(slots);
+        let engine = self.engine.clone();
+        let (total_len, max_new, device_decode) =
+            (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
+        let slots_in = Arc::clone(&slots);
+        let decoded: Vec<(String, usize)> =
+            run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
+                let (mut caches, h_last) = slots_in[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or("decode slot taken twice")?;
+                decode_from_caches(&engine, &mut caches, &h_last, total_len, max_new, device_decode)
+                    .map_err(|e| format!("{e:#}"))
+            })?;
+
+        let mut answers: Vec<Option<String>> = vec![None; n];
+        let mut generated = 0usize;
+        let mut answer = String::new();
+        for (&p, (text, tokens)) in decoders.iter().zip(decoded) {
+            if p == self.publisher {
+                answer = text.clone();
+                generated = tokens;
+            }
+            answers[p] = Some(text);
+        }
+        Ok(SessionReport {
+            answer,
+            generated_tokens: generated,
+            answers,
+            net: self.net.into_report(),
+            prefill_ms: pre.wall_ms,
+            decode_ms: t0.elapsed().as_secs_f64() * 1e3,
+            hidden: pre.hidden,
+            positions: pre.positions,
+        })
+    }
+
+    /// Prefill only (error-analysis paths that do not decode).
+    pub fn run_prefill_only(mut self) -> Result<PrefillOutput> {
+        self.prefill()
+    }
+
+    /// Attach a shared worker pool (e.g. the coordinator's, reused across
+    /// tasks) instead of the session-owned one `workers > 1` would spawn.
+    /// Pass `workers = 1` in the config when using this to avoid creating
+    /// a throwaway pool in [`SessionDriver::new`].
+    pub fn with_shared_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+}
+
+/// Greedy decode over one participant's per-layer caches.
+///
+/// When `device_decode` is set and the artifact set has a decode-tail
+/// variant wide enough for the horizon, each cache is frozen on the
+/// device first and every step uploads only the `[R]` tail (O(1) bytes
+/// per step in the cache capacity); otherwise the host path uploads the
+/// full cache per layer per step, as before.
+fn decode_from_caches(
+    engine: &Engine,
+    caches: &mut [BlockCache],
+    h_last: &HostTensor,
+    total_len: usize,
+    max_new_tokens: usize,
+    device_decode: bool,
+) -> Result<(String, usize)> {
+    // A step appends at most one row per layer, and the final step never
+    // appends: at most max_new_tokens - 1 tail rows per decode.
+    let steps = max_new_tokens.saturating_sub(1);
+    let tail_r = (device_decode && steps > 0)
+        .then(|| engine.manifest.pick_decode_tail(steps))
+        .flatten();
+    // Freeze lazily, right before the first real decode pass — a decode
+    // that terminates on its kick-off logits (immediate EOS) uploads
+    // nothing at all, same as the host path.
+    let mut frozen = false;
+
+    // Kick-off logits from the participant's final prompt token.
+    let mut logits = engine.logits(h_last)?;
+    let mut out_ids: Vec<i32> = Vec::new();
+    for step in 0..max_new_tokens {
+        let next = argmax(&logits);
+        if next == tokenizer::EOS {
+            break;
+        }
+        out_ids.push(next);
+        if step + 1 == max_new_tokens {
+            break;
+        }
+        if let (Some(r), false) = (tail_r, frozen) {
+            for cache in caches.iter_mut() {
+                // A previous decode may have part-filled this cache's
+                // tail; when the remaining capacity can't fit this
+                // horizon, drop the stale prefix so freeze_device
+                // re-uploads a fresh one (current cache state, empty
+                // tail).
+                let len = cache.len;
+                let stale = cache
+                    .dev
+                    .as_ref()
+                    .is_some_and(|dev| len - dev.base_len + steps > dev.k_tail.shape()[0]);
+                if stale {
+                    cache.dev = None;
+                }
+                cache.freeze_device(engine, r)?;
+            }
+            frozen = true;
+        }
+        // One decode pass to produce logits for the following token.
+        let pos = (total_len + step) as i32;
+        let mut x = engine.embed(&[next])?;
+        for (m, cache) in caches.iter_mut().enumerate() {
+            let (xo, kn, vn) = match cache.dev.as_ref() {
+                Some(dev) => engine.decode_block_tail(
+                    m,
+                    &x,
+                    pos,
+                    &dev.k,
+                    &dev.v,
+                    &dev.mask,
+                    &dev.k_tail,
+                    &dev.v_tail,
+                    &dev.tail_mask,
+                )?,
+                None => engine.decode_block(m, &x, pos, &cache.k, &cache.v, &cache.dmask)?,
+            };
+            x = xo;
+            cache.push_rows(&kn, &vn, 1, &[true]);
+        }
+        logits = engine.logits(&x)?;
+    }
+    Ok((tokenizer::decode(&out_ids), out_ids.len()))
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn run_parallel_matches_sequential_and_reports_errors() {
+        let pool = Arc::new(Pool::new(3));
+        let seq = run_parallel(None, 8, |i| Ok::<usize, String>(i * i)).unwrap();
+        let par = run_parallel(Some(&pool), 8, |i| Ok::<usize, String>(i * i)).unwrap();
+        assert_eq!(seq, par);
+        let err = run_parallel(Some(&pool), 4, |i| {
+            if i == 2 {
+                Err("boom".to_string())
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn session_config_rejects_bad_dropout() {
+        // Validated in SessionDriver::new; the config itself is plain data.
+        let cfg = SessionConfig::new(SyncSchedule::uniform(4, 2, 2));
+        assert_eq!(cfg.dropout_prob, 0.0);
+    }
+}

@@ -1,6 +1,7 @@
-//! The FedAttn paradigm (paper Alg. 1 + §V toolkit): participant state,
-//! sync schedules, KV exchange & aggregation, sparsity policies, masks and
-//! the per-task session driving prefill + decode through the runtime.
+//! The FedAttn paradigm (paper Alg. 1 + §V toolkit) as a participant
+//! protocol: per-participant nodes, typed round messages, pluggable KV
+//! aggregation, sync schedules, sparsity policies, masks, and the session
+//! driver running prefill + decode through the runtime.
 //!
 //! Semantics (matching the paper):
 //!  * Every participant runs every Transformer block over its own tokens.
@@ -13,17 +14,39 @@
 //!    fused block) and are what gets transmitted to attendees.
 //!  * Sparse KV exchange (§V Obs. 4 / Fig. 10) drops *remote* rows only;
 //!    a participant always sees its own full KV.
+//!
+//! Structure (the federated-optimization duality, made literal):
+//!  * [`node`] — [`ParticipantNode`] owns one participant's state behind
+//!    the [`Participant`] trait (local compute).
+//!  * [`protocol`] — serializable round messages; their encoded payload
+//!    sizes are the single source of truth for comm-byte accounting.
+//!  * [`aggregate`] — the [`Aggregator`] policy object (global
+//!    aggregation; concat and relevance-adaptive built-ins).
+//!  * [`driver`] — [`SessionDriver`] sequences rounds purely through
+//!    messages; dropout and attendance gaps are schedule inputs.
+//!  * [`session`] — the [`FedSession`] facade (byte-identical to the
+//!    pre-protocol session).
 
+pub mod aggregate;
+pub mod driver;
 pub mod kv;
 pub mod masks;
+pub mod node;
+pub mod protocol;
 pub mod relevance;
 pub mod schedule;
 pub mod session;
 pub mod sparse;
 
+pub use aggregate::{for_policy, AdaptiveAggregator, Aggregator, ConcatAggregator};
+pub use driver::{PrefillOutput, SessionConfig, SessionDriver, SessionReport};
 pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
+pub use node::{Participant, ParticipantNode};
+pub use protocol::{
+    DecodeTail, GlobalKvFrame, KvContribution, TokenBroadcast, WireError,
+};
 pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};
-pub use session::{FedSession, PrefillOutput, SessionConfig, SessionReport};
+pub use session::FedSession;
 pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};

@@ -1,0 +1,342 @@
+//! One participant, one node: the state owned by a single FedAttn
+//! participant and the typed protocol surface it exposes.
+//!
+//! The paper's participants are peers that compute local self-attention
+//! and exchange KV messages; a [`ParticipantNode`] owns exactly one
+//! participant's state — token representations, per-block decode caches,
+//! device handles — and the [`Participant`] trait is the message-level
+//! contract the session driver speaks to it through:
+//!
+//! * [`Participant::contribute`] — package this round's transmitted KV
+//!   rows as a [`KvContribution`] (the uplink).
+//! * [`Participant::absorb_frame`] / [`Participant::absorb_local`] — fold
+//!   the round's aggregated KV (or, off-round, the node's own local KV)
+//!   into the per-block decode caches.
+//!
+//! The trait pins the *message-level contract* of a round — what crosses
+//! the participant boundary and in which order.  It is the shape a
+//! future networked node would implement over a transport; note that
+//! today's [`SessionDriver`] drives the concrete [`ParticipantNode`]
+//! (its pool-parallel loops snapshot `Arc`'d node state directly), so
+//! swapping in a remote implementation additionally needs a
+//! transport-aware driver, not just this trait.
+//!
+//! [`SessionDriver`]: crate::fedattn::driver::SessionDriver
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::fedattn::kv::GlobalKv;
+use crate::fedattn::masks::{decode_mask_set_visible, local_mask};
+use crate::fedattn::protocol::KvContribution;
+use crate::runtime::Engine;
+use crate::tensor::{DeviceTensor, HostTensor, NEG_MASK};
+
+/// The frozen device half of a [`BlockCache`]: the prefill-time cache and
+/// its visibility mask live on the device (uploaded once), while rows
+/// appended during decode accumulate in a small host-side tail that is
+/// re-uploaded per step.
+pub(crate) struct DevCache {
+    pub(crate) k: DeviceTensor,
+    pub(crate) v: DeviceTensor,
+    pub(crate) mask: DeviceTensor,
+    /// Cache rows at freeze time; later appends land in the tail.
+    pub(crate) base_len: usize,
+    /// `[R, Hkv, hd]` decode-appended rows (zero-padded; occupancy is
+    /// encoded by `tail_mask`).
+    pub(crate) k_tail: HostTensor,
+    pub(crate) v_tail: HostTensor,
+    /// `[1, R]` tail visibility mask.
+    pub(crate) tail_mask: HostTensor,
+}
+
+/// A participant's KV cache for one block, sized to the decode-cache
+/// capacity `C`.
+pub(crate) struct BlockCache {
+    pub(crate) k: HostTensor,
+    pub(crate) v: HostTensor,
+    /// Visibility flags per cache row (for the decode mask).
+    pub(crate) visible: Vec<bool>,
+    /// Next free row.
+    pub(crate) len: usize,
+    /// Incremental `[1, C]` decode mask, kept in lockstep with `visible`
+    /// (only the newly appended columns flip on `push_rows`).
+    pub(crate) dmask: HostTensor,
+    /// Device-frozen prefix + growing tail (device-resident decode).
+    pub(crate) dev: Option<DevCache>,
+}
+
+impl BlockCache {
+    pub(crate) fn new(c: usize, kv_heads: usize, head_dim: usize) -> Self {
+        Self {
+            k: HostTensor::zeros(&[c, kv_heads, head_dim]),
+            v: HostTensor::zeros(&[c, kv_heads, head_dim]),
+            visible: vec![false; c],
+            len: 0,
+            dmask: HostTensor::full(&[1, c], NEG_MASK),
+            dev: None,
+        }
+    }
+
+    pub(crate) fn push_rows(
+        &mut self,
+        k: &HostTensor,
+        v: &HostTensor,
+        rows: usize,
+        visible: &[bool],
+    ) {
+        let c = self.k.shape()[0];
+        assert!(self.len + rows <= c, "decode cache overflow: {} + {rows} > {c}", self.len);
+        self.k.copy_rows_from(k, 0..rows, self.len);
+        self.v.copy_rows_from(v, 0..rows, self.len);
+        self.visible[self.len..self.len + rows].copy_from_slice(&visible[..rows]);
+        for (i, &vis) in visible[..rows].iter().enumerate() {
+            if vis {
+                decode_mask_set_visible(&mut self.dmask, self.len + i);
+            }
+        }
+        // The device prefix is frozen: post-freeze rows go to the tail.  A
+        // full tail (e.g. repeated decodes on one participant) drops the
+        // frozen prefix — the host cache is always complete, so the
+        // session falls back to full-cache uploads (or re-freezes a fresh
+        // prefix at the next decode) instead of failing.
+        let len = self.len;
+        let tail_full = self
+            .dev
+            .as_ref()
+            .is_some_and(|dev| len + rows - dev.base_len > dev.k_tail.shape()[0]);
+        if tail_full {
+            self.dev = None;
+        } else if let Some(dev) = self.dev.as_mut() {
+            for i in 0..rows {
+                let t = len + i - dev.base_len;
+                dev.k_tail.copy_rows_from(k, i..i + 1, t);
+                dev.v_tail.copy_rows_from(v, i..i + 1, t);
+                if visible[i] {
+                    decode_mask_set_visible(&mut dev.tail_mask, t);
+                }
+            }
+        }
+        self.len += rows;
+    }
+
+    /// Upload the cache (K, V, visibility mask) to the device once and
+    /// start routing appended rows into an `[R]` tail.  Idempotent.
+    pub(crate) fn freeze_device(&mut self, engine: &Engine, r: usize) -> Result<()> {
+        if self.dev.is_some() {
+            return Ok(());
+        }
+        let (hkv, hd) = (self.k.shape()[1], self.k.shape()[2]);
+        self.dev = Some(DevCache {
+            k: engine.upload(&self.k)?,
+            v: engine.upload(&self.v)?,
+            mask: engine.upload(&self.dmask)?,
+            base_len: self.len,
+            k_tail: HostTensor::zeros(&[r, hkv, hd]),
+            v_tail: HostTensor::zeros(&[r, hkv, hd]),
+            tail_mask: HostTensor::full(&[1, r], NEG_MASK),
+        });
+        Ok(())
+    }
+}
+
+/// The message-level contract between the session driver and one
+/// participant.  [`ParticipantNode`] is the in-process implementation;
+/// the contract is what a networked node would speak over a transport
+/// (see the module docs for what a remote driver would still need).
+pub trait Participant {
+    /// This participant's index in the federation.
+    fn id(&self) -> usize;
+
+    /// Valid (non-padding) token rows this node holds.
+    fn valid_rows(&self) -> usize;
+
+    /// Global positions of this node's valid tokens.
+    fn positions(&self) -> &[i32];
+
+    /// Whether this node keeps per-block decode caches (publishers and,
+    /// under `decode_all`, everyone).
+    fn keeps_caches(&self) -> bool;
+
+    /// Package the rows flagged in `tx` of this round's fresh K/V as the
+    /// node's uplink message for `block`.
+    fn contribute(
+        &self,
+        block: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        tx: &[bool],
+        relevance: Option<&[f64]>,
+    ) -> KvContribution;
+
+    /// Attendee path: fold the aggregated round frame into the decode
+    /// cache for `block`.  Rows this node owns or that were transmitted
+    /// are visible; everything else is masked (it never saw those rows).
+    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv);
+
+    /// Non-attendee path: cache this node's own local K/V for `block`.
+    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor);
+}
+
+/// In-process participant: owns one participant's token representations,
+/// padded positions, local mask, and per-block decode caches.  The hidden
+/// state and masks are `Arc`'d so the driver's pool-parallel loops can
+/// snapshot them into `'static` closures without copying.
+pub struct ParticipantNode {
+    id: usize,
+    /// Global positions of the kept tokens (after local sparsity).
+    pub(crate) pos: Vec<i32>,
+    /// Padded positions array (`l_pad` long; padding repeats the last pos).
+    pub(crate) pos_pad: Arc<Vec<i32>>,
+    pub(crate) valid: usize,
+    /// Hidden states `[l_pad, d]`.
+    pub(crate) x: Arc<HostTensor>,
+    /// Cached local causal mask (reused across local blocks).
+    pub(crate) lmask: Arc<HostTensor>,
+    /// Per-layer decode caches; empty for nodes that will not decode.
+    pub(crate) caches: Vec<BlockCache>,
+}
+
+impl ParticipantNode {
+    /// Build a node from its post-sparsity token ids and global positions.
+    /// `keep_caches` allocates one [`BlockCache`]-backed decode cache per
+    /// layer (capacity = the manifest's decode-cache size).
+    pub(crate) fn build(
+        engine: &Engine,
+        id: usize,
+        ids: &[i32],
+        pos: Vec<i32>,
+        keep_caches: bool,
+    ) -> Result<Self> {
+        let md = &engine.manifest.model;
+        let l_pad = engine.manifest.pick_l(ids.len())?;
+        let mut pos_pad = pos.clone();
+        let last = *pos_pad.last().unwrap_or(&0);
+        pos_pad.resize(l_pad, last);
+        let mut x = HostTensor::zeros(&[l_pad, md.d_model]);
+        let emb = engine.embed(ids)?;
+        x.copy_rows_from(&emb, 0..ids.len(), 0);
+        let valid = ids.len();
+        let lmask = local_mask(&pos_pad, valid);
+        let caches = if keep_caches {
+            let c = engine.manifest.decode_cache;
+            (0..md.n_layers)
+                .map(|_| BlockCache::new(c, md.n_kv_heads, md.head_dim))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            id,
+            pos,
+            pos_pad: Arc::new(pos_pad),
+            valid,
+            x: Arc::new(x),
+            lmask: Arc::new(lmask),
+            caches,
+        })
+    }
+
+    /// Replace the hidden state after a block (the driver collects block
+    /// outputs in participant order, so updates stay deterministic).
+    pub(crate) fn set_hidden(&mut self, x: HostTensor) {
+        self.x = Arc::new(x);
+    }
+
+    /// The node's final hidden state for its last valid token, `[1, d]`
+    /// (decode kick-off).
+    pub(crate) fn last_hidden(&self) -> HostTensor {
+        let last_row = self.valid - 1;
+        let d = self.x.shape()[1];
+        let mut h = HostTensor::zeros(&[1, d]);
+        h.copy_rows_from(self.x.as_ref(), last_row..last_row + 1, 0);
+        h
+    }
+}
+
+impl Participant for ParticipantNode {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn valid_rows(&self) -> usize {
+        self.valid
+    }
+
+    fn positions(&self) -> &[i32] {
+        &self.pos
+    }
+
+    fn keeps_caches(&self) -> bool {
+        !self.caches.is_empty()
+    }
+
+    fn contribute(
+        &self,
+        block: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        tx: &[bool],
+        relevance: Option<&[f64]>,
+    ) -> KvContribution {
+        KvContribution::from_rows(block, self.id, k, v, &self.pos, tx, relevance)
+    }
+
+    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) {
+        let vis: Vec<bool> = gkv
+            .meta
+            .iter()
+            .map(|r| r.owner == self.id || r.transmitted)
+            .collect();
+        self.caches[block].push_rows(&gkv.k, &gkv.v, gkv.rows(), &vis);
+    }
+
+    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) {
+        let vis = vec![true; self.valid];
+        self.caches[block].push_rows(k, v, self.valid, &vis);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fedattn::masks::decode_mask;
+
+    #[test]
+    fn block_cache_push_and_overflow() {
+        let mut c = BlockCache::new(4, 1, 2);
+        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
+        let v = k.clone();
+        c.push_rows(&k, &v, 2, &[true, false]);
+        assert_eq!(c.len, 2);
+        assert_eq!(c.visible[..2], [true, false]);
+        c.push_rows(&k, &v, 2, &[true, true]);
+        assert_eq!(c.len, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode cache overflow")]
+    fn block_cache_overflow_panics() {
+        let mut c = BlockCache::new(2, 1, 2);
+        let k = HostTensor::new(&[2, 1, 2], vec![0.0; 4]).unwrap();
+        c.push_rows(&k, &k.clone(), 2, &[true, true]);
+        c.push_rows(&k, &k.clone(), 1, &[true]);
+    }
+
+    #[test]
+    fn block_cache_incremental_mask_matches_fresh_build() {
+        // The per-cache [1, C] mask flips only the newly appended columns
+        // on push_rows; it must equal a from-scratch decode_mask build at
+        // every state.
+        let mut c = BlockCache::new(6, 1, 2);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
+        c.push_rows(&k, &k.clone(), 2, &[true, false]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        c.push_rows(&k, &k.clone(), 2, &[false, true]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+        c.push_rows(&k, &k.clone(), 1, &[true]);
+        assert_eq!(c.dmask, decode_mask(6, &c.visible));
+    }
+}

@@ -1,0 +1,683 @@
+//! Typed round messages for the participant protocol.
+//!
+//! The paper frames FedAttn as participants that *exchange KV messages*
+//! through periodic aggregation (Alg. 1, Eq. 20): local compute, a
+//! per-round uplink of selected KV rows, and a downlink of the aggregated
+//! frame — the structural dual of federated optimization's model-delta
+//! exchange.  This module makes those messages concrete, serializable
+//! values instead of implicit shared-memory state:
+//!
+//! * [`KvContribution`] — one participant's transmitted KV rows for one
+//!   sync block (the uplink payload).
+//! * [`GlobalKvFrame`] — the aggregated global KV broadcast back to
+//!   attendees (the downlink payload).
+//! * [`DecodeTail`] — one decode-step KV row append for one block (the
+//!   wire form of the device decode tail).
+//! * [`TokenBroadcast`] — a decoded token pushed to participants.
+//!
+//! Every message has a binary `encode`/`decode` pair (little-endian,
+//! self-describing header) so a networked deployment can ship it as-is.
+//! **Byte accounting is derived from these messages**: the driver feeds
+//! [`KvContribution::payload_bytes`] straight into
+//! [`NetSim::exchange_round`], making the encoded payload the single
+//! source of truth for per-round communication cost.  `payload_bytes`
+//! counts the KV data plane only (`rows ×`[`GlobalKv::row_bytes`]`)` —
+//! exactly the paper's bits-transmitted metric; the per-row control
+//! fields (`pos`, `relevance`) and the fixed header are reported
+//! separately by [`KvContribution::control_bytes`].
+//!
+//! [`NetSim::exchange_round`]: crate::net::NetSim::exchange_round
+//! [`GlobalKv::row_bytes`]: crate::fedattn::GlobalKv::row_bytes
+
+use crate::fedattn::kv::{GlobalKv, KvRowMeta};
+use crate::tensor::HostTensor;
+
+/// First byte of every encoded protocol message.
+pub const WIRE_MAGIC: u8 = 0xFA;
+/// Wire format revision; bumped on any layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+const TAG_CONTRIBUTION: u8 = 1;
+const TAG_FRAME: u8 = 2;
+const TAG_DECODE_TAIL: u8 = 3;
+const TAG_TOKEN: u8 = 4;
+
+/// Decode failure for a protocol message.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("wire message truncated at byte {0}")]
+    Truncated(usize),
+    #[error("bad wire header: expected tag {expected:#04x}, got {got:#04x}")]
+    BadTag { expected: u8, got: u8 },
+    #[error("unsupported wire version {0}")]
+    Version(u8),
+    #[error("malformed message: {0}")]
+    Malformed(String),
+    #[error("{0} trailing bytes after message")]
+    Trailing(usize),
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian writer / reader
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(tag: u8, cap_hint: usize) -> Self {
+        let mut buf = Vec::with_capacity(cap_hint + HEADER_BYTES);
+        buf.push(WIRE_MAGIC);
+        buf.push(tag);
+        buf.push(WIRE_VERSION);
+        Self { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32s(&mut self, xs: &[i32]) {
+        for &x in xs {
+            self.i32(x);
+        }
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// `magic + tag + version`.
+const HEADER_BYTES: usize = 3;
+
+/// `rows × kv_heads × head_dim` from untrusted header fields, with
+/// overflow surfaced as a decode error instead of a silent wrap.
+fn row_elems(rows: usize, kv_heads: usize, head_dim: usize) -> Result<usize, WireError> {
+    rows.checked_mul(kv_heads)
+        .and_then(|x| x.checked_mul(head_dim))
+        .ok_or_else(|| WireError::Malformed("row dimensions overflow".into()))
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn open(b: &'a [u8], tag: u8) -> Result<Self, WireError> {
+        let mut r = Self { b, pos: 0 };
+        let magic = r.u8()?;
+        if magic != WIRE_MAGIC {
+            return Err(WireError::BadTag { expected: WIRE_MAGIC, got: magic });
+        }
+        let got = r.u8()?;
+        if got != tag {
+            return Err(WireError::BadTag { expected: tag, got });
+        }
+        let version = r.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::Version(version));
+        }
+        Ok(r)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.b.len() - self.pos {
+            return Err(WireError::Truncated(self.b.len()));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Reject a claimed element count before allocating for it: decoders
+    /// consume untrusted bytes, so a hostile length field must fail as
+    /// `Truncated`/`Malformed`, never as a huge allocation or a silent
+    /// `usize` wrap.
+    fn ensure_remaining(&self, elems: usize, bytes_per: usize) -> Result<(), WireError> {
+        let need = elems
+            .checked_mul(bytes_per)
+            .ok_or_else(|| WireError::Malformed("length field overflows".into()))?;
+        if need > self.b.len() - self.pos {
+            return Err(WireError::Truncated(self.b.len()));
+        }
+        Ok(())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>, WireError> {
+        self.ensure_remaining(n, 4)?;
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        self.ensure_remaining(n, 4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::Trailing(self.b.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KvContribution — the uplink
+// ---------------------------------------------------------------------------
+
+/// One participant's transmitted KV rows for one sync block: the uplink
+/// half of a KV-exchange round (Alg. 1 line 8).  Only rows the exchange
+/// policy selected ride along; untransmitted rows never leave their owner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvContribution {
+    /// Transformer block (sync round) this contribution belongs to.
+    pub block: usize,
+    /// Contributing participant.
+    pub owner: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Global token position of each transmitted row.
+    pub pos: Vec<i32>,
+    /// Accumulated relevance score of each transmitted row (0 when the
+    /// policy does not track relevance).
+    pub relevance: Vec<f32>,
+    /// Transmitted key rows, packed `[rows × kv_heads × head_dim]`.
+    pub k: Vec<f32>,
+    /// Transmitted value rows, same layout as `k`.
+    pub v: Vec<f32>,
+}
+
+impl KvContribution {
+    /// Extract the rows flagged in `tx` from a participant's padded
+    /// `[l_pad, Hkv, hd]` K/V tensors.  `pos[i]` is local row `i`'s global
+    /// position and `relevance` (when tracked) its accumulated score.
+    pub fn from_rows(
+        block: usize,
+        owner: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        pos: &[i32],
+        tx: &[bool],
+        relevance: Option<&[f64]>,
+    ) -> Self {
+        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
+        let rows = tx.iter().filter(|&&b| b).count();
+        let mut mpos = Vec::with_capacity(rows);
+        let mut mrel = Vec::with_capacity(rows);
+        let mut mk = Vec::with_capacity(rows * kv_heads * head_dim);
+        let mut mv = Vec::with_capacity(rows * kv_heads * head_dim);
+        for (i, &t) in tx.iter().enumerate() {
+            if !t {
+                continue;
+            }
+            mpos.push(pos[i]);
+            mrel.push(
+                relevance.and_then(|r| r.get(i)).map(|&s| s as f32).unwrap_or(0.0),
+            );
+            mk.extend_from_slice(k.row(i));
+            mv.extend_from_slice(v.row(i));
+        }
+        Self { block, owner, kv_heads, head_dim, pos: mpos, relevance: mrel, k: mk, v: mv }
+    }
+
+    /// Transmitted rows in this contribution.
+    pub fn rows(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// **Data-plane bytes** — the K/V row payload, and the value every
+    /// round's comm accounting is derived from.  Always equals
+    /// `rows() × GlobalKv::row_bytes(kv_heads, head_dim)` (asserted by the
+    /// protocol property suite), which is the paper's bits-transmitted
+    /// metric.
+    pub fn payload_bytes(&self) -> u64 {
+        4 * (self.k.len() + self.v.len()) as u64
+    }
+
+    /// Control-plane bytes: header + per-row `pos`/`relevance` metadata.
+    /// Reported separately; excluded from the round accounting to keep
+    /// parity with the paper's metric (≤ 8 B/row, negligible next to the
+    /// KV payload).
+    pub fn control_bytes(&self) -> u64 {
+        (self.encoded_len() as u64) - self.payload_bytes()
+    }
+
+    /// Exact length of [`KvContribution::encode`]'s output.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + 5 * 4 + self.pos.len() * 8 + (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(TAG_CONTRIBUTION, self.encoded_len());
+        w.u32(self.block as u32);
+        w.u32(self.owner as u32);
+        w.u32(self.kv_heads as u32);
+        w.u32(self.head_dim as u32);
+        w.u32(self.rows() as u32);
+        w.i32s(&self.pos);
+        w.f32s(&self.relevance);
+        w.f32s(&self.k);
+        w.f32s(&self.v);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::open(b, TAG_CONTRIBUTION)?;
+        let block = r.u32()? as usize;
+        let owner = r.u32()? as usize;
+        let kv_heads = r.u32()? as usize;
+        let head_dim = r.u32()? as usize;
+        let rows = r.u32()? as usize;
+        let elems = row_elems(rows, kv_heads, head_dim)?;
+        let pos = r.i32s(rows)?;
+        let relevance = r.f32s(rows)?;
+        let k = r.f32s(elems)?;
+        let v = r.f32s(elems)?;
+        r.done()?;
+        Ok(Self { block, owner, kv_heads, head_dim, pos, relevance, k, v })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GlobalKvFrame — the downlink
+// ---------------------------------------------------------------------------
+
+/// The aggregated global KV for one sync block, as broadcast to attendees
+/// (Eq. 20's packed form + per-row metadata).  Carries *all* packed rows
+/// with their `transmitted` flags so each attendee can rebuild the exact
+/// visibility mask; on a real wire an attendee only receives the rows it
+/// does not already own, which is what [`GlobalKvFrame::payload_bytes_for`]
+/// measures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalKvFrame {
+    pub block: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Per packed-row metadata, in [`GlobalKv::pack`] order.
+    ///
+    /// [`GlobalKv::pack`]: crate::fedattn::GlobalKv::pack
+    pub meta: Vec<KvRowMeta>,
+    /// Packed key rows `[rows × kv_heads × head_dim]` (padding trimmed).
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl GlobalKvFrame {
+    /// Snapshot a packed [`GlobalKv`] (padding rows trimmed off).
+    pub fn from_global(block: usize, g: &GlobalKv) -> Self {
+        let (kv_heads, head_dim) = (g.k.shape()[1], g.k.shape()[2]);
+        let rows = g.rows();
+        let row_len = kv_heads * head_dim;
+        let mut k = Vec::with_capacity(rows * row_len);
+        let mut v = Vec::with_capacity(rows * row_len);
+        for i in 0..rows {
+            k.extend_from_slice(g.k.row(i));
+            v.extend_from_slice(g.v.row(i));
+        }
+        Self { block, kv_heads, head_dim, meta: g.meta.clone(), k, v }
+    }
+
+    /// Rebuild the padded [`GlobalKv`] this frame was taken from.
+    pub fn to_global(&self, g_pad: usize) -> Result<GlobalKv, WireError> {
+        let rows = self.meta.len();
+        if rows > g_pad {
+            return Err(WireError::Malformed(format!(
+                "{rows} frame rows exceed padded size {g_pad}"
+            )));
+        }
+        let row_len = self.kv_heads * self.head_dim;
+        if self.k.len() != rows * row_len || self.v.len() != rows * row_len {
+            return Err(WireError::Malformed("k/v length mismatch".into()));
+        }
+        let mut k = HostTensor::zeros(&[g_pad, self.kv_heads, self.head_dim]);
+        let mut v = HostTensor::zeros(&[g_pad, self.kv_heads, self.head_dim]);
+        k.data_mut()[..self.k.len()].copy_from_slice(&self.k);
+        v.data_mut()[..self.v.len()].copy_from_slice(&self.v);
+        Ok(GlobalKv { k, v, meta: self.meta.clone() })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Data-plane bytes `attendee` actually receives from this frame: the
+    /// transmitted rows of *other* participants (its own rows never cross
+    /// the wire).  Matches the `NetSim` downlink accounting
+    /// `round_total - own_tx` row for row.
+    pub fn payload_bytes_for(&self, attendee: usize) -> u64 {
+        let row_bytes = GlobalKv::row_bytes(self.kv_heads, self.head_dim) as u64;
+        self.meta
+            .iter()
+            .filter(|m| m.transmitted && m.owner != attendee)
+            .count() as u64
+            * row_bytes
+    }
+
+    /// Exact length of [`GlobalKvFrame::encode`]'s output.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + 4 * 4 + self.meta.len() * 13 + (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(TAG_FRAME, self.encoded_len());
+        w.u32(self.block as u32);
+        w.u32(self.kv_heads as u32);
+        w.u32(self.head_dim as u32);
+        w.u32(self.meta.len() as u32);
+        for m in &self.meta {
+            w.i32(m.pos);
+            w.u32(m.owner as u32);
+            w.u8(m.transmitted as u8);
+            w.f32(m.relevance);
+        }
+        w.f32s(&self.k);
+        w.f32s(&self.v);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::open(b, TAG_FRAME)?;
+        let block = r.u32()? as usize;
+        let kv_heads = r.u32()? as usize;
+        let head_dim = r.u32()? as usize;
+        let rows = r.u32()? as usize;
+        let elems = row_elems(rows, kv_heads, head_dim)?;
+        r.ensure_remaining(rows, 13)?; // pos + owner + transmitted + relevance
+        let mut meta = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let pos = r.i32()?;
+            let owner = r.u32()? as usize;
+            let transmitted = match r.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "bad transmitted flag {other}"
+                    )))
+                }
+            };
+            let relevance = r.f32()?;
+            meta.push(KvRowMeta { pos, owner, transmitted, relevance });
+        }
+        let k = r.f32s(elems)?;
+        let v = r.f32s(elems)?;
+        r.done()?;
+        Ok(Self { block, kv_heads, head_dim, meta, k, v })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DecodeTail — per-step cache append
+// ---------------------------------------------------------------------------
+
+/// One decode-step KV row append for one block: the wire form of the
+/// device decode tail (paper §IV-C).  A networked decode ships one of
+/// these per layer per generated token instead of re-sending the cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeTail {
+    pub block: usize,
+    /// Global position of the appended token.
+    pub pos: i32,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Appended key row `[kv_heads × head_dim]`.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl DecodeTail {
+    pub fn from_row(block: usize, pos: i32, k: &[f32], v: &[f32], kv_heads: usize, head_dim: usize) -> Self {
+        debug_assert_eq!(k.len(), kv_heads * head_dim);
+        debug_assert_eq!(v.len(), kv_heads * head_dim);
+        Self { block, pos, kv_heads, head_dim, k: k.to_vec(), v: v.to_vec() }
+    }
+
+    /// Data-plane bytes: one K row + one V row.
+    pub fn payload_bytes(&self) -> u64 {
+        4 * (self.k.len() + self.v.len()) as u64
+    }
+
+    /// Exact length of [`DecodeTail::encode`]'s output.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + 4 * 4 + (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(TAG_DECODE_TAIL, self.encoded_len());
+        w.u32(self.block as u32);
+        w.i32(self.pos);
+        w.u32(self.kv_heads as u32);
+        w.u32(self.head_dim as u32);
+        w.f32s(&self.k);
+        w.f32s(&self.v);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::open(b, TAG_DECODE_TAIL)?;
+        let block = r.u32()? as usize;
+        let pos = r.i32()?;
+        let kv_heads = r.u32()? as usize;
+        let head_dim = r.u32()? as usize;
+        let elems = row_elems(1, kv_heads, head_dim)?;
+        let k = r.f32s(elems)?;
+        let v = r.f32s(elems)?;
+        r.done()?;
+        Ok(Self { block, pos, kv_heads, head_dim, k, v })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TokenBroadcast
+// ---------------------------------------------------------------------------
+
+/// A decoded token pushed from the decoding participant to its peers
+/// (e.g. streaming the answer back, or driving a collaborative decode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenBroadcast {
+    /// Decode step the token was produced at.
+    pub step: usize,
+    pub token: i32,
+}
+
+impl TokenBroadcast {
+    /// Exact length of [`TokenBroadcast::encode`]'s output.
+    pub const ENCODED_LEN: usize = HEADER_BYTES + 2 * 4;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(TAG_TOKEN, Self::ENCODED_LEN);
+        w.u32(self.step as u32);
+        w.i32(self.token);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::open(b, TAG_TOKEN)?;
+        let step = r.u32()? as usize;
+        let token = r.i32()?;
+        r.done()?;
+        Ok(Self { step, token })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(rows: usize, hkv: usize, hd: usize, base: f32) -> HostTensor {
+        let mut t = HostTensor::zeros(&[rows, hkv, hd]);
+        for i in 0..rows {
+            t.row_mut(i).fill(base + i as f32);
+        }
+        t
+    }
+
+    #[test]
+    fn contribution_extracts_flagged_rows() {
+        let k = tensor(4, 2, 3, 10.0);
+        let v = tensor(4, 2, 3, -10.0);
+        let pos = [5, 6, 7, 8];
+        let tx = [true, false, true, false];
+        let rel = [0.25f64, 0.5, 0.75, 1.0];
+        let c = KvContribution::from_rows(2, 1, &k, &v, &pos, &tx, Some(&rel));
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.pos, vec![5, 7]);
+        assert_eq!(c.relevance, vec![0.25, 0.75]);
+        assert_eq!(&c.k[..6], k.row(0));
+        assert_eq!(&c.k[6..], k.row(2));
+        assert_eq!(c.payload_bytes(), 2 * GlobalKv::row_bytes(2, 3) as u64);
+    }
+
+    #[test]
+    fn contribution_roundtrip_and_lengths() {
+        let k = tensor(3, 1, 2, 1.0);
+        let c = KvContribution::from_rows(
+            0,
+            2,
+            &k,
+            &k.clone(),
+            &[0, 1, 2],
+            &[true, true, false],
+            None,
+        );
+        let bytes = c.encode();
+        assert_eq!(bytes.len(), c.encoded_len());
+        assert_eq!(KvContribution::decode(&bytes).unwrap(), c);
+        assert_eq!(c.payload_bytes() + c.control_bytes(), bytes.len() as u64);
+    }
+
+    #[test]
+    fn frame_roundtrip_through_global_kv() {
+        let k = tensor(3, 1, 2, 1.0);
+        let pos = [0, 1, 2];
+        let tx = [true, false, true];
+        let g = GlobalKv::pack(&[(&k, &k.clone(), &pos, 3, &tx)], 5).unwrap();
+        let f = GlobalKvFrame::from_global(4, &g);
+        assert_eq!(f.rows(), 3);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        let f2 = GlobalKvFrame::decode(&bytes).unwrap();
+        assert_eq!(f2, f);
+        let g2 = f2.to_global(5).unwrap();
+        assert_eq!(g2.k, g.k);
+        assert_eq!(g2.v, g.v);
+        assert_eq!(g2.meta, g.meta);
+        // rows not transmitted or owned by the attendee do not cross the
+        // wire: owner 0 receives nothing of its own rows.
+        assert_eq!(f.payload_bytes_for(0), 0);
+        assert_eq!(f.payload_bytes_for(1), 2 * GlobalKv::row_bytes(1, 2) as u64);
+    }
+
+    #[test]
+    fn decode_tail_and_token_roundtrip() {
+        let t = DecodeTail::from_row(3, 17, &[1.0, 2.0], &[3.0, 4.0], 1, 2);
+        let bytes = t.encode();
+        assert_eq!(bytes.len(), t.encoded_len());
+        assert_eq!(DecodeTail::decode(&bytes).unwrap(), t);
+        assert_eq!(t.payload_bytes(), GlobalKv::row_bytes(1, 2) as u64);
+
+        let tb = TokenBroadcast { step: 9, token: -1 };
+        let bytes = tb.encode();
+        assert_eq!(bytes.len(), TokenBroadcast::ENCODED_LEN);
+        assert_eq!(TokenBroadcast::decode(&bytes).unwrap(), tb);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let tb = TokenBroadcast { step: 1, token: 2 }.encode();
+        // truncated
+        assert!(matches!(
+            TokenBroadcast::decode(&tb[..tb.len() - 1]),
+            Err(WireError::Truncated(_))
+        ));
+        // wrong tag for the decoder
+        assert!(matches!(
+            KvContribution::decode(&tb),
+            Err(WireError::BadTag { .. })
+        ));
+        // trailing bytes
+        let mut long = tb.clone();
+        long.push(0);
+        assert!(matches!(TokenBroadcast::decode(&long), Err(WireError::Trailing(1))));
+        // bad version
+        let mut bad = tb.clone();
+        bad[2] = 99;
+        assert!(matches!(TokenBroadcast::decode(&bad), Err(WireError::Version(99))));
+        // bad magic
+        let mut bad = tb;
+        bad[0] = 0;
+        assert!(matches!(TokenBroadcast::decode(&bad), Err(WireError::BadTag { .. })));
+    }
+
+    #[test]
+    fn decode_rejects_hostile_length_fields() {
+        // A ~19-byte frame claiming u32::MAX rows must fail cleanly
+        // (Truncated) before any row-sized allocation happens.
+        let mut msg = vec![WIRE_MAGIC, TAG_FRAME, WIRE_VERSION];
+        for field in [7u32, 1, 1, u32::MAX] {
+            msg.extend_from_slice(&field.to_le_bytes());
+        }
+        assert!(matches!(
+            GlobalKvFrame::decode(&msg),
+            Err(WireError::Truncated(_))
+        ));
+        // All-max dimensions overflow usize: must be Malformed, not a
+        // silent wrap that "successfully" decodes inconsistent lengths.
+        let mut msg = vec![WIRE_MAGIC, TAG_CONTRIBUTION, WIRE_VERSION];
+        for field in [0u32, 0, u32::MAX, u32::MAX, u32::MAX] {
+            msg.extend_from_slice(&field.to_le_bytes());
+        }
+        assert!(matches!(
+            KvContribution::decode(&msg),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn frame_to_global_validates() {
+        let k = tensor(2, 1, 2, 0.0);
+        let g = GlobalKv::pack(&[(&k, &k.clone(), &[0, 1], 2, &[true, true])], 2).unwrap();
+        let f = GlobalKvFrame::from_global(0, &g);
+        assert!(f.to_global(1).is_err()); // rows exceed padding
+        let mut broken = f.clone();
+        broken.k.pop();
+        assert!(broken.to_global(4).is_err());
+    }
+}

@@ -3,7 +3,13 @@
 //!
 //! Covers the paper's experiments: uniform H (Fig. 5), the four placement
 //! schemes of Fig. 7 (Shallow-Half / Deep-Half / Progressive / Regressive),
-//! and per-participant intervals (Fig. 8's publisher sweep).
+//! and per-participant intervals (Fig. 8's publisher sweep).  Attendance
+//! perturbations — per-node dropout ([`SyncSchedule::with_dropout`]) —
+//! are applied to the schedule itself, so the session driver never
+//! special-cases a missing participant: a dropped node is simply not
+//! scheduled for that round.
+
+use crate::util::prng::Xoshiro256ss;
 
 /// Per-block, per-participant attendance matrix.
 #[derive(Debug, Clone)]
@@ -162,6 +168,25 @@ impl SyncSchedule {
     pub fn total_attendances(&self) -> usize {
         self.attend.iter().flatten().filter(|&&b| b).count()
     }
+
+    /// Mask each scheduled attendance independently with probability
+    /// `prob` (per-node dropout: flaky links, stragglers past the round
+    /// deadline, duty-cycled devices).  Only `true` slots draw from the
+    /// RNG, never-attending slots stay untouched, and `prob <= 0` returns
+    /// the schedule unchanged without consuming randomness.  If every
+    /// attendee of a block drops, the block degrades to local attention
+    /// for everyone — the same path a never-syncing schedule takes.
+    pub fn with_dropout(&self, prob: f64, rng: &mut Xoshiro256ss) -> SyncSchedule {
+        if prob <= 0.0 {
+            return self.clone();
+        }
+        let attend = self
+            .attend
+            .iter()
+            .map(|row| row.iter().map(|&a| a && !rng.bernoulli(prob)).collect())
+            .collect();
+        SyncSchedule { attend }
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +259,47 @@ mod tests {
         ] {
             assert_eq!(scheme.sync_blocks(8).len(), 4, "{scheme:?}");
         }
+    }
+
+    #[test]
+    fn dropout_zero_is_identity_and_draws_nothing() {
+        let s = SyncSchedule::uniform(8, 3, 2);
+        let mut rng = Xoshiro256ss::new(1);
+        let masked = s.with_dropout(0.0, &mut rng);
+        assert_eq!(masked.attend, s.attend);
+        // No randomness consumed: the next draw matches a fresh stream.
+        let mut fresh = Xoshiro256ss::new(1);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
+    fn dropout_only_removes_attendance() {
+        let s = SyncSchedule::uniform(8, 4, 2);
+        let mut rng = Xoshiro256ss::new(7);
+        let masked = s.with_dropout(0.5, &mut rng);
+        assert_eq!(masked.n_blocks(), s.n_blocks());
+        assert_eq!(masked.n_participants(), s.n_participants());
+        for (m, row) in masked.attend.iter().enumerate() {
+            for (p, &a) in row.iter().enumerate() {
+                assert!(!a || s.attend[m][p], "dropout added attendance at ({m}, {p})");
+            }
+        }
+        assert!(masked.total_attendances() <= s.total_attendances());
+    }
+
+    #[test]
+    fn dropout_deterministic_and_rate_plausible() {
+        let s = SyncSchedule::uniform(64, 8, 1); // 512 attendance slots
+        let mut r1 = Xoshiro256ss::new(11);
+        let mut r2 = Xoshiro256ss::new(11);
+        let a = s.with_dropout(0.3, &mut r1);
+        let b = s.with_dropout(0.3, &mut r2);
+        assert_eq!(a.attend, b.attend, "same seed must give the same mask");
+        let kept = a.total_attendances() as f64 / s.total_attendances() as f64;
+        assert!((kept - 0.7).abs() < 0.1, "kept fraction {kept}");
+        // Full dropout silences every round.
+        let mut r3 = Xoshiro256ss::new(3);
+        assert_eq!(s.with_dropout(1.0, &mut r3).total_attendances(), 0);
     }
 
     #[test]

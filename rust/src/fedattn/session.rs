@@ -1,268 +1,38 @@
-//! One collaborative-inference task: the federated prefill (Alg. 1) and the
-//! publisher's autoregressive decode over the per-block KV caches (§IV-C).
+//! `FedSession` — the stable session facade.
 //!
-//! Device-resident execution (paper §VI computation/communication
-//! co-design):
+//! The session layer proper lives in the participant-protocol modules:
+//! [`driver`] orchestrates rounds as typed messages ([`protocol`])
+//! between per-participant [`node`]s under a pluggable [`aggregate`]
+//! policy.  `FedSession` wraps [`SessionDriver`] one-to-one so existing
+//! callers (coordinator, benches, examples, golden fixtures) keep their
+//! API; its output is byte-identical to the pre-protocol session, which
+//! the `session_golden` fixture pins across policies, schedules and
+//! worker counts.
 //!
-//! * At every sync block the packed global KV is uploaded to the device
-//!   **once** and all attendees attend over the shared handles
-//!   ([`Engine::attn_ffn_dev`]); upload bytes per round no longer scale
-//!   with the attendee count.
-//! * At decode time each block cache is **frozen** on the device after
-//!   prefill ([`BlockCache::freeze_device`]): the `[C]` K/V buffers and
-//!   the `[1, C]` visibility mask ship once, and each token step uploads
-//!   only the small `[R]` decode tail — O(1) bytes per step in `C`.
-//!   Falls back to full-cache uploads when the artifact set has no
-//!   decode-tail variants.
-//! * The per-participant loops (local blocks, QKV projection, attendee
-//!   attention, multi-participant decode) run on an [`exec::Pool`] when
-//!   `SessionConfig::workers > 1`.  Results are collected in participant
-//!   order and all host-side reductions stay sequential, so a parallel
-//!   session is byte-identical to the sequential one.
-//!
-//! [`exec::Pool`]: crate::exec::Pool
+//! [`driver`]: crate::fedattn::driver
+//! [`protocol`]: crate::fedattn::protocol
+//! [`node`]: crate::fedattn::node
+//! [`aggregate`]: crate::fedattn::aggregate
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::data::Partition;
 use crate::exec::Pool;
-use crate::fedattn::kv::GlobalKv;
-use crate::fedattn::masks::{decode_mask_set_visible, global_mask, local_mask};
-use crate::fedattn::relevance::{self, RelevanceTracker};
-use crate::fedattn::schedule::SyncSchedule;
-use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
-use crate::net::{NetReport, NetSim};
+use crate::net::NetSim;
 use crate::runtime::Engine;
-use crate::tensor::{DeviceTensor, HostTensor, NEG_MASK};
-use crate::tokenizer;
-use crate::util::prng::Xoshiro256ss;
 
-/// Session knobs (one FedAttn task).
-#[derive(Debug, Clone)]
-pub struct SessionConfig {
-    pub schedule: SyncSchedule,
-    pub local_sparsity: LocalSparsity,
-    pub kv_policy: KvExchangePolicy,
-    pub max_new_tokens: usize,
-    pub seed: u64,
-    /// Collect every participant's final hidden states (error analysis /
-    /// divergence metrics; costs memory, off for serving).
-    pub record_hidden: bool,
-    /// Keep KV caches and decode a response for *every* participant (the
-    /// paper's Fig. 5 reports mean/min/max EM across participants).  The
-    /// default caches and decodes only the task publisher.
-    pub decode_all: bool,
-    /// Coordinator-allocated per-participant KV row budgets (heterogeneous
-    /// links); overrides the budget embedded in budgeted policies.  For
-    /// [`KvExchangePolicy::ByteBudget`] with no explicit allocation the
-    /// session derives one from the network simulator's link specs.
-    pub kv_row_budgets: Option<Vec<usize>>,
-    /// Thread-pool width for the per-participant loops (1 = sequential).
-    /// Parallel sessions are byte-identical to sequential ones (ordered
-    /// result collection + sequential host-side reductions).
-    pub workers: usize,
-    /// Freeze decode caches on the device and ship only the decode tail
-    /// per token step.  Ignored (with a host-path fallback) when the
-    /// artifact set predates decode-tail variants.
-    pub device_decode: bool,
-}
+pub use crate::fedattn::driver::{
+    PrefillOutput, SessionConfig, SessionDriver, SessionReport,
+};
 
-impl SessionConfig {
-    pub fn new(schedule: SyncSchedule) -> Self {
-        Self {
-            schedule,
-            local_sparsity: LocalSparsity::full(),
-            kv_policy: KvExchangePolicy::Full,
-            max_new_tokens: 12,
-            seed: 0,
-            record_hidden: false,
-            decode_all: false,
-            kv_row_budgets: None,
-            workers: 1,
-            device_decode: true,
-        }
-    }
-}
-
-/// Per-participant mutable state during prefill.  The per-layer tensors
-/// are `Arc`'d so the parallel loops can borrow them from `'static` pool
-/// closures without copying.
-struct PState {
-    /// Global positions of the kept tokens (after local sparsity).
-    pos: Vec<i32>,
-    /// Padded positions array (`l_pad` long; padding repeats the last pos).
-    pos_pad: Arc<Vec<i32>>,
-    valid: usize,
-    /// Hidden states `[l_pad, d]`.
-    x: Arc<HostTensor>,
-    /// Cached local causal mask (reused across local blocks).
-    lmask: Arc<HostTensor>,
-}
-
-/// The frozen device half of a [`BlockCache`]: the prefill-time cache and
-/// its visibility mask live on the device (uploaded once), while rows
-/// appended during decode accumulate in a small host-side tail that is
-/// re-uploaded per step.
-struct DevCache {
-    k: DeviceTensor,
-    v: DeviceTensor,
-    mask: DeviceTensor,
-    /// Cache rows at freeze time; later appends land in the tail.
-    base_len: usize,
-    /// `[R, Hkv, hd]` decode-appended rows (zero-padded; occupancy is
-    /// encoded by `tail_mask`).
-    k_tail: HostTensor,
-    v_tail: HostTensor,
-    /// `[1, R]` tail visibility mask.
-    tail_mask: HostTensor,
-}
-
-/// The publisher's KV cache for one block, sized to the decode-cache
-/// capacity `C`.
-struct BlockCache {
-    k: HostTensor,
-    v: HostTensor,
-    /// Visibility flags per cache row (for the decode mask).
-    visible: Vec<bool>,
-    /// Next free row.
-    len: usize,
-    /// Incremental `[1, C]` decode mask, kept in lockstep with `visible`
-    /// (only the newly appended columns flip on `push_rows`).
-    dmask: HostTensor,
-    /// Device-frozen prefix + growing tail (device-resident decode).
-    dev: Option<DevCache>,
-}
-
-impl BlockCache {
-    fn new(c: usize, kv_heads: usize, head_dim: usize) -> Self {
-        Self {
-            k: HostTensor::zeros(&[c, kv_heads, head_dim]),
-            v: HostTensor::zeros(&[c, kv_heads, head_dim]),
-            visible: vec![false; c],
-            len: 0,
-            dmask: HostTensor::full(&[1, c], NEG_MASK),
-            dev: None,
-        }
-    }
-
-    fn push_rows(&mut self, k: &HostTensor, v: &HostTensor, rows: usize, visible: &[bool]) {
-        let c = self.k.shape()[0];
-        assert!(self.len + rows <= c, "decode cache overflow: {} + {rows} > {c}", self.len);
-        self.k.copy_rows_from(k, 0..rows, self.len);
-        self.v.copy_rows_from(v, 0..rows, self.len);
-        self.visible[self.len..self.len + rows].copy_from_slice(&visible[..rows]);
-        for (i, &vis) in visible[..rows].iter().enumerate() {
-            if vis {
-                decode_mask_set_visible(&mut self.dmask, self.len + i);
-            }
-        }
-        // The device prefix is frozen: post-freeze rows go to the tail.  A
-        // full tail (e.g. repeated decodes on one participant) drops the
-        // frozen prefix — the host cache is always complete, so the
-        // session falls back to full-cache uploads (or re-freezes a fresh
-        // prefix at the next decode) instead of failing.
-        let len = self.len;
-        let tail_full = self
-            .dev
-            .as_ref()
-            .is_some_and(|dev| len + rows - dev.base_len > dev.k_tail.shape()[0]);
-        if tail_full {
-            self.dev = None;
-        } else if let Some(dev) = self.dev.as_mut() {
-            for i in 0..rows {
-                let t = len + i - dev.base_len;
-                dev.k_tail.copy_rows_from(k, i..i + 1, t);
-                dev.v_tail.copy_rows_from(v, i..i + 1, t);
-                if visible[i] {
-                    decode_mask_set_visible(&mut dev.tail_mask, t);
-                }
-            }
-        }
-        self.len += rows;
-    }
-
-    /// Upload the cache (K, V, visibility mask) to the device once and
-    /// start routing appended rows into an `[R]` tail.  Idempotent.
-    fn freeze_device(&mut self, engine: &Engine, r: usize) -> Result<()> {
-        if self.dev.is_some() {
-            return Ok(());
-        }
-        let (hkv, hd) = (self.k.shape()[1], self.k.shape()[2]);
-        self.dev = Some(DevCache {
-            k: engine.upload(&self.k)?,
-            v: engine.upload(&self.v)?,
-            mask: engine.upload(&self.dmask)?,
-            base_len: self.len,
-            k_tail: HostTensor::zeros(&[r, hkv, hd]),
-            v_tail: HostTensor::zeros(&[r, hkv, hd]),
-            tail_mask: HostTensor::full(&[1, r], NEG_MASK),
-        });
-        Ok(())
-    }
-}
-
-/// Prefill result (before decoding).
-pub struct PrefillOutput {
-    /// Final hidden states per participant (only when `record_hidden`),
-    /// trimmed to valid rows.
-    pub hidden: Vec<Option<HostTensor>>,
-    /// Positions of each participant's valid tokens.
-    pub positions: Vec<Vec<i32>>,
-    pub net: NetReport,
-    pub wall_ms: f64,
-}
-
-/// Full session result.
-pub struct SessionReport {
-    /// The task publisher's decoded answer.
-    pub answer: String,
-    pub generated_tokens: usize,
-    /// Per-participant answers (only participants that kept caches decode;
-    /// others are `None`).  `answers[publisher]` equals `answer`.
-    pub answers: Vec<Option<String>>,
-    pub net: NetReport,
-    pub prefill_ms: f64,
-    pub decode_ms: f64,
-    /// Final hidden per participant (when `record_hidden`).
-    pub hidden: Vec<Option<HostTensor>>,
-    pub positions: Vec<Vec<i32>>,
-}
-
-/// Run `f(0..n)` across the pool (ordered results) or inline when no pool
-/// is configured.  Errors are stringly-typed so closure results satisfy
-/// the pool's `Send + 'static` bound.
-fn run_parallel<T, F>(pool: Option<&Arc<Pool>>, n: usize, f: F) -> Result<Vec<T>>
-where
-    T: Send + 'static,
-    F: Fn(usize) -> Result<T, String> + Send + Sync + 'static,
-{
-    let outs: Vec<Result<T, String>> = match pool {
-        Some(pool) => pool
-            .scope_map(n, f)
-            .map_err(|e| anyhow::anyhow!("parallel section failed: {e}"))?,
-        None => (0..n).map(f).collect(),
-    };
-    outs.into_iter().map(|r| r.map_err(anyhow::Error::msg)).collect()
-}
-
-/// Drives one collaborative task through the engine.
+/// Drives one collaborative task through the engine.  Thin facade over
+/// [`SessionDriver`]; see the [`driver`] module for the round protocol.
+///
+/// [`driver`]: crate::fedattn::driver
 pub struct FedSession<'a> {
-    engine: &'a Engine,
-    cfg: SessionConfig,
-    parts: Vec<PState>,
-    /// `caches[p]` — per-layer KV caches for participant `p`; empty vec for
-    /// participants that will not decode.
-    caches: Vec<Vec<BlockCache>>,
-    net: NetSim,
-    rng: Xoshiro256ss,
-    publisher: usize,
-    total_len: usize,
-    /// Per-row attention-mass accumulator (only for relevance policies).
-    relevance: Option<RelevanceTracker>,
-    /// Worker pool for the per-participant loops (`workers > 1`).
-    pool: Option<Arc<Pool>>,
+    driver: SessionDriver<'a>,
 }
 
 impl<'a> FedSession<'a> {
@@ -272,584 +42,40 @@ impl<'a> FedSession<'a> {
         cfg: SessionConfig,
         net: NetSim,
     ) -> Result<Self> {
-        let n = partition.n_participants();
-        anyhow::ensure!(net.n_participants() == n, "net sim participant count");
-        anyhow::ensure!(cfg.schedule.n_participants() == n, "schedule participant count");
-        anyhow::ensure!(
-            cfg.schedule.n_blocks() == engine.manifest.model.n_layers,
-            "schedule block count"
-        );
-        let mut rng = Xoshiro256ss::new(cfg.seed ^ 0x5E55_10);
-        let md = &engine.manifest.model;
-
-        // Build per-participant state: apply local sparsity, pad, embed.
-        let mut parts = Vec::with_capacity(n);
-        for p in 0..n {
-            let (s, e) = partition.spans[p];
-            let span_ids = &partition.ids[s..e];
-            // Protect the tail of the publisher (the "A:" anchor) from
-            // local-sparsity dropping.
-            let protect = if p == partition.publisher() { 3 } else { 0 };
-            let keep = cfg.local_sparsity.select(span_ids.len(), protect, &mut rng);
-            let ids: Vec<i32> = keep.iter().map(|&i| span_ids[i]).collect();
-            let pos: Vec<i32> = keep.iter().map(|&i| (s + i) as i32).collect();
-            let l_pad = engine.manifest.pick_l(ids.len())?;
-            let mut pos_pad = pos.clone();
-            let last = *pos_pad.last().unwrap_or(&0);
-            pos_pad.resize(l_pad, last);
-            let mut x = HostTensor::zeros(&[l_pad, md.d_model]);
-            let emb = engine.embed(&ids)?;
-            x.copy_rows_from(&emb, 0..ids.len(), 0);
-            let valid = ids.len();
-            let lmask = local_mask(&pos_pad, valid);
-            parts.push(PState {
-                pos,
-                pos_pad: Arc::new(pos_pad),
-                valid,
-                x: Arc::new(x),
-                lmask: Arc::new(lmask),
-            });
-        }
-
-        let c = engine.manifest.decode_cache;
-        let publisher = partition.publisher();
-        let caches: Vec<Vec<BlockCache>> = (0..n)
-            .map(|p| {
-                if p == publisher || cfg.decode_all {
-                    (0..md.n_layers)
-                        .map(|_| BlockCache::new(c, md.n_kv_heads, md.head_dim))
-                        .collect()
-                } else {
-                    Vec::new()
-                }
-            })
-            .collect();
-
-        if let Some(b) = &cfg.kv_row_budgets {
-            anyhow::ensure!(b.len() == n, "kv_row_budgets length {} != {n}", b.len());
-        }
-        let relevance = cfg.kv_policy.needs_relevance().then(|| {
-            RelevanceTracker::new(&parts.iter().map(|s| s.valid).collect::<Vec<_>>())
-        });
-        let pool = (cfg.workers > 1).then(|| Arc::new(Pool::new(cfg.workers)));
-
-        Ok(Self {
-            engine,
-            cfg,
-            parts,
-            caches,
-            net,
-            rng,
-            publisher,
-            total_len: partition.len(),
-            relevance,
-            pool,
-        })
+        Ok(Self { driver: SessionDriver::new(engine, partition, cfg, net)? })
     }
 
     /// Run the federated prefill (Alg. 1 lines 2–14).
     pub fn prefill(&mut self) -> Result<PrefillOutput> {
-        let t0 = std::time::Instant::now();
-        let md = self.engine.manifest.model.clone();
-        let n = self.parts.len();
-        let n_layers = md.n_layers;
-        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
-        let row_bytes = row_bytes_usize as u64;
-
-        // Budgeted policies: resolve per-participant row budgets once per
-        // session.  ByteBudget's total is split across heterogeneous links
-        // proportionally to bandwidth unless the coordinator already did.
-        let budgets: Option<Vec<usize>> =
-            match (&self.cfg.kv_row_budgets, self.cfg.kv_policy) {
-                (Some(b), _) => Some(b.clone()),
-                (None, KvExchangePolicy::ByteBudget { bytes_per_round }) => {
-                    Some(crate::net::allocate_row_budgets(
-                        self.net.links(),
-                        bytes_per_round / row_bytes_usize.max(1),
-                    ))
-                }
-                _ => None,
-            };
-
-        for m in 0..n_layers {
-            let attend = self.cfg.schedule.attend[m].clone();
-            let any = attend.iter().any(|&b| b);
-
-            if !any {
-                // Phase I only: every participant runs a fused local block
-                // (pool-parallel; ordered collection keeps determinism).
-                let inputs: Vec<_> = self
-                    .parts
-                    .iter()
-                    .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
-                    .collect();
-                let engine = self.engine.clone();
-                let outs = run_parallel(self.pool.as_ref(), n, move |p| {
-                    let (x, pos, lmask) = &inputs[p];
-                    engine
-                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
-                        .map_err(|e| format!("{e:#}"))
-                })?;
-                for (p, (xo, k, v)) in outs.into_iter().enumerate() {
-                    self.parts[p].x = Arc::new(xo);
-                    if !self.caches[p].is_empty() {
-                        let valid = self.parts[p].valid;
-                        let vis = vec![true; valid];
-                        self.caches[p][m].push_rows(&k, &v, valid, &vis);
-                    }
-                }
-                continue;
-            }
-
-            // Sync block: everyone produces (q,)k,v; attendees do global
-            // attention over the aggregated KV.  Phase 1 is pool-parallel.
-            let inputs: Vec<_> = self
-                .parts
-                .iter()
-                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), Arc::clone(&st.lmask)))
-                .collect();
-            let attend_in = Arc::new(attend.clone());
-            let engine = self.engine.clone();
-            let phase1 = run_parallel(self.pool.as_ref(), n, move |p| {
-                let (x, pos, lmask) = &inputs[p];
-                if attend_in[p] {
-                    engine
-                        .qkv_project(m, x.as_ref(), pos.as_slice())
-                        .map(|(q, k, v)| (Some(q), k, v, None))
-                } else {
-                    // Non-attendee: plain local block; its fresh K/V are
-                    // what it would transmit to attendees.
-                    engine
-                        .block_fused(m, x.as_ref(), pos.as_slice(), lmask.as_ref())
-                        .map(|(xo, k, v)| (None, k, v, Some(xo)))
-                }
-                .map_err(|e| format!("{e:#}"))
-            })?;
-            let mut qs: Vec<Option<HostTensor>> = Vec::with_capacity(n);
-            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
-            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
-            for (p, (q, k, v, xo)) in phase1.into_iter().enumerate() {
-                qs.push(q);
-                ks.push(k);
-                vs.push(v);
-                if let Some(xo) = xo {
-                    self.parts[p].x = Arc::new(xo);
-                }
-            }
-
-            // Sparse/adaptive KV exchange: per-participant transmitted-row
-            // flags.  Relevance policies see only mass accumulated at
-            // *earlier* sync rounds (causal selection).
-            let tx_flags: Vec<Vec<bool>> = (0..n)
-                .map(|p| {
-                    let ctx = TxContext {
-                        who: p,
-                        publisher: self.publisher,
-                        len: self.parts[p].valid,
-                        row_bytes: row_bytes_usize,
-                        relevance: self.relevance.as_ref().map(|t| t.scores(p)),
-                        row_budget: budgets.as_ref().map(|b| b[p]),
-                    };
-                    self.cfg.kv_policy.transmitted_ctx(&ctx, &mut self.rng)
-                })
-                .collect();
-
-            // Pack the global KV (Eq. 20).
-            let rows_total: usize = self.parts.iter().map(|s| s.valid).sum();
-            let g_pad = self.engine.manifest.pick_g(rows_total)?;
-            let parts_refs: Vec<_> = (0..n)
-                .map(|p| {
-                    (
-                        &ks[p],
-                        &vs[p],
-                        self.parts[p].pos.as_slice(),
-                        self.parts[p].valid,
-                        tx_flags[p].as_slice(),
-                    )
-                })
-                .collect();
-            let mut gkv = GlobalKv::pack(&parts_refs, g_pad)?;
-            if let Some(tr) = &self.relevance {
-                gkv.attach_relevance(tr.all_scores());
-            }
-            let (kv_pos, kv_owner, kv_tx) = gkv.meta_columns();
-
-            // Communication accounting + simulated transfer time.
-            let tx_rows = gkv.tx_rows_by_owner(n);
-            let tx_bytes: Vec<u64> =
-                tx_rows.iter().map(|&r| r as u64 * row_bytes).collect();
-            self.net.exchange_round(&tx_bytes, &attend);
-
-            // Upload the packed global KV to the device ONCE per sync
-            // round; every attendee's attention shares the handles (the
-            // buffers are immutable, so read-only sharing holds by
-            // construction).
-            let gk_dev = self.engine.upload(&gkv.k)?;
-            let gv_dev = self.engine.upload(&gkv.v)?;
-
-            // Global attention + FFN for attendees (Eq. 21 + 19),
-            // pool-parallel.  When a relevance policy is active, each
-            // attendee also computes the column marginals of its attention
-            // (row-sum of the attention weights) inside its task; the
-            // accumulation below stays sequential in participant order so
-            // the result is bit-identical to a sequential session.
-            let gkv = Arc::new(gkv);
-            let qs = Arc::new(qs);
-            let kv_meta = Arc::new((kv_pos, kv_owner, kv_tx));
-            let pinputs: Vec<_> = self
-                .parts
-                .iter()
-                .map(|st| (Arc::clone(&st.x), Arc::clone(&st.pos_pad), st.valid))
-                .collect();
-            let attend_in = Arc::new(attend.clone());
-            let track_mass = self.relevance.is_some();
-            let engine = self.engine.clone();
-            let rows = gkv.rows();
-            let gkv_in = Arc::clone(&gkv);
-            type AttnOut = Option<(HostTensor, Option<Vec<f64>>)>;
-            let outs: Vec<AttnOut> = run_parallel(self.pool.as_ref(), n, move |p| {
-                if !attend_in[p] {
-                    return Ok(None);
-                }
-                let (x, pos_pad, valid) = &pinputs[p];
-                let q = qs[p].as_ref().ok_or("missing q for attendee")?;
-                let (kv_pos, kv_owner, kv_tx) = &*kv_meta;
-                let mask = global_mask(
-                    pos_pad.as_slice(),
-                    *valid,
-                    g_pad,
-                    kv_pos,
-                    kv_owner,
-                    kv_tx,
-                    rows,
-                    p,
-                );
-                let mass = track_mass
-                    .then(|| relevance::attention_mass(q, &gkv_in.k, &mask, *valid, rows));
-                let xo = engine
-                    .attn_ffn_dev(m, x.as_ref(), q, &gk_dev, &gv_dev, &mask)
-                    .map_err(|e| format!("{e:#}"))?;
-                Ok(Some((xo, mass)))
-            })?;
-            let mut round_mass: Option<Vec<f64>> =
-                self.relevance.as_ref().map(|_| vec![0.0; gkv.rows()]);
-            for (p, out) in outs.into_iter().enumerate() {
-                let Some((xo, mass)) = out else { continue };
-                if let (Some(acc), Some(mass)) = (round_mass.as_mut(), mass) {
-                    for (a, x) in acc.iter_mut().zip(&mass) {
-                        *a += x;
-                    }
-                }
-                self.parts[p].x = Arc::new(xo);
-            }
-            if let (Some(tr), Some(acc)) = (self.relevance.as_mut(), round_mass) {
-                tr.observe(&gkv.meta, &acc);
-            }
-
-            // Decode caches for this block (paper §IV-C): participants that
-            // attended cache the global KV (restricted to what they could
-            // see); others cache their own local KV.
-            for p in 0..n {
-                if self.caches[p].is_empty() {
-                    continue;
-                }
-                if attend[p] {
-                    let vis: Vec<bool> = gkv
-                        .meta
-                        .iter()
-                        .map(|r| r.owner == p || r.transmitted)
-                        .collect();
-                    self.caches[p][m].push_rows(&gkv.k, &gkv.v, gkv.rows(), &vis);
-                } else {
-                    let vis = vec![true; self.parts[p].valid];
-                    self.caches[p][m].push_rows(&ks[p], &vs[p], self.parts[p].valid, &vis);
-                }
-            }
-        }
-
-        let hidden = self.collect_hidden();
-        Ok(PrefillOutput {
-            hidden,
-            positions: self.parts.iter().map(|s| s.pos.clone()).collect(),
-            net: self.net.report().clone(),
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        })
-    }
-
-    fn collect_hidden(&self) -> Vec<Option<HostTensor>> {
-        self.parts
-            .iter()
-            .map(|st| {
-                if self.cfg.record_hidden {
-                    let mut h = HostTensor::zeros(&[st.valid, st.x.shape()[1]]);
-                    h.copy_rows_from(st.x.as_ref(), 0..st.valid, 0);
-                    Some(h)
-                } else {
-                    None
-                }
-            })
-            .collect()
-    }
-
-    /// The publisher's final prompt hidden state `[1, d]` for participant
-    /// `p` (decode kick-off).
-    fn last_hidden(&self, p: usize) -> HostTensor {
-        let last_row = self.parts[p].valid - 1;
-        let d = self.engine.manifest.model.d_model;
-        let mut h = HostTensor::zeros(&[1, d]);
-        h.copy_rows_from(self.parts[p].x.as_ref(), last_row..last_row + 1, 0);
-        h
+        self.driver.prefill()
     }
 
     /// Greedy decode from participant `p`'s KV caches (requires that `p`
     /// kept caches).  Returns the decoded text and token count.
     pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
-        anyhow::ensure!(!self.caches[p].is_empty(), "participant {p} has no caches");
-        let h_last = self.last_hidden(p);
-        let mut caches = std::mem::take(&mut self.caches[p]);
-        let res = decode_from_caches(
-            self.engine,
-            &mut caches,
-            &h_last,
-            self.total_len,
-            self.cfg.max_new_tokens,
-            self.cfg.device_decode,
-        );
-        self.caches[p] = caches;
-        res
+        self.driver.decode_participant(p)
     }
 
     /// Decode the task publisher.
     pub fn decode(&mut self) -> Result<(String, usize)> {
-        self.decode_participant(self.publisher)
+        self.driver.decode()
     }
 
-    /// Prefill + decode, returning the full report.  With `decode_all`
-    /// and `workers > 1` the per-participant decodes run pool-parallel
-    /// (each participant's caches are independent).
-    pub fn run(mut self) -> Result<SessionReport> {
-        let pre = self.prefill()?;
-        let t0 = std::time::Instant::now();
-        let n = self.parts.len();
-        let decoders: Vec<usize> =
-            (0..n).filter(|&p| !self.caches[p].is_empty()).collect();
-
-        // Move each decoding participant's caches + kick-off hidden state
-        // into a slot the (shared) pool closure can take exactly once.
-        let slots: Vec<Mutex<Option<(Vec<BlockCache>, HostTensor)>>> = decoders
-            .iter()
-            .map(|&p| {
-                let caches = std::mem::take(&mut self.caches[p]);
-                Mutex::new(Some((caches, self.last_hidden(p))))
-            })
-            .collect();
-        let slots = Arc::new(slots);
-        let engine = self.engine.clone();
-        let (total_len, max_new, device_decode) =
-            (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
-        let slots_in = Arc::clone(&slots);
-        let decoded: Vec<(String, usize)> =
-            run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
-                let (mut caches, h_last) = slots_in[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .ok_or("decode slot taken twice")?;
-                decode_from_caches(&engine, &mut caches, &h_last, total_len, max_new, device_decode)
-                    .map_err(|e| format!("{e:#}"))
-            })?;
-
-        let mut answers: Vec<Option<String>> = vec![None; n];
-        let mut generated = 0usize;
-        let mut answer = String::new();
-        for (&p, (text, tokens)) in decoders.iter().zip(decoded) {
-            if p == self.publisher {
-                answer = text.clone();
-                generated = tokens;
-            }
-            answers[p] = Some(text);
-        }
-        Ok(SessionReport {
-            answer,
-            generated_tokens: generated,
-            answers,
-            net: self.net.into_report(),
-            prefill_ms: pre.wall_ms,
-            decode_ms: t0.elapsed().as_secs_f64() * 1e3,
-            hidden: pre.hidden,
-            positions: pre.positions,
-        })
+    /// Prefill + decode, returning the full report.
+    pub fn run(self) -> Result<SessionReport> {
+        self.driver.run()
     }
 
     /// Prefill only (error-analysis paths that do not decode).
-    pub fn run_prefill_only(mut self) -> Result<PrefillOutput> {
-        self.prefill()
+    pub fn run_prefill_only(self) -> Result<PrefillOutput> {
+        self.driver.run_prefill_only()
     }
 
     /// Attach a shared worker pool (e.g. the coordinator's, reused across
     /// tasks) instead of the session-owned one `workers > 1` would spawn.
     /// Pass `workers = 1` in the config when using this to avoid creating
     /// a throwaway pool in [`FedSession::new`].
-    pub fn with_shared_pool(mut self, pool: Arc<Pool>) -> Self {
-        self.pool = Some(pool);
-        self
-    }
-}
-
-/// Greedy decode over one participant's per-layer caches.
-///
-/// When `device_decode` is set and the artifact set has a decode-tail
-/// variant wide enough for the horizon, each cache is frozen on the
-/// device first and every step uploads only the `[R]` tail (O(1) bytes
-/// per step in the cache capacity); otherwise the host path uploads the
-/// full cache per layer per step, as before.
-fn decode_from_caches(
-    engine: &Engine,
-    caches: &mut [BlockCache],
-    h_last: &HostTensor,
-    total_len: usize,
-    max_new_tokens: usize,
-    device_decode: bool,
-) -> Result<(String, usize)> {
-    // A step appends at most one row per layer, and the final step never
-    // appends: at most max_new_tokens - 1 tail rows per decode.
-    let steps = max_new_tokens.saturating_sub(1);
-    let tail_r = (device_decode && steps > 0)
-        .then(|| engine.manifest.pick_decode_tail(steps))
-        .flatten();
-    // Freeze lazily, right before the first real decode pass — a decode
-    // that terminates on its kick-off logits (immediate EOS) uploads
-    // nothing at all, same as the host path.
-    let mut frozen = false;
-
-    // Kick-off logits from the participant's final prompt token.
-    let mut logits = engine.logits(h_last)?;
-    let mut out_ids: Vec<i32> = Vec::new();
-    for step in 0..max_new_tokens {
-        let next = argmax(&logits);
-        if next == tokenizer::EOS {
-            break;
-        }
-        out_ids.push(next);
-        if step + 1 == max_new_tokens {
-            break;
-        }
-        if let (Some(r), false) = (tail_r, frozen) {
-            for cache in caches.iter_mut() {
-                // A previous decode may have part-filled this cache's
-                // tail; when the remaining capacity can't fit this
-                // horizon, drop the stale prefix so freeze_device
-                // re-uploads a fresh one (current cache state, empty
-                // tail).
-                let len = cache.len;
-                let stale = cache
-                    .dev
-                    .as_ref()
-                    .is_some_and(|dev| len - dev.base_len + steps > dev.k_tail.shape()[0]);
-                if stale {
-                    cache.dev = None;
-                }
-                cache.freeze_device(engine, r)?;
-            }
-            frozen = true;
-        }
-        // One decode pass to produce logits for the following token.
-        let pos = (total_len + step) as i32;
-        let mut x = engine.embed(&[next])?;
-        for (m, cache) in caches.iter_mut().enumerate() {
-            let (xo, kn, vn) = match cache.dev.as_ref() {
-                Some(dev) => engine.decode_block_tail(
-                    m,
-                    &x,
-                    pos,
-                    &dev.k,
-                    &dev.v,
-                    &dev.mask,
-                    &dev.k_tail,
-                    &dev.v_tail,
-                    &dev.tail_mask,
-                )?,
-                None => engine.decode_block(m, &x, pos, &cache.k, &cache.v, &cache.dmask)?,
-            };
-            x = xo;
-            cache.push_rows(&kn, &vn, 1, &[true]);
-        }
-        logits = engine.logits(&x)?;
-    }
-    Ok((tokenizer::decode(&out_ids), out_ids.len()))
-}
-
-fn argmax(xs: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best as i32
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::fedattn::masks::decode_mask;
-
-    #[test]
-    fn argmax_picks_largest() {
-        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-    }
-
-    #[test]
-    fn block_cache_push_and_overflow() {
-        let mut c = BlockCache::new(4, 1, 2);
-        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
-        let v = k.clone();
-        c.push_rows(&k, &v, 2, &[true, false]);
-        assert_eq!(c.len, 2);
-        assert_eq!(c.visible[..2], [true, false]);
-        c.push_rows(&k, &v, 2, &[true, true]);
-        assert_eq!(c.len, 4);
-    }
-
-    #[test]
-    #[should_panic(expected = "decode cache overflow")]
-    fn block_cache_overflow_panics() {
-        let mut c = BlockCache::new(2, 1, 2);
-        let k = HostTensor::new(&[2, 1, 2], vec![0.0; 4]).unwrap();
-        c.push_rows(&k, &k.clone(), 2, &[true, true]);
-        c.push_rows(&k, &k.clone(), 1, &[true]);
-    }
-
-    #[test]
-    fn block_cache_incremental_mask_matches_fresh_build() {
-        // The per-cache [1, C] mask flips only the newly appended columns
-        // on push_rows; it must equal a from-scratch decode_mask build at
-        // every state.
-        let mut c = BlockCache::new(6, 1, 2);
-        assert_eq!(c.dmask, decode_mask(6, &c.visible));
-        let k = HostTensor::new(&[2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
-        c.push_rows(&k, &k.clone(), 2, &[true, false]);
-        assert_eq!(c.dmask, decode_mask(6, &c.visible));
-        c.push_rows(&k, &k.clone(), 2, &[false, true]);
-        assert_eq!(c.dmask, decode_mask(6, &c.visible));
-        c.push_rows(&k, &k.clone(), 1, &[true]);
-        assert_eq!(c.dmask, decode_mask(6, &c.visible));
-    }
-
-    #[test]
-    fn run_parallel_matches_sequential_and_reports_errors() {
-        let pool = Arc::new(Pool::new(3));
-        let seq = run_parallel(None, 8, |i| Ok::<usize, String>(i * i)).unwrap();
-        let par = run_parallel(Some(&pool), 8, |i| Ok::<usize, String>(i * i)).unwrap();
-        assert_eq!(seq, par);
-        let err = run_parallel(Some(&pool), 4, |i| {
-            if i == 2 {
-                Err("boom".to_string())
-            } else {
-                Ok(i)
-            }
-        });
-        assert!(err.is_err());
+    pub fn with_shared_pool(self, pool: Arc<Pool>) -> Self {
+        Self { driver: self.driver.with_shared_pool(pool) }
     }
 }

@@ -75,6 +75,12 @@ fn print_help() {
            --kv-budget-rows <k>       row budget for recent-budget / top-k-relevance\n\
            --kv-bytes <b>             total bytes per sync round for byte-budget\n\
            --local-ratio <r>          sparse local-attention keep ratio\n\
+           --dropout <p>              per-node attendance dropout probability\n\
+                                      in [0, 1] (0 = off; masks the sync\n\
+                                      schedule, not the data)\n\
+           --time-scale <f>           compress trace inter-arrival gaps by f\n\
+                                      (serve; default TOML serving.time_scale,\n\
+                                      else 10)\n\
            --tasks <n>, --seed <s>    workload size / determinism\n\
            --engines <n>              serving worker threads\n\
            --workers <n>              per-session participant parallelism\n\
@@ -111,6 +117,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
         f.kv_policy = policy;
     }
     f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
+    if let Some(p) = fedattn::cli::parse_dropout(args)? {
+        f.dropout_prob = p;
+    }
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
     sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
     Ok(sc)
@@ -187,7 +196,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sc = load_config(args)?;
     let engine = build_engine(&sc)?;
     let mut ccfg = CoordinatorConfig::from_system(&sc);
-    ccfg.time_scale = args.f64_or("time-scale", 10.0);
+    // Precedence: --time-scale > TOML serving.time_scale > the serve
+    // subcommand's historical 10x compression.
+    ccfg.time_scale = fedattn::cli::parse_time_scale(args)?
+        .or(sc.serving.time_scale)
+        .unwrap_or(10.0);
     let coord = Coordinator::new(engine, ccfg);
     let trace = WorkloadTrace::generate(&TraceConfig {
         seed: sc.seed,

@@ -100,7 +100,10 @@ impl NetSim {
     /// Execute one KV-exchange round.
     ///
     /// * `tx_bytes[n]` — bytes participant `n` contributes this round (0 if
-    ///   it transmits nothing).
+    ///   it transmits nothing).  The session driver passes the encoded
+    ///   payload size of participant `n`'s `KvContribution` protocol
+    ///   message here, so the accounting below is measured on real wire
+    ///   payloads rather than estimated on the side.
     /// * `attending[n]` — whether participant `n` receives the aggregate.
     ///
     /// Each attendee receives the sum of the *other* participants' payloads

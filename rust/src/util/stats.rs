@@ -48,12 +48,18 @@ impl Summary {
 }
 
 /// Percentile over a copy of the samples (nearest-rank on sorted data).
+///
+/// Total by construction: an empty slice yields 0.0 (serve reports with
+/// zero completed tasks must not leak NaN into BENCH JSON), `p` is
+/// clamped to `[0, 100]`, and NaN samples sort last instead of panicking
+/// the comparator.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
-        return f64::NAN;
+        return 0.0;
     }
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -123,7 +129,20 @@ mod tests {
     }
 
     #[test]
-    fn empty_percentile_nan() {
-        assert!(percentile(&[], 50.0).is_nan());
+    fn empty_percentile_is_zero_not_nan() {
+        // Regression: used to return NaN, which flowed into BENCH JSON
+        // whenever a serve run completed zero tasks.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_total_on_hostile_inputs() {
+        // NaN samples sort last instead of panicking the comparator, and
+        // out-of-range p is clamped.
+        let v = percentile(&[2.0, f64::NAN, 1.0], 0.0);
+        assert_eq!(v, 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
     }
 }

@@ -1,0 +1,301 @@
+//! Participant-protocol message properties (host-side only — no compiled
+//! artifacts needed, so CI always exercises them):
+//!
+//! * every message type encode/decode round-trips bit-exactly;
+//! * **byte accounting**: for every one of the six KV policies, the sum
+//!   of the per-participant [`KvContribution::payload_bytes`] fed into
+//!   `NetSim::exchange_round` is exactly what lands in
+//!   `NetReport.round_bytes` (and per-participant `tx_bytes`), and the
+//!   downlink each attendee is billed equals what the broadcast
+//!   [`GlobalKvFrame`] would actually deliver it — the protocol messages
+//!   are the single source of truth for comm bytes;
+//! * the wire payload is the real data: a contribution's K/V rows match
+//!   the packed global KV's transmitted rows value-for-value.
+
+use fedattn::fedattn::{
+    DecodeTail, GlobalKv, GlobalKvFrame, KvContribution, KvExchangePolicy,
+    TokenBroadcast, TxContext,
+};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::tensor::HostTensor;
+use fedattn::util::prng::Xoshiro256ss;
+use fedattn::util::propcheck::propcheck;
+
+const ALL_POLICIES: [KvExchangePolicy; 6] = [
+    KvExchangePolicy::Full,
+    KvExchangePolicy::Random { ratio: 0.5 },
+    KvExchangePolicy::PublisherPriority { remote_ratio: 0.4 },
+    KvExchangePolicy::RecentBudget { budget_rows: 3 },
+    KvExchangePolicy::TopKRelevance { budget_rows: 3 },
+    KvExchangePolicy::ByteBudget { bytes_per_round: 2048 },
+];
+
+fn random_tensor(rng: &mut Xoshiro256ss, rows: usize, hkv: usize, hd: usize) -> HostTensor {
+    let mut t = HostTensor::zeros(&[rows, hkv, hd]);
+    for x in t.data_mut() {
+        *x = rng.next_f32() * 4.0 - 2.0;
+    }
+    t
+}
+
+/// One random federation round: per-participant K/V, positions, and the
+/// policy's transmission decisions.
+struct Round {
+    ks: Vec<HostTensor>,
+    vs: Vec<HostTensor>,
+    poss: Vec<Vec<i32>>,
+    valids: Vec<usize>,
+    txs: Vec<Vec<bool>>,
+    hkv: usize,
+    hd: usize,
+}
+
+fn random_round(
+    rng: &mut Xoshiro256ss,
+    policy: KvExchangePolicy,
+    n: usize,
+) -> Round {
+    let hkv = 1 + rng.below(2) as usize;
+    let hd = 2usize;
+    let row_bytes = GlobalKv::row_bytes(hkv, hd);
+    let publisher = rng.below(n as u64) as usize;
+    let mut r = Round {
+        ks: Vec::new(),
+        vs: Vec::new(),
+        poss: Vec::new(),
+        valids: Vec::new(),
+        txs: Vec::new(),
+        hkv,
+        hd,
+    };
+    let mut next_pos = 0i32;
+    for p in 0..n {
+        let valid = 1 + rng.below(6) as usize;
+        r.ks.push(random_tensor(rng, valid, hkv, hd));
+        r.vs.push(random_tensor(rng, valid, hkv, hd));
+        r.poss.push((0..valid as i32).map(|i| next_pos + i).collect());
+        next_pos += valid as i32;
+        let scores: Vec<f64> = (0..valid).map(|_| rng.next_f64()).collect();
+        let ctx = TxContext {
+            who: p,
+            publisher,
+            len: valid,
+            row_bytes,
+            relevance: rng.bernoulli(0.5).then_some(scores.as_slice()),
+            row_budget: rng.bernoulli(0.3).then(|| 1 + rng.below(4) as usize),
+        };
+        r.txs.push(policy.transmitted_ctx(&ctx, rng));
+        r.valids.push(valid);
+    }
+    r
+}
+
+#[test]
+fn contribution_roundtrip_under_every_policy() {
+    propcheck(60, |rng| {
+        for policy in ALL_POLICIES {
+            let n = 1 + rng.below(3) as usize;
+            let r = random_round(rng, policy, n);
+            for p in 0..n {
+                let c = KvContribution::from_rows(
+                    rng.below(8) as usize,
+                    p,
+                    &r.ks[p],
+                    &r.vs[p],
+                    &r.poss[p],
+                    &r.txs[p],
+                    None,
+                );
+                let back = KvContribution::decode(&c.encode())
+                    .map_err(|e| format!("{}: {e}", policy.as_str()))?;
+                if back != c {
+                    return Err(format!("{}: contribution drifted", policy.as_str()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frame_and_decode_messages_roundtrip() {
+    propcheck(60, |rng| {
+        let n = 1 + rng.below(3) as usize;
+        let r = random_round(rng, KvExchangePolicy::Random { ratio: 0.6 }, n);
+        let refs: Vec<_> = (0..n)
+            .map(|p| {
+                (&r.ks[p], &r.vs[p], r.poss[p].as_slice(), r.valids[p], r.txs[p].as_slice())
+            })
+            .collect();
+        let total: usize = r.valids.iter().sum();
+        let g_pad = total + rng.below(4) as usize;
+        let gkv = GlobalKv::pack(&refs, g_pad).map_err(|e| e.to_string())?;
+
+        let frame = GlobalKvFrame::from_global(2, &gkv);
+        let back = GlobalKvFrame::decode(&frame.encode()).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err("frame drifted through encode/decode".into());
+        }
+        let g2 = back.to_global(g_pad).map_err(|e| e.to_string())?;
+        if g2.k != gkv.k || g2.v != gkv.v || g2.meta != gkv.meta {
+            return Err("frame->global lost data".into());
+        }
+
+        let row_len = r.hkv * r.hd;
+        let tail = DecodeTail::from_row(
+            rng.below(8) as usize,
+            total as i32,
+            &vec![1.5; row_len],
+            &vec![-0.5; row_len],
+            r.hkv,
+            r.hd,
+        );
+        if DecodeTail::decode(&tail.encode()).map_err(|e| e.to_string())? != tail {
+            return Err("decode tail drifted".into());
+        }
+
+        let tb = TokenBroadcast { step: rng.below(100) as usize, token: 42 };
+        if TokenBroadcast::decode(&tb.encode()).map_err(|e| e.to_string())? != tb {
+            return Err("token broadcast drifted".into());
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance property: across all six KV policies, summed message
+/// payload bytes equal `NetReport.round_bytes`, per participant and per
+/// round, uplink and downlink.
+#[test]
+fn message_payload_bytes_equal_net_round_bytes_for_all_policies() {
+    propcheck(80, |rng| {
+        for policy in ALL_POLICIES {
+            let n = 1 + rng.below(4) as usize;
+            let r = random_round(rng, policy, n);
+            let row_bytes = GlobalKv::row_bytes(r.hkv, r.hd) as u64;
+
+            // The uplink messages each node would put on the wire.
+            let contributions: Vec<KvContribution> = (0..n)
+                .map(|p| {
+                    KvContribution::from_rows(
+                        0, p, &r.ks[p], &r.vs[p], &r.poss[p], &r.txs[p], None,
+                    )
+                })
+                .collect();
+            let payloads: Vec<u64> =
+                contributions.iter().map(|c| c.payload_bytes()).collect();
+
+            // Message accounting must agree with the packed aggregation.
+            let refs: Vec<_> = (0..n)
+                .map(|p| {
+                    (
+                        &r.ks[p],
+                        &r.vs[p],
+                        r.poss[p].as_slice(),
+                        r.valids[p],
+                        r.txs[p].as_slice(),
+                    )
+                })
+                .collect();
+            let total_rows: usize = r.valids.iter().sum();
+            let gkv = GlobalKv::pack(&refs, total_rows).map_err(|e| e.to_string())?;
+            for (p, (&pay, &tx_rows)) in
+                payloads.iter().zip(&gkv.tx_rows_by_owner(n)).enumerate()
+            {
+                if pay != tx_rows as u64 * row_bytes {
+                    return Err(format!(
+                        "{}: participant {p} payload {pay} != {tx_rows} rows x {row_bytes} B",
+                        policy.as_str()
+                    ));
+                }
+            }
+
+            // Feed the message sizes into the simulator: NetReport must
+            // echo them exactly, per participant and per round.
+            let attending: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+            let mut sim = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 5);
+            sim.exchange_round(&payloads, &attending);
+            let rep = sim.report();
+            if rep.tx_bytes != payloads {
+                return Err(format!(
+                    "{}: uplink {:?} != payloads {payloads:?}",
+                    policy.as_str(),
+                    rep.tx_bytes
+                ));
+            }
+            let round_total: u64 = payloads.iter().sum();
+            if rep.round_bytes != vec![round_total] {
+                return Err(format!(
+                    "{}: round record {:?} != {round_total}",
+                    policy.as_str(),
+                    rep.round_bytes
+                ));
+            }
+
+            // Downlink: what the simulator bills an attendee equals what
+            // the broadcast frame would actually deliver it.
+            let frame = GlobalKvFrame::from_global(0, &gkv);
+            for p in 0..n {
+                let want = if attending[p] { frame.payload_bytes_for(p) } else { 0 };
+                if rep.rx_bytes[p] != want {
+                    return Err(format!(
+                        "{}: attendee {p} rx {} != frame {want}",
+                        policy.as_str(),
+                        rep.rx_bytes[p]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The wire payload is the data, not a size estimate: a contribution's
+/// rows match the packed global KV's transmitted rows value-for-value.
+#[test]
+fn contribution_payload_matches_packed_rows() {
+    propcheck(60, |rng| {
+        let n = 1 + rng.below(3) as usize;
+        let r = random_round(rng, KvExchangePolicy::Random { ratio: 0.5 }, n);
+        let refs: Vec<_> = (0..n)
+            .map(|p| {
+                (&r.ks[p], &r.vs[p], r.poss[p].as_slice(), r.valids[p], r.txs[p].as_slice())
+            })
+            .collect();
+        let total: usize = r.valids.iter().sum();
+        let gkv = GlobalKv::pack(&refs, total).map_err(|e| e.to_string())?;
+
+        for p in 0..n {
+            let c = KvContribution::from_rows(
+                0, p, &r.ks[p], &r.vs[p], &r.poss[p], &r.txs[p], None,
+            );
+            // Walk the packed rows owned by p and transmitted; they must
+            // appear in the contribution in the same order.
+            let row_len = r.hkv * r.hd;
+            let mut wire_row = 0usize;
+            for (j, m) in gkv.meta.iter().enumerate() {
+                if m.owner != p || !m.transmitted {
+                    continue;
+                }
+                if c.pos[wire_row] != m.pos {
+                    return Err(format!("pos mismatch at wire row {wire_row}"));
+                }
+                let wire_k = &c.k[wire_row * row_len..(wire_row + 1) * row_len];
+                if wire_k != gkv.k.row(j) {
+                    return Err(format!("k data mismatch at wire row {wire_row}"));
+                }
+                let wire_v = &c.v[wire_row * row_len..(wire_row + 1) * row_len];
+                if wire_v != gkv.v.row(j) {
+                    return Err(format!("v data mismatch at wire row {wire_row}"));
+                }
+                wire_row += 1;
+            }
+            if wire_row != c.rows() {
+                return Err(format!(
+                    "contribution has {} rows, pack says {wire_row}",
+                    c.rows()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -156,3 +156,36 @@ fn parallel_session_is_byte_identical_to_sequential() {
         );
     }
 }
+
+/// Attendance dropout is a deterministic schedule input: the same seed
+/// produces the same masked schedule, rounds, and answers, and dropout
+/// can only *remove* exchange rounds relative to the undroped session.
+/// (`dropout_prob = 0.0` is pinned byte-identical to the pre-dropout
+/// session by the golden fixture above — the knob draws from its own RNG
+/// stream, never the session's.)
+#[test]
+fn dropout_session_deterministic_and_only_removes_rounds() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let run = |dropout: f64| {
+        let mut rng = SplitMix64::new(31);
+        let ep = gen_episode(&mut rng, 4);
+        let part = partition(&ep, n, Segmentation::SemQEx);
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+        cfg.seed = 11;
+        cfg.dropout_prob = dropout;
+        let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+        let rep = FedSession::new(&engine, &part, cfg, net).unwrap().run().unwrap();
+        (rep.answer, rep.net.rounds, rep.net.round_bytes)
+    };
+    let (_, base_rounds, _) = run(0.0);
+    let a = run(0.4);
+    let b = run(0.4);
+    assert_eq!(a, b, "dropout session must be deterministic in the seed");
+    assert!(
+        a.1 <= base_rounds,
+        "dropout added rounds: {} > {base_rounds}",
+        a.1
+    );
+}
