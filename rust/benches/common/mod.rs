@@ -46,6 +46,9 @@ pub struct PointCfg {
     pub local_ratio: f64,
     /// Per-node attendance dropout probability (0.0 = off).
     pub dropout_prob: f64,
+    /// Per-sync-round contribution deadline in simulated ms (`None` =
+    /// no deadline; late contributions are excluded from the round).
+    pub round_deadline_ms: Option<f64>,
     pub decode_all: bool,
     pub episodes: usize,
     pub seed: u64,
@@ -62,6 +65,7 @@ impl PointCfg {
             kv_policy: KvExchangePolicy::Full,
             local_ratio: 1.0,
             dropout_prob: 0.0,
+            round_deadline_ms: None,
             decode_all: false,
             episodes: episodes_per_point(),
             seed: 1234,
@@ -84,6 +88,14 @@ pub struct PointResult {
     pub avg_tx_bytes: f64,
     /// Mean simulated communication time per task (ms).
     pub comm_time_ms: f64,
+    /// Mean executed exchange rounds per task (deadline starvation and
+    /// dropout both shrink this below the scheduled count).
+    pub rounds: f64,
+    /// Total bytes / total executed rounds across the whole sweep point
+    /// (0 when no round ran anywhere).  Computed over executed rounds —
+    /// not per-episode means — so starved episodes reduce `rounds`
+    /// without dragging the per-round payload toward zero.
+    pub round_bytes_mean: f64,
     /// Mean wall-clock per task (ms).
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -98,6 +110,8 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
     let mut em_counts: Vec<usize> = vec![0; cfg.n];
     let mut tx_sum = 0f64;
     let mut commt = 0f64;
+    let mut rounds_sum = 0f64;
+    let mut round_bytes_sum = 0f64;
     let mut pre_ms = 0f64;
     let mut dec_ms = 0f64;
     for e in 0..cfg.episodes {
@@ -107,6 +121,7 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         scfg.kv_policy = cfg.kv_policy;
         scfg.local_sparsity = LocalSparsity { ratio: cfg.local_ratio };
         scfg.dropout_prob = cfg.dropout_prob;
+        scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.decode_all = cfg.decode_all;
         scfg.seed = cfg.seed ^ (e as u64).wrapping_mul(0x9E37);
         let net = NetSim::uniform(Topology::Star, cfg.n, cfg.link, scfg.seed);
@@ -124,6 +139,8 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         }
         tx_sum += rep.net.avg_tx_bytes_per_participant();
         commt += rep.net.comm_time_ms;
+        rounds_sum += rep.net.rounds as f64;
+        round_bytes_sum += rep.net.round_bytes.iter().sum::<u64>() as f64;
         pre_ms += rep.prefill_ms;
         dec_ms += rep.decode_ms;
     }
@@ -141,6 +158,8 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         em_max: per_part.iter().copied().fold(f64::NEG_INFINITY, f64::max),
         avg_tx_bytes: tx_sum / ne,
         comm_time_ms: commt / ne,
+        rounds: rounds_sum / ne,
+        round_bytes_mean: if rounds_sum > 0.0 { round_bytes_sum / rounds_sum } else { 0.0 },
         prefill_ms: pre_ms / ne,
         decode_ms: dec_ms / ne,
         episodes: cfg.episodes,
@@ -202,6 +221,8 @@ pub fn point_json(label: &str, x: f64, r: &PointResult) -> Json {
         .num("em_max", r.em_max)
         .num("avg_tx_bytes", r.avg_tx_bytes)
         .num("comm_time_ms", r.comm_time_ms)
+        .num("rounds", r.rounds)
+        .num("round_bytes_mean", r.round_bytes_mean)
         .num("prefill_ms", r.prefill_ms)
         .num("decode_ms", r.decode_ms)
         .build()

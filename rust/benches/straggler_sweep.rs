@@ -1,0 +1,105 @@
+//! Straggler sweep — the FedAttn analogue of federated learning's
+//! deadline/straggler trade-off (ROADMAP "Wire transport"): with jittery
+//! edge links scheduling each uplink's arrival, how do response quality
+//! (EM, the quality proxy) and communication (bytes per round, executed
+//! rounds) degrade as the per-round deadline tightens from infinity to
+//! zero?  A good deadline sheds the slowest stragglers' bytes while
+//! keeping quality near the full-attendance line; deadline 0 is the
+//! local-attention floor.
+//!
+//! Also sweeps deadline x dropout (the two attendance perturbations
+//! compose: dropout masks the schedule, the deadline drops late
+//! arrivals from the surviving rounds).
+//!
+//! Writes `bench_out/straggler_sweep.json` and the trajectory report
+//! `BENCH_straggler.json` at the repo root.
+//!
+//!     cargo bench --bench straggler_sweep
+
+mod common;
+
+use anyhow::Result;
+use common::*;
+use fedattn::data::Segmentation;
+use fedattn::fedattn::SyncSchedule;
+use fedattn::net::LinkSpec;
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    fedattn::util::log::init();
+    let engine = load_engine()?;
+    let m = engine.manifest.model.n_layers;
+    let n = 4usize;
+    // Slow-ish jittery edge links: arrivals spread enough that finite
+    // deadlines actually cut.
+    let link = LinkSpec { bandwidth_mbps: 12.0, latency_ms: 4.0, jitter: 0.35 };
+    let deadlines: [Option<f64>; 6] =
+        [None, Some(60.0), Some(30.0), Some(15.0), Some(8.0), Some(0.0)];
+    let fmt_deadline = |d: Option<f64>| match d {
+        None => "inf".to_string(),
+        Some(d) => format!("{d}"),
+    };
+
+    let mut rows = Vec::new();
+    println!("== straggler sweep: round deadline vs quality + comm (uniform H = 2, N = {n}) ==");
+    println!(
+        "{:>10} {:>10} {:>12} {:>14} {:>8} {:>10}",
+        "deadline", "EM (pub)", "bytes/round", "tx/participant", "rounds", "comm ms"
+    );
+    for &deadline in &deadlines {
+        let mut cfg = PointCfg::new(n, Segmentation::SemQEx, SyncSchedule::uniform(m, n, 2));
+        cfg.link = link;
+        cfg.round_deadline_ms = deadline;
+        let r = run_point(&engine, &cfg)?;
+        println!(
+            "{:>10} {:>10.3} {:>12} {:>14} {:>8.1} {:>10.2}",
+            fmt_deadline(deadline),
+            r.em_publisher,
+            fmt_bytes(r.round_bytes_mean),
+            fmt_bytes(r.avg_tx_bytes),
+            r.rounds,
+            r.comm_time_ms
+        );
+        // x = -1 marks the no-deadline baseline (JSON has no infinity).
+        rows.push(point_json(
+            &format!("deadline:{}", fmt_deadline(deadline)),
+            deadline.unwrap_or(-1.0),
+            &r,
+        ));
+    }
+
+    // Composition sweep: a fixed moderate deadline under growing dropout.
+    println!("\n== deadline 30 ms x dropout sweep ==");
+    println!(
+        "{:>10} {:>10} {:>12} {:>8}",
+        "dropout", "EM (pub)", "bytes/round", "rounds"
+    );
+    for &p_drop in &[0.0f64, 0.1, 0.25, 0.5] {
+        let mut cfg = PointCfg::new(n, Segmentation::SemQEx, SyncSchedule::uniform(m, n, 2));
+        cfg.link = link;
+        cfg.round_deadline_ms = Some(30.0);
+        cfg.dropout_prob = p_drop;
+        let r = run_point(&engine, &cfg)?;
+        println!(
+            "{:>10.2} {:>10.3} {:>12} {:>8.1}",
+            p_drop,
+            r.em_publisher,
+            fmt_bytes(r.round_bytes_mean),
+            r.rounds
+        );
+        rows.push(point_json(&format!("deadline30:dropout:{p_drop}"), p_drop, &r));
+    }
+
+    write_json("straggler_sweep", Json::Arr(rows.clone()));
+    // Trajectory report at the repo root: quality proxy + round bytes vs
+    // deadline, diffable per PR.
+    let report = JsonBuilder::new()
+        .str("bench", "straggler_sweep")
+        .num("participants", n as f64)
+        .num("episodes_per_point", episodes_per_point() as f64)
+        .set("points", Json::Arr(rows))
+        .build();
+    write_bench_json("straggler", report);
+    Ok(())
+}

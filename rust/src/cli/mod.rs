@@ -124,6 +124,33 @@ pub fn parse_dropout(args: &Args) -> anyhow::Result<Option<f64>> {
     Ok(Some(p))
 }
 
+/// Per-sync-round contribution deadline from `--round-deadline`
+/// (simulated milliseconds).  Returns:
+///
+/// * `Ok(None)` when the flag is absent — callers keep their config
+///   default;
+/// * `Ok(Some(None))` for the explicit sentinels `off` / `none` / `inf`
+///   — the deadline is disabled (byte-identical to no knob);
+/// * `Ok(Some(Some(d)))` for a finite `d >= 0`.
+///
+/// Negative, NaN, or unparsable values are errors, not silent fallbacks.
+pub fn parse_round_deadline(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    let Some(raw) = args.opt("round-deadline") else {
+        return Ok(None);
+    };
+    if matches!(raw, "off" | "none" | "inf") {
+        return Ok(Some(None));
+    }
+    let d: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--round-deadline expects a number or off|none|inf, got {raw:?}")
+    })?;
+    anyhow::ensure!(
+        d.is_finite() && d >= 0.0,
+        "--round-deadline must be finite and >= 0, got {d}"
+    );
+    Ok(Some(Some(d)))
+}
+
 /// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
 /// when absent (callers fall back to TOML `serving.time_scale`, then
 /// their own default); non-positive or unparsable values are errors.
@@ -186,6 +213,29 @@ mod tests {
         assert!(parse_dropout(&parse(&["--dropout", "1.5"])).is_err());
         assert!(parse_dropout(&parse(&["--dropout", "-0.2"])).is_err());
         assert!(parse_dropout(&parse(&["--dropout", "often"])).is_err());
+    }
+
+    #[test]
+    fn round_deadline_parse_and_range() {
+        assert_eq!(parse_round_deadline(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_round_deadline(&parse(&["--round-deadline", "12.5"])).unwrap(),
+            Some(Some(12.5))
+        );
+        assert_eq!(
+            parse_round_deadline(&parse(&["--round-deadline=0"])).unwrap(),
+            Some(Some(0.0))
+        );
+        for sentinel in ["off", "none", "inf"] {
+            assert_eq!(
+                parse_round_deadline(&parse(&["--round-deadline", sentinel])).unwrap(),
+                Some(None),
+                "{sentinel}"
+            );
+        }
+        assert!(parse_round_deadline(&parse(&["--round-deadline", "-1"])).is_err());
+        assert!(parse_round_deadline(&parse(&["--round-deadline", "NaN"])).is_err());
+        assert!(parse_round_deadline(&parse(&["--round-deadline", "soon"])).is_err());
     }
 
     #[test]

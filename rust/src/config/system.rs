@@ -28,6 +28,13 @@ pub struct FederationConfig {
     /// independently with this probability.  0.0 (the default) disables
     /// dropout and is byte-identical to the knob not existing.
     pub dropout_prob: f64,
+    /// Per-sync-round contribution deadline in simulated milliseconds
+    /// (`--round-deadline` / `federation.round_deadline_ms`): link
+    /// latency + jitter schedule each uplink's arrival, and
+    /// contributions landing past the deadline are excluded from the
+    /// round (partial aggregation).  `None` (the default) disables the
+    /// deadline entirely and is byte-identical to the knob not existing.
+    pub round_deadline_ms: Option<f64>,
 }
 
 impl Default for FederationConfig {
@@ -40,6 +47,7 @@ impl Default for FederationConfig {
             kv_policy: KvExchangePolicy::Full,
             max_new_tokens: 12,
             dropout_prob: 0.0,
+            round_deadline_ms: None,
         }
     }
 }
@@ -171,6 +179,18 @@ impl SystemConfig {
             "federation.dropout_prob must be in [0, 1], got {}",
             f.dropout_prob
         );
+        if let Some(v) = doc.get("federation.round_deadline_ms") {
+            // Present but malformed must fail loudly — a silently
+            // ignored deadline would corrupt straggler experiments.
+            let d = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("federation.round_deadline_ms must be a number")
+            })?;
+            anyhow::ensure!(
+                d.is_finite() && d >= 0.0,
+                "federation.round_deadline_ms must be finite and >= 0, got {d}"
+            );
+            f.round_deadline_ms = Some(d);
+        }
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
             Topology::Mesh
@@ -317,6 +337,30 @@ mod tests {
         let doc = TomlDoc::parse("[federation]\ndropout_prob = 1.5").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[federation]\ndropout_prob = -0.1").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn round_deadline_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.round_deadline_ms,
+            None
+        );
+        let doc = TomlDoc::parse("[federation]\nround_deadline_ms = 25.0").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.round_deadline_ms,
+            Some(25.0)
+        );
+        // 0 is a legal (everything-late) deadline.
+        let doc = TomlDoc::parse("[federation]\nround_deadline_ms = 0").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.round_deadline_ms,
+            Some(0.0)
+        );
+        let doc = TomlDoc::parse("[federation]\nround_deadline_ms = -5").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[federation]\nround_deadline_ms = \"fast\"").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 

@@ -38,6 +38,10 @@ pub struct CoordinatorConfig {
     /// Per-node attendance dropout probability applied to every served
     /// session's schedule (0.0 = off).
     pub dropout_prob: f64,
+    /// Per-sync-round contribution deadline (simulated ms) applied to
+    /// every served session; late contributions are excluded from the
+    /// round (`None` = no deadline).
+    pub round_deadline_ms: Option<f64>,
     pub topology: crate::net::Topology,
     pub link: crate::net::LinkSpec,
     /// Heterogeneous per-participant links; `None` = `participants` copies
@@ -62,6 +66,7 @@ impl CoordinatorConfig {
             kv_policy: sc.federation.kv_policy,
             max_new_tokens: sc.federation.max_new_tokens,
             dropout_prob: sc.federation.dropout_prob,
+            round_deadline_ms: sc.federation.round_deadline_ms,
             topology: sc.network.topology,
             link: sc.network.link,
             hetero_links: sc
@@ -238,6 +243,7 @@ impl Coordinator {
         scfg.kv_policy = cfg.kv_policy;
         scfg.max_new_tokens = cfg.max_new_tokens;
         scfg.dropout_prob = cfg.dropout_prob;
+        scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.seed = task_seed;
         // The session borrows the coordinator's shared pool below; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.

@@ -16,14 +16,26 @@
 //! Attendance is a *schedule input*: per-node dropout
 //! ([`SessionConfig::dropout_prob`]) masks attendance before the first
 //! round, so a dropped node simply runs the local path — no special case
-//! in the round loop.  Device-resident execution (shared per-round KV
-//! uploads, frozen decode caches + `[R]` tails) and pool-parallel
-//! per-participant loops carry over from the pre-protocol session; a
-//! parallel session is byte-identical to a sequential one (ordered
-//! collection, sequential host-side reductions).
+//! in the round loop.  Stragglers are a *round input*: with a per-round
+//! deadline ([`SessionConfig::round_deadline_ms`]) the network simulator
+//! schedules each uplink's arrival and late contributions are excluded
+//! from aggregation and billing (partial aggregation); without one, no
+//! arrival is ever drawn and the loop is byte-identical to the
+//! pre-deadline driver.  A wire deployment attaches one
+//! [`RemoteParticipant`] per node
+//! ([`SessionDriver::new_with_remotes`], usually via
+//! [`TransportDriver`]): the protocol plane then crosses real
+//! transports while the compute plane stays engine-colocated.
+//!
+//! Device-resident execution (shared per-round KV uploads, frozen decode
+//! caches + `[R]` tails) and pool-parallel per-participant loops carry
+//! over from the pre-protocol session; a parallel session is
+//! byte-identical to a sequential one (ordered collection, sequential
+//! host-side reductions).
 //!
 //! [`NetSim::exchange_round`]: crate::net::NetSim::exchange_round
 //! [`Aggregator`]: crate::fedattn::aggregate::Aggregator
+//! [`TransportDriver`]: crate::fedattn::transport::TransportDriver
 
 use std::sync::{Arc, Mutex};
 
@@ -39,6 +51,7 @@ use crate::fedattn::protocol::KvContribution;
 use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
 use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
+use crate::fedattn::transport::{RemoteParticipant, Transport};
 use crate::net::{NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::tensor::HostTensor;
@@ -80,6 +93,21 @@ pub struct SessionConfig {
     /// and its peers aggregate without it — the federated-inference
     /// straggler/dropout scenario as a schedule input.
     pub dropout_prob: f64,
+    /// Per-sync-round contribution deadline in **simulated** milliseconds
+    /// (`federation.round_deadline_ms` / `--round-deadline`).  With a
+    /// deadline, [`NetSim`] link latency + jitter *schedule* each uplink's
+    /// arrival ([`NetSim::uplink_arrivals`]); contributions that land
+    /// after the deadline are excluded from the round — not billed, not
+    /// aggregated — and the late participant runs the local path (partial
+    /// aggregation, the FL straggler analogue).  A round where every
+    /// attendee misses the cut degrades to local attention exactly like a
+    /// fully-dropped round.  `None` (the default) disables the deadline
+    /// entirely: no arrivals are scheduled, no extra RNG is consumed, and
+    /// behaviour is byte-identical to the pre-deadline driver.
+    ///
+    /// [`NetSim`]: crate::net::NetSim
+    /// [`NetSim::uplink_arrivals`]: crate::net::NetSim::uplink_arrivals
+    pub round_deadline_ms: Option<f64>,
 }
 
 impl SessionConfig {
@@ -96,6 +124,7 @@ impl SessionConfig {
             workers: 1,
             device_decode: true,
             dropout_prob: 0.0,
+            round_deadline_ms: None,
         }
     }
 }
@@ -164,6 +193,13 @@ pub struct SessionDriver<'a> {
     relevance: Option<RelevanceTracker>,
     /// Worker pool for the per-participant loops (`workers > 1`).
     pool: Option<Arc<Pool>>,
+    /// Wire deployment: one transport-backed proxy per participant.  When
+    /// set, every protocol-plane step (contribution uplink, frame/local
+    /// downlink, decode) crosses the proxy's transport instead of
+    /// touching the local node's caches; the compute plane (hidden
+    /// states, QKV, attention) stays engine-colocated.  `None` is the
+    /// fully in-process session.
+    remotes: Option<Vec<RemoteParticipant>>,
 }
 
 impl<'a> SessionDriver<'a> {
@@ -185,6 +221,14 @@ impl<'a> SessionDriver<'a> {
             "dropout_prob must be in [0, 1], got {}",
             cfg.dropout_prob
         );
+        if let Some(d) = cfg.round_deadline_ms {
+            // NaN fails the comparison; +inf is allowed (it still
+            // schedules arrivals, unlike None which skips scheduling).
+            anyhow::ensure!(
+                d >= 0.0,
+                "round_deadline_ms must be >= 0, got {d}"
+            );
+        }
         let mut rng = Xoshiro256ss::new(cfg.seed ^ 0x5E55_10);
         let publisher = partition.publisher();
 
@@ -234,12 +278,62 @@ impl<'a> SessionDriver<'a> {
             total_len: partition.len(),
             relevance,
             pool,
+            remotes: None,
         })
+    }
+
+    /// A wire deployment of the session: one [`Transport`] per
+    /// participant, each leading to a node host (see
+    /// [`transport::NodeHost`]) that owns that participant's decode
+    /// caches and speaks the protocol messages.  The driver keeps the
+    /// compute plane; local caches are dropped so the transported state
+    /// is authoritative.  Sends each host its `Init` frame before
+    /// returning.
+    ///
+    /// [`transport::NodeHost`]: crate::fedattn::transport::NodeHost
+    pub fn new_with_remotes(
+        engine: &'a Engine,
+        partition: &'a Partition,
+        cfg: SessionConfig,
+        net: NetSim,
+        transports: Vec<Box<dyn Transport>>,
+    ) -> Result<Self> {
+        let mut driver = Self::new(engine, partition, cfg, net)?;
+        let n = driver.nodes.len();
+        anyhow::ensure!(
+            transports.len() == n,
+            "got {} transports for {n} participants",
+            transports.len()
+        );
+        let md = &engine.manifest.model;
+        let cache_capacity = engine.manifest.decode_cache;
+        let mut remotes = Vec::with_capacity(n);
+        for (p, t) in transports.into_iter().enumerate() {
+            let keep = p == driver.publisher || driver.cfg.decode_all;
+            let node = &mut driver.nodes[p];
+            // The remote host owns the authoritative caches.
+            node.caches = Vec::new();
+            let mut rp =
+                RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
+            rp.init(md.n_layers, md.n_kv_heads, md.head_dim, cache_capacity)?;
+            remotes.push(rp);
+        }
+        driver.remotes = Some(remotes);
+        Ok(driver)
     }
 
     /// The effective attendance schedule (after dropout masking).
     pub fn effective_schedule(&self) -> &SyncSchedule {
         &self.schedule
+    }
+
+    /// Does participant `p` keep decode caches (locally or at its remote
+    /// host)?
+    fn keeps_caches_for(&self, p: usize) -> bool {
+        match &self.remotes {
+            Some(r) => r[p].keeps_caches(),
+            None => self.nodes[p].keeps_caches(),
+        }
     }
 
     /// Run the federated prefill (Alg. 1 lines 2–14).
@@ -267,11 +361,61 @@ impl<'a> SessionDriver<'a> {
 
         for m in 0..n_layers {
             let attend = self.schedule.attend[m].clone();
-            let any = attend.iter().any(|&b| b);
 
-            if !any {
-                // Phase I only: every participant runs a fused local block
-                // (pool-parallel; ordered collection keeps determinism).
+            // Round planning.  Row selection runs first — it depends only
+            // on relevance accumulated at *earlier* sync rounds, never on
+            // this block's compute, and its RNG draws happen in
+            // participant order exactly as before, so the session stream
+            // is unchanged.  With a deadline, the planned payload sizes
+            // (a pure function of the selected rows) are handed to the
+            // network simulator to *schedule* each uplink's arrival; the
+            // stragglers whose contribution lands past the deadline are
+            // demoted to the local path before any compute is placed.
+            let plan = if attend.iter().any(|&b| b) {
+                let mut tx_flags: Vec<Vec<bool>> = Vec::with_capacity(n);
+                for p in 0..n {
+                    let ctx = TxContext {
+                        who: p,
+                        publisher: self.publisher,
+                        len: self.nodes[p].valid,
+                        row_bytes: row_bytes_usize,
+                        relevance: self.relevance.as_ref().map(|t| t.scores(p)),
+                        row_budget: budgets.as_ref().map(|b| b[p]),
+                    };
+                    tx_flags.push(self.aggregator.select(&ctx, &mut self.rng));
+                }
+                let payloads: Vec<u64> = tx_flags
+                    .iter()
+                    .map(|tx| {
+                        tx.iter().filter(|&&b| b).count() as u64 * row_bytes_usize as u64
+                    })
+                    .collect();
+                let (on_time, arrivals) = match self.cfg.round_deadline_ms {
+                    Some(d) => {
+                        let arr = self.net.uplink_arrivals(&payloads);
+                        (arr.iter().map(|&a| a <= d).collect::<Vec<bool>>(), Some(arr))
+                    }
+                    // No deadline: nobody is late and no arrival is ever
+                    // drawn (byte-identical to the pre-deadline driver).
+                    None => (vec![true; n], None),
+                };
+                let attend_eff: Vec<bool> =
+                    attend.iter().zip(&on_time).map(|(&a, &o)| a && o).collect();
+                attend_eff
+                    .iter()
+                    .any(|&b| b)
+                    .then_some((tx_flags, on_time, arrivals, attend_eff))
+            } else {
+                None
+            };
+
+            let Some((tx_flags, on_time, arrivals, attend)) = plan else {
+                // Phase I only — either nobody is scheduled at this block
+                // or every scheduled attendee missed the deadline.  Both
+                // run a fused local block for everyone (pool-parallel;
+                // ordered collection keeps determinism) with no exchange
+                // and no round recorded: deadline starvation degrades
+                // exactly like a fully-dropped round.
                 let inputs: Vec<_> = self
                     .nodes
                     .iter()
@@ -286,12 +430,15 @@ impl<'a> SessionDriver<'a> {
                 })?;
                 for (p, (xo, k, v)) in outs.into_iter().enumerate() {
                     self.nodes[p].set_hidden(xo);
-                    if self.nodes[p].keeps_caches() {
-                        self.nodes[p].absorb_local(m, &k, &v);
+                    if self.keeps_caches_for(p) {
+                        match self.remotes.as_mut() {
+                            Some(r) => r[p].absorb_local(m, &k, &v)?,
+                            None => self.nodes[p].absorb_local(m, &k, &v)?,
+                        }
                     }
                 }
                 continue;
-            }
+            };
 
             // Sync block: everyone produces (q,)k,v; attendees do global
             // attention over the aggregated KV.  Phase 1 is pool-parallel.
@@ -329,37 +476,36 @@ impl<'a> SessionDriver<'a> {
                 }
             }
 
-            // Round messages: the aggregator selects each node's rows
-            // (relevance policies see only mass accumulated at *earlier*
-            // sync rounds — causal selection) and each node packages its
-            // uplink KvContribution.  The message carries the real row
-            // payload so accounting is measured, not estimated; the copy
-            // is bounded by the transmitted subset of what the pack below
-            // already copies per round.
-            let mut tx_flags: Vec<Vec<bool>> = Vec::with_capacity(n);
-            let mut contributions: Vec<KvContribution> = Vec::with_capacity(n);
+            // Round messages: each on-time node packages its uplink
+            // KvContribution — over the wire when remotes are attached,
+            // so the message has really crossed a transport before its
+            // payload size is billed.  A late node contributes nothing
+            // this round (its rows are excluded from aggregation, the
+            // FL-straggler partial-aggregation analogue).  The message
+            // carries the real row payload so accounting is measured,
+            // not estimated.
+            let mut contributions: Vec<Option<KvContribution>> = Vec::with_capacity(n);
             for p in 0..n {
-                let ctx = TxContext {
-                    who: p,
-                    publisher: self.publisher,
-                    len: self.nodes[p].valid,
-                    row_bytes: row_bytes_usize,
-                    relevance: self.relevance.as_ref().map(|t| t.scores(p)),
-                    row_budget: budgets.as_ref().map(|b| b[p]),
+                if !on_time[p] {
+                    contributions.push(None);
+                    continue;
+                }
+                let scores = self.relevance.as_ref().map(|t| t.scores(p));
+                let c = match self.remotes.as_mut() {
+                    Some(remotes) => {
+                        remotes[p].contribute(m, &ks[p], &vs[p], &tx_flags[p], scores)?
+                    }
+                    None => self.nodes[p].contribute(m, &ks[p], &vs[p], &tx_flags[p], scores)?,
                 };
-                let tx = self.aggregator.select(&ctx, &mut self.rng);
-                contributions.push(self.nodes[p].contribute(
-                    m,
-                    &ks[p],
-                    &vs[p],
-                    &tx,
-                    self.relevance.as_ref().map(|t| t.scores(p)),
-                ));
-                tx_flags.push(tx);
+                contributions.push(Some(c));
             }
 
-            // Aggregate into the global KV (Eq. 20).
-            let rows_total: usize = self.nodes.iter().map(|s| s.valid).sum();
+            // Aggregate the on-time contributions into the global KV
+            // (Eq. 20); a late participant's rows are excluded entirely
+            // (valid = 0 keeps the owner numbering stable).
+            let rows_total: usize = (0..n)
+                .map(|p| if on_time[p] { self.nodes[p].valid } else { 0 })
+                .sum();
             let g_pad = self.engine.manifest.pick_g(rows_total)?;
             let parts_refs: Vec<PartRows<'_>> = (0..n)
                 .map(|p| {
@@ -367,7 +513,7 @@ impl<'a> SessionDriver<'a> {
                         &ks[p],
                         &vs[p],
                         self.nodes[p].pos.as_slice(),
-                        self.nodes[p].valid,
+                        if on_time[p] { self.nodes[p].valid } else { 0 },
                         tx_flags[p].as_slice(),
                     )
                 })
@@ -381,9 +527,13 @@ impl<'a> SessionDriver<'a> {
 
             // Communication accounting + simulated transfer time: the
             // bytes on the wire are the encoded contribution payloads —
-            // the protocol messages are the single source of truth.
-            let tx_bytes: Vec<u64> =
-                contributions.iter().map(|c| c.payload_bytes()).collect();
+            // the protocol messages are the single source of truth.  Late
+            // contributions never arrived, so they bill nothing: round
+            // bytes are exactly the sum of on-time payloads.
+            let tx_bytes: Vec<u64> = contributions
+                .iter()
+                .map(|c| c.as_ref().map_or(0, |c| c.payload_bytes()))
+                .collect();
             #[cfg(debug_assertions)]
             {
                 // The packed rows and the wire messages must tell the same
@@ -406,7 +556,13 @@ impl<'a> SessionDriver<'a> {
                     );
                 }
             }
-            self.net.exchange_round(&tx_bytes, &attend);
+            match &arrivals {
+                // Deadline path: reuse the pre-drawn uplink times so the
+                // round is billed against the very arrivals that decided
+                // who made the cut.
+                Some(arr) => self.net.exchange_round_scheduled(&tx_bytes, &attend, arr),
+                None => self.net.exchange_round(&tx_bytes, &attend),
+            };
 
             // Upload the packed global KV to the device ONCE per sync
             // round; every attendee's attention shares the handles (the
@@ -475,16 +631,25 @@ impl<'a> SessionDriver<'a> {
             }
 
             // Decode caches for this block (paper §IV-C): nodes that
-            // attended absorb the aggregated frame (restricted to what
-            // they could see); others absorb their own local KV.
+            // (effectively) attended absorb the aggregated frame
+            // (restricted to what they could see); others — including
+            // deadline stragglers — absorb their own local KV.  In wire
+            // mode the frame/local rows cross the transport to the host
+            // that owns the authoritative caches.
             for p in 0..n {
-                if !self.nodes[p].keeps_caches() {
+                if !self.keeps_caches_for(p) {
                     continue;
                 }
                 if attend[p] {
-                    self.nodes[p].absorb_frame(m, &gkv);
+                    match self.remotes.as_mut() {
+                        Some(r) => r[p].absorb_frame(m, &gkv)?,
+                        None => self.nodes[p].absorb_frame(m, &gkv)?,
+                    }
                 } else {
-                    self.nodes[p].absorb_local(m, &ks[p], &vs[p]);
+                    match self.remotes.as_mut() {
+                        Some(r) => r[p].absorb_local(m, &ks[p], &vs[p])?,
+                        None => self.nodes[p].absorb_local(m, &ks[p], &vs[p])?,
+                    }
                 }
             }
         }
@@ -514,10 +679,18 @@ impl<'a> SessionDriver<'a> {
     }
 
     /// Greedy decode from participant `p`'s KV caches (requires that `p`
-    /// kept caches).  Returns the decoded text and token count.
+    /// kept caches).  Returns the decoded text and token count.  In wire
+    /// mode the decode runs at `p`'s node host (which owns the caches and
+    /// its own engine) and the tokens stream back as `TokenBroadcast`
+    /// frames.
     pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
-        anyhow::ensure!(self.nodes[p].keeps_caches(), "participant {p} has no caches");
+        anyhow::ensure!(self.keeps_caches_for(p), "participant {p} has no caches");
         let h_last = self.nodes[p].last_hidden();
+        if let Some(remotes) = self.remotes.as_mut() {
+            let (total_len, max_new, dev) =
+                (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
+            return remotes[p].decode(&h_last, total_len, max_new, dev);
+        }
         let mut caches = std::mem::take(&mut self.nodes[p].caches);
         let res = decode_from_caches(
             self.engine,
@@ -544,24 +717,50 @@ impl<'a> SessionDriver<'a> {
         let t0 = std::time::Instant::now();
         let n = self.nodes.len();
         let decoders: Vec<usize> =
-            (0..n).filter(|&p| self.nodes[p].keeps_caches()).collect();
+            (0..n).filter(|&p| self.keeps_caches_for(p)).collect();
 
-        // Move each decoding participant's caches + kick-off hidden state
-        // into a slot the (shared) pool closure can take exactly once.
-        let slots: Vec<Mutex<Option<(Vec<BlockCache>, HostTensor)>>> = decoders
-            .iter()
-            .map(|&p| {
-                let caches = std::mem::take(&mut self.nodes[p].caches);
-                let h_last = self.nodes[p].last_hidden();
-                Mutex::new(Some((caches, h_last)))
-            })
-            .collect();
-        let slots = Arc::new(slots);
-        let engine = self.engine.clone();
-        let (total_len, max_new, device_decode) =
-            (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
-        let slots_in = Arc::clone(&slots);
-        let decoded: Vec<(String, usize)> =
+        let decoded: Vec<(String, usize)> = if self.remotes.is_some() {
+            // Wire mode: decode sequentially through each host (the
+            // tokens are independent of decode order, and parallel
+            // decodes would only contend the transports), then release
+            // the hosts — on the error path too, so a failed decode
+            // still tells the surviving hosts to exit instead of leaving
+            // them to discover the dropped transports.
+            let mut out = Vec::with_capacity(decoders.len());
+            let mut failed = None;
+            for &p in &decoders {
+                match self.decode_participant(p) {
+                    Ok(r) => out.push(r),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            for r in self.remotes.as_mut().unwrap() {
+                let _ = r.shutdown();
+            }
+            if let Some(e) = failed {
+                return Err(e);
+            }
+            out
+        } else {
+            // Move each decoding participant's caches + kick-off hidden
+            // state into a slot the (shared) pool closure can take
+            // exactly once.
+            let slots: Vec<Mutex<Option<(Vec<BlockCache>, HostTensor)>>> = decoders
+                .iter()
+                .map(|&p| {
+                    let caches = std::mem::take(&mut self.nodes[p].caches);
+                    let h_last = self.nodes[p].last_hidden();
+                    Mutex::new(Some((caches, h_last)))
+                })
+                .collect();
+            let slots = Arc::new(slots);
+            let engine = self.engine.clone();
+            let (total_len, max_new, device_decode) =
+                (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
+            let slots_in = Arc::clone(&slots);
             run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
                 let (mut caches, h_last) = slots_in[i]
                     .lock()
@@ -570,7 +769,8 @@ impl<'a> SessionDriver<'a> {
                     .ok_or("decode slot taken twice")?;
                 decode_from_caches(&engine, &mut caches, &h_last, total_len, max_new, device_decode)
                     .map_err(|e| format!("{e:#}"))
-            })?;
+            })?
+        };
 
         let mut answers: Vec<Option<String>> = vec![None; n];
         let mut generated = 0usize;
@@ -624,6 +824,22 @@ fn decode_from_caches(
     max_new_tokens: usize,
     device_decode: bool,
 ) -> Result<(String, usize)> {
+    let ids =
+        decode_ids_from_caches(engine, caches, h_last, total_len, max_new_tokens, device_decode)?;
+    Ok((tokenizer::decode(&ids), ids.len()))
+}
+
+/// [`decode_from_caches`] at the token level: the raw greedy token ids,
+/// before detokenization.  The wire transport's node host uses this to
+/// stream each generated token back as a `TokenBroadcast` frame.
+pub(crate) fn decode_ids_from_caches(
+    engine: &Engine,
+    caches: &mut [BlockCache],
+    h_last: &HostTensor,
+    total_len: usize,
+    max_new_tokens: usize,
+    device_decode: bool,
+) -> Result<Vec<i32>> {
     // A step appends at most one row per layer, and the final step never
     // appends: at most max_new_tokens - 1 tail rows per decode.
     let steps = max_new_tokens.saturating_sub(1);
@@ -689,7 +905,7 @@ fn decode_from_caches(
         }
         logits = engine.logits(&x)?;
     }
-    Ok((tokenizer::decode(&out_ids), out_ids.len()))
+    Ok(out_ids)
 }
 
 fn argmax(xs: &[f32]) -> i32 {

@@ -23,7 +23,12 @@
 //!  * [`aggregate`] — the [`Aggregator`] policy object (global
 //!    aggregation; concat and relevance-adaptive built-ins).
 //!  * [`driver`] — [`SessionDriver`] sequences rounds purely through
-//!    messages; dropout and attendance gaps are schedule inputs.
+//!    messages; dropout and attendance gaps are schedule inputs, and
+//!    per-round deadlines turn link latency into partial aggregation.
+//!  * [`transport`] — the wire deployment: length-prefixed frames over
+//!    channel or TCP transports, [`RemoteParticipant`] proxies, node
+//!    hosts, and the [`TransportDriver`] (byte-identical to the
+//!    in-process session at infinite deadline).
 //!  * [`session`] — the [`FedSession`] facade (byte-identical to the
 //!    pre-protocol session).
 
@@ -37,6 +42,7 @@ pub mod relevance;
 pub mod schedule;
 pub mod session;
 pub mod sparse;
+pub mod transport;
 
 pub use aggregate::{for_policy, AdaptiveAggregator, Aggregator, ConcatAggregator};
 pub use driver::{PrefillOutput, SessionConfig, SessionDriver, SessionReport};
@@ -44,9 +50,14 @@ pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use node::{Participant, ParticipantNode};
 pub use protocol::{
-    DecodeTail, GlobalKvFrame, KvContribution, TokenBroadcast, WireError,
+    wire_kind, DecodeTail, GlobalKvFrame, KvContribution, TokenBroadcast, WireError,
+    WireKind,
 };
 pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};
 pub use session::FedSession;
 pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};
+pub use transport::{
+    ChannelTransport, NodeHost, RemoteParticipant, TcpTransport, Transport,
+    TransportDriver, TransportError,
+};

@@ -14,14 +14,17 @@
 //!   into the per-block decode caches.
 //!
 //! The trait pins the *message-level contract* of a round — what crosses
-//! the participant boundary and in which order.  It is the shape a
-//! future networked node would implement over a transport; note that
-//! today's [`SessionDriver`] drives the concrete [`ParticipantNode`]
-//! (its pool-parallel loops snapshot `Arc`'d node state directly), so
-//! swapping in a remote implementation additionally needs a
-//! transport-aware driver, not just this trait.
+//! the participant boundary and in which order.  Two implementations
+//! exist: the in-process [`ParticipantNode`] (the [`SessionDriver`]'s
+//! pool-parallel loops snapshot its `Arc`'d compute state directly) and
+//! the wire-backed [`RemoteParticipant`] proxy, whose protocol plane —
+//! contributions, frames, decode — actually crosses a
+//! [`Transport`] (see the [`transport`] module).
 //!
 //! [`SessionDriver`]: crate::fedattn::driver::SessionDriver
+//! [`RemoteParticipant`]: crate::fedattn::transport::RemoteParticipant
+//! [`Transport`]: crate::fedattn::transport::Transport
+//! [`transport`]: crate::fedattn::transport
 
 use std::sync::Arc;
 
@@ -142,9 +145,12 @@ impl BlockCache {
 }
 
 /// The message-level contract between the session driver and one
-/// participant.  [`ParticipantNode`] is the in-process implementation;
-/// the contract is what a networked node would speak over a transport
-/// (see the module docs for what a remote driver would still need).
+/// participant.  [`ParticipantNode`] is the in-process implementation and
+/// [`RemoteParticipant`] the wire-backed one: every protocol step is
+/// fallible because a real deployment can lose its transport mid-round
+/// (the in-process node never fails).
+///
+/// [`RemoteParticipant`]: crate::fedattn::transport::RemoteParticipant
 pub trait Participant {
     /// This participant's index in the federation.
     fn id(&self) -> usize;
@@ -162,21 +168,21 @@ pub trait Participant {
     /// Package the rows flagged in `tx` of this round's fresh K/V as the
     /// node's uplink message for `block`.
     fn contribute(
-        &self,
+        &mut self,
         block: usize,
         k: &HostTensor,
         v: &HostTensor,
         tx: &[bool],
         relevance: Option<&[f64]>,
-    ) -> KvContribution;
+    ) -> Result<KvContribution>;
 
     /// Attendee path: fold the aggregated round frame into the decode
     /// cache for `block`.  Rows this node owns or that were transmitted
     /// are visible; everything else is masked (it never saw those rows).
-    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv);
+    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()>;
 
     /// Non-attendee path: cache this node's own local K/V for `block`.
-    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor);
+    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) -> Result<()>;
 }
 
 /// In-process participant: owns one participant's token representations,
@@ -273,28 +279,30 @@ impl Participant for ParticipantNode {
     }
 
     fn contribute(
-        &self,
+        &mut self,
         block: usize,
         k: &HostTensor,
         v: &HostTensor,
         tx: &[bool],
         relevance: Option<&[f64]>,
-    ) -> KvContribution {
-        KvContribution::from_rows(block, self.id, k, v, &self.pos, tx, relevance)
+    ) -> Result<KvContribution> {
+        Ok(KvContribution::from_rows(block, self.id, k, v, &self.pos, tx, relevance))
     }
 
-    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) {
+    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()> {
         let vis: Vec<bool> = gkv
             .meta
             .iter()
             .map(|r| r.owner == self.id || r.transmitted)
             .collect();
         self.caches[block].push_rows(&gkv.k, &gkv.v, gkv.rows(), &vis);
+        Ok(())
     }
 
-    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) {
+    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
         let vis = vec![true; self.valid];
         self.caches[block].push_rows(k, v, self.valid, &vis);
+        Ok(())
     }
 }
 

@@ -42,6 +42,36 @@ const TAG_FRAME: u8 = 2;
 const TAG_DECODE_TAIL: u8 = 3;
 const TAG_TOKEN: u8 = 4;
 
+/// Message kind of an encoded protocol frame, as peeked from its header.
+///
+/// The wire transport multiplexes protocol messages and its own control
+/// frames over one stream; receivers peek the kind first and then run the
+/// matching typed decoder (which re-validates the full header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireKind {
+    Contribution,
+    Frame,
+    DecodeTail,
+    Token,
+}
+
+/// Peek the kind of an encoded protocol message from its magic + tag
+/// bytes.  Returns `None` for anything that is not a protocol frame
+/// (wrong magic, unknown tag, or too short to carry a header); full
+/// validation still happens in the typed `decode`.
+pub fn wire_kind(b: &[u8]) -> Option<WireKind> {
+    if b.len() < 2 || b[0] != WIRE_MAGIC {
+        return None;
+    }
+    match b[1] {
+        TAG_CONTRIBUTION => Some(WireKind::Contribution),
+        TAG_FRAME => Some(WireKind::Frame),
+        TAG_DECODE_TAIL => Some(WireKind::DecodeTail),
+        TAG_TOKEN => Some(WireKind::Token),
+        _ => None,
+    }
+}
+
 /// Decode failure for a protocol message.
 #[derive(Debug, thiserror::Error)]
 pub enum WireError {
@@ -61,74 +91,91 @@ pub enum WireError {
 // Little-endian writer / reader
 // ---------------------------------------------------------------------------
 
-struct Writer {
+pub(crate) struct Writer {
     buf: Vec<u8>,
 }
 
 impl Writer {
     fn new(tag: u8, cap_hint: usize) -> Self {
+        Self::with_magic(WIRE_MAGIC, tag, cap_hint)
+    }
+
+    /// A writer for another magic namespace (the transport's control
+    /// frames share this codec but must never collide with protocol
+    /// messages).
+    pub(crate) fn with_magic(magic: u8, tag: u8, cap_hint: usize) -> Self {
         let mut buf = Vec::with_capacity(cap_hint + HEADER_BYTES);
-        buf.push(WIRE_MAGIC);
+        buf.push(magic);
         buf.push(tag);
         buf.push(WIRE_VERSION);
         Self { buf }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn i32(&mut self, v: i32) {
+    pub(crate) fn i32(&mut self, v: i32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f32(&mut self, v: f32) {
+    pub(crate) fn f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn i32s(&mut self, xs: &[i32]) {
+    pub(crate) fn i32s(&mut self, xs: &[i32]) {
         for &x in xs {
             self.i32(x);
         }
     }
 
-    fn f32s(&mut self, xs: &[f32]) {
+    pub(crate) fn f32s(&mut self, xs: &[f32]) {
         for &x in xs {
             self.f32(x);
         }
     }
 
-    fn finish(self) -> Vec<u8> {
+    pub(crate) fn bytes(&mut self, xs: &[u8]) {
+        self.buf.extend_from_slice(xs);
+    }
+
+    pub(crate) fn finish(self) -> Vec<u8> {
         self.buf
     }
 }
 
 /// `magic + tag + version`.
-const HEADER_BYTES: usize = 3;
+pub(crate) const HEADER_BYTES: usize = 3;
 
 /// `rows × kv_heads × head_dim` from untrusted header fields, with
 /// overflow surfaced as a decode error instead of a silent wrap.
-fn row_elems(rows: usize, kv_heads: usize, head_dim: usize) -> Result<usize, WireError> {
+pub(crate) fn row_elems(rows: usize, kv_heads: usize, head_dim: usize) -> Result<usize, WireError> {
     rows.checked_mul(kv_heads)
         .and_then(|x| x.checked_mul(head_dim))
         .ok_or_else(|| WireError::Malformed("row dimensions overflow".into()))
 }
 
-struct Reader<'a> {
+pub(crate) struct Reader<'a> {
     b: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
     fn open(b: &'a [u8], tag: u8) -> Result<Self, WireError> {
+        Self::open_with_magic(b, WIRE_MAGIC, tag)
+    }
+
+    /// Open a frame in another magic namespace (see
+    /// [`Writer::with_magic`]).
+    pub(crate) fn open_with_magic(b: &'a [u8], magic: u8, tag: u8) -> Result<Self, WireError> {
         let mut r = Self { b, pos: 0 };
-        let magic = r.u8()?;
-        if magic != WIRE_MAGIC {
-            return Err(WireError::BadTag { expected: WIRE_MAGIC, got: magic });
+        let got_magic = r.u8()?;
+        if got_magic != magic {
+            return Err(WireError::BadTag { expected: magic, got: got_magic });
         }
         let got = r.u8()?;
         if got != tag {
@@ -141,7 +188,7 @@ impl<'a> Reader<'a> {
         Ok(r)
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if n > self.b.len() - self.pos {
             return Err(WireError::Truncated(self.b.len()));
         }
@@ -154,7 +201,7 @@ impl<'a> Reader<'a> {
     /// consume untrusted bytes, so a hostile length field must fail as
     /// `Truncated`/`Malformed`, never as a huge allocation or a silent
     /// `usize` wrap.
-    fn ensure_remaining(&self, elems: usize, bytes_per: usize) -> Result<(), WireError> {
+    pub(crate) fn ensure_remaining(&self, elems: usize, bytes_per: usize) -> Result<(), WireError> {
         let need = elems
             .checked_mul(bytes_per)
             .ok_or_else(|| WireError::Malformed("length field overflows".into()))?;
@@ -164,33 +211,33 @@ impl<'a> Reader<'a> {
         Ok(())
     }
 
-    fn i32s(&mut self, n: usize) -> Result<Vec<i32>, WireError> {
+    pub(crate) fn i32s(&mut self, n: usize) -> Result<Vec<i32>, WireError> {
         self.ensure_remaining(n, 4)?;
         (0..n).map(|_| self.i32()).collect()
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
         self.ensure_remaining(n, 4)?;
         (0..n).map(|_| self.f32()).collect()
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn i32(&mut self) -> Result<i32, WireError> {
+    pub(crate) fn i32(&mut self) -> Result<i32, WireError> {
         Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32, WireError> {
+    pub(crate) fn f32(&mut self) -> Result<f32, WireError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn done(self) -> Result<(), WireError> {
+    pub(crate) fn done(self) -> Result<(), WireError> {
         if self.pos != self.b.len() {
             return Err(WireError::Trailing(self.b.len() - self.pos));
         }
@@ -668,6 +715,18 @@ mod tests {
             KvContribution::decode(&msg),
             Err(WireError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn wire_kind_peeks_tags() {
+        let tb = TokenBroadcast { step: 0, token: 1 }.encode();
+        assert_eq!(wire_kind(&tb), Some(WireKind::Token));
+        let t = DecodeTail::from_row(0, 0, &[1.0], &[2.0], 1, 1).encode();
+        assert_eq!(wire_kind(&t), Some(WireKind::DecodeTail));
+        assert_eq!(wire_kind(&[]), None);
+        assert_eq!(wire_kind(&[WIRE_MAGIC]), None);
+        assert_eq!(wire_kind(&[WIRE_MAGIC, 99]), None);
+        assert_eq!(wire_kind(&[0x00, TAG_TOKEN]), None);
     }
 
     #[test]

@@ -1,0 +1,1204 @@
+//! Wire transport for the participant protocol: the PR 3 round messages
+//! deployed over real byte streams.
+//!
+//! The paper's participants live on separate edge devices; this module
+//! makes the protocol plane actually cross a link:
+//!
+//! * **Framing** — every message travels as a length-prefixed frame
+//!   ([`write_frame`] / [`read_frame`], little-endian `u32` length,
+//!   capped at [`MAX_FRAME_BYTES`] so a hostile prefix can never force a
+//!   huge allocation).
+//! * **[`Transport`]** — a blocking, message-oriented byte-stream pair
+//!   with two implementations: [`ChannelTransport`] (an in-memory
+//!   channel pair; deterministic, used by the differential tests) and
+//!   [`TcpTransport`] (std TCP sockets with `TCP_NODELAY` and a read
+//!   timeout so a dead peer cannot hang a round forever).
+//! * **[`RemoteParticipant`]** — the driver-side proxy implementing
+//!   [`Participant`]: contributions come back as encoded
+//!   [`KvContribution`] frames, aggregated rounds go out as
+//!   [`GlobalKvFrame`]s, and decoded tokens stream back as
+//!   [`TokenBroadcast`]s — the existing protocol codec, byte-for-byte,
+//!   on the wire.
+//! * **[`NodeHost`]** — the node-side loop: owns one participant's
+//!   decode caches (and an engine for decoding), answers contribution
+//!   requests, absorbs frames, and streams decode tokens.
+//! * **[`TransportDriver`]** — [`SessionDriver`] over remote nodes: the
+//!   same round loop (including the per-round deadline and its partial
+//!   aggregation, see [`SessionConfig::round_deadline_ms`]) with every
+//!   protocol-plane step crossing a transport.  With no deadline
+//!   configured, a session run over sockets is byte-identical to the
+//!   in-process [`FedSession`] — pinned by `tests/transport_golden.rs`.
+//!
+//! Control messages (init, contribution requests, decode requests) use a
+//! separate magic byte (`0xFC`) so they can never be confused with
+//! protocol frames (`0xFA`); both sides peek the magic/tag and dispatch
+//! to the matching typed decoder, which fully validates lengths before
+//! allocating.
+//!
+//! [`Participant`]: crate::fedattn::node::Participant
+//! [`SessionDriver`]: crate::fedattn::driver::SessionDriver
+//! [`SessionConfig::round_deadline_ms`]: crate::fedattn::driver::SessionConfig::round_deadline_ms
+//! [`FedSession`]: crate::fedattn::session::FedSession
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::data::Partition;
+use crate::fedattn::driver::{
+    decode_ids_from_caches, PrefillOutput, SessionConfig, SessionDriver, SessionReport,
+};
+use crate::fedattn::kv::GlobalKv;
+use crate::fedattn::node::{BlockCache, Participant};
+use crate::fedattn::protocol::{
+    self, wire_kind, GlobalKvFrame, KvContribution, Reader, TokenBroadcast, WireError,
+    WireKind, Writer,
+};
+use crate::fedattn::schedule::SyncSchedule;
+use crate::net::NetSim;
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::tokenizer;
+
+/// First byte of every transport *control* frame (node management); the
+/// protocol data plane keeps [`protocol::WIRE_MAGIC`].
+pub const CTRL_MAGIC: u8 = 0xFC;
+
+/// Hard cap on a single frame's payload.  Frames beyond this are a
+/// protocol violation: the reader rejects the length prefix *before*
+/// allocating, so a hostile or corrupt peer cannot OOM the process.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Default blocking-I/O timeout for both transports: long enough for any
+/// realistic round gap, short enough that a wedged peer cannot hang a
+/// test pipeline.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Hard cap on the total decode-cache bytes a node host will allocate
+/// for one `Init` frame.  The codec bounds every *vector* against the
+/// frame it arrived in, but `Init` carries scalar geometry
+/// (`n_layers × cache_capacity × kv_heads × head_dim`) that drives
+/// allocation on its own — an unauthenticated peer must not be able to
+/// request petabytes with a 30-byte frame.
+pub const MAX_NODE_CACHE_BYTES: usize = 256 * 1024 * 1024;
+
+/// Hard cap on a remote decode request's `max_new_tokens`: bounds the
+/// node-side decode loop against a hostile scalar (any realistic
+/// horizon is orders of magnitude smaller).
+pub const MAX_DECODE_TOKENS: usize = 65_536;
+
+/// Transport-layer failure.
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    /// The peer closed the connection cleanly (between frames).
+    #[error("transport closed by peer")]
+    Closed,
+    /// No frame arrived within the I/O timeout.
+    #[error("transport timed out waiting for a frame")]
+    Timeout,
+    /// A length prefix exceeded [`MAX_FRAME_BYTES`] (or was zero).
+    #[error("bad frame length {got} (valid: 1..={max})")]
+    BadFrameLength { got: u64, max: usize },
+    /// The stream ended mid-frame (dirty close / truncation).
+    #[error("stream truncated inside a frame: {0}")]
+    TruncatedFrame(String),
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+    /// A frame decoded to something structurally invalid.
+    #[error("wire error: {0}")]
+    Wire(#[from] WireError),
+}
+
+// ---------------------------------------------------------------------------
+// Length-prefixed framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame (`u32` LE length, then the payload).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), TransportError> {
+    if payload.is_empty() || payload.len() > MAX_FRAME_BYTES {
+        return Err(TransportError::BadFrameLength {
+            got: payload.len() as u64,
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+///
+/// * A clean EOF *between* frames maps to [`TransportError::Closed`].
+/// * An EOF *inside* a frame (truncated stream) is an error, never a
+///   partial frame.
+/// * A length prefix of zero or beyond [`MAX_FRAME_BYTES`] is rejected
+///   before any allocation happens.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, TransportError> {
+    let mut len_bytes = [0u8; 4];
+    if let Err(e) = r.read_exact(&mut len_bytes) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => TransportError::Closed,
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                TransportError::Timeout
+            }
+            _ => TransportError::Io(e),
+        });
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(TransportError::BadFrameLength { got: len as u64, max: MAX_FRAME_BYTES });
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                TransportError::TruncatedFrame(format!("wanted {len} payload bytes"))
+            }
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                TransportError::Timeout
+            }
+            _ => TransportError::Io(e),
+        });
+    }
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Transport trait + implementations
+// ---------------------------------------------------------------------------
+
+/// A blocking, ordered, message-oriented link between a driver and one
+/// node host.  `send` delivers a whole frame or fails; `recv` blocks for
+/// the next frame (bounded by the implementation's timeout).
+pub trait Transport: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError>;
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError>;
+    /// Human-readable peer label for diagnostics.
+    fn peer(&self) -> String;
+}
+
+/// In-memory channel transport: one endpoint of a crosswired
+/// `mpsc` pair.  Deterministic and allocation-cheap — the differential
+/// tests run whole sessions over it — while enforcing the same frame
+/// size cap as the socket path.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    timeout: Duration,
+    label: String,
+}
+
+impl ChannelTransport {
+    /// A connected pair of endpoints (what one sends, the other
+    /// receives).
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (atx, brx) = mpsc::channel();
+        let (btx, arx) = mpsc::channel();
+        (
+            ChannelTransport {
+                tx: atx,
+                rx: arx,
+                timeout: DEFAULT_IO_TIMEOUT,
+                label: "channel:a".to_string(),
+            },
+            ChannelTransport {
+                tx: btx,
+                rx: brx,
+                timeout: DEFAULT_IO_TIMEOUT,
+                label: "channel:b".to_string(),
+            },
+        )
+    }
+
+    /// Override the receive timeout (tests that probe hang behaviour).
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        if frame.is_empty() || frame.len() > MAX_FRAME_BYTES {
+            return Err(TransportError::BadFrameLength {
+                got: frame.len() as u64,
+                max: MAX_FRAME_BYTES,
+            });
+        }
+        self.tx.send(frame.to_vec()).map_err(|_| TransportError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        match self.rx.recv_timeout(self.timeout) {
+            Ok(f) => Ok(f),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// TCP socket transport: length-prefixed frames over a std `TcpStream`
+/// with `TCP_NODELAY` (rounds are latency-bound, not throughput-bound)
+/// and a read timeout so a dead peer surfaces as
+/// [`TransportError::Timeout`] instead of a hung test.
+pub struct TcpTransport {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl TcpTransport {
+    /// Connect to a listening node host.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, TransportError> {
+        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(stream)
+    }
+
+    /// Wrap an accepted stream (the node-host side).
+    pub fn from_stream(stream: TcpStream) -> Result<Self, TransportError> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp:unknown".to_string());
+        Ok(Self { stream, peer })
+    }
+
+    /// Override the read timeout.
+    pub fn with_read_timeout(self, timeout: Duration) -> Result<Self, TransportError> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        Ok(self)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        write_frame(&mut self.stream, frame)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        read_frame(&mut self.stream)
+    }
+
+    fn peer(&self) -> String {
+        format!("tcp:{}", self.peer)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control codec (driver <-> node management frames)
+// ---------------------------------------------------------------------------
+
+const CTRL_INIT: u8 = 1;
+const CTRL_CONTRIBUTE: u8 = 2;
+const CTRL_ABSORB_LOCAL: u8 = 3;
+const CTRL_DECODE: u8 = 4;
+const CTRL_DECODE_DONE: u8 = 5;
+const CTRL_SHUTDOWN: u8 = 6;
+const CTRL_FAULT: u8 = 7;
+
+/// Driver↔node control messages.  KV payloads embedded here are the
+/// *driver-side compute plane* (fresh K/V rows a node packages or
+/// caches); the billable data plane always travels as protocol frames.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum CtrlMsg {
+    /// Driver → node: establish this endpoint's participant identity.
+    Init {
+        id: usize,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        cache_capacity: usize,
+        keep_caches: bool,
+        pos: Vec<i32>,
+    },
+    /// Driver → node: package the flagged rows of this round's fresh K/V
+    /// as the node's uplink `KvContribution` (the reply frame).
+    Contribute {
+        block: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        /// One flag per valid row (`tx.len()` is the row count).
+        tx: Vec<bool>,
+        relevance: Option<Vec<f32>>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    /// Driver → node: cache the node's own local K/V for an off-round
+    /// block.
+    AbsorbLocal {
+        block: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        rows: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    /// Driver → node: decode from the node's caches; the node streams
+    /// one `TokenBroadcast` per generated token, then `DecodeDone`.
+    Decode {
+        total_len: usize,
+        max_new_tokens: usize,
+        device_decode: bool,
+        /// `[1, d]` kick-off hidden state, flattened.
+        h_last: Vec<f32>,
+    },
+    /// Node → driver: decode finished after `tokens` broadcasts.
+    DecodeDone { tokens: usize },
+    /// Driver → node: release the endpoint.
+    Shutdown,
+    /// Node → driver: the node failed; the session must abort.
+    Fault { message: String },
+}
+
+fn read_bool(r: &mut Reader<'_>, what: &str) -> Result<bool, WireError> {
+    match r.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(WireError::Malformed(format!("bad {what} flag {other}"))),
+    }
+}
+
+impl CtrlMsg {
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            CtrlMsg::Init { .. } => "init",
+            CtrlMsg::Contribute { .. } => "contribute",
+            CtrlMsg::AbsorbLocal { .. } => "absorb-local",
+            CtrlMsg::Decode { .. } => "decode",
+            CtrlMsg::DecodeDone { .. } => "decode-done",
+            CtrlMsg::Shutdown => "shutdown",
+            CtrlMsg::Fault { .. } => "fault",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        match self {
+            CtrlMsg::Init {
+                id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos,
+            } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_INIT, 6 * 4 + 1 + pos.len() * 4);
+                w.u32(*id as u32);
+                w.u32(*n_layers as u32);
+                w.u32(*kv_heads as u32);
+                w.u32(*head_dim as u32);
+                w.u32(*cache_capacity as u32);
+                w.u8(*keep_caches as u8);
+                w.u32(pos.len() as u32);
+                w.i32s(pos);
+                w.finish()
+            }
+            CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v } => {
+                let cap = 4 * 4 + tx.len() * 5 + (k.len() + v.len()) * 4;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_CONTRIBUTE, cap);
+                w.u32(*block as u32);
+                w.u32(*kv_heads as u32);
+                w.u32(*head_dim as u32);
+                w.u32(tx.len() as u32);
+                for &t in tx {
+                    w.u8(t as u8);
+                }
+                match relevance {
+                    Some(rel) => {
+                        w.u8(1);
+                        w.f32s(rel);
+                    }
+                    None => w.u8(0),
+                }
+                w.f32s(k);
+                w.f32s(v);
+                w.finish()
+            }
+            CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v } => {
+                let cap = 4 * 4 + (k.len() + v.len()) * 4;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_ABSORB_LOCAL, cap);
+                w.u32(*block as u32);
+                w.u32(*kv_heads as u32);
+                w.u32(*head_dim as u32);
+                w.u32(*rows as u32);
+                w.f32s(k);
+                w.f32s(v);
+                w.finish()
+            }
+            CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last } => {
+                let mut w =
+                    Writer::with_magic(CTRL_MAGIC, CTRL_DECODE, 3 * 4 + 1 + h_last.len() * 4);
+                w.u32(*total_len as u32);
+                w.u32(*max_new_tokens as u32);
+                w.u8(*device_decode as u8);
+                w.u32(h_last.len() as u32);
+                w.f32s(h_last);
+                w.finish()
+            }
+            CtrlMsg::DecodeDone { tokens } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_DECODE_DONE, 4);
+                w.u32(*tokens as u32);
+                w.finish()
+            }
+            CtrlMsg::Shutdown => Writer::with_magic(CTRL_MAGIC, CTRL_SHUTDOWN, 0).finish(),
+            CtrlMsg::Fault { message } => {
+                let bytes = message.as_bytes();
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_FAULT, 4 + bytes.len());
+                w.u32(bytes.len() as u32);
+                w.bytes(bytes);
+                w.finish()
+            }
+        }
+    }
+
+    pub(crate) fn decode(b: &[u8]) -> Result<CtrlMsg, WireError> {
+        let magic = b.first().copied().ok_or(WireError::Truncated(0))?;
+        if magic != CTRL_MAGIC {
+            return Err(WireError::BadTag { expected: CTRL_MAGIC, got: magic });
+        }
+        let tag = b.get(1).copied().ok_or(WireError::Truncated(b.len()))?;
+        let mut r = Reader::open_with_magic(b, CTRL_MAGIC, tag)?;
+        let msg = match tag {
+            CTRL_INIT => {
+                let id = r.u32()? as usize;
+                let n_layers = r.u32()? as usize;
+                let kv_heads = r.u32()? as usize;
+                let head_dim = r.u32()? as usize;
+                let cache_capacity = r.u32()? as usize;
+                let keep_caches = read_bool(&mut r, "keep_caches")?;
+                let rows = r.u32()? as usize;
+                let pos = r.i32s(rows)?;
+                CtrlMsg::Init { id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos }
+            }
+            CTRL_CONTRIBUTE => {
+                let block = r.u32()? as usize;
+                let kv_heads = r.u32()? as usize;
+                let head_dim = r.u32()? as usize;
+                let rows = r.u32()? as usize;
+                let elems = protocol::row_elems(rows, kv_heads, head_dim)?;
+                r.ensure_remaining(rows, 1)?;
+                let mut tx = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    tx.push(read_bool(&mut r, "tx")?);
+                }
+                let relevance = if read_bool(&mut r, "relevance-present")? {
+                    Some(r.f32s(rows)?)
+                } else {
+                    None
+                };
+                let k = r.f32s(elems)?;
+                let v = r.f32s(elems)?;
+                CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v }
+            }
+            CTRL_ABSORB_LOCAL => {
+                let block = r.u32()? as usize;
+                let kv_heads = r.u32()? as usize;
+                let head_dim = r.u32()? as usize;
+                let rows = r.u32()? as usize;
+                let elems = protocol::row_elems(rows, kv_heads, head_dim)?;
+                let k = r.f32s(elems)?;
+                let v = r.f32s(elems)?;
+                CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v }
+            }
+            CTRL_DECODE => {
+                let total_len = r.u32()? as usize;
+                let max_new_tokens = r.u32()? as usize;
+                let device_decode = read_bool(&mut r, "device_decode")?;
+                let d = r.u32()? as usize;
+                let h_last = r.f32s(d)?;
+                CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last }
+            }
+            CTRL_DECODE_DONE => CtrlMsg::DecodeDone { tokens: r.u32()? as usize },
+            CTRL_SHUTDOWN => CtrlMsg::Shutdown,
+            CTRL_FAULT => {
+                let len = r.u32()? as usize;
+                let bytes = r.take(len)?;
+                let message = std::str::from_utf8(bytes)
+                    .map_err(|_| WireError::Malformed("fault message is not utf-8".into()))?
+                    .to_string();
+                CtrlMsg::Fault { message }
+            }
+            other => return Err(WireError::Malformed(format!("unknown control tag {other}"))),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RemoteParticipant — the driver-side proxy
+// ---------------------------------------------------------------------------
+
+/// Driver-side proxy for one participant living behind a [`Transport`].
+///
+/// Implements [`Participant`] by exchanging frames with the peer
+/// [`NodeHost`]: `contribute` round-trips a control request and decodes
+/// the returned [`KvContribution`] (the very bytes whose payload size is
+/// billed), `absorb_frame` ships the encoded [`GlobalKvFrame`], and
+/// [`RemoteParticipant::decode`] streams [`TokenBroadcast`] frames back.
+pub struct RemoteParticipant {
+    id: usize,
+    pos: Vec<i32>,
+    valid: usize,
+    keep_caches: bool,
+    transport: Box<dyn Transport>,
+}
+
+impl RemoteParticipant {
+    pub fn new(
+        id: usize,
+        pos: Vec<i32>,
+        valid: usize,
+        keep_caches: bool,
+        transport: Box<dyn Transport>,
+    ) -> Self {
+        Self { id, pos, valid, keep_caches, transport }
+    }
+
+    /// Send the node its identity + cache geometry.
+    pub(crate) fn init(
+        &mut self,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        cache_capacity: usize,
+    ) -> Result<()> {
+        let msg = CtrlMsg::Init {
+            id: self.id,
+            n_layers,
+            kv_heads,
+            head_dim,
+            cache_capacity,
+            keep_caches: self.keep_caches,
+            pos: self.pos.clone(),
+        };
+        self.transport.send(&msg.encode())?;
+        Ok(())
+    }
+
+    /// Raise a node-reported fault as a session error.
+    fn check_fault(&self, frame: &[u8]) -> Result<()> {
+        if frame.first() == Some(&CTRL_MAGIC) {
+            if let Ok(CtrlMsg::Fault { message }) = CtrlMsg::decode(frame) {
+                anyhow::bail!("node {} ({}) faulted: {message}", self.id, self.transport.peer());
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the greedy decode at the node host (which owns the caches and
+    /// its own engine); tokens stream back as [`TokenBroadcast`] frames
+    /// terminated by a `DecodeDone` control message.
+    pub fn decode(
+        &mut self,
+        h_last: &HostTensor,
+        total_len: usize,
+        max_new_tokens: usize,
+        device_decode: bool,
+    ) -> Result<(String, usize)> {
+        let msg = CtrlMsg::Decode {
+            total_len,
+            max_new_tokens,
+            device_decode,
+            h_last: h_last.data().to_vec(),
+        };
+        self.transport.send(&msg.encode())?;
+        let mut ids: Vec<i32> = Vec::new();
+        loop {
+            let frame = self.transport.recv()?;
+            if wire_kind(&frame) == Some(WireKind::Token) {
+                let tb = TokenBroadcast::decode(&frame)?;
+                anyhow::ensure!(
+                    tb.step == ids.len(),
+                    "out-of-order token broadcast: step {} at position {}",
+                    tb.step,
+                    ids.len()
+                );
+                ids.push(tb.token);
+                continue;
+            }
+            self.check_fault(&frame)?;
+            match CtrlMsg::decode(&frame)? {
+                CtrlMsg::DecodeDone { tokens } => {
+                    anyhow::ensure!(
+                        tokens == ids.len(),
+                        "decode-done claims {tokens} tokens, received {}",
+                        ids.len()
+                    );
+                    break;
+                }
+                other => anyhow::bail!("unexpected {} frame during decode", other.name()),
+            }
+        }
+        Ok((tokenizer::decode(&ids), ids.len()))
+    }
+
+    /// Release the node host's serve loop.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.transport.send(&CtrlMsg::Shutdown.encode())?;
+        Ok(())
+    }
+}
+
+impl Participant for RemoteParticipant {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn valid_rows(&self) -> usize {
+        self.valid
+    }
+
+    fn positions(&self) -> &[i32] {
+        &self.pos
+    }
+
+    fn keeps_caches(&self) -> bool {
+        self.keep_caches
+    }
+
+    fn contribute(
+        &mut self,
+        block: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        tx: &[bool],
+        relevance: Option<&[f64]>,
+    ) -> Result<KvContribution> {
+        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
+        anyhow::ensure!(tx.len() == self.valid, "tx flags != valid rows");
+        let row_len = kv_heads * head_dim;
+        let msg = CtrlMsg::Contribute {
+            block,
+            kv_heads,
+            head_dim,
+            tx: tx.to_vec(),
+            relevance: relevance.map(|r| r.iter().map(|&s| s as f32).collect()),
+            k: k.data()[..self.valid * row_len].to_vec(),
+            v: v.data()[..self.valid * row_len].to_vec(),
+        };
+        self.transport.send(&msg.encode())?;
+        let frame = self.transport.recv()?;
+        self.check_fault(&frame)?;
+        anyhow::ensure!(
+            wire_kind(&frame) == Some(WireKind::Contribution),
+            "expected a KvContribution frame from node {}",
+            self.id
+        );
+        let c = KvContribution::decode(&frame)?;
+        anyhow::ensure!(
+            c.block == block && c.owner == self.id,
+            "contribution for wrong round: block {} owner {}",
+            c.block,
+            c.owner
+        );
+        Ok(c)
+    }
+
+    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()> {
+        let frame = GlobalKvFrame::from_global(block, gkv);
+        self.transport.send(&frame.encode())?;
+        Ok(())
+    }
+
+    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
+        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
+        let row_len = kv_heads * head_dim;
+        let msg = CtrlMsg::AbsorbLocal {
+            block,
+            kv_heads,
+            head_dim,
+            rows: self.valid,
+            k: k.data()[..self.valid * row_len].to_vec(),
+            v: v.data()[..self.valid * row_len].to_vec(),
+        };
+        self.transport.send(&msg.encode())?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NodeHost — the node-side serve loop
+// ---------------------------------------------------------------------------
+
+/// Bound the total decode-cache allocation an `Init` frame requests.
+///
+/// The codec bounds every *vector* against the frame it arrived in, but
+/// `Init` carries scalar geometry
+/// (`n_layers × cache_capacity × kv_heads × head_dim`) that drives
+/// allocation on its own — an unauthenticated peer must not be able to
+/// request petabytes with a 30-byte frame.  Overflow and anything past
+/// [`MAX_NODE_CACHE_BYTES`] are rejected before any cache is built (the
+/// same no-unbounded-allocation invariant the decoders uphold).
+fn validate_init_geometry(
+    n_layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    cache_capacity: usize,
+) -> Result<()> {
+    let cache_bytes = cache_capacity
+        .checked_mul(kv_heads)
+        .and_then(|x| x.checked_mul(head_dim))
+        .and_then(|x| x.checked_mul(2 * 4)) // K + V, f32
+        .and_then(|x| x.checked_mul(n_layers))
+        .ok_or_else(|| anyhow::anyhow!("init cache geometry overflows"))?;
+    anyhow::ensure!(
+        cache_bytes <= MAX_NODE_CACHE_BYTES,
+        "init requests {cache_bytes} cache bytes (cap {MAX_NODE_CACHE_BYTES})"
+    );
+    Ok(())
+}
+
+/// One participant's node-side state: identity, positions, and the
+/// authoritative per-block decode caches.
+struct WireNode {
+    id: usize,
+    pos: Vec<i32>,
+    valid: usize,
+    keep_caches: bool,
+    caches: Vec<BlockCache>,
+}
+
+/// The node-side half of the wire protocol: owns one participant's
+/// decode caches and an [`Engine`] (for decoding), and answers the
+/// driver's frames until `Shutdown` or a clean close.
+///
+/// A faulting request sends a `Fault` control frame back (so the driver
+/// fails the session with the node's error) before the loop exits.
+pub struct NodeHost {
+    engine: Engine,
+    transport: Box<dyn Transport>,
+}
+
+impl NodeHost {
+    pub fn new(engine: Engine, transport: Box<dyn Transport>) -> Self {
+        Self { engine, transport }
+    }
+
+    /// Serve one driver session to completion.  Returns `Ok(())` on
+    /// `Shutdown` or a clean peer close.
+    pub fn serve(mut self) -> Result<()> {
+        let mut node: Option<WireNode> = None;
+        loop {
+            let frame = match self.transport.recv() {
+                Ok(f) => f,
+                Err(TransportError::Closed) => return Ok(()),
+                Err(e) => return Err(e.into()),
+            };
+            match self.handle(&frame, &mut node) {
+                Ok(false) => {}
+                Ok(true) => return Ok(()),
+                Err(e) => {
+                    let fault = CtrlMsg::Fault { message: format!("{e:#}") };
+                    let _ = self.transport.send(&fault.encode());
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Dispatch one frame; `Ok(true)` ends the serve loop.
+    fn handle(&mut self, frame: &[u8], node: &mut Option<WireNode>) -> Result<bool> {
+        if let Some(kind) = wire_kind(frame) {
+            match kind {
+                WireKind::Frame => {
+                    let f = GlobalKvFrame::decode(frame)?;
+                    let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("frame before init"))?;
+                    anyhow::ensure!(node.keep_caches, "frame sent to a cache-less node");
+                    anyhow::ensure!(
+                        f.block < node.caches.len(),
+                        "frame block {} out of range",
+                        f.block
+                    );
+                    let g = f.to_global(f.rows())?;
+                    let cache = &node.caches[f.block];
+                    // Reject (as a Fault, not a panic) a well-formed frame
+                    // that would overflow the decode cache — push_rows
+                    // asserts, and an assert on untrusted input would kill
+                    // the serving thread without telling the driver.
+                    anyhow::ensure!(
+                        cache.len + g.rows() <= cache.k.shape()[0],
+                        "frame rows {} overflow decode cache ({}/{} used)",
+                        g.rows(),
+                        cache.len,
+                        cache.k.shape()[0]
+                    );
+                    let vis: Vec<bool> =
+                        g.meta.iter().map(|r| r.owner == node.id || r.transmitted).collect();
+                    node.caches[f.block].push_rows(&g.k, &g.v, g.rows(), &vis);
+                    return Ok(false);
+                }
+                other => anyhow::bail!("unexpected protocol frame {other:?} at node host"),
+            }
+        }
+        match CtrlMsg::decode(frame)? {
+            CtrlMsg::Init {
+                id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos,
+            } => {
+                if keep_caches {
+                    validate_init_geometry(n_layers, kv_heads, head_dim, cache_capacity)?;
+                }
+                let caches = if keep_caches {
+                    (0..n_layers)
+                        .map(|_| BlockCache::new(cache_capacity, kv_heads, head_dim))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let valid = pos.len();
+                *node = Some(WireNode { id, pos, valid, keep_caches, caches });
+                Ok(false)
+            }
+            CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v } => {
+                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("contribute before init"))?;
+                anyhow::ensure!(tx.len() == node.valid, "tx flags != node rows");
+                let kt = HostTensor::new(&[node.valid, kv_heads, head_dim], k)?;
+                let vt = HostTensor::new(&[node.valid, kv_heads, head_dim], v)?;
+                let rel: Option<Vec<f64>> =
+                    relevance.map(|r| r.iter().map(|&x| x as f64).collect());
+                let c = KvContribution::from_rows(
+                    block,
+                    node.id,
+                    &kt,
+                    &vt,
+                    &node.pos,
+                    &tx,
+                    rel.as_deref(),
+                );
+                self.transport.send(&c.encode())?;
+                Ok(false)
+            }
+            CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v } => {
+                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("absorb before init"))?;
+                anyhow::ensure!(node.keep_caches, "absorb-local sent to a cache-less node");
+                anyhow::ensure!(rows == node.valid, "absorb rows != node rows");
+                anyhow::ensure!(block < node.caches.len(), "absorb block {block} out of range");
+                let cache = &node.caches[block];
+                anyhow::ensure!(
+                    cache.len + rows <= cache.k.shape()[0],
+                    "absorb rows {rows} overflow decode cache ({}/{} used)",
+                    cache.len,
+                    cache.k.shape()[0]
+                );
+                let kt = HostTensor::new(&[rows, kv_heads, head_dim], k)?;
+                let vt = HostTensor::new(&[rows, kv_heads, head_dim], v)?;
+                let vis = vec![true; rows];
+                node.caches[block].push_rows(&kt, &vt, rows, &vis);
+                Ok(false)
+            }
+            CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last } => {
+                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("decode before init"))?;
+                anyhow::ensure!(node.keep_caches, "decode requested from a cache-less node");
+                // Untrusted scalar bounds the decode loop.
+                anyhow::ensure!(
+                    max_new_tokens <= MAX_DECODE_TOKENS,
+                    "decode horizon {max_new_tokens} exceeds cap {MAX_DECODE_TOKENS}"
+                );
+                let d = h_last.len();
+                let h = HostTensor::new(&[1, d], h_last)?;
+                let ids = decode_ids_from_caches(
+                    &self.engine,
+                    &mut node.caches,
+                    &h,
+                    total_len,
+                    max_new_tokens,
+                    device_decode,
+                )?;
+                for (step, &token) in ids.iter().enumerate() {
+                    self.transport.send(&TokenBroadcast { step, token }.encode())?;
+                }
+                self.transport.send(&CtrlMsg::DecodeDone { tokens: ids.len() }.encode())?;
+                Ok(false)
+            }
+            CtrlMsg::Shutdown => Ok(true),
+            other @ (CtrlMsg::DecodeDone { .. } | CtrlMsg::Fault { .. }) => {
+                anyhow::bail!("unexpected {} control frame at node host", other.name())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TransportDriver — the wire deployment of a session
+// ---------------------------------------------------------------------------
+
+/// [`SessionDriver`] deployed over transports: one [`RemoteParticipant`]
+/// per node, the same round loop (deadline-driven partial aggregation
+/// included), every protocol-plane message crossing a real link.
+///
+/// With `round_deadline_ms = None`, a session run through this driver is
+/// byte-identical — generated tokens, per-round byte accounting — to the
+/// in-process [`FedSession`] (pinned by `tests/transport_golden.rs`
+/// across all six KV policies over both channel and TCP-loopback
+/// transports).
+///
+/// [`FedSession`]: crate::fedattn::session::FedSession
+pub struct TransportDriver<'a> {
+    inner: SessionDriver<'a>,
+}
+
+impl<'a> TransportDriver<'a> {
+    /// Connect a session to `transports[p]` for participant `p` (each
+    /// leading to a [`NodeHost`]).  Sends every node its `Init` frame.
+    pub fn new(
+        engine: &'a Engine,
+        partition: &'a Partition,
+        cfg: SessionConfig,
+        net: NetSim,
+        transports: Vec<Box<dyn Transport>>,
+    ) -> Result<Self> {
+        Ok(Self {
+            inner: SessionDriver::new_with_remotes(engine, partition, cfg, net, transports)?,
+        })
+    }
+
+    /// The effective attendance schedule (after dropout masking).
+    pub fn effective_schedule(&self) -> &SyncSchedule {
+        self.inner.effective_schedule()
+    }
+
+    /// Run the federated prefill over the wire.
+    pub fn prefill(&mut self) -> Result<PrefillOutput> {
+        self.inner.prefill()
+    }
+
+    /// Decode participant `p` at its node host.
+    pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
+        self.inner.decode_participant(p)
+    }
+
+    /// Prefill + decode + host shutdown, returning the full report.
+    pub fn run(self) -> Result<SessionReport> {
+        self.inner.run()
+    }
+
+    /// Prefill only.
+    pub fn run_prefill_only(self) -> Result<PrefillOutput> {
+        self.inner.run_prefill_only()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256ss;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_through_cursor() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, &[0xFA, 0x01]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), vec![0xFA, 0x01]);
+        assert!(matches!(read_frame(&mut r), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn frame_rejects_hostile_lengths() {
+        // Oversized length prefix: rejected before any allocation.
+        let mut bytes = ((MAX_FRAME_BYTES as u32) + 1).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(TransportError::BadFrameLength { .. })
+        ));
+        // u32::MAX prefix likewise.
+        let bytes = u32::MAX.to_le_bytes().to_vec();
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(TransportError::BadFrameLength { .. })
+        ));
+        // Zero-length frames don't exist.
+        let bytes = 0u32.to_le_bytes().to_vec();
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(TransportError::BadFrameLength { .. })
+        ));
+        // A stream that dies inside a frame is truncation, not a clean
+        // close.
+        let mut bytes = 100u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(TransportError::TruncatedFrame(_))
+        ));
+        // A partial length prefix at EOF is a clean close (peer finished
+        // between frames as far as framing can tell it apart from 0
+        // bytes) only when *no* bytes arrived; otherwise it's Closed at
+        // the prefix boundary per read_exact semantics.
+        assert!(matches!(
+            read_frame(&mut Cursor::new(Vec::new())),
+            Err(TransportError::Closed)
+        ));
+        // Writers refuse the same bounds.
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &[]).is_err());
+        assert!(write_frame(&mut sink, &vec![0u8; MAX_FRAME_BYTES + 1]).is_err());
+    }
+
+    #[test]
+    fn channel_pair_roundtrips_and_detects_close() {
+        let (mut a, mut b) = ChannelTransport::pair();
+        a.send(b"ping").unwrap();
+        assert_eq!(b.recv().unwrap(), b"ping");
+        b.send(b"pong").unwrap();
+        assert_eq!(a.recv().unwrap(), b"pong");
+        drop(b);
+        assert!(matches!(a.send(b"x"), Err(TransportError::Closed)));
+        assert!(matches!(a.recv(), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn channel_recv_times_out() {
+        // _b stays alive (so the channel is not Disconnected) but never
+        // sends: recv must report Timeout, not hang.
+        let (a, _b) = ChannelTransport::pair();
+        let mut a = a.with_timeout(Duration::from_millis(10));
+        assert!(matches!(a.recv(), Err(TransportError::Timeout)));
+    }
+
+    #[test]
+    fn tcp_loopback_roundtrips() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap(); // echo
+        });
+        let mut c = TcpTransport::connect(addr).unwrap();
+        c.send(b"over the wire").unwrap();
+        assert_eq!(c.recv().unwrap(), b"over the wire");
+        server.join().unwrap();
+        // Server side is gone now: the next recv reports a clean close.
+        assert!(matches!(c.recv(), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn ctrl_messages_roundtrip() {
+        let msgs = [
+            CtrlMsg::Init {
+                id: 2,
+                n_layers: 4,
+                kv_heads: 1,
+                head_dim: 2,
+                cache_capacity: 32,
+                keep_caches: true,
+                pos: vec![3, 4, 5],
+            },
+            CtrlMsg::Contribute {
+                block: 1,
+                kv_heads: 1,
+                head_dim: 2,
+                tx: vec![true, false, true],
+                relevance: Some(vec![0.5, 1.5, 2.5]),
+                k: vec![1.0; 6],
+                v: vec![-1.0; 6],
+            },
+            CtrlMsg::Contribute {
+                block: 0,
+                kv_heads: 1,
+                head_dim: 1,
+                tx: vec![true],
+                relevance: None,
+                k: vec![0.25],
+                v: vec![0.75],
+            },
+            CtrlMsg::AbsorbLocal {
+                block: 3,
+                kv_heads: 2,
+                head_dim: 2,
+                rows: 2,
+                k: vec![2.0; 8],
+                v: vec![3.0; 8],
+            },
+            CtrlMsg::Decode {
+                total_len: 40,
+                max_new_tokens: 12,
+                device_decode: true,
+                h_last: vec![0.1, 0.2, 0.3],
+            },
+            CtrlMsg::DecodeDone { tokens: 7 },
+            CtrlMsg::Shutdown,
+            CtrlMsg::Fault { message: "engine exploded".into() },
+        ];
+        for msg in msgs {
+            let bytes = msg.encode();
+            assert_eq!(CtrlMsg::decode(&bytes).unwrap(), msg, "{}", msg.name());
+            // Canonical codec: a successful decode re-encodes to the same
+            // bytes.
+            assert_eq!(CtrlMsg::decode(&bytes).unwrap().encode(), bytes);
+        }
+    }
+
+    #[test]
+    fn ctrl_decode_rejects_malformed() {
+        // Protocol frames are not control frames.
+        let tb = TokenBroadcast { step: 0, token: 1 }.encode();
+        assert!(CtrlMsg::decode(&tb).is_err());
+        assert!(CtrlMsg::decode(&[]).is_err());
+        assert!(CtrlMsg::decode(&[CTRL_MAGIC]).is_err());
+        // Unknown tag.
+        assert!(CtrlMsg::decode(&[CTRL_MAGIC, 0x7F, 1]).is_err());
+        // Hostile row count in a contribute header must fail before
+        // allocating.
+        let mut msg = vec![CTRL_MAGIC, CTRL_CONTRIBUTE, 1];
+        for field in [0u32, 1, 1, u32::MAX] {
+            msg.extend_from_slice(&field.to_le_bytes());
+        }
+        assert!(CtrlMsg::decode(&msg).is_err());
+        // Every truncation of a valid message errors cleanly.
+        let full = CtrlMsg::Init {
+            id: 1,
+            n_layers: 2,
+            kv_heads: 1,
+            head_dim: 2,
+            cache_capacity: 8,
+            keep_caches: true,
+            pos: vec![0, 1],
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(CtrlMsg::decode(&full[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn init_geometry_validation_blocks_hostile_scalars() {
+        // Realistic geometry (tiny model: layers x capacity x heads x dim).
+        assert!(validate_init_geometry(8, 2, 16, 256).is_ok());
+        // All-max scalars overflow the product: rejected, not wrapped.
+        let m = usize::MAX;
+        assert!(validate_init_geometry(m, m, m, m).is_err());
+        // Non-overflowing but absurd request: rejected by the byte cap
+        // before any allocation.
+        assert!(validate_init_geometry(4096, 64, 1024, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn ctrl_fuzz_never_panics() {
+        let mut rng = Xoshiro256ss::new(0xC7_21);
+        for _ in 0..2000 {
+            let len = rng.below(128) as usize;
+            let mut bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            // Half the time, force a plausible header so decode gets past
+            // the magic/tag checks and into the length-validation paths.
+            if rng.bernoulli(0.5) && bytes.len() >= 3 {
+                bytes[0] = CTRL_MAGIC;
+                bytes[1] = 1 + rng.below(7) as u8;
+                bytes[2] = 1; // wire version
+            }
+            if let Ok(msg) = CtrlMsg::decode(&bytes) {
+                // Canonical: anything that decodes re-encodes identically.
+                assert_eq!(msg.encode(), bytes);
+            }
+        }
+    }
+}

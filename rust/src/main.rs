@@ -13,8 +13,11 @@ use fedattn::cli::Args;
 use fedattn::config::SystemConfig;
 use fedattn::coordinator::{Coordinator, CoordinatorConfig};
 use fedattn::data::{gen_episode, partition, Segmentation, TraceConfig, WorkloadTrace};
-use fedattn::fedattn::{FedSession, SessionConfig, SyncSchedule};
-use fedattn::metrics::CostModel;
+use fedattn::fedattn::{
+    FedSession, LocalSparsity, NodeHost, SessionConfig, SyncSchedule, TcpTransport,
+    Transport, TransportDriver,
+};
+use fedattn::metrics::{em_score, CostModel};
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::runtime::Engine;
 use fedattn::util::prng::SplitMix64;
@@ -38,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "info" => cmd_info(args),
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
+        "node" => cmd_node(args),
         "gen-data" => cmd_gen_data(args),
         "validate" => cmd_validate(args),
         "help" | "--help" => {
@@ -59,8 +63,10 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
            info                       model + artifact summary\n\
-           run                        one collaborative task\n\
+           run                        one collaborative task (in-process, or\n\
+                                      over TCP with --connect)\n\
            serve                      replay a workload trace\n\
+           node                       host participant nodes over TCP (--listen)\n\
            gen-data                   sample MicroFact episodes\n\
            validate                   H=1 == CenAttn end-to-end check\n\
          \n\
@@ -78,6 +84,14 @@ fn print_help() {
            --dropout <p>              per-node attendance dropout probability\n\
                                       in [0, 1] (0 = off; masks the sync\n\
                                       schedule, not the data)\n\
+           --round-deadline <ms>      per-sync-round contribution deadline in\n\
+                                      simulated ms (late contributions are\n\
+                                      excluded; off|none|inf disables)\n\
+           --listen <addr>            node: accept driver connections here\n\
+                                      (default 127.0.0.1:7070)\n\
+           --connect <a1[,a2,...]>    run: drive participants over TCP; each\n\
+                                      participant connects round-robin to the\n\
+                                      listed node hosts\n\
            --time-scale <f>           compress trace inter-arrival gaps by f\n\
                                       (serve; default TOML serving.time_scale,\n\
                                       else 10)\n\
@@ -119,6 +133,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
     if let Some(p) = fedattn::cli::parse_dropout(args)? {
         f.dropout_prob = p;
+    }
+    if let Some(d) = fedattn::cli::parse_round_deadline(args)? {
+        f.round_deadline_ms = d;
     }
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
     sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
@@ -171,6 +188,9 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let sc = load_config(args)?;
+    if let Some(spec) = args.opt("connect") {
+        return cmd_run_wire(args, &sc, spec);
+    }
     let engine = build_engine(&sc)?;
     let coord = Coordinator::new(engine, CoordinatorConfig::from_system(&sc));
     let mut rng = SplitMix64::new(sc.seed);
@@ -190,6 +210,104 @@ fn cmd_run(args: &Args) -> Result<()> {
         r.comm_time_ms
     );
     Ok(())
+}
+
+/// `run --connect a1[,a2,...]` — the same one-shot collaborative task,
+/// but with every participant's protocol plane behind a TCP transport:
+/// participant `p` connects (round-robin) to the listed `fedattn node`
+/// hosts.  With no `--round-deadline`, the answer and comm bytes are
+/// byte-identical to the in-process `run`.
+fn cmd_run_wire(args: &Args, sc: &SystemConfig, spec: &str) -> Result<()> {
+    let addrs: Vec<&str> = spec.split(',').filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(!addrs.is_empty(), "--connect needs at least one host:port");
+    let engine = build_engine(sc)?;
+    let md = engine.manifest.model.clone();
+    let n = sc.federation.participants;
+    let mut rng = SplitMix64::new(sc.seed);
+    let ep = gen_episode(&mut rng, args.usize_or("facts", 4));
+    let part = partition(&ep, n, sc.federation.segmentation);
+
+    let mut scfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, sc.federation.sync_h));
+    scfg.local_sparsity = LocalSparsity { ratio: sc.federation.local_sparsity };
+    scfg.kv_policy = sc.federation.kv_policy;
+    scfg.max_new_tokens = sc.federation.max_new_tokens;
+    scfg.dropout_prob = sc.federation.dropout_prob;
+    scfg.round_deadline_ms = sc.federation.round_deadline_ms;
+    scfg.seed = sc.seed;
+    scfg.workers = sc.serving.workers;
+
+    let links = sc.network.links(n);
+    let net = NetSim::new(sc.network.topology, links, sc.seed);
+    let transports: Vec<Box<dyn Transport>> = (0..n)
+        .map(|p| {
+            let addr = addrs[p % addrs.len()];
+            TcpTransport::connect(addr)
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .with_context(|| format!("connecting participant {p} to node host {addr}"))
+        })
+        .collect::<Result<_>>()?;
+
+    println!(
+        "prompt ({n} participants over {} node host(s), {}):",
+        addrs.len(),
+        sc.federation.segmentation.as_str()
+    );
+    println!("  {}", ep.prompt());
+    let t0 = std::time::Instant::now();
+    let rep = TransportDriver::new(&engine, &part, scfg, net, transports)?.run()?;
+    let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "answer      : {:?} (gold {:?}) -> EM {}",
+        rep.answer,
+        ep.answer,
+        em_score(&rep.answer, &ep.answer)
+    );
+    println!("service     : {service_ms:.1} ms ({} tokens)", rep.generated_tokens);
+    println!(
+        "comm        : {} over simulated net ({:.2} ms, {} rounds)",
+        fmt_bytes(rep.net.total_bytes() as f64),
+        rep.net.comm_time_ms,
+        rep.net.rounds
+    );
+    Ok(())
+}
+
+/// `node --listen addr` — host participant nodes for wire-mode drivers.
+/// Each accepted connection gets its own serving thread (and engine
+/// clone), so one process can host every participant of a session.
+fn cmd_node(args: &Args) -> Result<()> {
+    let sc = load_config(args)?;
+    let engine = build_engine(&sc)?;
+    let addr = args.opt_or("listen", "127.0.0.1:7070");
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding node host to {addr}"))?;
+    println!("node host listening on {addr} (Ctrl-C to stop)");
+    loop {
+        // A transient accept failure (peer RST during the handshake, fd
+        // pressure) must not take down sessions served by other threads.
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                log::error!("accept failed on {addr}: {e}");
+                continue;
+            }
+        };
+        println!("serving driver at {peer}");
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            let transport = match TcpTransport::from_stream(stream) {
+                Ok(t) => t,
+                Err(e) => {
+                    log::error!("node transport setup failed for {peer}: {e}");
+                    return;
+                }
+            };
+            match NodeHost::new(engine, Box::new(transport)).serve() {
+                Ok(()) => println!("driver {peer} finished"),
+                Err(e) => log::error!("node session for {peer} failed: {e:#}"),
+            }
+        });
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

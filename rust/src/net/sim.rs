@@ -146,6 +146,95 @@ impl NetSim {
         round
     }
 
+    /// Draw each participant's simulated uplink completion time (ms) for
+    /// the planned payloads, without committing any byte accounting.
+    ///
+    /// This is the deadline-driven driver's *scheduling* step: link
+    /// latency + jitter decide **when** a contribution lands at the
+    /// aggregator, and arrivals past the round deadline are excluded from
+    /// aggregation before the round is billed via
+    /// [`NetSim::exchange_round_scheduled`].  Zero-byte entries (a
+    /// participant with nothing to send) draw no jitter and arrive at
+    /// `0.0`, mirroring [`NetSim::exchange_round`]'s skip of silent
+    /// participants.  Jitter draws consume this simulator's RNG stream,
+    /// so a driver that never schedules (no deadline configured) stays
+    /// byte-identical to the pre-deadline behaviour.
+    pub fn uplink_arrivals(&mut self, tx_bytes: &[u64]) -> Vec<f64> {
+        assert_eq!(tx_bytes.len(), self.links.len());
+        tx_bytes
+            .iter()
+            .zip(&self.links)
+            .map(|(&tb, link)| {
+                if tb > 0 {
+                    link.transfer_ms(tb, Some(&mut self.rng))
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Execute one KV-exchange round whose uplink transfers were already
+    /// scheduled by [`NetSim::uplink_arrivals`].
+    ///
+    /// * `tx_bytes[n]` — bytes participant `n` contributes **on time**
+    ///   (the driver zeroes entries whose arrival missed the deadline, so
+    ///   late payloads are neither billed nor delivered).
+    /// * `attending[n]` — whether participant `n` receives the aggregate
+    ///   (already restricted to on-time attendees).
+    /// * `uplink_ms[n]` — the pre-drawn uplink completion times; entries
+    ///   with `tx_bytes[n] == 0` are ignored.
+    ///
+    /// Byte accounting is identical to [`NetSim::exchange_round`]; the
+    /// round time is the slowest *included* uplink plus the downlink leg
+    /// (drawn fresh here, since the downlink only starts once the round
+    /// closes).  Returns the simulated round time.
+    pub fn exchange_round_scheduled(
+        &mut self,
+        tx_bytes: &[u64],
+        attending: &[bool],
+        uplink_ms: &[f64],
+    ) -> f64 {
+        assert_eq!(tx_bytes.len(), self.links.len());
+        assert_eq!(attending.len(), self.links.len());
+        assert_eq!(uplink_ms.len(), self.links.len());
+        let total: u64 = tx_bytes.iter().sum();
+        let mut up_max = 0.0f64;
+        let mut down_max = 0.0f64;
+        for (n, (&tb, link)) in tx_bytes.iter().zip(&self.links).enumerate() {
+            if tb > 0 {
+                self.report.tx_bytes[n] += tb;
+                up_max = up_max.max(uplink_ms[n]);
+            }
+            if attending[n] {
+                let rx = total - tb;
+                self.report.rx_bytes[n] += rx;
+                let t = match self.topology {
+                    Topology::Star => link.transfer_ms(rx, Some(&mut self.rng)),
+                    Topology::Mesh => {
+                        let max_peer = tx_bytes
+                            .iter()
+                            .enumerate()
+                            .filter(|&(m, _)| m != n)
+                            .map(|(_, &b)| b)
+                            .max()
+                            .unwrap_or(0);
+                        link.transfer_ms(max_peer, Some(&mut self.rng))
+                    }
+                };
+                down_max = down_max.max(t);
+            }
+        }
+        let round = match self.topology {
+            Topology::Star => up_max + down_max,
+            Topology::Mesh => up_max.max(down_max),
+        };
+        self.report.comm_time_ms += round;
+        self.report.rounds += 1;
+        self.report.round_bytes.push(total);
+        round
+    }
+
     /// Per-participant link specifications.
     pub fn links(&self) -> &[LinkSpec] {
         &self.links
@@ -294,6 +383,48 @@ mod tests {
         let ts = star.exchange_round(&bytes, &att);
         let tm = mesh.exchange_round(&bytes, &att);
         assert!(tm < ts, "mesh {tm} vs star {ts}");
+    }
+
+    #[test]
+    fn uplink_arrivals_deterministic_and_skip_silent() {
+        let link = LinkSpec { bandwidth_mbps: 10.0, latency_ms: 2.0, jitter: 0.5 };
+        let mut a = NetSim::uniform(Topology::Star, 3, link, 9);
+        let mut b = NetSim::uniform(Topology::Star, 3, link, 9);
+        let bytes = [100_000u64, 0, 200_000];
+        let ta = a.uplink_arrivals(&bytes);
+        let tb = b.uplink_arrivals(&bytes);
+        assert_eq!(ta, tb, "same seed must schedule the same arrivals");
+        assert_eq!(ta[1], 0.0, "silent participant arrives at 0 with no draw");
+        assert!(ta[0] > 0.0 && ta[2] > 0.0);
+        // Scheduling consumed randomness only for the two transmitters:
+        // the next draws still agree between the two streams.
+        assert!((a.uplink_arrivals(&bytes)[0] - b.uplink_arrivals(&bytes)[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduled_round_accounts_like_exchange_round() {
+        // With jitter 0 the scheduled variant must bill exactly like the
+        // classic one; only included (on-time) payloads count.
+        let mut plain = sim(3);
+        plain.exchange_round(&[100, 200, 300], &[true, true, true]);
+        let mut sched = sim(3);
+        let arr = sched.uplink_arrivals(&[100, 200, 300]);
+        sched.exchange_round_scheduled(&[100, 200, 300], &[true, true, true], &arr);
+        assert_eq!(plain.report().tx_bytes, sched.report().tx_bytes);
+        assert_eq!(plain.report().rx_bytes, sched.report().rx_bytes);
+        assert_eq!(plain.report().round_bytes, sched.report().round_bytes);
+        assert!((plain.report().comm_time_ms - sched.report().comm_time_ms).abs() < 1e-9);
+
+        // A late (zeroed) participant is neither billed nor delivered and
+        // its arrival time is excluded from the round time.
+        let mut s = sim(3);
+        let arr = [1000.0, 1.0, 1.0];
+        s.exchange_round_scheduled(&[0, 200, 300], &[false, true, true], &arr);
+        let r = s.report();
+        assert_eq!(r.tx_bytes, vec![0, 200, 300]);
+        assert_eq!(r.rx_bytes, vec![0, 300, 200]);
+        assert_eq!(r.round_bytes, vec![500]);
+        assert!(r.comm_time_ms < 1000.0, "late uplink must not stretch the round");
     }
 
     #[test]

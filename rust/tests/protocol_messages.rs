@@ -10,7 +10,12 @@
 //!   [`GlobalKvFrame`] would actually deliver it — the protocol messages
 //!   are the single source of truth for comm bytes;
 //! * the wire payload is the real data: a contribution's K/V rows match
-//!   the packed global KV's transmitted rows value-for-value.
+//!   the packed global KV's transmitted rows value-for-value;
+//! * **adversarial hardening**: every truncation of every message, wrong
+//!   tags, hostile length fields, and seeded random/mutated byte fuzzing
+//!   must all return `Err` (or a canonical `Ok`) — no decode path may
+//!   panic or allocate unboundedly on untrusted input, because the wire
+//!   transport feeds these decoders bytes straight off a socket.
 
 use fedattn::fedattn::{
     DecodeTail, GlobalKv, GlobalKvFrame, KvContribution, KvExchangePolicy,
@@ -247,6 +252,182 @@ fn message_payload_bytes_equal_net_round_bytes_for_all_policies() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial codec hardening (the wire transport feeds these decoders
+// bytes straight off a socket, so none of them may panic or allocate
+// unboundedly on arbitrary input).
+// ---------------------------------------------------------------------------
+
+/// One valid encoding per message type, for the attack helpers below.
+fn valid_encodings(rng: &mut Xoshiro256ss) -> Vec<(&'static str, Vec<u8>)> {
+    let k = random_tensor(rng, 3, 2, 2);
+    let v = random_tensor(rng, 3, 2, 2);
+    let c = KvContribution::from_rows(
+        1,
+        0,
+        &k,
+        &v,
+        &[0, 1, 2],
+        &[true, false, true],
+        Some(&[0.25, 0.5, 0.75]),
+    );
+    let gkv = GlobalKv::pack(
+        &[(&k, &v, &[0, 1, 2][..], 3, &[true, false, true][..])],
+        4,
+    )
+    .unwrap();
+    let f = GlobalKvFrame::from_global(2, &gkv);
+    let t = DecodeTail::from_row(3, 7, &[1.0; 4], &[2.0; 4], 2, 2);
+    let tb = TokenBroadcast { step: 5, token: -3 };
+    vec![
+        ("contribution", c.encode()),
+        ("frame", f.encode()),
+        ("decode-tail", t.encode()),
+        ("token", tb.encode()),
+    ]
+}
+
+/// Run every typed decoder over `bytes`; panics propagate (that is the
+/// test failure), and any `Ok` must re-encode to exactly the input —
+/// the codec is canonical, so "successfully decoded garbage" is only
+/// acceptable when the garbage happens to *be* a valid message.
+fn decode_all_canonical(name: &str, bytes: &[u8]) {
+    if let Ok(m) = KvContribution::decode(bytes) {
+        assert_eq!(m.encode(), bytes, "{name}: contribution not canonical");
+    }
+    if let Ok(m) = GlobalKvFrame::decode(bytes) {
+        assert_eq!(m.encode(), bytes, "{name}: frame not canonical");
+    }
+    if let Ok(m) = DecodeTail::decode(bytes) {
+        assert_eq!(m.encode(), bytes, "{name}: decode-tail not canonical");
+    }
+    if let Ok(m) = TokenBroadcast::decode(bytes) {
+        assert_eq!(m.encode(), bytes, "{name}: token not canonical");
+    }
+}
+
+/// Truncating a valid message at *every* byte boundary must fail
+/// cleanly: the length fields always describe data that is no longer
+/// there.
+#[test]
+fn every_truncation_of_every_message_errors() {
+    let mut rng = Xoshiro256ss::new(41);
+    for (name, bytes) in valid_encodings(&mut rng) {
+        for cut in 0..bytes.len() {
+            let prefix = &bytes[..cut];
+            assert!(KvContribution::decode(prefix).is_err(), "{name} cut {cut}");
+            assert!(GlobalKvFrame::decode(prefix).is_err(), "{name} cut {cut}");
+            assert!(DecodeTail::decode(prefix).is_err(), "{name} cut {cut}");
+            assert!(TokenBroadcast::decode(prefix).is_err(), "{name} cut {cut}");
+        }
+    }
+}
+
+/// Every decoder rejects every *other* message type's bytes (wrong tag),
+/// and all reject a wrong magic or version byte.
+#[test]
+fn wrong_tag_magic_and_version_all_rejected() {
+    use fedattn::fedattn::protocol::{WIRE_MAGIC, WIRE_VERSION};
+    let mut rng = Xoshiro256ss::new(43);
+    let encodings = valid_encodings(&mut rng);
+    for (i, (name, bytes)) in encodings.iter().enumerate() {
+        // i-th decoder accepts only the i-th encoding.
+        let results = [
+            KvContribution::decode(bytes).is_ok(),
+            GlobalKvFrame::decode(bytes).is_ok(),
+            DecodeTail::decode(bytes).is_ok(),
+            TokenBroadcast::decode(bytes).is_ok(),
+        ];
+        for (j, ok) in results.iter().enumerate() {
+            assert_eq!(*ok, i == j, "{name} vs decoder {j}");
+        }
+        let mut bad = bytes.clone();
+        bad[0] = WIRE_MAGIC.wrapping_add(1);
+        decode_all_err(name, &bad);
+        let mut bad = bytes.clone();
+        bad[2] = WIRE_VERSION + 1;
+        decode_all_err(name, &bad);
+    }
+}
+
+fn decode_all_err(name: &str, bytes: &[u8]) {
+    assert!(KvContribution::decode(bytes).is_err(), "{name}");
+    assert!(GlobalKvFrame::decode(bytes).is_err(), "{name}");
+    assert!(DecodeTail::decode(bytes).is_err(), "{name}");
+    assert!(TokenBroadcast::decode(bytes).is_err(), "{name}");
+}
+
+/// Oversized length prefixes: headers claiming astronomical row counts
+/// or dimensions must fail *before* any row-sized allocation (the
+/// in-header counts are multiplied with checked arithmetic and bounded
+/// against the actual remaining bytes).
+#[test]
+fn hostile_length_fields_never_allocate() {
+    use fedattn::fedattn::protocol::{WIRE_MAGIC, WIRE_VERSION};
+    // (tag, header fields) crafted per message layout.
+    let cases: Vec<(u8, Vec<u32>)> = vec![
+        // KvContribution: block, owner, kv_heads, head_dim, rows
+        (1, vec![0, 0, 1, 1, u32::MAX]),
+        (1, vec![0, 0, u32::MAX, u32::MAX, u32::MAX]),
+        (1, vec![0, 0, 1 << 20, 1 << 20, 1 << 20]),
+        // GlobalKvFrame: block, kv_heads, head_dim, rows
+        (2, vec![0, 1, 1, u32::MAX]),
+        (2, vec![0, u32::MAX, u32::MAX, u32::MAX]),
+        // DecodeTail: block, pos, kv_heads, head_dim
+        (3, vec![0, 0, u32::MAX, u32::MAX]),
+        (3, vec![0, 0, 1, u32::MAX]),
+    ];
+    for (tag, fields) in cases {
+        let mut msg = vec![WIRE_MAGIC, tag, WIRE_VERSION];
+        for f in &fields {
+            msg.extend_from_slice(&f.to_le_bytes());
+        }
+        let res_err = match tag {
+            1 => KvContribution::decode(&msg).is_err(),
+            2 => GlobalKvFrame::decode(&msg).is_err(),
+            _ => DecodeTail::decode(&msg).is_err(),
+        };
+        assert!(res_err, "tag {tag} fields {fields:?} must be rejected");
+    }
+}
+
+/// Seeded fuzz: random byte strings (half of them with a plausible
+/// magic/tag/version prefix so decoding reaches the length-validation
+/// paths) must never panic, and anything that decodes must re-encode to
+/// the identical bytes.
+#[test]
+fn random_bytes_fuzz_never_panics() {
+    let mut rng = Xoshiro256ss::new(0xF0_2216);
+    for iter in 0..4000u32 {
+        let len = rng.below(160) as usize;
+        let mut bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        if rng.bernoulli(0.5) && bytes.len() >= 3 {
+            bytes[0] = 0xFA; // WIRE_MAGIC
+            bytes[1] = 1 + rng.below(4) as u8;
+            bytes[2] = 1; // WIRE_VERSION
+        }
+        decode_all_canonical(&format!("fuzz iter {iter}"), &bytes);
+    }
+}
+
+/// Seeded mutation fuzz: valid messages with a few random bytes flipped
+/// must never panic a decoder; a mutation that still decodes must
+/// re-encode canonically.
+#[test]
+fn mutated_messages_fuzz_never_panics() {
+    let mut rng = Xoshiro256ss::new(0xBEEF_7A6);
+    for _ in 0..300u32 {
+        for (name, bytes) in valid_encodings(&mut rng) {
+            let mut mutated = bytes.clone();
+            for _ in 0..1 + rng.below(4) {
+                let at = rng.below(mutated.len() as u64) as usize;
+                mutated[at] = rng.below(256) as u8;
+            }
+            decode_all_canonical(name, &mutated);
+        }
+    }
 }
 
 /// The wire payload is the data, not a size estimate: a contribution's

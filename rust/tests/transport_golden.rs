@@ -1,0 +1,455 @@
+//! Differential harness for the wire transport: a session run over real
+//! transports must be **byte-identical** to the in-process `FedSession`
+//! when no round deadline is set.
+//!
+//! Three layers:
+//!
+//! 1. **Host-side properties** (always run, no artifacts needed): frame
+//!    integrity over channel and TCP-loopback transports, and the
+//!    deadline billing invariant — with deadline `d`, a round's recorded
+//!    bytes equal the sum of the *on-time* contributions' payload bytes.
+//! 2. **Channel differential** (engine-gated): `TransportDriver` over
+//!    in-memory channels vs `FedSession`, all six KV policies ×
+//!    `workers ∈ {1, 4}`, full per-participant answer transcripts.
+//! 3. **TCP-loopback differential** (engine-gated): the same sessions
+//!    over real sockets, plus a direct comparison against the
+//!    `session_golden` fixture file (the wire transcript must match the
+//!    same golden records the in-process session is pinned to).
+//!
+//! Deadline semantics are pinned here too: an effectively-infinite
+//! deadline changes nothing (dropout draws included), and a deadline of
+//! zero degrades every sync round to local attention exactly like a
+//! never-syncing schedule.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+use fedattn::data::{gen_episode, partition, Segmentation};
+use fedattn::fedattn::{
+    ChannelTransport, FedSession, KvContribution, KvExchangePolicy, NodeHost,
+    SessionConfig, SyncSchedule, TcpTransport, Transport, TransportDriver,
+};
+use fedattn::net::{LinkSpec, NetSim, Topology};
+use fedattn::runtime::Engine;
+use fedattn::tensor::HostTensor;
+use fedattn::util::json::{Json, JsonBuilder};
+use fedattn::util::prng::SplitMix64;
+use fedattn::util::propcheck::propcheck;
+
+// ---------------------------------------------------------------------------
+// Host-side properties (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// A protocol message survives both transports bit-exactly.
+#[test]
+fn protocol_frames_survive_channel_and_tcp() {
+    let mut t = HostTensor::zeros(&[3, 1, 2]);
+    for (i, x) in t.data_mut().iter_mut().enumerate() {
+        *x = i as f32 * 0.5 - 1.0;
+    }
+    let c = KvContribution::from_rows(
+        2,
+        1,
+        &t,
+        &t.clone(),
+        &[4, 5, 6],
+        &[true, false, true],
+        Some(&[0.1, 0.2, 0.3]),
+    );
+    let bytes = c.encode();
+
+    // Channel pair.
+    let (mut a, mut b) = ChannelTransport::pair();
+    a.send(&bytes).unwrap();
+    let got = b.recv().unwrap();
+    assert_eq!(KvContribution::decode(&got).unwrap(), c);
+
+    // TCP loopback.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload = bytes.clone();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::from_stream(stream).unwrap();
+        t.send(&payload).unwrap();
+    });
+    let mut client = TcpTransport::connect(addr).unwrap();
+    let got = client.recv().unwrap();
+    server.join().unwrap();
+    assert_eq!(KvContribution::decode(&got).unwrap(), c);
+}
+
+/// The deadline billing invariant, at the simulator level: round bytes
+/// equal the sum of on-time payloads; late participants are neither
+/// billed uplink nor delivered downlink.  (The driver feeds exactly this
+/// shape: late entries zeroed, attendance restricted to on-time
+/// attendees, and skips the round entirely when nobody makes the cut —
+/// which is what the engine-gated `deadline_zero_degrades_like_never`
+/// test pins end-to-end.)
+#[test]
+fn deadline_round_bytes_equal_on_time_payloads() {
+    propcheck(120, |rng| {
+        let n = 1 + rng.below(5) as usize;
+        let link = LinkSpec {
+            bandwidth_mbps: 5.0 + rng.next_f64() * 100.0,
+            latency_ms: rng.next_f64() * 10.0,
+            jitter: rng.next_f64() * 0.5,
+        };
+        let mut sim = NetSim::uniform(Topology::Star, n, link, rng.next_u64());
+        let payloads: Vec<u64> = (0..n).map(|_| (1 + rng.below(64)) * 256).collect();
+        let deadline = rng.next_f64() * 25.0;
+        let arrivals = sim.uplink_arrivals(&payloads);
+        let on_time: Vec<bool> = arrivals.iter().map(|&a| a <= deadline).collect();
+        let billed: Vec<u64> = payloads
+            .iter()
+            .zip(&on_time)
+            .map(|(&b, &o)| if o { b } else { 0 })
+            .collect();
+        if !on_time.iter().any(|&o| o) {
+            // The driver skips the round entirely: nothing billed.
+            return Ok(());
+        }
+        sim.exchange_round_scheduled(&billed, &on_time, &arrivals);
+        let rep = sim.report();
+        let want: u64 = billed.iter().sum();
+        if rep.round_bytes != vec![want] {
+            return Err(format!("round bytes {:?} != on-time sum {want}", rep.round_bytes));
+        }
+        if rep.tx_bytes != billed {
+            return Err(format!("tx {:?} != billed {billed:?}", rep.tx_bytes));
+        }
+        for p in 0..n {
+            let want_rx = if on_time[p] { want - billed[p] } else { 0 };
+            if rep.rx_bytes[p] != want_rx {
+                return Err(format!("rx[{p}] = {} != {want_rx}", rep.rx_bytes[p]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Arrival scheduling is deterministic in the seed (the straggler sweep
+/// depends on it), and a fresh simulator reproduces it draw-for-draw.
+#[test]
+fn arrival_scheduling_deterministic() {
+    let link = LinkSpec { bandwidth_mbps: 20.0, latency_ms: 3.0, jitter: 0.4 };
+    let payloads = [4096u64, 8192, 0, 1024];
+    let mut a = NetSim::uniform(Topology::Star, 4, link, 77);
+    let mut b = NetSim::uniform(Topology::Star, 4, link, 77);
+    for _ in 0..5 {
+        assert_eq!(a.uplink_arrivals(&payloads), b.uplink_arrivals(&payloads));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-gated differentials
+// ---------------------------------------------------------------------------
+
+fn engine() -> Option<Engine> {
+    let dir: PathBuf = fedattn::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("weights.npz").exists() {
+        eprintln!("SKIP: artifacts not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir, "weights.npz").unwrap())
+}
+
+const ALL_POLICIES: [(&str, KvExchangePolicy); 6] = [
+    ("full", KvExchangePolicy::Full),
+    ("random", KvExchangePolicy::Random { ratio: 0.5 }),
+    ("publisher-priority", KvExchangePolicy::PublisherPriority { remote_ratio: 0.5 }),
+    ("recent-budget", KvExchangePolicy::RecentBudget { budget_rows: 8 }),
+    ("top-k-relevance", KvExchangePolicy::TopKRelevance { budget_rows: 8 }),
+    ("byte-budget", KvExchangePolicy::ByteBudget { bytes_per_round: 8192 }),
+];
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Fully in-process (`FedSession`).
+    InProcess,
+    /// `TransportDriver` over in-memory channel pairs.
+    Channel,
+    /// `TransportDriver` over TCP loopback sockets.
+    Tcp,
+}
+
+#[derive(Clone, Copy)]
+struct RunCfg {
+    policy: KvExchangePolicy,
+    name: &'static str,
+    workers: usize,
+    decode_all: bool,
+    dropout: f64,
+    deadline: Option<f64>,
+    /// Schedule override: `None` = the session_golden uniform H=2.
+    never_sync: bool,
+}
+
+impl RunCfg {
+    fn new(name: &'static str, policy: KvExchangePolicy) -> Self {
+        Self {
+            policy,
+            name,
+            workers: 1,
+            decode_all: false,
+            dropout: 0.0,
+            deadline: None,
+            never_sync: false,
+        }
+    }
+}
+
+/// Spawn one node host per participant, returning the driver-side
+/// transports and the host threads (joined after the session to surface
+/// node-side failures).
+fn spawn_hosts(
+    engine: &Engine,
+    n: usize,
+    mode: Mode,
+) -> (Vec<Box<dyn Transport>>, Vec<JoinHandle<()>>) {
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for p in 0..n {
+        match mode {
+            Mode::InProcess => unreachable!("no hosts for in-process runs"),
+            Mode::Channel => {
+                let (driver_end, node_end) = ChannelTransport::pair();
+                let engine = engine.clone();
+                handles.push(std::thread::spawn(move || {
+                    NodeHost::new(engine, Box::new(node_end))
+                        .serve()
+                        .unwrap_or_else(|e| panic!("channel node host {p} failed: {e:#}"));
+                }));
+                transports.push(Box::new(driver_end));
+            }
+            Mode::Tcp => {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap();
+                let engine = engine.clone();
+                handles.push(std::thread::spawn(move || {
+                    let (stream, _) = listener.accept().unwrap();
+                    let t = TcpTransport::from_stream(stream).unwrap();
+                    NodeHost::new(engine, Box::new(t))
+                        .serve()
+                        .unwrap_or_else(|e| panic!("tcp node host {p} failed: {e:#}"));
+                }));
+                transports.push(Box::new(TcpTransport::connect(addr).unwrap()));
+            }
+        }
+    }
+    (transports, handles)
+}
+
+/// One deterministic session fingerprint in the exact `session_golden`
+/// shape (same workload, seeds, links, and JSON key order), run either
+/// in-process or over a transport.
+fn fingerprint(engine: &Engine, mode: Mode, rc: RunCfg) -> Json {
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let schedule = if rc.never_sync {
+        SyncSchedule::never(md.n_layers, n)
+    } else {
+        SyncSchedule::uniform(md.n_layers, n, 2)
+    };
+    let mut cfg = SessionConfig::new(schedule);
+    cfg.kv_policy = rc.policy;
+    cfg.seed = 11;
+    cfg.workers = rc.workers;
+    cfg.decode_all = rc.decode_all;
+    cfg.dropout_prob = rc.dropout;
+    cfg.round_deadline_ms = rc.deadline;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    let (rep, hosts) = match mode {
+        Mode::InProcess => {
+            (FedSession::new(engine, &part, cfg, net).unwrap().run().unwrap(), Vec::new())
+        }
+        _ => {
+            let (transports, hosts) = spawn_hosts(engine, n, mode);
+            let rep = TransportDriver::new(engine, &part, cfg, net, transports)
+                .unwrap()
+                .run()
+                .unwrap();
+            (rep, hosts)
+        }
+    };
+    for h in hosts {
+        h.join().expect("node host thread panicked");
+    }
+
+    let mut b = JsonBuilder::new()
+        .str("policy", rc.name)
+        .str("answer", &rep.answer)
+        .num("generated_tokens", rep.generated_tokens as f64)
+        .num("rounds", rep.net.rounds as f64)
+        .arr_num(
+            "tx_bytes",
+            &rep.net.tx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "rx_bytes",
+            &rep.net.rx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "round_bytes",
+            &rep.net.round_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        );
+    if rc.decode_all {
+        let answers: Vec<Json> = rep
+            .answers
+            .iter()
+            .map(|a| Json::Str(a.clone().unwrap_or_default()))
+            .collect();
+        b = b.set("answers", Json::Arr(answers));
+    }
+    b.build()
+}
+
+/// Channel transport ≡ in-process, all six policies × workers {1, 4},
+/// with every participant decoding (`decode_all`) so the full answer
+/// transcript — publisher and peers — is compared, not just one stream.
+#[test]
+fn channel_transport_matches_in_process_for_all_policies() {
+    let Some(engine) = engine() else { return };
+    for (name, policy) in ALL_POLICIES {
+        for workers in [1usize, 4] {
+            let mut rc = RunCfg::new(name, policy);
+            rc.workers = workers;
+            rc.decode_all = true;
+            let local = fingerprint(&engine, Mode::InProcess, rc);
+            let wire = fingerprint(&engine, Mode::Channel, rc);
+            assert_eq!(
+                local.to_string_compact(),
+                wire.to_string_compact(),
+                "channel transport diverged from in-process under {name}, workers={workers}"
+            );
+        }
+    }
+}
+
+/// TCP loopback ≡ in-process for all six policies, and — when the
+/// `session_golden` fixture exists — the wire transcripts must match the
+/// very records the in-process session is pinned to (same shape, same
+/// order), proving sockets change nothing end-to-end.
+#[test]
+fn tcp_loopback_matches_in_process_and_golden_fixture() {
+    let Some(engine) = engine() else { return };
+    let mut wire_records = Vec::new();
+    for (name, policy) in ALL_POLICIES {
+        let rc = RunCfg::new(name, policy);
+        let local = fingerprint(&engine, Mode::InProcess, rc);
+        let wire = fingerprint(&engine, Mode::Tcp, rc);
+        assert_eq!(
+            local.to_string_compact(),
+            wire.to_string_compact(),
+            "tcp transport diverged from in-process under {name}"
+        );
+        wire_records.push(wire);
+    }
+    let golden = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/session_golden.json");
+    if golden.exists() {
+        let want = std::fs::read_to_string(&golden).unwrap();
+        let got = Json::Arr(wire_records).to_string_compact();
+        assert_eq!(
+            got.trim(),
+            want.trim(),
+            "TCP-loopback transcripts drifted from the session_golden fixture"
+        );
+    } else {
+        eprintln!("note: no session_golden fixture to cross-check (run session_golden first)");
+    }
+}
+
+/// The deadline knob off (`None`) and effectively infinite (huge finite
+/// value, zero-jitter links) are byte-identical — including when dropout
+/// is active, pinning that deadline scheduling never perturbs the
+/// dropout RNG stream — and the same holds over the wire.
+#[test]
+fn dropout_composes_with_deadline_knob() {
+    let Some(engine) = engine() else { return };
+    let mut base = RunCfg::new("full", KvExchangePolicy::Full);
+    base.dropout = 0.3;
+    let mut with_deadline = base;
+    with_deadline.deadline = Some(1e12);
+
+    let off = fingerprint(&engine, Mode::InProcess, base);
+    let inf = fingerprint(&engine, Mode::InProcess, with_deadline);
+    assert_eq!(
+        off.to_string_compact(),
+        inf.to_string_compact(),
+        "an infinite deadline must not change a dropout session"
+    );
+    let wire = fingerprint(&engine, Mode::Channel, with_deadline);
+    assert_eq!(
+        off.to_string_compact(),
+        wire.to_string_compact(),
+        "wire + infinite deadline must match in-process + no deadline"
+    );
+}
+
+/// A zero deadline (every contribution late — the default link has 5 ms
+/// of latency, so nothing can arrive by 0) degrades every sync round to
+/// local attention *exactly* like a never-syncing schedule: same answer,
+/// zero rounds, zero bytes.
+#[test]
+fn deadline_zero_degrades_like_never_syncing() {
+    let Some(engine) = engine() else { return };
+    let mut all_late = RunCfg::new("full", KvExchangePolicy::Full);
+    all_late.deadline = Some(0.0);
+    let mut never = RunCfg::new("full", KvExchangePolicy::Full);
+    never.never_sync = true;
+
+    let a = fingerprint(&engine, Mode::InProcess, all_late);
+    let b = fingerprint(&engine, Mode::InProcess, never);
+    assert_eq!(
+        a.to_string_compact(),
+        b.to_string_compact(),
+        "an all-late session must equal a never-syncing one"
+    );
+}
+
+/// A deadline can only shrink communication relative to no deadline:
+/// with the `full` policy every round's candidate payloads are fixed, so
+/// any finite deadline bills a subset of the undeadlined bytes and
+/// records at most as many rounds — while the session still decodes (it
+/// degrades to local attention, it does not fail).  A zero deadline on a
+/// latency-bearing link silences every round.
+#[test]
+fn deadlines_shrink_communication_and_degrade_gracefully() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let run = |deadline: Option<f64>| {
+        let mut rng = SplitMix64::new(31);
+        let ep = gen_episode(&mut rng, 4);
+        let part = partition(&ep, n, Segmentation::SemQEx);
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+        cfg.seed = 11;
+        cfg.round_deadline_ms = deadline;
+        let link = LinkSpec { bandwidth_mbps: 8.0, latency_ms: 4.0, jitter: 0.3 };
+        let net = NetSim::uniform(Topology::Star, n, link, 11);
+        let rep = FedSession::new(&engine, &part, cfg, net).unwrap().run().unwrap();
+        (rep.net.total_bytes(), rep.net.rounds, rep.generated_tokens)
+    };
+    let (bytes_inf, rounds_inf, tokens_inf) = run(None);
+    assert!(tokens_inf > 0);
+    for d in [40.0, 15.0, 6.0, 0.0] {
+        let (bytes, rounds, tokens) = run(Some(d));
+        assert!(
+            bytes <= bytes_inf,
+            "deadline {d} ms grew bytes: {bytes} > {bytes_inf}"
+        );
+        assert!(
+            rounds <= rounds_inf,
+            "deadline {d} ms grew rounds: {rounds} > {rounds_inf}"
+        );
+        assert!(tokens > 0, "deadline {d} ms produced no tokens");
+    }
+    // Zero deadline on a 4 ms-latency link: nothing arrives in time.
+    let (bytes0, rounds0, _) = run(Some(0.0));
+    assert_eq!((bytes0, rounds0), (0, 0), "zero deadline must silence every round");
+}
