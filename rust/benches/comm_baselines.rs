@@ -1,6 +1,8 @@
 //! §II comparison — communication cost of FedAttn vs pipeline / tensor
 //! parallelism, analytic per-inference bytes (the paper's motivating
-//! table), across sequence lengths and participant counts.
+//! table), across sequence lengths and participant counts — plus the
+//! full-frame vs delta-frame downlink comparison across sync intervals
+//! (written to `BENCH_comm_delta.json` at the repo root).
 //!
 //!     cargo bench --bench comm_baselines
 
@@ -62,5 +64,71 @@ fn main() -> Result<()> {
         md.q_dim() / md.kv_dim()
     );
     write_json("comm_baselines", Json::Arr(rows));
+
+    // ------------------------------------------------------------------
+    // Full-frame vs delta-frame downlink across sync intervals.
+    //
+    // Analytic, like the table above: per attendee per sync round, a full
+    // broadcast re-ships every packed row (`L x row_bytes`) while a delta
+    // frame ships only the transmitted rows of *other* participants
+    // (`ratio x (L - L/N) x row_bytes` — own rows ride as a retain-list,
+    // untransmitted remote rows are elided).  Sync interval H sets how
+    // many such rounds one prefill executes (n_layers / H).  The same
+    // numbers are measured end-to-end by `NetReport.round_rx_bytes` in
+    // the delta differential tests; this sweep writes the trajectory
+    // series to BENCH_comm_delta.json at the repo root.
+    // ------------------------------------------------------------------
+    let row_bytes = (2 * md.n_kv_heads * md.head_dim * 4) as f64;
+    let n = 4usize; // participants
+    let l = 256usize; // total packed rows per round
+    let own = l / n;
+    println!("\n== Downlink per attendee: full frames vs delta frames (N = {n}, L = {l}) ==");
+    println!(
+        "{:>4} {:>7} {:>6} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "H", "rounds", "ratio", "full/round", "delta/round", "full total", "delta total", "saved"
+    );
+    let mut delta_points = Vec::new();
+    for &h in &[1usize, 2, 4, 8] {
+        let rounds = (md.n_layers / h).max(1);
+        for &ratio in &[1.0f64, 0.5] {
+            let full_round = l as f64 * row_bytes;
+            let delta_round = ratio * (l - own) as f64 * row_bytes;
+            let full_total = full_round * rounds as f64;
+            let delta_total = delta_round * rounds as f64;
+            let savings = 1.0 - delta_total / full_total;
+            println!(
+                "{:>4} {:>7} {:>6.2} {:>12} {:>12} {:>12} {:>12} {:>7.1}%",
+                h,
+                rounds,
+                ratio,
+                fmt_bytes(full_round),
+                fmt_bytes(delta_round),
+                fmt_bytes(full_total),
+                fmt_bytes(delta_total),
+                savings * 100.0
+            );
+            delta_points.push(
+                JsonBuilder::new()
+                    .num("h", h as f64)
+                    .num("rounds", rounds as f64)
+                    .num("ratio", ratio)
+                    .num("full_bytes_per_round", full_round)
+                    .num("delta_bytes_per_round", delta_round)
+                    .num("full_total_bytes", full_total)
+                    .num("delta_total_bytes", delta_total)
+                    .num("savings", savings)
+                    .build(),
+            );
+        }
+    }
+    let report = JsonBuilder::new()
+        .str("bench", "comm_delta")
+        .num("row_bytes", row_bytes)
+        .num("participants", n as f64)
+        .num("l", l as f64)
+        .num("n_layers", md.n_layers as f64)
+        .set("points", Json::Arr(delta_points))
+        .build();
+    write_bench_json("comm_delta", report);
     Ok(())
 }

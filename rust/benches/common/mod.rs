@@ -49,6 +49,9 @@ pub struct PointCfg {
     /// Per-sync-round contribution deadline in simulated ms (`None` =
     /// no deadline; late contributions are excluded from the round).
     pub round_deadline_ms: Option<f64>,
+    /// Delta-encoded downlink frames (default on); off bills full
+    /// broadcast frames — the pre-delta baseline for comm comparisons.
+    pub delta_frames: bool,
     pub decode_all: bool,
     pub episodes: usize,
     pub seed: u64,
@@ -66,6 +69,7 @@ impl PointCfg {
             local_ratio: 1.0,
             dropout_prob: 0.0,
             round_deadline_ms: None,
+            delta_frames: true,
             decode_all: false,
             episodes: episodes_per_point(),
             seed: 1234,
@@ -122,6 +126,7 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         scfg.local_sparsity = LocalSparsity { ratio: cfg.local_ratio };
         scfg.dropout_prob = cfg.dropout_prob;
         scfg.round_deadline_ms = cfg.round_deadline_ms;
+        scfg.delta_frames = cfg.delta_frames;
         scfg.decode_all = cfg.decode_all;
         scfg.seed = cfg.seed ^ (e as u64).wrapping_mul(0x9E37);
         let net = NetSim::uniform(Topology::Star, cfg.n, cfg.link, scfg.seed);
@@ -198,16 +203,21 @@ pub fn write_bench_json(name: &str, value: Json) {
 }
 
 fn repo_root() -> PathBuf {
+    // Walk to the *outermost* Cargo.toml: cargo runs bench binaries with
+    // cwd = the crate root (`rust/`), but the trajectory reports and
+    // `bench_out/` belong at the workspace root — where the committed
+    // BENCH_*.json copies and CI's schema assertions live.
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut root = None;
     for _ in 0..5 {
         if dir.join("Cargo.toml").exists() {
-            return dir;
+            root = Some(dir.clone());
         }
         if !dir.pop() {
             break;
         }
     }
-    PathBuf::from(".")
+    root.unwrap_or_else(|| PathBuf::from("."))
 }
 
 /// JSON row helper for sweep points.

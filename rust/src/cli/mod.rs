@@ -151,6 +151,31 @@ pub fn parse_round_deadline(args: &Args) -> anyhow::Result<Option<Option<f64>>> 
     Ok(Some(Some(d)))
 }
 
+/// Delta-encoded downlink frames from `--delta-frames` (accepts
+/// `on|off|true|false|1|0`; the bare flag means on, `--no-delta-frames`
+/// means off).  Returns `Ok(None)` when neither form is present so
+/// callers keep their config default (on); anything unparsable is an
+/// error, not a silent fallback — a typo'd toggle would corrupt
+/// full-vs-delta comm comparisons.
+pub fn parse_delta_frames(args: &Args) -> anyhow::Result<Option<bool>> {
+    if let Some(raw) = args.opt("delta-frames") {
+        return match raw {
+            "on" | "true" | "1" => Ok(Some(true)),
+            "off" | "false" | "0" => Ok(Some(false)),
+            other => anyhow::bail!(
+                "--delta-frames expects on|off|true|false|1|0, got {other:?}"
+            ),
+        };
+    }
+    if args.flag("delta-frames") {
+        return Ok(Some(true));
+    }
+    if args.flag("no-delta-frames") {
+        return Ok(Some(false));
+    }
+    Ok(None)
+}
+
 /// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
 /// when absent (callers fall back to TOML `serving.time_scale`, then
 /// their own default); non-positive or unparsable values are errors.
@@ -236,6 +261,29 @@ mod tests {
         assert!(parse_round_deadline(&parse(&["--round-deadline", "-1"])).is_err());
         assert!(parse_round_deadline(&parse(&["--round-deadline", "NaN"])).is_err());
         assert!(parse_round_deadline(&parse(&["--round-deadline", "soon"])).is_err());
+    }
+
+    #[test]
+    fn delta_frames_parse_forms() {
+        assert_eq!(parse_delta_frames(&parse(&[])).unwrap(), None);
+        for (raw, want) in [("on", true), ("true", true), ("1", true), ("off", false), ("false", false), ("0", false)] {
+            assert_eq!(
+                parse_delta_frames(&parse(&["--delta-frames", raw])).unwrap(),
+                Some(want),
+                "{raw}"
+            );
+        }
+        assert_eq!(
+            parse_delta_frames(&parse(&["--delta-frames=off"])).unwrap(),
+            Some(false)
+        );
+        // Bare flags.
+        assert_eq!(parse_delta_frames(&parse(&["--delta-frames"])).unwrap(), Some(true));
+        assert_eq!(
+            parse_delta_frames(&parse(&["--no-delta-frames"])).unwrap(),
+            Some(false)
+        );
+        assert!(parse_delta_frames(&parse(&["--delta-frames", "maybe"])).is_err());
     }
 
     #[test]

@@ -35,6 +35,13 @@ pub struct FederationConfig {
     /// round (partial aggregation).  `None` (the default) disables the
     /// deadline entirely and is byte-identical to the knob not existing.
     pub round_deadline_ms: Option<f64>,
+    /// Delta-encode the downlink (`--delta-frames` /
+    /// `federation.delta_frames`, default on): attendees receive only
+    /// the transmitted rows they do not already hold, with an automatic
+    /// full-frame fallback on any cache miss.  Off bills (and ships)
+    /// full broadcast frames — the pre-delta baseline the comm benches
+    /// compare against.
+    pub delta_frames: bool,
 }
 
 impl Default for FederationConfig {
@@ -48,6 +55,7 @@ impl Default for FederationConfig {
             max_new_tokens: 12,
             dropout_prob: 0.0,
             round_deadline_ms: None,
+            delta_frames: true,
         }
     }
 }
@@ -190,6 +198,13 @@ impl SystemConfig {
                 "federation.round_deadline_ms must be finite and >= 0, got {d}"
             );
             f.round_deadline_ms = Some(d);
+        }
+        if let Some(v) = doc.get("federation.delta_frames") {
+            // Present but malformed must fail loudly — a silently ignored
+            // toggle would corrupt full-vs-delta comm comparisons.
+            f.delta_frames = v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("federation.delta_frames must be a boolean")
+            })?;
         }
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
@@ -361,6 +376,19 @@ mod tests {
         let doc = TomlDoc::parse("[federation]\nround_deadline_ms = -5").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[federation]\nround_deadline_ms = \"fast\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn delta_frames_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(SystemConfig::from_toml(&doc).unwrap().federation.delta_frames);
+        let doc = TomlDoc::parse("[federation]\ndelta_frames = false").unwrap();
+        assert!(!SystemConfig::from_toml(&doc).unwrap().federation.delta_frames);
+        let doc = TomlDoc::parse("[federation]\ndelta_frames = true").unwrap();
+        assert!(SystemConfig::from_toml(&doc).unwrap().federation.delta_frames);
+        // Present but malformed: loud failure, not a silent default.
+        let doc = TomlDoc::parse("[federation]\ndelta_frames = \"yes\"").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 

@@ -42,6 +42,9 @@ pub struct CoordinatorConfig {
     /// every served session; late contributions are excluded from the
     /// round (`None` = no deadline).
     pub round_deadline_ms: Option<f64>,
+    /// Delta-encode the downlink for every served session (default on);
+    /// off bills full broadcast frames — the pre-delta baseline.
+    pub delta_frames: bool,
     pub topology: crate::net::Topology,
     pub link: crate::net::LinkSpec,
     /// Heterogeneous per-participant links; `None` = `participants` copies
@@ -67,6 +70,7 @@ impl CoordinatorConfig {
             max_new_tokens: sc.federation.max_new_tokens,
             dropout_prob: sc.federation.dropout_prob,
             round_deadline_ms: sc.federation.round_deadline_ms,
+            delta_frames: sc.federation.delta_frames,
             topology: sc.network.topology,
             link: sc.network.link,
             hetero_links: sc
@@ -244,6 +248,7 @@ impl Coordinator {
         scfg.max_new_tokens = cfg.max_new_tokens;
         scfg.dropout_prob = cfg.dropout_prob;
         scfg.round_deadline_ms = cfg.round_deadline_ms;
+        scfg.delta_frames = cfg.delta_frames;
         scfg.seed = task_seed;
         // The session borrows the coordinator's shared pool below; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.

@@ -20,6 +20,15 @@
 //! invariant once positions ride along — see [`GlobalKv::pack`]), so the
 //! trait's `aggregate` has a shared default; an implementation that
 //! actually re-weights or deduplicates rows overrides it.
+//!
+//! Packing also stamps each merged row's **round-scoped identity**
+//! ([`KvRowMeta::row`], the index within its owner's rows): the delta
+//! downlink ([`GlobalKvDeltaFrame`]) references aggregated rows by that
+//! id so an attendee can retain its own rows from the fresh KV it
+//! contributed instead of re-receiving them.
+//!
+//! [`KvRowMeta::row`]: crate::fedattn::kv::KvRowMeta::row
+//! [`GlobalKvDeltaFrame`]: crate::fedattn::protocol::GlobalKvDeltaFrame
 
 use anyhow::Result;
 

@@ -25,7 +25,14 @@
 //! [`RemoteParticipant`] per node
 //! ([`SessionDriver::new_with_remotes`], usually via
 //! [`TransportDriver`]): the protocol plane then crosses real
-//! transports while the compute plane stays engine-colocated.
+//! transports while the compute plane stays engine-colocated.  Wire
+//! rounds are **concurrent** — contribution requests fan out to every
+//! node before any reply is read (pool tasks when `workers > 1`), so the
+//! round costs the slowest link rather than the sum — and the downlink
+//! ships **delta frames** by default ([`SessionConfig::delta_frames`]):
+//! each attendee receives only the transmitted rows it does not already
+//! hold.  Collection order is pinned to participant index, so both
+//! optimizations are byte-invisible to the golden fixtures.
 //!
 //! Device-resident execution (shared per-round KV uploads, frozen decode
 //! caches + `[R]` tails) and pool-parallel per-participant loops carry
@@ -108,6 +115,24 @@ pub struct SessionConfig {
     /// [`NetSim`]: crate::net::NetSim
     /// [`NetSim::uplink_arrivals`]: crate::net::NetSim::uplink_arrivals
     pub round_deadline_ms: Option<f64>,
+    /// Delta-encode the downlink (`federation.delta_frames` /
+    /// `--delta-frames`, default on): each attendee receives a
+    /// [`GlobalKvDeltaFrame`] carrying only the transmitted rows of
+    /// *other* participants — its own rows ride as a retain-list of
+    /// round-scoped row ids resolved against the fresh KV it contributed,
+    /// and untransmitted remote rows (masked for it anyway) are elided.
+    /// Downlink billing is the delta (`total - own_tx`, the accounting
+    /// the protocol has always used), and any cache miss automatically
+    /// falls back to a full frame.  With the knob **off**, full
+    /// [`GlobalKvFrame`]s ship and every attendee is billed every packed
+    /// row — the pre-delta wire cost, kept as the measurable baseline
+    /// (`BENCH_comm_delta.json`).  Decoded transcripts are byte-identical
+    /// either way: elided rows are invisible to the attendee by
+    /// construction.
+    ///
+    /// [`GlobalKvDeltaFrame`]: crate::fedattn::protocol::GlobalKvDeltaFrame
+    /// [`GlobalKvFrame`]: crate::fedattn::protocol::GlobalKvFrame
+    pub delta_frames: bool,
 }
 
 impl SessionConfig {
@@ -125,6 +150,7 @@ impl SessionConfig {
             device_decode: true,
             dropout_prob: 0.0,
             round_deadline_ms: None,
+            delta_frames: true,
         }
     }
 }
@@ -171,6 +197,109 @@ where
         None => (0..n).map(f).collect(),
     };
     outs.into_iter().map(|r| r.map_err(anyhow::Error::msg)).collect()
+}
+
+/// Collect one round's uplink contributions from transport-backed nodes
+/// **concurrently**: every request is issued before any reply is read, so
+/// the wall-clock cost of the wire round is the slowest node's round trip
+/// rather than the sum over nodes.
+///
+/// With a pool, each node's full round trip (encode request → send →
+/// await reply → decode) runs as its own task via [`Pool::scope_map`],
+/// overlapping serialization work too; without one, the driver fans all
+/// requests out first and then drains the replies.  Either way results
+/// are collected **by participant index, never arrival order** — the
+/// aggregation input (and thus the whole session) is deterministic, and
+/// late nodes were already demoted by the simulated per-round deadline
+/// before any request went out.
+#[allow(clippy::too_many_arguments)]
+fn collect_remote_contributions(
+    pool: Option<&Arc<Pool>>,
+    remotes: &mut Vec<RemoteParticipant>,
+    block: usize,
+    epoch: usize,
+    ks: &Arc<Vec<HostTensor>>,
+    vs: &Arc<Vec<HostTensor>>,
+    tx_flags: &[Vec<bool>],
+    on_time: &[bool],
+    scores: &[Option<Vec<f64>>],
+) -> Result<Vec<Option<KvContribution>>> {
+    let n = remotes.len();
+    for r in remotes.iter_mut() {
+        r.begin_round(epoch);
+    }
+    match pool {
+        Some(pool) if n > 1 => {
+            // Move each proxy into a slot its pool task takes exactly
+            // once and puts back when the round trip completes.
+            let slots: Arc<Vec<Mutex<Option<RemoteParticipant>>>> =
+                Arc::new(remotes.drain(..).map(|r| Mutex::new(Some(r))).collect());
+            let ks_in = Arc::clone(ks);
+            let vs_in = Arc::clone(vs);
+            let tx_in: Arc<Vec<Vec<bool>>> = Arc::new(tx_flags.to_vec());
+            let on_in: Arc<Vec<bool>> = Arc::new(on_time.to_vec());
+            let scores_in: Arc<Vec<Option<Vec<f64>>>> = Arc::new(scores.to_vec());
+            let slots_in = Arc::clone(&slots);
+            let outs = run_parallel(Some(pool), n, move |p| {
+                let mut r = slots_in[p]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or("remote slot taken twice")?;
+                let res = if on_in[p] {
+                    r.contribute(block, &ks_in[p], &vs_in[p], &tx_in[p], scores_in[p].as_deref())
+                        .map(Some)
+                        .map_err(|e| format!("{e:#}"))
+                } else {
+                    Ok(None)
+                };
+                *slots_in[p].lock().unwrap() = Some(r);
+                res
+            });
+            // Put the proxies back (index order) *before* surfacing any
+            // error, so a failed round can still shut the hosts down.
+            // Every task returns its proxy to its slot before its result
+            // is sent, and scope_map has collected all results by now, so
+            // the slots are settled — but a worker may still be dropping
+            // its closure's Arc clone, so read through the Arc instead of
+            // unwrapping it.  A panicked task may have dropped its proxy;
+            // the survivors are enough for shutdown and the error aborts
+            // the session anyway.
+            let mut restored = Vec::with_capacity(n);
+            for slot in slots.iter() {
+                if let Some(r) = slot.lock().unwrap().take() {
+                    restored.push(r);
+                }
+            }
+            *remotes = restored;
+            outs
+        }
+        _ => {
+            // No pool: still overlap the network by issuing every request
+            // up front; replies queue on their own per-node transports
+            // while earlier ones are read.
+            for p in 0..n {
+                if on_time[p] {
+                    remotes[p].contribute_send(
+                        block,
+                        &ks[p],
+                        &vs[p],
+                        &tx_flags[p],
+                        scores[p].as_deref(),
+                    )?;
+                }
+            }
+            let mut out = Vec::with_capacity(n);
+            for p in 0..n {
+                out.push(if on_time[p] {
+                    Some(remotes[p].contribute_recv(block)?)
+                } else {
+                    None
+                });
+            }
+            Ok(out)
+        }
+    }
 }
 
 /// Drives one collaborative task through the engine by exchanging typed
@@ -315,6 +444,7 @@ impl<'a> SessionDriver<'a> {
             node.caches = Vec::new();
             let mut rp =
                 RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
+            rp.set_delta_frames(driver.cfg.delta_frames);
             rp.init(md.n_layers, md.n_kv_heads, md.head_dim, cache_capacity)?;
             remotes.push(rp);
         }
@@ -359,6 +489,10 @@ impl<'a> SessionDriver<'a> {
                 _ => None,
             };
 
+        // Executed-sync-round ordinal: the round-scoped "epoch" stamped on
+        // contribute requests and delta downlink frames so a node can tie
+        // a delta's retain-list to the fresh-KV generation it references.
+        let mut epoch = 0usize;
         for m in 0..n_layers {
             let attend = self.schedule.attend[m].clone();
 
@@ -440,6 +574,11 @@ impl<'a> SessionDriver<'a> {
                 continue;
             };
 
+            // This block executes a sync round: stamp it with the next
+            // round-scoped epoch.
+            let round_epoch = epoch;
+            epoch += 1;
+
             // Sync block: everyone produces (q,)k,v; attendees do global
             // attention over the aggregated KV.  Phase 1 is pool-parallel.
             let inputs: Vec<_> = self
@@ -475,6 +614,10 @@ impl<'a> SessionDriver<'a> {
                     self.nodes[p].set_hidden(xo);
                 }
             }
+            // Shared for the (possibly pool-parallel) contribution
+            // round-trips below and the aggregation after them.
+            let ks = Arc::new(ks);
+            let vs = Arc::new(vs);
 
             // Round messages: each on-time node packages its uplink
             // KvContribution — over the wire when remotes are attached,
@@ -484,21 +627,53 @@ impl<'a> SessionDriver<'a> {
             // FL-straggler partial-aggregation analogue).  The message
             // carries the real row payload so accounting is measured,
             // not estimated.
-            let mut contributions: Vec<Option<KvContribution>> = Vec::with_capacity(n);
-            for p in 0..n {
-                if !on_time[p] {
-                    contributions.push(None);
-                    continue;
+            //
+            // Remote collection is concurrent: every node receives its
+            // contribution request before any reply is read, so the wire
+            // round waits for the slowest node instead of summing all of
+            // them.  Results are collected by participant index (never
+            // arrival order), so aggregation — and therefore the whole
+            // session — is deterministic.  The in-process path keeps its
+            // sequential loop: node contributions are pure and the
+            // `session_golden` fixtures pin that path byte-for-byte.
+            let contributions: Vec<Option<KvContribution>> = match self.remotes.as_mut() {
+                Some(remotes) => {
+                    // Owned score copies so the pool tasks' closures can be
+                    // 'static; the wire path copies the K/V payloads anyway.
+                    let scores_by_p: Vec<Option<Vec<f64>>> = (0..n)
+                        .map(|p| self.relevance.as_ref().map(|t| t.scores(p).to_vec()))
+                        .collect();
+                    collect_remote_contributions(
+                        self.pool.as_ref(),
+                        remotes,
+                        m,
+                        round_epoch,
+                        &ks,
+                        &vs,
+                        &tx_flags,
+                        &on_time,
+                        &scores_by_p,
+                    )?
                 }
-                let scores = self.relevance.as_ref().map(|t| t.scores(p));
-                let c = match self.remotes.as_mut() {
-                    Some(remotes) => {
-                        remotes[p].contribute(m, &ks[p], &vs[p], &tx_flags[p], scores)?
+                None => {
+                    let mut out = Vec::with_capacity(n);
+                    for p in 0..n {
+                        if !on_time[p] {
+                            out.push(None);
+                            continue;
+                        }
+                        let scores = self.relevance.as_ref().map(|t| t.scores(p));
+                        out.push(Some(self.nodes[p].contribute(
+                            m,
+                            &ks[p],
+                            &vs[p],
+                            &tx_flags[p],
+                            scores,
+                        )?));
                     }
-                    None => self.nodes[p].contribute(m, &ks[p], &vs[p], &tx_flags[p], scores)?,
-                };
-                contributions.push(Some(c));
-            }
+                    out
+                }
+            };
 
             // Aggregate the on-time contributions into the global KV
             // (Eq. 20); a late participant's rows are excluded entirely
@@ -555,13 +730,31 @@ impl<'a> SessionDriver<'a> {
                         "downlink bytes drifted from frame"
                     );
                 }
+                debug_assert_eq!(
+                    frame.full_payload_bytes(),
+                    gkv.rows() as u64 * row_bytes_usize as u64,
+                    "full-frame bytes drifted from packed rows"
+                );
             }
-            match &arrivals {
+            // Downlink billing follows the frames actually shipped: with
+            // delta frames (default) each attendee is billed the
+            // transmitted rows of its peers (`total - own_tx` — the
+            // accounting the protocol has always used, so the default is
+            // byte-identical to the pre-delta driver); with full frames
+            // every attendee is billed every packed row, the pre-delta
+            // wire cost kept as the measurable baseline.
+            let rx_full: Option<Vec<u64>> = (!self.cfg.delta_frames)
+                .then(|| vec![gkv.rows() as u64 * row_bytes_usize as u64; n]);
+            match (&arrivals, &rx_full) {
                 // Deadline path: reuse the pre-drawn uplink times so the
                 // round is billed against the very arrivals that decided
                 // who made the cut.
-                Some(arr) => self.net.exchange_round_scheduled(&tx_bytes, &attend, arr),
-                None => self.net.exchange_round(&tx_bytes, &attend),
+                (Some(arr), None) => self.net.exchange_round_scheduled(&tx_bytes, &attend, arr),
+                (None, None) => self.net.exchange_round(&tx_bytes, &attend),
+                (Some(arr), Some(rx)) => {
+                    self.net.exchange_round_scheduled_with_downlink(&tx_bytes, &attend, arr, rx)
+                }
+                (None, Some(rx)) => self.net.exchange_round_with_downlink(&tx_bytes, &attend, rx),
             };
 
             // Upload the packed global KV to the device ONCE per sync

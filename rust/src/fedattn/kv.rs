@@ -20,6 +20,15 @@ pub struct KvRowMeta {
     pub pos: i32,
     /// Owning participant.
     pub owner: usize,
+    /// The row's index within its owner's valid rows — a stable,
+    /// round-scoped row id.  Packing is owner-major in local order, so
+    /// `row` is exactly the index into the owner's padded K/V tensors;
+    /// delta downlink frames use it as the retain-list id an attendee
+    /// resolves against its own fresh KV (see
+    /// [`protocol::GlobalKvDeltaFrame`]).
+    ///
+    /// [`protocol::GlobalKvDeltaFrame`]: crate::fedattn::protocol::GlobalKvDeltaFrame
+    pub row: usize,
     /// Whether the row was transmitted this round (sparse KV exchange);
     /// untransmitted rows are visible only to their owner.
     pub transmitted: bool,
@@ -88,6 +97,7 @@ impl GlobalKv {
                 meta.push(KvRowMeta {
                     pos: pos[i],
                     owner,
+                    row: i,
                     transmitted: tx[i],
                     relevance: 0.0,
                 });
@@ -168,7 +178,7 @@ mod tests {
         assert_eq!(g.k.row(3)[0], 100.0);
         assert_eq!(
             g.meta[3],
-            KvRowMeta { pos: 4, owner: 1, transmitted: true, relevance: 0.0 }
+            KvRowMeta { pos: 4, owner: 1, row: 0, transmitted: true, relevance: 0.0 }
         );
         assert_eq!(g.meta[2].transmitted, false);
         assert_eq!(g.tx_rows_by_owner(2), vec![2, 2]);
@@ -232,7 +242,7 @@ mod tests {
             for (owner, r) in refs.iter().enumerate() {
                 for i in 0..r.3 {
                     let m = g.meta[idx];
-                    if m.owner != owner || m.pos != r.2[i] {
+                    if m.owner != owner || m.pos != r.2[i] || m.row != i {
                         return Err(format!("meta mismatch at {idx}: {m:?}"));
                     }
                     if g.k.row(idx)[0] != r.0.row(i)[0] {

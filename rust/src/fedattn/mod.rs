@@ -50,14 +50,14 @@ pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use node::{Participant, ParticipantNode};
 pub use protocol::{
-    wire_kind, DecodeTail, GlobalKvFrame, KvContribution, TokenBroadcast, WireError,
-    WireKind,
+    wire_kind, DecodeTail, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
+    TokenBroadcast, WireError, WireKind,
 };
 pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};
 pub use session::FedSession;
 pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};
 pub use transport::{
-    ChannelTransport, NodeHost, RemoteParticipant, TcpTransport, Transport,
-    TransportDriver, TransportError,
+    read_timeout_for_deadline, ChannelTransport, NodeHost, RemoteParticipant,
+    TcpTransport, Transport, TransportDriver, TransportError,
 };

@@ -11,6 +11,11 @@
 //!   sync block (the uplink payload).
 //! * [`GlobalKvFrame`] — the aggregated global KV broadcast back to
 //!   attendees (the downlink payload).
+//! * [`GlobalKvDeltaFrame`] — the incremental downlink: only the rows an
+//!   attendee does not already hold ship; its own rows ride as a
+//!   retain-list of round-scoped row ids it resolves against the fresh
+//!   KV it contributed this round, and untransmitted remote rows (which
+//!   the attendee may never see — they are masked) are elided entirely.
 //! * [`DecodeTail`] — one decode-step KV row append for one block (the
 //!   wire form of the device decode tail).
 //! * [`TokenBroadcast`] — a decoded token pushed to participants.
@@ -41,6 +46,7 @@ const TAG_CONTRIBUTION: u8 = 1;
 const TAG_FRAME: u8 = 2;
 const TAG_DECODE_TAIL: u8 = 3;
 const TAG_TOKEN: u8 = 4;
+const TAG_DELTA_FRAME: u8 = 5;
 
 /// Message kind of an encoded protocol frame, as peeked from its header.
 ///
@@ -53,6 +59,7 @@ pub enum WireKind {
     Frame,
     DecodeTail,
     Token,
+    DeltaFrame,
 }
 
 /// Peek the kind of an encoded protocol message from its magic + tag
@@ -68,6 +75,7 @@ pub fn wire_kind(b: &[u8]) -> Option<WireKind> {
         TAG_FRAME => Some(WireKind::Frame),
         TAG_DECODE_TAIL => Some(WireKind::DecodeTail),
         TAG_TOKEN => Some(WireKind::Token),
+        TAG_DELTA_FRAME => Some(WireKind::DeltaFrame),
         _ => None,
     }
 }
@@ -424,10 +432,12 @@ impl GlobalKvFrame {
         self.meta.len()
     }
 
-    /// Data-plane bytes `attendee` actually receives from this frame: the
-    /// transmitted rows of *other* participants (its own rows never cross
-    /// the wire).  Matches the `NetSim` downlink accounting
-    /// `round_total - own_tx` row for row.
+    /// Data-plane bytes `attendee` receives from this round's downlink
+    /// when delta encoding is on (the default): the transmitted rows of
+    /// *other* participants — its own rows ride as a retain-list and
+    /// untransmitted remote rows are elided (see [`GlobalKvDeltaFrame`]).
+    /// Matches the `NetSim` downlink accounting `round_total - own_tx`
+    /// row for row.
     pub fn payload_bytes_for(&self, attendee: usize) -> u64 {
         let row_bytes = GlobalKv::row_bytes(self.kv_heads, self.head_dim) as u64;
         self.meta
@@ -437,9 +447,21 @@ impl GlobalKvFrame {
             * row_bytes
     }
 
+    /// Data-plane bytes a *full* (non-delta) broadcast of this frame
+    /// ships to every attendee: all packed rows, the attendee's own and
+    /// the untransmitted ones included.  This is what the pre-delta wire
+    /// actually delivered; `delta_frames = false` bills it so the comm
+    /// benches can compare the two modes honestly.
+    pub fn full_payload_bytes(&self) -> u64 {
+        self.meta.len() as u64 * GlobalKv::row_bytes(self.kv_heads, self.head_dim) as u64
+    }
+
     /// Exact length of [`GlobalKvFrame::encode`]'s output.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + 4 * 4 + self.meta.len() * 13 + (self.k.len() + self.v.len()) * 4
+        HEADER_BYTES
+            + 4 * 4
+            + self.meta.len() * META_ENTRY_BYTES
+            + (self.k.len() + self.v.len()) * 4
     }
 
     pub fn encode(&self) -> Vec<u8> {
@@ -448,12 +470,7 @@ impl GlobalKvFrame {
         w.u32(self.kv_heads as u32);
         w.u32(self.head_dim as u32);
         w.u32(self.meta.len() as u32);
-        for m in &self.meta {
-            w.i32(m.pos);
-            w.u32(m.owner as u32);
-            w.u8(m.transmitted as u8);
-            w.f32(m.relevance);
-        }
+        write_meta(&mut w, &self.meta);
         w.f32s(&self.k);
         w.f32s(&self.v);
         w.finish()
@@ -466,27 +483,347 @@ impl GlobalKvFrame {
         let head_dim = r.u32()? as usize;
         let rows = r.u32()? as usize;
         let elems = row_elems(rows, kv_heads, head_dim)?;
-        r.ensure_remaining(rows, 13)?; // pos + owner + transmitted + relevance
-        let mut meta = Vec::with_capacity(rows);
-        for _ in 0..rows {
-            let pos = r.i32()?;
-            let owner = r.u32()? as usize;
-            let transmitted = match r.u8()? {
-                0 => false,
-                1 => true,
-                other => {
-                    return Err(WireError::Malformed(format!(
-                        "bad transmitted flag {other}"
-                    )))
-                }
-            };
-            let relevance = r.f32()?;
-            meta.push(KvRowMeta { pos, owner, transmitted, relevance });
-        }
+        let meta = read_meta(&mut r, rows)?;
         let k = r.f32s(elems)?;
         let v = r.f32s(elems)?;
         r.done()?;
         Ok(Self { block, kv_heads, head_dim, meta, k, v })
+    }
+}
+
+/// Bytes of one encoded [`KvRowMeta`] entry (`pos + owner + transmitted +
+/// relevance`).  The round-scoped row id is *not* shipped: packing is
+/// owner-major in local order, so receivers reconstruct it as the row's
+/// occurrence index among its owner's rows.
+pub(crate) const META_ENTRY_BYTES: usize = 13;
+
+fn write_meta(w: &mut Writer, meta: &[KvRowMeta]) {
+    for m in meta {
+        w.i32(m.pos);
+        w.u32(m.owner as u32);
+        w.u8(m.transmitted as u8);
+        w.f32(m.relevance);
+    }
+}
+
+/// Read `rows` meta entries, reconstructing each row's round-scoped id as
+/// its occurrence index among its owner's rows (the [`GlobalKv::pack`]
+/// stamping, which is what [`write_meta`] elides from the wire).  The
+/// per-owner counters live in a map bounded by the row count, so a
+/// hostile owner field cannot drive an allocation.
+///
+/// [`GlobalKv::pack`]: crate::fedattn::GlobalKv::pack
+fn read_meta(r: &mut Reader<'_>, rows: usize) -> Result<Vec<KvRowMeta>, WireError> {
+    r.ensure_remaining(rows, META_ENTRY_BYTES)?;
+    let mut counters: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    let mut meta = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let pos = r.i32()?;
+        let owner = r.u32()? as usize;
+        let transmitted = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(WireError::Malformed(format!(
+                    "bad transmitted flag {other}"
+                )))
+            }
+        };
+        let relevance = r.f32()?;
+        let row = {
+            let c = counters.entry(owner).or_insert(0);
+            let row = *c;
+            *c += 1;
+            row
+        };
+        meta.push(KvRowMeta { pos, owner, row, transmitted, relevance });
+    }
+    Ok(meta)
+}
+
+// ---------------------------------------------------------------------------
+// GlobalKvDeltaFrame — the incremental downlink
+// ---------------------------------------------------------------------------
+
+/// The aggregated round for one attendee, delta-encoded against what the
+/// attendee already holds.  A full [`GlobalKvFrame`] re-ships every
+/// packed row; per attendee, most of that is redundant:
+///
+/// * its **own rows** were handed to its node host this very round (the
+///   contribute request carries the fresh K/V) — they ride here as a
+///   *retain-list* of round-scoped row ids ([`KvRowMeta::row`]) the node
+///   resolves against that fresh KV;
+/// * **untransmitted remote rows** are invisible to the attendee by
+///   construction (the visibility mask pins them to `-inf`), so their
+///   values are elided entirely and reassembled as zeros.
+///
+/// Only transmitted rows of *other* participants ship as data — exactly
+/// the rows [`GlobalKvFrame::payload_bytes_for`] has always billed, so
+/// with delta frames the wire finally matches the accounting.  The full
+/// per-row metadata still rides along (control plane, ≤ 13 B/row) so the
+/// attendee rebuilds the exact packed geometry and visibility mask, and
+/// `epoch` (the executed-sync-round ordinal) ties the frame to the fresh
+/// KV generation it references: a receiver whose cached generation does
+/// not match must reject the delta as a protocol error — never guess.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalKvDeltaFrame {
+    pub block: usize,
+    /// Executed-sync-round ordinal the retained rows belong to; must
+    /// match the epoch of the attendee's cached fresh KV for `block`.
+    pub epoch: usize,
+    /// The participant this delta was cut for (retention is
+    /// per-attendee).
+    pub attendee: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Per packed-row metadata for the *whole* reassembled frame, in
+    /// [`GlobalKv::pack`] order.
+    ///
+    /// [`GlobalKv::pack`]: crate::fedattn::GlobalKv::pack
+    pub meta: Vec<KvRowMeta>,
+    /// Round-scoped row ids of the attendee's own rows, one per meta row
+    /// with `owner == attendee`, in meta order; each indexes the fresh
+    /// K/V the attendee contributed this round.
+    pub retain: Vec<u32>,
+    /// Shipped key rows — the transmitted rows of other participants, in
+    /// meta order, packed `[shipped × kv_heads × head_dim]`.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl GlobalKvDeltaFrame {
+    /// Cut `frame` down to the delta `attendee` actually needs.
+    pub fn from_frame(frame: &GlobalKvFrame, epoch: usize, attendee: usize) -> Self {
+        let row_len = frame.kv_heads * frame.head_dim;
+        let shipped = frame
+            .meta
+            .iter()
+            .filter(|m| m.transmitted && m.owner != attendee)
+            .count();
+        let mut k = Vec::with_capacity(shipped * row_len);
+        let mut v = Vec::with_capacity(shipped * row_len);
+        let mut retain = Vec::new();
+        for (i, m) in frame.meta.iter().enumerate() {
+            if m.owner == attendee {
+                retain.push(m.row as u32);
+            } else if m.transmitted {
+                k.extend_from_slice(&frame.k[i * row_len..(i + 1) * row_len]);
+                v.extend_from_slice(&frame.v[i * row_len..(i + 1) * row_len]);
+            }
+        }
+        Self {
+            block: frame.block,
+            epoch,
+            attendee,
+            kv_heads: frame.kv_heads,
+            head_dim: frame.head_dim,
+            meta: frame.meta.clone(),
+            retain,
+            k,
+            v,
+        }
+    }
+
+    /// Cut the delta for `attendee` straight from the packed [`GlobalKv`]
+    /// without materializing the full broadcast frame first: only the
+    /// shipped rows (and the meta) are copied, which keeps the hot
+    /// delta-downlink path free of the O(total rows) copy a
+    /// [`GlobalKvFrame::from_global`] + [`GlobalKvDeltaFrame::from_frame`]
+    /// chain would pay per attendee.  Produces exactly the same message.
+    pub fn from_global(block: usize, g: &GlobalKv, epoch: usize, attendee: usize) -> Self {
+        let (kv_heads, head_dim) = (g.k.shape()[1], g.k.shape()[2]);
+        let row_len = kv_heads * head_dim;
+        let shipped = g
+            .meta
+            .iter()
+            .filter(|m| m.transmitted && m.owner != attendee)
+            .count();
+        let mut k = Vec::with_capacity(shipped * row_len);
+        let mut v = Vec::with_capacity(shipped * row_len);
+        let mut retain = Vec::new();
+        for (i, m) in g.meta.iter().enumerate() {
+            if m.owner == attendee {
+                retain.push(m.row as u32);
+            } else if m.transmitted {
+                k.extend_from_slice(g.k.row(i));
+                v.extend_from_slice(g.v.row(i));
+            }
+        }
+        Self {
+            block,
+            epoch,
+            attendee,
+            kv_heads,
+            head_dim,
+            meta: g.meta.clone(),
+            retain,
+            k,
+            v,
+        }
+    }
+
+    /// Total rows of the reassembled frame.
+    pub fn rows(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Rows whose K/V data actually ships (transmitted, not the
+    /// attendee's own).
+    pub fn shipped_rows(&self) -> usize {
+        self.meta
+            .iter()
+            .filter(|m| m.transmitted && m.owner != self.attendee)
+            .count()
+    }
+
+    /// Data-plane bytes: only the shipped rows.  Always equals the
+    /// source frame's [`GlobalKvFrame::payload_bytes_for`] the attendee.
+    pub fn payload_bytes(&self) -> u64 {
+        4 * (self.k.len() + self.v.len()) as u64
+    }
+
+    /// Control-plane bytes: header, metadata, and the retain-list.
+    pub fn control_bytes(&self) -> u64 {
+        (self.encoded_len() as u64) - self.payload_bytes()
+    }
+
+    /// Exact length of [`GlobalKvDeltaFrame::encode`]'s output.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES
+            + 6 * 4
+            + self.meta.len() * META_ENTRY_BYTES
+            + 4
+            + self.retain.len() * 4
+            + (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(TAG_DELTA_FRAME, self.encoded_len());
+        w.u32(self.block as u32);
+        w.u32(self.epoch as u32);
+        w.u32(self.attendee as u32);
+        w.u32(self.kv_heads as u32);
+        w.u32(self.head_dim as u32);
+        w.u32(self.meta.len() as u32);
+        write_meta(&mut w, &self.meta);
+        w.u32(self.retain.len() as u32);
+        for &id in &self.retain {
+            w.u32(id);
+        }
+        w.f32s(&self.k);
+        w.f32s(&self.v);
+        w.finish()
+    }
+
+    /// Decode and structurally validate a delta frame.  The retain-list
+    /// length must equal the count of meta rows owned by the attendee and
+    /// the shipped K/V lengths are derived from the metadata, so a
+    /// successful decode is canonical (re-encodes to the same bytes) and
+    /// every length field is bounded against the buffer before any
+    /// allocation.
+    pub fn decode(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::open(b, TAG_DELTA_FRAME)?;
+        let block = r.u32()? as usize;
+        let epoch = r.u32()? as usize;
+        let attendee = r.u32()? as usize;
+        let kv_heads = r.u32()? as usize;
+        let head_dim = r.u32()? as usize;
+        let rows = r.u32()? as usize;
+        let meta = read_meta(&mut r, rows)?;
+        let own = meta.iter().filter(|m| m.owner == attendee).count();
+        let retain_len = r.u32()? as usize;
+        if retain_len != own {
+            return Err(WireError::Malformed(format!(
+                "retain-list length {retain_len} != {own} attendee-owned rows"
+            )));
+        }
+        r.ensure_remaining(retain_len, 4)?;
+        let retain: Vec<u32> = (0..retain_len).map(|_| r.u32()).collect::<Result<_, _>>()?;
+        let shipped = meta
+            .iter()
+            .filter(|m| m.transmitted && m.owner != attendee)
+            .count();
+        let elems = row_elems(shipped, kv_heads, head_dim)?;
+        let k = r.f32s(elems)?;
+        let v = r.f32s(elems)?;
+        r.done()?;
+        Ok(Self { block, epoch, attendee, kv_heads, head_dim, meta, retain, k, v })
+    }
+
+    /// Reassemble the full downlink frame from this delta plus the
+    /// attendee's own fresh K/V for the round (`own_k`/`own_v`, row-major
+    /// `[own_rows × kv_heads × head_dim]` — the exact tensors it
+    /// contributed from).  Shipped rows come from the delta payload,
+    /// retained rows from the fresh KV at their round-scoped id, and
+    /// elided (untransmitted remote) rows are zero-filled — they are
+    /// masked to `-inf` for this attendee, so zero weights erase them
+    /// from attention and decode outputs stay byte-identical to a
+    /// full-frame session.
+    ///
+    /// Every retain id is validated against `own_rows` before use: an
+    /// unknown id is a [`WireError::Malformed`] protocol error, never a
+    /// panic or an out-of-bounds read.
+    pub fn reassemble(
+        &self,
+        own_k: &[f32],
+        own_v: &[f32],
+        own_rows: usize,
+    ) -> Result<GlobalKvFrame, WireError> {
+        let row_len = self.kv_heads * self.head_dim;
+        if own_k.len() != own_rows * row_len || own_v.len() != own_rows * row_len {
+            return Err(WireError::Malformed(format!(
+                "own KV geometry mismatch: {} rows of {} elems vs {}/{} values",
+                own_rows,
+                row_len,
+                own_k.len(),
+                own_v.len()
+            )));
+        }
+        if self.k.len() != self.shipped_rows() * row_len || self.v.len() != self.k.len() {
+            return Err(WireError::Malformed("shipped k/v length mismatch".into()));
+        }
+        let own = self.meta.iter().filter(|m| m.owner == self.attendee).count();
+        if self.retain.len() != own {
+            return Err(WireError::Malformed(format!(
+                "retain-list length {} != {own} attendee-owned rows",
+                self.retain.len()
+            )));
+        }
+        let rows = self.meta.len();
+        let mut k = vec![0.0f32; rows * row_len];
+        let mut v = vec![0.0f32; rows * row_len];
+        let mut next_retained = 0usize;
+        let mut next_shipped = 0usize;
+        for (i, m) in self.meta.iter().enumerate() {
+            let dst = i * row_len..(i + 1) * row_len;
+            if m.owner == self.attendee {
+                let id = self.retain[next_retained] as usize;
+                next_retained += 1;
+                if id >= own_rows {
+                    return Err(WireError::Malformed(format!(
+                        "retain id {id} out of range ({own_rows} own rows)"
+                    )));
+                }
+                let src = id * row_len..(id + 1) * row_len;
+                k[dst.clone()].copy_from_slice(&own_k[src.clone()]);
+                v[dst].copy_from_slice(&own_v[src]);
+            } else if m.transmitted {
+                let src = next_shipped * row_len..(next_shipped + 1) * row_len;
+                next_shipped += 1;
+                k[dst.clone()].copy_from_slice(&self.k[src.clone()]);
+                v[dst].copy_from_slice(&self.v[src]);
+            }
+            // Untransmitted remote rows stay zero: masked for this
+            // attendee, so the values never reach an attention output.
+        }
+        Ok(GlobalKvFrame {
+            block: self.block,
+            kv_heads: self.kv_heads,
+            head_dim: self.head_dim,
+            meta: self.meta.clone(),
+            k,
+            v,
+        })
     }
 }
 
@@ -723,10 +1060,148 @@ mod tests {
         assert_eq!(wire_kind(&tb), Some(WireKind::Token));
         let t = DecodeTail::from_row(0, 0, &[1.0], &[2.0], 1, 1).encode();
         assert_eq!(wire_kind(&t), Some(WireKind::DecodeTail));
+        assert_eq!(wire_kind(&[WIRE_MAGIC, TAG_DELTA_FRAME]), Some(WireKind::DeltaFrame));
         assert_eq!(wire_kind(&[]), None);
         assert_eq!(wire_kind(&[WIRE_MAGIC]), None);
         assert_eq!(wire_kind(&[WIRE_MAGIC, 99]), None);
         assert_eq!(wire_kind(&[0x00, TAG_TOKEN]), None);
+    }
+
+    /// Two-participant frame for the delta tests: owner 0 holds rows
+    /// {0, 1, 2} (row 1 untransmitted), owner 1 holds rows {3, 4}.
+    fn two_party_frame() -> (GlobalKvFrame, HostTensor, HostTensor) {
+        let k0 = tensor(3, 1, 2, 10.0);
+        let v0 = tensor(3, 1, 2, -10.0);
+        let k1 = tensor(2, 1, 2, 100.0);
+        let v1 = tensor(2, 1, 2, -100.0);
+        let g = GlobalKv::pack(
+            &[
+                (&k0, &v0, &[0, 1, 2][..], 3, &[true, false, true][..]),
+                (&k1, &v1, &[3, 4][..], 2, &[true, true][..]),
+            ],
+            6,
+        )
+        .unwrap();
+        (GlobalKvFrame::from_global(4, &g), k0, v0)
+    }
+
+    #[test]
+    fn delta_frame_roundtrips_and_bills_like_payload_bytes_for() {
+        let (frame, _, _) = two_party_frame();
+        for attendee in 0..2usize {
+            let d = GlobalKvDeltaFrame::from_frame(&frame, 7, attendee);
+            assert_eq!(d.rows(), frame.rows());
+            assert_eq!(d.payload_bytes(), frame.payload_bytes_for(attendee));
+            assert!(d.payload_bytes() < frame.full_payload_bytes());
+            let bytes = d.encode();
+            assert_eq!(bytes.len(), d.encoded_len());
+            let back = GlobalKvDeltaFrame::decode(&bytes).unwrap();
+            assert_eq!(back, d);
+            assert_eq!(back.encode(), bytes);
+        }
+        // Attendee 0 retains its 3 own rows by id, ships owner 1's 2 rows.
+        let d = GlobalKvDeltaFrame::from_frame(&frame, 7, 0);
+        assert_eq!(d.retain, vec![0, 1, 2]);
+        assert_eq!(d.shipped_rows(), 2);
+    }
+
+    #[test]
+    fn delta_from_global_equals_from_frame() {
+        // The hot-path constructor (no full-frame materialization) must
+        // produce the identical message.
+        let k0 = tensor(3, 1, 2, 10.0);
+        let v0 = tensor(3, 1, 2, -10.0);
+        let k1 = tensor(2, 1, 2, 100.0);
+        let v1 = tensor(2, 1, 2, -100.0);
+        let g = GlobalKv::pack(
+            &[
+                (&k0, &v0, &[0, 1, 2][..], 3, &[true, false, true][..]),
+                (&k1, &v1, &[3, 4][..], 2, &[true, true][..]),
+            ],
+            6,
+        )
+        .unwrap();
+        let frame = GlobalKvFrame::from_global(4, &g);
+        for attendee in 0..2usize {
+            assert_eq!(
+                GlobalKvDeltaFrame::from_global(4, &g, 7, attendee),
+                GlobalKvDeltaFrame::from_frame(&frame, 7, attendee),
+                "attendee {attendee}"
+            );
+        }
+    }
+
+    #[test]
+    fn delta_reassembles_full_frame_with_zeros_only_where_masked() {
+        let (frame, k0, v0) = two_party_frame();
+        let d = GlobalKvDeltaFrame::from_frame(&frame, 3, 0);
+        let re = d.reassemble(k0.data(), v0.data(), 3).unwrap();
+        assert_eq!(re.meta, frame.meta);
+        assert_eq!(re.block, frame.block);
+        // Every row attendee 0 can see (own or transmitted) is
+        // value-identical to the full frame; elided rows are zero.
+        let row_len = 2usize;
+        for (i, m) in frame.meta.iter().enumerate() {
+            let (got, want) = (&re.k[i * row_len..(i + 1) * row_len], &frame.k[i * row_len..(i + 1) * row_len]);
+            if m.owner == 0 || m.transmitted {
+                assert_eq!(got, want, "visible row {i} drifted");
+            }
+        }
+        // No elided rows exist for attendee 0's view except... none here:
+        // all of owner 0's rows are its own.  Attendee 1's view elides
+        // owner 0's untransmitted row 1, which must reassemble as zeros.
+        let k1 = tensor(2, 1, 2, 100.0);
+        let v1 = tensor(2, 1, 2, -100.0);
+        let d1 = GlobalKvDeltaFrame::from_frame(&frame, 3, 1);
+        let re1 = d1.reassemble(k1.data(), v1.data(), 2).unwrap();
+        assert!(re1.k[row_len..2 * row_len].iter().all(|&x| x == 0.0));
+        assert_eq!(&re1.k[..row_len], &frame.k[..row_len]);
+        assert_eq!(&re1.k[2 * row_len..], &frame.k[2 * row_len..]);
+    }
+
+    #[test]
+    fn delta_rejects_bad_retain_and_geometry() {
+        let (frame, k0, v0) = two_party_frame();
+        let mut d = GlobalKvDeltaFrame::from_frame(&frame, 0, 0);
+        // Unknown retain id: protocol error, not a panic or OOB read.
+        d.retain[1] = 99;
+        assert!(matches!(
+            d.reassemble(k0.data(), v0.data(), 3),
+            Err(WireError::Malformed(_))
+        ));
+        // Own-KV geometry mismatch.
+        let d = GlobalKvDeltaFrame::from_frame(&frame, 0, 0);
+        assert!(d.reassemble(k0.data(), v0.data(), 2).is_err());
+        // A decoded retain-list must exactly cover the attendee's rows.
+        let mut bytes = GlobalKvDeltaFrame::from_frame(&frame, 0, 0).encode();
+        // retain length field sits after header + 6 u32s + meta entries.
+        let at = HEADER_BYTES + 6 * 4 + frame.rows() * META_ENTRY_BYTES;
+        bytes[at..at + 4].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(
+            GlobalKvDeltaFrame::decode(&bytes),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn delta_decode_rejects_hostile_length_fields() {
+        // Astronomical row count: must fail before any row allocation.
+        let mut msg = vec![WIRE_MAGIC, TAG_DELTA_FRAME, WIRE_VERSION];
+        for field in [0u32, 0, 0, 1, 1, u32::MAX] {
+            msg.extend_from_slice(&field.to_le_bytes());
+        }
+        assert!(matches!(
+            GlobalKvDeltaFrame::decode(&msg),
+            Err(WireError::Truncated(_))
+        ));
+        // Overflowing dimensions: Malformed, not a silent wrap.
+        let mut msg = vec![WIRE_MAGIC, TAG_DELTA_FRAME, WIRE_VERSION];
+        for field in [0u32, 0, 0, u32::MAX, u32::MAX, 0] {
+            msg.extend_from_slice(&field.to_le_bytes());
+        }
+        // 0 meta rows -> retain length comes next; claim a huge one.
+        msg.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(GlobalKvDeltaFrame::decode(&msg).is_err());
     }
 
     #[test]

@@ -219,7 +219,7 @@ mod tests {
     use crate::util::propcheck::propcheck;
 
     fn meta_row(owner: usize) -> KvRowMeta {
-        KvRowMeta { pos: 0, owner, transmitted: true, relevance: 0.0 }
+        KvRowMeta { pos: 0, owner, row: 0, transmitted: true, relevance: 0.0 }
     }
 
     #[test]

@@ -16,12 +16,18 @@
 //! * **[`RemoteParticipant`]** — the driver-side proxy implementing
 //!   [`Participant`]: contributions come back as encoded
 //!   [`KvContribution`] frames, aggregated rounds go out as
-//!   [`GlobalKvFrame`]s, and decoded tokens stream back as
+//!   [`GlobalKvDeltaFrame`]s delta-encoded against the fresh KV the node
+//!   contributed this round (full [`GlobalKvFrame`] fallback on the knob
+//!   being off or any cache miss), and decoded tokens stream back as
 //!   [`TokenBroadcast`]s — the existing protocol codec, byte-for-byte,
-//!   on the wire.
+//!   on the wire.  Contribution requests are issued to every node before
+//!   any reply is read, so a wire round costs the slowest node rather
+//!   than the sum of all nodes.
 //! * **[`NodeHost`]** — the node-side loop: owns one participant's
 //!   decode caches (and an engine for decoding), answers contribution
-//!   requests, absorbs frames, and streams decode tokens.
+//!   requests, absorbs full and delta frames (rejecting any bad delta
+//!   reference — wrong attendee, stale epoch, unknown retain id — as a
+//!   `Fault` control frame, never a panic), and streams decode tokens.
 //! * **[`TransportDriver`]** — [`SessionDriver`] over remote nodes: the
 //!   same round loop (including the per-round deadline and its partial
 //!   aggregation, see [`SessionConfig::round_deadline_ms`]) with every
@@ -54,8 +60,8 @@ use crate::fedattn::driver::{
 use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::node::{BlockCache, Participant};
 use crate::fedattn::protocol::{
-    self, wire_kind, GlobalKvFrame, KvContribution, Reader, TokenBroadcast, WireError,
-    WireKind, Writer,
+    self, wire_kind, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, Reader,
+    TokenBroadcast, WireError, WireKind, Writer,
 };
 use crate::fedattn::schedule::SyncSchedule;
 use crate::net::NetSim;
@@ -76,6 +82,32 @@ pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
 /// realistic round gap, short enough that a wedged peer cannot hang a
 /// test pipeline.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Wall-clock grace added on top of a configured round deadline when
+/// deriving a socket read timeout: the deadline bounds the *simulated*
+/// uplink, while the real link also carries compute time and transfer
+/// overhead, so the timeout must not fire on an on-time peer.
+pub const DEADLINE_TIMEOUT_GRACE: Duration = Duration::from_secs(15);
+
+/// The socket read timeout a driver should run with under a round
+/// deadline: `deadline + `[`DEADLINE_TIMEOUT_GRACE`], so a peer that
+/// blows far past the deadline surfaces as [`TransportError::Timeout`]
+/// quickly instead of holding the round open for the full
+/// [`DEFAULT_IO_TIMEOUT`].  With no (or a non-finite) deadline the
+/// 60 s default stands.
+pub fn read_timeout_for_deadline(round_deadline_ms: Option<f64>) -> Duration {
+    // Cap the derived wait at a day: `Duration::from_secs_f64` panics on
+    // durations beyond its range, and a larger deadline is
+    // indistinguishable from "no deadline" for a socket timeout anyway.
+    const MAX_DERIVED_SECS: f64 = 86_400.0;
+    match round_deadline_ms {
+        Some(d) if d.is_finite() && d >= 0.0 => {
+            Duration::from_secs_f64((d / 1e3).min(MAX_DERIVED_SECS))
+                .saturating_add(DEADLINE_TIMEOUT_GRACE)
+        }
+        _ => DEFAULT_IO_TIMEOUT,
+    }
+}
 
 /// Hard cap on the total decode-cache bytes a node host will allocate
 /// for one `Init` frame.  The codec bounds every *vector* against the
@@ -322,9 +354,14 @@ pub(crate) enum CtrlMsg {
         pos: Vec<i32>,
     },
     /// Driver → node: package the flagged rows of this round's fresh K/V
-    /// as the node's uplink `KvContribution` (the reply frame).
+    /// as the node's uplink `KvContribution` (the reply frame).  The node
+    /// keeps the fresh K/V as this `(block, epoch)`'s generation so a
+    /// later delta downlink can retain rows from it by id.
     Contribute {
         block: usize,
+        /// Executed-sync-round ordinal; ties the fresh KV generation to
+        /// the delta frame that may reference it.
+        epoch: usize,
         kv_heads: usize,
         head_dim: usize,
         /// One flag per valid row (`tx.len()` is the row count).
@@ -397,10 +434,11 @@ impl CtrlMsg {
                 w.i32s(pos);
                 w.finish()
             }
-            CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v } => {
-                let cap = 4 * 4 + tx.len() * 5 + (k.len() + v.len()) * 4;
+            CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v } => {
+                let cap = 5 * 4 + tx.len() * 5 + (k.len() + v.len()) * 4;
                 let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_CONTRIBUTE, cap);
                 w.u32(*block as u32);
+                w.u32(*epoch as u32);
                 w.u32(*kv_heads as u32);
                 w.u32(*head_dim as u32);
                 w.u32(tx.len() as u32);
@@ -476,6 +514,7 @@ impl CtrlMsg {
             }
             CTRL_CONTRIBUTE => {
                 let block = r.u32()? as usize;
+                let epoch = r.u32()? as usize;
                 let kv_heads = r.u32()? as usize;
                 let head_dim = r.u32()? as usize;
                 let rows = r.u32()? as usize;
@@ -492,7 +531,7 @@ impl CtrlMsg {
                 };
                 let k = r.f32s(elems)?;
                 let v = r.f32s(elems)?;
-                CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v }
+                CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v }
             }
             CTRL_ABSORB_LOCAL => {
                 let block = r.u32()? as usize;
@@ -546,6 +585,16 @@ pub struct RemoteParticipant {
     valid: usize,
     keep_caches: bool,
     transport: Box<dyn Transport>,
+    /// Ship aggregated rounds as [`GlobalKvDeltaFrame`]s when the node
+    /// provably holds this round's fresh KV (it contributed through this
+    /// proxy); otherwise — knob off, first contact, or any cache miss —
+    /// fall back to the full [`GlobalKvFrame`].
+    delta_frames: bool,
+    /// Executed-sync-round ordinal of the round in flight.
+    epoch: usize,
+    /// `(block, epoch)` of the last contribute request sent, i.e. the
+    /// fresh-KV generation the node currently caches.
+    fresh_sent: Option<(usize, usize)>,
 }
 
 impl RemoteParticipant {
@@ -556,7 +605,27 @@ impl RemoteParticipant {
         keep_caches: bool,
         transport: Box<dyn Transport>,
     ) -> Self {
-        Self { id, pos, valid, keep_caches, transport }
+        Self {
+            id,
+            pos,
+            valid,
+            keep_caches,
+            transport,
+            delta_frames: true,
+            epoch: 0,
+            fresh_sent: None,
+        }
+    }
+
+    /// Enable/disable delta downlink frames (default on).
+    pub fn set_delta_frames(&mut self, on: bool) {
+        self.delta_frames = on;
+    }
+
+    /// Mark the start of executed sync round `epoch`; subsequent
+    /// contribute requests and delta frames carry this ordinal.
+    pub(crate) fn begin_round(&mut self, epoch: usize) {
+        self.epoch = epoch;
     }
 
     /// Send the node its identity + cache geometry.
@@ -578,6 +647,59 @@ impl RemoteParticipant {
         };
         self.transport.send(&msg.encode())?;
         Ok(())
+    }
+
+    /// Issue this round's contribution request without waiting for the
+    /// reply: the driver fans requests out to every node first so the
+    /// nodes package their uplinks concurrently, then collects the
+    /// replies ([`RemoteParticipant::contribute_recv`]) — the wire round
+    /// costs the slowest node, not the sum of all nodes.  Records the
+    /// fresh-KV generation this ships so the round's downlink can be
+    /// delta-encoded against it.
+    pub(crate) fn contribute_send(
+        &mut self,
+        block: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        tx: &[bool],
+        relevance: Option<&[f64]>,
+    ) -> Result<()> {
+        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
+        anyhow::ensure!(tx.len() == self.valid, "tx flags != valid rows");
+        let row_len = kv_heads * head_dim;
+        let msg = CtrlMsg::Contribute {
+            block,
+            epoch: self.epoch,
+            kv_heads,
+            head_dim,
+            tx: tx.to_vec(),
+            relevance: relevance.map(|r| r.iter().map(|&s| s as f32).collect()),
+            k: k.data()[..self.valid * row_len].to_vec(),
+            v: v.data()[..self.valid * row_len].to_vec(),
+        };
+        self.transport.send(&msg.encode())?;
+        self.fresh_sent = Some((block, self.epoch));
+        Ok(())
+    }
+
+    /// Collect the [`KvContribution`] reply to an earlier
+    /// [`RemoteParticipant::contribute_send`] for `block`.
+    pub(crate) fn contribute_recv(&mut self, block: usize) -> Result<KvContribution> {
+        let frame = self.transport.recv()?;
+        self.check_fault(&frame)?;
+        anyhow::ensure!(
+            wire_kind(&frame) == Some(WireKind::Contribution),
+            "expected a KvContribution frame from node {}",
+            self.id
+        );
+        let c = KvContribution::decode(&frame)?;
+        anyhow::ensure!(
+            c.block == block && c.owner == self.id,
+            "contribution for wrong round: block {} owner {}",
+            c.block,
+            c.owner
+        );
+        Ok(c)
     }
 
     /// Raise a node-reported fault as a session error.
@@ -669,39 +791,28 @@ impl Participant for RemoteParticipant {
         tx: &[bool],
         relevance: Option<&[f64]>,
     ) -> Result<KvContribution> {
-        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
-        anyhow::ensure!(tx.len() == self.valid, "tx flags != valid rows");
-        let row_len = kv_heads * head_dim;
-        let msg = CtrlMsg::Contribute {
-            block,
-            kv_heads,
-            head_dim,
-            tx: tx.to_vec(),
-            relevance: relevance.map(|r| r.iter().map(|&s| s as f32).collect()),
-            k: k.data()[..self.valid * row_len].to_vec(),
-            v: v.data()[..self.valid * row_len].to_vec(),
-        };
-        self.transport.send(&msg.encode())?;
-        let frame = self.transport.recv()?;
-        self.check_fault(&frame)?;
-        anyhow::ensure!(
-            wire_kind(&frame) == Some(WireKind::Contribution),
-            "expected a KvContribution frame from node {}",
-            self.id
-        );
-        let c = KvContribution::decode(&frame)?;
-        anyhow::ensure!(
-            c.block == block && c.owner == self.id,
-            "contribution for wrong round: block {} owner {}",
-            c.block,
-            c.owner
-        );
-        Ok(c)
+        self.contribute_send(block, k, v, tx, relevance)?;
+        self.contribute_recv(block)
     }
 
     fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()> {
-        let frame = GlobalKvFrame::from_global(block, gkv);
-        self.transport.send(&frame.encode())?;
+        if self.delta_frames && self.fresh_sent == Some((block, self.epoch)) {
+            // The node holds this round's fresh KV: cut the delta straight
+            // from the packed global KV (no full-frame materialization on
+            // the hot path) and ship only what the node is missing.  The
+            // delta's data plane is exactly the downlink the round was
+            // billed.
+            let delta = GlobalKvDeltaFrame::from_global(block, gkv, self.epoch, self.id);
+            debug_assert_eq!(
+                delta.payload_bytes(),
+                GlobalKvFrame::from_global(block, gkv).payload_bytes_for(self.id),
+                "delta payload drifted from the billed downlink"
+            );
+            self.transport.send(&delta.encode())?;
+        } else {
+            let frame = GlobalKvFrame::from_global(block, gkv);
+            self.transport.send(&frame.encode())?;
+        }
         Ok(())
     }
 
@@ -753,14 +864,59 @@ fn validate_init_geometry(
     Ok(())
 }
 
-/// One participant's node-side state: identity, positions, and the
-/// authoritative per-block decode caches.
+/// The fresh K/V a node contributed from this sync round: the generation
+/// a delta downlink's retain-list resolves against.  One generation is
+/// kept (rounds reference only their own block's fresh rows).
+struct FreshKv {
+    block: usize,
+    epoch: usize,
+    k: HostTensor,
+    v: HostTensor,
+}
+
+/// One participant's node-side state: identity, positions, the
+/// authoritative per-block decode caches, and the current fresh-KV
+/// generation for delta reassembly.
 struct WireNode {
     id: usize,
     pos: Vec<i32>,
     valid: usize,
     keep_caches: bool,
     caches: Vec<BlockCache>,
+    fresh: Option<FreshKv>,
+}
+
+/// Resolve a delta downlink against the node's cached fresh KV, or fail
+/// with a *protocol error* (which the serve loop reports as a `Fault`
+/// control frame) — never a panic: the frame is untrusted input.
+///
+/// Rejects a delta addressed to another participant, one referencing a
+/// `(block, epoch)` generation the node does not hold (cache miss /
+/// stale epoch — the driver is expected to fall back to a full frame in
+/// those cases), and any retain id outside the fresh rows (validated in
+/// [`GlobalKvDeltaFrame::reassemble`]).
+fn delta_to_full_frame(
+    node_id: usize,
+    fresh: Option<&FreshKv>,
+    d: &GlobalKvDeltaFrame,
+) -> Result<GlobalKvFrame> {
+    anyhow::ensure!(
+        d.attendee == node_id,
+        "delta frame addressed to participant {} at node {node_id}",
+        d.attendee
+    );
+    let fresh = fresh
+        .filter(|f| f.block == d.block && f.epoch == d.epoch)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "delta frame for block {} epoch {} without a matching fresh KV \
+                 (cache miss or stale epoch)",
+                d.block,
+                d.epoch
+            )
+        })?;
+    let rows = fresh.k.shape()[0];
+    Ok(d.reassemble(fresh.k.data(), fresh.v.data(), rows)?)
 }
 
 /// The node-side half of the wire protocol: owns one participant's
@@ -801,6 +957,30 @@ impl NodeHost {
         }
     }
 
+    /// Fold a (possibly delta-reassembled) downlink frame into the
+    /// node's decode cache for its block.
+    fn absorb_round_frame(node: &mut WireNode, f: &GlobalKvFrame) -> Result<()> {
+        anyhow::ensure!(node.keep_caches, "frame sent to a cache-less node");
+        anyhow::ensure!(f.block < node.caches.len(), "frame block {} out of range", f.block);
+        let g = f.to_global(f.rows())?;
+        let cache = &node.caches[f.block];
+        // Reject (as a Fault, not a panic) a well-formed frame that would
+        // overflow the decode cache — push_rows asserts, and an assert on
+        // untrusted input would kill the serving thread without telling
+        // the driver.
+        anyhow::ensure!(
+            cache.len + g.rows() <= cache.k.shape()[0],
+            "frame rows {} overflow decode cache ({}/{} used)",
+            g.rows(),
+            cache.len,
+            cache.k.shape()[0]
+        );
+        let vis: Vec<bool> =
+            g.meta.iter().map(|r| r.owner == node.id || r.transmitted).collect();
+        node.caches[f.block].push_rows(&g.k, &g.v, g.rows(), &vis);
+        Ok(())
+    }
+
     /// Dispatch one frame; `Ok(true)` ends the serve loop.
     fn handle(&mut self, frame: &[u8], node: &mut Option<WireNode>) -> Result<bool> {
         if let Some(kind) = wire_kind(frame) {
@@ -808,28 +988,19 @@ impl NodeHost {
                 WireKind::Frame => {
                     let f = GlobalKvFrame::decode(frame)?;
                     let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("frame before init"))?;
-                    anyhow::ensure!(node.keep_caches, "frame sent to a cache-less node");
-                    anyhow::ensure!(
-                        f.block < node.caches.len(),
-                        "frame block {} out of range",
-                        f.block
-                    );
-                    let g = f.to_global(f.rows())?;
-                    let cache = &node.caches[f.block];
-                    // Reject (as a Fault, not a panic) a well-formed frame
-                    // that would overflow the decode cache — push_rows
-                    // asserts, and an assert on untrusted input would kill
-                    // the serving thread without telling the driver.
-                    anyhow::ensure!(
-                        cache.len + g.rows() <= cache.k.shape()[0],
-                        "frame rows {} overflow decode cache ({}/{} used)",
-                        g.rows(),
-                        cache.len,
-                        cache.k.shape()[0]
-                    );
-                    let vis: Vec<bool> =
-                        g.meta.iter().map(|r| r.owner == node.id || r.transmitted).collect();
-                    node.caches[f.block].push_rows(&g.k, &g.v, g.rows(), &vis);
+                    Self::absorb_round_frame(node, &f)?;
+                    return Ok(false);
+                }
+                WireKind::DeltaFrame => {
+                    let d = GlobalKvDeltaFrame::decode(frame)?;
+                    let node = node
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("delta frame before init"))?;
+                    // Any bad reference — wrong attendee, unknown
+                    // (block, epoch) generation, out-of-range retain id —
+                    // is a protocol error reported as a Fault frame.
+                    let f = delta_to_full_frame(node.id, node.fresh.as_ref(), &d)?;
+                    Self::absorb_round_frame(node, &f)?;
                     return Ok(false);
                 }
                 other => anyhow::bail!("unexpected protocol frame {other:?} at node host"),
@@ -850,10 +1021,10 @@ impl NodeHost {
                     Vec::new()
                 };
                 let valid = pos.len();
-                *node = Some(WireNode { id, pos, valid, keep_caches, caches });
+                *node = Some(WireNode { id, pos, valid, keep_caches, caches, fresh: None });
                 Ok(false)
             }
-            CtrlMsg::Contribute { block, kv_heads, head_dim, tx, relevance, k, v } => {
+            CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v } => {
                 let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("contribute before init"))?;
                 anyhow::ensure!(tx.len() == node.valid, "tx flags != node rows");
                 let kt = HostTensor::new(&[node.valid, kv_heads, head_dim], k)?;
@@ -870,6 +1041,11 @@ impl NodeHost {
                     rel.as_deref(),
                 );
                 self.transport.send(&c.encode())?;
+                if node.keep_caches {
+                    // This generation is what a delta downlink's
+                    // retain-list will resolve against.
+                    node.fresh = Some(FreshKv { block, epoch, k: kt, v: vt });
+                }
                 Ok(false)
             }
             CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v } => {
@@ -1095,6 +1271,7 @@ mod tests {
             },
             CtrlMsg::Contribute {
                 block: 1,
+                epoch: 3,
                 kv_heads: 1,
                 head_dim: 2,
                 tx: vec![true, false, true],
@@ -1104,6 +1281,7 @@ mod tests {
             },
             CtrlMsg::Contribute {
                 block: 0,
+                epoch: 0,
                 kv_heads: 1,
                 head_dim: 1,
                 tx: vec![true],
@@ -1150,7 +1328,7 @@ mod tests {
         // Hostile row count in a contribute header must fail before
         // allocating.
         let mut msg = vec![CTRL_MAGIC, CTRL_CONTRIBUTE, 1];
-        for field in [0u32, 1, 1, u32::MAX] {
+        for field in [0u32, 0, 1, 1, u32::MAX] {
             msg.extend_from_slice(&field.to_le_bytes());
         }
         assert!(CtrlMsg::decode(&msg).is_err());
@@ -1168,6 +1346,78 @@ mod tests {
         for cut in 0..full.len() {
             assert!(CtrlMsg::decode(&full[..cut]).is_err(), "cut at {cut}");
         }
+    }
+
+    #[test]
+    fn read_timeout_derives_from_round_deadline() {
+        // No deadline: the historical 60 s default stands.
+        assert_eq!(read_timeout_for_deadline(None), DEFAULT_IO_TIMEOUT);
+        // A finite deadline bounds the socket wait to deadline + grace.
+        assert_eq!(
+            read_timeout_for_deadline(Some(500.0)),
+            Duration::from_millis(500) + DEADLINE_TIMEOUT_GRACE
+        );
+        // Deadline 0 (everything late) still leaves the grace window so
+        // control traffic can flow.
+        assert_eq!(read_timeout_for_deadline(Some(0.0)), DEADLINE_TIMEOUT_GRACE);
+        // Non-finite deadlines behave like no deadline.
+        assert_eq!(read_timeout_for_deadline(Some(f64::INFINITY)), DEFAULT_IO_TIMEOUT);
+        assert_eq!(read_timeout_for_deadline(Some(f64::NAN)), DEFAULT_IO_TIMEOUT);
+        // A generous deadline may exceed the default — that is the
+        // operator's explicit choice, not a clamp.
+        assert!(read_timeout_for_deadline(Some(120_000.0)) > DEFAULT_IO_TIMEOUT);
+    }
+
+    fn fresh(block: usize, epoch: usize, rows: usize) -> FreshKv {
+        let mut k = HostTensor::zeros(&[rows, 1, 2]);
+        for i in 0..rows {
+            k.row_mut(i).fill(10.0 + i as f32);
+        }
+        let v = k.clone();
+        FreshKv { block, epoch, k, v }
+    }
+
+    /// Delta frame for node 0: one own row (retain id 0) + one shipped
+    /// remote row.
+    fn delta_for_node0(block: usize, epoch: usize) -> GlobalKvDeltaFrame {
+        let k0 = fresh(0, 0, 1).k;
+        let k1 = {
+            let mut t = HostTensor::zeros(&[1, 1, 2]);
+            t.row_mut(0).fill(99.0);
+            t
+        };
+        let g = crate::fedattn::kv::GlobalKv::pack(
+            &[
+                (&k0, &k0.clone(), &[0][..], 1, &[true][..]),
+                (&k1, &k1.clone(), &[1][..], 1, &[true][..]),
+            ],
+            2,
+        )
+        .unwrap();
+        let f = GlobalKvFrame::from_global(block, &g);
+        GlobalKvDeltaFrame::from_frame(&f, epoch, 0)
+    }
+
+    #[test]
+    fn delta_resolution_validates_attendee_epoch_and_ids() {
+        let d = delta_for_node0(2, 5);
+        let f = fresh(2, 5, 1);
+        // Matching generation: reassembles, and the retained row comes
+        // from the node's fresh KV bit-for-bit.
+        let full = delta_to_full_frame(0, Some(&f), &d).unwrap();
+        assert_eq!(full.rows(), 2);
+        assert_eq!(&full.k[..2], f.k.row(0));
+        // Wrong attendee.
+        assert!(delta_to_full_frame(1, Some(&f), &d).is_err());
+        // No fresh KV at all (cache miss).
+        assert!(delta_to_full_frame(0, None, &d).is_err());
+        // Stale epoch / wrong block generations.
+        assert!(delta_to_full_frame(0, Some(&fresh(2, 4, 1)), &d).is_err());
+        assert!(delta_to_full_frame(0, Some(&fresh(1, 5, 1)), &d).is_err());
+        // Unknown retain id: protocol error from reassemble, not a panic.
+        let mut bad = d.clone();
+        bad.retain[0] = 7;
+        assert!(delta_to_full_frame(0, Some(&f), &bad).is_err());
     }
 
     #[test]

@@ -86,7 +86,11 @@ fn print_help() {
                                       schedule, not the data)\n\
            --round-deadline <ms>      per-sync-round contribution deadline in\n\
                                       simulated ms (late contributions are\n\
-                                      excluded; off|none|inf disables)\n\
+                                      excluded; off|none|inf disables); also\n\
+                                      bounds the TCP read timeout (+15 s grace)\n\
+           --delta-frames <on|off>    delta-encode the downlink (default on):\n\
+                                      attendees receive only rows they do not\n\
+                                      already hold; off ships+bills full frames\n\
            --listen <addr>            node: accept driver connections here\n\
                                       (default 127.0.0.1:7070)\n\
            --connect <a1[,a2,...]>    run: drive participants over TCP; each\n\
@@ -136,6 +140,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(d) = fedattn::cli::parse_round_deadline(args)? {
         f.round_deadline_ms = d;
+    }
+    if let Some(on) = fedattn::cli::parse_delta_frames(args)? {
+        f.delta_frames = on;
     }
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
     sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
@@ -233,15 +240,22 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, spec: &str) -> Result<()> {
     scfg.max_new_tokens = sc.federation.max_new_tokens;
     scfg.dropout_prob = sc.federation.dropout_prob;
     scfg.round_deadline_ms = sc.federation.round_deadline_ms;
+    scfg.delta_frames = sc.federation.delta_frames;
     scfg.seed = sc.seed;
     scfg.workers = sc.serving.workers;
 
     let links = sc.network.links(n);
     let net = NetSim::new(sc.network.topology, links, sc.seed);
+    // Under a round deadline, bound the socket wait to the deadline plus
+    // a grace margin instead of the 60 s default: a peer that blows far
+    // past the round surfaces fast.
+    let io_timeout =
+        fedattn::fedattn::transport::read_timeout_for_deadline(scfg.round_deadline_ms);
     let transports: Vec<Box<dyn Transport>> = (0..n)
         .map(|p| {
             let addr = addrs[p % addrs.len()];
             TcpTransport::connect(addr)
+                .and_then(|t| t.with_read_timeout(io_timeout))
                 .map(|t| Box::new(t) as Box<dyn Transport>)
                 .with_context(|| format!("connecting participant {p} to node host {addr}"))
         })

@@ -53,6 +53,12 @@ pub struct NetReport {
     /// Total bytes transmitted in each round, in order (`len() == rounds`);
     /// lets tests and the golden fixture pin per-round payloads.
     pub round_bytes: Vec<u64>,
+    /// Total downlink bytes billed in each round (sum over attendees), in
+    /// order.  With delta downlink frames (the default) this is the
+    /// transmitted-other-rows accounting; with full frames every packed
+    /// row is re-delivered to every attendee, so the delta benches and
+    /// golden tests compare these per round.
+    pub round_rx_bytes: Vec<u64>,
 }
 
 impl NetReport {
@@ -107,27 +113,75 @@ impl NetSim {
     /// * `attending[n]` — whether participant `n` receives the aggregate.
     ///
     /// Each attendee receives the sum of the *other* participants' payloads
-    /// (it already holds its own rows).  Returns the simulated round time.
+    /// (it already holds its own rows — the delta-downlink accounting).
+    /// Returns the simulated round time.
     pub fn exchange_round(&mut self, tx_bytes: &[u64], attending: &[bool]) -> f64 {
+        self.round_core(tx_bytes, attending, None, None)
+    }
+
+    /// [`NetSim::exchange_round`] with an explicit per-attendee downlink:
+    /// `rx_bytes[n]` is what attendee `n` is billed instead of the
+    /// delta-downlink default `total - tx_bytes[n]`.  The driver uses it
+    /// to bill full (non-delta) broadcast frames, which re-deliver every
+    /// packed row.
+    pub fn exchange_round_with_downlink(
+        &mut self,
+        tx_bytes: &[u64],
+        attending: &[bool],
+        rx_bytes: &[u64],
+    ) -> f64 {
+        self.round_core(tx_bytes, attending, Some(rx_bytes), None)
+    }
+
+    /// The shared round body.  `rx_override` replaces the per-attendee
+    /// downlink (default: `total - own_tx`, the delta accounting);
+    /// `uplink_ms` supplies pre-drawn uplink completion times (the
+    /// deadline path) instead of drawing them here.  The RNG consumption
+    /// pattern is identical for every override combination — one uplink
+    /// draw per transmitter (only when `uplink_ms` is `None`) and one
+    /// downlink draw per attendee — so adding an override never perturbs
+    /// the session's random stream.
+    fn round_core(
+        &mut self,
+        tx_bytes: &[u64],
+        attending: &[bool],
+        rx_override: Option<&[u64]>,
+        uplink_ms: Option<&[f64]>,
+    ) -> f64 {
         assert_eq!(tx_bytes.len(), self.links.len());
         assert_eq!(attending.len(), self.links.len());
+        if let Some(rx) = rx_override {
+            assert_eq!(rx.len(), self.links.len());
+        }
+        if let Some(up) = uplink_ms {
+            assert_eq!(up.len(), self.links.len());
+        }
         let total: u64 = tx_bytes.iter().sum();
+        let mut rx_total = 0u64;
         let mut up_max = 0.0f64;
         let mut down_max = 0.0f64;
         for (n, (&tb, link)) in tx_bytes.iter().zip(&self.links).enumerate() {
             if tb > 0 {
                 self.report.tx_bytes[n] += tb;
-                let t = link.transfer_ms(tb, Some(&mut self.rng));
+                let t = match uplink_ms {
+                    Some(up) => up[n],
+                    None => link.transfer_ms(tb, Some(&mut self.rng)),
+                };
                 up_max = up_max.max(t);
             }
             if attending[n] {
-                let rx = total - tb;
+                let rx = rx_override.map_or(total - tb, |r| r[n]);
                 self.report.rx_bytes[n] += rx;
+                rx_total += rx;
                 let t = match self.topology {
                     Topology::Star => link.transfer_ms(rx, Some(&mut self.rng)),
                     Topology::Mesh => {
                         // Parallel pulls from each peer; bottleneck is the
                         // largest single peer payload on our own link.
+                        // (With an rx override the billed bytes change but
+                        // the per-peer pull decomposition is unknown, so
+                        // the mesh timing model keeps the uplink payloads
+                        // as its bottleneck estimate.)
                         let max_peer =
                             tx_bytes.iter().enumerate().filter(|&(m, _)| m != n).map(|(_, &b)| b).max().unwrap_or(0);
                         link.transfer_ms(max_peer, Some(&mut self.rng))
@@ -143,6 +197,7 @@ impl NetSim {
         self.report.comm_time_ms += round;
         self.report.rounds += 1;
         self.report.round_bytes.push(total);
+        self.report.round_rx_bytes.push(rx_total);
         round
     }
 
@@ -195,44 +250,20 @@ impl NetSim {
         attending: &[bool],
         uplink_ms: &[f64],
     ) -> f64 {
-        assert_eq!(tx_bytes.len(), self.links.len());
-        assert_eq!(attending.len(), self.links.len());
-        assert_eq!(uplink_ms.len(), self.links.len());
-        let total: u64 = tx_bytes.iter().sum();
-        let mut up_max = 0.0f64;
-        let mut down_max = 0.0f64;
-        for (n, (&tb, link)) in tx_bytes.iter().zip(&self.links).enumerate() {
-            if tb > 0 {
-                self.report.tx_bytes[n] += tb;
-                up_max = up_max.max(uplink_ms[n]);
-            }
-            if attending[n] {
-                let rx = total - tb;
-                self.report.rx_bytes[n] += rx;
-                let t = match self.topology {
-                    Topology::Star => link.transfer_ms(rx, Some(&mut self.rng)),
-                    Topology::Mesh => {
-                        let max_peer = tx_bytes
-                            .iter()
-                            .enumerate()
-                            .filter(|&(m, _)| m != n)
-                            .map(|(_, &b)| b)
-                            .max()
-                            .unwrap_or(0);
-                        link.transfer_ms(max_peer, Some(&mut self.rng))
-                    }
-                };
-                down_max = down_max.max(t);
-            }
-        }
-        let round = match self.topology {
-            Topology::Star => up_max + down_max,
-            Topology::Mesh => up_max.max(down_max),
-        };
-        self.report.comm_time_ms += round;
-        self.report.rounds += 1;
-        self.report.round_bytes.push(total);
-        round
+        self.round_core(tx_bytes, attending, None, Some(uplink_ms))
+    }
+
+    /// [`NetSim::exchange_round_scheduled`] with an explicit per-attendee
+    /// downlink (see [`NetSim::exchange_round_with_downlink`]): the
+    /// deadline path billing full (non-delta) broadcast frames.
+    pub fn exchange_round_scheduled_with_downlink(
+        &mut self,
+        tx_bytes: &[u64],
+        attending: &[bool],
+        uplink_ms: &[f64],
+        rx_bytes: &[u64],
+    ) -> f64 {
+        self.round_core(tx_bytes, attending, Some(rx_bytes), Some(uplink_ms))
     }
 
     /// Per-participant link specifications.
@@ -316,6 +347,39 @@ mod tests {
         // each attendee receives total - own
         assert_eq!(r.rx_bytes, vec![500, 400, 300]);
         assert_eq!(r.round_bytes, vec![600]);
+        assert_eq!(r.round_rx_bytes, vec![1200]);
+    }
+
+    #[test]
+    fn downlink_override_bills_exactly_and_preserves_rng_stream() {
+        // Full-frame billing: every attendee is billed the whole frame
+        // instead of total - own.
+        let mut s = sim(3);
+        s.exchange_round_with_downlink(&[100, 200, 300], &[true, false, true], &[900, 900, 900]);
+        let r = s.report();
+        assert_eq!(r.tx_bytes, vec![100, 200, 300]);
+        assert_eq!(r.rx_bytes, vec![900, 0, 900]);
+        assert_eq!(r.round_bytes, vec![600]);
+        assert_eq!(r.round_rx_bytes, vec![1800]);
+
+        // The override consumes exactly the same RNG draws as the default
+        // path: on jittery links, a follow-up round is identical whether
+        // the previous round was billed with or without an override.
+        let link = LinkSpec { bandwidth_mbps: 10.0, latency_ms: 1.0, jitter: 0.5 };
+        let mut a = NetSim::uniform(Topology::Star, 2, link, 17);
+        let mut b = NetSim::uniform(Topology::Star, 2, link, 17);
+        a.exchange_round(&[1000, 2000], &[true, true]);
+        b.exchange_round_with_downlink(&[1000, 2000], &[true, true], &[3000, 3000]);
+        let ta = a.exchange_round(&[500, 500], &[true, true]);
+        let tb = b.exchange_round(&[500, 500], &[true, true]);
+        assert!((ta - tb).abs() < 1e-12, "override perturbed the RNG stream");
+
+        // Scheduled variant with override: billing matches the override,
+        // uplink times come from the given arrivals.
+        let mut s = sim(2);
+        let arr = s.uplink_arrivals(&[100, 200]);
+        s.exchange_round_scheduled_with_downlink(&[100, 200], &[true, true], &arr, &[300, 300]);
+        assert_eq!(s.report().rx_bytes, vec![300, 300]);
     }
 
     #[test]

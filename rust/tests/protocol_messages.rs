@@ -18,8 +18,8 @@
 //!   transport feeds these decoders bytes straight off a socket.
 
 use fedattn::fedattn::{
-    DecodeTail, GlobalKv, GlobalKvFrame, KvContribution, KvExchangePolicy,
-    TokenBroadcast, TxContext,
+    DecodeTail, GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
+    KvExchangePolicy, TokenBroadcast, TxContext,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::tensor::HostTensor;
@@ -281,11 +281,25 @@ fn valid_encodings(rng: &mut Xoshiro256ss) -> Vec<(&'static str, Vec<u8>)> {
     let f = GlobalKvFrame::from_global(2, &gkv);
     let t = DecodeTail::from_row(3, 7, &[1.0; 4], &[2.0; 4], 2, 2);
     let tb = TokenBroadcast { step: 5, token: -3 };
+    // Two-party frame so the delta both retains (owner 0's rows) and
+    // ships (owner 1's transmitted row).
+    let k2 = random_tensor(rng, 1, 2, 2);
+    let v2 = random_tensor(rng, 1, 2, 2);
+    let gkv2 = GlobalKv::pack(
+        &[
+            (&k, &v, &[0, 1, 2][..], 3, &[true, false, true][..]),
+            (&k2, &v2, &[3][..], 1, &[true][..]),
+        ],
+        4,
+    )
+    .unwrap();
+    let d = GlobalKvDeltaFrame::from_frame(&GlobalKvFrame::from_global(2, &gkv2), 1, 0);
     vec![
         ("contribution", c.encode()),
         ("frame", f.encode()),
         ("decode-tail", t.encode()),
         ("token", tb.encode()),
+        ("delta-frame", d.encode()),
     ]
 }
 
@@ -306,6 +320,9 @@ fn decode_all_canonical(name: &str, bytes: &[u8]) {
     if let Ok(m) = TokenBroadcast::decode(bytes) {
         assert_eq!(m.encode(), bytes, "{name}: token not canonical");
     }
+    if let Ok(m) = GlobalKvDeltaFrame::decode(bytes) {
+        assert_eq!(m.encode(), bytes, "{name}: delta-frame not canonical");
+    }
 }
 
 /// Truncating a valid message at *every* byte boundary must fail
@@ -321,6 +338,7 @@ fn every_truncation_of_every_message_errors() {
             assert!(GlobalKvFrame::decode(prefix).is_err(), "{name} cut {cut}");
             assert!(DecodeTail::decode(prefix).is_err(), "{name} cut {cut}");
             assert!(TokenBroadcast::decode(prefix).is_err(), "{name} cut {cut}");
+            assert!(GlobalKvDeltaFrame::decode(prefix).is_err(), "{name} cut {cut}");
         }
     }
 }
@@ -339,6 +357,7 @@ fn wrong_tag_magic_and_version_all_rejected() {
             GlobalKvFrame::decode(bytes).is_ok(),
             DecodeTail::decode(bytes).is_ok(),
             TokenBroadcast::decode(bytes).is_ok(),
+            GlobalKvDeltaFrame::decode(bytes).is_ok(),
         ];
         for (j, ok) in results.iter().enumerate() {
             assert_eq!(*ok, i == j, "{name} vs decoder {j}");
@@ -357,6 +376,7 @@ fn decode_all_err(name: &str, bytes: &[u8]) {
     assert!(GlobalKvFrame::decode(bytes).is_err(), "{name}");
     assert!(DecodeTail::decode(bytes).is_err(), "{name}");
     assert!(TokenBroadcast::decode(bytes).is_err(), "{name}");
+    assert!(GlobalKvDeltaFrame::decode(bytes).is_err(), "{name}");
 }
 
 /// Oversized length prefixes: headers claiming astronomical row counts
@@ -405,7 +425,7 @@ fn random_bytes_fuzz_never_panics() {
         let mut bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
         if rng.bernoulli(0.5) && bytes.len() >= 3 {
             bytes[0] = 0xFA; // WIRE_MAGIC
-            bytes[1] = 1 + rng.below(4) as u8;
+            bytes[1] = 1 + rng.below(5) as u8;
             bytes[2] = 1; // WIRE_VERSION
         }
         decode_all_canonical(&format!("fuzz iter {iter}"), &bytes);
@@ -427,6 +447,114 @@ fn mutated_messages_fuzz_never_panics() {
             }
             decode_all_canonical(name, &mutated);
         }
+    }
+}
+
+/// The delta downlink under every KV policy: round-trips canonically,
+/// bills exactly what [`GlobalKvFrame::payload_bytes_for`] has always
+/// billed (never more than a full frame), and reassembles — against the
+/// attendee's own fresh K/V — into a frame whose every *visible* row is
+/// value-identical to the full broadcast, with elided rows exactly zero.
+#[test]
+fn delta_frame_roundtrips_bills_and_reassembles_for_all_policies() {
+    propcheck(60, |rng| {
+        for policy in ALL_POLICIES {
+            let n = 1 + rng.below(4) as usize;
+            let r = random_round(rng, policy, n);
+            let refs: Vec<_> = (0..n)
+                .map(|p| {
+                    (&r.ks[p], &r.vs[p], r.poss[p].as_slice(), r.valids[p], r.txs[p].as_slice())
+                })
+                .collect();
+            let total: usize = r.valids.iter().sum();
+            let gkv = GlobalKv::pack(&refs, total).map_err(|e| e.to_string())?;
+            let frame = GlobalKvFrame::from_global(1, &gkv);
+            let row_len = r.hkv * r.hd;
+            for attendee in 0..n {
+                let d = GlobalKvDeltaFrame::from_frame(&frame, 9, attendee);
+                if d.payload_bytes() != frame.payload_bytes_for(attendee) {
+                    return Err(format!(
+                        "{}: delta bills {} != payload_bytes_for {}",
+                        policy.as_str(),
+                        d.payload_bytes(),
+                        frame.payload_bytes_for(attendee)
+                    ));
+                }
+                if d.payload_bytes() > frame.full_payload_bytes() {
+                    return Err(format!("{}: delta exceeds full frame", policy.as_str()));
+                }
+                let back =
+                    GlobalKvDeltaFrame::decode(&d.encode()).map_err(|e| e.to_string())?;
+                if back != d || back.encode() != d.encode() {
+                    return Err(format!("{}: delta not canonical", policy.as_str()));
+                }
+                let re = d
+                    .reassemble(r.ks[attendee].data(), r.vs[attendee].data(), r.valids[attendee])
+                    .map_err(|e| e.to_string())?;
+                if re.meta != frame.meta {
+                    return Err(format!("{}: reassembled meta drifted", policy.as_str()));
+                }
+                for (i, m) in frame.meta.iter().enumerate() {
+                    let (gk, wk) =
+                        (&re.k[i * row_len..(i + 1) * row_len], &frame.k[i * row_len..(i + 1) * row_len]);
+                    let (gv, wv) =
+                        (&re.v[i * row_len..(i + 1) * row_len], &frame.v[i * row_len..(i + 1) * row_len]);
+                    if m.owner == attendee || m.transmitted {
+                        if gk != wk || gv != wv {
+                            return Err(format!(
+                                "{}: visible row {i} drifted for attendee {attendee}",
+                                policy.as_str()
+                            ));
+                        }
+                    } else if gk.iter().any(|&x| x != 0.0) || gv.iter().any(|&x| x != 0.0) {
+                        return Err(format!(
+                            "{}: elided row {i} not zero for attendee {attendee}",
+                            policy.as_str()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Hostile delta headers: astronomical meta counts, retain-list lengths
+/// that do not cover the attendee's rows, and overflowing dimensions all
+/// fail before any row-sized allocation.
+#[test]
+fn delta_hostile_retain_lists_and_lengths_rejected() {
+    use fedattn::fedattn::protocol::{WIRE_MAGIC, WIRE_VERSION};
+    const TAG_DELTA: u8 = 5;
+    let header = |fields: &[u32]| {
+        let mut msg = vec![WIRE_MAGIC, TAG_DELTA, WIRE_VERSION];
+        for f in fields {
+            msg.extend_from_slice(&f.to_le_bytes());
+        }
+        msg
+    };
+    // block, epoch, attendee, kv_heads, head_dim, n_meta
+    assert!(GlobalKvDeltaFrame::decode(&header(&[0, 0, 0, 1, 1, u32::MAX])).is_err());
+    assert!(GlobalKvDeltaFrame::decode(&header(&[0, 0, 0, u32::MAX, u32::MAX, u32::MAX])).is_err());
+    // Zero meta rows but a huge claimed retain-list: rejected by the
+    // own-row coverage check before any allocation.
+    let mut msg = header(&[0, 0, 0, 1, 1, 0]);
+    msg.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(GlobalKvDeltaFrame::decode(&msg).is_err());
+    // A valid delta whose retain-list length field is tampered with in
+    // either direction must fail (the list must exactly cover the
+    // attendee's rows).
+    let mut rng = Xoshiro256ss::new(77);
+    let (_, bytes) = valid_encodings(&mut rng).pop().unwrap();
+    let d = GlobalKvDeltaFrame::decode(&bytes).unwrap();
+    let at = 3 + 6 * 4 + d.rows() * 13;
+    for bad in [0u32, d.retain.len() as u32 + 1, u32::MAX] {
+        if bad as usize == d.retain.len() {
+            continue;
+        }
+        let mut tampered = bytes.clone();
+        tampered[at..at + 4].copy_from_slice(&bad.to_le_bytes());
+        assert!(GlobalKvDeltaFrame::decode(&tampered).is_err(), "retain len {bad}");
     }
 }
 

@@ -27,8 +27,9 @@ use std::thread::JoinHandle;
 
 use fedattn::data::{gen_episode, partition, Segmentation};
 use fedattn::fedattn::{
-    ChannelTransport, FedSession, KvContribution, KvExchangePolicy, NodeHost,
-    SessionConfig, SyncSchedule, TcpTransport, Transport, TransportDriver,
+    ChannelTransport, FedSession, GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame,
+    KvContribution, KvExchangePolicy, NodeHost, SessionConfig, SessionReport,
+    SyncSchedule, TcpTransport, Transport, TransportDriver,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::runtime::Engine;
@@ -184,6 +185,9 @@ struct RunCfg {
     deadline: Option<f64>,
     /// Schedule override: `None` = the session_golden uniform H=2.
     never_sync: bool,
+    /// Delta-encoded downlink frames (the default).  `false` ships and
+    /// bills full broadcast frames — the pre-delta baseline.
+    delta: bool,
 }
 
 impl RunCfg {
@@ -196,6 +200,7 @@ impl RunCfg {
             dropout: 0.0,
             deadline: None,
             never_sync: false,
+            delta: true,
         }
     }
 }
@@ -241,10 +246,10 @@ fn spawn_hosts(
     (transports, handles)
 }
 
-/// One deterministic session fingerprint in the exact `session_golden`
-/// shape (same workload, seeds, links, and JSON key order), run either
-/// in-process or over a transport.
-fn fingerprint(engine: &Engine, mode: Mode, rc: RunCfg) -> Json {
+/// Run one deterministic session in the exact `session_golden` workload
+/// shape (same episode, seeds, links), in-process or over a transport,
+/// returning the full report for byte-level comparisons.
+fn run_session(engine: &Engine, mode: Mode, rc: RunCfg) -> SessionReport {
     let md = engine.manifest.model.clone();
     let n = 3usize;
     let mut rng = SplitMix64::new(31);
@@ -262,6 +267,7 @@ fn fingerprint(engine: &Engine, mode: Mode, rc: RunCfg) -> Json {
     cfg.decode_all = rc.decode_all;
     cfg.dropout_prob = rc.dropout;
     cfg.round_deadline_ms = rc.deadline;
+    cfg.delta_frames = rc.delta;
     let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
 
     let (rep, hosts) = match mode {
@@ -280,7 +286,14 @@ fn fingerprint(engine: &Engine, mode: Mode, rc: RunCfg) -> Json {
     for h in hosts {
         h.join().expect("node host thread panicked");
     }
+    rep
+}
 
+/// One deterministic session fingerprint in the exact `session_golden`
+/// shape (same workload, seeds, links, and JSON key order), run either
+/// in-process or over a transport.
+fn fingerprint(engine: &Engine, mode: Mode, rc: RunCfg) -> Json {
+    let rep = run_session(engine, mode, rc);
     let mut b = JsonBuilder::new()
         .str("policy", rc.name)
         .str("answer", &rep.answer)
@@ -410,6 +423,145 @@ fn deadline_zero_degrades_like_never_syncing() {
         b.to_string_compact(),
         "an all-late session must equal a never-syncing one"
     );
+}
+
+/// A delta downlink frame survives both transports bit-exactly and
+/// reassembles into the full frame it was cut from (host-side; no
+/// artifacts needed — the engine-gated differentials below pin the same
+/// thing end-to-end).
+#[test]
+fn delta_frame_survives_channel_and_tcp() {
+    let mut k0 = HostTensor::zeros(&[2, 1, 2]);
+    let mut k1 = HostTensor::zeros(&[2, 1, 2]);
+    for (i, x) in k0.data_mut().iter_mut().enumerate() {
+        *x = i as f32 + 0.25;
+    }
+    for (i, x) in k1.data_mut().iter_mut().enumerate() {
+        *x = -(i as f32) - 0.5;
+    }
+    let g = GlobalKv::pack(
+        &[
+            (&k0, &k0.clone(), &[0, 1][..], 2, &[true, false][..]),
+            (&k1, &k1.clone(), &[2, 3][..], 2, &[true, true][..]),
+        ],
+        4,
+    )
+    .unwrap();
+    let frame = GlobalKvFrame::from_global(1, &g);
+    let d = GlobalKvDeltaFrame::from_frame(&frame, 0, 0);
+    assert_eq!(d.payload_bytes(), frame.payload_bytes_for(0));
+    assert!(d.payload_bytes() < frame.full_payload_bytes());
+    let bytes = d.encode();
+
+    // Channel pair.
+    let (mut a, mut b) = ChannelTransport::pair();
+    a.send(&bytes).unwrap();
+    let got = GlobalKvDeltaFrame::decode(&b.recv().unwrap()).unwrap();
+    assert_eq!(got, d);
+
+    // TCP loopback.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload = bytes.clone();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::from_stream(stream).unwrap();
+        t.send(&payload).unwrap();
+    });
+    let mut client = TcpTransport::connect(addr).unwrap();
+    let got = GlobalKvDeltaFrame::decode(&client.recv().unwrap()).unwrap();
+    server.join().unwrap();
+    assert_eq!(got, d);
+
+    // Reassembly against attendee 0's own rows restores every visible
+    // row of the original frame.
+    let re = got.reassemble(k0.data(), k0.data(), 2).unwrap();
+    assert_eq!(re.meta, frame.meta);
+    assert_eq!(re.k, frame.k);
+}
+
+/// The tentpole differential: delta-frame sessions (channel *and* TCP)
+/// decode byte-identically to full-frame sessions across all six KV
+/// policies × workers {1, 4} — every participant's answer, not just the
+/// publisher's — while billing strictly fewer downlink bytes on every
+/// executed round (no cache miss ever occurs in-session: an attendee
+/// always contributed the round's fresh KV before its frame arrives, so
+/// equality could only appear on a cache-miss fallback round).
+#[test]
+fn delta_sessions_match_full_transcripts_and_shrink_downlink() {
+    let Some(engine) = engine() else { return };
+    for mode in [Mode::Channel, Mode::Tcp] {
+        let mode_name = match mode {
+            Mode::Channel => "channel",
+            _ => "tcp",
+        };
+        for (name, policy) in ALL_POLICIES {
+            for workers in [1usize, 4] {
+                let mut rc = RunCfg::new(name, policy);
+                rc.workers = workers;
+                rc.decode_all = true;
+                let mut full_rc = rc;
+                full_rc.delta = false;
+                let d = run_session(&engine, mode, rc);
+                let f = run_session(&engine, mode, full_rc);
+                let tag = format!("{mode_name}/{name}/workers={workers}");
+
+                // Decoded transcripts are byte-identical.
+                assert_eq!(d.answer, f.answer, "{tag}: publisher answer diverged");
+                assert_eq!(d.answers, f.answers, "{tag}: peer answers diverged");
+                assert_eq!(
+                    d.generated_tokens, f.generated_tokens,
+                    "{tag}: token count diverged"
+                );
+
+                // Uplink accounting is untouched by the downlink encoding.
+                assert_eq!(d.net.tx_bytes, f.net.tx_bytes, "{tag}: uplink diverged");
+                assert_eq!(d.net.round_bytes, f.net.round_bytes, "{tag}: round bytes diverged");
+                assert_eq!(d.net.rounds, f.net.rounds, "{tag}: round count diverged");
+                assert!(d.net.rounds > 0, "{tag}: no rounds executed");
+
+                // Downlink: delta ≤ full per round, strictly (attendees
+                // always re-receive at least their own never-empty
+                // contribution under full frames).
+                assert_eq!(d.net.round_rx_bytes.len(), f.net.round_rx_bytes.len(), "{tag}");
+                for (i, (dr, fr)) in
+                    d.net.round_rx_bytes.iter().zip(&f.net.round_rx_bytes).enumerate()
+                {
+                    assert!(
+                        dr < fr,
+                        "{tag}: round {i} delta downlink {dr} not below full {fr}"
+                    );
+                }
+                for p in 0..d.net.rx_bytes.len() {
+                    assert!(
+                        d.net.rx_bytes[p] <= f.net.rx_bytes[p],
+                        "{tag}: participant {p} delta rx exceeds full"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Delta frames on (the default) change nothing against the pre-delta
+/// in-process session: the default wire fingerprint — including every
+/// byte of the billing — still matches in-process exactly, and the full
+/// (non-delta) mode is itself wire ≡ in-process consistent.
+#[test]
+fn delta_default_keeps_wire_in_process_equivalence() {
+    let Some(engine) = engine() else { return };
+    for delta in [true, false] {
+        let mut rc = RunCfg::new("random", KvExchangePolicy::Random { ratio: 0.5 });
+        rc.decode_all = true;
+        rc.delta = delta;
+        let local = fingerprint(&engine, Mode::InProcess, rc);
+        let wire = fingerprint(&engine, Mode::Channel, rc);
+        assert_eq!(
+            local.to_string_compact(),
+            wire.to_string_compact(),
+            "wire diverged from in-process with delta={delta}"
+        );
+    }
 }
 
 /// A deadline can only shrink communication relative to no deadline:
