@@ -176,6 +176,34 @@ pub fn parse_delta_frames(args: &Args) -> anyhow::Result<Option<bool>> {
     Ok(None)
 }
 
+/// Node-host addresses from `--connect a1[,a2,...]` (wire sessions:
+/// participants connect round-robin to the list).  Returns `Ok(None)`
+/// when the flag is absent so callers keep their config default
+/// (`node.connect`, usually in-process); an empty list is an error, not
+/// a silent fallback.
+pub fn parse_connect(args: &Args) -> anyhow::Result<Option<Vec<String>>> {
+    let Some(raw) = args.opt("connect") else {
+        return Ok(None);
+    };
+    let hosts: Vec<String> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!hosts.is_empty(), "--connect needs at least one host:port");
+    Ok(Some(hosts))
+}
+
+/// Node-side engine artifact directory from `node --engine <dir>` — the
+/// node-resident compute flag: the host loads its *own* artifact set
+/// instead of the shared `--artifacts` path, as a real edge node (which
+/// never borrows the driver's engine) would.  Returns `None` when absent
+/// so callers fall back to `node.engine_dir`, then `artifacts_dir`.
+pub fn parse_node_engine(args: &Args) -> Option<std::path::PathBuf> {
+    args.opt("engine").map(std::path::PathBuf::from)
+}
+
 /// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
 /// when absent (callers fall back to TOML `serving.time_scale`, then
 /// their own default); non-positive or unparsable values are errors.
@@ -295,6 +323,26 @@ mod tests {
         );
         assert!(parse_time_scale(&parse(&["--time-scale", "0"])).is_err());
         assert!(parse_time_scale(&parse(&["--time-scale", "fast"])).is_err());
+    }
+
+    #[test]
+    fn connect_and_node_engine_parse() {
+        assert_eq!(parse_connect(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_connect(&parse(&["--connect", "127.0.0.1:7070"])).unwrap(),
+            Some(vec!["127.0.0.1:7070".to_string()])
+        );
+        assert_eq!(
+            parse_connect(&parse(&["--connect=a:1, b:2,"])).unwrap(),
+            Some(vec!["a:1".to_string(), "b:2".to_string()])
+        );
+        assert!(parse_connect(&parse(&["--connect", ","])).is_err());
+
+        assert_eq!(parse_node_engine(&parse(&[])), None);
+        assert_eq!(
+            parse_node_engine(&parse(&["--engine", "/mnt/edge/artifacts"])),
+            Some(std::path::PathBuf::from("/mnt/edge/artifacts"))
+        );
     }
 
     #[test]

@@ -4,5 +4,5 @@
 mod toml;
 mod system;
 
-pub use system::{FederationConfig, NetworkConfig, ServingConfig, SystemConfig};
+pub use system::{FederationConfig, NetworkConfig, NodeConfig, ServingConfig, SystemConfig};
 pub use toml::{TomlDoc, TomlError, TomlValue};

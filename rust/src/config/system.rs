@@ -123,6 +123,31 @@ impl Default for ServingConfig {
     }
 }
 
+/// Node-resident deployment knobs — both sides of the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    /// Node side: where `fedattn node` accepts driver connections
+    /// (`node.listen` / `--listen`).
+    pub listen: String,
+    /// Node side: artifact directory for the node's *own* engine
+    /// (`node.engine_dir` / `node --engine`).  `None` falls back to the
+    /// shared `artifacts_dir` — the single-machine demo; a real edge
+    /// deployment points each node host at its local artifact set, since
+    /// node-resident compute means the node never borrows the driver's
+    /// engine.
+    pub engine_dir: Option<PathBuf>,
+    /// Driver side: node-host addresses for wire sessions (`node.connect`
+    /// / `run --connect`).  Participants connect round-robin to the list;
+    /// `None` keeps sessions fully in-process.
+    pub connect: Option<Vec<String>>,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        Self { listen: "127.0.0.1:7070".to_string(), engine_dir: None, connect: None }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -132,6 +157,7 @@ pub struct SystemConfig {
     pub federation: FederationConfig,
     pub network: NetworkConfig,
     pub serving: ServingConfig,
+    pub node: NodeConfig,
 }
 
 impl Default for SystemConfig {
@@ -143,6 +169,7 @@ impl Default for SystemConfig {
             federation: FederationConfig::default(),
             network: NetworkConfig::default(),
             serving: ServingConfig::default(),
+            node: NodeConfig::default(),
         }
     }
 }
@@ -224,6 +251,26 @@ impl SystemConfig {
                 Some(doc.f64_array("network.bandwidths_mbps").ok_or_else(|| {
                     anyhow::anyhow!("network.bandwidths_mbps must be a numeric array")
                 })?);
+        }
+
+        c.node.listen = doc.str_or("node.listen", &c.node.listen).to_string();
+        if let Some(v) = doc.get("node.engine_dir") {
+            let dir = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("node.engine_dir must be a string path")
+            })?;
+            c.node.engine_dir = Some(PathBuf::from(dir));
+        }
+        if doc.get("node.connect").is_some() {
+            // Present but malformed must fail loudly — a silently dropped
+            // host list would quietly run the session in-process.
+            let hosts = doc.str_array("node.connect").ok_or_else(|| {
+                anyhow::anyhow!("node.connect must be an array of host:port strings")
+            })?;
+            anyhow::ensure!(
+                !hosts.is_empty(),
+                "node.connect must list at least one host:port"
+            );
+            c.node.connect = Some(hosts);
         }
 
         c.serving.engines = doc.usize_or("serving.engines", 1);
@@ -404,6 +451,36 @@ mod tests {
         let doc = TomlDoc::parse("[serving]\ntime_scale = 0.0").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[serving]\ntime_scale = \"fast\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn node_section_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.node, NodeConfig::default());
+        assert_eq!(c.node.listen, "127.0.0.1:7070");
+
+        let doc = TomlDoc::parse(
+            "[node]\nlisten = \"0.0.0.0:9000\"\nengine_dir = \"/mnt/edge/artifacts\"\n\
+             connect = [\"10.0.0.1:7070\", \"10.0.0.2:7070\"]",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.node.listen, "0.0.0.0:9000");
+        assert_eq!(c.node.engine_dir, Some(PathBuf::from("/mnt/edge/artifacts")));
+        assert_eq!(
+            c.node.connect,
+            Some(vec!["10.0.0.1:7070".to_string(), "10.0.0.2:7070".to_string()])
+        );
+
+        // Present-but-malformed must error, not silently fall back to an
+        // in-process session.
+        let doc = TomlDoc::parse("[node]\nconnect = \"10.0.0.1:7070\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[node]\nconnect = []").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[node]\nengine_dir = 7").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 

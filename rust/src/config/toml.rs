@@ -130,6 +130,18 @@ impl TomlDoc {
         }
     }
 
+    /// String array; `None` when the key is absent, not an array, or
+    /// contains non-string items.
+    pub fn str_array(&self, key: &str) -> Option<Vec<String>> {
+        match self.get(key)? {
+            TomlValue::Array(items) => items
+                .iter()
+                .map(|v| v.as_str().map(str::to_string))
+                .collect::<Option<Vec<String>>>(),
+            _ => None,
+        }
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(String::as_str)
     }
@@ -252,6 +264,22 @@ mod tests {
         assert_eq!(d.f64_array("missing"), None);
         let d = TomlDoc::parse("mixed = [1, \"a\"]").unwrap();
         assert_eq!(d.f64_array("mixed"), None);
+    }
+
+    #[test]
+    fn str_array_accessor() {
+        let d = TomlDoc::parse(
+            "hosts = [\"127.0.0.1:7070\", \"127.0.0.1:7071\"]\nn = 3",
+        )
+        .unwrap();
+        assert_eq!(
+            d.str_array("hosts"),
+            Some(vec!["127.0.0.1:7070".to_string(), "127.0.0.1:7071".to_string()])
+        );
+        assert_eq!(d.str_array("n"), None);
+        assert_eq!(d.str_array("missing"), None);
+        let d = TomlDoc::parse("mixed = [\"a\", 1]").unwrap();
+        assert_eq!(d.str_array("mixed"), None);
     }
 
     #[test]

@@ -11,11 +11,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
 use crate::data::{partition, Segmentation, WorkloadTrace};
-use crate::fedattn::{FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule};
+use crate::fedattn::{
+    FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule, TcpTransport,
+    Transport, TransportDriver,
+};
 use crate::metrics::em_score;
 use crate::net::NetSim;
 use crate::runtime::Engine;
@@ -54,6 +57,12 @@ pub struct CoordinatorConfig {
     /// Compress trace inter-arrival gaps by this factor (benches use > 1 to
     /// avoid waiting out real think-time).
     pub time_scale: f64,
+    /// Node-resident wire mode (`node.connect` / `--connect`): each served
+    /// session drives its participants over TCP transports connected
+    /// round-robin to these node hosts — every block forward pass runs at
+    /// the nodes, and the coordinator keeps only planning, aggregation and
+    /// billing.  `None` (the default) serves fully in-process sessions.
+    pub node_addrs: Option<Vec<String>>,
 }
 
 impl CoordinatorConfig {
@@ -80,6 +89,7 @@ impl CoordinatorConfig {
                 .then(|| sc.network.links(sc.federation.participants)),
             seed: sc.seed,
             time_scale: sc.serving.time_scale.unwrap_or(1.0),
+            node_addrs: sc.node.connect.clone(),
         }
     }
 
@@ -275,11 +285,37 @@ impl Coordinator {
         }
         let net = NetSim::new(cfg.topology, links, task_seed);
         let t0 = Instant::now();
-        let mut session = FedSession::new(&self.engine, &part, scfg, net)?;
-        if let Some(pool) = &self.session_pool {
-            session = session.with_shared_pool(Arc::clone(pool));
-        }
-        let rep = session.run()?;
+        let rep = match cfg.node_addrs.as_deref() {
+            // Node-resident wire mode: the participants' block compute
+            // runs at the configured node hosts; the coordinator session
+            // is the message-turn driver.  The socket wait is bounded by
+            // the round deadline (plus grace) rather than the 60 s
+            // default, matching what the handshake announces node-side.
+            Some(addrs) if !addrs.is_empty() => {
+                let io_timeout = crate::fedattn::transport::read_timeout_for_deadline(
+                    scfg.round_deadline_ms,
+                );
+                let transports: Vec<Box<dyn Transport>> = (0..cfg.participants)
+                    .map(|p| {
+                        let addr = &addrs[p % addrs.len()];
+                        TcpTransport::connect(addr)
+                            .and_then(|t| t.with_read_timeout(io_timeout))
+                            .map(|t| Box::new(t) as Box<dyn Transport>)
+                            .with_context(|| {
+                                format!("connecting participant {p} to node host {addr}")
+                            })
+                    })
+                    .collect::<Result<_>>()?;
+                TransportDriver::new(&self.engine, &part, scfg, net, transports)?.run()?
+            }
+            _ => {
+                let mut session = FedSession::new(&self.engine, &part, scfg, net)?;
+                if let Some(pool) = &self.session_pool {
+                    session = session.with_shared_pool(Arc::clone(pool));
+                }
+                session.run()?
+            }
+        };
         let service_ms = t0.elapsed().as_secs_f64() * 1e3;
         Ok(TaskResult {
             task_id: 0,

@@ -21,18 +21,31 @@
 //! schedules each uplink's arrival and late contributions are excluded
 //! from aggregation and billing (partial aggregation); without one, no
 //! arrival is ever drawn and the loop is byte-identical to the
-//! pre-deadline driver.  A wire deployment attaches one
-//! [`RemoteParticipant`] per node
+//! pre-deadline driver.
+//!
+//! A wire deployment attaches one [`RemoteParticipant`] per node
 //! ([`SessionDriver::new_with_remotes`], usually via
-//! [`TransportDriver`]): the protocol plane then crosses real
-//! transports while the compute plane stays engine-colocated.  Wire
-//! rounds are **concurrent** — contribution requests fan out to every
-//! node before any reply is read (pool tasks when `workers > 1`), so the
-//! round costs the slowest link rather than the sum — and the downlink
-//! ships **delta frames** by default ([`SessionConfig::delta_frames`]):
-//! each attendee receives only the transmitted rows it does not already
-//! hold.  Collection order is pinned to participant index, so both
-//! optimizations are byte-invisible to the golden fixtures.
+//! [`TransportDriver`]): the session then runs **node-resident** — every
+//! block forward pass (hidden states, QKV projection, attendee
+//! attention, the local path, decode) executes at the node host on its
+//! own engine, and only protocol messages cross the wire:
+//! `KvContribution` up, `GlobalKvDeltaFrame`/`GlobalKvFrame` down,
+//! `TokenBroadcast` out, plus the hidden-state-free control plane
+//! (`Join`/`Advance*`/`RoundMass`).  The driver keeps planning (row
+//! selection, deadlines, aggregation, billing) and sees only the
+//! transmitted KV rows — untransmitted rows stay zero on its side, which
+//! is invisible by construction (they are masked for every other
+//! attendee, and an attendee restores its *own* rows from the fresh KV
+//! it kept).  Wire rounds are **concurrent** — block turns fan out to
+//! every node before any reply is read, so the round costs the slowest
+//! node rather than the sum — and the downlink ships **delta frames** by
+//! default ([`SessionConfig::delta_frames`]): each attendee receives
+//! only the transmitted rows it does not already hold.  Collection order
+//! is pinned to participant index, so both optimizations are
+//! byte-invisible to the golden fixtures.  A node whose transport fails
+//! mid-session is *demoted* — excluded from the remaining rounds exactly
+//! like a deadline miss, its decode answer reported absent — without
+//! killing the session.
 //!
 //! Device-resident execution (shared per-round KV uploads, frozen decode
 //! caches + `[R]` tails) and pool-parallel per-participant loops carry
@@ -74,7 +87,8 @@ pub struct SessionConfig {
     pub max_new_tokens: usize,
     pub seed: u64,
     /// Collect every participant's final hidden states (error analysis /
-    /// divergence metrics; costs memory, off for serving).
+    /// divergence metrics; costs memory, off for serving).  Rejected in
+    /// wire mode: hidden states never leave their node.
     pub record_hidden: bool,
     /// Keep KV caches and decode a response for *every* participant (the
     /// paper's Fig. 5 reports mean/min/max EM across participants).  The
@@ -172,7 +186,8 @@ pub struct SessionReport {
     pub answer: String,
     pub generated_tokens: usize,
     /// Per-participant answers (only participants that kept caches decode;
-    /// others are `None`).  `answers[publisher]` equals `answer`.
+    /// others — and wire-mode nodes demoted by transport loss — are
+    /// `None`).  `answers[publisher]` equals `answer`.
     pub answers: Vec<Option<String>>,
     pub net: NetReport,
     pub prefill_ms: f64,
@@ -199,115 +214,15 @@ where
     outs.into_iter().map(|r| r.map_err(anyhow::Error::msg)).collect()
 }
 
-/// Collect one round's uplink contributions from transport-backed nodes
-/// **concurrently**: every request is issued before any reply is read, so
-/// the wall-clock cost of the wire round is the slowest node's round trip
-/// rather than the sum over nodes.
-///
-/// With a pool, each node's full round trip (encode request → send →
-/// await reply → decode) runs as its own task via [`Pool::scope_map`],
-/// overlapping serialization work too; without one, the driver fans all
-/// requests out first and then drains the replies.  Either way results
-/// are collected **by participant index, never arrival order** — the
-/// aggregation input (and thus the whole session) is deterministic, and
-/// late nodes were already demoted by the simulated per-round deadline
-/// before any request went out.
-#[allow(clippy::too_many_arguments)]
-fn collect_remote_contributions(
-    pool: Option<&Arc<Pool>>,
-    remotes: &mut Vec<RemoteParticipant>,
-    block: usize,
-    epoch: usize,
-    ks: &Arc<Vec<HostTensor>>,
-    vs: &Arc<Vec<HostTensor>>,
-    tx_flags: &[Vec<bool>],
-    on_time: &[bool],
-    scores: &[Option<Vec<f64>>],
-) -> Result<Vec<Option<KvContribution>>> {
-    let n = remotes.len();
-    for r in remotes.iter_mut() {
-        r.begin_round(epoch);
-    }
-    match pool {
-        Some(pool) if n > 1 => {
-            // Move each proxy into a slot its pool task takes exactly
-            // once and puts back when the round trip completes.
-            let slots: Arc<Vec<Mutex<Option<RemoteParticipant>>>> =
-                Arc::new(remotes.drain(..).map(|r| Mutex::new(Some(r))).collect());
-            let ks_in = Arc::clone(ks);
-            let vs_in = Arc::clone(vs);
-            let tx_in: Arc<Vec<Vec<bool>>> = Arc::new(tx_flags.to_vec());
-            let on_in: Arc<Vec<bool>> = Arc::new(on_time.to_vec());
-            let scores_in: Arc<Vec<Option<Vec<f64>>>> = Arc::new(scores.to_vec());
-            let slots_in = Arc::clone(&slots);
-            let outs = run_parallel(Some(pool), n, move |p| {
-                let mut r = slots_in[p]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .ok_or("remote slot taken twice")?;
-                let res = if on_in[p] {
-                    r.contribute(block, &ks_in[p], &vs_in[p], &tx_in[p], scores_in[p].as_deref())
-                        .map(Some)
-                        .map_err(|e| format!("{e:#}"))
-                } else {
-                    Ok(None)
-                };
-                *slots_in[p].lock().unwrap() = Some(r);
-                res
-            });
-            // Put the proxies back (index order) *before* surfacing any
-            // error, so a failed round can still shut the hosts down.
-            // Every task returns its proxy to its slot before its result
-            // is sent, and scope_map has collected all results by now, so
-            // the slots are settled — but a worker may still be dropping
-            // its closure's Arc clone, so read through the Arc instead of
-            // unwrapping it.  A panicked task may have dropped its proxy;
-            // the survivors are enough for shutdown and the error aborts
-            // the session anyway.
-            let mut restored = Vec::with_capacity(n);
-            for slot in slots.iter() {
-                if let Some(r) = slot.lock().unwrap().take() {
-                    restored.push(r);
-                }
-            }
-            *remotes = restored;
-            outs
-        }
-        _ => {
-            // No pool: still overlap the network by issuing every request
-            // up front; replies queue on their own per-node transports
-            // while earlier ones are read.
-            for p in 0..n {
-                if on_time[p] {
-                    remotes[p].contribute_send(
-                        block,
-                        &ks[p],
-                        &vs[p],
-                        &tx_flags[p],
-                        scores[p].as_deref(),
-                    )?;
-                }
-            }
-            let mut out = Vec::with_capacity(n);
-            for p in 0..n {
-                out.push(if on_time[p] {
-                    Some(remotes[p].contribute_recv(block)?)
-                } else {
-                    None
-                });
-            }
-            Ok(out)
-        }
-    }
-}
-
 /// Drives one collaborative task through the engine by exchanging typed
 /// round messages between [`ParticipantNode`]s.
 pub struct SessionDriver<'a> {
     engine: &'a Engine,
     cfg: SessionConfig,
-    /// One node per participant, each owning exactly its own state.
+    /// One node per participant, each owning exactly its own state.  In
+    /// wire mode these hold only the shard metadata (ids, positions,
+    /// valid counts) the driver plans with — the authoritative hidden
+    /// states and caches live at the node hosts.
     nodes: Vec<ParticipantNode>,
     /// Effective attendance after dropout (== `cfg.schedule` when
     /// `dropout_prob` is 0).
@@ -323,12 +238,14 @@ pub struct SessionDriver<'a> {
     /// Worker pool for the per-participant loops (`workers > 1`).
     pool: Option<Arc<Pool>>,
     /// Wire deployment: one transport-backed proxy per participant.  When
-    /// set, every protocol-plane step (contribution uplink, frame/local
-    /// downlink, decode) crosses the proxy's transport instead of
-    /// touching the local node's caches; the compute plane (hidden
-    /// states, QKV, attention) stays engine-colocated.  `None` is the
-    /// fully in-process session.
+    /// set, the session is node-resident — every block forward pass and
+    /// the decode run at the node hosts, and each round is a set of
+    /// protocol-message turns.  `None` is the fully in-process session.
     remotes: Option<Vec<RemoteParticipant>>,
+    /// Wire mode: which nodes still have a working transport.  A node
+    /// whose link fails is demoted for the rest of the session (treated
+    /// like a permanent deadline miss).  Empty in-process.
+    wire_alive: Vec<bool>,
 }
 
 impl<'a> SessionDriver<'a> {
@@ -408,16 +325,17 @@ impl<'a> SessionDriver<'a> {
             relevance,
             pool,
             remotes: None,
+            wire_alive: Vec::new(),
         })
     }
 
-    /// A wire deployment of the session: one [`Transport`] per
-    /// participant, each leading to a node host (see
-    /// [`transport::NodeHost`]) that owns that participant's decode
-    /// caches and speaks the protocol messages.  The driver keeps the
-    /// compute plane; local caches are dropped so the transported state
-    /// is authoritative.  Sends each host its `Init` frame before
-    /// returning.
+    /// A node-resident wire deployment of the session: one [`Transport`]
+    /// per participant, each leading to a node host (see
+    /// [`transport::NodeHost`]) that owns that participant's *entire*
+    /// state — engine, hidden states, decode caches.  Runs the
+    /// hidden-state-free `Join` handshake with every host (token ids and
+    /// positions only; the host re-embeds locally) and validates that
+    /// each host rebuilt the same shard against the same model geometry.
     ///
     /// [`transport::NodeHost`]: crate::fedattn::transport::NodeHost
     pub fn new_with_remotes(
@@ -427,6 +345,10 @@ impl<'a> SessionDriver<'a> {
         net: NetSim,
         transports: Vec<Box<dyn Transport>>,
     ) -> Result<Self> {
+        anyhow::ensure!(
+            !cfg.record_hidden,
+            "record_hidden is unsupported over the wire: hidden states never leave their node"
+        );
         let mut driver = Self::new(engine, partition, cfg, net)?;
         let n = driver.nodes.len();
         anyhow::ensure!(
@@ -435,20 +357,25 @@ impl<'a> SessionDriver<'a> {
             transports.len()
         );
         let md = &engine.manifest.model;
-        let cache_capacity = engine.manifest.decode_cache;
         let mut remotes = Vec::with_capacity(n);
+        // Fan every Join out before collecting any ack: the hosts embed
+        // their shards concurrently.
         for (p, t) in transports.into_iter().enumerate() {
             let keep = p == driver.publisher || driver.cfg.decode_all;
             let node = &mut driver.nodes[p];
-            // The remote host owns the authoritative caches.
+            // The remote host owns the authoritative caches; the local
+            // mirror keeps only the planning metadata.
             node.caches = Vec::new();
-            let mut rp =
-                RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
+            let mut rp = RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
             rp.set_delta_frames(driver.cfg.delta_frames);
-            rp.init(md.n_layers, md.n_kv_heads, md.head_dim, cache_capacity)?;
+            rp.join_send(&node.ids, driver.cfg.round_deadline_ms)?;
             remotes.push(rp);
         }
+        for rp in remotes.iter_mut() {
+            rp.join_recv(md.n_layers, md.n_kv_heads, md.head_dim)?;
+        }
         driver.remotes = Some(remotes);
+        driver.wire_alive = vec![true; n];
         Ok(driver)
     }
 
@@ -466,8 +393,29 @@ impl<'a> SessionDriver<'a> {
         }
     }
 
+    /// Demote wire node `p` for the rest of the session: its transport
+    /// failed, so it is excluded from every remaining round exactly like
+    /// a permanent deadline miss (PR 4's partial aggregation) instead of
+    /// killing the session.
+    fn demote(&mut self, p: usize, why: &anyhow::Error) {
+        if self.wire_alive[p] {
+            self.wire_alive[p] = false;
+            eprintln!("[fedattn] node {p} demoted for the rest of the session: {why:#}");
+        }
+    }
+
     /// Run the federated prefill (Alg. 1 lines 2–14).
     pub fn prefill(&mut self) -> Result<PrefillOutput> {
+        if self.remotes.is_some() {
+            self.prefill_wire()
+        } else {
+            self.prefill_local()
+        }
+    }
+
+    /// In-process prefill: the driver runs every node's forward pass on
+    /// its own engine (pool-parallel).
+    fn prefill_local(&mut self) -> Result<PrefillOutput> {
         let t0 = std::time::Instant::now();
         let md = self.engine.manifest.model.clone();
         let n = self.nodes.len();
@@ -489,10 +437,6 @@ impl<'a> SessionDriver<'a> {
                 _ => None,
             };
 
-        // Executed-sync-round ordinal: the round-scoped "epoch" stamped on
-        // contribute requests and delta downlink frames so a node can tie
-        // a delta's retain-list to the fresh-KV generation it references.
-        let mut epoch = 0usize;
         for m in 0..n_layers {
             let attend = self.schedule.attend[m].clone();
 
@@ -565,19 +509,11 @@ impl<'a> SessionDriver<'a> {
                 for (p, (xo, k, v)) in outs.into_iter().enumerate() {
                     self.nodes[p].set_hidden(xo);
                     if self.keeps_caches_for(p) {
-                        match self.remotes.as_mut() {
-                            Some(r) => r[p].absorb_local(m, &k, &v)?,
-                            None => self.nodes[p].absorb_local(m, &k, &v)?,
-                        }
+                        self.nodes[p].absorb_local(m, &k, &v)?;
                     }
                 }
                 continue;
             };
-
-            // This block executes a sync round: stamp it with the next
-            // round-scoped epoch.
-            let round_epoch = epoch;
-            epoch += 1;
 
             // Sync block: everyone produces (q,)k,v; attendees do global
             // attention over the aggregated KV.  Phase 1 is pool-parallel.
@@ -614,65 +550,31 @@ impl<'a> SessionDriver<'a> {
                     self.nodes[p].set_hidden(xo);
                 }
             }
-            // Shared for the (possibly pool-parallel) contribution
-            // round-trips below and the aggregation after them.
-            let ks = Arc::new(ks);
-            let vs = Arc::new(vs);
 
             // Round messages: each on-time node packages its uplink
-            // KvContribution — over the wire when remotes are attached,
-            // so the message has really crossed a transport before its
-            // payload size is billed.  A late node contributes nothing
-            // this round (its rows are excluded from aggregation, the
-            // FL-straggler partial-aggregation analogue).  The message
-            // carries the real row payload so accounting is measured,
-            // not estimated.
-            //
-            // Remote collection is concurrent: every node receives its
-            // contribution request before any reply is read, so the wire
-            // round waits for the slowest node instead of summing all of
-            // them.  Results are collected by participant index (never
-            // arrival order), so aggregation — and therefore the whole
-            // session — is deterministic.  The in-process path keeps its
-            // sequential loop: node contributions are pure and the
-            // `session_golden` fixtures pin that path byte-for-byte.
-            let contributions: Vec<Option<KvContribution>> = match self.remotes.as_mut() {
-                Some(remotes) => {
-                    // Owned score copies so the pool tasks' closures can be
-                    // 'static; the wire path copies the K/V payloads anyway.
-                    let scores_by_p: Vec<Option<Vec<f64>>> = (0..n)
-                        .map(|p| self.relevance.as_ref().map(|t| t.scores(p).to_vec()))
-                        .collect();
-                    collect_remote_contributions(
-                        self.pool.as_ref(),
-                        remotes,
-                        m,
-                        round_epoch,
-                        &ks,
-                        &vs,
-                        &tx_flags,
-                        &on_time,
-                        &scores_by_p,
-                    )?
-                }
-                None => {
-                    let mut out = Vec::with_capacity(n);
-                    for p in 0..n {
-                        if !on_time[p] {
-                            out.push(None);
-                            continue;
-                        }
-                        let scores = self.relevance.as_ref().map(|t| t.scores(p));
-                        out.push(Some(self.nodes[p].contribute(
-                            m,
-                            &ks[p],
-                            &vs[p],
-                            &tx_flags[p],
-                            scores,
-                        )?));
+            // KvContribution.  A late node contributes nothing this round
+            // (its rows are excluded from aggregation, the FL-straggler
+            // partial-aggregation analogue).  The message carries the
+            // real row payload so accounting is measured, not estimated.
+            // Node contributions are pure and the `session_golden`
+            // fixtures pin this sequential loop byte-for-byte.
+            let contributions: Vec<Option<KvContribution>> = {
+                let mut out = Vec::with_capacity(n);
+                for p in 0..n {
+                    if !on_time[p] {
+                        out.push(None);
+                        continue;
                     }
-                    out
+                    let scores = self.relevance.as_ref().map(|t| t.scores(p));
+                    out.push(Some(self.nodes[p].contribute(
+                        m,
+                        &ks[p],
+                        &vs[p],
+                        &tx_flags[p],
+                        scores,
+                    )?));
                 }
+                out
             };
 
             // Aggregate the on-time contributions into the global KV
@@ -826,23 +728,15 @@ impl<'a> SessionDriver<'a> {
             // Decode caches for this block (paper §IV-C): nodes that
             // (effectively) attended absorb the aggregated frame
             // (restricted to what they could see); others — including
-            // deadline stragglers — absorb their own local KV.  In wire
-            // mode the frame/local rows cross the transport to the host
-            // that owns the authoritative caches.
+            // deadline stragglers — absorb their own local KV.
             for p in 0..n {
                 if !self.keeps_caches_for(p) {
                     continue;
                 }
                 if attend[p] {
-                    match self.remotes.as_mut() {
-                        Some(r) => r[p].absorb_frame(m, &gkv)?,
-                        None => self.nodes[p].absorb_frame(m, &gkv)?,
-                    }
+                    self.nodes[p].absorb_frame(m, &gkv)?;
                 } else {
-                    match self.remotes.as_mut() {
-                        Some(r) => r[p].absorb_local(m, &ks[p], &vs[p])?,
-                        None => self.nodes[p].absorb_local(m, &ks[p], &vs[p])?,
-                    }
+                    self.nodes[p].absorb_local(m, &ks[p], &vs[p])?;
                 }
             }
         }
@@ -850,6 +744,323 @@ impl<'a> SessionDriver<'a> {
         let hidden = self.collect_hidden();
         Ok(PrefillOutput {
             hidden,
+            positions: self.nodes.iter().map(|s| s.pos.clone()).collect(),
+            net: self.net.report().clone(),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Wire prefill: take the proxies out of `self` for the round loop
+    /// and put them back whatever happens, so a failed session can still
+    /// shut the surviving hosts down.
+    fn prefill_wire(&mut self) -> Result<PrefillOutput> {
+        let mut remotes = self.remotes.take().expect("wire prefill without remotes");
+        let out = self.wire_rounds(&mut remotes);
+        self.remotes = Some(remotes);
+        out
+    }
+
+    /// Node-resident prefill: the same planning, aggregation and billing
+    /// as [`SessionDriver::prefill_local`] — identical RNG draws in
+    /// identical order — but every block forward pass is a message turn
+    /// executed at the node hosts.  The driver never touches hidden
+    /// states; it sees only the transmitted KV rows, scattered into
+    /// zeroed per-participant tensors for aggregation (an untransmitted
+    /// row's zeros are invisible: masked for every other attendee, and
+    /// the owner restores its own rows node-side from the fresh KV it
+    /// kept).  Any transport failure demotes that node — folded into the
+    /// next plan as a deadline miss — instead of killing the round.
+    fn wire_rounds(&mut self, remotes: &mut [RemoteParticipant]) -> Result<PrefillOutput> {
+        let t0 = std::time::Instant::now();
+        let md = self.engine.manifest.model.clone();
+        let n = self.nodes.len();
+        let n_layers = md.n_layers;
+        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
+        let row_len = md.n_kv_heads * md.head_dim;
+        let track_mass = self.relevance.is_some();
+
+        let budgets: Option<Vec<usize>> =
+            match (&self.cfg.kv_row_budgets, self.cfg.kv_policy) {
+                (Some(b), _) => Some(b.clone()),
+                (None, KvExchangePolicy::ByteBudget { bytes_per_round }) => {
+                    Some(crate::net::allocate_row_budgets(
+                        self.net.links(),
+                        bytes_per_round / row_bytes_usize.max(1),
+                    ))
+                }
+                _ => None,
+            };
+
+        // Executed-sync-round ordinal: stamped on sync turns and delta
+        // downlink frames so a node can tie a delta's retain-list to the
+        // fresh-KV generation it references.
+        let mut epoch = 0usize;
+        for m in 0..n_layers {
+            let attend = self.schedule.attend[m].clone();
+
+            // Identical planning to the in-process driver (same RNG draws
+            // in the same order, for every participant — including
+            // demoted ones, so the session stream never forks).  A
+            // demoted node is then folded in exactly like a deadline
+            // miss: not billed, not aggregated, not attending.
+            let plan = if attend.iter().any(|&b| b) {
+                let mut tx_flags: Vec<Vec<bool>> = Vec::with_capacity(n);
+                for p in 0..n {
+                    let ctx = TxContext {
+                        who: p,
+                        publisher: self.publisher,
+                        len: self.nodes[p].valid,
+                        row_bytes: row_bytes_usize,
+                        relevance: self.relevance.as_ref().map(|t| t.scores(p)),
+                        row_budget: budgets.as_ref().map(|b| b[p]),
+                    };
+                    tx_flags.push(self.aggregator.select(&ctx, &mut self.rng));
+                }
+                let payloads: Vec<u64> = tx_flags
+                    .iter()
+                    .map(|tx| {
+                        tx.iter().filter(|&&b| b).count() as u64 * row_bytes_usize as u64
+                    })
+                    .collect();
+                let (on_time, arrivals) = match self.cfg.round_deadline_ms {
+                    Some(d) => {
+                        let arr = self.net.uplink_arrivals(&payloads);
+                        (arr.iter().map(|&a| a <= d).collect::<Vec<bool>>(), Some(arr))
+                    }
+                    None => (vec![true; n], None),
+                };
+                let on_time: Vec<bool> = on_time
+                    .iter()
+                    .zip(&self.wire_alive)
+                    .map(|(&o, &a)| o && a)
+                    .collect();
+                let attend_eff: Vec<bool> =
+                    attend.iter().zip(&on_time).map(|(&a, &o)| a && o).collect();
+                attend_eff
+                    .iter()
+                    .any(|&b| b)
+                    .then_some((tx_flags, on_time, arrivals, attend_eff))
+            } else {
+                None
+            };
+
+            let Some((tx_flags, mut on_time, arrivals, mut attend_eff)) = plan else {
+                // No exchange at this block (nobody scheduled, everyone
+                // late, or all scheduled attendees demoted): every
+                // surviving node runs the local path at home.
+                for p in 0..n {
+                    if !self.wire_alive[p] {
+                        continue;
+                    }
+                    if let Err(e) = remotes[p].advance_local(m) {
+                        self.demote(p, &e);
+                    }
+                }
+                continue;
+            };
+
+            let round_epoch = epoch;
+            epoch += 1;
+
+            // Fan this round's block turns out to every surviving node
+            // before reading any reply: the nodes compute concurrently,
+            // so the wire round costs the slowest node rather than the
+            // sum.  On-time nodes get the sync turn (attendee or
+            // contribute-only); late nodes run the local path.
+            for p in 0..n {
+                if !self.wire_alive[p] {
+                    continue;
+                }
+                remotes[p].begin_round(round_epoch);
+                let sent = if on_time[p] {
+                    let scores: Option<Vec<f32>> = self
+                        .relevance
+                        .as_ref()
+                        .map(|t| t.scores(p).iter().map(|&s| s as f32).collect());
+                    remotes[p].advance_sync(
+                        m,
+                        attend_eff[p],
+                        attend_eff[p] && track_mass,
+                        &tx_flags[p],
+                        scores,
+                    )
+                } else {
+                    remotes[p].advance_local(m)
+                };
+                if let Err(e) = sent {
+                    self.demote(p, &e);
+                    on_time[p] = false;
+                    attend_eff[p] = false;
+                }
+            }
+
+            // Collect the uplink contributions by participant index
+            // (never arrival order), so aggregation — and the session —
+            // stays deterministic.
+            let mut contributions: Vec<Option<KvContribution>> = Vec::with_capacity(n);
+            for p in 0..n {
+                if !(self.wire_alive[p] && on_time[p]) {
+                    contributions.push(None);
+                    continue;
+                }
+                match remotes[p].contribute_recv(m) {
+                    Ok(c) => contributions.push(Some(c)),
+                    Err(e) => {
+                        self.demote(p, &e);
+                        on_time[p] = false;
+                        attend_eff[p] = false;
+                        contributions.push(None);
+                    }
+                }
+            }
+
+            // Scatter each contribution's transmitted rows into a zeroed
+            // `[valid, Hkv, hd]` tensor for aggregation.  Untransmitted
+            // rows stay zero on the driver — their values never crossed
+            // the wire.  A malformed contribution is a protocol
+            // violation: the node is demoted and its rows excluded.
+            let mut ks: Vec<HostTensor> = Vec::with_capacity(n);
+            let mut vs: Vec<HostTensor> = Vec::with_capacity(n);
+            for p in 0..n {
+                let valid = self.nodes[p].valid;
+                let mut k = HostTensor::zeros(&[valid.max(1), md.n_kv_heads, md.head_dim]);
+                let mut v = HostTensor::zeros(&[valid.max(1), md.n_kv_heads, md.head_dim]);
+                let mut scattered = false;
+                if let Some(c) = contributions[p].as_ref() {
+                    let flagged: Vec<usize> = tx_flags[p]
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, &b)| b.then_some(i))
+                        .collect();
+                    let good = c.kv_heads == md.n_kv_heads
+                        && c.head_dim == md.head_dim
+                        && c.k.len() == flagged.len() * row_len
+                        && c.v.len() == c.k.len();
+                    if good {
+                        for (j, &i) in flagged.iter().enumerate() {
+                            k.row_mut(i)
+                                .copy_from_slice(&c.k[j * row_len..(j + 1) * row_len]);
+                            v.row_mut(i)
+                                .copy_from_slice(&c.v[j * row_len..(j + 1) * row_len]);
+                        }
+                        scattered = true;
+                    }
+                }
+                if contributions[p].is_some() && !scattered {
+                    self.demote(
+                        p,
+                        &anyhow::anyhow!("contribution geometry does not match the plan"),
+                    );
+                    on_time[p] = false;
+                    attend_eff[p] = false;
+                    contributions[p] = None;
+                }
+                ks.push(k);
+                vs.push(v);
+            }
+
+            // Aggregate the received contributions into the global KV;
+            // late/demoted participants' rows are excluded entirely
+            // (valid = 0 keeps the owner numbering stable).
+            let rows_total: usize = (0..n)
+                .map(|p| if on_time[p] { self.nodes[p].valid } else { 0 })
+                .sum();
+            let g_pad = self.engine.manifest.pick_g(rows_total)?;
+            let parts_refs: Vec<PartRows<'_>> = (0..n)
+                .map(|p| {
+                    (
+                        &ks[p],
+                        &vs[p],
+                        self.nodes[p].pos.as_slice(),
+                        if on_time[p] { self.nodes[p].valid } else { 0 },
+                        tx_flags[p].as_slice(),
+                    )
+                })
+                .collect();
+            let gkv = self.aggregator.aggregate(
+                &parts_refs,
+                g_pad,
+                self.relevance.as_ref().map(|t| t.all_scores()),
+            )?;
+
+            // Billing: same single source of truth — the encoded
+            // contribution payloads that really crossed a transport.
+            let tx_bytes: Vec<u64> = contributions
+                .iter()
+                .map(|c| c.as_ref().map_or(0, |c| c.payload_bytes()))
+                .collect();
+            #[cfg(debug_assertions)]
+            {
+                let row_bytes = row_bytes_usize as u64;
+                let from_pack: Vec<u64> = gkv
+                    .tx_rows_by_owner(n)
+                    .iter()
+                    .map(|&r| r as u64 * row_bytes)
+                    .collect();
+                debug_assert_eq!(tx_bytes, from_pack, "uplink bytes drifted from pack");
+            }
+            let rx_full: Option<Vec<u64>> = (!self.cfg.delta_frames)
+                .then(|| vec![gkv.rows() as u64 * row_bytes_usize as u64; n]);
+            match (&arrivals, &rx_full) {
+                (Some(arr), None) => {
+                    self.net.exchange_round_scheduled(&tx_bytes, &attend_eff, arr)
+                }
+                (None, None) => self.net.exchange_round(&tx_bytes, &attend_eff),
+                (Some(arr), Some(rx)) => self.net.exchange_round_scheduled_with_downlink(
+                    &tx_bytes,
+                    &attend_eff,
+                    arr,
+                    rx,
+                ),
+                (None, Some(rx)) => {
+                    self.net.exchange_round_with_downlink(&tx_bytes, &attend_eff, rx)
+                }
+            };
+
+            // Downlink: ship the aggregated round to every surviving
+            // attendee (delta-encoded against the fresh KV it holds when
+            // the knob is on); the node runs the global attention — and
+            // absorbs its decode-cache rows — at home.
+            for p in 0..n {
+                if !(self.wire_alive[p] && attend_eff[p]) {
+                    continue;
+                }
+                if let Err(e) = remotes[p].send_frame(m, &gkv) {
+                    self.demote(p, &e);
+                    attend_eff[p] = false;
+                }
+            }
+
+            // Relevance feedback: collect per-row attention masses from
+            // the attendees in participant order with a sequential f64
+            // accumulation — the same reduction order as the in-process
+            // driver, so the tracker state is bit-identical.
+            if track_mass {
+                let rows = gkv.rows();
+                let mut acc = vec![0.0f64; rows];
+                for p in 0..n {
+                    if !(self.wire_alive[p] && attend_eff[p]) {
+                        continue;
+                    }
+                    match remotes[p].recv_mass(m, rows) {
+                        Ok(mass) => {
+                            for (a, x) in acc.iter_mut().zip(&mass) {
+                                *a += x;
+                            }
+                        }
+                        Err(e) => self.demote(p, &e),
+                    }
+                }
+                if let Some(tr) = self.relevance.as_mut() {
+                    tr.observe(&gkv.meta, &acc);
+                }
+            }
+        }
+
+        Ok(PrefillOutput {
+            // record_hidden is rejected for wire sessions up front:
+            // hidden states never leave their node.
+            hidden: vec![None; n],
             positions: self.nodes.iter().map(|s| s.pos.clone()).collect(),
             net: self.net.report().clone(),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -873,17 +1084,23 @@ impl<'a> SessionDriver<'a> {
 
     /// Greedy decode from participant `p`'s KV caches (requires that `p`
     /// kept caches).  Returns the decoded text and token count.  In wire
-    /// mode the decode runs at `p`'s node host (which owns the caches and
-    /// its own engine) and the tokens stream back as `TokenBroadcast`
-    /// frames.
+    /// mode the decode runs at `p`'s node host (which owns the caches,
+    /// the final hidden state and its own engine) and the tokens stream
+    /// back as `TokenBroadcast` frames.
     pub fn decode_participant(&mut self, p: usize) -> Result<(String, usize)> {
         anyhow::ensure!(self.keeps_caches_for(p), "participant {p} has no caches");
-        let h_last = self.nodes[p].last_hidden();
         if let Some(remotes) = self.remotes.as_mut() {
+            anyhow::ensure!(
+                self.wire_alive[p],
+                "participant {p} was demoted (transport lost) and cannot decode"
+            );
             let (total_len, max_new, dev) =
                 (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
-            return remotes[p].decode(&h_last, total_len, max_new, dev);
+            return remotes[p].decode(total_len, max_new, dev);
         }
+        // Fallible: a zero-valid-row shard has no final prompt token to
+        // decode from (an error, not an underflow panic).
+        let h_last = self.nodes[p].last_hidden()?;
         let mut caches = std::mem::take(&mut self.nodes[p].caches);
         let res = decode_from_caches(
             self.engine,
@@ -909,35 +1126,59 @@ impl<'a> SessionDriver<'a> {
         let pre = self.prefill()?;
         let t0 = std::time::Instant::now();
         let n = self.nodes.len();
-        let decoders: Vec<usize> =
-            (0..n).filter(|&p| self.keeps_caches_for(p)).collect();
+        let mut answers: Vec<Option<String>> = vec![None; n];
+        let mut generated = 0usize;
 
-        let decoded: Vec<(String, usize)> = if self.remotes.is_some() {
-            // Wire mode: decode sequentially through each host (the
-            // tokens are independent of decode order, and parallel
-            // decodes would only contend the transports), then release
-            // the hosts — on the error path too, so a failed decode
-            // still tells the surviving hosts to exit instead of leaving
-            // them to discover the dropped transports.
-            let mut out = Vec::with_capacity(decoders.len());
-            let mut failed = None;
+        if self.remotes.is_some() {
+            // Wire mode: decode sequentially through each surviving host
+            // (tokens are independent of decode order, and parallel
+            // decodes would only contend the transports).  A
+            // non-publisher failure — node died mid-decode, or was
+            // already demoted during prefill — just leaves that answer
+            // absent; a publisher failure is fatal.  Either way every
+            // surviving host is released before returning.
+            let decoders: Vec<usize> = (0..n).filter(|&p| self.keeps_caches_for(p)).collect();
+            let mut failed: Option<anyhow::Error> = None;
             for &p in &decoders {
+                if !self.wire_alive[p] {
+                    if p == self.publisher {
+                        failed = Some(anyhow::anyhow!(
+                            "publisher node {p} was demoted mid-session"
+                        ));
+                        break;
+                    }
+                    continue;
+                }
                 match self.decode_participant(p) {
-                    Ok(r) => out.push(r),
+                    Ok((text, tokens)) => {
+                        if p == self.publisher {
+                            generated = tokens;
+                        }
+                        answers[p] = Some(text);
+                    }
+                    Err(e) if p != self.publisher => self.demote(p, &e),
                     Err(e) => {
                         failed = Some(e);
                         break;
                     }
                 }
             }
-            for r in self.remotes.as_mut().unwrap() {
-                let _ = r.shutdown();
+            for (p, r) in self.remotes.as_mut().unwrap().iter_mut().enumerate() {
+                if self.wire_alive[p] {
+                    let _ = r.shutdown();
+                }
             }
             if let Some(e) = failed {
                 return Err(e);
             }
-            out
         } else {
+            // In-process: a zero-valid-row participant has no final token
+            // to decode from — its answer is reported absent instead of
+            // panicking the session (the publisher's protected tail keeps
+            // it decodable in any realistic partition).
+            let decoders: Vec<usize> = (0..n)
+                .filter(|&p| self.keeps_caches_for(p) && self.nodes[p].valid > 0)
+                .collect();
             // Move each decoding participant's caches + kick-off hidden
             // state into a slot the (shared) pool closure can take
             // exactly once.
@@ -945,36 +1186,41 @@ impl<'a> SessionDriver<'a> {
                 .iter()
                 .map(|&p| {
                     let caches = std::mem::take(&mut self.nodes[p].caches);
-                    let h_last = self.nodes[p].last_hidden();
-                    Mutex::new(Some((caches, h_last)))
+                    let h_last = self.nodes[p].last_hidden()?;
+                    Ok(Mutex::new(Some((caches, h_last))))
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             let slots = Arc::new(slots);
             let engine = self.engine.clone();
             let (total_len, max_new, device_decode) =
                 (self.total_len, self.cfg.max_new_tokens, self.cfg.device_decode);
             let slots_in = Arc::clone(&slots);
-            run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
-                let (mut caches, h_last) = slots_in[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .ok_or("decode slot taken twice")?;
-                decode_from_caches(&engine, &mut caches, &h_last, total_len, max_new, device_decode)
+            let decoded: Vec<(String, usize)> =
+                run_parallel(self.pool.as_ref(), decoders.len(), move |i| {
+                    let (mut caches, h_last) = slots_in[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .ok_or("decode slot taken twice")?;
+                    decode_from_caches(
+                        &engine,
+                        &mut caches,
+                        &h_last,
+                        total_len,
+                        max_new,
+                        device_decode,
+                    )
                     .map_err(|e| format!("{e:#}"))
-            })?
-        };
-
-        let mut answers: Vec<Option<String>> = vec![None; n];
-        let mut generated = 0usize;
-        let mut answer = String::new();
-        for (&p, (text, tokens)) in decoders.iter().zip(decoded) {
-            if p == self.publisher {
-                answer = text.clone();
-                generated = tokens;
+                })?;
+            for (&p, (text, tokens)) in decoders.iter().zip(decoded) {
+                if p == self.publisher {
+                    generated = tokens;
+                }
+                answers[p] = Some(text);
             }
-            answers[p] = Some(text);
         }
+
+        let answer = answers[self.publisher].clone().unwrap_or_default();
         Ok(SessionReport {
             answer,
             generated_tokens: generated,

@@ -25,10 +25,14 @@
 //!  * [`driver`] — [`SessionDriver`] sequences rounds purely through
 //!    messages; dropout and attendance gaps are schedule inputs, and
 //!    per-round deadlines turn link latency into partial aggregation.
-//!  * [`transport`] — the wire deployment: length-prefixed frames over
-//!    channel or TCP transports, [`RemoteParticipant`] proxies, node
-//!    hosts, and the [`TransportDriver`] (byte-identical to the
-//!    in-process session at infinite deadline).
+//!  * [`transport`] — the wire deployment, node-resident: length-prefixed
+//!    frames over channel or TCP transports, [`RemoteParticipant`]
+//!    proxies, [`NodeHost`]s that own their participant's engine, hidden
+//!    states and decode caches outright (only protocol messages ever
+//!    cross the wire — never a hidden state or token embedding), and the
+//!    [`TransportDriver`] (byte-identical to the in-process session at
+//!    infinite deadline; a node lost mid-session is demoted like a
+//!    deadline miss).
 //!  * [`session`] — the [`FedSession`] facade (byte-identical to the
 //!    pre-protocol session).
 
@@ -58,6 +62,6 @@ pub use schedule::{Scheme, SyncSchedule};
 pub use session::FedSession;
 pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};
 pub use transport::{
-    read_timeout_for_deadline, ChannelTransport, NodeHost, RemoteParticipant,
+    read_timeout_for_deadline, ChannelTransport, CtrlMsg, NodeHost, RemoteParticipant,
     TcpTransport, Transport, TransportDriver, TransportError,
 };

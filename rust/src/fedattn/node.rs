@@ -28,7 +28,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::masks::{decode_mask_set_visible, local_mask};
@@ -191,6 +191,10 @@ pub trait Participant {
 /// snapshot them into `'static` closures without copying.
 pub struct ParticipantNode {
     id: usize,
+    /// Post-sparsity token ids (the node-resident wire handshake re-sends
+    /// these so a remote node can rebuild identical state; they are plain
+    /// vocabulary indices, never embeddings or hidden states).
+    pub(crate) ids: Vec<i32>,
     /// Global positions of the kept tokens (after local sparsity).
     pub(crate) pos: Vec<i32>,
     /// Padded positions array (`l_pad` long; padding repeats the last pos).
@@ -235,6 +239,7 @@ impl ParticipantNode {
         };
         Ok(Self {
             id,
+            ids: ids.to_vec(),
             pos,
             pos_pad: Arc::new(pos_pad),
             valid,
@@ -251,13 +256,41 @@ impl ParticipantNode {
     }
 
     /// The node's final hidden state for its last valid token, `[1, d]`
-    /// (decode kick-off).
-    pub(crate) fn last_hidden(&self) -> HostTensor {
+    /// (decode kick-off).  Fails for a node with zero valid rows — an
+    /// empty shard has no last token, and `valid - 1` would wrap.
+    pub(crate) fn last_hidden(&self) -> Result<HostTensor> {
+        ensure!(
+            self.valid > 0,
+            "participant {} has no valid rows: cannot produce a decode hidden state",
+            self.id
+        );
         let last_row = self.valid - 1;
         let d = self.x.shape()[1];
         let mut h = HostTensor::zeros(&[1, d]);
         h.copy_rows_from(self.x.as_ref(), last_row..last_row + 1, 0);
-        h
+        Ok(h)
+    }
+
+    /// Bounds-check a cache index before `absorb_*` touches it: the block
+    /// index arrives off the wire on the node-resident path, so a hostile
+    /// or stale value (or a cache-less node) must surface as an `Err`,
+    /// not an out-of-bounds panic.
+    fn cache_for(&mut self, block: usize, rows: usize) -> Result<&mut BlockCache> {
+        ensure!(
+            block < self.caches.len(),
+            "participant {}: no decode cache for block {block} ({} caches)",
+            self.id,
+            self.caches.len()
+        );
+        let cache = &mut self.caches[block];
+        let cap = cache.k.shape()[0];
+        ensure!(
+            cache.len + rows <= cap,
+            "participant {}: block {block} decode cache overflow ({} + {rows} > {cap})",
+            self.id,
+            cache.len
+        );
+        Ok(cache)
     }
 }
 
@@ -295,13 +328,15 @@ impl Participant for ParticipantNode {
             .iter()
             .map(|r| r.owner == self.id || r.transmitted)
             .collect();
-        self.caches[block].push_rows(&gkv.k, &gkv.v, gkv.rows(), &vis);
+        let rows = gkv.rows();
+        self.cache_for(block, rows)?.push_rows(&gkv.k, &gkv.v, rows, &vis);
         Ok(())
     }
 
     fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
         let vis = vec![true; self.valid];
-        self.caches[block].push_rows(k, v, self.valid, &vis);
+        let rows = self.valid;
+        self.cache_for(block, rows)?.push_rows(k, v, rows, &vis);
         Ok(())
     }
 }
@@ -309,7 +344,41 @@ impl Participant for ParticipantNode {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fedattn::kv::KvRowMeta;
     use crate::fedattn::masks::decode_mask;
+    use crate::fedattn::sparse::LocalSparsity;
+    use crate::util::prng::Xoshiro256ss;
+
+    /// A hand-built node (no engine required): `valid` tokens out of a
+    /// 4-row padded hidden state, with `n_caches` capacity-4 block caches.
+    fn bare_node(valid: usize, n_caches: usize) -> ParticipantNode {
+        ParticipantNode {
+            id: 0,
+            ids: (0..valid as i32).collect(),
+            pos: (0..valid as i32).collect(),
+            pos_pad: Arc::new(vec![0; 4]),
+            valid,
+            x: Arc::new(HostTensor::zeros(&[4, 8])),
+            lmask: Arc::new(HostTensor::zeros(&[4, 4])),
+            caches: (0..n_caches).map(|_| BlockCache::new(4, 1, 2)).collect(),
+        }
+    }
+
+    fn gkv_rows(rows: usize) -> GlobalKv {
+        GlobalKv {
+            k: HostTensor::zeros(&[rows, 1, 2]),
+            v: HostTensor::zeros(&[rows, 1, 2]),
+            meta: (0..rows)
+                .map(|i| KvRowMeta {
+                    pos: i as i32,
+                    owner: 0,
+                    row: i,
+                    transmitted: true,
+                    relevance: 0.0,
+                })
+                .collect(),
+        }
+    }
 
     #[test]
     fn block_cache_push_and_overflow() {
@@ -346,5 +415,62 @@ mod tests {
         assert_eq!(c.dmask, decode_mask(6, &c.visible));
         c.push_rows(&k, &k.clone(), 1, &[true]);
         assert_eq!(c.dmask, decode_mask(6, &c.visible));
+    }
+
+    #[test]
+    fn last_hidden_errs_on_zero_valid_rows() {
+        // Regression: `self.valid - 1` used to wrap at valid == 0 and
+        // panic on the subsequent slice.  A zero-valid participant only
+        // arises from an empty shard — every sparsity preset keeps at
+        // least one token for len > 0 — but an empty shard is legal.
+        let node = bare_node(0, 0);
+        let err = node.last_hidden().unwrap_err();
+        assert!(err.to_string().contains("no valid rows"), "{err}");
+        let h = bare_node(2, 0).last_hidden().unwrap();
+        assert_eq!(h.shape(), &[1, 8]);
+    }
+
+    #[test]
+    fn sparsity_presets_never_strand_a_nonempty_shard() {
+        // The zero-valid edge case is reachable only through an empty
+        // shard: even ratio-0 sparsity keeps >= 1 token for len > 0, so
+        // the presets themselves can never produce `valid == 0`.
+        let mut rng = Xoshiro256ss::new(9);
+        for ratio in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            let sp = LocalSparsity { ratio };
+            for len in [1usize, 2, 7] {
+                assert!(!sp.select(len, 0, &mut rng).is_empty(), "ratio {ratio} len {len}");
+            }
+            assert!(sp.select(0, 3, &mut rng).is_empty());
+        }
+    }
+
+    #[test]
+    fn absorb_rejects_out_of_range_block() {
+        // Regression: `self.caches[block]` used to panic for a hostile or
+        // stale block index and for cache-less nodes.
+        let k = HostTensor::zeros(&[2, 1, 2]);
+        let mut cacheless = bare_node(2, 0);
+        let err = cacheless.absorb_local(0, &k, &k.clone()).unwrap_err();
+        assert!(err.to_string().contains("no decode cache"), "{err}");
+
+        let mut node = bare_node(2, 2);
+        assert!(node.absorb_local(1, &k, &k.clone()).is_ok());
+        let err = node.absorb_local(2, &k, &k.clone()).unwrap_err();
+        assert!(err.to_string().contains("no decode cache for block 2"), "{err}");
+        let err = node.absorb_frame(9999, &gkv_rows(2)).unwrap_err();
+        assert!(err.to_string().contains("no decode cache for block 9999"), "{err}");
+        assert!(node.absorb_frame(0, &gkv_rows(2)).is_ok());
+    }
+
+    #[test]
+    fn absorb_errs_instead_of_panicking_on_cache_overflow() {
+        // A hostile frame can carry more rows than the decode cache has
+        // room for; the fallible path must refuse it before push_rows's
+        // internal assert fires.
+        let mut node = bare_node(2, 1);
+        assert!(node.absorb_frame(0, &gkv_rows(3)).is_ok());
+        let err = node.absorb_frame(0, &gkv_rows(2)).unwrap_err();
+        assert!(err.to_string().contains("decode cache overflow"), "{err}");
     }
 }

@@ -135,6 +135,12 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// 8-byte LE f64 — bit-preserving, so f64 payloads (per-row attention
+    /// masses) survive a wire round-trip exactly.
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub(crate) fn i32s(&mut self, xs: &[i32]) {
         for &x in xs {
             self.i32(x);
@@ -144,6 +150,12 @@ impl Writer {
     pub(crate) fn f32s(&mut self, xs: &[f32]) {
         for &x in xs {
             self.f32(x);
+        }
+    }
+
+    pub(crate) fn f64s(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.f64(x);
         }
     }
 
@@ -229,6 +241,11 @@ impl<'a> Reader<'a> {
         (0..n).map(|_| self.f32()).collect()
     }
 
+    pub(crate) fn f64s(&mut self, n: usize) -> Result<Vec<f64>, WireError> {
+        self.ensure_remaining(n, 8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
     pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
@@ -243,6 +260,10 @@ impl<'a> Reader<'a> {
 
     pub(crate) fn f32(&mut self) -> Result<f32, WireError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     pub(crate) fn done(self) -> Result<(), WireError> {

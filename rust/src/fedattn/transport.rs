@@ -1,49 +1,60 @@
-//! Wire transport for the participant protocol: the PR 3 round messages
-//! deployed over real byte streams.
+//! Wire transport for the participant protocol: node-resident block
+//! compute over real byte streams.
 //!
-//! The paper's participants live on separate edge devices; this module
-//! makes the protocol plane actually cross a link:
+//! The paper's deployment story (§II) is that prompts and hidden states
+//! never leave the device.  This module makes that real: a [`NodeHost`]
+//! owns its participant's *entire* state — an [`Engine`], the shard's
+//! token ids, the [`ParticipantNode`] (hidden states, positions, masks)
+//! and the per-block decode caches — and runs every block forward pass
+//! locally.  Only protocol messages cross the wire:
+//!
+//! * **Uplink** — [`KvContribution`] frames (the transmitted KV rows of
+//!   a sync round, the bytes the round is billed for).
+//! * **Downlink** — [`GlobalKvDeltaFrame`] (delta-encoded against the
+//!   fresh KV the node contributed this round) or the full
+//!   [`GlobalKvFrame`] fallback.
+//! * **Decode** — [`TokenBroadcast`] frames streaming generated tokens.
+//! * **Control** — the [`CtrlMsg`] plane (magic `0xFC`): a
+//!   hidden-state-free `Join` handshake carrying only token ids and
+//!   positions, `AdvanceLocal`/`AdvanceSync` block turns, `RoundMass`
+//!   relevance feedback, and decode/shutdown/fault management.
+//!
+//! No control or protocol frame ever carries an embedding or a hidden
+//! state — the `CtrlMsg` type admits none, which `tests/transport_golden.rs`
+//! pins with a wire-capture test.
 //!
 //! * **Framing** — every message travels as a length-prefixed frame
 //!   ([`write_frame`] / [`read_frame`], little-endian `u32` length,
 //!   capped at [`MAX_FRAME_BYTES`] so a hostile prefix can never force a
 //!   huge allocation).
 //! * **[`Transport`]** — a blocking, message-oriented byte-stream pair
-//!   with two implementations: [`ChannelTransport`] (an in-memory
-//!   channel pair; deterministic, used by the differential tests) and
-//!   [`TcpTransport`] (std TCP sockets with `TCP_NODELAY` and a read
-//!   timeout so a dead peer cannot hang a round forever).
-//! * **[`RemoteParticipant`]** — the driver-side proxy implementing
-//!   [`Participant`]: contributions come back as encoded
-//!   [`KvContribution`] frames, aggregated rounds go out as
-//!   [`GlobalKvDeltaFrame`]s delta-encoded against the fresh KV the node
-//!   contributed this round (full [`GlobalKvFrame`] fallback on the knob
-//!   being off or any cache miss), and decoded tokens stream back as
-//!   [`TokenBroadcast`]s — the existing protocol codec, byte-for-byte,
-//!   on the wire.  Contribution requests are issued to every node before
-//!   any reply is read, so a wire round costs the slowest node rather
-//!   than the sum of all nodes.
-//! * **[`NodeHost`]** — the node-side loop: owns one participant's
-//!   decode caches (and an engine for decoding), answers contribution
-//!   requests, absorbs full and delta frames (rejecting any bad delta
-//!   reference — wrong attendee, stale epoch, unknown retain id — as a
-//!   `Fault` control frame, never a panic), and streams decode tokens.
+//!   with two implementations: [`ChannelTransport`] (in-memory, used by
+//!   the differential tests) and [`TcpTransport`] (std TCP with
+//!   `TCP_NODELAY` and a read timeout).  Both re-arm their receive
+//!   timeout via [`Transport::set_recv_timeout`]; a node host derives
+//!   its timeout from the session's round deadline the moment the
+//!   `Join` handshake announces it ([`read_timeout_for_deadline`]).
+//! * **[`RemoteParticipant`]** — the driver-side proxy: sends block
+//!   turns, collects contributions (requests are fanned out to every
+//!   node before any reply is read, so a wire round costs the slowest
+//!   node rather than the sum of all nodes), ships downlink frames and
+//!   receives decoded tokens.
+//! * **[`NodeHost`]** — the node-side loop: builds its participant from
+//!   the `Join` handshake, advances blocks on its own engine, answers
+//!   contribution requests, absorbs full and delta frames (rejecting
+//!   any bad reference — wrong attendee, stale epoch, unknown retain
+//!   id, out-of-range block — as a `Fault` control frame, never a
+//!   panic), and streams decode tokens.
 //! * **[`TransportDriver`]** — [`SessionDriver`] over remote nodes: the
-//!   same round loop (including the per-round deadline and its partial
-//!   aggregation, see [`SessionConfig::round_deadline_ms`]) with every
-//!   protocol-plane step crossing a transport.  With no deadline
-//!   configured, a session run over sockets is byte-identical to the
-//!   in-process [`FedSession`] — pinned by `tests/transport_golden.rs`.
+//!   same round loop (deadline partial aggregation included) with every
+//!   step a message turn.  A node that disconnects mid-session is
+//!   demoted — excluded from the round like a deadline miss — without
+//!   killing the session.  With no deadline and no churn, a session run
+//!   over sockets is byte-identical to the in-process [`FedSession`] —
+//!   pinned by `tests/transport_golden.rs` across all six KV policies.
 //!
-//! Control messages (init, contribution requests, decode requests) use a
-//! separate magic byte (`0xFC`) so they can never be confused with
-//! protocol frames (`0xFA`); both sides peek the magic/tag and dispatch
-//! to the matching typed decoder, which fully validates lengths before
-//! allocating.
-//!
-//! [`Participant`]: crate::fedattn::node::Participant
+//! [`ParticipantNode`]: crate::fedattn::node::ParticipantNode
 //! [`SessionDriver`]: crate::fedattn::driver::SessionDriver
-//! [`SessionConfig::round_deadline_ms`]: crate::fedattn::driver::SessionConfig::round_deadline_ms
 //! [`FedSession`]: crate::fedattn::session::FedSession
 
 use std::io::{Read, Write};
@@ -58,11 +69,13 @@ use crate::fedattn::driver::{
     decode_ids_from_caches, PrefillOutput, SessionConfig, SessionDriver, SessionReport,
 };
 use crate::fedattn::kv::GlobalKv;
-use crate::fedattn::node::{BlockCache, Participant};
+use crate::fedattn::masks::global_mask;
+use crate::fedattn::node::{Participant, ParticipantNode};
 use crate::fedattn::protocol::{
-    self, wire_kind, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, Reader,
-    TokenBroadcast, WireError, WireKind, Writer,
+    wire_kind, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, Reader, TokenBroadcast,
+    WireError, WireKind, Writer,
 };
+use crate::fedattn::relevance::attention_mass;
 use crate::fedattn::schedule::SyncSchedule;
 use crate::net::NetSim;
 use crate::runtime::Engine;
@@ -71,6 +84,8 @@ use crate::tokenizer;
 
 /// First byte of every transport *control* frame (node management); the
 /// protocol data plane keeps [`protocol::WIRE_MAGIC`].
+///
+/// [`protocol::WIRE_MAGIC`]: crate::fedattn::protocol::WIRE_MAGIC
 pub const CTRL_MAGIC: u8 = 0xFC;
 
 /// Hard cap on a single frame's payload.  Frames beyond this are a
@@ -89,12 +104,14 @@ pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
 /// overhead, so the timeout must not fire on an on-time peer.
 pub const DEADLINE_TIMEOUT_GRACE: Duration = Duration::from_secs(15);
 
-/// The socket read timeout a driver should run with under a round
+/// The socket read timeout either side should run with under a round
 /// deadline: `deadline + `[`DEADLINE_TIMEOUT_GRACE`], so a peer that
 /// blows far past the deadline surfaces as [`TransportError::Timeout`]
 /// quickly instead of holding the round open for the full
-/// [`DEFAULT_IO_TIMEOUT`].  With no (or a non-finite) deadline the
-/// 60 s default stands.
+/// [`DEFAULT_IO_TIMEOUT`].  With no (or a non-finite) deadline the 60 s
+/// default stands.  A [`NodeHost`] applies this the moment the `Join`
+/// handshake announces the session's deadline, so long-deadline sessions
+/// don't spuriously drop slow-but-on-time drivers.
 pub fn read_timeout_for_deadline(round_deadline_ms: Option<f64>) -> Duration {
     // Cap the derived wait at a day: `Duration::from_secs_f64` panics on
     // durations beyond its range, and a larger deadline is
@@ -108,14 +125,6 @@ pub fn read_timeout_for_deadline(round_deadline_ms: Option<f64>) -> Duration {
         _ => DEFAULT_IO_TIMEOUT,
     }
 }
-
-/// Hard cap on the total decode-cache bytes a node host will allocate
-/// for one `Init` frame.  The codec bounds every *vector* against the
-/// frame it arrived in, but `Init` carries scalar geometry
-/// (`n_layers × cache_capacity × kv_heads × head_dim`) that drives
-/// allocation on its own — an unauthenticated peer must not be able to
-/// request petabytes with a 30-byte frame.
-pub const MAX_NODE_CACHE_BYTES: usize = 256 * 1024 * 1024;
 
 /// Hard cap on a remote decode request's `max_new_tokens`: bounds the
 /// node-side decode loop against a hostile scalar (any realistic
@@ -208,6 +217,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, TransportError> {
 pub trait Transport: Send {
     fn send(&mut self, frame: &[u8]) -> Result<(), TransportError>;
     fn recv(&mut self) -> Result<Vec<u8>, TransportError>;
+    /// Re-arm the receive timeout.  A [`NodeHost`] calls this when the
+    /// `Join` handshake announces the session's round deadline
+    /// (see [`read_timeout_for_deadline`]).
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError>;
     /// Human-readable peer label for diagnostics.
     fn peer(&self) -> String;
 }
@@ -271,6 +284,11 @@ impl Transport for ChannelTransport {
         }
     }
 
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.timeout = timeout;
+        Ok(())
+    }
+
     fn peer(&self) -> String {
         self.label.clone()
     }
@@ -292,7 +310,9 @@ impl TcpTransport {
         Self::from_stream(stream)
     }
 
-    /// Wrap an accepted stream (the node-host side).
+    /// Wrap an accepted stream (the node-host side).  Starts on
+    /// [`DEFAULT_IO_TIMEOUT`]; the serve loop re-arms it from the `Join`
+    /// handshake's round deadline via [`Transport::set_recv_timeout`].
     pub fn from_stream(stream: TcpStream) -> Result<Self, TransportError> {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
@@ -321,6 +341,11 @@ impl Transport for TcpTransport {
         read_frame(&mut self.stream)
     }
 
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        Ok(())
+    }
+
     fn peer(&self) -> String {
         format!("tcp:{}", self.peer)
     }
@@ -330,70 +355,84 @@ impl Transport for TcpTransport {
 // Control codec (driver <-> node management frames)
 // ---------------------------------------------------------------------------
 
-const CTRL_INIT: u8 = 1;
-const CTRL_CONTRIBUTE: u8 = 2;
-const CTRL_ABSORB_LOCAL: u8 = 3;
-const CTRL_DECODE: u8 = 4;
-const CTRL_DECODE_DONE: u8 = 5;
-const CTRL_SHUTDOWN: u8 = 6;
-const CTRL_FAULT: u8 = 7;
+const CTRL_JOIN: u8 = 1;
+const CTRL_JOIN_ACK: u8 = 2;
+const CTRL_ADVANCE_LOCAL: u8 = 3;
+const CTRL_ADVANCE_SYNC: u8 = 4;
+const CTRL_ROUND_MASS: u8 = 5;
+const CTRL_DECODE_START: u8 = 6;
+const CTRL_DECODE_DONE: u8 = 7;
+const CTRL_SHUTDOWN: u8 = 8;
+const CTRL_FAULT: u8 = 9;
 
-/// Driver↔node control messages.  KV payloads embedded here are the
-/// *driver-side compute plane* (fresh K/V rows a node packages or
-/// caches); the billable data plane always travels as protocol frames.
+/// Driver↔node control messages.  By construction no variant can carry
+/// an embedding or a hidden state: the handshake ships plain vocabulary
+/// token ids and integer positions, block turns ship flags and scalars,
+/// and every KV payload travels on the protocol data plane
+/// ([`KvContribution`] / [`GlobalKvFrame`] / [`GlobalKvDeltaFrame`]).
 #[derive(Debug, Clone, PartialEq)]
-pub(crate) enum CtrlMsg {
-    /// Driver → node: establish this endpoint's participant identity.
-    Init {
+pub enum CtrlMsg {
+    /// Driver → node: establish this endpoint's participant.  The node
+    /// rebuilds the full participant state (embeddings, masks, decode
+    /// caches) locally from its own engine; announcing the session's
+    /// round deadline lets the node derive its read timeout.
+    Join {
         id: usize,
+        keep_caches: bool,
+        round_deadline_ms: Option<f64>,
+        /// Post-sparsity token ids (plain vocabulary indices).
+        ids: Vec<i32>,
+        /// Global positions of the kept tokens.
+        pos: Vec<i32>,
+    },
+    /// Node → driver: the participant is built; echoes identity and the
+    /// node-side model geometry so a mismatched artifact set fails the
+    /// handshake instead of corrupting a round.
+    JoinAck {
+        id: usize,
+        valid: usize,
         n_layers: usize,
         kv_heads: usize,
         head_dim: usize,
-        cache_capacity: usize,
-        keep_caches: bool,
-        pos: Vec<i32>,
     },
-    /// Driver → node: package the flagged rows of this round's fresh K/V
-    /// as the node's uplink `KvContribution` (the reply frame).  The node
-    /// keeps the fresh K/V as this `(block, epoch)`'s generation so a
-    /// later delta downlink can retain rows from it by id.
-    Contribute {
+    /// Driver → node: run block `block` on the local path (no sync this
+    /// round, or the node missed the round deadline).
+    AdvanceLocal { block: usize },
+    /// Driver → node: run block `block` as a sync round.  The node
+    /// projects QKV, replies with its [`KvContribution`] for the flagged
+    /// rows, and — when `attendee` — holds the fresh Q/K/V until the
+    /// round's downlink frame arrives.
+    AdvanceSync {
         block: usize,
         /// Executed-sync-round ordinal; ties the fresh KV generation to
         /// the delta frame that may reference it.
         epoch: usize,
-        kv_heads: usize,
-        head_dim: usize,
+        /// Whether this node attends (receives the aggregated round and
+        /// runs global attention) or only contributes.
+        attendee: bool,
+        /// Whether the driver wants per-row attention masses back
+        /// (adaptive relevance policies).
+        want_mass: bool,
         /// One flag per valid row (`tx.len()` is the row count).
         tx: Vec<bool>,
+        /// Per-row relevance scores for the contribution metadata.
         relevance: Option<Vec<f32>>,
-        k: Vec<f32>,
-        v: Vec<f32>,
     },
-    /// Driver → node: cache the node's own local K/V for an off-round
-    /// block.
-    AbsorbLocal {
-        block: usize,
-        kv_heads: usize,
-        head_dim: usize,
-        rows: usize,
-        k: Vec<f32>,
-        v: Vec<f32>,
-    },
-    /// Driver → node: decode from the node's caches; the node streams
-    /// one `TokenBroadcast` per generated token, then `DecodeDone`.
-    Decode {
-        total_len: usize,
-        max_new_tokens: usize,
-        device_decode: bool,
-        /// `[1, d]` kick-off hidden state, flattened.
-        h_last: Vec<f32>,
-    },
+    /// Node → driver: per-row attention masses of this round's global
+    /// attention (sent only when requested via `want_mass`); `f64`
+    /// bit-preserving so the driver's relevance tracker accumulates
+    /// exactly what an in-process session would.
+    RoundMass { block: usize, epoch: usize, mass: Vec<f64> },
+    /// Driver → node: decode from the node's caches and hidden state;
+    /// the node streams one `TokenBroadcast` per generated token, then
+    /// `DecodeDone`.  No kick-off hidden state crosses the wire — the
+    /// node owns it.
+    DecodeStart { total_len: usize, max_new_tokens: usize, device_decode: bool },
     /// Node → driver: decode finished after `tokens` broadcasts.
     DecodeDone { tokens: usize },
     /// Driver → node: release the endpoint.
     Shutdown,
-    /// Node → driver: the node failed; the session must abort.
+    /// Node → driver: the request failed; the driver demotes or aborts.
     Fault { message: String },
 }
 
@@ -406,41 +445,61 @@ fn read_bool(r: &mut Reader<'_>, what: &str) -> Result<bool, WireError> {
 }
 
 impl CtrlMsg {
-    pub(crate) fn name(&self) -> &'static str {
+    pub fn name(&self) -> &'static str {
         match self {
-            CtrlMsg::Init { .. } => "init",
-            CtrlMsg::Contribute { .. } => "contribute",
-            CtrlMsg::AbsorbLocal { .. } => "absorb-local",
-            CtrlMsg::Decode { .. } => "decode",
+            CtrlMsg::Join { .. } => "join",
+            CtrlMsg::JoinAck { .. } => "join-ack",
+            CtrlMsg::AdvanceLocal { .. } => "advance-local",
+            CtrlMsg::AdvanceSync { .. } => "advance-sync",
+            CtrlMsg::RoundMass { .. } => "round-mass",
+            CtrlMsg::DecodeStart { .. } => "decode-start",
             CtrlMsg::DecodeDone { .. } => "decode-done",
             CtrlMsg::Shutdown => "shutdown",
             CtrlMsg::Fault { .. } => "fault",
         }
     }
 
-    pub(crate) fn encode(&self) -> Vec<u8> {
+    pub fn encode(&self) -> Vec<u8> {
         match self {
-            CtrlMsg::Init {
-                id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos,
-            } => {
-                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_INIT, 6 * 4 + 1 + pos.len() * 4);
+            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos } => {
+                let cap = 4 + 2 + 8 + 8 + (ids.len() + pos.len()) * 4;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_JOIN, cap);
                 w.u32(*id as u32);
-                w.u32(*n_layers as u32);
-                w.u32(*kv_heads as u32);
-                w.u32(*head_dim as u32);
-                w.u32(*cache_capacity as u32);
                 w.u8(*keep_caches as u8);
+                match round_deadline_ms {
+                    Some(d) => {
+                        w.u8(1);
+                        w.f64(*d);
+                    }
+                    None => w.u8(0),
+                }
+                w.u32(ids.len() as u32);
+                w.i32s(ids);
                 w.u32(pos.len() as u32);
                 w.i32s(pos);
                 w.finish()
             }
-            CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v } => {
-                let cap = 5 * 4 + tx.len() * 5 + (k.len() + v.len()) * 4;
-                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_CONTRIBUTE, cap);
-                w.u32(*block as u32);
-                w.u32(*epoch as u32);
+            CtrlMsg::JoinAck { id, valid, n_layers, kv_heads, head_dim } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_JOIN_ACK, 5 * 4);
+                w.u32(*id as u32);
+                w.u32(*valid as u32);
+                w.u32(*n_layers as u32);
                 w.u32(*kv_heads as u32);
                 w.u32(*head_dim as u32);
+                w.finish()
+            }
+            CtrlMsg::AdvanceLocal { block } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_ADVANCE_LOCAL, 4);
+                w.u32(*block as u32);
+                w.finish()
+            }
+            CtrlMsg::AdvanceSync { block, epoch, attendee, want_mass, tx, relevance } => {
+                let cap = 3 * 4 + 3 + tx.len() * 5;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_ADVANCE_SYNC, cap);
+                w.u32(*block as u32);
+                w.u32(*epoch as u32);
+                w.u8(*attendee as u8);
+                w.u8(*want_mass as u8);
                 w.u32(tx.len() as u32);
                 for &t in tx {
                     w.u8(t as u8);
@@ -452,29 +511,22 @@ impl CtrlMsg {
                     }
                     None => w.u8(0),
                 }
-                w.f32s(k);
-                w.f32s(v);
                 w.finish()
             }
-            CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v } => {
-                let cap = 4 * 4 + (k.len() + v.len()) * 4;
-                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_ABSORB_LOCAL, cap);
+            CtrlMsg::RoundMass { block, epoch, mass } => {
+                let cap = 3 * 4 + mass.len() * 8;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_ROUND_MASS, cap);
                 w.u32(*block as u32);
-                w.u32(*kv_heads as u32);
-                w.u32(*head_dim as u32);
-                w.u32(*rows as u32);
-                w.f32s(k);
-                w.f32s(v);
+                w.u32(*epoch as u32);
+                w.u32(mass.len() as u32);
+                w.f64s(mass);
                 w.finish()
             }
-            CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last } => {
-                let mut w =
-                    Writer::with_magic(CTRL_MAGIC, CTRL_DECODE, 3 * 4 + 1 + h_last.len() * 4);
+            CtrlMsg::DecodeStart { total_len, max_new_tokens, device_decode } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_DECODE_START, 2 * 4 + 1);
                 w.u32(*total_len as u32);
                 w.u32(*max_new_tokens as u32);
                 w.u8(*device_decode as u8);
-                w.u32(h_last.len() as u32);
-                w.f32s(h_last);
                 w.finish()
             }
             CtrlMsg::DecodeDone { tokens } => {
@@ -493,7 +545,7 @@ impl CtrlMsg {
         }
     }
 
-    pub(crate) fn decode(b: &[u8]) -> Result<CtrlMsg, WireError> {
+    pub fn decode(b: &[u8]) -> Result<CtrlMsg, WireError> {
         let magic = b.first().copied().ok_or(WireError::Truncated(0))?;
         if magic != CTRL_MAGIC {
             return Err(WireError::BadTag { expected: CTRL_MAGIC, got: magic });
@@ -501,24 +553,34 @@ impl CtrlMsg {
         let tag = b.get(1).copied().ok_or(WireError::Truncated(b.len()))?;
         let mut r = Reader::open_with_magic(b, CTRL_MAGIC, tag)?;
         let msg = match tag {
-            CTRL_INIT => {
+            CTRL_JOIN => {
                 let id = r.u32()? as usize;
-                let n_layers = r.u32()? as usize;
-                let kv_heads = r.u32()? as usize;
-                let head_dim = r.u32()? as usize;
-                let cache_capacity = r.u32()? as usize;
                 let keep_caches = read_bool(&mut r, "keep_caches")?;
-                let rows = r.u32()? as usize;
-                let pos = r.i32s(rows)?;
-                CtrlMsg::Init { id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos }
+                let round_deadline_ms = if read_bool(&mut r, "deadline-present")? {
+                    Some(r.f64()?)
+                } else {
+                    None
+                };
+                let n_ids = r.u32()? as usize;
+                let ids = r.i32s(n_ids)?;
+                let n_pos = r.u32()? as usize;
+                let pos = r.i32s(n_pos)?;
+                CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos }
             }
-            CTRL_CONTRIBUTE => {
+            CTRL_JOIN_ACK => CtrlMsg::JoinAck {
+                id: r.u32()? as usize,
+                valid: r.u32()? as usize,
+                n_layers: r.u32()? as usize,
+                kv_heads: r.u32()? as usize,
+                head_dim: r.u32()? as usize,
+            },
+            CTRL_ADVANCE_LOCAL => CtrlMsg::AdvanceLocal { block: r.u32()? as usize },
+            CTRL_ADVANCE_SYNC => {
                 let block = r.u32()? as usize;
                 let epoch = r.u32()? as usize;
-                let kv_heads = r.u32()? as usize;
-                let head_dim = r.u32()? as usize;
+                let attendee = read_bool(&mut r, "attendee")?;
+                let want_mass = read_bool(&mut r, "want_mass")?;
                 let rows = r.u32()? as usize;
-                let elems = protocol::row_elems(rows, kv_heads, head_dim)?;
                 r.ensure_remaining(rows, 1)?;
                 let mut tx = Vec::with_capacity(rows);
                 for _ in 0..rows {
@@ -529,28 +591,20 @@ impl CtrlMsg {
                 } else {
                     None
                 };
-                let k = r.f32s(elems)?;
-                let v = r.f32s(elems)?;
-                CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v }
+                CtrlMsg::AdvanceSync { block, epoch, attendee, want_mass, tx, relevance }
             }
-            CTRL_ABSORB_LOCAL => {
+            CTRL_ROUND_MASS => {
                 let block = r.u32()? as usize;
-                let kv_heads = r.u32()? as usize;
-                let head_dim = r.u32()? as usize;
+                let epoch = r.u32()? as usize;
                 let rows = r.u32()? as usize;
-                let elems = protocol::row_elems(rows, kv_heads, head_dim)?;
-                let k = r.f32s(elems)?;
-                let v = r.f32s(elems)?;
-                CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v }
+                let mass = r.f64s(rows)?;
+                CtrlMsg::RoundMass { block, epoch, mass }
             }
-            CTRL_DECODE => {
-                let total_len = r.u32()? as usize;
-                let max_new_tokens = r.u32()? as usize;
-                let device_decode = read_bool(&mut r, "device_decode")?;
-                let d = r.u32()? as usize;
-                let h_last = r.f32s(d)?;
-                CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last }
-            }
+            CTRL_DECODE_START => CtrlMsg::DecodeStart {
+                total_len: r.u32()? as usize,
+                max_new_tokens: r.u32()? as usize,
+                device_decode: read_bool(&mut r, "device_decode")?,
+            },
             CTRL_DECODE_DONE => CtrlMsg::DecodeDone { tokens: r.u32()? as usize },
             CTRL_SHUTDOWN => CtrlMsg::Shutdown,
             CTRL_FAULT => {
@@ -574,11 +628,13 @@ impl CtrlMsg {
 
 /// Driver-side proxy for one participant living behind a [`Transport`].
 ///
-/// Implements [`Participant`] by exchanging frames with the peer
-/// [`NodeHost`]: `contribute` round-trips a control request and decodes
-/// the returned [`KvContribution`] (the very bytes whose payload size is
-/// billed), `absorb_frame` ships the encoded [`GlobalKvFrame`], and
-/// [`RemoteParticipant::decode`] streams [`TokenBroadcast`] frames back.
+/// The peer [`NodeHost`] owns the participant's engine and state; this
+/// proxy only issues message turns: `advance_*` block turns,
+/// `contribute_recv` for the returned [`KvContribution`] (the very bytes
+/// whose payload size is billed), `send_frame` for the round downlink
+/// (delta-encoded when the node provably holds this round's fresh KV),
+/// `recv_mass` for relevance feedback, and `decode` for the token
+/// stream.
 pub struct RemoteParticipant {
     id: usize,
     pos: Vec<i32>,
@@ -586,14 +642,14 @@ pub struct RemoteParticipant {
     keep_caches: bool,
     transport: Box<dyn Transport>,
     /// Ship aggregated rounds as [`GlobalKvDeltaFrame`]s when the node
-    /// provably holds this round's fresh KV (it contributed through this
-    /// proxy); otherwise — knob off, first contact, or any cache miss —
-    /// fall back to the full [`GlobalKvFrame`].
+    /// provably holds this round's fresh KV (it attended through this
+    /// proxy); otherwise — knob off, or any cache miss — fall back to
+    /// the full [`GlobalKvFrame`].
     delta_frames: bool,
     /// Executed-sync-round ordinal of the round in flight.
     epoch: usize,
-    /// `(block, epoch)` of the last contribute request sent, i.e. the
-    /// fresh-KV generation the node currently caches.
+    /// `(block, epoch)` of the last attendee sync turn sent, i.e. the
+    /// fresh-KV generation the node currently holds.
     fresh_sent: Option<(usize, usize)>,
 }
 
@@ -622,68 +678,113 @@ impl RemoteParticipant {
         self.delta_frames = on;
     }
 
-    /// Mark the start of executed sync round `epoch`; subsequent
-    /// contribute requests and delta frames carry this ordinal.
+    pub(crate) fn id(&self) -> usize {
+        self.id
+    }
+
+    pub(crate) fn keeps_caches(&self) -> bool {
+        self.keep_caches
+    }
+
+    pub(crate) fn positions(&self) -> &[i32] {
+        &self.pos
+    }
+
+    /// Mark the start of executed sync round `epoch`; subsequent sync
+    /// turns and delta frames carry this ordinal.
     pub(crate) fn begin_round(&mut self, epoch: usize) {
         self.epoch = epoch;
     }
 
-    /// Send the node its identity + cache geometry.
-    pub(crate) fn init(
+    /// Send the hidden-state-free handshake: identity, cache policy, the
+    /// session's round deadline (so the node can derive its read
+    /// timeout), and the shard's token ids + positions the node rebuilds
+    /// its participant from.
+    pub(crate) fn join_send(
         &mut self,
-        n_layers: usize,
-        kv_heads: usize,
-        head_dim: usize,
-        cache_capacity: usize,
+        ids: &[i32],
+        round_deadline_ms: Option<f64>,
     ) -> Result<()> {
-        let msg = CtrlMsg::Init {
+        anyhow::ensure!(ids.len() == self.valid, "join ids != valid rows");
+        let msg = CtrlMsg::Join {
             id: self.id,
-            n_layers,
-            kv_heads,
-            head_dim,
-            cache_capacity,
             keep_caches: self.keep_caches,
+            round_deadline_ms,
+            ids: ids.to_vec(),
             pos: self.pos.clone(),
         };
         self.transport.send(&msg.encode())?;
         Ok(())
     }
 
-    /// Issue this round's contribution request without waiting for the
-    /// reply: the driver fans requests out to every node first so the
-    /// nodes package their uplinks concurrently, then collects the
-    /// replies ([`RemoteParticipant::contribute_recv`]) — the wire round
-    /// costs the slowest node, not the sum of all nodes.  Records the
-    /// fresh-KV generation this ships so the round's downlink can be
-    /// delta-encoded against it.
-    pub(crate) fn contribute_send(
+    /// Collect the `JoinAck` reply, validating that the node rebuilt the
+    /// same shard against the same model geometry the driver runs.
+    pub(crate) fn join_recv(
+        &mut self,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Result<()> {
+        let frame = self.transport.recv()?;
+        self.check_fault(&frame)?;
+        match CtrlMsg::decode(&frame)? {
+            CtrlMsg::JoinAck { id, valid, n_layers: nl, kv_heads: kh, head_dim: hd } => {
+                anyhow::ensure!(id == self.id, "join-ack for participant {id}, expected {}", self.id);
+                anyhow::ensure!(
+                    valid == self.valid,
+                    "node rebuilt {valid} valid rows, driver expected {}",
+                    self.valid
+                );
+                anyhow::ensure!(
+                    nl == n_layers && kh == kv_heads && hd == head_dim,
+                    "node model geometry ({nl} layers, {kh}x{hd} KV) differs from \
+                     driver's ({n_layers} layers, {kv_heads}x{head_dim} KV)"
+                );
+                Ok(())
+            }
+            other => anyhow::bail!("expected join-ack, got {} from node {}", other.name(), self.id),
+        }
+    }
+
+    /// Advance one local (non-sync) block at the node.
+    pub(crate) fn advance_local(&mut self, block: usize) -> Result<()> {
+        self.transport.send(&CtrlMsg::AdvanceLocal { block }.encode())?;
+        Ok(())
+    }
+
+    /// Issue this round's sync turn without waiting for the contribution
+    /// reply: the driver fans turns out to every node first so the nodes
+    /// compute concurrently, then collects the replies
+    /// ([`RemoteParticipant::contribute_recv`]) — the wire round costs
+    /// the slowest node, not the sum of all nodes.  An attendee turn
+    /// records the fresh-KV generation the node now holds so the round's
+    /// downlink can be delta-encoded against it.
+    pub(crate) fn advance_sync(
         &mut self,
         block: usize,
-        k: &HostTensor,
-        v: &HostTensor,
+        attendee: bool,
+        want_mass: bool,
         tx: &[bool],
-        relevance: Option<&[f64]>,
+        relevance: Option<Vec<f32>>,
     ) -> Result<()> {
-        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
         anyhow::ensure!(tx.len() == self.valid, "tx flags != valid rows");
-        let row_len = kv_heads * head_dim;
-        let msg = CtrlMsg::Contribute {
+        let msg = CtrlMsg::AdvanceSync {
             block,
             epoch: self.epoch,
-            kv_heads,
-            head_dim,
+            attendee,
+            want_mass,
             tx: tx.to_vec(),
-            relevance: relevance.map(|r| r.iter().map(|&s| s as f32).collect()),
-            k: k.data()[..self.valid * row_len].to_vec(),
-            v: v.data()[..self.valid * row_len].to_vec(),
+            relevance,
         };
         self.transport.send(&msg.encode())?;
-        self.fresh_sent = Some((block, self.epoch));
+        if attendee {
+            self.fresh_sent = Some((block, self.epoch));
+        }
         Ok(())
     }
 
     /// Collect the [`KvContribution`] reply to an earlier
-    /// [`RemoteParticipant::contribute_send`] for `block`.
+    /// [`RemoteParticipant::advance_sync`] for `block`.
     pub(crate) fn contribute_recv(&mut self, block: usize) -> Result<KvContribution> {
         let frame = self.transport.recv()?;
         self.check_fault(&frame)?;
@@ -702,6 +803,55 @@ impl RemoteParticipant {
         Ok(c)
     }
 
+    /// Ship the aggregated round downlink for `block`: a
+    /// [`GlobalKvDeltaFrame`] when the node holds this round's fresh KV,
+    /// the full [`GlobalKvFrame`] otherwise.
+    pub(crate) fn send_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()> {
+        if self.delta_frames && self.fresh_sent == Some((block, self.epoch)) {
+            // The node holds this round's fresh KV: cut the delta straight
+            // from the packed global KV (no full-frame materialization on
+            // the hot path) and ship only what the node is missing.  The
+            // delta's data plane is exactly the downlink the round was
+            // billed.
+            let delta = GlobalKvDeltaFrame::from_global(block, gkv, self.epoch, self.id);
+            debug_assert_eq!(
+                delta.payload_bytes(),
+                GlobalKvFrame::from_global(block, gkv).payload_bytes_for(self.id),
+                "delta payload drifted from the billed downlink"
+            );
+            self.transport.send(&delta.encode())?;
+        } else {
+            let frame = GlobalKvFrame::from_global(block, gkv);
+            self.transport.send(&frame.encode())?;
+        }
+        Ok(())
+    }
+
+    /// Collect the per-row attention masses the node computed for this
+    /// round's global attention (requested via `want_mass`).
+    pub(crate) fn recv_mass(&mut self, block: usize, rows: usize) -> Result<Vec<f64>> {
+        let frame = self.transport.recv()?;
+        self.check_fault(&frame)?;
+        match CtrlMsg::decode(&frame)? {
+            CtrlMsg::RoundMass { block: b, epoch, mass } => {
+                anyhow::ensure!(
+                    b == block && epoch == self.epoch,
+                    "round mass for block {b} epoch {epoch}, expected block {block} epoch {}",
+                    self.epoch
+                );
+                anyhow::ensure!(
+                    mass.len() == rows,
+                    "round mass has {} rows, expected {rows}",
+                    mass.len()
+                );
+                Ok(mass)
+            }
+            other => {
+                anyhow::bail!("expected round-mass, got {} from node {}", other.name(), self.id)
+            }
+        }
+    }
+
     /// Raise a node-reported fault as a session error.
     fn check_fault(&self, frame: &[u8]) -> Result<()> {
         if frame.first() == Some(&CTRL_MAGIC) {
@@ -712,22 +862,17 @@ impl RemoteParticipant {
         Ok(())
     }
 
-    /// Run the greedy decode at the node host (which owns the caches and
-    /// its own engine); tokens stream back as [`TokenBroadcast`] frames
-    /// terminated by a `DecodeDone` control message.
+    /// Run the greedy decode at the node host (which owns the caches,
+    /// the final hidden state, and its own engine); tokens stream back
+    /// as [`TokenBroadcast`] frames terminated by a `DecodeDone` control
+    /// message.
     pub fn decode(
         &mut self,
-        h_last: &HostTensor,
         total_len: usize,
         max_new_tokens: usize,
         device_decode: bool,
     ) -> Result<(String, usize)> {
-        let msg = CtrlMsg::Decode {
-            total_len,
-            max_new_tokens,
-            device_decode,
-            h_last: h_last.data().to_vec(),
-        };
+        let msg = CtrlMsg::DecodeStart { total_len, max_new_tokens, device_decode };
         self.transport.send(&msg.encode())?;
         let mut ids: Vec<i32> = Vec::new();
         loop {
@@ -766,138 +911,92 @@ impl RemoteParticipant {
     }
 }
 
-impl Participant for RemoteParticipant {
-    fn id(&self) -> usize {
-        self.id
-    }
-
-    fn valid_rows(&self) -> usize {
-        self.valid
-    }
-
-    fn positions(&self) -> &[i32] {
-        &self.pos
-    }
-
-    fn keeps_caches(&self) -> bool {
-        self.keep_caches
-    }
-
-    fn contribute(
-        &mut self,
-        block: usize,
-        k: &HostTensor,
-        v: &HostTensor,
-        tx: &[bool],
-        relevance: Option<&[f64]>,
-    ) -> Result<KvContribution> {
-        self.contribute_send(block, k, v, tx, relevance)?;
-        self.contribute_recv(block)
-    }
-
-    fn absorb_frame(&mut self, block: usize, gkv: &GlobalKv) -> Result<()> {
-        if self.delta_frames && self.fresh_sent == Some((block, self.epoch)) {
-            // The node holds this round's fresh KV: cut the delta straight
-            // from the packed global KV (no full-frame materialization on
-            // the hot path) and ship only what the node is missing.  The
-            // delta's data plane is exactly the downlink the round was
-            // billed.
-            let delta = GlobalKvDeltaFrame::from_global(block, gkv, self.epoch, self.id);
-            debug_assert_eq!(
-                delta.payload_bytes(),
-                GlobalKvFrame::from_global(block, gkv).payload_bytes_for(self.id),
-                "delta payload drifted from the billed downlink"
-            );
-            self.transport.send(&delta.encode())?;
-        } else {
-            let frame = GlobalKvFrame::from_global(block, gkv);
-            self.transport.send(&frame.encode())?;
-        }
-        Ok(())
-    }
-
-    fn absorb_local(&mut self, block: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
-        let (kv_heads, head_dim) = (k.shape()[1], k.shape()[2]);
-        let row_len = kv_heads * head_dim;
-        let msg = CtrlMsg::AbsorbLocal {
-            block,
-            kv_heads,
-            head_dim,
-            rows: self.valid,
-            k: k.data()[..self.valid * row_len].to_vec(),
-            v: v.data()[..self.valid * row_len].to_vec(),
-        };
-        self.transport.send(&msg.encode())?;
-        Ok(())
-    }
-}
-
 // ---------------------------------------------------------------------------
 // NodeHost — the node-side serve loop
 // ---------------------------------------------------------------------------
 
-/// Bound the total decode-cache allocation an `Init` frame requests.
-///
-/// The codec bounds every *vector* against the frame it arrived in, but
-/// `Init` carries scalar geometry
-/// (`n_layers × cache_capacity × kv_heads × head_dim`) that drives
-/// allocation on its own — an unauthenticated peer must not be able to
-/// request petabytes with a 30-byte frame.  Overflow and anything past
-/// [`MAX_NODE_CACHE_BYTES`] are rejected before any cache is built (the
-/// same no-unbounded-allocation invariant the decoders uphold).
-fn validate_init_geometry(
-    n_layers: usize,
-    kv_heads: usize,
-    head_dim: usize,
-    cache_capacity: usize,
-) -> Result<()> {
-    let cache_bytes = cache_capacity
-        .checked_mul(kv_heads)
-        .and_then(|x| x.checked_mul(head_dim))
-        .and_then(|x| x.checked_mul(2 * 4)) // K + V, f32
-        .and_then(|x| x.checked_mul(n_layers))
-        .ok_or_else(|| anyhow::anyhow!("init cache geometry overflows"))?;
-    anyhow::ensure!(
-        cache_bytes <= MAX_NODE_CACHE_BYTES,
-        "init requests {cache_bytes} cache bytes (cap {MAX_NODE_CACHE_BYTES})"
-    );
-    Ok(())
-}
-
-/// The fresh K/V a node contributed from this sync round: the generation
-/// a delta downlink's retain-list resolves against.  One generation is
-/// kept (rounds reference only their own block's fresh rows).
-struct FreshKv {
+/// The fresh Q/K/V a node projected for a pending sync round: the
+/// generation the round's downlink resolves against.  `q` kicks off the
+/// global attention when the frame arrives; `k`/`v` restore the node's
+/// own rows (a wire downlink never re-ships rows the node already has).
+/// One generation is kept — rounds reference only their own block.
+struct FreshRound {
     block: usize,
     epoch: usize,
+    want_mass: bool,
+    /// `[l_pad, Hq·hd]` query projection for the pending attention.
+    q: HostTensor,
+    /// `[l_pad, Hkv, hd]` fresh K/V (valid rows first).
     k: HostTensor,
     v: HostTensor,
 }
 
-/// One participant's node-side state: identity, positions, the
-/// authoritative per-block decode caches, and the current fresh-KV
-/// generation for delta reassembly.
-struct WireNode {
-    id: usize,
-    pos: Vec<i32>,
-    valid: usize,
-    keep_caches: bool,
-    caches: Vec<BlockCache>,
-    fresh: Option<FreshKv>,
+/// One participant's node-side state: the full [`ParticipantNode`]
+/// (hidden states, masks, decode caches — never serialized) plus the
+/// pending sync round, if any.
+struct EngineNode {
+    node: ParticipantNode,
+    fresh: Option<FreshRound>,
 }
 
-/// Resolve a delta downlink against the node's cached fresh KV, or fail
-/// with a *protocol error* (which the serve loop reports as a `Fault`
-/// control frame) — never a panic: the frame is untrusted input.
+/// Restore the attendee's own rows in a full downlink frame from the
+/// fresh KV it contributed this round.
+///
+/// The driver aggregates *wire contributions*, which carry only the
+/// transmitted rows — every untransmitted row in the packed frame is
+/// zero.  Other participants' untransmitted rows are masked for this
+/// attendee anyway, but its *own* rows are always visible, so they must
+/// come from the node's fresh KV (bit-identical to what an in-process
+/// session reads from its own tensors).  A hostile row id is a protocol
+/// error, never an out-of-bounds read.
+fn substitute_own_rows(
+    f: &mut GlobalKvFrame,
+    me: usize,
+    fresh_k: &HostTensor,
+    fresh_v: &HostTensor,
+    valid: usize,
+) -> Result<()> {
+    let row_len = f.kv_heads * f.head_dim;
+    let fresh_row_len = fresh_k.shape()[1] * fresh_k.shape()[2];
+    anyhow::ensure!(
+        row_len == fresh_row_len,
+        "frame row geometry {row_len} != node geometry {fresh_row_len}"
+    );
+    anyhow::ensure!(
+        f.k.len() == f.meta.len() * row_len && f.v.len() == f.k.len(),
+        "frame k/v length mismatch"
+    );
+    for (j, m) in f.meta.iter().enumerate() {
+        if m.owner != me {
+            continue;
+        }
+        anyhow::ensure!(
+            m.row < valid,
+            "frame row id {} out of range ({valid} own rows)",
+            m.row
+        );
+        let dst = j * row_len..(j + 1) * row_len;
+        let src = m.row * row_len..(m.row + 1) * row_len;
+        f.k[dst.clone()].copy_from_slice(&fresh_k.data()[src.clone()]);
+        f.v[dst].copy_from_slice(&fresh_v.data()[src]);
+    }
+    Ok(())
+}
+
+/// Resolve a delta downlink against the node's fresh KV for the pending
+/// round, or fail with a *protocol error* (which the serve loop reports
+/// as a `Fault` control frame) — never a panic: the frame is untrusted
+/// input.
 ///
 /// Rejects a delta addressed to another participant, one referencing a
-/// `(block, epoch)` generation the node does not hold (cache miss /
-/// stale epoch — the driver is expected to fall back to a full frame in
-/// those cases), and any retain id outside the fresh rows (validated in
-/// [`GlobalKvDeltaFrame::reassemble`]).
-fn delta_to_full_frame(
+/// `(block, epoch)` generation the node does not hold (no pending round
+/// / stale epoch — the driver is expected to fall back to a full frame
+/// in those cases), and any retain id outside the fresh rows (validated
+/// in [`GlobalKvDeltaFrame::reassemble`]).
+fn resolve_delta(
     node_id: usize,
-    fresh: Option<&FreshKv>,
+    valid: usize,
+    fresh: Option<&FreshRound>,
     d: &GlobalKvDeltaFrame,
 ) -> Result<GlobalKvFrame> {
     anyhow::ensure!(
@@ -910,21 +1009,27 @@ fn delta_to_full_frame(
         .ok_or_else(|| {
             anyhow::anyhow!(
                 "delta frame for block {} epoch {} without a matching fresh KV \
-                 (cache miss or stale epoch)",
+                 (no pending round or stale epoch)",
                 d.block,
                 d.epoch
             )
         })?;
-    let rows = fresh.k.shape()[0];
-    Ok(d.reassemble(fresh.k.data(), fresh.v.data(), rows)?)
+    let row_len = fresh.k.shape()[1] * fresh.k.shape()[2];
+    Ok(d.reassemble(
+        &fresh.k.data()[..valid * row_len],
+        &fresh.v.data()[..valid * row_len],
+        valid,
+    )?)
 }
 
-/// The node-side half of the wire protocol: owns one participant's
-/// decode caches and an [`Engine`] (for decoding), and answers the
-/// driver's frames until `Shutdown` or a clean close.
+/// The node-side half of the wire protocol: owns one participant's full
+/// state — engine, token ids, hidden states, decode caches — and
+/// answers the driver's message turns until `Shutdown` or a clean
+/// close.  Hidden states and embeddings never leave this struct.
 ///
 /// A faulting request sends a `Fault` control frame back (so the driver
-/// fails the session with the node's error) before the loop exits.
+/// can demote the node or fail the session with the node's error)
+/// before the loop exits.
 pub struct NodeHost {
     engine: Engine,
     transport: Box<dyn Transport>,
@@ -938,7 +1043,7 @@ impl NodeHost {
     /// Serve one driver session to completion.  Returns `Ok(())` on
     /// `Shutdown` or a clean peer close.
     pub fn serve(mut self) -> Result<()> {
-        let mut node: Option<WireNode> = None;
+        let mut node: Option<EngineNode> = None;
         loop {
             let frame = match self.transport.recv() {
                 Ok(f) => f,
@@ -957,128 +1062,199 @@ impl NodeHost {
         }
     }
 
-    /// Fold a (possibly delta-reassembled) downlink frame into the
-    /// node's decode cache for its block.
-    fn absorb_round_frame(node: &mut WireNode, f: &GlobalKvFrame) -> Result<()> {
-        anyhow::ensure!(node.keep_caches, "frame sent to a cache-less node");
-        anyhow::ensure!(f.block < node.caches.len(), "frame block {} out of range", f.block);
-        let g = f.to_global(f.rows())?;
-        let cache = &node.caches[f.block];
-        // Reject (as a Fault, not a panic) a well-formed frame that would
-        // overflow the decode cache — push_rows asserts, and an assert on
-        // untrusted input would kill the serving thread without telling
-        // the driver.
+    /// Run the pending round's global attention over a (possibly
+    /// delta-reassembled) downlink frame: rebuild the padded global KV,
+    /// mask it for this attendee, compute attention masses when the
+    /// driver asked for them, advance the hidden state, and fold the
+    /// round into the decode caches.
+    fn attend(&mut self, en: &mut EngineNode, fresh: &FreshRound, f: &GlobalKvFrame) -> Result<()> {
         anyhow::ensure!(
-            cache.len + g.rows() <= cache.k.shape()[0],
-            "frame rows {} overflow decode cache ({}/{} used)",
-            g.rows(),
-            cache.len,
-            cache.k.shape()[0]
+            f.block == fresh.block,
+            "downlink frame for block {} but the pending round is block {}",
+            f.block,
+            fresh.block
         );
-        let vis: Vec<bool> =
-            g.meta.iter().map(|r| r.owner == node.id || r.transmitted).collect();
-        node.caches[f.block].push_rows(&g.k, &g.v, g.rows(), &vis);
+        let rows = f.rows();
+        let g_pad = self.engine.manifest.pick_g(rows)?;
+        let g = f.to_global(g_pad)?;
+        let (kv_pos, kv_owner, kv_tx) = g.meta_columns();
+        let node = &mut en.node;
+        let mask = global_mask(
+            &node.pos_pad,
+            node.valid,
+            g_pad,
+            &kv_pos,
+            &kv_owner,
+            &kv_tx,
+            rows,
+            node.id(),
+        );
+        let mass = fresh
+            .want_mass
+            .then(|| attention_mass(&fresh.q, &g.k, &mask, node.valid, rows));
+        let xo = self.engine.attn_ffn(f.block, &node.x, &fresh.q, &g.k, &g.v, &mask)?;
+        node.set_hidden(xo);
+        if node.keeps_caches() {
+            node.absorb_frame(f.block, &g)?;
+        }
+        if let Some(mass) = mass {
+            let msg = CtrlMsg::RoundMass { block: f.block, epoch: fresh.epoch, mass };
+            self.transport.send(&msg.encode())?;
+        }
         Ok(())
     }
 
     /// Dispatch one frame; `Ok(true)` ends the serve loop.
-    fn handle(&mut self, frame: &[u8], node: &mut Option<WireNode>) -> Result<bool> {
+    fn handle(&mut self, frame: &[u8], en: &mut Option<EngineNode>) -> Result<bool> {
         if let Some(kind) = wire_kind(frame) {
             match kind {
                 WireKind::Frame => {
-                    let f = GlobalKvFrame::decode(frame)?;
-                    let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("frame before init"))?;
-                    Self::absorb_round_frame(node, &f)?;
+                    let mut f = GlobalKvFrame::decode(frame)?;
+                    let en = en.as_mut().ok_or_else(|| anyhow::anyhow!("frame before join"))?;
+                    let fresh = en.fresh.take().ok_or_else(|| {
+                        anyhow::anyhow!("downlink frame without a pending sync round")
+                    })?;
+                    substitute_own_rows(
+                        &mut f,
+                        en.node.id(),
+                        &fresh.k,
+                        &fresh.v,
+                        en.node.valid,
+                    )?;
+                    self.attend(en, &fresh, &f)?;
                     return Ok(false);
                 }
                 WireKind::DeltaFrame => {
                     let d = GlobalKvDeltaFrame::decode(frame)?;
-                    let node = node
+                    let en = en
                         .as_mut()
-                        .ok_or_else(|| anyhow::anyhow!("delta frame before init"))?;
+                        .ok_or_else(|| anyhow::anyhow!("delta frame before join"))?;
+                    let fresh = en.fresh.take().ok_or_else(|| {
+                        anyhow::anyhow!("delta frame without a pending sync round")
+                    })?;
                     // Any bad reference — wrong attendee, unknown
                     // (block, epoch) generation, out-of-range retain id —
                     // is a protocol error reported as a Fault frame.
-                    let f = delta_to_full_frame(node.id, node.fresh.as_ref(), &d)?;
-                    Self::absorb_round_frame(node, &f)?;
+                    let f = resolve_delta(en.node.id(), en.node.valid, Some(&fresh), &d)?;
+                    self.attend(en, &fresh, &f)?;
                     return Ok(false);
                 }
                 other => anyhow::bail!("unexpected protocol frame {other:?} at node host"),
             }
         }
         match CtrlMsg::decode(frame)? {
-            CtrlMsg::Init {
-                id, n_layers, kv_heads, head_dim, cache_capacity, keep_caches, pos,
-            } => {
-                if keep_caches {
-                    validate_init_geometry(n_layers, kv_heads, head_dim, cache_capacity)?;
-                }
-                let caches = if keep_caches {
-                    (0..n_layers)
-                        .map(|_| BlockCache::new(cache_capacity, kv_heads, head_dim))
-                        .collect()
-                } else {
-                    Vec::new()
-                };
-                let valid = pos.len();
-                *node = Some(WireNode { id, pos, valid, keep_caches, caches, fresh: None });
-                Ok(false)
-            }
-            CtrlMsg::Contribute { block, epoch, kv_heads, head_dim, tx, relevance, k, v } => {
-                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("contribute before init"))?;
-                anyhow::ensure!(tx.len() == node.valid, "tx flags != node rows");
-                let kt = HostTensor::new(&[node.valid, kv_heads, head_dim], k)?;
-                let vt = HostTensor::new(&[node.valid, kv_heads, head_dim], v)?;
-                let rel: Option<Vec<f64>> =
-                    relevance.map(|r| r.iter().map(|&x| x as f64).collect());
-                let c = KvContribution::from_rows(
-                    block,
-                    node.id,
-                    &kt,
-                    &vt,
-                    &node.pos,
-                    &tx,
-                    rel.as_deref(),
-                );
-                self.transport.send(&c.encode())?;
-                if node.keep_caches {
-                    // This generation is what a delta downlink's
-                    // retain-list will resolve against.
-                    node.fresh = Some(FreshKv { block, epoch, k: kt, v: vt });
-                }
-                Ok(false)
-            }
-            CtrlMsg::AbsorbLocal { block, kv_heads, head_dim, rows, k, v } => {
-                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("absorb before init"))?;
-                anyhow::ensure!(node.keep_caches, "absorb-local sent to a cache-less node");
-                anyhow::ensure!(rows == node.valid, "absorb rows != node rows");
-                anyhow::ensure!(block < node.caches.len(), "absorb block {block} out of range");
-                let cache = &node.caches[block];
+            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos } => {
+                anyhow::ensure!(en.is_none(), "duplicate join for participant {id}");
                 anyhow::ensure!(
-                    cache.len + rows <= cache.k.shape()[0],
-                    "absorb rows {rows} overflow decode cache ({}/{} used)",
-                    cache.len,
-                    cache.k.shape()[0]
+                    ids.len() == pos.len(),
+                    "join carries {} ids but {} positions",
+                    ids.len(),
+                    pos.len()
                 );
-                let kt = HostTensor::new(&[rows, kv_heads, head_dim], k)?;
-                let vt = HostTensor::new(&[rows, kv_heads, head_dim], v)?;
-                let vis = vec![true; rows];
-                node.caches[block].push_rows(&kt, &vt, rows, &vis);
+                let vocab = self.engine.manifest.model.vocab_size;
+                anyhow::ensure!(
+                    ids.iter().all(|&t| t >= 0 && (t as usize) < vocab),
+                    "join token ids out of vocabulary range (vocab {vocab})"
+                );
+                // The handshake announces the session's round deadline:
+                // derive the read timeout from it so a long-deadline
+                // session doesn't spuriously drop a slow-but-on-time
+                // driver (and a short one fails fast).
+                self.transport
+                    .set_recv_timeout(read_timeout_for_deadline(round_deadline_ms))?;
+                let node = ParticipantNode::build(&self.engine, id, &ids, pos, keep_caches)?;
+                let md = &self.engine.manifest.model;
+                let ack = CtrlMsg::JoinAck {
+                    id,
+                    valid: node.valid_rows(),
+                    n_layers: md.n_layers,
+                    kv_heads: md.n_kv_heads,
+                    head_dim: md.head_dim,
+                };
+                *en = Some(EngineNode { node, fresh: None });
+                self.transport.send(&ack.encode())?;
                 Ok(false)
             }
-            CtrlMsg::Decode { total_len, max_new_tokens, device_decode, h_last } => {
-                let node = node.as_mut().ok_or_else(|| anyhow::anyhow!("decode before init"))?;
-                anyhow::ensure!(node.keep_caches, "decode requested from a cache-less node");
+            CtrlMsg::AdvanceLocal { block } => {
+                let en = en.as_mut().ok_or_else(|| anyhow::anyhow!("advance before join"))?;
+                let n_layers = self.engine.manifest.model.n_layers;
+                anyhow::ensure!(
+                    block < n_layers,
+                    "local block {block} out of range ({n_layers} layers)"
+                );
+                let node = &mut en.node;
+                let (xo, k, v) =
+                    self.engine.block_fused(block, &node.x, &node.pos_pad, &node.lmask)?;
+                node.set_hidden(xo);
+                if node.keeps_caches() {
+                    node.absorb_local(block, &k, &v)?;
+                }
+                Ok(false)
+            }
+            CtrlMsg::AdvanceSync { block, epoch, attendee, want_mass, tx, relevance } => {
+                let en = en.as_mut().ok_or_else(|| anyhow::anyhow!("advance before join"))?;
+                let n_layers = self.engine.manifest.model.n_layers;
+                anyhow::ensure!(
+                    block < n_layers,
+                    "sync block {block} out of range ({n_layers} layers)"
+                );
+                anyhow::ensure!(
+                    tx.len() == en.node.valid,
+                    "tx flags {} != node rows {}",
+                    tx.len(),
+                    en.node.valid
+                );
+                if let Some(rel) = &relevance {
+                    anyhow::ensure!(
+                        rel.len() == en.node.valid,
+                        "relevance {} != node rows {}",
+                        rel.len(),
+                        en.node.valid
+                    );
+                }
+                let rel64: Option<Vec<f64>> =
+                    relevance.map(|r| r.iter().map(|&x| x as f64).collect());
+                if attendee {
+                    // Attendee: project QKV, contribute, and hold the
+                    // fresh generation until the round's downlink frame
+                    // arrives — the hidden state advances in attend().
+                    let (q, k, v) =
+                        self.engine.qkv_project(block, &en.node.x, &en.node.pos_pad)?;
+                    let c = en.node.contribute(block, &k, &v, &tx, rel64.as_deref())?;
+                    self.transport.send(&c.encode())?;
+                    en.fresh = Some(FreshRound { block, epoch, want_mass, q, k, v });
+                } else {
+                    // On-time non-attendee: contribute the fresh KV but
+                    // advance on the local path, exactly like the
+                    // in-process driver.
+                    let (xo, k, v) =
+                        self.engine.block_fused(block, &en.node.x, &en.node.pos_pad, &en.node.lmask)?;
+                    let c = en.node.contribute(block, &k, &v, &tx, rel64.as_deref())?;
+                    self.transport.send(&c.encode())?;
+                    en.node.set_hidden(xo);
+                    if en.node.keeps_caches() {
+                        en.node.absorb_local(block, &k, &v)?;
+                    }
+                }
+                Ok(false)
+            }
+            CtrlMsg::DecodeStart { total_len, max_new_tokens, device_decode } => {
+                let en = en.as_mut().ok_or_else(|| anyhow::anyhow!("decode before join"))?;
+                anyhow::ensure!(
+                    en.node.keeps_caches(),
+                    "decode requested from a cache-less node"
+                );
                 // Untrusted scalar bounds the decode loop.
                 anyhow::ensure!(
                     max_new_tokens <= MAX_DECODE_TOKENS,
                     "decode horizon {max_new_tokens} exceeds cap {MAX_DECODE_TOKENS}"
                 );
-                let d = h_last.len();
-                let h = HostTensor::new(&[1, d], h_last)?;
+                // Fallible: a zero-valid-row shard has no last token; the
+                // error travels back as a Fault instead of a panic.
+                let h = en.node.last_hidden()?;
                 let ids = decode_ids_from_caches(
                     &self.engine,
-                    &mut node.caches,
+                    &mut en.node.caches,
                     &h,
                     total_len,
                     max_new_tokens,
@@ -1091,7 +1267,10 @@ impl NodeHost {
                 Ok(false)
             }
             CtrlMsg::Shutdown => Ok(true),
-            other @ (CtrlMsg::DecodeDone { .. } | CtrlMsg::Fault { .. }) => {
+            other @ (CtrlMsg::JoinAck { .. }
+            | CtrlMsg::RoundMass { .. }
+            | CtrlMsg::DecodeDone { .. }
+            | CtrlMsg::Fault { .. }) => {
                 anyhow::bail!("unexpected {} control frame at node host", other.name())
             }
         }
@@ -1104,13 +1283,16 @@ impl NodeHost {
 
 /// [`SessionDriver`] deployed over transports: one [`RemoteParticipant`]
 /// per node, the same round loop (deadline-driven partial aggregation
-/// included), every protocol-plane message crossing a real link.
+/// included), every block forward pass running at its node host.
 ///
-/// With `round_deadline_ms = None`, a session run through this driver is
-/// byte-identical — generated tokens, per-round byte accounting — to the
-/// in-process [`FedSession`] (pinned by `tests/transport_golden.rs`
-/// across all six KV policies over both channel and TCP-loopback
-/// transports).
+/// A node whose transport fails mid-session is demoted: excluded from
+/// the remaining rounds exactly like a deadline miss (PR 4's partial
+/// aggregation), with its decode answer reported as absent.  With
+/// `round_deadline_ms = None` and no churn, a session run through this
+/// driver is byte-identical — generated tokens, per-round byte
+/// accounting — to the in-process [`FedSession`] (pinned by
+/// `tests/transport_golden.rs` across all six KV policies over both
+/// channel and TCP-loopback transports).
 ///
 /// [`FedSession`]: crate::fedattn::session::FedSession
 pub struct TransportDriver<'a> {
@@ -1119,7 +1301,8 @@ pub struct TransportDriver<'a> {
 
 impl<'a> TransportDriver<'a> {
     /// Connect a session to `transports[p]` for participant `p` (each
-    /// leading to a [`NodeHost`]).  Sends every node its `Init` frame.
+    /// leading to a [`NodeHost`]).  Runs the `Join` handshake with every
+    /// node.
     pub fn new(
         engine: &'a Engine,
         partition: &'a Partition,
@@ -1204,10 +1387,7 @@ mod tests {
             read_frame(&mut Cursor::new(bytes)),
             Err(TransportError::TruncatedFrame(_))
         ));
-        // A partial length prefix at EOF is a clean close (peer finished
-        // between frames as far as framing can tell it apart from 0
-        // bytes) only when *no* bytes arrived; otherwise it's Closed at
-        // the prefix boundary per read_exact semantics.
+        // No bytes at all is a clean close.
         assert!(matches!(
             read_frame(&mut Cursor::new(Vec::new())),
             Err(TransportError::Closed)
@@ -1240,6 +1420,25 @@ mod tests {
     }
 
     #[test]
+    fn set_recv_timeout_rearms_both_transports() {
+        // Channel: a long initial timeout re-armed down to 10 ms times
+        // out promptly (the serve loop does exactly this after Join).
+        let (mut a, _b) = ChannelTransport::pair();
+        a.set_recv_timeout(Duration::from_millis(10)).unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(matches!(a.recv(), Err(TransportError::Timeout)));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // TCP: the socket accepts a re-armed read timeout and reports
+        // Timeout when no peer bytes arrive.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _peer = std::thread::spawn(move || listener.accept().unwrap());
+        let mut c = TcpTransport::connect(addr).unwrap();
+        c.set_recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(matches!(c.recv(), Err(TransportError::Timeout)));
+    }
+
+    #[test]
     fn tcp_loopback_roundtrips() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -1260,49 +1459,40 @@ mod tests {
     #[test]
     fn ctrl_messages_roundtrip() {
         let msgs = [
-            CtrlMsg::Init {
+            CtrlMsg::Join {
                 id: 2,
-                n_layers: 4,
-                kv_heads: 1,
-                head_dim: 2,
-                cache_capacity: 32,
                 keep_caches: true,
+                round_deadline_ms: Some(750.5),
+                ids: vec![7, 8, 9],
                 pos: vec![3, 4, 5],
             },
-            CtrlMsg::Contribute {
+            CtrlMsg::Join {
+                id: 0,
+                keep_caches: false,
+                round_deadline_ms: None,
+                ids: vec![],
+                pos: vec![],
+            },
+            CtrlMsg::JoinAck { id: 2, valid: 3, n_layers: 8, kv_heads: 2, head_dim: 24 },
+            CtrlMsg::AdvanceLocal { block: 5 },
+            CtrlMsg::AdvanceSync {
                 block: 1,
                 epoch: 3,
-                kv_heads: 1,
-                head_dim: 2,
+                attendee: true,
+                want_mass: true,
                 tx: vec![true, false, true],
                 relevance: Some(vec![0.5, 1.5, 2.5]),
-                k: vec![1.0; 6],
-                v: vec![-1.0; 6],
             },
-            CtrlMsg::Contribute {
+            CtrlMsg::AdvanceSync {
                 block: 0,
                 epoch: 0,
-                kv_heads: 1,
-                head_dim: 1,
+                attendee: false,
+                want_mass: false,
                 tx: vec![true],
                 relevance: None,
-                k: vec![0.25],
-                v: vec![0.75],
             },
-            CtrlMsg::AbsorbLocal {
-                block: 3,
-                kv_heads: 2,
-                head_dim: 2,
-                rows: 2,
-                k: vec![2.0; 8],
-                v: vec![3.0; 8],
-            },
-            CtrlMsg::Decode {
-                total_len: 40,
-                max_new_tokens: 12,
-                device_decode: true,
-                h_last: vec![0.1, 0.2, 0.3],
-            },
+            CtrlMsg::RoundMass { block: 2, epoch: 1, mass: vec![0.25, -1.5, 1e300] },
+            CtrlMsg::DecodeStart { total_len: 40, max_new_tokens: 12, device_decode: true },
             CtrlMsg::DecodeDone { tokens: 7 },
             CtrlMsg::Shutdown,
             CtrlMsg::Fault { message: "engine exploded".into() },
@@ -1325,21 +1515,27 @@ mod tests {
         assert!(CtrlMsg::decode(&[CTRL_MAGIC]).is_err());
         // Unknown tag.
         assert!(CtrlMsg::decode(&[CTRL_MAGIC, 0x7F, 1]).is_err());
-        // Hostile row count in a contribute header must fail before
-        // allocating.
-        let mut msg = vec![CTRL_MAGIC, CTRL_CONTRIBUTE, 1];
-        for field in [0u32, 0, 1, 1, u32::MAX] {
-            msg.extend_from_slice(&field.to_le_bytes());
-        }
+        // Hostile row count in an advance-sync header must fail before
+        // allocating: block, epoch, attendee, want_mass, rows=u32::MAX.
+        let mut msg = vec![CTRL_MAGIC, CTRL_ADVANCE_SYNC, 1];
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.push(1);
+        msg.push(0);
+        msg.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(CtrlMsg::decode(&msg).is_err());
+        // Hostile mass count likewise.
+        let mut msg = vec![CTRL_MAGIC, CTRL_ROUND_MASS, 1];
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(CtrlMsg::decode(&msg).is_err());
         // Every truncation of a valid message errors cleanly.
-        let full = CtrlMsg::Init {
+        let full = CtrlMsg::Join {
             id: 1,
-            n_layers: 2,
-            kv_heads: 1,
-            head_dim: 2,
-            cache_capacity: 8,
             keep_caches: true,
+            round_deadline_ms: Some(250.0),
+            ids: vec![5, 6],
             pos: vec![0, 1],
         }
         .encode();
@@ -1368,13 +1564,13 @@ mod tests {
         assert!(read_timeout_for_deadline(Some(120_000.0)) > DEFAULT_IO_TIMEOUT);
     }
 
-    fn fresh(block: usize, epoch: usize, rows: usize) -> FreshKv {
+    fn fresh(block: usize, epoch: usize, rows: usize) -> FreshRound {
         let mut k = HostTensor::zeros(&[rows, 1, 2]);
         for i in 0..rows {
             k.row_mut(i).fill(10.0 + i as f32);
         }
         let v = k.clone();
-        FreshKv { block, epoch, k, v }
+        FreshRound { block, epoch, want_mass: false, q: HostTensor::zeros(&[1, 2]), k, v }
     }
 
     /// Delta frame for node 0: one own row (retain id 0) + one shipped
@@ -1404,32 +1600,56 @@ mod tests {
         let f = fresh(2, 5, 1);
         // Matching generation: reassembles, and the retained row comes
         // from the node's fresh KV bit-for-bit.
-        let full = delta_to_full_frame(0, Some(&f), &d).unwrap();
+        let full = resolve_delta(0, 1, Some(&f), &d).unwrap();
         assert_eq!(full.rows(), 2);
         assert_eq!(&full.k[..2], f.k.row(0));
         // Wrong attendee.
-        assert!(delta_to_full_frame(1, Some(&f), &d).is_err());
-        // No fresh KV at all (cache miss).
-        assert!(delta_to_full_frame(0, None, &d).is_err());
+        assert!(resolve_delta(1, 1, Some(&f), &d).is_err());
+        // No pending round at all.
+        assert!(resolve_delta(0, 1, None, &d).is_err());
         // Stale epoch / wrong block generations.
-        assert!(delta_to_full_frame(0, Some(&fresh(2, 4, 1)), &d).is_err());
-        assert!(delta_to_full_frame(0, Some(&fresh(1, 5, 1)), &d).is_err());
+        assert!(resolve_delta(0, 1, Some(&fresh(2, 4, 1)), &d).is_err());
+        assert!(resolve_delta(0, 1, Some(&fresh(1, 5, 1)), &d).is_err());
         // Unknown retain id: protocol error from reassemble, not a panic.
         let mut bad = d.clone();
         bad.retain[0] = 7;
-        assert!(delta_to_full_frame(0, Some(&f), &bad).is_err());
+        assert!(resolve_delta(0, 1, Some(&f), &bad).is_err());
     }
 
     #[test]
-    fn init_geometry_validation_blocks_hostile_scalars() {
-        // Realistic geometry (tiny model: layers x capacity x heads x dim).
-        assert!(validate_init_geometry(8, 2, 16, 256).is_ok());
-        // All-max scalars overflow the product: rejected, not wrapped.
-        let m = usize::MAX;
-        assert!(validate_init_geometry(m, m, m, m).is_err());
-        // Non-overflowing but absurd request: rejected by the byte cap
-        // before any allocation.
-        assert!(validate_init_geometry(4096, 64, 1024, 1 << 20).is_err());
+    fn substitute_own_rows_restores_fresh_kv() {
+        // A wire-aggregated frame carries zeros for untransmitted rows —
+        // including the attendee's own.  Substitution must restore the
+        // node's own rows from its fresh KV and leave remote rows alone.
+        let fr = fresh(1, 0, 2);
+        let own = fr.k.clone();
+        let remote = {
+            let mut t = HostTensor::zeros(&[1, 1, 2]);
+            t.row_mut(0).fill(99.0);
+            t
+        };
+        // Own row 1 untransmitted: the packed frame has zeros there.
+        let zeros = HostTensor::zeros(&[2, 1, 2]);
+        let g = crate::fedattn::kv::GlobalKv::pack(
+            &[
+                (&zeros, &zeros.clone(), &[0, 1][..], 2, &[true, false][..]),
+                (&remote, &remote.clone(), &[2][..], 1, &[true][..]),
+            ],
+            4,
+        )
+        .unwrap();
+        let mut f = GlobalKvFrame::from_global(1, &g);
+        substitute_own_rows(&mut f, 0, &own, &fr.v, 2).unwrap();
+        // Both own rows (transmitted or not) now hold the fresh KV.
+        assert_eq!(&f.k[..2], own.row(0));
+        assert_eq!(&f.k[2..4], own.row(1));
+        // The remote row is untouched.
+        assert_eq!(&f.k[4..6], remote.row(0));
+        // A hostile own-row id beyond the node's valid rows is an error,
+        // not an out-of-bounds read.
+        let mut bad = f.clone();
+        bad.meta[1].row = 9;
+        assert!(substitute_own_rows(&mut bad, 0, &own, &fr.v, 2).is_err());
     }
 
     #[test]
@@ -1442,7 +1662,7 @@ mod tests {
             // the magic/tag checks and into the length-validation paths.
             if rng.bernoulli(0.5) && bytes.len() >= 3 {
                 bytes[0] = CTRL_MAGIC;
-                bytes[1] = 1 + rng.below(7) as u8;
+                bytes[1] = 1 + rng.below(9) as u8;
                 bytes[2] = 1; // wire version
             }
             if let Ok(msg) = CtrlMsg::decode(&bytes) {

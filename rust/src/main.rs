@@ -93,9 +93,13 @@ fn print_help() {
                                       already hold; off ships+bills full frames\n\
            --listen <addr>            node: accept driver connections here\n\
                                       (default 127.0.0.1:7070)\n\
-           --connect <a1[,a2,...]>    run: drive participants over TCP; each\n\
-                                      participant connects round-robin to the\n\
-                                      listed node hosts\n\
+           --engine <dir>             node: load the host's own engine from\n\
+                                      this artifact dir (node-resident compute;\n\
+                                      default: the shared --artifacts path)\n\
+           --connect <a1[,a2,...]>    run/serve: drive participants over TCP;\n\
+                                      each participant connects round-robin to\n\
+                                      the listed node hosts, which run all\n\
+                                      block compute and decode locally\n\
            --time-scale <f>           compress trace inter-arrival gaps by f\n\
                                       (serve; default TOML serving.time_scale,\n\
                                       else 10)\n\
@@ -143,6 +147,15 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(on) = fedattn::cli::parse_delta_frames(args)? {
         f.delta_frames = on;
+    }
+    if let Some(addr) = args.opt("listen") {
+        sc.node.listen = addr.to_string();
+    }
+    if let Some(dir) = fedattn::cli::parse_node_engine(args) {
+        sc.node.engine_dir = Some(dir);
+    }
+    if let Some(hosts) = fedattn::cli::parse_connect(args)? {
+        sc.node.connect = Some(hosts);
     }
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
     sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
@@ -195,8 +208,8 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let sc = load_config(args)?;
-    if let Some(spec) = args.opt("connect") {
-        return cmd_run_wire(args, &sc, spec);
+    if let Some(addrs) = sc.node.connect.clone() {
+        return cmd_run_wire(args, &sc, &addrs);
     }
     let engine = build_engine(&sc)?;
     let coord = Coordinator::new(engine, CoordinatorConfig::from_system(&sc));
@@ -219,13 +232,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `run --connect a1[,a2,...]` — the same one-shot collaborative task,
-/// but with every participant's protocol plane behind a TCP transport:
-/// participant `p` connects (round-robin) to the listed `fedattn node`
-/// hosts.  With no `--round-deadline`, the answer and comm bytes are
-/// byte-identical to the in-process `run`.
-fn cmd_run_wire(args: &Args, sc: &SystemConfig, spec: &str) -> Result<()> {
-    let addrs: Vec<&str> = spec.split(',').filter(|s| !s.is_empty()).collect();
+/// `run --connect a1[,a2,...]` (or TOML `node.connect`) — the same
+/// one-shot collaborative task, node-resident: every participant's block
+/// compute and decode run at the listed `fedattn node` hosts (round-robin
+/// per participant) on the hosts' own engines, and only protocol messages
+/// cross the wire.  The answer and comm bytes are byte-identical to the
+/// in-process `run`.
+fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> {
     anyhow::ensure!(!addrs.is_empty(), "--connect needs at least one host:port");
     let engine = build_engine(sc)?;
     let md = engine.manifest.model.clone();
@@ -253,7 +266,7 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, spec: &str) -> Result<()> {
         fedattn::fedattn::transport::read_timeout_for_deadline(scfg.round_deadline_ms);
     let transports: Vec<Box<dyn Transport>> = (0..n)
         .map(|p| {
-            let addr = addrs[p % addrs.len()];
+            let addr = addrs[p % addrs.len()].as_str();
             TcpTransport::connect(addr)
                 .and_then(|t| t.with_read_timeout(io_timeout))
                 .map(|t| Box::new(t) as Box<dyn Transport>)
@@ -286,16 +299,27 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, spec: &str) -> Result<()> {
     Ok(())
 }
 
-/// `node --listen addr` — host participant nodes for wire-mode drivers.
-/// Each accepted connection gets its own serving thread (and engine
-/// clone), so one process can host every participant of a session.
+/// `node --listen addr [--engine dir]` — host participant nodes for
+/// wire-mode drivers.  The host owns its participants outright: block
+/// forward passes, decode caches and token generation all run here, on
+/// this process's engine — loaded from `--engine` (or TOML
+/// `node.engine_dir`) when the node keeps its own artifact set, falling
+/// back to the shared `--artifacts` path for single-machine demos.  Each
+/// accepted connection gets its own serving thread (and engine clone), so
+/// one process can host every participant of a session.
 fn cmd_node(args: &Args) -> Result<()> {
     let sc = load_config(args)?;
-    let engine = build_engine(&sc)?;
-    let addr = args.opt_or("listen", "127.0.0.1:7070");
+    let engine_dir =
+        sc.node.engine_dir.clone().unwrap_or_else(|| sc.artifacts_dir.clone());
+    let engine = Engine::load(&engine_dir, &sc.weights_file)
+        .with_context(|| format!("loading node engine from {}", engine_dir.display()))?;
+    let addr = sc.node.listen.as_str();
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("binding node host to {addr}"))?;
-    println!("node host listening on {addr} (Ctrl-C to stop)");
+    println!(
+        "node host listening on {addr} (engine: {}; Ctrl-C to stop)",
+        engine_dir.display()
+    );
     loop {
         // A transient accept failure (peer RST during the handshake, fd
         // pressure) must not take down sessions served by other threads.

@@ -23,13 +23,16 @@
 
 use std::net::TcpListener;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use fedattn::data::{gen_episode, partition, Segmentation};
 use fedattn::fedattn::{
-    ChannelTransport, FedSession, GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame,
-    KvContribution, KvExchangePolicy, NodeHost, SessionConfig, SessionReport,
-    SyncSchedule, TcpTransport, Transport, TransportDriver,
+    wire_kind, ChannelTransport, CtrlMsg, FedSession, GlobalKv, GlobalKvDeltaFrame,
+    GlobalKvFrame, KvContribution, KvExchangePolicy, LocalSparsity, NodeHost,
+    SessionConfig, SessionReport, SyncSchedule, TcpTransport, Transport,
+    TransportDriver, TransportError, WireKind,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::runtime::Engine;
@@ -604,4 +607,329 @@ fn deadlines_shrink_communication_and_degrade_gracefully() {
     // Zero deadline on a 4 ms-latency link: nothing arrives in time.
     let (bytes0, rounds0, _) = run(Some(0.0));
     assert_eq!((bytes0, rounds0), (0, 0), "zero deadline must silence every round");
+}
+
+// ---------------------------------------------------------------------------
+// Node-resident compute: wire capture, churn, and edge-case regressions
+// ---------------------------------------------------------------------------
+
+/// Records every frame that crosses it, in both directions, while
+/// forwarding to an inner channel transport.  `sent` is driver → node,
+/// `recvd` is node → driver.
+struct CapturingTransport {
+    inner: ChannelTransport,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+    recvd: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl Transport for CapturingTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        self.sent.lock().unwrap().push(frame.to_vec());
+        self.inner.send(frame)
+    }
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        let frame = self.inner.recv()?;
+        self.recvd.lock().unwrap().push(frame.clone());
+        Ok(frame)
+    }
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.inner.set_recv_timeout(timeout)
+    }
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+/// Forwards to an inner channel transport for a fixed number of
+/// operations, then drops the channel (so the node host sees a clean
+/// close) and fails every further call — a node crashing mid-session.
+struct DyingTransport {
+    inner: Option<ChannelTransport>,
+    ops_left: usize,
+}
+
+impl DyingTransport {
+    fn live(&mut self) -> Result<&mut ChannelTransport, TransportError> {
+        if self.ops_left == 0 {
+            self.inner = None;
+            return Err(TransportError::Closed);
+        }
+        self.ops_left -= 1;
+        self.inner.as_mut().ok_or(TransportError::Closed)
+    }
+}
+
+impl Transport for DyingTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        self.live()?.send(frame)
+    }
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        self.live()?.recv()
+    }
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(t) => t.set_recv_timeout(timeout),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn peer(&self) -> String {
+        "dying-channel".into()
+    }
+}
+
+/// The privacy boundary, asserted on the actual bytes: every frame that
+/// crosses the wire in a node-resident session is either a control
+/// message or a protocol frame (contribution / downlink frame / decode
+/// tail / token broadcast) — there is no message type that could carry a
+/// hidden state or a token embedding, and every untransmitted row in a
+/// downlink frame is all-zero (the un-shipped KV values never left the
+/// driver).  Runs both full-frame and delta downlinks.
+#[test]
+fn wire_carries_only_protocol_messages_no_hidden_state() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    for delta in [false, true] {
+        let mut rng = SplitMix64::new(31);
+        let ep = gen_episode(&mut rng, 4);
+        let part = partition(&ep, n, Segmentation::SemQEx);
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+        cfg.kv_policy = KvExchangePolicy::Random { ratio: 0.5 };
+        cfg.seed = 11;
+        cfg.decode_all = true;
+        cfg.delta_frames = delta;
+        let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        let recvd = Arc::new(Mutex::new(Vec::new()));
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        let mut hosts = Vec::with_capacity(n);
+        for p in 0..n {
+            let (driver_end, node_end) = ChannelTransport::pair();
+            let engine = engine.clone();
+            hosts.push(std::thread::spawn(move || {
+                NodeHost::new(engine, Box::new(node_end))
+                    .serve()
+                    .unwrap_or_else(|e| panic!("node host {p} failed: {e:#}"));
+            }));
+            transports.push(Box::new(CapturingTransport {
+                inner: driver_end,
+                sent: Arc::clone(&sent),
+                recvd: Arc::clone(&recvd),
+            }));
+        }
+        let rep = TransportDriver::new(&engine, &part, cfg, net, transports)
+            .unwrap()
+            .run()
+            .unwrap();
+        for h in hosts {
+            h.join().expect("node host thread panicked");
+        }
+        assert!(rep.generated_tokens > 0);
+
+        let sent = sent.lock().unwrap();
+        let recvd = recvd.lock().unwrap();
+        assert!(!sent.is_empty() && !recvd.is_empty());
+        let (mut contributions, mut frames, mut tokens) = (0usize, 0usize, 0usize);
+        for (dir, frame) in sent
+            .iter()
+            .map(|f| ("driver->node", f))
+            .chain(recvd.iter().map(|f| ("node->driver", f)))
+        {
+            if CtrlMsg::decode(frame).is_ok() {
+                continue; // Typed control message: no tensor payload fields.
+            }
+            match wire_kind(frame) {
+                Some(WireKind::Contribution) => {
+                    KvContribution::decode(frame).unwrap();
+                    contributions += 1;
+                }
+                Some(WireKind::Frame) => {
+                    let f = GlobalKvFrame::decode(frame).unwrap();
+                    let row_len = f.kv_heads * f.head_dim;
+                    for (i, m) in f.meta.iter().enumerate() {
+                        if m.transmitted {
+                            continue;
+                        }
+                        let zeros = |d: &[f32]| {
+                            d[i * row_len..(i + 1) * row_len].iter().all(|&x| x == 0.0)
+                        };
+                        assert!(
+                            zeros(&f.k) && zeros(&f.v),
+                            "untransmitted row {i} (owner {}) carries data on the wire",
+                            m.owner
+                        );
+                    }
+                    frames += 1;
+                }
+                Some(WireKind::DeltaFrame) => {
+                    GlobalKvDeltaFrame::decode(frame).unwrap();
+                    frames += 1;
+                }
+                Some(WireKind::Token) | Some(WireKind::DecodeTail) => tokens += 1,
+                None => panic!("unclassifiable {dir} frame ({} bytes): neither a control message nor a protocol frame", frame.len()),
+            }
+        }
+        assert!(contributions > 0, "no KV contributions captured (delta={delta})");
+        assert!(frames > 0, "no downlink frames captured (delta={delta})");
+        assert!(tokens > 0, "no decode traffic captured (delta={delta})");
+    }
+}
+
+/// A node whose transport dies mid-session is demoted — excluded from
+/// rounds and decode like a deadline miss — while the survivors finish
+/// the session and the publisher still answers.
+#[test]
+fn node_churn_demotes_without_killing_session() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let publisher = part.publisher();
+    let dead = (publisher + 1) % n;
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.seed = 11;
+    cfg.decode_all = true;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    let mut hosts = Vec::with_capacity(n);
+    for p in 0..n {
+        let (driver_end, node_end) = ChannelTransport::pair();
+        let engine = engine.clone();
+        // The dying node's host may exit with a clean close (Ok) or a
+        // mid-frame truncation, depending on where the cut lands.
+        let tolerant = p == dead;
+        hosts.push(std::thread::spawn(move || {
+            let res = NodeHost::new(engine, Box::new(node_end)).serve();
+            if !tolerant {
+                res.unwrap_or_else(|e| panic!("surviving node host {p} failed: {e:#}"));
+            }
+        }));
+        if p == dead {
+            // 8 transport operations: past the 2-op Join handshake, into
+            // the prefill rounds.
+            transports.push(Box::new(DyingTransport { inner: Some(driver_end), ops_left: 8 }));
+        } else {
+            transports.push(Box::new(driver_end));
+        }
+    }
+    let rep = TransportDriver::new(&engine, &part, cfg, net, transports)
+        .unwrap()
+        .run()
+        .unwrap();
+    for h in hosts {
+        h.join().expect("node host thread panicked");
+    }
+    assert!(rep.answers[dead].is_none(), "dead node must not produce an answer");
+    assert!(rep.answers[publisher].is_some(), "publisher must still decode");
+    assert!(!rep.answer.is_empty(), "session answer must survive the churn");
+    assert!(rep.generated_tokens > 0);
+}
+
+/// A hostile `AdvanceLocal` with an out-of-range block index — the
+/// mutated-control-message attack on the old `self.caches[block]` panic
+/// site — draws a `Fault` reply and a clean error from the host, not a
+/// panic.
+#[test]
+fn node_host_faults_on_hostile_block_index() {
+    let Some(engine) = engine() else { return };
+    let (mut driver_end, node_end) = ChannelTransport::pair();
+    let host = std::thread::spawn(move || NodeHost::new(engine, Box::new(node_end)).serve());
+
+    let join = CtrlMsg::Join {
+        id: 0,
+        keep_caches: true,
+        round_deadline_ms: None,
+        ids: vec![1, 2, 3],
+        pos: vec![0, 1, 2],
+    };
+    driver_end.send(&join.encode()).unwrap();
+    let ack = CtrlMsg::decode(&driver_end.recv().unwrap()).unwrap();
+    assert!(
+        matches!(ack, CtrlMsg::JoinAck { id: 0, valid: 3, .. }),
+        "unexpected handshake reply: {ack:?}"
+    );
+
+    driver_end.send(&CtrlMsg::AdvanceLocal { block: 9999 }.encode()).unwrap();
+    match CtrlMsg::decode(&driver_end.recv().unwrap()).unwrap() {
+        CtrlMsg::Fault { message } => {
+            assert!(message.contains("9999"), "fault does not name the bad block: {message}")
+        }
+        other => panic!("expected a fault, got {other:?}"),
+    }
+    assert!(
+        host.join().unwrap().is_err(),
+        "host must stop with an error after a hostile block index"
+    );
+}
+
+/// The node derives its read timeout from the deadline announced in the
+/// `Join` handshake (deadline + grace) instead of keeping whatever the
+/// transport was created with: a node armed with a 150 ms timeout must
+/// survive a 500 ms idle gap once the driver has announced a 60 s round
+/// deadline.
+#[test]
+fn node_read_timeout_derives_from_announced_deadline() {
+    let Some(engine) = engine() else { return };
+    let (mut driver_end, node_end) = ChannelTransport::pair();
+    let node_end = node_end.with_timeout(Duration::from_millis(150));
+    let host = std::thread::spawn(move || NodeHost::new(engine, Box::new(node_end)).serve());
+
+    let join = CtrlMsg::Join {
+        id: 0,
+        keep_caches: false,
+        round_deadline_ms: Some(60_000.0),
+        ids: vec![1, 2, 3],
+        pos: vec![0, 1, 2],
+    };
+    driver_end.send(&join.encode()).unwrap();
+    let ack = CtrlMsg::decode(&driver_end.recv().unwrap()).unwrap();
+    assert!(matches!(ack, CtrlMsg::JoinAck { .. }), "unexpected handshake reply: {ack:?}");
+
+    // Longer than the initial 150 ms arm; within the re-armed deadline +
+    // grace window.  Without the Join-time re-arm the host times out here.
+    std::thread::sleep(Duration::from_millis(500));
+    driver_end.send(&CtrlMsg::AdvanceLocal { block: 0 }.encode()).unwrap();
+    driver_end.send(&CtrlMsg::Shutdown.encode()).unwrap();
+    host.join()
+        .unwrap()
+        .expect("host must outlive an idle gap longer than its initial timeout");
+}
+
+/// A participant whose shard is empty (zero valid rows) is carried
+/// through the session without panicking — the old `last_hidden`
+/// underflow — and is skipped at decode while the publisher still
+/// answers, across local-sparsity presets.
+#[test]
+fn zero_valid_row_participant_is_skipped_not_panicked() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    for ratio in [1.0, 0.6, 0.2] {
+        let mut rng = SplitMix64::new(31);
+        let ep = gen_episode(&mut rng, 4);
+        let mut part = partition(&ep, n, Segmentation::SemQEx);
+        // Empty participant 0's shard outright: local sparsity always
+        // keeps at least one token, so the zero-valid case only arises
+        // from an empty shard — the regression's trigger.
+        part.spans[0] = (part.spans[0].0, part.spans[0].0);
+        let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+        cfg.seed = 11;
+        cfg.decode_all = true;
+        cfg.local_sparsity = LocalSparsity { ratio };
+        let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+        let rep = FedSession::new(&engine, &part, cfg, net).unwrap().run().unwrap();
+        assert!(
+            rep.answers[0].is_none(),
+            "zero-valid participant must be skipped at decode (ratio {ratio})"
+        );
+        assert!(
+            rep.answers[part.publisher()].is_some(),
+            "publisher must still decode (ratio {ratio})"
+        );
+        assert!(!rep.answer.is_empty(), "publisher answer empty (ratio {ratio})");
+    }
 }
