@@ -176,6 +176,78 @@ pub fn parse_delta_frames(args: &Args) -> anyhow::Result<Option<bool>> {
     Ok(None)
 }
 
+/// Churn recovery from `--rejoin` (accepts `on|off|true|false|1|0`; the
+/// bare flag means on, `--no-rejoin` means off).  Returns `Ok(None)`
+/// when neither form is present so callers keep their config default
+/// (off); anything unparsable is an error, not a silent fallback — a
+/// typo'd toggle would corrupt churn experiments.
+pub fn parse_rejoin(args: &Args) -> anyhow::Result<Option<bool>> {
+    if let Some(raw) = args.opt("rejoin") {
+        return match raw {
+            "on" | "true" | "1" => Ok(Some(true)),
+            "off" | "false" | "0" => Ok(Some(false)),
+            other => anyhow::bail!("--rejoin expects on|off|true|false|1|0, got {other:?}"),
+        };
+    }
+    if args.flag("rejoin") {
+        return Ok(Some(true));
+    }
+    if args.flag("no-rejoin") {
+        return Ok(Some(false));
+    }
+    Ok(None)
+}
+
+/// Connect-retry attempt budget from `--retry-max-attempts`.  Returns
+/// `Ok(None)` when absent (callers keep `transport.retry_max_attempts`);
+/// zero or unparsable values are errors — an accidental 0 would mean
+/// "never even try".
+pub fn parse_retry_max_attempts(args: &Args) -> anyhow::Result<Option<u32>> {
+    let Some(raw) = args.opt("retry-max-attempts") else {
+        return Ok(None);
+    };
+    let n: u32 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--retry-max-attempts expects a positive integer, got {raw:?}")
+    })?;
+    anyhow::ensure!(n >= 1, "--retry-max-attempts must be >= 1, got {n}");
+    Ok(Some(n))
+}
+
+/// First-retry backoff in milliseconds from `--retry-backoff-ms`.
+/// Returns `Ok(None)` when absent; negative, NaN, or unparsable values
+/// are errors, not silent fallbacks.
+pub fn parse_retry_backoff_ms(args: &Args) -> anyhow::Result<Option<f64>> {
+    let Some(raw) = args.opt("retry-backoff-ms") else {
+        return Ok(None);
+    };
+    let ms: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--retry-backoff-ms expects a number, got {raw:?}")
+    })?;
+    anyhow::ensure!(
+        ms.is_finite() && ms >= 0.0,
+        "--retry-backoff-ms must be finite and >= 0, got {ms}"
+    );
+    Ok(Some(ms))
+}
+
+/// Socket read-timeout grace window in milliseconds from
+/// `--deadline-grace-ms` (added on top of the round deadline when
+/// deriving read timeouts).  Returns `Ok(None)` when absent; negative,
+/// NaN, or unparsable values are errors, not silent fallbacks.
+pub fn parse_deadline_grace_ms(args: &Args) -> anyhow::Result<Option<f64>> {
+    let Some(raw) = args.opt("deadline-grace-ms") else {
+        return Ok(None);
+    };
+    let ms: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--deadline-grace-ms expects a number, got {raw:?}")
+    })?;
+    anyhow::ensure!(
+        ms.is_finite() && ms >= 0.0,
+        "--deadline-grace-ms must be finite and >= 0, got {ms}"
+    );
+    Ok(Some(ms))
+}
+
 /// Node-host addresses from `--connect a1[,a2,...]` (wire sessions:
 /// participants connect round-robin to the list).  Returns `Ok(None)`
 /// when the flag is absent so callers keep their config default
@@ -312,6 +384,50 @@ mod tests {
             Some(false)
         );
         assert!(parse_delta_frames(&parse(&["--delta-frames", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn rejoin_parse_forms() {
+        assert_eq!(parse_rejoin(&parse(&[])).unwrap(), None);
+        for (raw, want) in [("on", true), ("true", true), ("1", true), ("off", false), ("false", false), ("0", false)] {
+            assert_eq!(parse_rejoin(&parse(&["--rejoin", raw])).unwrap(), Some(want), "{raw}");
+        }
+        assert_eq!(parse_rejoin(&parse(&["--rejoin=off"])).unwrap(), Some(false));
+        // Bare flags.
+        assert_eq!(parse_rejoin(&parse(&["--rejoin"])).unwrap(), Some(true));
+        assert_eq!(parse_rejoin(&parse(&["--no-rejoin"])).unwrap(), Some(false));
+        assert!(parse_rejoin(&parse(&["--rejoin", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn transport_knobs_parse_and_range() {
+        assert_eq!(parse_retry_max_attempts(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_retry_max_attempts(&parse(&["--retry-max-attempts", "5"])).unwrap(),
+            Some(5)
+        );
+        assert!(parse_retry_max_attempts(&parse(&["--retry-max-attempts", "0"])).is_err());
+        assert!(parse_retry_max_attempts(&parse(&["--retry-max-attempts", "lots"])).is_err());
+
+        assert_eq!(parse_retry_backoff_ms(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_retry_backoff_ms(&parse(&["--retry-backoff-ms=12.5"])).unwrap(),
+            Some(12.5)
+        );
+        assert!(parse_retry_backoff_ms(&parse(&["--retry-backoff-ms", "-1"])).is_err());
+        assert!(parse_retry_backoff_ms(&parse(&["--retry-backoff-ms", "NaN"])).is_err());
+
+        assert_eq!(parse_deadline_grace_ms(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_deadline_grace_ms(&parse(&["--deadline-grace-ms", "2000"])).unwrap(),
+            Some(2000.0)
+        );
+        assert_eq!(
+            parse_deadline_grace_ms(&parse(&["--deadline-grace-ms", "0"])).unwrap(),
+            Some(0.0)
+        );
+        assert!(parse_deadline_grace_ms(&parse(&["--deadline-grace-ms", "-5"])).is_err());
+        assert!(parse_deadline_grace_ms(&parse(&["--deadline-grace-ms", "slow"])).is_err());
     }
 
     #[test]

@@ -4,5 +4,7 @@
 mod toml;
 mod system;
 
-pub use system::{FederationConfig, NetworkConfig, NodeConfig, ServingConfig, SystemConfig};
+pub use system::{
+    FederationConfig, NetworkConfig, NodeConfig, ServingConfig, SystemConfig, TransportConfig,
+};
 pub use toml::{TomlDoc, TomlError, TomlValue};

@@ -42,6 +42,12 @@ pub struct FederationConfig {
     /// full broadcast frames — the pre-delta baseline the comm benches
     /// compare against.
     pub delta_frames: bool,
+    /// Churn recovery (`--rejoin` / `federation.rejoin`, default off):
+    /// in wire mode, a node whose transport fails goes on probation and
+    /// the driver retries a `Rejoin`/`Resync` readmission at each round
+    /// boundary instead of demoting it outright.  Off is byte-identical
+    /// to the knob not existing.
+    pub rejoin: bool,
 }
 
 impl Default for FederationConfig {
@@ -56,6 +62,36 @@ impl Default for FederationConfig {
             dropout_prob: 0.0,
             round_deadline_ms: None,
             delta_frames: true,
+            rejoin: false,
+        }
+    }
+}
+
+/// Transport-layer knobs (`[transport]`): connect retry/backoff and the
+/// read-timeout grace window, shared by `run --connect`, the
+/// coordinator's wire sessions, and churn-recovery reconnects.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportConfig {
+    /// Connect attempts before giving up (`transport.retry_max_attempts`
+    /// / `--retry-max-attempts`); also the probation budget for rejoin.
+    pub retry_max_attempts: u32,
+    /// First-retry backoff in milliseconds, doubled per attempt with
+    /// deterministic seeded jitter (`transport.retry_backoff_ms` /
+    /// `--retry-backoff-ms`).
+    pub retry_backoff_ms: f64,
+    /// Grace added on top of the round deadline when deriving socket
+    /// read timeouts (`transport.deadline_grace_ms` /
+    /// `--deadline-grace-ms`): covers compute + control turns that
+    /// follow the deadline cut.  Matches the historical hard-coded 15 s.
+    pub deadline_grace_ms: f64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            retry_max_attempts: 3,
+            retry_backoff_ms: 50.0,
+            deadline_grace_ms: 15_000.0,
         }
     }
 }
@@ -158,6 +194,7 @@ pub struct SystemConfig {
     pub network: NetworkConfig,
     pub serving: ServingConfig,
     pub node: NodeConfig,
+    pub transport: TransportConfig,
 }
 
 impl Default for SystemConfig {
@@ -170,6 +207,7 @@ impl Default for SystemConfig {
             network: NetworkConfig::default(),
             serving: ServingConfig::default(),
             node: NodeConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -233,6 +271,13 @@ impl SystemConfig {
                 anyhow::anyhow!("federation.delta_frames must be a boolean")
             })?;
         }
+        if let Some(v) = doc.get("federation.rejoin") {
+            // Present but malformed must fail loudly — a silently ignored
+            // toggle would corrupt churn-recovery experiments.
+            f.rejoin = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("federation.rejoin must be a boolean"))?;
+        }
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
             Topology::Mesh
@@ -272,6 +317,26 @@ impl SystemConfig {
             );
             c.node.connect = Some(hosts);
         }
+
+        let t = &mut c.transport;
+        t.retry_max_attempts =
+            doc.usize_or("transport.retry_max_attempts", t.retry_max_attempts as usize) as u32;
+        anyhow::ensure!(
+            t.retry_max_attempts >= 1,
+            "transport.retry_max_attempts must be >= 1"
+        );
+        t.retry_backoff_ms = doc.f64_or("transport.retry_backoff_ms", t.retry_backoff_ms);
+        anyhow::ensure!(
+            t.retry_backoff_ms.is_finite() && t.retry_backoff_ms >= 0.0,
+            "transport.retry_backoff_ms must be finite and >= 0, got {}",
+            t.retry_backoff_ms
+        );
+        t.deadline_grace_ms = doc.f64_or("transport.deadline_grace_ms", t.deadline_grace_ms);
+        anyhow::ensure!(
+            t.deadline_grace_ms.is_finite() && t.deadline_grace_ms >= 0.0,
+            "transport.deadline_grace_ms must be finite and >= 0, got {}",
+            t.deadline_grace_ms
+        );
 
         c.serving.engines = doc.usize_or("serving.engines", 1);
         c.serving.queue_depth = doc.usize_or("serving.queue_depth", 64);
@@ -436,6 +501,45 @@ mod tests {
         assert!(SystemConfig::from_toml(&doc).unwrap().federation.delta_frames);
         // Present but malformed: loud failure, not a silent default.
         let doc = TomlDoc::parse("[federation]\ndelta_frames = \"yes\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn rejoin_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(!SystemConfig::from_toml(&doc).unwrap().federation.rejoin);
+        let doc = TomlDoc::parse("[federation]\nrejoin = true").unwrap();
+        assert!(SystemConfig::from_toml(&doc).unwrap().federation.rejoin);
+        let doc = TomlDoc::parse("[federation]\nrejoin = false").unwrap();
+        assert!(!SystemConfig::from_toml(&doc).unwrap().federation.rejoin);
+        // Present but malformed: loud failure, not a silent default.
+        let doc = TomlDoc::parse("[federation]\nrejoin = \"yes\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn transport_section_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport, TransportConfig::default());
+        assert_eq!(c.transport.retry_max_attempts, 3);
+        assert_eq!(c.transport.deadline_grace_ms, 15_000.0);
+
+        let doc = TomlDoc::parse(
+            "[transport]\nretry_max_attempts = 5\nretry_backoff_ms = 10.0\n\
+             deadline_grace_ms = 2000.0",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport.retry_max_attempts, 5);
+        assert_eq!(c.transport.retry_backoff_ms, 10.0);
+        assert_eq!(c.transport.deadline_grace_ms, 2000.0);
+
+        let doc = TomlDoc::parse("[transport]\nretry_max_attempts = 0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[transport]\nretry_backoff_ms = -1.0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[transport]\ndeadline_grace_ms = -5").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 

@@ -63,6 +63,14 @@ pub struct CoordinatorConfig {
     /// the nodes, and the coordinator keeps only planning, aggregation and
     /// billing.  `None` (the default) serves fully in-process sessions.
     pub node_addrs: Option<Vec<String>>,
+    /// Churn recovery for wire sessions (`federation.rejoin` /
+    /// `--rejoin`): a node whose transport fails goes on probation and is
+    /// re-dialed + readmitted (`Rejoin`/`Resync`) at round boundaries
+    /// instead of demoted outright.  Off is byte-identical to the knob
+    /// not existing.
+    pub rejoin: bool,
+    /// Transport retry/backoff + read-timeout grace knobs (`[transport]`).
+    pub transport: crate::config::TransportConfig,
 }
 
 impl CoordinatorConfig {
@@ -90,6 +98,8 @@ impl CoordinatorConfig {
             seed: sc.seed,
             time_scale: sc.serving.time_scale.unwrap_or(1.0),
             node_addrs: sc.node.connect.clone(),
+            rejoin: sc.federation.rejoin,
+            transport: sc.transport.clone(),
         }
     }
 
@@ -115,6 +125,12 @@ pub struct TaskResult {
     pub comm_bytes: u64,
     pub comm_time_ms: f64,
     pub generated_tokens: usize,
+    /// Wire-mode churn: nodes permanently demoted during this task.
+    pub demotions: u64,
+    /// Wire-mode churn: successful mid-session readmissions.
+    pub rejoins: u64,
+    /// Wire-mode churn: failed reconnect attempts (probation retries).
+    pub retries: u64,
 }
 
 /// Aggregate serving report.
@@ -292,21 +308,42 @@ impl Coordinator {
             // the round deadline (plus grace) rather than the 60 s
             // default, matching what the handshake announces node-side.
             Some(addrs) if !addrs.is_empty() => {
-                let io_timeout = crate::fedattn::transport::read_timeout_for_deadline(
-                    scfg.round_deadline_ms,
-                );
+                let io_timeout =
+                    crate::fedattn::transport::read_timeout_for_deadline_with_grace(
+                        scfg.round_deadline_ms,
+                        std::time::Duration::from_secs_f64(
+                            cfg.transport.deadline_grace_ms / 1e3,
+                        ),
+                    );
+                let retry = crate::fedattn::RetryPolicy {
+                    max_attempts: cfg.transport.retry_max_attempts,
+                    backoff_ms: cfg.transport.retry_backoff_ms,
+                    jitter_seed: task_seed,
+                    ..Default::default()
+                };
+                let dial = |p: usize, what: &str| -> Result<Box<dyn Transport>> {
+                    let addr = &addrs[p % addrs.len()];
+                    TcpTransport::connect_with_retry(addr, &retry)
+                        .and_then(|t| t.with_read_timeout(io_timeout))
+                        .map(|t| Box::new(t) as Box<dyn Transport>)
+                        .with_context(|| {
+                            format!("{what} participant {p} to node host {addr}")
+                        })
+                };
                 let transports: Vec<Box<dyn Transport>> = (0..cfg.participants)
-                    .map(|p| {
-                        let addr = &addrs[p % addrs.len()];
-                        TcpTransport::connect(addr)
-                            .and_then(|t| t.with_read_timeout(io_timeout))
-                            .map(|t| Box::new(t) as Box<dyn Transport>)
-                            .with_context(|| {
-                                format!("connecting participant {p} to node host {addr}")
-                            })
-                    })
+                    .map(|p| dial(p, "connecting"))
                     .collect::<Result<_>>()?;
-                TransportDriver::new(&self.engine, &part, scfg, net, transports)?.run()?
+                scfg.rejoin = cfg.rejoin;
+                scfg.rejoin_max_attempts = cfg.transport.retry_max_attempts;
+                let mut driver =
+                    TransportDriver::new(&self.engine, &part, scfg, net, transports)?;
+                if cfg.rejoin {
+                    // Probation nodes re-dial the same round-robin host
+                    // map (and retry policy) the original connect used.
+                    driver =
+                        driver.with_reconnector(Box::new(move |p| dial(p, "reconnecting")));
+                }
+                driver.run()?
             }
             _ => {
                 let mut session = FedSession::new(&self.engine, &part, scfg, net)?;
@@ -328,6 +365,9 @@ impl Coordinator {
             comm_bytes: rep.net.total_bytes(),
             comm_time_ms: rep.net.comm_time_ms,
             generated_tokens: rep.generated_tokens,
+            demotions: rep.net.demotions,
+            rejoins: rep.net.rejoins,
+            retries: rep.net.retries,
         })
     }
 
@@ -433,6 +473,9 @@ mod tests {
             comm_bytes: 0,
             comm_time_ms: 0.0,
             generated_tokens: 1,
+            demotions: 0,
+            rejoins: 0,
+            retries: 0,
         };
         let rep = ServeReport {
             results: vec![mk(0, 10.0, true), mk(1, 20.0, false), mk(2, 30.0, true)],

@@ -47,6 +47,24 @@
 //! like a deadline miss, its decode answer reported absent — without
 //! killing the session.
 //!
+//! With churn recovery on ([`SessionConfig::rejoin`] plus a reconnector,
+//! wired by [`TransportDriver::with_reconnector`]), demotion becomes a
+//! two-stage state machine: a failed node first enters **probation**,
+//! and at each following round boundary the driver asks the reconnector
+//! for a fresh transport and runs the `Rejoin` handshake — shipping one
+//! `Resync` frame (the retained aggregated [`GlobalKvFrame`]) per round
+//! the node attended pre-demotion, so the node replays itself to the
+//! live block.  A readmitted node is bit-identical to one that merely
+//! missed those rounds via deadline misses (resync bytes are tallied on
+//! the side in [`NetReport::resync_bytes`], never through round billing,
+//! precisely so that equivalence holds).  A node that exhausts
+//! [`SessionConfig::rejoin_max_attempts`] probation retries — or is
+//! still on probation when prefill ends — is demoted for good.  With
+//! the knob off (the default) nothing is retained or retried and the
+//! session is byte-identical to the pre-rejoin driver.
+//!
+//! [`GlobalKvFrame`]: crate::fedattn::protocol::GlobalKvFrame
+//!
 //! Device-resident execution (shared per-round KV uploads, frozen decode
 //! caches + `[R]` tails) and pool-parallel per-participant loops carry
 //! over from the pre-protocol session; a parallel session is
@@ -67,7 +85,7 @@ use crate::fedattn::aggregate::{self, Aggregator, PartRows};
 use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::masks::global_mask;
 use crate::fedattn::node::{BlockCache, Participant, ParticipantNode};
-use crate::fedattn::protocol::KvContribution;
+use crate::fedattn::protocol::{GlobalKvFrame, KvContribution};
 use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
 use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
@@ -147,6 +165,25 @@ pub struct SessionConfig {
     /// [`GlobalKvDeltaFrame`]: crate::fedattn::protocol::GlobalKvDeltaFrame
     /// [`GlobalKvFrame`]: crate::fedattn::protocol::GlobalKvFrame
     pub delta_frames: bool,
+    /// Churn recovery (`federation.rejoin` / `--rejoin`, default off):
+    /// in wire mode, a node whose transport fails enters *probation*
+    /// instead of being demoted outright, and at each following round
+    /// boundary the driver tries to readmit it through the
+    /// `Rejoin`/`Resync` handshake (requires a reconnector — see
+    /// [`TransportDriver::with_reconnector`]; without one the knob is
+    /// inert).  Off, behaviour is byte-identical to the pre-rejoin
+    /// driver: no resync frames are retained, no retry ever runs.
+    pub rejoin: bool,
+    /// Probation budget: how many failed reconnect attempts a node may
+    /// accumulate before probation hardens into permanent demotion.
+    pub rejoin_max_attempts: u32,
+    /// Test fixture: force participant `p` late at block `m` for every
+    /// `(m, p)` listed, after real deadline arrivals are folded in.  This
+    /// is the reference world for the rejoin differential test — a node
+    /// that "merely missed rounds r..r+k via deadline misses" — and draws
+    /// no RNG, so `None` (the default) is byte-identical to not having
+    /// the field at all.
+    pub late_overrides: Option<Vec<(usize, usize)>>,
 }
 
 impl SessionConfig {
@@ -165,6 +202,9 @@ impl SessionConfig {
             dropout_prob: 0.0,
             round_deadline_ms: None,
             delta_frames: true,
+            rejoin: false,
+            rejoin_max_attempts: 3,
+            late_overrides: None,
         }
     }
 }
@@ -195,6 +235,34 @@ pub struct SessionReport {
     /// Final hidden per participant (when `record_hidden`).
     pub hidden: Vec<Option<HostTensor>>,
     pub positions: Vec<Vec<i32>>,
+}
+
+/// Wire-mode link state for one participant: the two-stage demotion
+/// machine.  `Alive → Probation` on a transport failure when churn
+/// recovery is on (straight to `Demoted` otherwise), `Probation → Alive`
+/// on a successful rejoin, `Probation → Demoted` when the retry budget
+/// is exhausted or the rejoin window (prefill) closes.  `Demoted` is
+/// terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireState {
+    Alive,
+    Probation { attempts: u32 },
+    Demoted,
+}
+
+/// A source of replacement transports for churn recovery: given a
+/// participant index, dial a fresh connection to that participant's node
+/// host (or fail, consuming one probation retry).
+pub type Reconnector<'a> = Box<dyn FnMut(usize) -> Result<Box<dyn Transport>> + 'a>;
+
+/// One retained sync round for rejoin resync: the aggregated frame
+/// (already encoded) plus who effectively attended it — a rejoining node
+/// replays exactly the rounds where its own `attend_eff` bit was set.
+struct ResyncRound {
+    block: usize,
+    epoch: usize,
+    frame: Vec<u8>,
+    attended: Vec<bool>,
 }
 
 /// Run `f(0..n)` across the pool (ordered results) or inline when no pool
@@ -242,10 +310,20 @@ pub struct SessionDriver<'a> {
     /// the decode run at the node hosts, and each round is a set of
     /// protocol-message turns.  `None` is the fully in-process session.
     remotes: Option<Vec<RemoteParticipant>>,
-    /// Wire mode: which nodes still have a working transport.  A node
-    /// whose link fails is demoted for the rest of the session (treated
-    /// like a permanent deadline miss).  Empty in-process.
-    wire_alive: Vec<bool>,
+    /// Wire mode: per-node link state (the probation → demotion machine).
+    /// A node not `Alive` is folded into every remaining round exactly
+    /// like a permanent deadline miss until (and unless) it rejoins.
+    /// Empty in-process.
+    wire_state: Vec<WireState>,
+    /// Churn recovery: dials replacement transports for probation nodes.
+    /// `None` (always, unless [`TransportDriver::with_reconnector`] was
+    /// called) leaves `cfg.rejoin` inert.
+    reconnector: Option<Reconnector<'a>>,
+    /// True only while wire prefill runs — the rejoin window.  A
+    /// transport failure outside it (decode phase) demotes immediately:
+    /// nothing would ever retry a probation entered after the last
+    /// round boundary.
+    rejoin_window: bool,
 }
 
 impl<'a> SessionDriver<'a> {
@@ -325,7 +403,9 @@ impl<'a> SessionDriver<'a> {
             relevance,
             pool,
             remotes: None,
-            wire_alive: Vec::new(),
+            wire_state: Vec::new(),
+            reconnector: None,
+            rejoin_window: false,
         })
     }
 
@@ -375,8 +455,21 @@ impl<'a> SessionDriver<'a> {
             rp.join_recv(md.n_layers, md.n_kv_heads, md.head_dim)?;
         }
         driver.remotes = Some(remotes);
-        driver.wire_alive = vec![true; n];
+        driver.wire_state = vec![WireState::Alive; n];
         Ok(driver)
+    }
+
+    /// Attach a reconnector for churn recovery (wire mode): with
+    /// `cfg.rejoin` set, a node whose transport fails goes on probation
+    /// and this callback is asked for a replacement transport at each
+    /// following round boundary.
+    pub fn set_reconnector(&mut self, reconnector: Reconnector<'a>) {
+        self.reconnector = Some(reconnector);
+    }
+
+    /// Is wire node `p` currently a full participant?
+    fn wire_ok(&self, p: usize) -> bool {
+        self.wire_state[p] == WireState::Alive
     }
 
     /// The effective attendance schedule (after dropout masking).
@@ -393,14 +486,113 @@ impl<'a> SessionDriver<'a> {
         }
     }
 
-    /// Demote wire node `p` for the rest of the session: its transport
-    /// failed, so it is excluded from every remaining round exactly like
-    /// a permanent deadline miss (PR 4's partial aggregation) instead of
-    /// killing the session.
+    /// Take wire node `p` out of the session: its transport failed, so
+    /// it is excluded from every remaining round exactly like a deadline
+    /// miss instead of killing the session.  With churn recovery on and
+    /// the rejoin window open this is stage one — *probation*, retried
+    /// at the next round boundary; otherwise (knob off, no reconnector,
+    /// or decode phase) the node is demoted for good.  Either way the
+    /// event lands in the session's [`NetReport`] — churn is part of the
+    /// structured output, not just a log line.
     fn demote(&mut self, p: usize, why: &anyhow::Error) {
-        if self.wire_alive[p] {
-            self.wire_alive[p] = false;
-            eprintln!("[fedattn] node {p} demoted for the rest of the session: {why:#}");
+        if self.wire_state[p] != WireState::Alive {
+            return;
+        }
+        let recoverable =
+            self.cfg.rejoin && self.reconnector.is_some() && self.rejoin_window;
+        if recoverable {
+            self.wire_state[p] = WireState::Probation { attempts: 0 };
+            log::warn!("node {p} lost its transport, on probation: {why:#}");
+        } else {
+            self.wire_state[p] = WireState::Demoted;
+            self.net.record_demotion();
+            log::warn!("node {p} demoted for the rest of the session: {why:#}");
+        }
+    }
+
+    /// Close the rejoin window: any node still on probation is demoted
+    /// for good (nothing will retry it once the round loop is over).
+    fn finalize_probation(&mut self) {
+        self.rejoin_window = false;
+        for p in 0..self.wire_state.len() {
+            if let WireState::Probation { .. } = self.wire_state[p] {
+                self.wire_state[p] = WireState::Demoted;
+                self.net.record_demotion();
+                log::warn!("node {p} still on probation at end of prefill: demoted");
+            }
+        }
+    }
+
+    /// One round-boundary rejoin pass: for every probation node, dial a
+    /// replacement transport and run the `Rejoin` handshake, shipping one
+    /// retained `Resync` frame per round the node attended pre-demotion
+    /// so it replays itself to `resume_block`.  Success readmits the node
+    /// (bit-identical to having merely missed the demoted rounds via
+    /// deadline misses); failure consumes one probation retry.
+    fn try_rejoins(
+        &mut self,
+        remotes: &mut [RemoteParticipant],
+        resync_log: &[ResyncRound],
+        resume_block: usize,
+    ) {
+        for p in 0..self.wire_state.len() {
+            let WireState::Probation { attempts } = self.wire_state[p] else {
+                continue;
+            };
+            let resync: Vec<(usize, usize, Vec<u8>)> = resync_log
+                .iter()
+                .filter(|r| r.attended[p])
+                .map(|r| (r.block, r.epoch, r.frame.clone()))
+                .collect();
+            let resync_bytes: u64 = resync.iter().map(|(_, _, f)| f.len() as u64).sum();
+            let keep = remotes[p].keeps_caches();
+            let md = self.engine.manifest.model.clone();
+            let attempt = (|| -> Result<RemoteParticipant> {
+                let reconnect = self
+                    .reconnector
+                    .as_mut()
+                    .expect("probation without a reconnector");
+                let t = reconnect(p)?;
+                let node = &self.nodes[p];
+                let mut rp = RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
+                rp.set_delta_frames(self.cfg.delta_frames);
+                rp.rejoin(
+                    &node.ids,
+                    self.cfg.round_deadline_ms,
+                    resume_block,
+                    &resync,
+                    md.n_layers,
+                    md.n_kv_heads,
+                    md.head_dim,
+                )?;
+                Ok(rp)
+            })();
+            match attempt {
+                Ok(rp) => {
+                    remotes[p] = rp;
+                    self.wire_state[p] = WireState::Alive;
+                    self.net.record_rejoin(resync_bytes);
+                    log::info!(
+                        "node {p} rejoined at block {resume_block} \
+                         ({} resync rounds, {resync_bytes} B)",
+                        resync.len()
+                    );
+                }
+                Err(e) => {
+                    let attempts = attempts + 1;
+                    self.net.record_retry();
+                    if attempts >= self.cfg.rejoin_max_attempts.max(1) {
+                        self.wire_state[p] = WireState::Demoted;
+                        self.net.record_demotion();
+                        log::warn!(
+                            "node {p} exhausted {attempts} rejoin attempts, demoted: {e:#}"
+                        );
+                    } else {
+                        self.wire_state[p] = WireState::Probation { attempts };
+                        log::warn!("node {p} rejoin attempt {attempts} failed: {e:#}");
+                    }
+                }
+            }
         }
     }
 
@@ -468,7 +660,7 @@ impl<'a> SessionDriver<'a> {
                         tx.iter().filter(|&&b| b).count() as u64 * row_bytes_usize as u64
                     })
                     .collect();
-                let (on_time, arrivals) = match self.cfg.round_deadline_ms {
+                let (mut on_time, arrivals) = match self.cfg.round_deadline_ms {
                     Some(d) => {
                         let arr = self.net.uplink_arrivals(&payloads);
                         (arr.iter().map(|&a| a <= d).collect::<Vec<bool>>(), Some(arr))
@@ -477,6 +669,15 @@ impl<'a> SessionDriver<'a> {
                     // drawn (byte-identical to the pre-deadline driver).
                     None => (vec![true; n], None),
                 };
+                // Forced lateness (test fixture, RNG-free): folded in
+                // after real arrivals, exactly like a deadline miss.
+                if let Some(ov) = &self.cfg.late_overrides {
+                    for &(blk, p) in ov {
+                        if blk == m && p < n {
+                            on_time[p] = false;
+                        }
+                    }
+                }
                 let attend_eff: Vec<bool> =
                     attend.iter().zip(&on_time).map(|(&a, &o)| a && o).collect();
                 attend_eff
@@ -795,7 +996,21 @@ impl<'a> SessionDriver<'a> {
         // downlink frames so a node can tie a delta's retain-list to the
         // fresh-KV generation it references.
         let mut epoch = 0usize;
+        // Churn recovery: while the rejoin window is open, every executed
+        // sync round's aggregated frame is retained (encoded once) so a
+        // probation node can replay the rounds it attended.  Off — or
+        // with no reconnector — nothing is retained and demotion stays
+        // single-stage, byte-identical to the pre-rejoin driver.
+        let recovery = self.cfg.rejoin && self.reconnector.is_some();
+        self.rejoin_window = recovery;
+        let mut resync_log: Vec<ResyncRound> = Vec::new();
         for m in 0..n_layers {
+            // Round boundary: readmit probation nodes before this block's
+            // planning, so a rejoined node is a full participant from
+            // block `m` on (replayed up to exactly here).
+            if recovery {
+                self.try_rejoins(remotes, &resync_log, m);
+            }
             let attend = self.schedule.attend[m].clone();
 
             // Identical planning to the in-process driver (same RNG draws
@@ -822,17 +1037,24 @@ impl<'a> SessionDriver<'a> {
                         tx.iter().filter(|&&b| b).count() as u64 * row_bytes_usize as u64
                     })
                     .collect();
-                let (on_time, arrivals) = match self.cfg.round_deadline_ms {
+                let (mut on_time, arrivals) = match self.cfg.round_deadline_ms {
                     Some(d) => {
                         let arr = self.net.uplink_arrivals(&payloads);
                         (arr.iter().map(|&a| a <= d).collect::<Vec<bool>>(), Some(arr))
                     }
                     None => (vec![true; n], None),
                 };
-                let on_time: Vec<bool> = on_time
-                    .iter()
-                    .zip(&self.wire_alive)
-                    .map(|(&o, &a)| o && a)
+                // Forced lateness (test fixture, RNG-free): folded in
+                // after real arrivals, exactly like a deadline miss.
+                if let Some(ov) = &self.cfg.late_overrides {
+                    for &(blk, p) in ov {
+                        if blk == m && p < n {
+                            on_time[p] = false;
+                        }
+                    }
+                }
+                let on_time: Vec<bool> = (0..n)
+                    .map(|p| on_time[p] && self.wire_ok(p))
                     .collect();
                 let attend_eff: Vec<bool> =
                     attend.iter().zip(&on_time).map(|(&a, &o)| a && o).collect();
@@ -849,7 +1071,7 @@ impl<'a> SessionDriver<'a> {
                 // late, or all scheduled attendees demoted): every
                 // surviving node runs the local path at home.
                 for p in 0..n {
-                    if !self.wire_alive[p] {
+                    if !self.wire_ok(p) {
                         continue;
                     }
                     if let Err(e) = remotes[p].advance_local(m) {
@@ -868,7 +1090,7 @@ impl<'a> SessionDriver<'a> {
             // sum.  On-time nodes get the sync turn (attendee or
             // contribute-only); late nodes run the local path.
             for p in 0..n {
-                if !self.wire_alive[p] {
+                if !self.wire_ok(p) {
                     continue;
                 }
                 remotes[p].begin_round(round_epoch);
@@ -899,7 +1121,7 @@ impl<'a> SessionDriver<'a> {
             // stays deterministic.
             let mut contributions: Vec<Option<KvContribution>> = Vec::with_capacity(n);
             for p in 0..n {
-                if !(self.wire_alive[p] && on_time[p]) {
+                if !(self.wire_ok(p) && on_time[p]) {
                     contributions.push(None);
                     continue;
                 }
@@ -1022,7 +1244,7 @@ impl<'a> SessionDriver<'a> {
             // the knob is on); the node runs the global attention — and
             // absorbs its decode-cache rows — at home.
             for p in 0..n {
-                if !(self.wire_alive[p] && attend_eff[p]) {
+                if !(self.wire_ok(p) && attend_eff[p]) {
                     continue;
                 }
                 if let Err(e) = remotes[p].send_frame(m, &gkv) {
@@ -1039,7 +1261,7 @@ impl<'a> SessionDriver<'a> {
                 let rows = gkv.rows();
                 let mut acc = vec![0.0f64; rows];
                 for p in 0..n {
-                    if !(self.wire_alive[p] && attend_eff[p]) {
+                    if !(self.wire_ok(p) && attend_eff[p]) {
                         continue;
                     }
                     match remotes[p].recv_mass(m, rows) {
@@ -1055,6 +1277,29 @@ impl<'a> SessionDriver<'a> {
                     tr.observe(&gkv.meta, &acc);
                 }
             }
+
+            // Retain this round for rejoin resync: the full aggregated
+            // frame (what `send_frame` ships, pre-delta) plus who ended
+            // up attending it.  `attend_eff` is read *after* every
+            // downlink/mass turn, so a node whose link died before its
+            // frame landed is recorded as a non-attendee — its replay
+            // runs the local path for this block, exactly like the
+            // deadline-miss world.
+            if recovery {
+                resync_log.push(ResyncRound {
+                    block: m,
+                    epoch: round_epoch,
+                    frame: GlobalKvFrame::from_global(m, &gkv).encode(),
+                    attended: attend_eff.clone(),
+                });
+            }
+        }
+
+        // The round loop is over: nothing will retry a probation node
+        // again, so close the window (remaining probations harden into
+        // demotions, counted in the report).
+        if recovery {
+            self.finalize_probation();
         }
 
         Ok(PrefillOutput {
@@ -1091,7 +1336,7 @@ impl<'a> SessionDriver<'a> {
         anyhow::ensure!(self.keeps_caches_for(p), "participant {p} has no caches");
         if let Some(remotes) = self.remotes.as_mut() {
             anyhow::ensure!(
-                self.wire_alive[p],
+                self.wire_ok(p),
                 "participant {p} was demoted (transport lost) and cannot decode"
             );
             let (total_len, max_new, dev) =
@@ -1140,7 +1385,7 @@ impl<'a> SessionDriver<'a> {
             let decoders: Vec<usize> = (0..n).filter(|&p| self.keeps_caches_for(p)).collect();
             let mut failed: Option<anyhow::Error> = None;
             for &p in &decoders {
-                if !self.wire_alive[p] {
+                if !self.wire_ok(p) {
                     if p == self.publisher {
                         failed = Some(anyhow::anyhow!(
                             "publisher node {p} was demoted mid-session"
@@ -1164,7 +1409,7 @@ impl<'a> SessionDriver<'a> {
                 }
             }
             for (p, r) in self.remotes.as_mut().unwrap().iter_mut().enumerate() {
-                if self.wire_alive[p] {
+                if self.wire_ok(p) {
                     let _ = r.shutdown();
                 }
             }
@@ -1220,7 +1465,18 @@ impl<'a> SessionDriver<'a> {
             }
         }
 
-        let answer = answers[self.publisher].clone().unwrap_or_default();
+        // A missing publisher answer is a failed session, not an empty
+        // string masquerading as a response: every path above either
+        // fills `answers[publisher]` or returns the underlying error,
+        // so hitting this is a driver invariant violation (e.g. a
+        // publisher shard with zero valid rows skipped by the decoder
+        // filter) that must be loud.
+        let answer = answers[self.publisher].clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "publisher participant {} produced no answer",
+                self.publisher
+            )
+        })?;
         Ok(SessionReport {
             answer,
             generated_tokens: generated,

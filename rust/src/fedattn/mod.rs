@@ -32,7 +32,10 @@
 //!    cross the wire — never a hidden state or token embedding), and the
 //!    [`TransportDriver`] (byte-identical to the in-process session at
 //!    infinite deadline; a node lost mid-session is demoted like a
-//!    deadline miss).
+//!    deadline miss — or, with churn recovery on, put on probation and
+//!    readmitted through the `Rejoin`/`Resync` handshake).  Connect
+//!    retries ([`RetryPolicy`]) and the deterministic fault-injection
+//!    decorator ([`ChaosTransport`]) live here too.
 //!  * [`session`] — the [`FedSession`] facade (byte-identical to the
 //!    pre-protocol session).
 
@@ -49,7 +52,7 @@ pub mod sparse;
 pub mod transport;
 
 pub use aggregate::{for_policy, AdaptiveAggregator, Aggregator, ConcatAggregator};
-pub use driver::{PrefillOutput, SessionConfig, SessionDriver, SessionReport};
+pub use driver::{PrefillOutput, Reconnector, SessionConfig, SessionDriver, SessionReport};
 pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use node::{Participant, ParticipantNode};
@@ -62,6 +65,7 @@ pub use schedule::{Scheme, SyncSchedule};
 pub use session::FedSession;
 pub use sparse::{KvExchangePolicy, LocalSparsity, TxContext};
 pub use transport::{
-    read_timeout_for_deadline, ChannelTransport, CtrlMsg, NodeHost, RemoteParticipant,
+    read_timeout_for_deadline, read_timeout_for_deadline_with_grace, ChannelTransport,
+    ChaosTransport, CtrlMsg, Fault, FaultSchedule, NodeHost, RemoteParticipant, RetryPolicy,
     TcpTransport, Transport, TransportDriver, TransportError,
 };

@@ -52,6 +52,18 @@
 //!   killing the session.  With no deadline and no churn, a session run
 //!   over sockets is byte-identical to the in-process [`FedSession`] —
 //!   pinned by `tests/transport_golden.rs` across all six KV policies.
+//! * **Churn recovery** — with `federation.rejoin` on, demotion is
+//!   two-stage (*probation* → *demoted*): at each sync-round boundary
+//!   the driver re-dials a probation node through its reconnector and
+//!   runs the `Rejoin`/`Resync`/`RejoinAck` handshake — the node
+//!   rebuilds its shard, replays every block it lived through (attended
+//!   rounds from driver-retained [`GlobalKvFrame`]s, everything else on
+//!   the local path, exactly the state a deadline-missing node would
+//!   hold), and is readmitted from the next round on.  A [`RetryPolicy`]
+//!   bounds reconnect attempts, and the seeded [`ChaosTransport`]
+//!   decorator injects deterministic faults (drop / delay / truncate /
+//!   duplicate / corrupt) so the whole loop is testable without flaky
+//!   sockets.
 //!
 //! [`ParticipantNode`]: crate::fedattn::node::ParticipantNode
 //! [`SessionDriver`]: crate::fedattn::driver::SessionDriver
@@ -113,16 +125,77 @@ pub const DEADLINE_TIMEOUT_GRACE: Duration = Duration::from_secs(15);
 /// handshake announces the session's deadline, so long-deadline sessions
 /// don't spuriously drop slow-but-on-time drivers.
 pub fn read_timeout_for_deadline(round_deadline_ms: Option<f64>) -> Duration {
+    read_timeout_for_deadline_with_grace(round_deadline_ms, DEADLINE_TIMEOUT_GRACE)
+}
+
+/// [`read_timeout_for_deadline`] with an explicit grace margin
+/// (`transport.deadline_grace_ms` / `--deadline-grace-ms`): deployments
+/// with tighter or looser real-link overhead than the
+/// [`DEADLINE_TIMEOUT_GRACE`] default tune the margin here.  The
+/// derivation is otherwise identical — `deadline + grace` under a finite
+/// deadline, [`DEFAULT_IO_TIMEOUT`] without one — and is pinned by a
+/// unit-test derivation table.
+pub fn read_timeout_for_deadline_with_grace(
+    round_deadline_ms: Option<f64>,
+    grace: Duration,
+) -> Duration {
     // Cap the derived wait at a day: `Duration::from_secs_f64` panics on
     // durations beyond its range, and a larger deadline is
     // indistinguishable from "no deadline" for a socket timeout anyway.
     const MAX_DERIVED_SECS: f64 = 86_400.0;
     match round_deadline_ms {
         Some(d) if d.is_finite() && d >= 0.0 => {
-            Duration::from_secs_f64((d / 1e3).min(MAX_DERIVED_SECS))
-                .saturating_add(DEADLINE_TIMEOUT_GRACE)
+            Duration::from_secs_f64((d / 1e3).min(MAX_DERIVED_SECS)).saturating_add(grace)
         }
         _ => DEFAULT_IO_TIMEOUT,
+    }
+}
+
+/// Deterministic connect/rejoin retry policy: up to `max_attempts`
+/// attempts with exponential backoff and seeded jitter.  The jitter comes
+/// from its own [`Xoshiro256ss`] stream keyed by `jitter_seed`, so two
+/// runs with the same seed back off identically — chaos tests stay
+/// reproducible, and no session RNG is ever consumed.
+///
+/// Inside a session the driver never sleeps: probation retries are
+/// counted against `max_attempts` once per sync-round boundary (the only
+/// deterministic readmission points).  The wall-clock backoff applies to
+/// [`TcpTransport::connect_with_retry`], where a real reconnect has a
+/// real link to wait for.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Attempts before giving up (demotion becomes permanent); >= 1.
+    pub max_attempts: u32,
+    /// Base backoff before attempt 2 (doubles per attempt).
+    pub backoff_ms: f64,
+    /// Backoff ceiling.
+    pub max_backoff_ms: f64,
+    /// Seed for the deterministic jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, backoff_ms: 50.0, max_backoff_ms: 2_000.0, jitter_seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry attempt `attempt` (0-based; attempt 0 runs
+    /// immediately): `backoff_ms * 2^(attempt-1)` capped at
+    /// `max_backoff_ms`, plus deterministic jitter in `[0, 25%)` of the
+    /// base.  Pure in `(self, attempt)`.
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let base = (self.backoff_ms * 2f64.powi(attempt as i32 - 1))
+            .min(self.max_backoff_ms)
+            .max(0.0);
+        let mut rng =
+            crate::util::prng::Xoshiro256ss::new(self.jitter_seed ^ u64::from(attempt));
+        let jitter = base * 0.25 * rng.next_f64();
+        Duration::from_secs_f64(((base + jitter) / 1e3).min(86_400.0))
     }
 }
 
@@ -351,6 +424,229 @@ impl Transport for TcpTransport {
     }
 }
 
+impl TcpTransport {
+    /// [`TcpTransport::connect`] under a [`RetryPolicy`]: retry transient
+    /// connect failures (`ECONNREFUSED` during a node restart, an
+    /// EAGAIN-class blip) with the policy's deterministic backoff instead
+    /// of treating the first refusal as permanent.  Non-transient errors
+    /// and exhaustion surface the last error.
+    pub fn connect_with_retry<A: ToSocketAddrs + Clone>(
+        addr: A,
+        policy: &RetryPolicy,
+    ) -> Result<Self, TransportError> {
+        let attempts = policy.max_attempts.max(1);
+        let mut last: Option<TransportError> = None;
+        for attempt in 0..attempts {
+            let backoff = policy.backoff_for(attempt);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            match Self::connect(addr.clone()) {
+                Ok(t) => return Ok(t),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or(TransportError::Closed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos transport — deterministic fault injection for churn tests
+// ---------------------------------------------------------------------------
+
+/// One injected transport fault (see [`FaultSchedule`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Kill the link: this and every later operation fails
+    /// [`TransportError::Closed`].
+    DropConnection,
+    /// Stall the operation for this many wall-clock milliseconds before
+    /// letting it through (models a transient EAGAIN-class blip; pair
+    /// with a short recv timeout to turn it into a [`TransportError::Timeout`]).
+    DelayMs(u64),
+    /// The frame is torn mid-stream: the operation fails
+    /// [`TransportError::TruncatedFrame`] and the link dies (a real
+    /// length-prefixed stream cannot resynchronise after a tear).
+    TruncateFrame,
+    /// A send is delivered twice (retransmission bug); a recv passes
+    /// through unchanged.
+    Duplicate,
+    /// One deterministic byte of the frame is flipped in flight; the
+    /// peer's codec rejects it as malformed.
+    CorruptByte,
+}
+
+/// A deterministic map from transport-operation index (sends and recvs
+/// counted together, per endpoint) to the [`Fault`] injected there.
+/// Built either from a seed ([`FaultSchedule::from_seed`] — every run
+/// with that seed injects the identical fault sequence) or from explicit
+/// placements ([`FaultSchedule::drop_at`] / [`FaultSchedule::with_fault`])
+/// for targeted tests.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    faults: std::collections::BTreeMap<u64, Fault>,
+}
+
+impl FaultSchedule {
+    /// No faults (the decorator becomes a transparent pass-through).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Kill the connection at operation `n` (0-based).
+    pub fn drop_at(n: u64) -> Self {
+        Self::none().with_fault(n, Fault::DropConnection)
+    }
+
+    /// Add/replace the fault at operation `n`.
+    pub fn with_fault(mut self, n: u64, fault: Fault) -> Self {
+        self.faults.insert(n, fault);
+        self
+    }
+
+    /// Seeded schedule over the first `horizon` operations: each op
+    /// independently draws a fault with probability `rate`, and the fault
+    /// kind is drawn uniformly from the non-delay kinds (delays would
+    /// couple test runtime to the schedule).  Deterministic in
+    /// `(seed, rate, horizon)`.
+    pub fn from_seed(seed: u64, rate: f64, horizon: u64) -> Self {
+        let mut rng = crate::util::prng::Xoshiro256ss::new(seed ^ 0xC4A0_5EED);
+        let mut faults = std::collections::BTreeMap::new();
+        for op in 0..horizon {
+            if rng.bernoulli(rate.clamp(0.0, 1.0)) {
+                let fault = match rng.below(4) {
+                    0 => Fault::DropConnection,
+                    1 => Fault::TruncateFrame,
+                    2 => Fault::Duplicate,
+                    _ => Fault::CorruptByte,
+                };
+                faults.insert(op, fault);
+            }
+        }
+        Self { faults }
+    }
+
+    /// The fault scheduled at operation `n`, if any.
+    pub fn at(&self, n: u64) -> Option<Fault> {
+        self.faults.get(&n).copied()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// Deterministic chaos decorator: wraps any [`Transport`] and injects the
+/// faults a [`FaultSchedule`] places on this endpoint's operation stream.
+/// Each endpoint counts its own sends + recvs, so a schedule is
+/// deterministic per participant regardless of how rounds interleave
+/// across participants — the foundation of the reproducible churn suite
+/// (and of `fedattn chaos`).  An empty schedule is a transparent
+/// pass-through.
+pub struct ChaosTransport<T: Transport> {
+    inner: Option<T>,
+    schedule: FaultSchedule,
+    op: u64,
+    label: String,
+}
+
+impl<T: Transport> ChaosTransport<T> {
+    pub fn new(inner: T, schedule: FaultSchedule) -> Self {
+        let label = format!("chaos:{}", inner.peer());
+        Self { inner: Some(inner), schedule, op: 0, label }
+    }
+
+    /// Operations executed so far (sends + recvs, faulted or not).
+    pub fn ops(&self) -> u64 {
+        self.op
+    }
+
+    fn live(&mut self) -> Result<&mut T, TransportError> {
+        self.inner.as_mut().ok_or(TransportError::Closed)
+    }
+
+    /// Draw the fault for the current operation and advance the counter.
+    fn next_fault(&mut self) -> Option<Fault> {
+        let f = self.schedule.at(self.op);
+        self.op += 1;
+        f
+    }
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        match self.next_fault() {
+            Some(Fault::DropConnection) => {
+                self.inner = None;
+                Err(TransportError::Closed)
+            }
+            Some(Fault::TruncateFrame) => {
+                self.inner = None;
+                Err(TransportError::TruncatedFrame("chaos: frame torn mid-send".into()))
+            }
+            Some(Fault::Duplicate) => {
+                let t = self.live()?;
+                t.send(frame)?;
+                t.send(frame)
+            }
+            Some(Fault::CorruptByte) => {
+                let mut bad = frame.to_vec();
+                // Deterministic position past the magic byte, so the peer
+                // sees a structurally broken frame rather than a clean
+                // unknown-protocol rejection.
+                let idx = 1 + (self.op as usize % bad.len().saturating_sub(1).max(1));
+                let idx = idx.min(bad.len() - 1);
+                bad[idx] ^= 0xFF;
+                self.live()?.send(&bad)
+            }
+            Some(Fault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.live()?.send(frame)
+            }
+            None => self.live()?.send(frame),
+        }
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        match self.next_fault() {
+            Some(Fault::DropConnection) => {
+                self.inner = None;
+                Err(TransportError::Closed)
+            }
+            Some(Fault::TruncateFrame) => {
+                self.inner = None;
+                Err(TransportError::TruncatedFrame("chaos: frame torn mid-recv".into()))
+            }
+            Some(Fault::CorruptByte) => {
+                let mut frame = self.live()?.recv()?;
+                let idx = 1 + (self.op as usize % frame.len().saturating_sub(1).max(1));
+                let idx = idx.min(frame.len() - 1);
+                frame[idx] ^= 0xFF;
+                Ok(frame)
+            }
+            Some(Fault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.live()?.recv()
+            }
+            // Duplicate is a send-side fault; pass a recv through.
+            Some(Fault::Duplicate) | None => self.live()?.recv(),
+        }
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.live()?.set_recv_timeout(timeout)
+    }
+
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Control codec (driver <-> node management frames)
 // ---------------------------------------------------------------------------
@@ -364,6 +660,9 @@ const CTRL_DECODE_START: u8 = 6;
 const CTRL_DECODE_DONE: u8 = 7;
 const CTRL_SHUTDOWN: u8 = 8;
 const CTRL_FAULT: u8 = 9;
+const CTRL_REJOIN: u8 = 10;
+const CTRL_REJOIN_ACK: u8 = 11;
+const CTRL_RESYNC: u8 = 12;
 
 /// Driver↔node control messages.  By construction no variant can carry
 /// an embedding or a hidden state: the handshake ships plain vocabulary
@@ -434,6 +733,52 @@ pub enum CtrlMsg {
     Shutdown,
     /// Node → driver: the request failed; the driver demotes or aborts.
     Fault { message: String },
+    /// Driver → node (fresh connection): readmit a demoted participant
+    /// mid-session.  Identical identity payload to `Join`, plus where the
+    /// session stands: the node rebuilds its shard and replays blocks
+    /// `0..resume_block` — the `resync_rounds` [`CtrlMsg::Resync`] frames
+    /// that follow carry the aggregated rounds it attended before its
+    /// link died; every other block runs the local path, exactly the
+    /// state a deadline-missing node would hold — then answers with
+    /// [`CtrlMsg::RejoinAck`].  Still hidden-state-free by construction.
+    Rejoin {
+        id: usize,
+        keep_caches: bool,
+        round_deadline_ms: Option<f64>,
+        /// Post-sparsity token ids (plain vocabulary indices).
+        ids: Vec<i32>,
+        /// Global positions of the kept tokens.
+        pos: Vec<i32>,
+        /// The block index the session has reached; replay covers
+        /// `0..resume_block` and normal turns resume from there.
+        resume_block: usize,
+        /// Number of `Resync` frames that follow immediately.
+        resync_rounds: usize,
+    },
+    /// Node → driver: replay finished; same geometry echo as `JoinAck`
+    /// so a drifted artifact set fails the readmission instead of
+    /// corrupting a round.
+    RejoinAck {
+        id: usize,
+        valid: usize,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    },
+    /// Driver → node, during a rejoin handshake: one executed sync round
+    /// the rejoining node attended, as the encoded full
+    /// [`GlobalKvFrame`] of that round (the same aggregated, transmitted
+    /// rows every attendee received live — untransmitted rows were never
+    /// at the driver and ship as zeros, the PR 6 wire-capture
+    /// guarantee).  `epoch` is the executed-sync-round ordinal for
+    /// observability and staleness checks.
+    Resync {
+        block: usize,
+        epoch: usize,
+        /// Encoded [`GlobalKvFrame`] (data-plane bytes nested in a
+        /// control frame; decoded with the standard frame codec).
+        frame: Vec<u8>,
+    },
 }
 
 fn read_bool(r: &mut Reader<'_>, what: &str) -> Result<bool, WireError> {
@@ -456,6 +801,9 @@ impl CtrlMsg {
             CtrlMsg::DecodeDone { .. } => "decode-done",
             CtrlMsg::Shutdown => "shutdown",
             CtrlMsg::Fault { .. } => "fault",
+            CtrlMsg::Rejoin { .. } => "rejoin",
+            CtrlMsg::RejoinAck { .. } => "rejoin-ack",
+            CtrlMsg::Resync { .. } => "resync",
         }
     }
 
@@ -542,6 +890,51 @@ impl CtrlMsg {
                 w.bytes(bytes);
                 w.finish()
             }
+            CtrlMsg::Rejoin {
+                id,
+                keep_caches,
+                round_deadline_ms,
+                ids,
+                pos,
+                resume_block,
+                resync_rounds,
+            } => {
+                let cap = 4 + 2 + 8 + 16 + (ids.len() + pos.len()) * 4;
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_REJOIN, cap);
+                w.u32(*id as u32);
+                w.u8(*keep_caches as u8);
+                match round_deadline_ms {
+                    Some(d) => {
+                        w.u8(1);
+                        w.f64(*d);
+                    }
+                    None => w.u8(0),
+                }
+                w.u32(ids.len() as u32);
+                w.i32s(ids);
+                w.u32(pos.len() as u32);
+                w.i32s(pos);
+                w.u32(*resume_block as u32);
+                w.u32(*resync_rounds as u32);
+                w.finish()
+            }
+            CtrlMsg::RejoinAck { id, valid, n_layers, kv_heads, head_dim } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_REJOIN_ACK, 5 * 4);
+                w.u32(*id as u32);
+                w.u32(*valid as u32);
+                w.u32(*n_layers as u32);
+                w.u32(*kv_heads as u32);
+                w.u32(*head_dim as u32);
+                w.finish()
+            }
+            CtrlMsg::Resync { block, epoch, frame } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_RESYNC, 3 * 4 + frame.len());
+                w.u32(*block as u32);
+                w.u32(*epoch as u32);
+                w.u32(frame.len() as u32);
+                w.bytes(frame);
+                w.finish()
+            }
         }
     }
 
@@ -614,6 +1007,44 @@ impl CtrlMsg {
                     .map_err(|_| WireError::Malformed("fault message is not utf-8".into()))?
                     .to_string();
                 CtrlMsg::Fault { message }
+            }
+            CTRL_REJOIN => {
+                let id = r.u32()? as usize;
+                let keep_caches = read_bool(&mut r, "keep_caches")?;
+                let round_deadline_ms = if read_bool(&mut r, "deadline-present")? {
+                    Some(r.f64()?)
+                } else {
+                    None
+                };
+                let n_ids = r.u32()? as usize;
+                let ids = r.i32s(n_ids)?;
+                let n_pos = r.u32()? as usize;
+                let pos = r.i32s(n_pos)?;
+                let resume_block = r.u32()? as usize;
+                let resync_rounds = r.u32()? as usize;
+                CtrlMsg::Rejoin {
+                    id,
+                    keep_caches,
+                    round_deadline_ms,
+                    ids,
+                    pos,
+                    resume_block,
+                    resync_rounds,
+                }
+            }
+            CTRL_REJOIN_ACK => CtrlMsg::RejoinAck {
+                id: r.u32()? as usize,
+                valid: r.u32()? as usize,
+                n_layers: r.u32()? as usize,
+                kv_heads: r.u32()? as usize,
+                head_dim: r.u32()? as usize,
+            },
+            CTRL_RESYNC => {
+                let block = r.u32()? as usize;
+                let epoch = r.u32()? as usize;
+                let len = r.u32()? as usize;
+                let frame = r.take(len)?.to_vec();
+                CtrlMsg::Resync { block, epoch, frame }
             }
             other => return Err(WireError::Malformed(format!("unknown control tag {other}"))),
         };
@@ -743,6 +1174,70 @@ impl RemoteParticipant {
                 Ok(())
             }
             other => anyhow::bail!("expected join-ack, got {} from node {}", other.name(), self.id),
+        }
+    }
+
+    /// Run the full readmission handshake on a *fresh* transport: send
+    /// [`CtrlMsg::Rejoin`] (identity + shard, like `Join`, plus where the
+    /// session stands), stream one [`CtrlMsg::Resync`] per attended round
+    /// being replayed, then collect and validate the `RejoinAck` — which
+    /// the node sends only after its replay completed, so a successful
+    /// return means the node is caught up and ready for the next turn.
+    /// `resync` carries `(block, epoch, encoded GlobalKvFrame)` per round,
+    /// in block order.
+    pub(crate) fn rejoin(
+        &mut self,
+        ids: &[i32],
+        round_deadline_ms: Option<f64>,
+        resume_block: usize,
+        resync: &[(usize, usize, Vec<u8>)],
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(ids.len() == self.valid, "rejoin ids != valid rows");
+        let msg = CtrlMsg::Rejoin {
+            id: self.id,
+            keep_caches: self.keep_caches,
+            round_deadline_ms,
+            ids: ids.to_vec(),
+            pos: self.pos.clone(),
+            resume_block,
+            resync_rounds: resync.len(),
+        };
+        self.transport.send(&msg.encode())?;
+        for (block, epoch, frame) in resync {
+            let msg =
+                CtrlMsg::Resync { block: *block, epoch: *epoch, frame: frame.clone() };
+            self.transport.send(&msg.encode())?;
+        }
+        // The replayed node holds no live fresh-KV generation until its
+        // first post-rejoin attendee turn.
+        self.fresh_sent = None;
+        let frame = self.transport.recv()?;
+        self.check_fault(&frame)?;
+        match CtrlMsg::decode(&frame)? {
+            CtrlMsg::RejoinAck { id, valid, n_layers: nl, kv_heads: kh, head_dim: hd } => {
+                anyhow::ensure!(
+                    id == self.id,
+                    "rejoin-ack for participant {id}, expected {}",
+                    self.id
+                );
+                anyhow::ensure!(
+                    valid == self.valid,
+                    "rejoined node rebuilt {valid} valid rows, driver expected {}",
+                    self.valid
+                );
+                anyhow::ensure!(
+                    nl == n_layers && kh == kv_heads && hd == head_dim,
+                    "rejoined node model geometry ({nl} layers, {kh}x{hd} KV) differs \
+                     from driver's ({n_layers} layers, {kv_heads}x{head_dim} KV)"
+                );
+                Ok(())
+            }
+            other => {
+                anyhow::bail!("expected rejoin-ack, got {} from node {}", other.name(), self.id)
+            }
         }
     }
 
@@ -1175,6 +1670,118 @@ impl NodeHost {
                 self.transport.send(&ack.encode())?;
                 Ok(false)
             }
+            CtrlMsg::Rejoin {
+                id,
+                keep_caches,
+                round_deadline_ms,
+                ids,
+                pos,
+                resume_block,
+                resync_rounds,
+            } => {
+                // A rejoin arrives on a *fresh* transport: the old
+                // connection died, so this serve loop has no prior state
+                // for the participant — the shard ships again (same demo
+                // caveat as `Join`) and the node rebuilds everything from
+                // it plus the driver's resync frames.
+                anyhow::ensure!(
+                    en.is_none(),
+                    "rejoin for participant {id} on a transport that already joined"
+                );
+                anyhow::ensure!(
+                    ids.len() == pos.len(),
+                    "rejoin carries {} ids but {} positions",
+                    ids.len(),
+                    pos.len()
+                );
+                let vocab = self.engine.manifest.model.vocab_size;
+                anyhow::ensure!(
+                    ids.iter().all(|&t| t >= 0 && (t as usize) < vocab),
+                    "rejoin token ids out of vocabulary range (vocab {vocab})"
+                );
+                let n_layers = self.engine.manifest.model.n_layers;
+                anyhow::ensure!(
+                    resume_block <= n_layers,
+                    "rejoin resume block {resume_block} out of range ({n_layers} layers)"
+                );
+                anyhow::ensure!(
+                    resync_rounds <= resume_block,
+                    "rejoin announces {resync_rounds} resync rounds for only \
+                     {resume_block} replayed blocks"
+                );
+                self.transport
+                    .set_recv_timeout(read_timeout_for_deadline(round_deadline_ms))?;
+                let node = ParticipantNode::build(&self.engine, id, &ids, pos, keep_caches)?;
+                let mut enode = EngineNode { node, fresh: None };
+                // Collect the announced resync frames up front (each an
+                // aggregated GlobalKvFrame nested in a control frame —
+                // untrusted input, validated before any replay runs).
+                let mut frames: std::collections::BTreeMap<usize, (usize, GlobalKvFrame)> =
+                    std::collections::BTreeMap::new();
+                for _ in 0..resync_rounds {
+                    let raw = self.transport.recv()?;
+                    match CtrlMsg::decode(&raw)? {
+                        CtrlMsg::Resync { block, epoch, frame } => {
+                            let f = GlobalKvFrame::decode(&frame)?;
+                            anyhow::ensure!(
+                                f.block == block,
+                                "resync frame for block {} wrapped as block {block}",
+                                f.block
+                            );
+                            anyhow::ensure!(
+                                block < resume_block,
+                                "resync block {block} at/after resume point {resume_block}"
+                            );
+                            anyhow::ensure!(
+                                frames.insert(block, (epoch, f)).is_none(),
+                                "duplicate resync frame for block {block}"
+                            );
+                        }
+                        other => anyhow::bail!(
+                            "expected resync frame during rejoin, got {}",
+                            other.name()
+                        ),
+                    }
+                }
+                // Replay the session up to the resume point.  A block with
+                // a resync frame was a round this participant *attended*
+                // pre-demotion: re-project the fresh Q/K/V (bit-identical —
+                // same weights, same hidden state), restore own rows in
+                // the frame, and run the global attention exactly as the
+                // live round did (`want_mass: false` — masses were already
+                // collected when the round actually ran, so none is sent).
+                // Every other block advances on the local path, which is
+                // also what a deadline-missing live node would have done.
+                for block in 0..resume_block {
+                    if let Some((epoch, mut f)) = frames.remove(&block) {
+                        let (q, k, v) = self
+                            .engine
+                            .qkv_project(block, &enode.node.x, &enode.node.pos_pad)?;
+                        substitute_own_rows(&mut f, enode.node.id(), &k, &v, enode.node.valid)?;
+                        let fresh = FreshRound { block, epoch, want_mass: false, q, k, v };
+                        self.attend(&mut enode, &fresh, &f)?;
+                    } else {
+                        let node = &mut enode.node;
+                        let (xo, k, v) =
+                            self.engine.block_fused(block, &node.x, &node.pos_pad, &node.lmask)?;
+                        node.set_hidden(xo);
+                        if node.keeps_caches() {
+                            node.absorb_local(block, &k, &v)?;
+                        }
+                    }
+                }
+                let md = &self.engine.manifest.model;
+                let ack = CtrlMsg::RejoinAck {
+                    id,
+                    valid: enode.node.valid_rows(),
+                    n_layers: md.n_layers,
+                    kv_heads: md.n_kv_heads,
+                    head_dim: md.head_dim,
+                };
+                *en = Some(enode);
+                self.transport.send(&ack.encode())?;
+                Ok(false)
+            }
             CtrlMsg::AdvanceLocal { block } => {
                 let en = en.as_mut().ok_or_else(|| anyhow::anyhow!("advance before join"))?;
                 let n_layers = self.engine.manifest.model.n_layers;
@@ -1268,6 +1875,8 @@ impl NodeHost {
             }
             CtrlMsg::Shutdown => Ok(true),
             other @ (CtrlMsg::JoinAck { .. }
+            | CtrlMsg::RejoinAck { .. }
+            | CtrlMsg::Resync { .. }
             | CtrlMsg::RoundMass { .. }
             | CtrlMsg::DecodeDone { .. }
             | CtrlMsg::Fault { .. }) => {
@@ -1313,6 +1922,18 @@ impl<'a> TransportDriver<'a> {
         Ok(Self {
             inner: SessionDriver::new_with_remotes(engine, partition, cfg, net, transports)?,
         })
+    }
+
+    /// Attach a reconnector for churn recovery: with `cfg.rejoin` set, a
+    /// node whose transport fails enters probation and this callback is
+    /// asked for a replacement connection (to that participant's node
+    /// host) at each following round boundary, driving the
+    /// `Rejoin`/`Resync` readmission handshake.  Without a reconnector —
+    /// or with `cfg.rejoin` off — demotion stays single-stage and the
+    /// session is byte-identical to the pre-rejoin driver.
+    pub fn with_reconnector(mut self, reconnector: crate::fedattn::driver::Reconnector<'a>) -> Self {
+        self.inner.set_reconnector(reconnector);
+        self
     }
 
     /// The effective attendance schedule (after dropout masking).
@@ -1496,6 +2117,27 @@ mod tests {
             CtrlMsg::DecodeDone { tokens: 7 },
             CtrlMsg::Shutdown,
             CtrlMsg::Fault { message: "engine exploded".into() },
+            CtrlMsg::Rejoin {
+                id: 1,
+                keep_caches: true,
+                round_deadline_ms: Some(250.0),
+                ids: vec![11, 12],
+                pos: vec![6, 7],
+                resume_block: 4,
+                resync_rounds: 2,
+            },
+            CtrlMsg::Rejoin {
+                id: 0,
+                keep_caches: false,
+                round_deadline_ms: None,
+                ids: vec![],
+                pos: vec![],
+                resume_block: 0,
+                resync_rounds: 0,
+            },
+            CtrlMsg::RejoinAck { id: 1, valid: 2, n_layers: 8, kv_heads: 2, head_dim: 24 },
+            CtrlMsg::Resync { block: 3, epoch: 9, frame: vec![0xFA, 2, 1, 0, 7] },
+            CtrlMsg::Resync { block: 0, epoch: 0, frame: vec![] },
         ];
         for msg in msgs {
             let bytes = msg.encode();
@@ -1542,6 +2184,30 @@ mod tests {
         for cut in 0..full.len() {
             assert!(CtrlMsg::decode(&full[..cut]).is_err(), "cut at {cut}");
         }
+        // The rejoin handshake frames truncate just as cleanly.
+        let full = CtrlMsg::Rejoin {
+            id: 1,
+            keep_caches: true,
+            round_deadline_ms: Some(250.0),
+            ids: vec![5, 6],
+            pos: vec![0, 1],
+            resume_block: 3,
+            resync_rounds: 1,
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(CtrlMsg::decode(&full[..cut]).is_err(), "rejoin cut at {cut}");
+        }
+        let full = CtrlMsg::Resync { block: 2, epoch: 4, frame: vec![1, 2, 3, 4] }.encode();
+        for cut in 0..full.len() {
+            assert!(CtrlMsg::decode(&full[..cut]).is_err(), "resync cut at {cut}");
+        }
+        // Hostile resync payload length must fail before allocating.
+        let mut msg = vec![CTRL_MAGIC, CTRL_RESYNC, 1];
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(CtrlMsg::decode(&msg).is_err());
     }
 
     #[test]
@@ -1562,6 +2228,134 @@ mod tests {
         // A generous deadline may exceed the default — that is the
         // operator's explicit choice, not a clamp.
         assert!(read_timeout_for_deadline(Some(120_000.0)) > DEFAULT_IO_TIMEOUT);
+        // The configurable-grace variant pins the same derivation table
+        // with the grace as an explicit input: the default-grace helper
+        // is exactly the DEADLINE_TIMEOUT_GRACE instantiation…
+        for d in [None, Some(0.0), Some(500.0), Some(f64::INFINITY), Some(f64::NAN)] {
+            assert_eq!(
+                read_timeout_for_deadline_with_grace(d, DEADLINE_TIMEOUT_GRACE),
+                read_timeout_for_deadline(d)
+            );
+        }
+        // …and a custom grace shifts only the finite-deadline rows.
+        let g = Duration::from_millis(200);
+        assert_eq!(read_timeout_for_deadline_with_grace(None, g), DEFAULT_IO_TIMEOUT);
+        assert_eq!(
+            read_timeout_for_deadline_with_grace(Some(500.0), g),
+            Duration::from_millis(700)
+        );
+        assert_eq!(read_timeout_for_deadline_with_grace(Some(0.0), g), g);
+        assert_eq!(
+            read_timeout_for_deadline_with_grace(Some(f64::INFINITY), g),
+            DEFAULT_IO_TIMEOUT
+        );
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_bounded_and_deterministic() {
+        let p = RetryPolicy::default();
+        // The first attempt never waits.
+        assert_eq!(p.backoff_for(0), Duration::ZERO);
+        // Deterministic: same policy, same attempt, same wait.
+        assert_eq!(p.backoff_for(2), p.backoff_for(2));
+        // Exponential base with bounded jitter: attempt n waits at least
+        // base·2^(n-1) ms and at most 1.25× that (before the cap).
+        for attempt in 1..=4u32 {
+            let base = p.backoff_ms * 2f64.powi(attempt as i32 - 1);
+            let d = p.backoff_for(attempt).as_secs_f64() * 1e3;
+            assert!(d >= base && d <= base * 1.25 + 1e-9, "attempt {attempt}: {d} vs {base}");
+        }
+        // The cap holds for absurd attempt counts.
+        let capped = p.backoff_for(40).as_secs_f64() * 1e3;
+        assert!(capped <= p.max_backoff_ms * 1.25 + 1e-9);
+        // Different jitter seeds decorrelate the waits.
+        let q = RetryPolicy { jitter_seed: 7, ..RetryPolicy::default() };
+        assert_ne!(p.backoff_for(3), q.backoff_for(3));
+    }
+
+    #[test]
+    fn connect_with_retry_survives_initial_refusal() {
+        // Reserve a port, drop the listener, then bring it back up while
+        // the connector is backing off: the retry loop must land.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let listener = std::net::TcpListener::bind(addr).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap();
+        });
+        let policy = RetryPolicy { max_attempts: 8, backoff_ms: 20.0, ..RetryPolicy::default() };
+        let mut c = TcpTransport::connect_with_retry(addr, &policy).unwrap();
+        c.send(b"still here").unwrap();
+        assert_eq!(c.recv().unwrap(), b"still here");
+        server.join().unwrap();
+        // With no listener and one attempt, the error surfaces instead.
+        let one = RetryPolicy { max_attempts: 1, ..RetryPolicy::default() };
+        assert!(TcpTransport::connect_with_retry(addr, &one).is_err());
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let a = FaultSchedule::from_seed(42, 0.3, 200);
+        let b = FaultSchedule::from_seed(42, 0.3, 200);
+        for op in 0..200 {
+            assert_eq!(a.at(op), b.at(op), "op {op}");
+        }
+        // A different seed draws a different schedule.
+        let c = FaultSchedule::from_seed(43, 0.3, 200);
+        assert!((0..200).any(|op| a.at(op) != c.at(op)));
+        // Rate 0 is fault-free; rate 1 faults every op.
+        assert!(FaultSchedule::from_seed(1, 0.0, 100).is_empty());
+        assert_eq!(FaultSchedule::from_seed(1, 1.0, 100).len(), 100);
+    }
+
+    #[test]
+    fn chaos_transport_replays_scheduled_faults() {
+        // Duplicate at op 0: the peer receives the frame twice.
+        let (a, mut b) = ChannelTransport::pair();
+        let mut chaos = ChaosTransport::new(a, FaultSchedule::none().with_fault(0, Fault::Duplicate));
+        chaos.send(b"dup").unwrap();
+        assert_eq!(b.recv().unwrap(), b"dup");
+        assert_eq!(b.recv().unwrap(), b"dup");
+
+        // Corrupt at op 0: exactly one byte differs, length preserved.
+        let (a, mut b) = ChannelTransport::pair();
+        let mut chaos =
+            ChaosTransport::new(a, FaultSchedule::none().with_fault(0, Fault::CorruptByte));
+        chaos.send(b"payload").unwrap();
+        let got = b.recv().unwrap();
+        assert_eq!(got.len(), 7);
+        let diff = got.iter().zip(b"payload").filter(|(x, y)| x != y).count();
+        assert_eq!(diff, 1);
+
+        // Drop at op 1: the first send lands, the second kills the link,
+        // and every later op reports Closed.
+        let (a, mut b) = ChannelTransport::pair();
+        let mut chaos = ChaosTransport::new(a, FaultSchedule::drop_at(1));
+        chaos.send(b"one").unwrap();
+        assert_eq!(b.recv().unwrap(), b"one");
+        assert!(matches!(chaos.send(b"two"), Err(TransportError::Closed)));
+        assert!(matches!(chaos.send(b"three"), Err(TransportError::Closed)));
+        assert!(matches!(chaos.recv(), Err(TransportError::Closed)));
+
+        // Truncate at op 0: reported as a torn frame, link dead after.
+        let (a, _b) = ChannelTransport::pair();
+        let mut chaos =
+            ChaosTransport::new(a, FaultSchedule::none().with_fault(0, Fault::TruncateFrame));
+        assert!(matches!(chaos.send(b"torn"), Err(TransportError::TruncatedFrame(_))));
+        assert!(matches!(chaos.send(b"gone"), Err(TransportError::Closed)));
+
+        // A fault-free schedule is a transparent proxy (op counter still
+        // advances, so downstream schedules stay aligned).
+        let (a, mut b) = ChannelTransport::pair();
+        let mut chaos = ChaosTransport::new(a, FaultSchedule::none());
+        chaos.send(b"clean").unwrap();
+        assert_eq!(b.recv().unwrap(), b"clean");
+        assert_eq!(chaos.ops(), 1);
     }
 
     fn fresh(block: usize, epoch: usize, rows: usize) -> FreshRound {
@@ -1662,7 +2456,7 @@ mod tests {
             // the magic/tag checks and into the length-validation paths.
             if rng.bernoulli(0.5) && bytes.len() >= 3 {
                 bytes[0] = CTRL_MAGIC;
-                bytes[1] = 1 + rng.below(9) as u8;
+                bytes[1] = 1 + rng.below(12) as u8;
                 bytes[2] = 1; // wire version
             }
             if let Ok(msg) = CtrlMsg::decode(&bytes) {

@@ -4,6 +4,7 @@
 //!   info       — print model/artifact/weight information
 //!   run        — run one collaborative task and print the answer + costs
 //!   serve      — replay a workload trace through the coordinator
+//!   chaos      — churn-recovery capacity sweep (writes BENCH_churn.json)
 //!   gen-data   — print sample MicroFact episodes (workload inspection)
 //!   validate   — H=1 FedAttn ≡ CenAttn sanity check on live artifacts
 
@@ -42,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
         "node" => cmd_node(args),
+        "chaos" => cmd_chaos(args),
         "gen-data" => cmd_gen_data(args),
         "validate" => cmd_validate(args),
         "help" | "--help" => {
@@ -67,6 +69,8 @@ fn print_help() {
                                       over TCP with --connect)\n\
            serve                      replay a workload trace\n\
            node                       host participant nodes over TCP (--listen)\n\
+           chaos                      churn-recovery capacity sweep: fault rate x\n\
+                                      rejoin on/off (writes BENCH_churn.json)\n\
            gen-data                   sample MicroFact episodes\n\
            validate                   H=1 == CenAttn end-to-end check\n\
          \n\
@@ -87,10 +91,21 @@ fn print_help() {
            --round-deadline <ms>      per-sync-round contribution deadline in\n\
                                       simulated ms (late contributions are\n\
                                       excluded; off|none|inf disables); also\n\
-                                      bounds the TCP read timeout (+15 s grace)\n\
+                                      bounds the TCP read timeout (plus the\n\
+                                      --deadline-grace-ms margin)\n\
            --delta-frames <on|off>    delta-encode the downlink (default on):\n\
                                       attendees receive only rows they do not\n\
                                       already hold; off ships+bills full frames\n\
+           --rejoin <on|off>          churn recovery (default off): a wire node\n\
+                                      whose transport fails goes on probation\n\
+                                      and is readmitted via Rejoin/Resync at\n\
+                                      the next round boundary\n\
+           --retry-max-attempts <n>   connect/rejoin attempt budget (default 3)\n\
+           --retry-backoff-ms <ms>    first-retry backoff, doubled per attempt\n\
+                                      with seeded jitter (default 50)\n\
+           --deadline-grace-ms <ms>   grace added to the round deadline when\n\
+                                      deriving socket read timeouts\n\
+                                      (default 15000)\n\
            --listen <addr>            node: accept driver connections here\n\
                                       (default 127.0.0.1:7070)\n\
            --engine <dir>             node: load the host's own engine from\n\
@@ -147,6 +162,18 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(on) = fedattn::cli::parse_delta_frames(args)? {
         f.delta_frames = on;
+    }
+    if let Some(on) = fedattn::cli::parse_rejoin(args)? {
+        f.rejoin = on;
+    }
+    if let Some(n) = fedattn::cli::parse_retry_max_attempts(args)? {
+        sc.transport.retry_max_attempts = n;
+    }
+    if let Some(ms) = fedattn::cli::parse_retry_backoff_ms(args)? {
+        sc.transport.retry_backoff_ms = ms;
+    }
+    if let Some(ms) = fedattn::cli::parse_deadline_grace_ms(args)? {
+        sc.transport.deadline_grace_ms = ms;
     }
     if let Some(addr) = args.opt("listen") {
         sc.node.listen = addr.to_string();
@@ -229,6 +256,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         fmt_bytes(r.comm_bytes as f64),
         r.comm_time_ms
     );
+    if r.demotions + r.rejoins + r.retries > 0 {
+        println!(
+            "churn       : {} demotion(s), {} rejoin(s), {} retry(s)",
+            r.demotions, r.rejoins, r.retries
+        );
+    }
     Ok(())
 }
 
@@ -254,25 +287,35 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> 
     scfg.dropout_prob = sc.federation.dropout_prob;
     scfg.round_deadline_ms = sc.federation.round_deadline_ms;
     scfg.delta_frames = sc.federation.delta_frames;
+    scfg.rejoin = sc.federation.rejoin;
+    scfg.rejoin_max_attempts = sc.transport.retry_max_attempts;
     scfg.seed = sc.seed;
     scfg.workers = sc.serving.workers;
 
     let links = sc.network.links(n);
     let net = NetSim::new(sc.network.topology, links, sc.seed);
     // Under a round deadline, bound the socket wait to the deadline plus
-    // a grace margin instead of the 60 s default: a peer that blows far
-    // past the round surfaces fast.
-    let io_timeout =
-        fedattn::fedattn::transport::read_timeout_for_deadline(scfg.round_deadline_ms);
-    let transports: Vec<Box<dyn Transport>> = (0..n)
-        .map(|p| {
-            let addr = addrs[p % addrs.len()].as_str();
-            TcpTransport::connect(addr)
-                .and_then(|t| t.with_read_timeout(io_timeout))
-                .map(|t| Box::new(t) as Box<dyn Transport>)
-                .with_context(|| format!("connecting participant {p} to node host {addr}"))
-        })
-        .collect::<Result<_>>()?;
+    // the configured grace margin instead of the 60 s default: a peer
+    // that blows far past the round surfaces fast.
+    let io_timeout = fedattn::fedattn::transport::read_timeout_for_deadline_with_grace(
+        scfg.round_deadline_ms,
+        std::time::Duration::from_secs_f64(sc.transport.deadline_grace_ms / 1e3),
+    );
+    let retry = fedattn::fedattn::RetryPolicy {
+        max_attempts: sc.transport.retry_max_attempts,
+        backoff_ms: sc.transport.retry_backoff_ms,
+        jitter_seed: sc.seed,
+        ..Default::default()
+    };
+    let dial = |p: usize, what: &str| -> Result<Box<dyn Transport>> {
+        let addr = addrs[p % addrs.len()].as_str();
+        TcpTransport::connect_with_retry(addr, &retry)
+            .and_then(|t| t.with_read_timeout(io_timeout))
+            .map(|t| Box::new(t) as Box<dyn Transport>)
+            .with_context(|| format!("{what} participant {p} to node host {addr}"))
+    };
+    let transports: Vec<Box<dyn Transport>> =
+        (0..n).map(|p| dial(p, "connecting")).collect::<Result<_>>()?;
 
     println!(
         "prompt ({n} participants over {} node host(s), {}):",
@@ -281,7 +324,14 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> 
     );
     println!("  {}", ep.prompt());
     let t0 = std::time::Instant::now();
-    let rep = TransportDriver::new(&engine, &part, scfg, net, transports)?.run()?;
+    let rejoin = scfg.rejoin;
+    let mut driver = TransportDriver::new(&engine, &part, scfg, net, transports)?;
+    if rejoin {
+        // Probation nodes are re-dialed through the same round-robin map
+        // (and retry policy) the original connect used.
+        driver = driver.with_reconnector(Box::new(move |p| dial(p, "reconnecting")));
+    }
+    let rep = driver.run()?;
     let service_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "answer      : {:?} (gold {:?}) -> EM {}",
@@ -296,6 +346,15 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> 
         rep.net.comm_time_ms,
         rep.net.rounds
     );
+    if rep.net.demotions + rep.net.rejoins + rep.net.retries > 0 {
+        println!(
+            "churn       : {} demotion(s), {} rejoin(s), {} retry(s), {} resynced",
+            rep.net.demotions,
+            rep.net.rejoins,
+            rep.net.retries,
+            fmt_bytes(rep.net.resync_bytes as f64)
+        );
+    }
     Ok(())
 }
 
@@ -373,6 +432,135 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("latency p95 : {:.1} ms", rep.latency_percentile(95.0));
     let comm: u64 = rep.results.iter().map(|r| r.comm_bytes).sum();
     println!("comm total  : {}", fmt_bytes(comm as f64));
+    let demotions: u64 = rep.results.iter().map(|r| r.demotions).sum();
+    let rejoins: u64 = rep.results.iter().map(|r| r.rejoins).sum();
+    let retries: u64 = rep.results.iter().map(|r| r.retries).sum();
+    if demotions + rejoins + retries > 0 {
+        println!("churn       : {demotions} demotion(s), {rejoins} rejoin(s), {retries} retry(s)");
+    }
+    Ok(())
+}
+
+/// One sweep point of the deterministic churn model: `fault_rate > 0`
+/// kills a link every `ceil(1/fault_rate)` sync rounds, cycling through
+/// the non-publisher participants (the publisher is never killed — a
+/// dead publisher ends the session identically under every policy).
+/// With rejoin off every death is a permanent demotion, exactly the
+/// pre-recovery driver; with rejoin on the node is readmitted at the
+/// next round boundary — the probation → `Rejoin`/`Resync` path with a
+/// reconnector that always answers — so it misses only the rounds it
+/// was dark for.
+struct ChurnPoint {
+    rounds_total: usize,
+    rounds_attended: usize,
+    demotions: usize,
+    rejoins: usize,
+}
+
+fn churn_point(n: usize, rounds: usize, fault_rate: f64, rejoin: bool) -> ChurnPoint {
+    let period = if fault_rate > 0.0 { (1.0 / fault_rate).ceil() as usize } else { 0 };
+    let mut alive = vec![true; n];
+    let mut deaths = 0usize;
+    let mut out = ChurnPoint {
+        rounds_total: rounds * n,
+        rounds_attended: 0,
+        demotions: 0,
+        rejoins: 0,
+    };
+    for r in 0..rounds {
+        if rejoin {
+            for a in alive.iter_mut().skip(1) {
+                if !*a {
+                    *a = true;
+                    out.rejoins += 1;
+                }
+            }
+        }
+        // A fault mid-round costs that round's attendance (the driver's
+        // `attend_eff` goes false for an in-round failure), so the kill
+        // lands before the count.
+        if period > 0 && (r + 1) % period == 0 {
+            let victim = 1 + deaths % (n - 1);
+            if alive[victim] {
+                alive[victim] = false;
+                if !rejoin {
+                    out.demotions += 1;
+                }
+            }
+            deaths += 1;
+        }
+        out.rounds_attended += alive.iter().filter(|a| **a).count();
+    }
+    out
+}
+
+/// `chaos [--participants N] [--rounds R]` — churn-recovery capacity
+/// sweep, engine-free and RNG-free (see [`churn_point`]), comparing
+/// attendee capacity across fault rates with rejoin off vs on.  Writes
+/// the trajectory report to `BENCH_churn.json` at the repo root; CI
+/// asserts the committed copy's schema and the recovery property
+/// (rounds attended strictly higher with rejoin on at any nonzero fault
+/// rate).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use fedattn::util::json::{Json, JsonBuilder};
+    let n = args.usize_or("participants", 4).max(2);
+    let rounds = args.usize_or("rounds", 32).max(1);
+    let fault_rates = [0.0f64, 0.1, 0.25, 0.5];
+    println!("== Churn recovery: attendee capacity (N = {n}, {rounds} sync rounds) ==");
+    println!(
+        "{:>10} {:>7} {:>10} {:>9} {:>10} {:>8}",
+        "fault_rate", "rejoin", "attended", "capacity", "demotions", "rejoins"
+    );
+    let mut points = Vec::new();
+    for &f in &fault_rates {
+        for rejoin in [false, true] {
+            let p = churn_point(n, rounds, f, rejoin);
+            let capacity = p.rounds_attended as f64 / p.rounds_total as f64;
+            println!(
+                "{:>10.2} {:>7} {:>10} {:>8.1}% {:>10} {:>8}",
+                f,
+                if rejoin { "on" } else { "off" },
+                format!("{}/{}", p.rounds_attended, p.rounds_total),
+                capacity * 100.0,
+                p.demotions,
+                p.rejoins
+            );
+            points.push(
+                JsonBuilder::new()
+                    .num("fault_rate", f)
+                    .set("rejoin", Json::Bool(rejoin))
+                    .num("rounds_total", p.rounds_total as f64)
+                    .num("rounds_attended", p.rounds_attended as f64)
+                    .num("attend_rate", capacity)
+                    .num("demotions", p.demotions as f64)
+                    .num("rejoins", p.rejoins as f64)
+                    .build(),
+            );
+        }
+    }
+    let report = JsonBuilder::new()
+        .str("bench", "churn")
+        .num("participants", n as f64)
+        .num("sync_rounds", rounds as f64)
+        .set("points", Json::Arr(points))
+        .build();
+    // Walk to the outermost Cargo.toml (the workspace root) so the
+    // report lands next to the other committed BENCH_*.json copies no
+    // matter which directory the subcommand runs from.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let mut root = None;
+    for _ in 0..5 {
+        if dir.join("Cargo.toml").exists() {
+            root = Some(dir.clone());
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    let path = root.unwrap_or_else(|| std::path::PathBuf::from(".")).join("BENCH_churn.json");
+    std::fs::write(&path, report.to_string_compact())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("(trajectory report written to {})", path.display());
     Ok(())
 }
 

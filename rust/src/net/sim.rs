@@ -59,6 +59,21 @@ pub struct NetReport {
     /// row is re-delivered to every attendee, so the delta benches and
     /// golden tests compare these per round.
     pub round_rx_bytes: Vec<u64>,
+    /// Wire-mode churn: nodes demoted for the rest of the session
+    /// (transport lost and, with rejoin enabled, probation exhausted).
+    pub demotions: u64,
+    /// Wire-mode churn: successful mid-session readmissions (a demoted
+    /// node reconnected and replayed up to the live round).
+    pub rejoins: u64,
+    /// Wire-mode churn: failed reconnect attempts while a node was on
+    /// probation (each consumed one retry budget slot).
+    pub retries: u64,
+    /// Bytes shipped in `Resync` catch-up frames during rejoins.  Kept
+    /// out of the per-round uplink/downlink accounting on purpose: round
+    /// billing must stay byte-identical to a session where the node
+    /// merely missed those rounds (the rejoin differential guarantee),
+    /// so catch-up traffic is tallied on the side.
+    pub resync_bytes: u64,
 }
 
 impl NetReport {
@@ -266,6 +281,25 @@ impl NetSim {
         self.round_core(tx_bytes, attending, Some(rx_bytes), Some(uplink_ms))
     }
 
+    /// Record a wire-mode demotion (structured counterpart of the old
+    /// stderr log line — churn becomes part of the session report).
+    pub fn record_demotion(&mut self) {
+        self.report.demotions += 1;
+    }
+
+    /// Record a successful mid-session rejoin, plus the catch-up bytes
+    /// its `Resync` frames shipped (billed on the side, never through
+    /// round accounting — see [`NetReport::resync_bytes`]).
+    pub fn record_rejoin(&mut self, resync_bytes: u64) {
+        self.report.rejoins += 1;
+        self.report.resync_bytes += resync_bytes;
+    }
+
+    /// Record one failed reconnect attempt for a node on probation.
+    pub fn record_retry(&mut self) {
+        self.report.retries += 1;
+    }
+
     /// Per-participant link specifications.
     pub fn links(&self) -> &[LinkSpec] {
         &self.links
@@ -417,6 +451,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn churn_counters_accumulate_outside_round_accounting() {
+        let mut s = sim(2);
+        s.record_retry();
+        s.record_retry();
+        s.record_demotion();
+        s.record_rejoin(4096);
+        s.exchange_round(&[100, 200], &[true, true]);
+        let r = s.report();
+        assert_eq!((r.retries, r.demotions, r.rejoins), (2, 1, 1));
+        assert_eq!(r.resync_bytes, 4096);
+        // Resync bytes never leak into the per-round uplink/downlink
+        // accounting (the rejoin differential guarantee).
+        assert_eq!(r.tx_bytes, vec![100, 200]);
+        assert_eq!(r.round_bytes, vec![300]);
+        assert_eq!(r.total_bytes(), 300 + 200 + 100);
     }
 
     #[test]

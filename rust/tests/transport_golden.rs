@@ -20,6 +20,14 @@
 //! deadline changes nothing (dropout draws included), and a deadline of
 //! zero degrades every sync round to local attention exactly like a
 //! never-syncing schedule.
+//!
+//! A churn-recovery suite rides at the bottom: the rejoin differential
+//! (a node cut mid-session and readmitted through `Rejoin`/`Resync` is
+//! byte-identical to a deadline-miss world that never lost it), a seeded
+//! chaos-transport property (faulty sessions complete, deterministically
+//! per seed, and a zero-rate chaos wrapper changes nothing), and a
+//! mid-decode churn regression (a node dying between token broadcasts
+//! leaves its answer absent without killing the session).
 
 use std::net::TcpListener;
 use std::path::PathBuf;
@@ -29,10 +37,10 @@ use std::time::Duration;
 
 use fedattn::data::{gen_episode, partition, Segmentation};
 use fedattn::fedattn::{
-    wire_kind, ChannelTransport, CtrlMsg, FedSession, GlobalKv, GlobalKvDeltaFrame,
-    GlobalKvFrame, KvContribution, KvExchangePolicy, LocalSparsity, NodeHost,
-    SessionConfig, SessionReport, SyncSchedule, TcpTransport, Transport,
-    TransportDriver, TransportError, WireKind,
+    wire_kind, ChannelTransport, ChaosTransport, CtrlMsg, FaultSchedule, FedSession,
+    GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, KvExchangePolicy,
+    LocalSparsity, NodeHost, SessionConfig, SessionReport, SyncSchedule, TcpTransport,
+    Transport, TransportDriver, TransportError, WireKind,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::runtime::Engine;
@@ -932,4 +940,532 @@ fn zero_valid_row_participant_is_skipped_not_panicked() {
         );
         assert!(!rep.answer.is_empty(), "publisher answer empty (ratio {ratio})");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Churn recovery: rejoin differential, chaos property, mid-decode churn
+// ---------------------------------------------------------------------------
+
+/// Transcript + billing fingerprint for the churn differentials: every
+/// field a rejoined world must reproduce byte-for-byte.  Churn counters
+/// (`demotions`/`rejoins`/`resync_bytes`) are deliberately excluded —
+/// they are *supposed* to differ between a cut-and-readmitted world and
+/// the deadline-miss world it must otherwise equal.
+fn session_fp(rep: &SessionReport) -> String {
+    let answers: Vec<Json> = rep
+        .answers
+        .iter()
+        .map(|a| Json::Str(a.clone().unwrap_or_default()))
+        .collect();
+    JsonBuilder::new()
+        .str("answer", &rep.answer)
+        .num("generated_tokens", rep.generated_tokens as f64)
+        .num("rounds", rep.net.rounds as f64)
+        .arr_num(
+            "tx_bytes",
+            &rep.net.tx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "rx_bytes",
+            &rep.net.rx_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .arr_num(
+            "round_bytes",
+            &rep.net.round_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+        .set("answers", Json::Arr(answers))
+        .build()
+        .to_string_compact()
+}
+
+/// `session_fp` plus the churn counters: the determinism fingerprint for
+/// chaos runs, where the *events* themselves must replay identically.
+fn chaos_fp(rep: &SessionReport) -> String {
+    format!(
+        "{}|demotions={} rejoins={} retries={} resync_bytes={}",
+        session_fp(rep),
+        rep.net.demotions,
+        rep.net.rejoins,
+        rep.net.retries,
+        rep.net.resync_bytes
+    )
+}
+
+/// Cuts the driver→node link on the Nth `AdvanceSync` the driver sends
+/// (1-based), dropping the inner transport so the node host sees a clean
+/// close — a node crash aligned to a specific executed sync round.
+struct KillOnNthAdvanceSync {
+    inner: Option<Box<dyn Transport>>,
+    sync_sends_left: usize,
+}
+
+impl Transport for KillOnNthAdvanceSync {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        if self.inner.is_some() {
+            if let Ok(CtrlMsg::AdvanceSync { .. }) = CtrlMsg::decode(frame) {
+                self.sync_sends_left -= 1;
+                if self.sync_sends_left == 0 {
+                    self.inner = None;
+                    return Err(TransportError::Closed);
+                }
+            }
+        }
+        match self.inner.as_mut() {
+            Some(t) => t.send(frame),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        match self.inner.as_mut() {
+            Some(t) => t.recv(),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(t) => t.set_recv_timeout(timeout),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn peer(&self) -> String {
+        "kill-on-advance-sync".into()
+    }
+}
+
+/// The two worlds of the rejoin differential.
+#[derive(Clone, Copy)]
+enum ChurnWorld {
+    /// Cut the victim's link on its `kill_on`-th `AdvanceSync` (1-based)
+    /// and let it rejoin at the next round boundary.
+    Cut { kill_on: usize },
+    /// Never cut anything: force the victim late at `kill_block` via the
+    /// RNG-free `late_overrides` fixture — the deadline-miss reference.
+    Late { kill_block: usize },
+}
+
+/// One session in the `session_golden` workload shape with the victim
+/// either cut-and-rejoined or merely deadline-missed at the same round.
+fn run_rejoin_world(
+    engine: &Engine,
+    mode: Mode,
+    policy: KvExchangePolicy,
+    delta: bool,
+    victim: usize,
+    world: ChurnWorld,
+) -> SessionReport {
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.kv_policy = policy;
+    cfg.seed = 11;
+    cfg.decode_all = true;
+    cfg.delta_frames = delta;
+    match world {
+        ChurnWorld::Cut { .. } => {
+            cfg.rejoin = true;
+            cfg.rejoin_max_attempts = 3;
+        }
+        ChurnWorld::Late { kill_block } => {
+            cfg.late_overrides = Some(vec![(kill_block, victim)]);
+        }
+    }
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    // Host threads grow past `n` when the reconnector spawns replacement
+    // hosts, so the list lives behind a shared handle.
+    let handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    for p in 0..n {
+        let cut_here = matches!(world, ChurnWorld::Cut { .. }) && p == victim;
+        let raw: Box<dyn Transport> = match mode {
+            Mode::InProcess => unreachable!("no hosts for in-process runs"),
+            Mode::Channel => {
+                let (driver_end, node_end) = ChannelTransport::pair();
+                let engine_c = engine.clone();
+                handles.lock().unwrap().push(std::thread::spawn(move || {
+                    // The cut node's host may exit with a clean close or a
+                    // truncation, depending on where the cut lands.
+                    let res = NodeHost::new(engine_c, Box::new(node_end)).serve();
+                    if !cut_here {
+                        res.unwrap_or_else(|e| panic!("channel node host {p} failed: {e:#}"));
+                    }
+                }));
+                Box::new(driver_end)
+            }
+            Mode::Tcp => {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap();
+                let engine_c = engine.clone();
+                handles.lock().unwrap().push(std::thread::spawn(move || {
+                    let (stream, _) = listener.accept().unwrap();
+                    let t = TcpTransport::from_stream(stream).unwrap();
+                    let res = NodeHost::new(engine_c, Box::new(t)).serve();
+                    if !cut_here {
+                        res.unwrap_or_else(|e| panic!("tcp node host {p} failed: {e:#}"));
+                    }
+                }));
+                Box::new(TcpTransport::connect(addr).unwrap())
+            }
+        };
+        transports.push(if cut_here {
+            let ChurnWorld::Cut { kill_on } = world else { unreachable!() };
+            Box::new(KillOnNthAdvanceSync { inner: Some(raw), sync_sends_left: kill_on })
+        } else {
+            raw
+        });
+    }
+
+    let mut driver = TransportDriver::new(engine, &part, cfg, net, transports).unwrap();
+    if matches!(world, ChurnWorld::Cut { .. }) {
+        let handles2 = Arc::clone(&handles);
+        let engine2 = engine.clone();
+        driver = driver.with_reconnector(Box::new(move |p| {
+            assert_eq!(p, victim, "only the cut node should retry");
+            Ok(match mode {
+                Mode::InProcess => unreachable!("no hosts for in-process runs"),
+                Mode::Channel => {
+                    let (driver_end, node_end) = ChannelTransport::pair();
+                    let engine_c = engine2.clone();
+                    handles2.lock().unwrap().push(std::thread::spawn(move || {
+                        // A rejoined host ends with a clean shutdown — or a
+                        // closed link if the session finishes without it.
+                        let _ = NodeHost::new(engine_c, Box::new(node_end)).serve();
+                    }));
+                    Box::new(driver_end) as Box<dyn Transport>
+                }
+                Mode::Tcp => {
+                    let listener = TcpListener::bind("127.0.0.1:0")?;
+                    let addr = listener.local_addr()?;
+                    let engine_c = engine2.clone();
+                    handles2.lock().unwrap().push(std::thread::spawn(move || {
+                        if let Ok((stream, _)) = listener.accept() {
+                            if let Ok(t) = TcpTransport::from_stream(stream) {
+                                let _ = NodeHost::new(engine_c, Box::new(t)).serve();
+                            }
+                        }
+                    }));
+                    Box::new(TcpTransport::connect(addr)?) as Box<dyn Transport>
+                }
+            })
+        }));
+    }
+    let rep = driver.run().unwrap();
+    let hs: Vec<JoinHandle<()>> = std::mem::take(&mut *handles.lock().unwrap());
+    for h in hs {
+        h.join().expect("node host thread panicked");
+    }
+    rep
+}
+
+/// The rejoin differential: a node whose link is cut at an executed sync
+/// round and readmitted through `Rejoin`/`Resync` at the next round
+/// boundary produces a session — every answer, every billed byte —
+/// byte-identical to a world where the same node merely missed that one
+/// round as a deadline miss.  Across two KV policies (stateless and
+/// relevance-tracking) × delta frames on/off × channel and TCP.
+#[test]
+fn rejoin_resync_matches_deadline_miss_world() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let victim = (part.publisher() + 1) % n;
+    let sched = SyncSchedule::uniform(md.n_layers, n, 2);
+    let sync_blocks: Vec<usize> = (0..md.n_layers)
+        .filter(|&m| sched.attend[m].iter().any(|&b| b))
+        .collect();
+    assert!(sync_blocks.len() >= 2, "workload too small for a mid-session cut");
+    // Cut at the second executed sync round (so the victim has one
+    // attended round to resync) when a later round boundary remains for
+    // readmission; otherwise fall back to the first.
+    let (kill_idx, kill_block) = if sync_blocks[1] + 1 < md.n_layers {
+        (1usize, sync_blocks[1])
+    } else {
+        (0usize, sync_blocks[0])
+    };
+    assert!(kill_block + 1 < md.n_layers, "no round boundary left to rejoin at");
+
+    for mode in [Mode::Channel, Mode::Tcp] {
+        let mode_name = match mode {
+            Mode::Channel => "channel",
+            _ => "tcp",
+        };
+        for (name, policy) in [
+            ("full", KvExchangePolicy::Full),
+            ("top-k-relevance", KvExchangePolicy::TopKRelevance { budget_rows: 8 }),
+        ] {
+            for delta in [true, false] {
+                let tag = format!("{mode_name}/{name}/delta={delta}");
+                let churn = run_rejoin_world(
+                    &engine,
+                    mode,
+                    policy,
+                    delta,
+                    victim,
+                    ChurnWorld::Cut { kill_on: kill_idx + 1 },
+                );
+                let late = run_rejoin_world(
+                    &engine,
+                    mode,
+                    policy,
+                    delta,
+                    victim,
+                    ChurnWorld::Late { kill_block },
+                );
+                assert_eq!(
+                    session_fp(&churn),
+                    session_fp(&late),
+                    "{tag}: rejoined world diverged from the deadline-miss world"
+                );
+                assert_eq!(churn.answers, late.answers, "{tag}: transcripts diverged");
+                assert!(
+                    churn.answers[victim].is_some(),
+                    "{tag}: the rejoined node must decode"
+                );
+                assert_eq!(churn.net.rejoins, 1, "{tag}: expected exactly one rejoin");
+                assert_eq!(churn.net.demotions, 0, "{tag}: readmission must not demote");
+                assert_eq!(churn.net.retries, 0, "{tag}: first reconnect must succeed");
+                if kill_idx == 1 {
+                    assert!(
+                        churn.net.resync_bytes > 0,
+                        "{tag}: an attended round must ship resync bytes"
+                    );
+                }
+                assert_eq!(
+                    (late.net.demotions, late.net.rejoins, late.net.resync_bytes),
+                    (0, 0, 0),
+                    "{tag}: the deadline-miss world must record no churn"
+                );
+            }
+        }
+    }
+}
+
+/// A seeded fault schedule with the 2-op `Join` handshake (send + ack)
+/// left clean: a session that cannot even admit a node is a setup error,
+/// not churn.
+fn chaos_schedule(seed: u64, rate: f64) -> FaultSchedule {
+    const HORIZON: u64 = 600;
+    let raw = FaultSchedule::from_seed(seed, rate, HORIZON);
+    let mut s = FaultSchedule::none();
+    for op in 2..HORIZON {
+        if let Some(f) = raw.at(op) {
+            s = s.with_fault(op, f);
+        }
+    }
+    s
+}
+
+/// One chaos session: both non-publisher links wrapped in a seeded
+/// [`ChaosTransport`], the publisher clean (a demoted publisher is
+/// correctly fatal and not this property's subject).
+fn run_chaos(engine: &Engine, chaos_seed: u64, rate: f64, rejoin: bool) -> SessionReport {
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let publisher = part.publisher();
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.kv_policy = KvExchangePolicy::Full;
+    cfg.seed = 11;
+    cfg.rejoin = rejoin;
+    cfg.rejoin_max_attempts = 3;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    let handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    for p in 0..n {
+        let (driver_end, node_end) = ChannelTransport::pair();
+        let engine_c = engine.clone();
+        let strict = p == publisher;
+        handles.lock().unwrap().push(std::thread::spawn(move || {
+            let res = NodeHost::new(engine_c, Box::new(node_end)).serve();
+            if strict {
+                res.unwrap_or_else(|e| panic!("publisher node host {p} failed: {e:#}"));
+            }
+        }));
+        if p == publisher {
+            transports.push(Box::new(driver_end));
+        } else {
+            transports.push(Box::new(ChaosTransport::new(
+                driver_end,
+                chaos_schedule(chaos_seed ^ p as u64, rate),
+            )));
+        }
+    }
+
+    let mut driver = TransportDriver::new(engine, &part, cfg, net, transports).unwrap();
+    if rejoin {
+        let handles2 = Arc::clone(&handles);
+        let engine2 = engine.clone();
+        driver = driver.with_reconnector(Box::new(move |_p| {
+            // Replacement links are clean: chaos models the *old* link's
+            // failure, and a deterministic schedule on a reconnect whose
+            // timing depends on the fault pattern would be circular.
+            let (driver_end, node_end) = ChannelTransport::pair();
+            let engine_c = engine2.clone();
+            handles2.lock().unwrap().push(std::thread::spawn(move || {
+                let _ = NodeHost::new(engine_c, Box::new(node_end)).serve();
+            }));
+            Ok(Box::new(driver_end) as Box<dyn Transport>)
+        }));
+    }
+    let rep = driver.run().unwrap();
+    let hs: Vec<JoinHandle<()>> = std::mem::take(&mut *handles.lock().unwrap());
+    for h in hs {
+        h.join().expect("node host thread panicked");
+    }
+    rep
+}
+
+/// The chaos property, across three fault-schedule seeds: a session with
+/// seeded faults on every non-publisher link (drops, truncations,
+/// duplicates, corrupt bytes) completes without panicking — churn is
+/// absorbed, never fatal — and is byte-identical across reruns of the
+/// same seed, with and without rejoin.  A zero-rate chaos wrapper is a
+/// transparent pass-through: byte-identical to the unwrapped session and
+/// free of churn events.
+#[test]
+fn chaos_sessions_complete_and_are_deterministic() {
+    let Some(engine) = engine() else { return };
+    const RATE: f64 = 0.07;
+    for seed in [101u64, 202, 303] {
+        for rejoin in [false, true] {
+            let a = run_chaos(&engine, seed, RATE, rejoin);
+            assert!(
+                a.generated_tokens > 0,
+                "seed {seed} rejoin={rejoin}: no tokens decoded under chaos"
+            );
+            assert!(
+                !a.answer.is_empty(),
+                "seed {seed} rejoin={rejoin}: empty answer under chaos"
+            );
+            let b = run_chaos(&engine, seed, RATE, rejoin);
+            assert_eq!(
+                chaos_fp(&a),
+                chaos_fp(&b),
+                "seed {seed} rejoin={rejoin}: chaos session not deterministic"
+            );
+        }
+        let quiet = run_chaos(&engine, seed, 0.0, false);
+        let clean = run_session(&engine, Mode::Channel, RunCfg::new("full", KvExchangePolicy::Full));
+        assert_eq!(
+            chaos_fp(&quiet),
+            chaos_fp(&clean),
+            "seed {seed}: a zero-rate chaos wrapper must change nothing"
+        );
+        assert_eq!(
+            (quiet.net.demotions, quiet.net.rejoins, quiet.net.retries),
+            (0, 0, 0),
+            "seed {seed}: a zero-rate chaos run must record no churn"
+        );
+    }
+}
+
+/// Passes everything through until the second `TokenBroadcast` it
+/// receives, then drops the link: a node dying *between* token
+/// broadcasts, mid-decode.
+struct DyingMidDecode {
+    inner: Option<ChannelTransport>,
+    tokens_seen: usize,
+}
+
+impl Transport for DyingMidDecode {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(t) => t.send(frame),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        let t = self.inner.as_mut().ok_or(TransportError::Closed)?;
+        let frame = t.recv()?;
+        if wire_kind(&frame) == Some(WireKind::Token) {
+            self.tokens_seen += 1;
+            if self.tokens_seen == 2 {
+                self.inner = None;
+                return Err(TransportError::Closed);
+            }
+        }
+        Ok(frame)
+    }
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(t) => t.set_recv_timeout(timeout),
+            None => Err(TransportError::Closed),
+        }
+    }
+    fn peer(&self) -> String {
+        "dying-mid-decode".into()
+    }
+}
+
+/// Mid-decode churn: a non-publisher node whose link dies between
+/// `TokenBroadcast` frames of its own decode is demoted — its answer
+/// absent — while the session completes and the publisher's transcript
+/// is byte-identical to an undisturbed run.
+#[test]
+fn mid_decode_churn_leaves_answer_absent_not_fatal() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let publisher = part.publisher();
+    let dead = (publisher + 1) % n;
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.seed = 11;
+    cfg.decode_all = true;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    let mut hosts = Vec::with_capacity(n);
+    for p in 0..n {
+        let (driver_end, node_end) = ChannelTransport::pair();
+        let engine_c = engine.clone();
+        // The dying node's host fails when its token stream hits the
+        // dropped link; every other host must finish cleanly.
+        let tolerant = p == dead;
+        hosts.push(std::thread::spawn(move || {
+            let res = NodeHost::new(engine_c, Box::new(node_end)).serve();
+            if !tolerant {
+                res.unwrap_or_else(|e| panic!("surviving node host {p} failed: {e:#}"));
+            }
+        }));
+        if p == dead {
+            transports.push(Box::new(DyingMidDecode { inner: Some(driver_end), tokens_seen: 0 }));
+        } else {
+            transports.push(Box::new(driver_end));
+        }
+    }
+    let rep = TransportDriver::new(&engine, &part, cfg, net, transports)
+        .unwrap()
+        .run()
+        .unwrap();
+    for h in hosts {
+        h.join().expect("node host thread panicked");
+    }
+
+    let mut rc = RunCfg::new("full", KvExchangePolicy::Full);
+    rc.decode_all = true;
+    let clean = run_session(&engine, Mode::Channel, rc);
+
+    assert!(rep.answers[dead].is_none(), "dead node's answer must be absent");
+    assert!(clean.answers[dead].is_some(), "the victim decodes in the clean world");
+    assert_eq!(rep.answer, clean.answer, "publisher answer disturbed by mid-decode churn");
+    assert_eq!(rep.answers[publisher], clean.answers[publisher]);
+    assert_eq!(rep.generated_tokens, clean.generated_tokens);
+    assert!(rep.generated_tokens > 0);
+    assert_eq!(rep.net.demotions, 1, "a mid-decode death is one demotion");
+    assert_eq!(rep.net.rejoins, 0, "no rejoin window during decode");
+    // Prefill billing is untouched by a decode-phase death.
+    assert_eq!(rep.net.tx_bytes, clean.net.tx_bytes);
+    assert_eq!(rep.net.round_bytes, clean.net.round_bytes);
 }
