@@ -140,6 +140,28 @@ def build_entries(mc: ModelConfig, ac: AotConfig):
             {"kind": "decode_tail", "c": c, "r": r},
         ))
 
+    # Cross-session batched decode: B sessions advance one token each in a
+    # single dispatch (leading batch dim, weights broadcast).  The serving
+    # fabric falls back to per-session decode_tail when these are absent.
+    for b in ac.decode_batch:
+        for r in ac.decode_tail:
+            def dectb(x, pos, kc, vc, mc_, kt, vt, mt, *w):
+                return M.decode_block_tail_batched(
+                    mc, x, pos, kc, vc, mc_, kt, vt, mt, *w)
+
+            entries.append((
+                f"decode_tail_B{b}_C{c}_R{r}", dectb,
+                [("x", _f32(b, 1, d)), ("pos", _i32(b, 1)),
+                 ("k_cache", _f32(b, c, hkv, hd)),
+                 ("v_cache", _f32(b, c, hkv, hd)),
+                 ("mask_cache", _f32(b, 1, c)),
+                 ("k_tail", _f32(b, r, hkv, hd)),
+                 ("v_tail", _f32(b, r, hkv, hd)),
+                 ("mask_tail", _f32(b, 1, r))] + wspecs,
+                ["x_out", "k_new", "v_new"],
+                {"kind": "decode_tail_batched", "b": b, "c": c, "r": r},
+            ))
+
     def logits(x, ln_f, w_out):
         return (M.logits_head(mc, x, ln_f, w_out),)
 

@@ -79,6 +79,10 @@ class AotConfig:
                       variants (``decode_tail_C{c}_R{r}``): the ``[C]``
                       cache is uploaded once and frozen, each step ships
                       only the ``[R]`` tail of decode-appended rows.
+    ``decode_batch``— batch widths for the cross-session batched decode
+                      variants (``decode_tail_B{b}_C{c}_R{r}``): one
+                      dispatch advances ``B`` independent sessions by one
+                      token each (leading batch dim, weights broadcast).
     All lengths are multiples of the Pallas query tile (32), except the
     decode tail (decode uses the jnp reference attention, untiled).
     """
@@ -87,6 +91,7 @@ class AotConfig:
     g_variants: Tuple[int, ...] = (128, 256, 384)
     decode_cache: int = 448
     decode_tail: Tuple[int, ...] = (16, 32)
+    decode_batch: Tuple[int, ...] = (2, 4, 8)
     block_q: int = 32              # Pallas query tile
     block_kv: int = 64             # Pallas KV tile
 
@@ -107,6 +112,7 @@ def manifest_dict(mc: ModelConfig, ac: AotConfig) -> dict:
             "g_variants": list(ac.g_variants),
             "decode_cache": ac.decode_cache,
             "decode_tail": list(ac.decode_tail),
+            "decode_batch": list(ac.decode_batch),
             "block_q": ac.block_q,
             "block_kv": ac.block_kv,
         },

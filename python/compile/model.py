@@ -175,6 +175,36 @@ def decode_block_tail(mc: ModelConfig, x, pos, k_cache, v_cache, mask_cache,
     return x, k_new, v_new
 
 
+def decode_block_tail_batched(mc: ModelConfig, x, pos, k_cache, v_cache,
+                              mask_cache, k_tail, v_tail, mask_tail,
+                              ln1, wq, bq, wk, bk, wv, bv, wo, ln2, wg, wu, wd):
+    """Cross-session batched decode: ``B`` independent sessions per dispatch.
+
+    ``vmap`` of :func:`decode_block_tail` over a leading batch axis on every
+    activation/cache operand, with the block weights broadcast.  Slot ``i``
+    computes exactly ``decode_block_tail`` on its own operands — sessions
+    never attend across slots, so a fabric can stack unrelated sessions and
+    still produce per-session results identical to per-session dispatch.
+    Dead slots (sessions that finished early) are driven with zero operands
+    and fully masked caches; their outputs are discarded by the caller.
+
+    Args:
+      x:          [B, 1, d] per-session current-token hidden states.
+      pos:        [B, 1] per-session global positions.
+      k_cache:    [B, C, Hkv, hd] per-session frozen caches.
+      mask_cache: [B, 1, C]; k_tail/v_tail [B, R, Hkv, hd]; mask_tail [B, 1, R].
+
+    Returns (x_out [B,1,d], k_new [B,1,Hkv,hd], v_new [B,1,Hkv,hd]).
+    """
+    def one(x1, p1, kc, vc, mcm, kt, vt, mt):
+        return decode_block_tail(mc, x1, p1, kc, vc, mcm, kt, vt, mt,
+                                 ln1, wq, bq, wk, bk, wv, bv, wo,
+                                 ln2, wg, wu, wd)
+
+    return jax.vmap(one)(x, pos, k_cache, v_cache, mask_cache,
+                         k_tail, v_tail, mask_tail)
+
+
 def logits_head(mc: ModelConfig, x, ln_f, w_out):
     """Final RMSNorm + LM head for the last-position hidden state [1, d]."""
     return rms_norm(x, ln_f, mc.rms_eps) @ w_out

@@ -123,6 +123,42 @@ def test_decode_block_tail_equals_decode_block(params):
     np.testing.assert_allclose(np.asarray(vt_new), np.asarray(v_new), atol=1e-6)
 
 
+def test_decode_block_tail_batched_equals_per_item(params):
+    """Each batch slot of the vmapped cross-session decode must equal the
+    per-session decode_block_tail on the same operands — bitwise, since the
+    fabric's batched dispatch is pinned byte-identical to the fallback."""
+    rng = np.random.default_rng(6)
+    B, C, R = 4, 24, 8
+    bp = M.block_params(params, 0)
+    x = jnp.asarray(rng.standard_normal((B, 1, MC.d_model)), jnp.float32)
+    pos = jnp.asarray(rng.integers(1, 20, size=(B, 1)), jnp.int32)
+    kc = jnp.asarray(rng.standard_normal((B, C, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, C, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((B, R, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((B, R, MC.n_kv_heads, MC.head_dim)), jnp.float32)
+    used_c = rng.integers(1, C, size=B)
+    used_t = rng.integers(0, R, size=B)
+    mask_c = jnp.asarray(np.where(
+        np.arange(C)[None, None, :] < used_c[:, None, None], 0.0, -1e30),
+        jnp.float32)
+    mask_t = jnp.asarray(np.where(
+        np.arange(R)[None, None, :] < used_t[:, None, None], 0.0, -1e30),
+        jnp.float32)
+
+    xb, kb, vb = M.decode_block_tail_batched(
+        MC, x, pos, kc, vc, mask_c, kt, vt, mask_t, *bp)
+    assert xb.shape == (B, 1, MC.d_model)
+    assert kb.shape == (B, 1, MC.n_kv_heads, MC.head_dim)
+
+    for i in range(B):
+        xi, ki, vi = M.decode_block_tail(
+            MC, x[i], pos[i], kc[i], vc[i], mask_c[i], kt[i], vt[i],
+            mask_t[i], *bp)
+        np.testing.assert_allclose(np.asarray(xb[i]), np.asarray(xi), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(kb[i]), np.asarray(ki), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vb[i]), np.asarray(vi), atol=1e-6)
+
+
 def test_forward_logits_shape(params):
     ids = jnp.asarray(np.arange(10) % MC.vocab_size, jnp.int32)
     logits = M.forward_logits(MC, params, ids)

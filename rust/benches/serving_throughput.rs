@@ -2,11 +2,19 @@
 //! Poisson load (the deployment-facing counterpart of the paper's
 //! efficiency claims; no direct paper figure — see DESIGN.md §4).
 //!
-//! Sweeps the two parallelism knobs — `engines` (concurrent sessions) and
-//! `workers` (per-session participant parallelism) — and reports the
-//! device-resident-execution counters (activation bytes uploaded, bytes
-//! saved by shared device handles) alongside tokens/s.  A machine-readable
-//! trajectory report lands at the repo root (`BENCH_serving.json`).
+//! Three sections:
+//! 1. the historical `engines` × `workers` sweep over the thread-per-task
+//!    loop (device-resident-execution counters alongside tokens/s),
+//! 2. a measured discipline comparison — the same trace served by the
+//!    thread-per-task loop and by the session fabric (batched decode when
+//!    the manifest carries `decode_tail_B*` variants, singleton fallback
+//!    otherwise),
+//! 3. the deterministic 3-way capacity curve from [`fedattn::serve`]'s
+//!    analytic model (`thread-per-task` vs `fabric` vs `fabric-batched`).
+//!
+//! Sections 1–2 need artifacts and land in `bench_out/`.  Section 3 is
+//! engine-free and byte-reproducible; it is what `BENCH_serving.json` at
+//! the repo root carries, so CI can assert the curve shape on every push.
 //!
 //!     cargo bench --bench serving_throughput
 
@@ -17,7 +25,54 @@ use common::*;
 use fedattn::config::SystemConfig;
 use fedattn::coordinator::{Coordinator, CoordinatorConfig};
 use fedattn::data::{TraceConfig, WorkloadTrace};
+use fedattn::serve::{capacity_curve, ModelParams, ServeMode};
 use fedattn::util::json::{Json, JsonBuilder};
+
+/// The session sweep pinned into `BENCH_serving.json`.
+const CURVE_SWEEP: [usize; 4] = [4, 8, 16, 32];
+
+/// Build the deterministic curve report.  Everything in here must stay
+/// engine-free and host-independent: the committed JSON is regenerated
+/// bit-for-bit by this bench and checked by CI.
+fn curve_report() -> Json {
+    let p = ModelParams::default();
+    let curve = capacity_curve(&p, &CURVE_SWEEP);
+    let rows: Vec<Json> = curve
+        .iter()
+        .map(|pt| {
+            JsonBuilder::new()
+                .num("sessions", pt.sessions as f64)
+                .str("mode", pt.mode.name())
+                .num("tokens_per_s", pt.tokens_per_s)
+                .num("p50_ms", pt.p50_ms)
+                .num("p95_ms", pt.p95_ms)
+                .num("makespan_ms", pt.makespan_ms)
+                .build()
+        })
+        .collect();
+    JsonBuilder::new()
+        .str("bench", "serving")
+        .set(
+            "modes",
+            Json::Arr(ServeMode::ALL.iter().map(|m| Json::Str(m.name().into())).collect()),
+        )
+        .set(
+            "params",
+            JsonBuilder::new()
+                .num("engines", p.engines as f64)
+                .num("prefill_ms", p.prefill_ms)
+                .num("step_ms", p.step_ms)
+                .num("step_overhead_ms", p.step_overhead_ms)
+                .num("handoff_ms", p.handoff_ms)
+                .num("decode_steps", p.decode_steps as f64)
+                .num("batch_max", p.batch_max as f64)
+                .num("arrival_gap_ms", p.arrival_gap_ms)
+                .build(),
+        )
+        .arr_num("sweep", &CURVE_SWEEP.map(|s| s as f64))
+        .set("curve", Json::Arr(rows))
+        .build()
+}
 
 fn main() -> Result<()> {
     fedattn::util::log::init();
@@ -84,15 +139,82 @@ fn main() -> Result<()> {
             }
         }
     }
+
+    println!("\n== Serving discipline: thread-per-task vs session fabric ==");
+    println!(
+        "{:>16} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "discipline", "tok/s", "p50 ms", "p95 ms", "queue p95", "EM", "failed"
+    );
+    let mut disc_rows = Vec::new();
+    let trace = WorkloadTrace::generate(&TraceConfig {
+        seed: 99,
+        n_tasks: 16,
+        mean_interarrival_ms: 300.0,
+        ..Default::default()
+    });
+    for fabric in [false, true] {
+        let mut sc = SystemConfig::default();
+        sc.federation.participants = 3;
+        sc.serving.engines = 2;
+        sc.serving.fabric = fabric;
+        let mut ccfg = CoordinatorConfig::from_system(&sc);
+        ccfg.time_scale = 4.0;
+        let coord = Coordinator::new(engine.clone(), ccfg);
+        let rep = coord.serve_trace(&trace)?;
+        let tokens: usize = rep.results.iter().map(|r| r.generated_tokens).sum();
+        let tokens_per_s = tokens as f64 / (rep.makespan_ms / 1e3).max(1e-9);
+        let name = if fabric { "fabric" } else { "thread-per-task" };
+        println!(
+            "{:>16} {:>10.2} {:>10.1} {:>10.1} {:>10.1} {:>8.2} {:>8}",
+            name,
+            tokens_per_s,
+            rep.latency_percentile(50.0),
+            rep.latency_percentile(95.0),
+            rep.queue_percentile(95.0),
+            rep.em_rate(),
+            rep.failed_count(),
+        );
+        disc_rows.push(
+            JsonBuilder::new()
+                .str("discipline", name)
+                .num("tokens_per_s", tokens_per_s)
+                .num("p50_ms", rep.latency_percentile(50.0))
+                .num("p95_ms", rep.latency_percentile(95.0))
+                .num("queue_p95_ms", rep.queue_percentile(95.0))
+                .num("em", rep.em_rate())
+                .num("failed", rep.failed_count() as f64)
+                .num("dropped", rep.dropped.len() as f64)
+                .build(),
+        );
+    }
+
+    println!("\n== Analytic 3-way capacity curve (BENCH_serving.json) ==");
+    let p = ModelParams::default();
+    println!(
+        "{:>10} {:>16} {:>12} {:>10} {:>10}",
+        "sessions", "mode", "tok/s", "p50 ms", "p95 ms"
+    );
+    for pt in capacity_curve(&p, &CURVE_SWEEP) {
+        println!(
+            "{:>10} {:>16} {:>12.2} {:>10.1} {:>10.1}",
+            pt.sessions,
+            pt.mode.name(),
+            pt.tokens_per_s,
+            pt.p50_ms,
+            pt.p95_ms
+        );
+    }
+
     let stats = engine.stats.view();
-    let report = JsonBuilder::new()
-        .set("points", Json::Arr(rows.clone()))
+    let measured = JsonBuilder::new()
+        .set("points", Json::Arr(rows))
+        .set("disciplines", Json::Arr(disc_rows))
         .num("total_bytes_uploaded", stats.bytes_uploaded as f64)
         .num("total_upload_bytes_saved", stats.upload_bytes_saved as f64)
         .num("weight_bytes_uploaded", stats.weight_bytes_uploaded as f64)
         .num("executions", stats.executions as f64)
         .build();
-    write_json("serving_throughput", Json::Arr(rows));
-    write_bench_json("serving", report);
+    write_json("serving_throughput", measured);
+    write_bench_json("serving", curve_report());
     Ok(())
 }

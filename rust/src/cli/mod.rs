@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 
 use crate::fedattn::KvExchangePolicy;
+use crate::serve::AdmissionPolicy;
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -276,6 +277,77 @@ pub fn parse_node_engine(args: &Args) -> Option<std::path::PathBuf> {
     args.opt("engine").map(std::path::PathBuf::from)
 }
 
+/// Session-fabric serving from `--fabric` (accepts `on|off|true|false|1|0`;
+/// the bare flag means on, `--no-fabric` means off).  Returns `Ok(None)`
+/// when neither form is present so callers keep their config default
+/// (off); anything unparsable is an error, not a silent fallback — a
+/// typo'd toggle would serve through the wrong scheduler.
+pub fn parse_fabric(args: &Args) -> anyhow::Result<Option<bool>> {
+    if let Some(raw) = args.opt("fabric") {
+        return match raw {
+            "on" | "true" | "1" => Ok(Some(true)),
+            "off" | "false" | "0" => Ok(Some(false)),
+            other => anyhow::bail!("--fabric expects on|off|true|false|1|0, got {other:?}"),
+        };
+    }
+    if args.flag("fabric") {
+        return Ok(Some(true));
+    }
+    if args.flag("no-fabric") {
+        return Ok(Some(false));
+    }
+    Ok(None)
+}
+
+/// Admission policy from `--admission` (`block` | `shed-oldest` |
+/// `reject-over-slo`, the last taking its SLO from `--slo-ms`).  Returns
+/// `Ok(None)` when absent so callers keep their config default; unknown
+/// names, a missing/invalid SLO, or an SLO without the policy are
+/// errors, not silent fallbacks.
+pub fn parse_admission(args: &Args) -> anyhow::Result<Option<AdmissionPolicy>> {
+    let slo_ms = match args.opt("slo-ms") {
+        Some(raw) => {
+            let ms: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--slo-ms expects a number, got {raw:?}"))?;
+            anyhow::ensure!(
+                ms.is_finite() && ms > 0.0,
+                "--slo-ms must be finite and > 0, got {ms}"
+            );
+            Some(ms)
+        }
+        None => None,
+    };
+    let Some(name) = args.opt("admission") else {
+        anyhow::ensure!(
+            slo_ms.is_none(),
+            "--slo-ms is set but --admission is not \"reject-over-slo\""
+        );
+        return Ok(None);
+    };
+    let policy = AdmissionPolicy::parse(name, slo_ms)
+        .map_err(|e| anyhow::anyhow!("--admission: {e}"))?;
+    anyhow::ensure!(
+        slo_ms.is_none() || matches!(policy, AdmissionPolicy::RejectOverSlo { .. }),
+        "--slo-ms is set but --admission is not \"reject-over-slo\""
+    );
+    Ok(Some(policy))
+}
+
+/// Fabric in-flight session cap from `--max-inflight`.  Returns
+/// `Ok(None)` when absent (callers keep `serving.max_inflight`, then the
+/// 4 × engines default); zero or unparsable values are errors.
+pub fn parse_max_inflight(args: &Args) -> anyhow::Result<Option<usize>> {
+    let Some(raw) = args.opt("max-inflight") else {
+        return Ok(None);
+    };
+    let n: usize = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--max-inflight expects a positive integer, got {raw:?}")
+    })?;
+    anyhow::ensure!(n >= 1, "--max-inflight must be >= 1, got {n}");
+    Ok(Some(n))
+}
+
 /// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
 /// when absent (callers fall back to TOML `serving.time_scale`, then
 /// their own default); non-positive or unparsable values are errors.
@@ -459,6 +531,56 @@ mod tests {
             parse_node_engine(&parse(&["--engine", "/mnt/edge/artifacts"])),
             Some(std::path::PathBuf::from("/mnt/edge/artifacts"))
         );
+    }
+
+    #[test]
+    fn fabric_parse_forms() {
+        assert_eq!(parse_fabric(&parse(&[])).unwrap(), None);
+        for (raw, want) in [("on", true), ("off", false), ("1", true), ("0", false)] {
+            assert_eq!(parse_fabric(&parse(&["--fabric", raw])).unwrap(), Some(want), "{raw}");
+        }
+        assert_eq!(parse_fabric(&parse(&["--fabric"])).unwrap(), Some(true));
+        assert_eq!(parse_fabric(&parse(&["--no-fabric"])).unwrap(), Some(false));
+        assert!(parse_fabric(&parse(&["--fabric", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn admission_parse_and_validation() {
+        assert_eq!(parse_admission(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_admission(&parse(&["--admission", "block"])).unwrap(),
+            Some(AdmissionPolicy::Block)
+        );
+        assert_eq!(
+            parse_admission(&parse(&["--admission=shed-oldest"])).unwrap(),
+            Some(AdmissionPolicy::ShedOldest)
+        );
+        assert_eq!(
+            parse_admission(&parse(&["--admission", "reject-over-slo", "--slo-ms", "250"]))
+                .unwrap(),
+            Some(AdmissionPolicy::RejectOverSlo { slo_ms: 250.0 })
+        );
+        // reject-over-slo needs an SLO; an SLO needs the policy; the SLO
+        // must be a positive number; the policy name must be known.
+        assert!(parse_admission(&parse(&["--admission", "reject-over-slo"])).is_err());
+        assert!(parse_admission(&parse(&["--slo-ms", "250"])).is_err());
+        assert!(parse_admission(&parse(&["--admission", "block", "--slo-ms", "250"])).is_err());
+        assert!(parse_admission(
+            &parse(&["--admission", "reject-over-slo", "--slo-ms", "-1"])
+        )
+        .is_err());
+        assert!(parse_admission(&parse(&["--admission", "drop-newest"])).is_err());
+    }
+
+    #[test]
+    fn max_inflight_parse_and_range() {
+        assert_eq!(parse_max_inflight(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_max_inflight(&parse(&["--max-inflight", "8"])).unwrap(),
+            Some(8)
+        );
+        assert!(parse_max_inflight(&parse(&["--max-inflight", "0"])).is_err());
+        assert!(parse_max_inflight(&parse(&["--max-inflight", "lots"])).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use super::toml::TomlDoc;
 use crate::data::Segmentation;
 use crate::fedattn::KvExchangePolicy;
 use crate::net::{LinkSpec, Topology};
+use crate::serve::AdmissionPolicy;
 
 /// Federation-level knobs (maps to Alg. 1 parameters).
 #[derive(Debug, Clone)]
@@ -151,11 +152,31 @@ pub struct ServingConfig {
     /// default (1.0 for real-time replay, 10.0 for the `serve`
     /// subcommand's historical behaviour).
     pub time_scale: Option<f64>,
+    /// Serve through the session fabric (`serving.fabric` / `--fabric`):
+    /// resumable sessions multiplexed over the engine workers, with
+    /// admission control and cross-session batched decode.  Off (the
+    /// default) keeps the thread-per-task loop.
+    pub fabric: bool,
+    /// Admission policy in front of the serving queue
+    /// (`serving.admission` = `block` | `shed-oldest` | `reject-over-slo`;
+    /// the SLO itself comes from `serving.slo_ms`).
+    pub admission: AdmissionPolicy,
+    /// Max sessions admitted past the queue at once in fabric mode
+    /// (`serving.max_inflight`); `None` = 4 × engines.
+    pub max_inflight: Option<usize>,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        Self { engines: 1, queue_depth: 64, workers: 1, time_scale: None }
+        Self {
+            engines: 1,
+            queue_depth: 64,
+            workers: 1,
+            time_scale: None,
+            fabric: false,
+            admission: AdmissionPolicy::Block,
+            max_inflight: None,
+        }
     }
 }
 
@@ -348,6 +369,45 @@ impl SystemConfig {
             })?;
             anyhow::ensure!(ts > 0.0, "serving.time_scale must be > 0, got {ts}");
             c.serving.time_scale = Some(ts);
+        }
+        if let Some(v) = doc.get("serving.fabric") {
+            // Present but malformed must fail loudly — a silently ignored
+            // toggle would serve through the wrong scheduler.
+            c.serving.fabric = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("serving.fabric must be a boolean"))?;
+        }
+        let slo_ms = match doc.get("serving.slo_ms") {
+            Some(v) => {
+                let slo = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("serving.slo_ms must be a number"))?;
+                anyhow::ensure!(
+                    slo.is_finite() && slo > 0.0,
+                    "serving.slo_ms must be finite and > 0, got {slo}"
+                );
+                Some(slo)
+            }
+            None => None,
+        };
+        if let Some(v) = doc.get("serving.admission") {
+            let name = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("serving.admission must be a string policy name")
+            })?;
+            // Unknown names and a missing/invalid SLO fail loudly here.
+            c.serving.admission = AdmissionPolicy::parse(name, slo_ms)?;
+        }
+        anyhow::ensure!(
+            slo_ms.is_none()
+                || matches!(c.serving.admission, AdmissionPolicy::RejectOverSlo { .. }),
+            "serving.slo_ms is set but serving.admission is not \"reject-over-slo\""
+        );
+        if let Some(v) = doc.get("serving.max_inflight") {
+            let n = v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("serving.max_inflight must be a positive integer")
+            })?;
+            anyhow::ensure!(n >= 1, "serving.max_inflight must be >= 1, got {n}");
+            c.serving.max_inflight = Some(n);
         }
         Ok(c)
     }
@@ -591,6 +651,49 @@ mod tests {
     #[test]
     fn rejects_unknown_segmentation() {
         let doc = TomlDoc::parse("[federation]\nsegmentation = \"nope\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_fabric_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert!(!c.serving.fabric);
+        assert_eq!(c.serving.admission, AdmissionPolicy::Block);
+        assert_eq!(c.serving.max_inflight, None);
+
+        let doc = TomlDoc::parse(
+            "[serving]\nfabric = true\nadmission = \"shed-oldest\"\nmax_inflight = 8",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert!(c.serving.fabric);
+        assert_eq!(c.serving.admission, AdmissionPolicy::ShedOldest);
+        assert_eq!(c.serving.max_inflight, Some(8));
+
+        let doc = TomlDoc::parse(
+            "[serving]\nadmission = \"reject-over-slo\"\nslo_ms = 250.0",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.serving.admission, AdmissionPolicy::RejectOverSlo { slo_ms: 250.0 });
+
+        // Present but malformed must fail loudly, not silently default.
+        let doc = TomlDoc::parse("[serving]\nfabric = \"yes\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[serving]\nadmission = \"drop-newest\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        // reject-over-slo without an SLO, and an SLO without the policy.
+        let doc = TomlDoc::parse("[serving]\nadmission = \"reject-over-slo\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[serving]\nslo_ms = 100.0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse(
+            "[serving]\nadmission = \"reject-over-slo\"\nslo_ms = -1.0",
+        )
+        .unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[serving]\nmax_inflight = 0").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 }

@@ -7,21 +7,23 @@
 //! is partitioned per the configured segmentation, prefilled under the
 //! configured schedule and decoded by its publisher.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
-use crate::data::{partition, Segmentation, WorkloadTrace};
+use crate::data::{partition, Episode, Segmentation, WorkloadTrace};
 use crate::fedattn::{
-    FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule, TcpTransport,
-    Transport, TransportDriver,
+    DecodeHandle, DecodeStep, FedSession, KvExchangePolicy, LocalSparsity, SessionConfig,
+    SyncSchedule, TcpTransport, Transport, TransportDriver,
 };
 use crate::metrics::em_score;
 use crate::net::NetSim;
 use crate::runtime::Engine;
+use crate::serve::{
+    run_fabric, AdmissionPolicy, DroppedTask, FabricConfig, FabricTask, FailedTask,
+};
 use crate::util::stats::{percentile, Summary};
 
 /// Coordinator knobs (subset of [`SystemConfig`] plus scheduling).
@@ -71,6 +73,16 @@ pub struct CoordinatorConfig {
     pub rejoin: bool,
     /// Transport retry/backoff + read-timeout grace knobs (`[transport]`).
     pub transport: crate::config::TransportConfig,
+    /// Serve through the session fabric (`serving.fabric` / `--fabric`):
+    /// resumable sessions multiplexed over the engine workers, with
+    /// admission control and cross-session batched decode.  Off keeps
+    /// the thread-per-task loop.
+    pub fabric: bool,
+    /// Admission policy in front of the task queue (fabric mode).
+    pub admission: AdmissionPolicy,
+    /// Max sessions admitted past the queue at once (fabric mode);
+    /// `None` = 4 × engines.
+    pub max_inflight: Option<usize>,
 }
 
 impl CoordinatorConfig {
@@ -100,6 +112,9 @@ impl CoordinatorConfig {
             node_addrs: sc.node.connect.clone(),
             rejoin: sc.federation.rejoin,
             transport: sc.transport.clone(),
+            fabric: sc.serving.fabric,
+            admission: sc.serving.admission,
+            max_inflight: sc.serving.max_inflight,
         }
     }
 
@@ -134,9 +149,18 @@ pub struct TaskResult {
 }
 
 /// Aggregate serving report.
+///
+/// `results` holds only tasks that *completed*; `em_rate` and the
+/// latency/queue percentiles are computed over completions.  Tasks that
+/// started but errored land in `failed` (id + error, never just a log
+/// line), and tasks the admission policy turned away land in `dropped`.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub results: Vec<TaskResult>,
+    /// Tasks that started but did not produce a result.
+    pub failed: Vec<FailedTask>,
+    /// Tasks shed or rejected by admission control (fabric mode).
+    pub dropped: Vec<DroppedTask>,
     pub makespan_ms: f64,
 }
 
@@ -146,6 +170,11 @@ impl ServeReport {
             return 0.0;
         }
         self.results.iter().filter(|r| r.em).count() as f64 / self.results.len() as f64
+    }
+
+    /// Tasks that started but errored (excluded from every other stat).
+    pub fn failed_count(&self) -> usize {
+        self.failed.len()
     }
 
     pub fn throughput_tasks_per_s(&self) -> f64 {
@@ -159,6 +188,13 @@ impl ServeReport {
     /// NaN — these values land verbatim in BENCH JSON).
     pub fn latency_percentile(&self, p: f64) -> f64 {
         let xs: Vec<f64> = self.results.iter().map(|r| r.latency_ms).collect();
+        percentile(&xs, p)
+    }
+
+    /// Nearest-rank queue-wait percentile (admission → prefill start);
+    /// 0.0 for a zero-task report.
+    pub fn queue_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.results.iter().map(|r| r.queue_ms).collect();
         percentile(&xs, p)
     }
 
@@ -200,6 +236,40 @@ impl<T> TaskQueue<T> {
         }
         q.push_back(item);
         self.cv.notify_all();
+    }
+
+    /// Non-blocking push: `Err(item)` back to the caller when the queue
+    /// is full (admission policies decide what to do with it).
+    pub fn try_push(&self, item: T) -> std::result::Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(item);
+        }
+        q.push_back(item);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Push that sheds the *oldest* queued item instead of blocking when
+    /// full; the displaced item is returned so the caller can record the
+    /// drop (shed-oldest admission).  Never blocks.
+    pub fn shed_push(&self, item: T) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        let shed = (q.len() >= self.capacity).then(|| q.pop_front()).flatten();
+        q.push_back(item);
+        self.cv.notify_all();
+        shed
+    }
+
+    /// Non-blocking pop: `None` when nothing is queued right now (the
+    /// fabric scheduler polls between events instead of parking here).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        let item = q.pop_front();
+        if item.is_some() {
+            self.cv.notify_all();
+        }
+        item
     }
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
@@ -262,10 +332,10 @@ impl Coordinator {
         &self.engine
     }
 
-    /// Serve one episode synchronously (the `run` CLI subcommand).
-    pub fn run_one(&self, episode: &crate::data::Episode, task_seed: u64) -> Result<TaskResult> {
+    /// Session config + network sim for one served task (shared by the
+    /// synchronous path and the fabric's per-session state machines).
+    fn session_setup(&self, task_seed: u64) -> Result<(SessionConfig, NetSim)> {
         let cfg = &self.cfg;
-        let part = partition(episode, cfg.participants, cfg.segmentation);
         let md = &self.engine.manifest.model;
         let schedule = SyncSchedule::uniform(md.n_layers, cfg.participants, cfg.sync_h);
         let mut scfg = SessionConfig::new(schedule);
@@ -276,7 +346,7 @@ impl Coordinator {
         scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.delta_frames = cfg.delta_frames;
         scfg.seed = task_seed;
-        // The session borrows the coordinator's shared pool below; keep
+        // The session borrows the coordinator's shared pool; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.
         scfg.workers = 1;
         let links = self.cfg.links();
@@ -300,6 +370,20 @@ impl Coordinator {
             ));
         }
         let net = NetSim::new(cfg.topology, links, task_seed);
+        Ok((scfg, net))
+    }
+
+    /// Serve one episode synchronously (the `run` CLI subcommand and the
+    /// thread-per-task serving loop).
+    pub fn run_one(
+        &self,
+        task_id: usize,
+        episode: &Episode,
+        task_seed: u64,
+    ) -> Result<TaskResult> {
+        let cfg = &self.cfg;
+        let part = partition(episode, cfg.participants, cfg.segmentation);
+        let (mut scfg, net) = self.session_setup(task_seed)?;
         let t0 = Instant::now();
         let rep = match cfg.node_addrs.as_deref() {
             // Node-resident wire mode: the participants' block compute
@@ -355,7 +439,7 @@ impl Coordinator {
         };
         let service_ms = t0.elapsed().as_secs_f64() * 1e3;
         Ok(TaskResult {
-            task_id: 0,
+            task_id,
             em: em_score(&rep.answer, &episode.answer),
             answer: rep.answer,
             gold: episode.answer.clone(),
@@ -371,12 +455,20 @@ impl Coordinator {
         })
     }
 
-    /// Serve a whole trace through `engines` workers with Poisson arrivals.
+    /// Serve a whole trace through `engines` workers with Poisson
+    /// arrivals.  `serving.fabric` routes through the session fabric
+    /// (resumable sessions, admission control, cross-session batched
+    /// decode); off keeps the thread-per-task loop.  Both paths seed
+    /// task `i` with `cfg.seed + i`, so at equal configuration they
+    /// produce byte-identical per-task transcripts.
     pub fn serve_trace(&self, trace: &WorkloadTrace) -> Result<ServeReport> {
+        if self.cfg.fabric {
+            return self.serve_trace_fabric(trace);
+        }
         let queue: Arc<TaskQueue<(usize, Instant)>> =
             Arc::new(TaskQueue::new(self.cfg.queue_depth));
         let results: Arc<Mutex<Vec<TaskResult>>> = Arc::new(Mutex::new(Vec::new()));
-        let next_seed = AtomicUsize::new(self.cfg.seed as usize);
+        let failed: Arc<Mutex<Vec<FailedTask>>> = Arc::new(Mutex::new(Vec::new()));
         let start = Instant::now();
 
         std::thread::scope(|s| -> Result<()> {
@@ -384,21 +476,26 @@ impl Coordinator {
             for _ in 0..self.cfg.engines.max(1) {
                 let queue = Arc::clone(&queue);
                 let results = Arc::clone(&results);
-                let next_seed = &next_seed;
+                let failed = Arc::clone(&failed);
                 s.spawn(move || {
                     while let Some((task_id, enqueued_at)) = queue.pop() {
                         let queue_ms = enqueued_at.elapsed().as_secs_f64() * 1e3;
-                        let seed = next_seed.fetch_add(1, Ordering::Relaxed) as u64;
+                        // Deterministic per-task seed: worker interleaving
+                        // must not change any session's transcript.
+                        let seed = self.cfg.seed + task_id as u64;
                         let task = &trace.tasks[task_id];
-                        match self.run_one(&task.episode, seed) {
+                        match self.run_one(task_id, &task.episode, seed) {
                             Ok(mut r) => {
-                                r.task_id = task_id;
                                 r.queue_ms = queue_ms;
                                 r.latency_ms = queue_ms + r.service_ms;
                                 results.lock().unwrap().push(r);
                             }
                             Err(e) => {
                                 log::error!("task {task_id} failed: {e:#}");
+                                failed.lock().unwrap().push(FailedTask {
+                                    task_id,
+                                    error: format!("{e:#}"),
+                                });
                             }
                         }
                     }
@@ -425,7 +522,155 @@ impl Coordinator {
             .into_inner()
             .unwrap();
         results.sort_by_key(|r| r.task_id);
-        Ok(ServeReport { results, makespan_ms: start.elapsed().as_secs_f64() * 1e3 })
+        let mut failed = Arc::try_unwrap(failed)
+            .map_err(|_| anyhow::anyhow!("failed list still shared"))?
+            .into_inner()
+            .unwrap();
+        failed.sort_by_key(|f| f.task_id);
+        Ok(ServeReport {
+            results,
+            failed,
+            dropped: Vec::new(),
+            makespan_ms: start.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Fabric-mode trace serving: every task becomes a [`SessionTask`]
+    /// state machine scheduled by [`run_fabric`].
+    fn serve_trace_fabric(&self, trace: &WorkloadTrace) -> Result<ServeReport> {
+        let engines = self.cfg.engines.max(1);
+        let fcfg = FabricConfig {
+            engines,
+            queue_depth: self.cfg.queue_depth,
+            max_inflight: self.cfg.max_inflight.unwrap_or(4 * engines),
+            admission: self.cfg.admission,
+            batching: true,
+            time_scale: self.cfg.time_scale,
+        };
+        let tasks: Vec<(f64, Box<dyn FabricTask + '_>)> = trace
+            .tasks
+            .iter()
+            .map(|t| {
+                let st = SessionTask {
+                    coord: self,
+                    task_id: t.id,
+                    episode: &t.episode,
+                    seed: self.cfg.seed + t.id as u64,
+                    t_start: None,
+                    handle: None,
+                    net: None,
+                    full: None,
+                };
+                (t.arrival_ms, Box::new(st) as Box<dyn FabricTask + '_>)
+            })
+            .collect();
+        let out = run_fabric(Some(&self.engine), &fcfg, tasks)?;
+        let mut results = out.results;
+        results.sort_by_key(|r| r.task_id);
+        let mut failed = out.failed;
+        failed.sort_by_key(|f| f.task_id);
+        Ok(ServeReport {
+            results,
+            failed,
+            dropped: out.dropped,
+            makespan_ms: out.makespan_ms,
+        })
+    }
+}
+
+/// One served session as a fabric state machine.
+///
+/// In-process sessions split into prefill (worker thread, once) + a
+/// resumable publisher decode ([`DecodeHandle`]) the fabric steps —
+/// individually or batched across sessions.  Wire-mode sessions decode
+/// node-resident, so they run to completion inside `prefill` and report
+/// `Done` immediately.
+struct SessionTask<'c> {
+    coord: &'c Coordinator,
+    task_id: usize,
+    episode: &'c Episode,
+    seed: u64,
+    t_start: Option<Instant>,
+    handle: Option<DecodeHandle>,
+    net: Option<crate::net::NetReport>,
+    /// Wire-mode short-circuit: the completed result.
+    full: Option<TaskResult>,
+}
+
+impl FabricTask for SessionTask<'_> {
+    fn task_id(&self) -> usize {
+        self.task_id
+    }
+
+    fn prefill(&mut self) -> Result<()> {
+        self.t_start = Some(Instant::now());
+        let cfg = &self.coord.cfg;
+        if cfg.node_addrs.as_deref().is_some_and(|a| !a.is_empty()) {
+            // Wire mode decodes at the nodes — no steppable decode to
+            // schedule; run the whole session here.
+            self.full = Some(self.coord.run_one(self.task_id, self.episode, self.seed)?);
+            return Ok(());
+        }
+        let part = partition(self.episode, cfg.participants, cfg.segmentation);
+        let (scfg, net) = self.coord.session_setup(self.seed)?;
+        let mut session = FedSession::new(&self.coord.engine, &part, scfg, net)?;
+        if let Some(pool) = &self.coord.session_pool {
+            session = session.with_shared_pool(Arc::clone(pool));
+        }
+        let (handle, pre) = session.into_publisher_decode()?;
+        self.handle = Some(handle);
+        self.net = Some(pre.net);
+        Ok(())
+    }
+
+    fn poll(&mut self) -> DecodeStep {
+        if self.full.is_some() {
+            return DecodeStep::Done;
+        }
+        match self.handle.as_mut() {
+            Some(h) => h.poll(),
+            None => DecodeStep::Done,
+        }
+    }
+
+    fn dispatch(&mut self) -> Result<()> {
+        let handle = self
+            .handle
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("dispatch on a session without a decode handle"))?;
+        handle.dispatch(&self.coord.engine)
+    }
+
+    fn decode_handle(&mut self) -> Option<&mut DecodeHandle> {
+        self.handle.as_mut()
+    }
+
+    fn into_result(self: Box<Self>) -> Result<TaskResult> {
+        if let Some(full) = self.full {
+            return Ok(full);
+        }
+        let handle = self
+            .handle
+            .ok_or_else(|| anyhow::anyhow!("session finished without prefilling"))?;
+        let net = self.net.unwrap_or_default();
+        let service_ms =
+            self.t_start.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(0.0);
+        let answer = handle.text();
+        Ok(TaskResult {
+            task_id: self.task_id,
+            em: em_score(&answer, &self.episode.answer),
+            answer,
+            gold: self.episode.answer.clone(),
+            queue_ms: 0.0,
+            service_ms,
+            latency_ms: service_ms,
+            comm_bytes: net.total_bytes(),
+            comm_time_ms: net.comm_time_ms,
+            generated_tokens: handle.ids().len(),
+            demotions: net.demotions,
+            rejoins: net.rejoins,
+            retries: net.retries,
+        })
     }
 }
 
@@ -479,24 +724,65 @@ mod tests {
         };
         let rep = ServeReport {
             results: vec![mk(0, 10.0, true), mk(1, 20.0, false), mk(2, 30.0, true)],
+            failed: vec![FailedTask { task_id: 3, error: "transport lost".into() }],
+            dropped: Vec::new(),
             makespan_ms: 1000.0,
         };
+        // Stats run over completions only; the failure is counted apart.
         assert!((rep.em_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert!((rep.throughput_tasks_per_s() - 3.0).abs() < 1e-12);
         assert_eq!(rep.latency_percentile(100.0), 30.0);
+        assert_eq!(rep.failed_count(), 1);
+        assert_eq!(rep.failed[0].task_id, 3);
+    }
+
+    #[test]
+    fn serve_report_queue_percentiles() {
+        let mk = |id: usize, q: f64| TaskResult {
+            task_id: id,
+            answer: String::new(),
+            gold: String::new(),
+            em: true,
+            queue_ms: q,
+            service_ms: 5.0,
+            latency_ms: q + 5.0,
+            comm_bytes: 0,
+            comm_time_ms: 0.0,
+            generated_tokens: 1,
+            demotions: 0,
+            rejoins: 0,
+            retries: 0,
+        };
+        let rep = ServeReport {
+            results: (0..10).map(|i| mk(i, (i + 1) as f64)).collect(),
+            failed: Vec::new(),
+            dropped: Vec::new(),
+            makespan_ms: 100.0,
+        };
+        // `percentile` indexes round(p · (n−1)): p50 of 1..=10 → v[5].
+        assert_eq!(rep.queue_percentile(50.0), 6.0);
+        assert_eq!(rep.queue_percentile(95.0), 10.0);
+        assert_eq!(rep.queue_percentile(100.0), 10.0);
     }
 
     #[test]
     fn empty_serve_report_emits_finite_stats() {
         // A trace where every task failed (or an empty trace) must not
         // push NaN/inf into BENCH JSON or panic in the percentile sort.
-        let rep = ServeReport { results: Vec::new(), makespan_ms: 0.0 };
+        let rep = ServeReport {
+            results: Vec::new(),
+            failed: Vec::new(),
+            dropped: Vec::new(),
+            makespan_ms: 0.0,
+        };
         assert_eq!(rep.em_rate(), 0.0);
         assert_eq!(rep.throughput_tasks_per_s(), 0.0);
         for p in [0.0, 50.0, 95.0, 100.0] {
             let v = rep.latency_percentile(p);
             assert!(v.is_finite(), "p{p} = {v}");
             assert_eq!(v, 0.0);
+            assert_eq!(rep.queue_percentile(p), 0.0);
         }
+        assert_eq!(rep.failed_count(), 0);
     }
 }

@@ -1494,6 +1494,41 @@ impl<'a> SessionDriver<'a> {
         self.prefill()
     }
 
+    /// Run prefill, then hand the *publisher's* decode to the caller as a
+    /// resumable [`DecodeHandle`] instead of looping to completion — the
+    /// serving-fabric entry point ([`DecodeStep`] protocol).  Requires the
+    /// default publisher-only decode (`decode_all = false`; a fabric task
+    /// wanting every participant's answer runs [`SessionDriver::run`]) and
+    /// an in-process session: wire sessions decode node-resident, so
+    /// there is no coordinator-side cache to step.
+    pub fn into_publisher_decode(mut self) -> Result<(DecodeHandle, PrefillOutput)> {
+        anyhow::ensure!(
+            self.remotes.is_none(),
+            "into_publisher_decode requires an in-process session (wire decode is node-resident)"
+        );
+        anyhow::ensure!(
+            !self.cfg.decode_all,
+            "into_publisher_decode decodes only the publisher (decode_all is set)"
+        );
+        let pre = self.prefill()?;
+        let p = self.publisher;
+        anyhow::ensure!(
+            self.nodes[p].valid > 0,
+            "publisher participant {p} has no valid rows to decode from"
+        );
+        let caches = std::mem::take(&mut self.nodes[p].caches);
+        anyhow::ensure!(!caches.is_empty(), "publisher participant {p} kept no decode caches");
+        let h_last = self.nodes[p].last_hidden()?;
+        let machine = DecodeMachine::new(
+            self.engine,
+            &h_last,
+            self.total_len,
+            self.cfg.max_new_tokens,
+            self.cfg.device_decode,
+        )?;
+        Ok((DecodeHandle { machine, caches }, pre))
+    }
+
     /// Attach a shared worker pool (e.g. the coordinator's, reused across
     /// tasks) instead of the session-owned one `workers > 1` would spawn.
     /// Pass `workers = 1` in the config when using this to avoid creating
@@ -1535,30 +1570,125 @@ pub(crate) fn decode_ids_from_caches(
     max_new_tokens: usize,
     device_decode: bool,
 ) -> Result<Vec<i32>> {
-    // A step appends at most one row per layer, and the final step never
-    // appends: at most max_new_tokens - 1 tail rows per decode.
-    let steps = max_new_tokens.saturating_sub(1);
-    let tail_r = (device_decode && steps > 0)
-        .then(|| engine.manifest.pick_decode_tail(steps))
-        .flatten();
-    // Freeze lazily, right before the first real decode pass — a decode
-    // that terminates on its kick-off logits (immediate EOS) uploads
-    // nothing at all, same as the host path.
-    let mut frozen = false;
+    let mut machine =
+        DecodeMachine::new(engine, h_last, total_len, max_new_tokens, device_decode)?;
+    loop {
+        match machine.poll() {
+            DecodeStep::Done => break,
+            DecodeStep::Ready { .. } | DecodeStep::NeedsDispatch => {
+                machine.dispatch(engine, caches)?;
+            }
+        }
+    }
+    Ok(machine.into_ids())
+}
 
-    // Kick-off logits from the participant's final prompt token.
-    let mut logits = engine.logits(h_last)?;
-    let mut out_ids: Vec<i32> = Vec::new();
-    for step in 0..max_new_tokens {
+/// What a decode state machine wants next (serving-fabric contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeStep {
+    /// A new token was produced and its decode pass is now owed; the same
+    /// pass must run (via [`DecodeMachine::dispatch`] or a batched cohort
+    /// step) before the next token can be produced.  The final token of a
+    /// budget-exhausted decode is *not* announced this way — it needs no
+    /// pass, so the machine reports [`DecodeStep::Done`] directly (read it
+    /// from [`DecodeMachine::ids`]).
+    Ready { token: i32 },
+    /// A decode pass is owed for an already-announced token.
+    NeedsDispatch,
+    /// Decode finished (EOS or token budget).
+    Done,
+}
+
+/// The per-session greedy decode loop of [`decode_ids_from_caches`], split
+/// into a resumable state machine the serving fabric can drive: `poll` is
+/// pure control flow, `dispatch` runs exactly one engine decode pass.
+///
+/// Driving `poll`/`dispatch` to completion issues the *identical* engine
+/// call sequence as the old inline loop (kick-off logits at construction;
+/// lazy cache freeze immediately before the first dispatch; one
+/// embed → per-layer decode → logits chain per emitted non-final token),
+/// so transcripts are byte-identical however the steps are interleaved
+/// across sessions.
+pub struct DecodeMachine {
+    total_len: usize,
+    max_new_tokens: usize,
+    /// Chosen decode-tail capacity, `None` for the host (full-cache) path.
+    tail_r: Option<usize>,
+    frozen: bool,
+    out_ids: Vec<i32>,
+    /// Logits awaiting consumption by the next `poll`; `None` while a
+    /// dispatch is owed.
+    logits: Option<Vec<f32>>,
+    /// Token whose decode pass has not run yet.
+    pending: Option<i32>,
+    done: bool,
+}
+
+impl DecodeMachine {
+    /// Start a decode from a participant's final prompt hidden state.
+    /// Runs the kick-off `logits` call (same as the old loop's first
+    /// engine call); everything after is driven by `poll`/`dispatch`.
+    pub fn new(
+        engine: &Engine,
+        h_last: &HostTensor,
+        total_len: usize,
+        max_new_tokens: usize,
+        device_decode: bool,
+    ) -> Result<Self> {
+        // A step appends at most one row per layer, and the final step
+        // never appends: at most max_new_tokens - 1 tail rows per decode.
+        let steps = max_new_tokens.saturating_sub(1);
+        let tail_r = (device_decode && steps > 0)
+            .then(|| engine.manifest.pick_decode_tail(steps))
+            .flatten();
+        Ok(Self {
+            total_len,
+            max_new_tokens,
+            tail_r,
+            frozen: false,
+            out_ids: Vec::new(),
+            logits: Some(engine.logits(h_last)?),
+            pending: None,
+            done: false,
+        })
+    }
+
+    /// Advance the control flow without touching the engine.
+    pub fn poll(&mut self) -> DecodeStep {
+        if self.done {
+            return DecodeStep::Done;
+        }
+        if self.pending.is_some() {
+            return DecodeStep::NeedsDispatch;
+        }
+        let logits = self.logits.take().expect("machine has logits when no dispatch is owed");
         let next = argmax(&logits);
         if next == tokenizer::EOS {
-            break;
+            self.done = true;
+            return DecodeStep::Done;
         }
-        out_ids.push(next);
-        if step + 1 == max_new_tokens {
-            break;
+        self.out_ids.push(next);
+        if self.out_ids.len() == self.max_new_tokens {
+            // Budget exhausted: the token is recorded but needs no decode
+            // pass, exactly like the old loop's `step + 1 == max` break.
+            self.done = true;
+            return DecodeStep::Done;
         }
-        if let (Some(r), false) = (tail_r, frozen) {
+        self.pending = Some(next);
+        DecodeStep::Ready { token: next }
+    }
+
+    /// Run the owed decode pass for the pending token over `caches`
+    /// (per-session path; a batched cohort uses [`Self::pending_token`] /
+    /// [`Self::complete_dispatch`] and runs the pass itself).
+    pub fn dispatch(&mut self, engine: &Engine, caches: &mut [BlockCache]) -> Result<()> {
+        let next =
+            self.pending.ok_or_else(|| anyhow::anyhow!("dispatch without a pending token"))?;
+        // Freeze lazily, right before the first real decode pass — a
+        // decode that terminates on its kick-off logits (immediate EOS)
+        // uploads nothing at all, same as the host path.
+        if let (Some(r), false) = (self.tail_r, self.frozen) {
+            let steps = self.max_new_tokens.saturating_sub(1);
             for cache in caches.iter_mut() {
                 // A previous decode may have part-filled this cache's
                 // tail; when the remaining capacity can't fit this
@@ -1575,10 +1705,10 @@ pub(crate) fn decode_ids_from_caches(
                 }
                 cache.freeze_device(engine, r)?;
             }
-            frozen = true;
+            self.frozen = true;
         }
         // One decode pass to produce logits for the following token.
-        let pos = (total_len + step) as i32;
+        let pos = self.dispatch_pos();
         let mut x = engine.embed(&[next])?;
         for (m, cache) in caches.iter_mut().enumerate() {
             let (xo, kn, vn) = match cache.dev.as_ref() {
@@ -1598,9 +1728,93 @@ pub(crate) fn decode_ids_from_caches(
             x = xo;
             cache.push_rows(&kn, &vn, 1, &[true]);
         }
-        logits = engine.logits(&x)?;
+        self.complete_dispatch(engine.logits(&x)?);
+        Ok(())
     }
-    Ok(out_ids)
+
+    /// Token ids emitted so far (final answer once `poll` returns `Done`).
+    pub fn ids(&self) -> &[i32] {
+        &self.out_ids
+    }
+
+    pub fn into_ids(self) -> Vec<i32> {
+        self.out_ids
+    }
+
+    /// The token whose decode pass is owed, if any.
+    pub(crate) fn pending_token(&self) -> Option<i32> {
+        self.pending
+    }
+
+    /// Global position of the pending token (valid while a dispatch is
+    /// owed): the token at out_ids index `len - 1` sits at
+    /// `total_len + len - 1`, matching the old loop's `total_len + step`.
+    pub(crate) fn dispatch_pos(&self) -> i32 {
+        (self.total_len + self.out_ids.len() - 1) as i32
+    }
+
+    /// Upper bound on decode passes still owed (including the pending
+    /// one) — the tail capacity a batched cohort must reserve.
+    pub(crate) fn remaining_dispatches(&self) -> usize {
+        self.max_new_tokens.saturating_sub(self.out_ids.len())
+    }
+
+    /// Finish an externally-executed decode pass (batched cohort step):
+    /// clear the pending token and install the logits it produced.
+    pub(crate) fn complete_dispatch(&mut self, logits: Vec<f32>) {
+        debug_assert!(self.pending.is_some(), "complete_dispatch without a pending token");
+        self.pending = None;
+        self.logits = Some(logits);
+    }
+
+    #[cfg(test)]
+    fn for_test(kickoff_logits: Vec<f32>, max_new_tokens: usize) -> Self {
+        Self {
+            total_len: 10,
+            max_new_tokens,
+            tail_r: None,
+            frozen: false,
+            out_ids: Vec::new(),
+            logits: Some(kickoff_logits),
+            pending: None,
+            done: false,
+        }
+    }
+}
+
+/// A publisher decode detached from its [`SessionDriver`]: the state
+/// machine plus the caches it decodes over, ready for the serving fabric
+/// to drive (created by [`SessionDriver::into_publisher_decode`]).
+pub struct DecodeHandle {
+    machine: DecodeMachine,
+    caches: Vec<BlockCache>,
+}
+
+impl DecodeHandle {
+    pub fn poll(&mut self) -> DecodeStep {
+        self.machine.poll()
+    }
+
+    /// Run the owed decode pass on the session's own caches.
+    pub fn dispatch(&mut self, engine: &Engine) -> Result<()> {
+        let Self { machine, caches } = self;
+        machine.dispatch(engine, caches)
+    }
+
+    pub fn ids(&self) -> &[i32] {
+        self.machine.ids()
+    }
+
+    /// Detokenized answer for the tokens emitted so far.
+    pub fn text(&self) -> String {
+        tokenizer::decode(self.machine.ids())
+    }
+
+    /// Machine + caches, for batched cohort steps that run the decode
+    /// pass themselves.
+    pub(crate) fn parts_mut(&mut self) -> (&mut DecodeMachine, &mut [BlockCache]) {
+        (&mut self.machine, &mut self.caches)
+    }
 }
 
 fn argmax(xs: &[f32]) -> i32 {
@@ -1621,6 +1835,59 @@ mod tests {
     fn argmax_picks_largest() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    /// Logits vector whose argmax is `tok`.
+    fn logits_for(tok: i32) -> Vec<f32> {
+        let mut l = vec![0.0f32; 8];
+        l[tok as usize] = 1.0;
+        l
+    }
+
+    #[test]
+    fn decode_machine_done_on_kickoff_eos() {
+        // Immediate EOS: no token, no dispatch ever owed.
+        let mut m = DecodeMachine::for_test(logits_for(tokenizer::EOS), 4);
+        assert_eq!(m.poll(), DecodeStep::Done);
+        assert_eq!(m.poll(), DecodeStep::Done);
+        assert!(m.ids().is_empty());
+    }
+
+    #[test]
+    fn decode_machine_budget_of_one_skips_dispatch() {
+        // A 1-token budget records the token but owes no decode pass —
+        // the machine goes straight to Done (matching the old loop's
+        // `step + 1 == max` break before any engine call).
+        let mut m = DecodeMachine::for_test(logits_for(5), 1);
+        assert_eq!(m.poll(), DecodeStep::Done);
+        assert_eq!(m.ids(), &[5]);
+    }
+
+    #[test]
+    fn decode_machine_steps_through_pending_protocol() {
+        let mut m = DecodeMachine::for_test(logits_for(5), 3);
+        assert_eq!(m.poll(), DecodeStep::Ready { token: 5 });
+        // Until the dispatch runs, the machine keeps asking for it.
+        assert_eq!(m.poll(), DecodeStep::NeedsDispatch);
+        assert_eq!(m.pending_token(), Some(5));
+        assert_eq!(m.dispatch_pos(), 10); // total_len 10 + step 0
+        assert_eq!(m.remaining_dispatches(), 2);
+        m.complete_dispatch(logits_for(6));
+        assert_eq!(m.poll(), DecodeStep::Ready { token: 6 });
+        assert_eq!(m.dispatch_pos(), 11);
+        m.complete_dispatch(logits_for(7));
+        // Third token exhausts the budget: recorded, no dispatch owed.
+        assert_eq!(m.poll(), DecodeStep::Done);
+        assert_eq!(m.ids(), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn decode_machine_stops_on_eos_mid_stream() {
+        let mut m = DecodeMachine::for_test(logits_for(4), 8);
+        assert_eq!(m.poll(), DecodeStep::Ready { token: 4 });
+        m.complete_dispatch(logits_for(tokenizer::EOS));
+        assert_eq!(m.poll(), DecodeStep::Done);
+        assert_eq!(m.into_ids(), vec![4]);
     }
 
     #[test]

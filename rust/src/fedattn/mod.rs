@@ -52,7 +52,10 @@ pub mod sparse;
 pub mod transport;
 
 pub use aggregate::{for_policy, AdaptiveAggregator, Aggregator, ConcatAggregator};
-pub use driver::{PrefillOutput, Reconnector, SessionConfig, SessionDriver, SessionReport};
+pub use driver::{
+    DecodeHandle, DecodeMachine, DecodeStep, PrefillOutput, Reconnector, SessionConfig,
+    SessionDriver, SessionReport,
+};
 pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use node::{Participant, ParticipantNode};

@@ -24,7 +24,8 @@ use crate::net::NetSim;
 use crate::runtime::Engine;
 
 pub use crate::fedattn::driver::{
-    PrefillOutput, SessionConfig, SessionDriver, SessionReport,
+    DecodeHandle, DecodeMachine, DecodeStep, PrefillOutput, SessionConfig, SessionDriver,
+    SessionReport,
 };
 
 /// Drives one collaborative task through the engine.  Thin facade over
@@ -69,6 +70,12 @@ impl<'a> FedSession<'a> {
     /// Prefill only (error-analysis paths that do not decode).
     pub fn run_prefill_only(self) -> Result<PrefillOutput> {
         self.driver.run_prefill_only()
+    }
+
+    /// Prefill, then hand the publisher's decode back as a resumable
+    /// [`DecodeHandle`] for the serving fabric to drive step by step.
+    pub fn into_publisher_decode(self) -> Result<(DecodeHandle, PrefillOutput)> {
+        self.driver.into_publisher_decode()
     }
 
     /// Attach a shared worker pool (e.g. the coordinator's, reused across

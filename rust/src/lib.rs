@@ -29,6 +29,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod theory;
 pub mod tokenizer;

@@ -122,7 +122,18 @@ fn print_help() {
            --engines <n>              serving worker threads\n\
            --workers <n>              per-session participant parallelism\n\
                                       (pool width; 1 = sequential, results\n\
-                                      are byte-identical either way)"
+                                      are byte-identical either way)\n\
+           --fabric <on|off>          serve: session-fabric scheduler (default\n\
+                                      off): resumable sessions over the engine\n\
+                                      pool, with admission control and\n\
+                                      cross-session batched decode\n\
+           --admission <p>            serve: block|shed-oldest|reject-over-slo\n\
+                                      (fabric; default block; turned-away\n\
+                                      tasks are recorded in the report)\n\
+           --slo-ms <ms>              serve: predicted-wait SLO for\n\
+                                      reject-over-slo\n\
+           --max-inflight <n>         serve: max sessions admitted at once\n\
+                                      (fabric; default 4 x engines)"
     );
 }
 
@@ -186,6 +197,15 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     sc.serving.engines = args.usize_or("engines", sc.serving.engines);
     sc.serving.workers = fedattn::cli::parse_workers(args, sc.serving.workers);
+    if let Some(on) = fedattn::cli::parse_fabric(args)? {
+        sc.serving.fabric = on;
+    }
+    if let Some(policy) = fedattn::cli::parse_admission(args)? {
+        sc.serving.admission = policy;
+    }
+    if let Some(n) = fedattn::cli::parse_max_inflight(args)? {
+        sc.serving.max_inflight = Some(n);
+    }
     Ok(sc)
 }
 
@@ -248,7 +268,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         sc.federation.segmentation.as_str()
     );
     println!("  {}", ep.prompt());
-    let r = coord.run_one(&ep, sc.seed)?;
+    let r = coord.run_one(0, &ep, sc.seed)?;
     println!("answer      : {:?} (gold {:?}) -> EM {}", r.answer, r.gold, r.em);
     println!("service     : {:.1} ms ({} tokens)", r.service_ms, r.generated_tokens);
     println!(
@@ -423,13 +443,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mean_interarrival_ms: args.f64_or("interarrival-ms", 200.0),
         ..Default::default()
     });
-    println!("serving {} tasks ...", trace.len());
+    println!(
+        "serving {} tasks ({}) ...",
+        trace.len(),
+        if sc.serving.fabric {
+            format!("fabric, admission {}", sc.serving.admission.name())
+        } else {
+            "thread-per-task".to_string()
+        }
+    );
     let rep = coord.serve_trace(&trace)?;
     println!("tasks       : {}", rep.results.len());
     println!("EM          : {:.3}", rep.em_rate());
     println!("throughput  : {:.2} tasks/s", rep.throughput_tasks_per_s());
     println!("latency p50 : {:.1} ms", rep.latency_percentile(50.0));
     println!("latency p95 : {:.1} ms", rep.latency_percentile(95.0));
+    println!(
+        "queue p50   : {:.1} ms  p95 {:.1} ms",
+        rep.queue_percentile(50.0),
+        rep.queue_percentile(95.0)
+    );
+    if rep.failed_count() > 0 {
+        println!("failed      : {}", rep.failed_count());
+        for f in &rep.failed {
+            println!("  task {}: {}", f.task_id, f.error);
+        }
+    }
+    if !rep.dropped.is_empty() {
+        let shed = rep
+            .dropped
+            .iter()
+            .filter(|d| d.reason == fedattn::serve::DropReason::Shed)
+            .count();
+        println!(
+            "dropped     : {} ({} shed, {} rejected)",
+            rep.dropped.len(),
+            shed,
+            rep.dropped.len() - shed
+        );
+    }
     let comm: u64 = rep.results.iter().map(|r| r.comm_bytes).sum();
     println!("comm total  : {}", fmt_bytes(comm as f64));
     let demotions: u64 = rep.results.iter().map(|r| r.demotions).sum();

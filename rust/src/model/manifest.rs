@@ -18,6 +18,10 @@ pub enum ArtifactKind {
     /// growing tail `[R]` (device-resident execution; uploads O(R) per
     /// step instead of O(C)).
     DecodeTail,
+    /// Cross-session batched decode-tail: a leading batch dim `[B]` on
+    /// every activation/cache operand advances `B` independent sessions
+    /// by one token in a single dispatch (weights broadcast).
+    DecodeTailBatched,
     Logits,
     Embed,
 }
@@ -30,6 +34,7 @@ impl ArtifactKind {
             "attn_ffn" => Self::AttnFfn,
             "decode_block" => Self::DecodeBlock,
             "decode_tail" => Self::DecodeTail,
+            "decode_tail_batched" => Self::DecodeTailBatched,
             "logits" => Self::Logits,
             "embed" => Self::Embed,
             other => bail!("unknown artifact kind {other:?}"),
@@ -80,6 +85,9 @@ pub struct ArtifactEntry {
     /// Decode-tail capacity (rows appended during decode) for
     /// [`ArtifactKind::DecodeTail`] entries.
     pub r: Option<usize>,
+    /// Batch width (concurrent sessions per dispatch) for
+    /// [`ArtifactKind::DecodeTailBatched`] entries.
+    pub b: Option<usize>,
     /// Input names in call order (weights included).
     pub inputs: Vec<String>,
     pub outputs: Vec<String>,
@@ -96,6 +104,10 @@ pub struct Manifest {
     /// device-resident decode path existed — the runtime falls back to
     /// full-cache uploads).
     pub decode_tail_variants: Vec<usize>,
+    /// Batch widths of the cross-session batched decode variants (empty
+    /// for artifact sets exported before the serving fabric existed —
+    /// the fabric falls back to per-session decode dispatches).
+    pub decode_batch_variants: Vec<usize>,
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -168,6 +180,7 @@ impl Manifest {
                 g: e.get("g").and_then(Json::as_usize),
                 c: e.get("c").and_then(Json::as_usize),
                 r: e.get("r").and_then(Json::as_usize),
+                b: e.get("b").and_then(Json::as_usize),
                 inputs,
                 outputs,
             });
@@ -181,6 +194,12 @@ impl Manifest {
             // Absent in pre-device-resident manifests: default to none.
             decode_tail_variants: aot
                 .get("decode_tail")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            // Absent in pre-serving-fabric manifests: default to none.
+            decode_batch_variants: aot
+                .get("decode_batch")
                 .and_then(Json::as_arr)
                 .map(|a| a.iter().filter_map(Json::as_usize).collect())
                 .unwrap_or_default(),
@@ -213,6 +232,19 @@ impl Manifest {
     /// path (callers fall back to full-cache uploads).
     pub fn pick_decode_tail(&self, len: usize) -> Option<usize> {
         self.decode_tail_variants.iter().copied().filter(|&r| r >= len).min()
+    }
+
+    /// Smallest batched-decode width that fits `n` concurrent sessions;
+    /// `None` when the artifact set has no batched variants (the serving
+    /// fabric falls back to per-session decode dispatches).
+    pub fn pick_decode_batch(&self, n: usize) -> Option<usize> {
+        self.decode_batch_variants.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// Largest batched-decode width available, if any — the fabric's
+    /// cohort-size ceiling.
+    pub fn max_decode_batch(&self) -> Option<usize> {
+        self.decode_batch_variants.iter().copied().max()
     }
 
     pub fn find(&self, kind: ArtifactKind, l: Option<usize>, g: Option<usize>) -> Result<&ArtifactEntry> {
@@ -282,6 +314,47 @@ mod tests {
         assert_eq!(m.pick_decode_tail(8), Some(16));
         assert_eq!(m.pick_decode_tail(17), Some(32));
         assert_eq!(m.pick_decode_tail(33), None);
+    }
+
+    #[test]
+    fn decode_batch_variants_optional() {
+        // SAMPLE predates the serving fabric: no batched variants, picks
+        // fall back to None (per-session decode dispatch).
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert!(m.decode_batch_variants.is_empty());
+        assert_eq!(m.pick_decode_batch(2), None);
+        assert_eq!(m.max_decode_batch(), None);
+
+        let with_batch = SAMPLE.replace(
+            "\"decode_cache\":448,",
+            "\"decode_cache\":448,\"decode_batch\":[2,4,8],",
+        );
+        let j = Json::parse(&with_batch).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.decode_batch_variants, vec![2, 4, 8]);
+        assert_eq!(m.pick_decode_batch(1), Some(2));
+        assert_eq!(m.pick_decode_batch(3), Some(4));
+        assert_eq!(m.pick_decode_batch(9), None);
+        assert_eq!(m.max_decode_batch(), Some(8));
+    }
+
+    #[test]
+    fn parses_batched_kind() {
+        let with_entry = SAMPLE.replace(
+            "\"outputs\":[\"x_out\",\"k\",\"v\"]}",
+            "\"outputs\":[\"x_out\",\"k\",\"v\"]},
+        {\"name\":\"decode_tail_B4_C448_R16\",\"file\":\"decode_tail_B4_C448_R16.hlo.txt\",
+         \"kind\":\"decode_tail_batched\",\"b\":4,\"c\":448,\"r\":16,
+         \"inputs\":[{\"name\":\"x\",\"dtype\":\"float32\",\"shape\":[4,1,96]}],
+         \"outputs\":[\"x_out\",\"k_new\",\"v_new\"]}",
+        );
+        let j = Json::parse(&with_entry).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        let e = &m.entries[1];
+        assert_eq!(e.kind, ArtifactKind::DecodeTailBatched);
+        assert_eq!(e.b, Some(4));
+        assert_eq!(e.r, Some(16));
     }
 
     #[test]

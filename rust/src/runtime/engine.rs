@@ -54,6 +54,12 @@ pub struct EngineStats {
     pub exec_attn_ffn: AtomicU64,
     pub exec_decode_block: AtomicU64,
     pub exec_decode_tail: AtomicU64,
+    /// Batched cross-session decode dispatches (one per cohort step).
+    pub exec_decode_tail_batched: AtomicU64,
+    /// Session-slots advanced by batched dispatches (Σ batch widths) —
+    /// `batched_decode_rows / exec_decode_tail_batched` is the realized
+    /// mean batch width.
+    pub batched_decode_rows: AtomicU64,
     pub exec_logits: AtomicU64,
 }
 
@@ -71,6 +77,8 @@ pub struct EngineStatsView {
     pub exec_attn_ffn: u64,
     pub exec_decode_block: u64,
     pub exec_decode_tail: u64,
+    pub exec_decode_tail_batched: u64,
+    pub batched_decode_rows: u64,
     pub exec_logits: u64,
 }
 
@@ -89,6 +97,8 @@ impl EngineStats {
             exec_attn_ffn: self.exec_attn_ffn.load(Ordering::Relaxed),
             exec_decode_block: self.exec_decode_block.load(Ordering::Relaxed),
             exec_decode_tail: self.exec_decode_tail.load(Ordering::Relaxed),
+            exec_decode_tail_batched: self.exec_decode_tail_batched.load(Ordering::Relaxed),
+            batched_decode_rows: self.batched_decode_rows.load(Ordering::Relaxed),
             exec_logits: self.exec_logits.load(Ordering::Relaxed),
         }
     }
@@ -192,6 +202,10 @@ impl Engine {
                 ArtifactKind::DecodeBlock
                 | ArtifactKind::DecodeTail
                 | ArtifactKind::Logits => true,
+                // Batched variants compile lazily on first cohort dispatch:
+                // only the fabric uses them, and only at the widths its
+                // cohorts actually reach.
+                ArtifactKind::DecodeTailBatched => false,
             };
             if want {
                 self.executable(&e.name)?;
@@ -469,6 +483,61 @@ impl Engine {
         let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
         self.stats.exec_decode_tail.fetch_add(1, Ordering::Relaxed);
         anyhow::ensure!(out.len() == 3, "decode_tail returns 3 tensors");
+        let vn = out.pop().unwrap();
+        let kn = out.pop().unwrap();
+        let xo = out.pop().unwrap();
+        Ok((xo, kn, vn))
+    }
+
+    /// Cross-session batched decode: advance `B` independent sessions one
+    /// token each in a single dispatch.  Every activation/cache operand
+    /// carries a leading `[B]` batch dim (x `[B,1,d]`, pos `[B,1]`, caches
+    /// `[B,C,…]`/`[B,1,C]`, tails `[B,R,…]`/`[B,1,R]`); slot `i` computes
+    /// exactly [`Engine::decode_block_tail`] on its own operands, so the
+    /// fabric's batched path stays byte-identical to per-session dispatch.
+    /// Dead slots (finished sessions) ride along fully masked; callers
+    /// discard their outputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_block_tail_batched(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+        k_cache: &DeviceTensor,
+        v_cache: &DeviceTensor,
+        cache_mask: &DeviceTensor,
+        k_tail: &HostTensor,
+        v_tail: &HostTensor,
+        tail_mask: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = self.manifest.decode_cache;
+        let b = x.shape()[0];
+        let r = k_tail.shape()[1];
+        anyhow::ensure!(pos.len() == b, "batched decode: pos len != batch");
+        anyhow::ensure!(
+            k_cache.shape()[..2] == [b, c],
+            "batched decode cache shape mismatch (got {:?}, want [{b}, {c}, ..])",
+            k_cache.shape()
+        );
+        let name = format!("decode_tail_B{b}_C{c}_R{r}");
+        self.stats.upload_bytes_saved.fetch_add(
+            k_cache.byte_len() + v_cache.byte_len() + cache_mask.byte_len(),
+            Ordering::Relaxed,
+        );
+        let acts = vec![
+            self.upload_f32(x.data(), x.shape())?,
+            self.upload_i32(pos, &[b, 1])?,
+            k_cache.buffer(),
+            v_cache.buffer(),
+            cache_mask.buffer(),
+            self.upload_f32(k_tail.data(), k_tail.shape())?,
+            self.upload_f32(v_tail.data(), v_tail.shape())?,
+            self.upload_f32(tail_mask.data(), tail_mask.shape())?,
+        ];
+        let mut out = self.run(&name, acts, &self.block_weight_names(layer))?;
+        self.stats.exec_decode_tail_batched.fetch_add(1, Ordering::Relaxed);
+        self.stats.batched_decode_rows.fetch_add(b as u64, Ordering::Relaxed);
+        anyhow::ensure!(out.len() == 3, "decode_tail_batched returns 3 tensors");
         let vn = out.pop().unwrap();
         let kn = out.pop().unwrap();
         let xo = out.pop().unwrap();

@@ -1,0 +1,258 @@
+//! Deadline-aware admission control in front of the serving queue.
+//!
+//! The [`AdmissionController`] sits between the arrival loop and the
+//! fabric scheduler: every arriving task passes through the configured
+//! [`AdmissionPolicy`] before it may occupy a [`TaskQueue`] slot.
+//! Tasks the policy turns away are *recorded* as [`DroppedTask`]s — they
+//! appear in the serve report instead of vanishing.
+//!
+//! Policies:
+//! * [`AdmissionPolicy::Block`] — classic backpressure: the arrival loop
+//!   blocks until a queue slot frees.  No task is ever lost.
+//! * [`AdmissionPolicy::ShedOldest`] — a full queue sheds its *oldest*
+//!   pending task to make room for the newcomer (freshest-first under
+//!   overload; the shed task is recorded).
+//! * [`AdmissionPolicy::RejectOverSlo`] — reject an arrival outright when
+//!   its predicted queue wait exceeds the SLO.  The prediction is
+//!   `queued × service_EMA / engines`; with no completed task yet (no
+//!   EMA) every arrival is admitted.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::TaskQueue;
+
+/// How the serving layer admits work under overload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Block the arrival loop until a queue slot frees (zero loss).
+    Block,
+    /// Shed the oldest *queued* (not yet started) task when full.
+    ShedOldest,
+    /// Reject arrivals whose predicted queue wait exceeds `slo_ms`.
+    RejectOverSlo { slo_ms: f64 },
+}
+
+impl AdmissionPolicy {
+    /// Parse a config/CLI spelling (`block` | `shed-oldest` |
+    /// `reject-over-slo`); the SLO rides in a separate knob.
+    pub fn parse(s: &str, slo_ms: Option<f64>) -> anyhow::Result<Self> {
+        Ok(match s {
+            "block" => Self::Block,
+            "shed-oldest" => Self::ShedOldest,
+            "reject-over-slo" => {
+                let slo_ms = slo_ms.ok_or_else(|| {
+                    anyhow::anyhow!("admission policy reject-over-slo requires slo_ms")
+                })?;
+                anyhow::ensure!(slo_ms > 0.0, "slo_ms must be > 0, got {slo_ms}");
+                Self::RejectOverSlo { slo_ms }
+            }
+            other => anyhow::bail!(
+                "unknown admission policy {other:?} (expected block | shed-oldest | reject-over-slo)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Block => "block",
+            Self::ShedOldest => "shed-oldest",
+            Self::RejectOverSlo { .. } => "reject-over-slo",
+        }
+    }
+}
+
+/// Why a task never ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Displaced from the queue by a newer arrival (shed-oldest).
+    Shed,
+    /// Turned away at arrival (reject-over-SLO).
+    Rejected,
+}
+
+/// A task the admission policy turned away — recorded, never silent.
+#[derive(Debug, Clone)]
+pub struct DroppedTask {
+    pub task_id: usize,
+    pub reason: DropReason,
+}
+
+/// An admitted-but-not-started task: id, payload, enqueue instant (the
+/// queue-delay clock starts at admission).
+pub struct Pending<T> {
+    pub task_id: usize,
+    pub item: T,
+    pub enqueued_at: Instant,
+}
+
+/// The admission gate: a typed policy in front of the bounded
+/// [`TaskQueue`], plus the service-time EMA feeding SLO predictions.
+pub struct AdmissionController<T> {
+    queue: TaskQueue<Pending<T>>,
+    policy: AdmissionPolicy,
+    engines: usize,
+    service_ema_ms: Mutex<Option<f64>>,
+    dropped: Mutex<Vec<DroppedTask>>,
+}
+
+impl<T> AdmissionController<T> {
+    pub fn new(policy: AdmissionPolicy, queue_depth: usize, engines: usize) -> Self {
+        Self {
+            queue: TaskQueue::new(queue_depth.max(1)),
+            policy,
+            engines: engines.max(1),
+            service_ema_ms: Mutex::new(None),
+            dropped: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Offer an arriving task to the policy.  Returns `true` when the
+    /// task was admitted (it now occupies a queue slot); `false` when it
+    /// was dropped (already recorded).  Under [`AdmissionPolicy::Block`]
+    /// this call blocks while the queue is full.
+    pub fn offer(&self, task_id: usize, item: T) -> bool {
+        let pending = Pending { task_id, item, enqueued_at: Instant::now() };
+        match self.policy {
+            AdmissionPolicy::Block => {
+                self.queue.push(pending);
+                true
+            }
+            AdmissionPolicy::ShedOldest => {
+                if let Some(shed) = self.queue.shed_push(pending) {
+                    self.dropped
+                        .lock()
+                        .unwrap()
+                        .push(DroppedTask { task_id: shed.task_id, reason: DropReason::Shed });
+                }
+                true
+            }
+            AdmissionPolicy::RejectOverSlo { slo_ms } => {
+                if self.predicted_wait_ms() > slo_ms {
+                    self.dropped
+                        .lock()
+                        .unwrap()
+                        .push(DroppedTask { task_id, reason: DropReason::Rejected });
+                    return false;
+                }
+                // Under the SLO: a momentarily full queue blocks like the
+                // Block policy rather than silently losing the task.
+                self.queue.push(pending);
+                true
+            }
+        }
+    }
+
+    /// Non-blocking dequeue for the scheduler (it parks on fabric events,
+    /// not here).
+    pub fn take(&self) -> Option<Pending<T>> {
+        self.queue.try_pop()
+    }
+
+    /// Queued-but-not-started tasks right now.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Feed a completed task's service time into the SLO predictor
+    /// (EMA, α = 0.3).
+    pub fn observe_service(&self, service_ms: f64) {
+        let mut ema = self.service_ema_ms.lock().unwrap();
+        *ema = Some(match *ema {
+            Some(prev) => 0.3 * service_ms + 0.7 * prev,
+            None => service_ms,
+        });
+    }
+
+    /// Predicted queue wait for a new arrival: tasks ahead of it, each
+    /// costing one mean service time, spread over the engine workers.
+    /// 0.0 until the first completion (admit when blind).
+    pub fn predicted_wait_ms(&self) -> f64 {
+        match *self.service_ema_ms.lock().unwrap() {
+            Some(ema) => self.queue.len() as f64 * ema / self.engines as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Drain the record of dropped tasks (call once, at shutdown).
+    pub fn take_dropped(&self) -> Vec<DroppedTask> {
+        std::mem::take(&mut self.dropped.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_policies() {
+        assert_eq!(AdmissionPolicy::parse("block", None).unwrap(), AdmissionPolicy::Block);
+        assert_eq!(
+            AdmissionPolicy::parse("shed-oldest", None).unwrap(),
+            AdmissionPolicy::ShedOldest
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("reject-over-slo", Some(250.0)).unwrap(),
+            AdmissionPolicy::RejectOverSlo { slo_ms: 250.0 }
+        );
+        assert!(AdmissionPolicy::parse("reject-over-slo", None).is_err());
+        assert!(AdmissionPolicy::parse("reject-over-slo", Some(0.0)).is_err());
+        assert!(AdmissionPolicy::parse("drop-newest", None).is_err());
+    }
+
+    #[test]
+    fn shed_oldest_displaces_head_and_records_it() {
+        let ac: AdmissionController<u32> =
+            AdmissionController::new(AdmissionPolicy::ShedOldest, 2, 1);
+        assert!(ac.offer(0, 10));
+        assert!(ac.offer(1, 11));
+        assert!(ac.offer(2, 12)); // full: task 0 is shed
+        let dropped = ac.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].task_id, 0);
+        assert_eq!(dropped[0].reason, DropReason::Shed);
+        // Survivors come out FIFO: 1 then 2.
+        assert_eq!(ac.take().unwrap().task_id, 1);
+        assert_eq!(ac.take().unwrap().task_id, 2);
+        assert!(ac.take().is_none());
+    }
+
+    #[test]
+    fn reject_over_slo_admits_blind_then_rejects_over_prediction() {
+        let ac: AdmissionController<u32> =
+            AdmissionController::new(AdmissionPolicy::RejectOverSlo { slo_ms: 100.0 }, 8, 1);
+        // No EMA yet: everything is admitted.
+        assert!(ac.offer(0, 0));
+        assert!(ac.offer(1, 1));
+        assert_eq!(ac.predicted_wait_ms(), 0.0);
+        // Mean service 80 ms, 2 queued → predicted 160 ms > 100 ms SLO.
+        ac.observe_service(80.0);
+        assert!((ac.predicted_wait_ms() - 160.0).abs() < 1e-9);
+        assert!(!ac.offer(2, 2));
+        let dropped = ac.take_dropped();
+        assert_eq!(dropped[0].task_id, 2);
+        assert_eq!(dropped[0].reason, DropReason::Rejected);
+        // Drain the queue: prediction falls to 0, arrivals admitted again.
+        ac.take().unwrap();
+        ac.take().unwrap();
+        assert!(ac.offer(3, 3));
+    }
+
+    #[test]
+    fn service_ema_converges_toward_observations() {
+        let ac: AdmissionController<u32> =
+            AdmissionController::new(AdmissionPolicy::Block, 4, 2);
+        ac.observe_service(100.0);
+        for _ in 0..50 {
+            ac.observe_service(10.0);
+        }
+        ac.offer(0, 0);
+        ac.offer(1, 1);
+        // 2 queued over 2 engines ≈ one mean service time ≈ 10 ms.
+        assert!(ac.predicted_wait_ms() < 15.0);
+    }
+}

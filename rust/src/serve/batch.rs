@@ -1,0 +1,188 @@
+//! Cross-session batched decode: stack the pending decode steps of a
+//! cohort of sessions into one `decode_tail_B{b}_C{c}_R{r}` dispatch.
+//!
+//! A [`BatchStack`] is built once per cohort, at its first batched step:
+//! each member's complete host-side per-layer KV cache (and its
+//! visibility mask) is stacked into `[B, C, …]` device buffers and
+//! uploaded **once**; rows appended during decode accumulate in
+//! host-side `[B, R, …]` tails re-uploaded per step — the batched
+//! mirror of the single-session frozen-cache + tail split.
+//!
+//! Slot `i` of the batched kernel computes exactly the per-session
+//! decode pass on its own operands (sessions never attend across slots),
+//! so a cohort step leaves every member's transcript byte-identical to
+//! per-session dispatch.  Members that finish early become *dead slots*:
+//! their lane rides along fully masked with zero inputs and their
+//! outputs are discarded.
+//!
+//! The member's own [`BlockCache`] still receives every appended row
+//! (`push_rows`), so the host cache stays complete and truthful — the
+//! same invariant the single-session tail path keeps.
+
+use anyhow::{ensure, Result};
+
+use crate::fedattn::driver::DecodeMachine;
+use crate::fedattn::node::BlockCache;
+use crate::runtime::Engine;
+use crate::tensor::{DeviceTensor, HostTensor, NEG_MASK};
+
+/// One layer's frozen device-resident cohort cache.
+struct StackLayer {
+    k: DeviceTensor,    // [B, C, Hkv, hd]
+    v: DeviceTensor,    // [B, C, Hkv, hd]
+    mask: DeviceTensor, // [B, 1, C]
+}
+
+/// A cohort's batched decode state: frozen `[B, C]` caches on the device,
+/// growing `[B, R]` tails on the host.
+pub(crate) struct BatchStack {
+    b: usize,
+    r: usize,
+    d: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    layers: Vec<StackLayer>,
+    k_tails: Vec<HostTensor>, // per layer [B, R, Hkv, hd]
+    v_tails: Vec<HostTensor>,
+    /// `[B, 1, R]` tail visibility, shared by all layers (fill counts are
+    /// identical across layers).
+    tail_mask: HostTensor,
+    /// Tail rows used per slot.
+    filled: Vec<usize>,
+}
+
+/// A cohort member's decode parts, borrowed for one batched step.
+pub(crate) type SlotParts<'m> = Option<(&'m mut DecodeMachine, &'m mut [BlockCache])>;
+
+impl BatchStack {
+    /// Stack the cohort's caches and upload the frozen halves.  `b` is
+    /// the artifact batch width (≥ live slots; extra lanes ride dead),
+    /// `r` the tail capacity (≥ the longest member horizon).
+    pub(crate) fn build(engine: &Engine, b: usize, r: usize, slots: &[SlotParts]) -> Result<Self> {
+        ensure!(slots.len() <= b, "cohort of {} exceeds batch width {b}", slots.len());
+        let live: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
+        ensure!(!live.is_empty(), "batch stack over an all-dead cohort");
+        let first = slots[live[0]].as_ref().unwrap().1;
+        let n_layers = first.len();
+        let c = first[0].k.shape()[0];
+        let (kv_heads, head_dim) = (first[0].k.shape()[1], first[0].k.shape()[2]);
+        let d = engine.manifest.model.d_model;
+        let row = kv_heads * head_dim;
+
+        let mut layers = Vec::with_capacity(n_layers);
+        for m in 0..n_layers {
+            let mut k = HostTensor::zeros(&[b, c, kv_heads, head_dim]);
+            let mut v = HostTensor::zeros(&[b, c, kv_heads, head_dim]);
+            let mut mask = HostTensor::full(&[b, 1, c], NEG_MASK);
+            for &i in &live {
+                let caches = slots[i].as_ref().unwrap().1;
+                ensure!(caches.len() == n_layers, "cohort members disagree on layer count");
+                let cache = &caches[m];
+                ensure!(cache.dev.is_none(), "batched cohort member has a frozen device cache");
+                let span = c * row;
+                k.data_mut()[i * span..(i + 1) * span].copy_from_slice(cache.k.data());
+                v.data_mut()[i * span..(i + 1) * span].copy_from_slice(cache.v.data());
+                mask.data_mut()[i * c..(i + 1) * c].copy_from_slice(cache.dmask.data());
+            }
+            layers.push(StackLayer {
+                k: engine.upload(&k)?,
+                v: engine.upload(&v)?,
+                mask: engine.upload(&mask)?,
+            });
+        }
+        Ok(Self {
+            b,
+            r,
+            d,
+            kv_heads,
+            head_dim,
+            k_tails: (0..n_layers).map(|_| HostTensor::zeros(&[b, r, kv_heads, head_dim])).collect(),
+            v_tails: (0..n_layers).map(|_| HostTensor::zeros(&[b, r, kv_heads, head_dim])).collect(),
+            tail_mask: HostTensor::full(&[b, 1, r], NEG_MASK),
+            filled: vec![0; b],
+            layers,
+        })
+    }
+
+    /// Advance every live slot by one decode pass in `n_layers` batched
+    /// dispatches (one per layer) plus one `logits` call per live slot.
+    pub(crate) fn step(&mut self, engine: &Engine, slots: &mut [SlotParts]) -> Result<()> {
+        let d = self.d;
+        let row = self.kv_heads * self.head_dim;
+        let mut x = HostTensor::zeros(&[self.b, 1, d]);
+        let mut pos = vec![0i32; self.b];
+        let mut live = vec![false; self.b];
+        for (i, slot) in slots.iter().enumerate() {
+            let Some((machine, _)) = slot else { continue };
+            let Some(token) = machine.pending_token() else { continue };
+            let e = engine.embed(&[token])?;
+            x.data_mut()[i * d..(i + 1) * d].copy_from_slice(e.data());
+            pos[i] = machine.dispatch_pos();
+            live[i] = true;
+        }
+        ensure!(live.iter().any(|&l| l), "batched step with no pending slot");
+
+        let n_layers = self.layers.len();
+        let mut xb = x;
+        for m in 0..n_layers {
+            let (xo, kn, vn) = engine.decode_block_tail_batched(
+                m,
+                &xb,
+                &pos,
+                &self.layers[m].k,
+                &self.layers[m].v,
+                &self.layers[m].mask,
+                &self.k_tails[m],
+                &self.v_tails[m],
+                &self.tail_mask,
+            )?;
+            // Route each live slot's new KV row into the cohort tail (for
+            // the next batched step) *and* the member's own host cache
+            // (kept complete, same as single-session decode).  The row
+            // stays masked until the whole pass ends — layer m+1's
+            // dispatch must not see rows appended mid-step.
+            for i in 0..self.b {
+                if !live[i] {
+                    continue;
+                }
+                let t = self.filled[i];
+                ensure!(t < self.r, "cohort tail overflow (slot {i}: {t} >= {})", self.r);
+                let src = i * row..(i + 1) * row;
+                let dst = (i * self.r + t) * row;
+                self.k_tails[m].data_mut()[dst..dst + row].copy_from_slice(&kn.data()[src.clone()]);
+                self.v_tails[m].data_mut()[dst..dst + row].copy_from_slice(&vn.data()[src.clone()]);
+                let kn_i = HostTensor::new(
+                    &[1, self.kv_heads, self.head_dim],
+                    kn.data()[src.clone()].to_vec(),
+                )?;
+                let vn_i = HostTensor::new(
+                    &[1, self.kv_heads, self.head_dim],
+                    vn.data()[src].to_vec(),
+                )?;
+                let (_, caches) = slots[i].as_mut().unwrap();
+                caches[m].push_rows(&kn_i, &vn_i, 1, &[true]);
+            }
+            xb = xo;
+        }
+
+        // Rows appended this step become visible to the *next* step.
+        for i in 0..self.b {
+            if live[i] {
+                self.tail_mask.data_mut()[i * self.r + self.filled[i]] = 0.0;
+                self.filled[i] += 1;
+            }
+        }
+
+        // Per-slot logits feed each machine its next decision.
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let (machine, _) = slot.as_mut().unwrap();
+            let xi = HostTensor::new(&[1, d], xb.data()[i * d..(i + 1) * d].to_vec())?;
+            machine.complete_dispatch(engine.logits(&xi)?);
+        }
+        Ok(())
+    }
+}

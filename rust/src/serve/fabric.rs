@@ -1,0 +1,679 @@
+//! The session fabric: many in-flight sessions as resumable state
+//! machines over a small pool of engine threads.
+//!
+//! Instead of one blocking thread per task (the legacy `serve_trace`
+//! loop), the fabric multiplexes every admitted session through an event
+//! loop:
+//!
+//! * an **arrival thread** replays the workload trace through the
+//!   [`AdmissionController`] (Block backpressure, shed-oldest, or
+//!   reject-over-SLO — turned-away tasks are recorded, never silent);
+//! * `engines` **worker threads** pop [`Work`] items — a session prefill,
+//!   or one decode step of a cohort — off a bounded [`TaskQueue`];
+//! * the **scheduler** (caller's thread) admits sessions while
+//!   `inflight < max_inflight`, turns prefilled sessions into decode
+//!   *cohorts*, and finalizes them as they finish.
+//!
+//! The scheduler's tick gathers pending decode steps across sessions:
+//! once no prefill is outstanding (or enough sessions are waiting to
+//! fill a batch), it groups every decode-ready session into cohorts and
+//! issues each cohort step as **one batched `decode_tail` dispatch**
+//! ([`BatchStack`]) when the artifact set carries batched variants.
+//! Cohorts are sticky — members march in lockstep until each finishes,
+//! whereupon its lane rides along dead — and fall back gracefully to
+//! per-session dispatches (cohort size 1, parallel across workers) when
+//! batching is off, unavailable, or a session exposes no steppable
+//! decode (wire mode).  Batched and per-session decode produce
+//! byte-identical transcripts; the `serving_fabric` differential test
+//! pins this against the golden session fixture.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{TaskQueue, TaskResult};
+use crate::fedattn::{DecodeHandle, DecodeStep};
+use crate::runtime::Engine;
+use crate::serve::admission::{AdmissionController, AdmissionPolicy, DroppedTask};
+use crate::serve::batch::{BatchStack, SlotParts};
+
+/// A serving task the fabric can drive as a resumable state machine.
+///
+/// The lifecycle is `prefill` once, then alternate `poll` / one decode
+/// step until `poll` reports [`DecodeStep::Done`], then `into_result`.
+/// A task without a steppable decode (e.g. a wire-mode session, which
+/// decodes node-resident) runs to completion inside `prefill` and
+/// reports `Done` from its first `poll`.
+pub trait FabricTask: Send {
+    fn task_id(&self) -> usize;
+
+    /// Run the session up to (and including) prefill — the expensive,
+    /// non-resumable part, executed once on a worker thread.
+    fn prefill(&mut self) -> Result<()>;
+
+    /// Advance decode control flow (cheap, engine-free).
+    fn poll(&mut self) -> DecodeStep;
+
+    /// Run the owed decode pass (per-session fallback path).
+    fn dispatch(&mut self) -> Result<()>;
+
+    /// The steppable decode state, when the task has one — cohorts use it
+    /// to run *batched* steps.  `None` forces per-session dispatch.
+    fn decode_handle(&mut self) -> Option<&mut DecodeHandle>;
+
+    /// Consume the finished task into its result row.
+    fn into_result(self: Box<Self>) -> Result<TaskResult>;
+}
+
+/// Fabric knobs (resolved from `[serving]` config by the coordinator).
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Engine worker threads.
+    pub engines: usize,
+    /// Admission-queue capacity (the backpressure bound).
+    pub queue_depth: usize,
+    /// Maximum sessions admitted past the queue at once (prefilling or
+    /// decoding).  The scheduler never exceeds it; `peak_inflight` in the
+    /// outcome proves it.
+    pub max_inflight: usize,
+    pub admission: AdmissionPolicy,
+    /// Attempt cross-session batched decode (requires batched artifacts;
+    /// falls back per-session when absent).
+    pub batching: bool,
+    /// Trace time compression (arrival gaps divided by this).
+    pub time_scale: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self {
+            engines: 1,
+            queue_depth: 64,
+            max_inflight: 4,
+            admission: AdmissionPolicy::Block,
+            batching: true,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// A task that started but did not produce a result.
+#[derive(Debug, Clone)]
+pub struct FailedTask {
+    pub task_id: usize,
+    pub error: String,
+}
+
+/// What the fabric returns: completed rows plus a full accounting of
+/// everything that did not complete.
+#[derive(Debug, Default)]
+pub struct FabricOutcome {
+    pub results: Vec<TaskResult>,
+    pub failed: Vec<FailedTask>,
+    pub dropped: Vec<DroppedTask>,
+    /// High-water mark of concurrently admitted sessions.
+    pub peak_inflight: usize,
+    /// Cohort decode steps executed as batched dispatches.
+    pub batched_steps: u64,
+    /// Cohort decode steps executed via per-session fallback.
+    pub fallback_steps: u64,
+    pub makespan_ms: f64,
+}
+
+/// A cohort: sessions decoding in lockstep.  Finished members leave a
+/// dead slot (`None`) so the [`BatchStack`] lanes stay aligned.
+struct Cohort<'f> {
+    members: Vec<Option<Box<dyn FabricTask + 'f>>>,
+    /// `Some` once the first batched step built the stack; `None` forever
+    /// on the fallback path.
+    stack: Option<BatchStack>,
+    /// Whether this cohort uses batched dispatch (decided at formation).
+    batched: bool,
+    /// Batch width / tail capacity, fixed at formation on batched cohorts.
+    b: usize,
+    r: usize,
+}
+
+impl<'f> Cohort<'f> {
+    /// One decode step for every live member.  Returns per-slot failures
+    /// (`Ok(vec)`); a whole-cohort error (batched dispatch failed) is
+    /// `Err` and poisons every live member.
+    fn step(&mut self, engine: Option<&Engine>) -> Result<Vec<(usize, String)>> {
+        if self.batched {
+            let engine = engine.expect("batched cohorts require an engine");
+            let mut slots: Vec<SlotParts> = self
+                .members
+                .iter_mut()
+                .map(|m| {
+                    m.as_mut()
+                        .and_then(|t| t.decode_handle())
+                        .map(|h| h.parts_mut())
+                })
+                .collect();
+            slots.resize_with(self.b, || None);
+            if self.stack.is_none() {
+                self.stack = Some(BatchStack::build(engine, self.b, self.r, &slots)?);
+            }
+            self.stack.as_mut().unwrap().step(engine, &mut slots)?;
+            Ok(Vec::new())
+        } else {
+            let mut failures = Vec::new();
+            for (i, slot) in self.members.iter_mut().enumerate() {
+                let Some(task) = slot else { continue };
+                if let Err(e) = task.dispatch() {
+                    failures.push((i, format!("{e:#}")));
+                }
+            }
+            Ok(failures)
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.members.iter().filter(|m| m.is_some()).count()
+    }
+}
+
+enum Work<'f> {
+    Prefill(Box<dyn FabricTask + 'f>),
+    Step(Cohort<'f>),
+}
+
+enum Event<'f> {
+    /// An arrival was admitted (wake the scheduler to issue work).
+    Admitted,
+    /// The arrival thread replayed the whole trace.
+    ArrivalsDone,
+    Prefilled(Box<dyn FabricTask + 'f>, Option<String>),
+    Stepped(Cohort<'f>, Result<Vec<(usize, String)>, String>),
+}
+
+/// Run a workload through the fabric.  `tasks` pairs each boxed session
+/// with its trace arrival time (ms); `engine` is required only for
+/// batched decode (engine-free tests pass `None` and exercise the
+/// scheduling/admission layers with mock tasks).
+pub fn run_fabric<'f>(
+    engine: Option<&Engine>,
+    cfg: &FabricConfig,
+    tasks: Vec<(f64, Box<dyn FabricTask + 'f>)>,
+) -> Result<FabricOutcome> {
+    let admission: AdmissionController<Box<dyn FabricTask + 'f>> =
+        AdmissionController::new(cfg.admission, cfg.queue_depth, cfg.engines);
+    let work: TaskQueue<Work<'f>> = TaskQueue::new(cfg.queue_depth.max(16));
+    let (events_tx, events_rx) = mpsc::channel::<Event<'f>>();
+    let max_inflight = cfg.max_inflight.max(1);
+
+    // Batched decode is possible only with an engine whose artifact set
+    // carries batched variants; the realized width is still bounded per
+    // cohort by what fits.
+    let batch_cap = cfg
+        .batching
+        .then(|| engine.and_then(|e| e.manifest.max_decode_batch()))
+        .flatten()
+        .unwrap_or(1);
+
+    let start = Instant::now();
+    let mut outcome = FabricOutcome::default();
+
+    std::thread::scope(|s| -> Result<()> {
+        // Engine workers: prefills and cohort steps.
+        for _ in 0..cfg.engines.max(1) {
+            let work = &work;
+            let tx = events_tx.clone();
+            s.spawn(move || {
+                while let Some(item) = work.pop() {
+                    let event = match item {
+                        Work::Prefill(mut task) => {
+                            let err = task.prefill().err().map(|e| format!("{e:#}"));
+                            Event::Prefilled(task, err)
+                        }
+                        Work::Step(mut cohort) => {
+                            let res = cohort.step(engine).map_err(|e| format!("{e:#}"));
+                            Event::Stepped(cohort, res)
+                        }
+                    };
+                    if tx.send(event).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+
+        // Arrival thread: trace replay through admission control.
+        let arrivals = s.spawn({
+            let admission = &admission;
+            let tx = events_tx.clone();
+            let time_scale = cfg.time_scale.max(1e-9);
+            move || {
+                for (arrival_ms, task) in tasks {
+                    let due_ms = arrival_ms / time_scale;
+                    let elapsed = start.elapsed().as_secs_f64() * 1e3;
+                    if due_ms > elapsed {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            (due_ms - elapsed) / 1e3,
+                        ));
+                    }
+                    let id = task.task_id();
+                    if admission.offer(id, task) && tx.send(Event::Admitted).is_err() {
+                        return;
+                    }
+                }
+                let _ = tx.send(Event::ArrivalsDone);
+            }
+        });
+
+        // Scheduler: the caller's thread.
+        let mut inflight = 0usize;
+        let mut prefills_outstanding = 0usize;
+        let mut arrivals_done = false;
+        let mut decode_ready: Vec<Box<dyn FabricTask + 'f>> = Vec::new();
+        // task_id → queue wait, patched into results at finalize.
+        let mut queue_waits: std::collections::HashMap<usize, f64> =
+            std::collections::HashMap::new();
+
+        // Finalize a finished task into a result row.
+        let finalize = |task: Box<dyn FabricTask + 'f>,
+                            outcome: &mut FabricOutcome,
+                            admission: &AdmissionController<Box<dyn FabricTask + 'f>>,
+                            queue_waits: &std::collections::HashMap<usize, f64>| {
+            let id = task.task_id();
+            match task.into_result() {
+                Ok(mut r) => {
+                    r.task_id = id;
+                    r.queue_ms = queue_waits.get(&id).copied().unwrap_or(0.0);
+                    r.latency_ms = r.queue_ms + r.service_ms;
+                    admission.observe_service(r.service_ms);
+                    outcome.results.push(r);
+                }
+                Err(e) => {
+                    outcome.failed.push(FailedTask { task_id: id, error: format!("{e:#}") });
+                }
+            }
+        };
+
+        loop {
+            // Admit while there is inflight headroom.
+            while inflight < max_inflight {
+                let Some(pending) = admission.take() else { break };
+                queue_waits.insert(
+                    pending.task_id,
+                    pending.enqueued_at.elapsed().as_secs_f64() * 1e3,
+                );
+                inflight += 1;
+                outcome.peak_inflight = outcome.peak_inflight.max(inflight);
+                prefills_outstanding += 1;
+                work.push(Work::Prefill(pending.item));
+            }
+
+            // Scheduler tick: gather decode-ready sessions into cohorts
+            // once no prefill can still add members (or enough are
+            // waiting to fill a full batch) — the wave that makes
+            // cross-session batching possible.
+            if !decode_ready.is_empty()
+                && (prefills_outstanding == 0 || decode_ready.len() >= batch_cap)
+            {
+                while !decode_ready.is_empty() {
+                    let take = decode_ready.len().min(batch_cap.max(1));
+                    let mut members: Vec<Option<Box<dyn FabricTask + 'f>>> =
+                        decode_ready.drain(..take).map(Some).collect();
+                    // A cohort is batched when every member exposes a
+                    // steppable decode, an artifact width covers it, and
+                    // a tail variant fits the longest remaining horizon.
+                    let (mut batched, mut b, mut r) = (false, 1, 0);
+                    if batch_cap > 1 {
+                        if let Some(engine) = engine {
+                            let all_handles = members
+                                .iter_mut()
+                                .all(|m| m.as_mut().unwrap().decode_handle().is_some());
+                            let horizon = members
+                                .iter_mut()
+                                .filter_map(|m| {
+                                    m.as_mut().unwrap().decode_handle().map(|h| {
+                                        let (machine, _) = h.parts_mut();
+                                        machine.remaining_dispatches()
+                                    })
+                                })
+                                .max()
+                                .unwrap_or(0);
+                            let width = engine.manifest.pick_decode_batch(members.len());
+                            let tail = engine.manifest.pick_decode_tail(horizon.max(1));
+                            if let (true, Some(width), Some(tail)) =
+                                (all_handles, width, tail)
+                            {
+                                (batched, b, r) = (true, width, tail);
+                            }
+                        }
+                    }
+                    if !batched {
+                        // Fallback: per-session dispatch parallelizes
+                        // across workers, so keep cohorts singleton.
+                        for member in members.drain(..) {
+                            work.push(Work::Step(Cohort {
+                                members: vec![member],
+                                stack: None,
+                                batched: false,
+                                b: 1,
+                                r: 0,
+                            }));
+                        }
+                    } else {
+                        work.push(Work::Step(Cohort {
+                            members,
+                            stack: None,
+                            batched,
+                            b,
+                            r,
+                        }));
+                    }
+                }
+            }
+
+            if arrivals_done && admission.queued() == 0 && inflight == 0 {
+                break;
+            }
+
+            match events_rx.recv().expect("fabric event channel closed early") {
+                Event::Admitted => {}
+                Event::ArrivalsDone => arrivals_done = true,
+                Event::Prefilled(task, err) => {
+                    prefills_outstanding -= 1;
+                    match err {
+                        Some(error) => {
+                            outcome
+                                .failed
+                                .push(FailedTask { task_id: task.task_id(), error });
+                            inflight -= 1;
+                        }
+                        None => {
+                            let mut task = task;
+                            match task.poll() {
+                                DecodeStep::Done => {
+                                    finalize(task, &mut outcome, &admission, &queue_waits);
+                                    inflight -= 1;
+                                }
+                                _ => decode_ready.push(task),
+                            }
+                        }
+                    }
+                }
+                Event::Stepped(mut cohort, res) => {
+                    match res {
+                        Err(error) => {
+                            // A batched dispatch failure poisons every
+                            // live member — record each, free the lanes.
+                            for slot in cohort.members.iter_mut() {
+                                if let Some(task) = slot.take() {
+                                    outcome.failed.push(FailedTask {
+                                        task_id: task.task_id(),
+                                        error: error.clone(),
+                                    });
+                                    inflight -= 1;
+                                }
+                            }
+                        }
+                        Ok(failures) => {
+                            if cohort.batched {
+                                outcome.batched_steps += 1;
+                            } else {
+                                outcome.fallback_steps += cohort.live() as u64;
+                            }
+                            for (i, error) in failures {
+                                if let Some(task) = cohort.members[i].take() {
+                                    outcome.failed.push(FailedTask {
+                                        task_id: task.task_id(),
+                                        error,
+                                    });
+                                    inflight -= 1;
+                                }
+                            }
+                            for slot in cohort.members.iter_mut() {
+                                let done = match slot {
+                                    Some(task) => {
+                                        matches!(task.poll(), DecodeStep::Done)
+                                    }
+                                    None => false,
+                                };
+                                if done {
+                                    let task = slot.take().unwrap();
+                                    finalize(task, &mut outcome, &admission, &queue_waits);
+                                    inflight -= 1;
+                                }
+                            }
+                            if cohort.live() > 0 {
+                                // Sticky: surviving members march together
+                                // until the whole cohort drains.
+                                work.push(Work::Step(cohort));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        work.close();
+        let _ = arrivals.join();
+        Ok(())
+    })?;
+
+    drop(events_tx);
+    outcome.dropped = admission.take_dropped();
+    outcome.makespan_ms = start.elapsed().as_secs_f64() * 1e3;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Engine-free mock: `steps` decode dispatches after prefill, with an
+    /// optional injected failure.
+    struct MockTask {
+        id: usize,
+        steps: usize,
+        fail_prefill: bool,
+        fail_dispatch_at: Option<usize>,
+        dispatched: usize,
+        pending: bool,
+        prefill_us: u64,
+        inflight: Arc<AtomicUsize>,
+        peak: Arc<AtomicUsize>,
+    }
+
+    impl MockTask {
+        fn new(id: usize, steps: usize, gauge: &(Arc<AtomicUsize>, Arc<AtomicUsize>)) -> Self {
+            Self {
+                id,
+                steps,
+                fail_prefill: false,
+                fail_dispatch_at: None,
+                dispatched: 0,
+                pending: false,
+                prefill_us: 200,
+                inflight: Arc::clone(&gauge.0),
+                peak: Arc::clone(&gauge.1),
+            }
+        }
+    }
+
+    impl FabricTask for MockTask {
+        fn task_id(&self) -> usize {
+            self.id
+        }
+
+        fn prefill(&mut self) -> Result<()> {
+            let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+            self.peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(self.prefill_us));
+            anyhow::ensure!(!self.fail_prefill, "mock prefill failure");
+            Ok(())
+        }
+
+        fn poll(&mut self) -> DecodeStep {
+            if self.dispatched >= self.steps {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                return DecodeStep::Done;
+            }
+            if self.pending {
+                DecodeStep::NeedsDispatch
+            } else {
+                self.pending = true;
+                DecodeStep::Ready { token: self.dispatched as i32 }
+            }
+        }
+
+        fn dispatch(&mut self) -> Result<()> {
+            if Some(self.dispatched) == self.fail_dispatch_at {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                anyhow::bail!("mock dispatch failure at step {}", self.dispatched);
+            }
+            self.dispatched += 1;
+            self.pending = false;
+            Ok(())
+        }
+
+        fn decode_handle(&mut self) -> Option<&mut DecodeHandle> {
+            None
+        }
+
+        fn into_result(self: Box<Self>) -> Result<TaskResult> {
+            Ok(TaskResult {
+                task_id: self.id,
+                answer: format!("answer-{}", self.id),
+                gold: String::new(),
+                em: true,
+                queue_ms: 0.0,
+                service_ms: 1.0,
+                latency_ms: 1.0,
+                comm_bytes: 0,
+                comm_time_ms: 0.0,
+                generated_tokens: self.steps,
+                demotions: 0,
+                rejoins: 0,
+                retries: 0,
+            })
+        }
+    }
+
+    fn gauge() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
+        (Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0)))
+    }
+
+    fn mock_trace(
+        n: usize,
+        steps: usize,
+        g: &(Arc<AtomicUsize>, Arc<AtomicUsize>),
+    ) -> Vec<(f64, Box<dyn FabricTask + 'static>)> {
+        (0..n)
+            .map(|i| (i as f64 * 0.01, Box::new(MockTask::new(i, steps, g)) as _))
+            .collect()
+    }
+
+    #[test]
+    fn fabric_completes_all_tasks_under_block_policy() {
+        let g = gauge();
+        let cfg = FabricConfig {
+            engines: 3,
+            queue_depth: 4,
+            max_inflight: 4,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+        };
+        let out = run_fabric(None, &cfg, mock_trace(24, 3, &g)).unwrap();
+        assert_eq!(out.results.len(), 24, "block policy loses no task");
+        assert!(out.failed.is_empty());
+        assert!(out.dropped.is_empty());
+        // Every task id exactly once.
+        let mut ids: Vec<usize> = out.results.iter().map(|r| r.task_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        assert!(out.peak_inflight <= 4, "peak {} > max_inflight", out.peak_inflight);
+        // Mock tasks expose no DecodeHandle → every step is fallback.
+        assert_eq!(out.batched_steps, 0);
+        assert_eq!(out.fallback_steps, 24 * 3);
+    }
+
+    #[test]
+    fn fabric_bounds_inflight_to_capacity() {
+        let g = gauge();
+        let cfg = FabricConfig {
+            engines: 4,
+            queue_depth: 64,
+            max_inflight: 2,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+        };
+        let out = run_fabric(None, &cfg, mock_trace(16, 2, &g)).unwrap();
+        assert_eq!(out.results.len(), 16);
+        assert!(out.peak_inflight <= 2);
+        // The tasks' own gauge agrees with the scheduler's accounting.
+        assert!(g.1.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn fabric_records_prefill_and_dispatch_failures() {
+        let g = gauge();
+        // Task 1 fails prefill; task 4 fails its second dispatch.
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..6)
+            .map(|i| {
+                let mut t = MockTask::new(i, 2, &g);
+                if i == 1 {
+                    t.fail_prefill = true;
+                }
+                if i == 4 {
+                    t.fail_dispatch_at = Some(1);
+                }
+                (i as f64 * 0.01, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 2,
+            queue_depth: 8,
+            max_inflight: 8,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        assert_eq!(out.results.len(), 4);
+        assert_eq!(out.failed.len(), 2);
+        let mut failed: Vec<usize> = out.failed.iter().map(|f| f.task_id).collect();
+        failed.sort_unstable();
+        assert_eq!(failed, vec![1, 4]);
+        assert!(out.failed.iter().all(|f| !f.error.is_empty()));
+    }
+
+    #[test]
+    fn fabric_records_shed_tasks_under_pressure() {
+        let g = gauge();
+        // Tiny queue + tiny inflight cap + instant arrivals: the shed
+        // policy must displace old pending tasks, and every displaced
+        // task must be recorded.
+        let cfg = FabricConfig {
+            engines: 1,
+            queue_depth: 2,
+            max_inflight: 1,
+            admission: AdmissionPolicy::ShedOldest,
+            batching: false,
+            time_scale: 1e9,
+        };
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..12)
+            .map(|i| {
+                let mut t = MockTask::new(i, 1, &g);
+                t.prefill_us = 3_000;
+                (i as f64 * 0.01, Box::new(t) as _)
+            })
+            .collect();
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        assert_eq!(
+            out.results.len() + out.failed.len() + out.dropped.len(),
+            12,
+            "every task is accounted for (done, failed, or recorded drop)"
+        );
+        assert!(out.failed.is_empty());
+        assert!(!out.dropped.is_empty(), "pressure this high must shed something");
+    }
+}

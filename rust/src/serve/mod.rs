@@ -1,0 +1,31 @@
+//! The serving fabric: multiplex many federated sessions over a small
+//! engine pool, with admission control and cross-session batched decode.
+//!
+//! The coordinator's legacy `serve_trace` path dedicates a blocking
+//! worker to each task for its whole lifetime — decode holds an engine
+//! worker hostage between steps.  This module replaces that with a
+//! session *fabric*:
+//!
+//! * [`fabric`] — sessions as resumable state machines
+//!   ([`FabricTask`]) driven by an event-loop scheduler over
+//!   `engines` workers; a scheduler tick gathers the pending decode
+//!   steps of all active sessions into batched cohort dispatches.
+//! * [`admission`] — a typed [`AdmissionPolicy`] (block /
+//!   shed-oldest / reject-over-SLO) in front of the bounded task
+//!   queue; turned-away work is recorded in the serve report, never
+//!   silently dropped.
+//! * [`batch`] — the [`BatchStack`](batch) stacking cohort KV caches
+//!   into `decode_tail_B{b}_C{c}_R{r}` dispatches, byte-identical to
+//!   per-session decode, with graceful per-session fallback when the
+//!   batched artifacts are absent.
+//! * [`model`] — the deterministic analytic capacity model behind the
+//!   `BENCH_serving.json` curve and its CI shape assertions.
+
+pub mod admission;
+pub mod batch;
+pub mod fabric;
+pub mod model;
+
+pub use admission::{AdmissionController, AdmissionPolicy, DropReason, DroppedTask};
+pub use fabric::{run_fabric, FabricConfig, FabricOutcome, FabricTask, FailedTask};
+pub use model::{capacity_curve, simulate, CurvePoint, ModelParams, ServeMode};

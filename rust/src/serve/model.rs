@@ -1,0 +1,220 @@
+//! Analytic serving model: a deterministic discrete-event simulation of
+//! the three serving disciplines, used for the `BENCH_serving.json`
+//! capacity curve (sessions × tokens/s × p50/p95).
+//!
+//! The real fabric's wall-clock numbers depend on the host; CI instead
+//! pins the *shape* of the curve with this engine-free model.  Every
+//! discipline runs the same trace through a `engines`-server FIFO queue;
+//! they differ only in per-session service time:
+//!
+//! * `thread-per-task` — each decode step pays the scheduler overhead
+//!   `step_overhead_ms`, and each session pays a thread/queue handoff
+//!   (`handoff_ms`) on top.
+//! * `fabric` — the resumable-state-machine scheduler removes the
+//!   per-session handoff; steps still dispatch one session at a time.
+//! * `fabric-batched` — cross-session batching amortizes the per-step
+//!   dispatch overhead over the realized batch width `B`.
+//!
+//! Service times are ordered `thread-per-task ≥ fabric ≥ fabric-batched`
+//! by construction (`handoff_ms ≥ 0`, `B ≥ 1`), and FIFO completion
+//! times are monotone in service times, so throughput is non-decreasing
+//! along the curve — the invariant CI asserts on the committed JSON.
+
+/// Serving discipline being modeled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    ThreadPerTask,
+    Fabric,
+    FabricBatched,
+}
+
+impl ServeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ThreadPerTask => "thread-per-task",
+            Self::Fabric => "fabric",
+            Self::FabricBatched => "fabric-batched",
+        }
+    }
+
+    pub const ALL: [ServeMode; 3] =
+        [Self::ThreadPerTask, Self::Fabric, Self::FabricBatched];
+}
+
+/// Cost parameters for the analytic model (ms).  Defaults are calibrated
+/// to the same order of magnitude as the interpreter-backed engine; the
+/// curve shape — not the absolute numbers — is the contract.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub engines: usize,
+    pub prefill_ms: f64,
+    /// Pure compute per decode step.
+    pub step_ms: f64,
+    /// Per-dispatch scheduler/upload overhead.
+    pub step_overhead_ms: f64,
+    /// Thread-per-task session handoff (spawn + queue wake).
+    pub handoff_ms: f64,
+    pub decode_steps: usize,
+    /// Widest batched `decode_tail` artifact.
+    pub batch_max: usize,
+    /// Trace inter-arrival gap.
+    pub arrival_gap_ms: f64,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        Self {
+            engines: 2,
+            prefill_ms: 900.0,
+            step_ms: 35.0,
+            step_overhead_ms: 6.0,
+            handoff_ms: 15.0,
+            decode_steps: 11,
+            batch_max: 8,
+            arrival_gap_ms: 120.0,
+        }
+    }
+}
+
+/// One point of the capacity curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub sessions: usize,
+    pub mode: ServeMode,
+    pub tokens_per_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub makespan_ms: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Per-session service time under a discipline.
+fn service_ms(p: &ModelParams, mode: ServeMode, sessions: usize) -> f64 {
+    let steps = p.decode_steps as f64;
+    match mode {
+        ServeMode::ThreadPerTask => {
+            p.prefill_ms + steps * (p.step_overhead_ms + p.step_ms) + p.handoff_ms
+        }
+        ServeMode::Fabric => p.prefill_ms + steps * (p.step_overhead_ms + p.step_ms),
+        ServeMode::FabricBatched => {
+            // Realized width: sessions spread over the engines, capped by
+            // the widest batched artifact.
+            let b = (sessions as f64 / p.engines as f64).ceil().min(p.batch_max as f64).max(1.0);
+            p.prefill_ms + steps * (p.step_overhead_ms / b + p.step_ms)
+        }
+    }
+}
+
+/// Simulate `sessions` arrivals through an `engines`-server FIFO queue
+/// and summarize one curve point.  Fully deterministic.
+pub fn simulate(p: &ModelParams, mode: ServeMode, sessions: usize) -> CurvePoint {
+    let service = service_ms(p, mode, sessions);
+    let mut free = vec![0.0f64; p.engines.max(1)];
+    let mut latencies = Vec::with_capacity(sessions);
+    let mut makespan: f64 = 0.0;
+    for i in 0..sessions {
+        let arrival = i as f64 * p.arrival_gap_ms;
+        // Earliest-free server, FIFO.
+        let (srv, _) = free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = arrival.max(free[srv]);
+        let done = start + service;
+        free[srv] = done;
+        latencies.push(done - arrival);
+        makespan = makespan.max(done);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tokens = (sessions * p.decode_steps) as f64;
+    CurvePoint {
+        sessions,
+        mode,
+        tokens_per_s: tokens / (makespan / 1e3).max(1e-9),
+        p50_ms: percentile(&latencies, 50.0),
+        p95_ms: percentile(&latencies, 95.0),
+        makespan_ms: makespan,
+    }
+}
+
+/// The full 3-way curve over a session sweep.
+pub fn capacity_curve(p: &ModelParams, sweep: &[usize]) -> Vec<CurvePoint> {
+    let mut out = Vec::new();
+    for &sessions in sweep {
+        for mode in ServeMode::ALL {
+            out.push(simulate(p, mode, sessions));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_times_are_ordered_by_discipline() {
+        let p = ModelParams::default();
+        for &n in &[1usize, 4, 8, 32] {
+            let tpt = service_ms(&p, ServeMode::ThreadPerTask, n);
+            let fab = service_ms(&p, ServeMode::Fabric, n);
+            let bat = service_ms(&p, ServeMode::FabricBatched, n);
+            assert!(tpt >= fab, "handoff_ms ≥ 0 ⇒ thread-per-task ≥ fabric");
+            assert!(fab >= bat, "B ≥ 1 ⇒ fabric ≥ fabric-batched");
+        }
+    }
+
+    #[test]
+    fn throughput_is_monotone_non_decreasing_along_the_curve() {
+        let p = ModelParams::default();
+        for &sessions in &[4usize, 8, 16, 32] {
+            let tpt = simulate(&p, ServeMode::ThreadPerTask, sessions);
+            let fab = simulate(&p, ServeMode::Fabric, sessions);
+            let bat = simulate(&p, ServeMode::FabricBatched, sessions);
+            assert!(
+                fab.tokens_per_s >= tpt.tokens_per_s,
+                "fabric ({}) must not lose to thread-per-task ({}) at {sessions}",
+                fab.tokens_per_s,
+                tpt.tokens_per_s
+            );
+            assert!(
+                bat.tokens_per_s >= fab.tokens_per_s,
+                "batched ({}) must not lose to fabric ({}) at {sessions}",
+                bat.tokens_per_s,
+                fab.tokens_per_s
+            );
+            assert!(tpt.p95_ms >= tpt.p50_ms && bat.p95_ms >= bat.p50_ms);
+        }
+    }
+
+    #[test]
+    fn batching_width_grows_with_load_and_caps_at_artifact_width() {
+        let p = ModelParams::default();
+        // At 4 sessions over 2 engines B = 2; at 32 sessions B caps at 8:
+        // the batched advantage strictly grows with load.
+        let low = service_ms(&p, ServeMode::FabricBatched, 4);
+        let high = service_ms(&p, ServeMode::FabricBatched, 32);
+        assert!(high < low);
+        let cap = service_ms(&p, ServeMode::FabricBatched, 1000);
+        assert!((cap - high).abs() < 1e-9, "width saturates at batch_max");
+    }
+
+    #[test]
+    fn curve_covers_every_mode_at_every_sweep_point() {
+        let p = ModelParams::default();
+        let curve = capacity_curve(&p, &[4, 8]);
+        assert_eq!(curve.len(), 6);
+        for pt in &curve {
+            assert!(pt.tokens_per_s.is_finite() && pt.tokens_per_s > 0.0);
+            assert!(pt.makespan_ms > 0.0);
+        }
+    }
+}

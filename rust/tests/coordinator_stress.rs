@@ -94,3 +94,158 @@ fn close_drains_remaining_items() {
     }
     assert_eq!(got, vec![0, 1, 2, 3, 4]);
 }
+
+// ---------------------------------------------------------------------------
+// Diurnal trace: admission control under a daily load cycle
+// ---------------------------------------------------------------------------
+
+/// Arrivals per "hour" over one compressed day: quiet nights, a steep
+/// daytime peak that exceeds steady-state service capacity.
+const DIURNAL: [usize; 12] = [2, 2, 4, 6, 10, 12, 12, 10, 6, 4, 2, 2];
+
+/// Deterministic single-threaded replay of a diurnal day against the
+/// shed-oldest admission policy: each bucket offers its arrivals, then the
+/// service side drains up to `capacity` tasks.  Returns (completed, shed).
+fn replay_diurnal_shed(capacity: usize, days: usize) -> (usize, usize) {
+    use fedattn::serve::{AdmissionController, AdmissionPolicy};
+    let adm: AdmissionController<usize> =
+        AdmissionController::new(AdmissionPolicy::ShedOldest, 12, 1);
+    let mut completed = 0usize;
+    let mut id = 0usize;
+    for _ in 0..days {
+        for &arrivals in &DIURNAL {
+            for _ in 0..arrivals {
+                assert!(adm.offer(id, id), "shed-oldest never refuses the new arrival");
+                id += 1;
+            }
+            for _ in 0..capacity {
+                if adm.take().is_some() {
+                    completed += 1;
+                }
+            }
+        }
+    }
+    // Off-hours drain: whatever survived the day still completes.
+    while adm.take().is_some() {
+        completed += 1;
+    }
+    let shed = adm.take_dropped().len();
+    assert_eq!(completed + shed, id, "every offered task completes or is shed");
+    (completed, shed)
+}
+
+/// Shrinking service capacity can only shed more: the offer/take sequence
+/// is identical across runs, so queue occupancy — and therefore shedding —
+/// is pointwise monotone in capacity.
+#[test]
+fn diurnal_shed_counts_monotone_in_service_capacity() {
+    let sheds: Vec<usize> =
+        [1usize, 2, 4, 6, 12].iter().map(|&c| replay_diurnal_shed(c, 2).1).collect();
+    for w in sheds.windows(2) {
+        assert!(w[0] >= w[1], "sheds must not grow with capacity: {sheds:?}");
+    }
+    assert!(sheds[0] > 0, "capacity 1 must shed under the diurnal peak: {sheds:?}");
+    assert_eq!(sheds[4], 0, "capacity >= peak arrival rate sheds nothing: {sheds:?}");
+}
+
+/// Mock fabric session for the threaded diurnal run: two decode steps
+/// after a timed prefill, no engine required.
+struct DiurnalTask {
+    id: usize,
+    dispatched: usize,
+    pending: bool,
+}
+
+impl fedattn::serve::FabricTask for DiurnalTask {
+    fn task_id(&self) -> usize {
+        self.id
+    }
+
+    fn prefill(&mut self) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_micros(300));
+        Ok(())
+    }
+
+    fn poll(&mut self) -> fedattn::fedattn::DecodeStep {
+        use fedattn::fedattn::DecodeStep;
+        if self.dispatched >= 2 {
+            DecodeStep::Done
+        } else if self.pending {
+            DecodeStep::NeedsDispatch
+        } else {
+            self.pending = true;
+            DecodeStep::Ready { token: self.dispatched as i32 }
+        }
+    }
+
+    fn dispatch(&mut self) -> anyhow::Result<()> {
+        self.dispatched += 1;
+        self.pending = false;
+        Ok(())
+    }
+
+    fn decode_handle(&mut self) -> Option<&mut fedattn::fedattn::DecodeHandle> {
+        None
+    }
+
+    fn into_result(self: Box<Self>) -> anyhow::Result<fedattn::coordinator::TaskResult> {
+        Ok(fedattn::coordinator::TaskResult {
+            task_id: self.id,
+            answer: String::new(),
+            gold: String::new(),
+            em: false,
+            queue_ms: 0.0,
+            service_ms: 1.0,
+            latency_ms: 1.0,
+            comm_bytes: 0,
+            comm_time_ms: 0.0,
+            generated_tokens: 2,
+            demotions: 0,
+            rejoins: 0,
+            retries: 0,
+        })
+    }
+}
+
+/// The full fabric under a compressed diurnal day with the blocking
+/// policy: arrivals bunch at the peak, backpressure holds, and nothing is
+/// ever lost — in-flight stays within `max_inflight` the whole time.
+#[test]
+fn diurnal_fabric_block_policy_bounds_inflight_and_loses_nothing() {
+    use fedattn::serve::{run_fabric, AdmissionPolicy, FabricConfig, FabricTask};
+
+    let mut tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0usize;
+    for &arrivals in &DIURNAL {
+        // One "hour" per bucket; arrivals spread evenly inside it.
+        for k in 0..arrivals {
+            let at = t + 60_000.0 * (k as f64 / arrivals as f64);
+            tasks.push((at, Box::new(DiurnalTask { id, dispatched: 0, pending: false }) as _));
+            id += 1;
+        }
+        t += 60_000.0;
+    }
+    let total = tasks.len();
+
+    let cfg = FabricConfig {
+        engines: 2,
+        queue_depth: 6,
+        max_inflight: 3,
+        admission: AdmissionPolicy::Block,
+        batching: false,
+        time_scale: 1e6, // compress the day to microseconds
+    };
+    let out = run_fabric(None, &cfg, tasks).unwrap();
+    assert_eq!(out.results.len(), total, "block policy lost tasks");
+    assert!(out.failed.is_empty(), "unexpected failures: {:?}", out.failed);
+    assert!(out.dropped.is_empty(), "block policy must never drop");
+    assert!(
+        out.peak_inflight <= 3,
+        "peak in-flight {} exceeded max_inflight 3",
+        out.peak_inflight
+    );
+    let mut ids: Vec<usize> = out.results.iter().map(|r| r.task_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..total).collect::<Vec<_>>(), "duplicate/missing ids");
+}

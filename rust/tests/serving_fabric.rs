@@ -1,0 +1,258 @@
+//! Integration tests for the serving fabric (`fedattn::serve`).
+//!
+//! Engine-free half: mock `FabricTask`s drive `run_fabric` through the
+//! public API and pin the admission accounting invariant — every offered
+//! task ends up in exactly one of `results` / `failed` / `dropped`.
+//!
+//! Engine-gated half (skips with a notice when artifacts are absent):
+//! the fabric serve path must produce byte-identical answers to the
+//! legacy thread-per-task path across KV exchange policies.  Both paths
+//! seed each task as `cfg.seed + task_id`, so any scheduling-dependent
+//! divergence shows up as a differing answer string.  When the manifest
+//! carries no batched decode variants the fabric runs singleton
+//! fallback cohorts — the identity must hold there too, and the outcome
+//! counters prove which path executed.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use fedattn::config::SystemConfig;
+use fedattn::coordinator::{Coordinator, CoordinatorConfig, TaskResult};
+use fedattn::data::{TraceConfig, WorkloadTrace};
+use fedattn::fedattn::{DecodeHandle, DecodeStep, KvExchangePolicy};
+use fedattn::runtime::Engine;
+use fedattn::serve::{run_fabric, AdmissionPolicy, DropReason, FabricConfig, FabricTask};
+
+// ---------------------------------------------------------------------------
+// Engine-free: admission accounting over the public API
+// ---------------------------------------------------------------------------
+
+/// Minimal mock session: `steps` decode dispatches after a timed prefill.
+struct MockTask {
+    id: usize,
+    steps: usize,
+    dispatched: usize,
+    pending: bool,
+    prefill_us: u64,
+}
+
+impl FabricTask for MockTask {
+    fn task_id(&self) -> usize {
+        self.id
+    }
+
+    fn prefill(&mut self) -> Result<()> {
+        std::thread::sleep(std::time::Duration::from_micros(self.prefill_us));
+        Ok(())
+    }
+
+    fn poll(&mut self) -> DecodeStep {
+        if self.dispatched >= self.steps {
+            DecodeStep::Done
+        } else if self.pending {
+            DecodeStep::NeedsDispatch
+        } else {
+            self.pending = true;
+            DecodeStep::Ready { token: self.dispatched as i32 }
+        }
+    }
+
+    fn dispatch(&mut self) -> Result<()> {
+        self.dispatched += 1;
+        self.pending = false;
+        Ok(())
+    }
+
+    fn decode_handle(&mut self) -> Option<&mut DecodeHandle> {
+        None
+    }
+
+    fn into_result(self: Box<Self>) -> Result<TaskResult> {
+        Ok(TaskResult {
+            task_id: self.id,
+            answer: format!("mock-{}", self.id),
+            gold: String::new(),
+            em: false,
+            queue_ms: 0.0,
+            service_ms: 1.0,
+            latency_ms: 1.0,
+            comm_bytes: 0,
+            comm_time_ms: 0.0,
+            generated_tokens: self.steps,
+            demotions: 0,
+            rejoins: 0,
+            retries: 0,
+        })
+    }
+}
+
+fn mock_tasks(
+    n: usize,
+    gap_ms: f64,
+    prefill_us: u64,
+) -> Vec<(f64, Box<dyn FabricTask + 'static>)> {
+    (0..n)
+        .map(|i| {
+            let t = MockTask { id: i, steps: 2, dispatched: 0, pending: false, prefill_us };
+            (i as f64 * gap_ms, Box::new(t) as _)
+        })
+        .collect()
+}
+
+#[test]
+fn reject_over_slo_accounts_every_offered_task() {
+    // One engine, one in-flight slot, 4ms prefills against 2ms arrival
+    // gaps: once the first completion seeds the service-time EMA, the
+    // predicted wait for a backed-up queue exceeds the 0.5ms SLO and
+    // later arrivals are rejected at the door.  (Arrivals must be spread
+    // in real time — a simultaneous burst would all be admitted blind,
+    // before the predictor has seen any completion.)
+    let cfg = FabricConfig {
+        engines: 1,
+        queue_depth: 32,
+        max_inflight: 1,
+        admission: AdmissionPolicy::RejectOverSlo { slo_ms: 0.5 },
+        batching: false,
+        time_scale: 1.0,
+    };
+    let n = 16;
+    let out = run_fabric(None, &cfg, mock_tasks(n, 2.0, 4000)).unwrap();
+    assert_eq!(
+        out.results.len() + out.failed.len() + out.dropped.len(),
+        n,
+        "every offered task lands in exactly one bucket"
+    );
+    assert!(out.failed.is_empty(), "mock tasks never error: {:?}", out.failed);
+    assert!(
+        !out.dropped.is_empty(),
+        "0.5ms SLO with 4ms prefills must reject some arrivals"
+    );
+    for d in &out.dropped {
+        assert_eq!(d.reason, DropReason::Rejected, "SLO policy rejects, never sheds");
+    }
+    // No task appears twice across buckets.
+    let mut seen: Vec<usize> = out
+        .results
+        .iter()
+        .map(|r| r.task_id)
+        .chain(out.dropped.iter().map(|d| d.task_id))
+        .collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), n, "no duplicate task ids across buckets");
+}
+
+#[test]
+fn block_policy_completes_everything_in_arrival_independent_set() {
+    let cfg = FabricConfig {
+        engines: 2,
+        queue_depth: 4,
+        max_inflight: 3,
+        admission: AdmissionPolicy::Block,
+        batching: false,
+        time_scale: 1e6,
+    };
+    let n = 20;
+    let out = run_fabric(None, &cfg, mock_tasks(n, 0.01, 300)).unwrap();
+    assert_eq!(out.results.len(), n);
+    assert!(out.dropped.is_empty() && out.failed.is_empty());
+    assert!(out.peak_inflight <= 3, "peak {} > max_inflight 3", out.peak_inflight);
+    // Mock tasks expose no decode handle, so every step is a fallback step.
+    assert_eq!(out.batched_steps, 0);
+    assert_eq!(out.fallback_steps, (n * 2) as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Engine-gated: fabric vs thread-per-task differential
+// ---------------------------------------------------------------------------
+
+fn engine() -> Option<Engine> {
+    let dir: PathBuf = fedattn::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("weights.npz").exists() {
+        eprintln!("SKIP: artifacts not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir, "weights.npz").unwrap())
+}
+
+fn base_cfg(kv_policy: KvExchangePolicy) -> CoordinatorConfig {
+    let mut c = CoordinatorConfig::from_system(&SystemConfig::default());
+    c.engines = 2;
+    c.queue_depth = 8;
+    c.participants = 3;
+    c.kv_policy = kv_policy;
+    c.max_new_tokens = 6;
+    c.seed = 23;
+    c.time_scale = 1e6; // compress trace think-time
+    c
+}
+
+fn trace() -> WorkloadTrace {
+    WorkloadTrace::generate(&TraceConfig {
+        seed: 71,
+        n_tasks: 6,
+        mean_interarrival_ms: 20.0,
+        min_facts: 3,
+        max_facts: 4,
+    })
+}
+
+/// Answers keyed by task id, so reordering across serve modes is benign.
+fn answers(results: &[TaskResult]) -> Vec<(usize, String, bool)> {
+    let mut v: Vec<_> =
+        results.iter().map(|r| (r.task_id, r.answer.clone(), r.em)).collect();
+    v.sort_by_key(|(id, _, _)| *id);
+    v
+}
+
+#[test]
+fn fabric_serve_matches_thread_per_task_across_kv_policies() {
+    let Some(_) = engine() else { return };
+    let policies = [
+        ("full", KvExchangePolicy::Full),
+        ("topk", KvExchangePolicy::TopKRelevance { budget_rows: 48 }),
+    ];
+    let tr = trace();
+    for (name, policy) in policies {
+        // Fresh engine per coordinator: Engine is consumed by
+        // Coordinator::new, and sharing would serialize the comparison.
+        let legacy = {
+            let cfg = base_cfg(policy);
+            Coordinator::new(engine().unwrap(), cfg).serve_trace(&tr).unwrap()
+        };
+        let fabric = {
+            let mut cfg = base_cfg(policy);
+            cfg.fabric = true;
+            Coordinator::new(engine().unwrap(), cfg).serve_trace(&tr).unwrap()
+        };
+        assert!(legacy.failed.is_empty(), "[{name}] legacy failures: {:?}", legacy.failed);
+        assert!(fabric.failed.is_empty(), "[{name}] fabric failures: {:?}", fabric.failed);
+        assert!(fabric.dropped.is_empty(), "[{name}] block policy must not drop");
+        assert_eq!(
+            answers(&legacy.results),
+            answers(&fabric.results),
+            "[{name}] fabric must be byte-identical to thread-per-task"
+        );
+    }
+}
+
+#[test]
+fn fabric_serve_is_deterministic_under_tight_inflight() {
+    // max_inflight 1 forces fully serialized admission — scheduling order
+    // changes but per-task seeds don't, so answers still match a wide run.
+    let Some(_) = engine() else { return };
+    let tr = trace();
+    let wide = {
+        let mut cfg = base_cfg(KvExchangePolicy::Full);
+        cfg.fabric = true;
+        Coordinator::new(engine().unwrap(), cfg).serve_trace(&tr).unwrap()
+    };
+    let tight = {
+        let mut cfg = base_cfg(KvExchangePolicy::Full);
+        cfg.fabric = true;
+        cfg.max_inflight = Some(1);
+        Coordinator::new(engine().unwrap(), cfg).serve_trace(&tr).unwrap()
+    };
+    assert_eq!(answers(&wide.results), answers(&tight.results));
+    assert!(wide.failed.is_empty() && tight.failed.is_empty());
+}
