@@ -2,7 +2,9 @@
 //! parallelism, analytic per-inference bytes (the paper's motivating
 //! table), across sequence lengths and participant counts — plus the
 //! full-frame vs delta-frame downlink comparison across sync intervals
-//! (written to `BENCH_comm_delta.json` at the repo root).
+//! (written to `BENCH_comm_delta.json` at the repo root) and the
+//! quantized-wire quality-vs-bytes sweep (`kv_precision`; written to
+//! `BENCH_comm_quant.json`).
 //!
 //!     cargo bench --bench comm_baselines
 
@@ -11,6 +13,8 @@ mod common;
 use anyhow::Result;
 use common::*;
 use fedattn::baselines::{CommCost, ParallelismKind};
+use fedattn::data::Segmentation;
+use fedattn::fedattn::{KvPrecision, SyncSchedule};
 use fedattn::util::json::{Json, JsonBuilder};
 use fedattn::util::stats::fmt_bytes;
 
@@ -130,5 +134,99 @@ fn main() -> Result<()> {
         .set("points", Json::Arr(delta_points))
         .build();
     write_bench_json("comm_delta", report);
+
+    // ------------------------------------------------------------------
+    // Quantized wire rows (`kv_precision`): quality vs bytes.
+    //
+    // Measured end-to-end first — EM across precisions at the golden
+    // H = 2 schedule, so the quality side of the trade-off is a real
+    // decode, not an estimate.  Then the analytic uplink sweep across
+    // precision × transmit ratio × participants (same shape as the delta
+    // table above: per round every participant ships `ratio × own` rows,
+    // so a round's uplink is `ratio × L × row_bytes(precision)`), written
+    // to BENCH_comm_quant.json at the repo root.  `ByteBudget` is
+    // deliberately absent: its row budget divides by the precision-aware
+    // row size, so shrinking rows adds rows back and bytes stop being
+    // comparable across precisions.
+    // ------------------------------------------------------------------
+    const PRECISIONS: [KvPrecision; 3] =
+        [KvPrecision::F32, KvPrecision::F16, KvPrecision::Int8];
+    println!("\n== Quantized KV wire rows: EM vs precision (N = 4, H = 2, full policy) ==");
+    println!(
+        "{:>6} {:>10} {:>8} {:>8} {:>14}",
+        "prec", "row bytes", "EM pub", "EM mean", "tx/participant"
+    );
+    for precision in PRECISIONS {
+        let mut cfg = PointCfg::new(
+            4,
+            Segmentation::SemQEx,
+            SyncSchedule::uniform(md.n_layers, 4, 2),
+        );
+        cfg.kv_precision = precision;
+        cfg.decode_all = true;
+        let r = run_point(&engine, &cfg)?;
+        println!(
+            "{:>6} {:>10} {:>8.3} {:>8.3} {:>14}",
+            precision.as_str(),
+            precision.wire_row_bytes(md.n_kv_heads, md.head_dim),
+            r.em_publisher,
+            r.em_mean,
+            fmt_bytes(r.avg_tx_bytes)
+        );
+    }
+
+    println!("\n== Uplink per round: precision x ratio x participants (L = {l}) ==");
+    println!(
+        "{:>6} {:>6} {:>4} {:>12} {:>14} {:>12} {:>8}",
+        "prec", "ratio", "N", "round total", "per participant", "sweep total", "vs f32"
+    );
+    let f32_row = KvPrecision::F32.wire_row_bytes(md.n_kv_heads, md.head_dim) as f64;
+    let h = 2usize;
+    let rounds = (md.n_layers / h).max(1);
+    let mut quant_points = Vec::new();
+    for &np in &[2usize, 4, 8] {
+        for &ratio in &[1.0f64, 0.5] {
+            for precision in PRECISIONS {
+                let rb = precision.wire_row_bytes(md.n_kv_heads, md.head_dim) as f64;
+                let per_round = ratio * l as f64 * rb;
+                let per_participant = ratio * (l / np) as f64 * rb;
+                let total = per_round * rounds as f64;
+                let reduction = f32_row / rb;
+                println!(
+                    "{:>6} {:>6.2} {:>4} {:>12} {:>14} {:>12} {:>7.2}x",
+                    precision.as_str(),
+                    ratio,
+                    np,
+                    fmt_bytes(per_round),
+                    fmt_bytes(per_participant),
+                    fmt_bytes(total),
+                    reduction
+                );
+                quant_points.push(
+                    JsonBuilder::new()
+                        .str("precision", precision.as_str())
+                        .num("ratio", ratio)
+                        .num("n", np as f64)
+                        .num("row_bytes", rb)
+                        .num("uplink_bytes_per_round", per_round)
+                        .num("bytes_per_participant_per_round", per_participant)
+                        .num("total_bytes", total)
+                        .num("reduction_vs_f32", reduction)
+                        .build(),
+                );
+            }
+        }
+    }
+    let quant_report = JsonBuilder::new()
+        .str("bench", "comm_quant")
+        .num("l", l as f64)
+        .num("kv_heads", md.n_kv_heads as f64)
+        .num("head_dim", md.head_dim as f64)
+        .num("h", h as f64)
+        .num("rounds", rounds as f64)
+        .num("n_layers", md.n_layers as f64)
+        .set("points", Json::Arr(quant_points))
+        .build();
+    write_bench_json("comm_quant", quant_report);
     Ok(())
 }

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 use fedattn::data::{gen_episode, partition, Episode, Segmentation};
 use fedattn::fedattn::{
-    FedSession, KvExchangePolicy, LocalSparsity, SessionConfig, SyncSchedule,
+    FedSession, KvExchangePolicy, KvPrecision, LocalSparsity, SessionConfig, SyncSchedule,
 };
 use fedattn::metrics::{em_score, CostModel};
 use fedattn::net::{LinkSpec, NetSim, Topology};
@@ -52,6 +52,9 @@ pub struct PointCfg {
     /// Delta-encoded downlink frames (default on); off bills full
     /// broadcast frames — the pre-delta baseline for comm comparisons.
     pub delta_frames: bool,
+    /// Wire precision of the KV data plane (default `F32`, the legacy
+    /// layout; `F16`/`Int8` quantize every shipped row).
+    pub kv_precision: KvPrecision,
     pub decode_all: bool,
     pub episodes: usize,
     pub seed: u64,
@@ -70,6 +73,7 @@ impl PointCfg {
             dropout_prob: 0.0,
             round_deadline_ms: None,
             delta_frames: true,
+            kv_precision: KvPrecision::F32,
             decode_all: false,
             episodes: episodes_per_point(),
             seed: 1234,
@@ -127,6 +131,7 @@ pub fn run_point(engine: &Engine, cfg: &PointCfg) -> Result<PointResult> {
         scfg.dropout_prob = cfg.dropout_prob;
         scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.delta_frames = cfg.delta_frames;
+        scfg.kv_precision = cfg.kv_precision;
         scfg.decode_all = cfg.decode_all;
         scfg.seed = cfg.seed ^ (e as u64).wrapping_mul(0x9E37);
         let net = NetSim::uniform(Topology::Star, cfg.n, cfg.link, scfg.seed);

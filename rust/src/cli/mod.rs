@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::fedattn::KvExchangePolicy;
+use crate::fedattn::{KvExchangePolicy, KvPrecision};
 use crate::serve::AdmissionPolicy;
 
 #[derive(Debug, Default, Clone)]
@@ -100,6 +100,20 @@ pub fn parse_kv_policy(args: &Args) -> anyhow::Result<Option<KvExchangePolicy>> 
         ),
     };
     Ok(Some(policy))
+}
+
+/// Wire K/V row precision from `--kv-precision` (`f32` | `f16` | `int8`).
+/// Returns `Ok(None)` when absent so callers keep their config default
+/// (`federation.kv_precision`, f32); unknown names are errors, not
+/// silent fallbacks — a typo'd precision would corrupt a
+/// quality-vs-bytes sweep.
+pub fn parse_kv_precision(args: &Args) -> anyhow::Result<Option<KvPrecision>> {
+    let Some(name) = args.opt("kv-precision") else {
+        return Ok(None);
+    };
+    KvPrecision::from_str_opt(name).map(Some).ok_or_else(|| {
+        anyhow::anyhow!("unknown --kv-precision {name:?} (expected f32|f16|int8)")
+    })
 }
 
 /// Per-session participant-parallelism width from `--workers`, floored at
@@ -581,6 +595,24 @@ mod tests {
         );
         assert!(parse_max_inflight(&parse(&["--max-inflight", "0"])).is_err());
         assert!(parse_max_inflight(&parse(&["--max-inflight", "lots"])).is_err());
+    }
+
+    #[test]
+    fn kv_precision_selection() {
+        assert_eq!(parse_kv_precision(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_kv_precision(&parse(&["--kv-precision", "f32"])).unwrap(),
+            Some(KvPrecision::F32)
+        );
+        assert_eq!(
+            parse_kv_precision(&parse(&["--kv-precision=f16"])).unwrap(),
+            Some(KvPrecision::F16)
+        );
+        assert_eq!(
+            parse_kv_precision(&parse(&["--kv-precision", "int8"])).unwrap(),
+            Some(KvPrecision::Int8)
+        );
+        assert!(parse_kv_precision(&parse(&["--kv-precision", "int4"])).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use super::toml::TomlDoc;
 use crate::data::Segmentation;
-use crate::fedattn::KvExchangePolicy;
+use crate::fedattn::{KvExchangePolicy, KvPrecision};
 use crate::net::{LinkSpec, Topology};
 use crate::serve::AdmissionPolicy;
 
@@ -49,6 +49,11 @@ pub struct FederationConfig {
     /// boundary instead of demoting it outright.  Off is byte-identical
     /// to the knob not existing.
     pub rejoin: bool,
+    /// Wire precision of K/V row payloads (`--kv-precision` /
+    /// `federation.kv_precision` = `f32` | `f16` | `int8`, default
+    /// `f32`).  Reduced precisions quantize rows at encode time with
+    /// per-row scales; `f32` is byte-identical to the knob not existing.
+    pub kv_precision: KvPrecision,
 }
 
 impl Default for FederationConfig {
@@ -64,6 +69,7 @@ impl Default for FederationConfig {
             round_deadline_ms: None,
             delta_frames: true,
             rejoin: false,
+            kv_precision: KvPrecision::F32,
         }
     }
 }
@@ -298,6 +304,15 @@ impl SystemConfig {
             f.rejoin = v
                 .as_bool()
                 .ok_or_else(|| anyhow::anyhow!("federation.rejoin must be a boolean"))?;
+        }
+        if let Some(v) = doc.get("federation.kv_precision") {
+            // Present but malformed must fail loudly — a silently ignored
+            // precision would corrupt quality-vs-bytes comparisons.
+            let name = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("federation.kv_precision must be a string")
+            })?;
+            f.kv_precision = KvPrecision::from_str_opt(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown kv_precision {name:?}"))?;
         }
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
@@ -574,6 +589,30 @@ mod tests {
         assert!(!SystemConfig::from_toml(&doc).unwrap().federation.rejoin);
         // Present but malformed: loud failure, not a silent default.
         let doc = TomlDoc::parse("[federation]\nrejoin = \"yes\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn kv_precision_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.kv_precision,
+            KvPrecision::F32
+        );
+        let doc = TomlDoc::parse("[federation]\nkv_precision = \"f16\"").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.kv_precision,
+            KvPrecision::F16
+        );
+        let doc = TomlDoc::parse("[federation]\nkv_precision = \"int8\"").unwrap();
+        assert_eq!(
+            SystemConfig::from_toml(&doc).unwrap().federation.kv_precision,
+            KvPrecision::Int8
+        );
+        // Present but malformed: loud failure, not a silent f32 default.
+        let doc = TomlDoc::parse("[federation]\nkv_precision = \"int4\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[federation]\nkv_precision = 8").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
     }
 

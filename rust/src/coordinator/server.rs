@@ -15,8 +15,8 @@ use anyhow::{Context, Result};
 use crate::config::SystemConfig;
 use crate::data::{partition, Episode, Segmentation, WorkloadTrace};
 use crate::fedattn::{
-    DecodeHandle, DecodeStep, FedSession, KvExchangePolicy, LocalSparsity, SessionConfig,
-    SyncSchedule, TcpTransport, Transport, TransportDriver,
+    DecodeHandle, DecodeStep, FedSession, KvExchangePolicy, KvPrecision, LocalSparsity,
+    SessionConfig, SyncSchedule, TcpTransport, Transport, TransportDriver,
 };
 use crate::metrics::em_score;
 use crate::net::NetSim;
@@ -50,6 +50,9 @@ pub struct CoordinatorConfig {
     /// Delta-encode the downlink for every served session (default on);
     /// off bills full broadcast frames — the pre-delta baseline.
     pub delta_frames: bool,
+    /// Wire precision of K/V row payloads for every served session
+    /// (`federation.kv_precision` / `--kv-precision`, default `f32`).
+    pub kv_precision: KvPrecision,
     pub topology: crate::net::Topology,
     pub link: crate::net::LinkSpec,
     /// Heterogeneous per-participant links; `None` = `participants` copies
@@ -100,6 +103,7 @@ impl CoordinatorConfig {
             dropout_prob: sc.federation.dropout_prob,
             round_deadline_ms: sc.federation.round_deadline_ms,
             delta_frames: sc.federation.delta_frames,
+            kv_precision: sc.federation.kv_precision,
             topology: sc.network.topology,
             link: sc.network.link,
             hetero_links: sc
@@ -345,6 +349,7 @@ impl Coordinator {
         scfg.dropout_prob = cfg.dropout_prob;
         scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.delta_frames = cfg.delta_frames;
+        scfg.kv_precision = cfg.kv_precision;
         scfg.seed = task_seed;
         // The session borrows the coordinator's shared pool; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.
@@ -363,7 +368,11 @@ impl Coordinator {
         // derives the identical allocation from the NetSim links when no
         // explicit budget is set — both defer to allocate_row_budgets.
         if let KvExchangePolicy::ByteBudget { bytes_per_round } = cfg.kv_policy {
-            let row_bytes = md.kv_row_bytes().max(1);
+            // Wire bytes per K+V row pair at the session precision — the
+            // same divisor the drivers use, so reduced precisions buy
+            // proportionally more rows under one byte budget.
+            let row_bytes =
+                cfg.kv_precision.wire_row_bytes(md.n_kv_heads, md.head_dim).max(1);
             scfg.kv_row_budgets = Some(crate::net::allocate_row_budgets(
                 &links,
                 bytes_per_round / row_bytes,
@@ -652,7 +661,7 @@ impl FabricTask for SessionTask<'_> {
         let handle = self
             .handle
             .ok_or_else(|| anyhow::anyhow!("session finished without prefilling"))?;
-        let net = self.net.unwrap_or_default();
+        let net = require_net_report(self.net)?;
         let service_ms =
             self.t_start.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(0.0);
         let answer = handle.text();
@@ -674,9 +683,26 @@ impl FabricTask for SessionTask<'_> {
     }
 }
 
+/// A completed session with no net report means comm accounting was lost
+/// somewhere; surface it as a task failure instead of silently reporting
+/// zero traffic (and zero demotions) in the [`TaskResult`].
+fn require_net_report(net: Option<crate::net::NetReport>) -> Result<crate::net::NetReport> {
+    net.ok_or_else(|| {
+        anyhow::anyhow!("session finished without a net report (comm bytes unknown)")
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn missing_net_report_is_an_error_not_zero_traffic() {
+        let err = require_net_report(None).unwrap_err();
+        assert!(err.to_string().contains("without a net report"), "{err}");
+        let rep = crate::net::NetReport { demotions: 2, ..Default::default() };
+        assert_eq!(require_net_report(Some(rep)).unwrap().demotions, 2);
+    }
 
     #[test]
     fn queue_fifo_and_close() {

@@ -85,7 +85,7 @@ use crate::fedattn::aggregate::{self, Aggregator, PartRows};
 use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::masks::global_mask;
 use crate::fedattn::node::{BlockCache, Participant, ParticipantNode};
-use crate::fedattn::protocol::{GlobalKvFrame, KvContribution};
+use crate::fedattn::protocol::{requantize_row, GlobalKvFrame, KvContribution, KvPrecision};
 use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
 use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
@@ -184,6 +184,19 @@ pub struct SessionConfig {
     /// no RNG, so `None` (the default) is byte-identical to not having
     /// the field at all.
     pub late_overrides: Option<Vec<(usize, usize)>>,
+    /// Wire precision of K/V row payloads (`federation.kv_precision` /
+    /// `--kv-precision`, default `f32`).  Reduced precisions quantize
+    /// every *transmitted* row at the value plane — the quantized values
+    /// are what contributions carry, what the aggregated round holds,
+    /// and what attendee caches absorb, identically in-process and over
+    /// the wire — and all byte accounting (uplink billing, downlink
+    /// billing, deadline arrival scheduling, `ByteBudget` row budgets)
+    /// follows [`KvPrecision::wire_row_bytes`].  A participant's *own*
+    /// untransmitted rows never cross a wire and stay raw; `f32` is
+    /// byte-identical to the pre-quantization driver.
+    ///
+    /// [`KvPrecision::wire_row_bytes`]: crate::fedattn::protocol::KvPrecision::wire_row_bytes
+    pub kv_precision: KvPrecision,
 }
 
 impl SessionConfig {
@@ -205,6 +218,7 @@ impl SessionConfig {
             rejoin: false,
             rejoin_max_attempts: 3,
             late_overrides: None,
+            kv_precision: KvPrecision::F32,
         }
     }
 }
@@ -263,6 +277,20 @@ struct ResyncRound {
     epoch: usize,
     frame: Vec<u8>,
     attended: Vec<bool>,
+}
+
+/// Resolve a probation node when no [`Reconnector`] is installed: there
+/// is nothing to retry against, so the node is demoted like a deadline
+/// miss — recorded in the [`NetReport`], never a panic.  Kept as a free
+/// function so the no-reconnector contract is unit-testable without an
+/// engine.
+fn demote_stranded_probation(p: usize, wire_state: &mut [WireState], net: &mut NetSim) {
+    wire_state[p] = WireState::Demoted;
+    net.record_demotion();
+    log::warn!(
+        "node {p} on probation with no reconnector installed: demoted \
+         (rejoin recovery requires TransportDriver::with_reconnector)"
+    );
 }
 
 /// Run `f(0..n)` across the pool (ordered results) or inline when no pool
@@ -448,6 +476,7 @@ impl<'a> SessionDriver<'a> {
             node.caches = Vec::new();
             let mut rp = RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
             rp.set_delta_frames(driver.cfg.delta_frames);
+            rp.set_kv_precision(driver.cfg.kv_precision);
             rp.join_send(&node.ids, driver.cfg.round_deadline_ms)?;
             remotes.push(rp);
         }
@@ -539,6 +568,14 @@ impl<'a> SessionDriver<'a> {
             let WireState::Probation { attempts } = self.wire_state[p] else {
                 continue;
             };
+            if self.reconnector.is_none() {
+                // Probation requires a reconnector to ever resolve; a
+                // node stranded here (e.g. a driver constructed without
+                // `with_reconnector`) is demoted like a deadline miss
+                // instead of panicking mid-session.
+                demote_stranded_probation(p, &mut self.wire_state, &mut self.net);
+                continue;
+            }
             let resync: Vec<(usize, usize, Vec<u8>)> = resync_log
                 .iter()
                 .filter(|r| r.attended[p])
@@ -551,11 +588,12 @@ impl<'a> SessionDriver<'a> {
                 let reconnect = self
                     .reconnector
                     .as_mut()
-                    .expect("probation without a reconnector");
+                    .ok_or_else(|| anyhow::anyhow!("probation without a reconnector"))?;
                 let t = reconnect(p)?;
                 let node = &self.nodes[p];
                 let mut rp = RemoteParticipant::new(p, node.pos.clone(), node.valid, keep, t);
                 rp.set_delta_frames(self.cfg.delta_frames);
+                rp.set_kv_precision(self.cfg.kv_precision);
                 rp.rejoin(
                     &node.ids,
                     self.cfg.round_deadline_ms,
@@ -612,7 +650,11 @@ impl<'a> SessionDriver<'a> {
         let md = self.engine.manifest.model.clone();
         let n = self.nodes.len();
         let n_layers = md.n_layers;
-        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
+        // Wire bytes of one K+V row pair at the session precision — the
+        // unit all planning and billing runs in (== `GlobalKv::row_bytes`
+        // at the default `f32`, so budgets, arrivals, and reports are
+        // byte-identical to the pre-quantization driver there).
+        let row_bytes_usize = self.cfg.kv_precision.wire_row_bytes(md.n_kv_heads, md.head_dim);
 
         // Budgeted policies: resolve per-participant row budgets once per
         // session.  ByteBudget's total is split across heterogeneous links
@@ -752,6 +794,38 @@ impl<'a> SessionDriver<'a> {
                 }
             }
 
+            // Quantize the value plane once per round.  The transmitted
+            // rows of every on-time participant are exactly what the
+            // protocol ships, so at reduced precision they are
+            // re-quantized into *wire copies*: contributions, the
+            // aggregated round, and attendee caches all see the values a
+            // wire decode yields — identical to a deployed session.  The
+            // raw tensors stay untouched for the local path (late nodes
+            // and a non-attendee's own caches hold full-precision rows on
+            // a real node too, since those rows never crossed a wire).
+            let wire_kv: Option<(Vec<HostTensor>, Vec<HostTensor>)> =
+                (self.cfg.kv_precision != KvPrecision::F32).then(|| {
+                    let mut wks = ks.clone();
+                    let mut wvs = vs.clone();
+                    for p in 0..n {
+                        if !on_time[p] {
+                            continue;
+                        }
+                        for (i, &t) in tx_flags[p].iter().enumerate() {
+                            if !t {
+                                continue;
+                            }
+                            requantize_row(wks[p].row_mut(i), self.cfg.kv_precision);
+                            requantize_row(wvs[p].row_mut(i), self.cfg.kv_precision);
+                        }
+                    }
+                    (wks, wvs)
+                });
+            let (wks, wvs): (&[HostTensor], &[HostTensor]) = match &wire_kv {
+                Some((a, b)) => (a, b),
+                None => (&ks, &vs),
+            };
+
             // Round messages: each on-time node packages its uplink
             // KvContribution.  A late node contributes nothing this round
             // (its rows are excluded from aggregation, the FL-straggler
@@ -767,13 +841,11 @@ impl<'a> SessionDriver<'a> {
                         continue;
                     }
                     let scores = self.relevance.as_ref().map(|t| t.scores(p));
-                    out.push(Some(self.nodes[p].contribute(
-                        m,
-                        &ks[p],
-                        &vs[p],
-                        &tx_flags[p],
-                        scores,
-                    )?));
+                    out.push(Some(
+                        self.nodes[p]
+                            .contribute(m, &wks[p], &wvs[p], &tx_flags[p], scores)?
+                            .with_precision(self.cfg.kv_precision),
+                    ));
                 }
                 out
             };
@@ -788,8 +860,8 @@ impl<'a> SessionDriver<'a> {
             let parts_refs: Vec<PartRows<'_>> = (0..n)
                 .map(|p| {
                     (
-                        &ks[p],
-                        &vs[p],
+                        &wks[p],
+                        &wvs[p],
                         self.nodes[p].pos.as_slice(),
                         if on_time[p] { self.nodes[p].valid } else { 0 },
                         tx_flags[p].as_slice(),
@@ -824,7 +896,8 @@ impl<'a> SessionDriver<'a> {
                     .map(|&r| r as u64 * row_bytes)
                     .collect();
                 debug_assert_eq!(tx_bytes, from_pack, "uplink bytes drifted from pack");
-                let frame = crate::fedattn::protocol::GlobalKvFrame::from_global(m, &gkv);
+                let frame = crate::fedattn::protocol::GlobalKvFrame::from_global(m, &gkv)
+                    .with_precision(self.cfg.kv_precision);
                 let total: u64 = tx_bytes.iter().sum();
                 for p in 0..n {
                     debug_assert_eq!(
@@ -976,7 +1049,9 @@ impl<'a> SessionDriver<'a> {
         let md = self.engine.manifest.model.clone();
         let n = self.nodes.len();
         let n_layers = md.n_layers;
-        let row_bytes_usize = GlobalKv::row_bytes(md.n_kv_heads, md.head_dim);
+        // Wire bytes per K+V row pair at the session precision (matches
+        // prefill_local and the coordinator's ByteBudget divisor).
+        let row_bytes_usize = self.cfg.kv_precision.wire_row_bytes(md.n_kv_heads, md.head_dim);
         let row_len = md.n_kv_heads * md.head_dim;
         let track_mass = self.relevance.is_some();
 
@@ -1156,6 +1231,7 @@ impl<'a> SessionDriver<'a> {
                         .collect();
                     let good = c.kv_heads == md.n_kv_heads
                         && c.head_dim == md.head_dim
+                        && c.precision == self.cfg.kv_precision
                         && c.k.len() == flagged.len() * row_len
                         && c.v.len() == c.k.len();
                     if good {
@@ -1289,7 +1365,9 @@ impl<'a> SessionDriver<'a> {
                 resync_log.push(ResyncRound {
                     block: m,
                     epoch: round_epoch,
-                    frame: GlobalKvFrame::from_global(m, &gkv).encode(),
+                    frame: GlobalKvFrame::from_global(m, &gkv)
+                        .with_precision(self.cfg.kv_precision)
+                        .encode(),
                     attended: attend_eff.clone(),
                 });
             }
@@ -1911,5 +1989,22 @@ mod tests {
         // Validated in SessionDriver::new; the config itself is plain data.
         let cfg = SessionConfig::new(SyncSchedule::uniform(4, 2, 2));
         assert_eq!(cfg.dropout_prob, 0.0);
+    }
+
+    #[test]
+    fn stranded_probation_demotes_instead_of_panicking() {
+        // A node can sit in `Probation` with no reconnector installed
+        // (TransportDriver built without `with_reconnector` while
+        // `cfg.rejoin` is on).  The rejoin sweep must demote it like a
+        // deadline miss — counted in the report — not panic on the
+        // missing reconnector.
+        use crate::net::{LinkSpec, Topology};
+        let mut net = NetSim::uniform(Topology::Star, 3, LinkSpec::default(), 7);
+        let mut wire_state =
+            vec![WireState::Alive, WireState::Probation { attempts: 1 }, WireState::Alive];
+        demote_stranded_probation(1, &mut wire_state, &mut net);
+        assert!(matches!(wire_state[1], WireState::Demoted));
+        assert!(matches!(wire_state[0], WireState::Alive));
+        assert_eq!(net.report().demotions, 1);
     }
 }

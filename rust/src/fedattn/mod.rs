@@ -60,8 +60,8 @@ pub use kv::{GlobalKv, KvRowMeta};
 pub use masks::{decode_mask, decode_mask_set_visible, global_mask, local_mask};
 pub use node::{Participant, ParticipantNode};
 pub use protocol::{
-    wire_kind, DecodeTail, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
-    TokenBroadcast, WireError, WireKind,
+    requantize_row, wire_kind, DecodeTail, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
+    KvPrecision, TokenBroadcast, WireError, WireKind,
 };
 pub use relevance::RelevanceTracker;
 pub use schedule::{Scheme, SyncSchedule};

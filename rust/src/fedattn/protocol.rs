@@ -41,6 +41,260 @@ use crate::tensor::HostTensor;
 pub const WIRE_MAGIC: u8 = 0xFA;
 /// Wire format revision; bumped on any layout change.
 pub const WIRE_VERSION: u8 = 1;
+/// Wire revision for quantized KV payloads: the header grows a precision
+/// byte and the K/V data plane ships reduced-precision rows (per-row
+/// absmax scales for int8).  `f32` messages always encode as version 1 —
+/// byte-identical to the pre-quantization wire — so version 2 appears on
+/// the wire only when a session opts in via `kv_precision`.
+pub const WIRE_VERSION_QUANT: u8 = 2;
+
+/// Wire precision of K/V row payloads (`federation.kv_precision` /
+/// `--kv-precision`).  Applies to the data plane of [`KvContribution`],
+/// [`GlobalKvFrame`] and [`GlobalKvDeltaFrame`] (including the `Resync`
+/// replay frames, which are encoded downlink frames); control fields
+/// (`pos`, relevance, row metadata, retain-lists) always stay exact.
+///
+/// * `F32` — the legacy exact wire; encodes as version-1 bytes.
+/// * `F16` — IEEE 754 half per element (2 B), saturating on overflow.
+/// * `Int8` — symmetric per-row absmax quantization: each K and V row
+///   carries one f32 scale (`absmax / 127`) and 1 B per element.
+///
+/// Decoded messages always hold dequantized f32 values; quantization is
+/// an encode-time transform, so everything downstream of a decode (pack,
+/// attention, fresh-KV caches, delta reassembly) operates on f32 rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvPrecision {
+    #[default]
+    F32,
+    F16,
+    Int8,
+}
+
+impl KvPrecision {
+    /// Canonical knob spelling (TOML / CLI / bench reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::F16 => "f16",
+            KvPrecision::Int8 => "int8",
+        }
+    }
+
+    /// Parse the knob spelling; `None` for anything unknown (callers
+    /// report the loud error with their own context).
+    pub fn from_str_opt(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(KvPrecision::F32),
+            "f16" | "fp16" => Some(KvPrecision::F16),
+            "int8" | "i8" => Some(KvPrecision::Int8),
+            _ => None,
+        }
+    }
+
+    /// The precision byte carried in a version-2 header.  `F32` has no
+    /// wire byte: it must encode as version 1.
+    pub(crate) fn wire_byte(self) -> u8 {
+        match self {
+            KvPrecision::F32 => 0,
+            KvPrecision::F16 => 1,
+            KvPrecision::Int8 => 2,
+        }
+    }
+
+    pub(crate) fn from_wire_byte(b: u8) -> Result<Self, WireError> {
+        match b {
+            1 => Ok(KvPrecision::F16),
+            2 => Ok(KvPrecision::Int8),
+            other => Err(WireError::Malformed(format!("bad precision byte {other}"))),
+        }
+    }
+
+    /// Bytes per element of the K/V data plane (scales excluded).
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvPrecision::F32 => 4,
+            KvPrecision::F16 => 2,
+            KvPrecision::Int8 => 1,
+        }
+    }
+
+    /// **Wire bytes of one K+V row pair** at this precision — the
+    /// quantized analogue of [`GlobalKv::row_bytes`] (which stays the
+    /// in-memory f32 metric).  Int8 includes the two per-row f32 scales,
+    /// so byte accounting follows what actually ships.
+    pub fn wire_row_bytes(self, kv_heads: usize, head_dim: usize) -> usize {
+        let elems = 2 * kv_heads * head_dim;
+        match self {
+            KvPrecision::F32 => elems * 4,
+            KvPrecision::F16 => elems * 2,
+            KvPrecision::Int8 => elems + 2 * 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization primitives
+// ---------------------------------------------------------------------------
+
+/// Convert f32 to IEEE 754 half bits, round-to-nearest-even, *saturating*
+/// at ±65504 instead of producing infinities (a finite KV row must stay
+/// finite on the wire — decoders reject non-finite payloads).  NaN maps
+/// to zero: fresh KV data is always finite, and a total conversion keeps
+/// the encoder panic-free on any input.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    if x.is_nan() {
+        return 0;
+    }
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let ax = x.abs();
+    if ax > 65504.0 {
+        return sign | 0x7BFF; // saturate at f16::MAX
+    }
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    let e = exp - 127 + 15;
+    if e >= 1 {
+        // Normal half: round mantissa 23 -> 10 bits to nearest-even.
+        let mut m = man >> 13;
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = e as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+        }
+        if he >= 31 {
+            return sign | 0x7BFF; // rounded into overflow: saturate
+        }
+        sign | ((he as u16) << 10) | (m as u16)
+    } else {
+        // Subnormal half (or zero): shift the implicit bit down into the
+        // 10-bit mantissa, rounding to nearest-even.  A carry out of the
+        // mantissa (m == 0x400) lands exactly on the smallest normal
+        // half's bit pattern, so it needs no special case.
+        if exp == 0 && man == 0 {
+            return sign; // ±0
+        }
+        let full = man | 0x0080_0000;
+        let sh = (13 + (1 - e)) as u32;
+        if sh >= 32 {
+            return sign; // underflows to zero
+        }
+        let mut m = full >> sh;
+        let rem = full & ((1u32 << sh) - 1);
+        let half = 1u32 << (sh - 1);
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        sign | (m as u16)
+    }
+}
+
+/// Convert IEEE 754 half bits to f32 (exact: every half value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal half: renormalize into an f32 exponent.
+            let mut e = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Per-row symmetric absmax scale for int8: the smallest **power of
+/// two** `≥ absmax / 127`, or zero for an all-zero (or degenerate
+/// subnormal) row.
+///
+/// Power-of-two scales cost at most one extra bit of quantization error
+/// versus raw `absmax / 127`, and buy an exactness property the value
+/// plane depends on: `q × scale` is exact in IEEE arithmetic, and
+/// re-quantizing an already-quantized row reproduces it bit-for-bit
+/// ([`requantize_row`] is idempotent).  The driver's packed global KV
+/// holds *decoded* (already-quantized) contribution rows, and the
+/// downlink re-encodes them — without idempotence that second pass
+/// would drift the values attendees see away from what the in-process
+/// reference computes.
+pub fn int8_row_scale(row: &[f32]) -> f32 {
+    let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if absmax == 0.0 || !absmax.is_finite() {
+        return 0.0;
+    }
+    let t = absmax / 127.0;
+    if t < f32::MIN_POSITIVE {
+        return 0.0; // rows this small round to zero at any int8 scale
+    }
+    // Smallest power of two >= t, via exponent extraction (t is a
+    // positive normal here, so the biased exponent is authoritative).
+    let bits = t.to_bits();
+    let mut e = ((bits >> 23) & 0xFF) as i32 - 127;
+    if bits & 0x007F_FFFF != 0 {
+        e += 1;
+    }
+    // 127 × 2^121 is the largest level range that stays finite.
+    f32::powi(2.0, e.min(121))
+}
+
+/// A decoded int8 scale must be zero or a positive normal small enough
+/// that `127 × scale` stays finite — anything else (NaN, ±inf, negative,
+/// subnormal, overflow-range) is a hostile or corrupt frame.
+fn validate_scale(s: f32) -> Result<(), WireError> {
+    if s == 0.0 || (s.is_finite() && s >= f32::MIN_POSITIVE && s <= f32::MAX / 127.0) {
+        Ok(())
+    } else {
+        Err(WireError::Malformed(format!("hostile int8 scale {s:e}")))
+    }
+}
+
+#[inline]
+fn quant_i8(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (x / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Apply one encode→decode round-trip to a row *in place*: the value the
+/// far side of the wire would see.  The in-process session applies this
+/// to every transmitted row so a quantized wire session and the
+/// in-process reference stay transcript-identical; node hosts apply it
+/// to their own transmitted rows when restoring them from the fresh-KV
+/// cache (their raw copy never crossed the wire, but every peer sees the
+/// quantized one, and attention must agree).  `F32` is the identity.
+pub fn requantize_row(row: &mut [f32], precision: KvPrecision) {
+    match precision {
+        KvPrecision::F32 => {}
+        KvPrecision::F16 => {
+            for x in row.iter_mut() {
+                *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+            }
+        }
+        KvPrecision::Int8 => {
+            let s = int8_row_scale(row);
+            for x in row.iter_mut() {
+                *x = quant_i8(*x, s) as f32 * s;
+            }
+        }
+    }
+}
 
 const TAG_CONTRIBUTION: u8 = 1;
 const TAG_FRAME: u8 = 2;
@@ -112,10 +366,17 @@ impl Writer {
     /// frames share this codec but must never collide with protocol
     /// messages).
     pub(crate) fn with_magic(magic: u8, tag: u8, cap_hint: usize) -> Self {
+        Self::with_magic_version(magic, tag, WIRE_VERSION, cap_hint)
+    }
+
+    /// A writer with an explicit header version byte (the quantized KV
+    /// layouts and the precision-carrying control frames write
+    /// [`WIRE_VERSION_QUANT`]; everything else stays on version 1).
+    pub(crate) fn with_magic_version(magic: u8, tag: u8, version: u8, cap_hint: usize) -> Self {
         let mut buf = Vec::with_capacity(cap_hint + HEADER_BYTES);
         buf.push(magic);
         buf.push(tag);
-        buf.push(WIRE_VERSION);
+        buf.push(version);
         Self { buf }
     }
 
@@ -163,6 +424,24 @@ impl Writer {
         self.buf.extend_from_slice(xs);
     }
 
+    /// f32 values down-converted to IEEE half on the wire (2 B each).
+    fn f16s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+
+    /// Row-major values quantized to int8 against per-row scales (1 B per
+    /// element; `scales[r]` covers `xs[r*row_len..(r+1)*row_len]`).
+    fn i8_rows(&mut self, xs: &[f32], row_len: usize, scales: &[f32]) {
+        debug_assert_eq!(xs.len(), scales.len() * row_len);
+        for (r, &s) in scales.iter().enumerate() {
+            for &x in &xs[r * row_len..(r + 1) * row_len] {
+                self.buf.push(quant_i8(x, s) as u8);
+            }
+        }
+    }
+
     pub(crate) fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -192,6 +471,23 @@ impl<'a> Reader<'a> {
     /// Open a frame in another magic namespace (see
     /// [`Writer::with_magic`]).
     pub(crate) fn open_with_magic(b: &'a [u8], magic: u8, tag: u8) -> Result<Self, WireError> {
+        let (r, version) = Self::open_with_magic_versioned(b, magic, tag)?;
+        if version != WIRE_VERSION {
+            return Err(WireError::Version(version));
+        }
+        Ok(r)
+    }
+
+    /// Open a frame accepting either wire version, returning the version
+    /// byte so the caller can dispatch on the layout.  Only the KV
+    /// messages (and the precision-carrying control frames) have a
+    /// version-2 layout; every other decoder keeps the strict
+    /// [`Reader::open_with_magic`] and rejects version 2 outright.
+    pub(crate) fn open_with_magic_versioned(
+        b: &'a [u8],
+        magic: u8,
+        tag: u8,
+    ) -> Result<(Self, u8), WireError> {
         let mut r = Self { b, pos: 0 };
         let got_magic = r.u8()?;
         if got_magic != magic {
@@ -202,10 +498,23 @@ impl<'a> Reader<'a> {
             return Err(WireError::BadTag { expected: tag, got });
         }
         let version = r.u8()?;
-        if version != WIRE_VERSION {
+        if version != WIRE_VERSION && version != WIRE_VERSION_QUANT {
             return Err(WireError::Version(version));
         }
-        Ok(r)
+        Ok((r, version))
+    }
+
+    /// Open a KV message header: version 1 is the legacy f32 layout;
+    /// version 2 carries a precision byte (`f16`/`int8` only — an `f32`
+    /// message must be version 1, so there is exactly one encoding of
+    /// every message and decode stays canonical).
+    fn open_quant(b: &'a [u8], tag: u8) -> Result<(Self, KvPrecision), WireError> {
+        let (mut r, version) = Self::open_with_magic_versioned(b, WIRE_MAGIC, tag)?;
+        if version == WIRE_VERSION {
+            return Ok((r, KvPrecision::F32));
+        }
+        let precision = KvPrecision::from_wire_byte(r.u8()?)?;
+        Ok((r, precision))
     }
 
     pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
@@ -244,6 +553,68 @@ impl<'a> Reader<'a> {
     pub(crate) fn f64s(&mut self, n: usize) -> Result<Vec<f64>, WireError> {
         self.ensure_remaining(n, 8)?;
         (0..n).map(|_| self.f64()).collect()
+    }
+
+    /// `n` IEEE-half payload values, dequantized to f32.  Non-finite
+    /// halves are rejected: a finite KV row can never encode one (the
+    /// encoder saturates), so inf/NaN here means a hostile or corrupt
+    /// frame — and rejecting them keeps decode canonical (every accepted
+    /// half re-encodes to its exact wire bits).
+    fn f16s_dequant(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        self.ensure_remaining(n, 2)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let bits = u16::from_le_bytes(self.take(2)?.try_into().unwrap());
+            let x = f16_bits_to_f32(bits);
+            if !x.is_finite() {
+                return Err(WireError::Malformed("non-finite f16 payload".into()));
+            }
+            out.push(x);
+        }
+        Ok(out)
+    }
+
+    /// Per-row int8 scales followed by validation: each must be zero or a
+    /// positive normal with `127 × scale` finite (see [`validate_scale`]).
+    fn i8_scales(&mut self, rows: usize) -> Result<Vec<f32>, WireError> {
+        let scales = self.f32s(rows)?;
+        for &s in &scales {
+            validate_scale(s)?;
+        }
+        Ok(scales)
+    }
+
+    /// Row-major int8 payload dequantized against per-row scales.
+    /// Rejects `-128` (its dequantized value cannot re-encode to itself
+    /// under the symmetric ±127 clamp, which would break canonical
+    /// decode) and any nonzero level under a zero scale (a zero-scale row
+    /// is all-zero by construction).
+    fn i8_rows_dequant(
+        &mut self,
+        row_len: usize,
+        scales: &[f32],
+    ) -> Result<Vec<f32>, WireError> {
+        let n = scales
+            .len()
+            .checked_mul(row_len)
+            .ok_or_else(|| WireError::Malformed("int8 payload overflows".into()))?;
+        self.ensure_remaining(n, 1)?;
+        let mut out = Vec::with_capacity(n);
+        for &s in scales {
+            for &b in self.take(row_len)? {
+                let q = b as i8;
+                if q == i8::MIN {
+                    return Err(WireError::Malformed("int8 level -128".into()));
+                }
+                if s == 0.0 && q != 0 {
+                    return Err(WireError::Malformed(
+                        "nonzero int8 level under zero scale".into(),
+                    ));
+                }
+                out.push(q as f32 * s);
+            }
+        }
+        Ok(out)
     }
 
     pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
@@ -295,9 +666,22 @@ pub struct KvContribution {
     /// policy does not track relevance).
     pub relevance: Vec<f32>,
     /// Transmitted key rows, packed `[rows × kv_heads × head_dim]`.
+    /// Always dequantized f32 — quantization is an encode-time transform.
     pub k: Vec<f32>,
     /// Transmitted value rows, same layout as `k`.
     pub v: Vec<f32>,
+    /// Wire precision of the K/V payload.  Fresh messages default to
+    /// `F32`; senders set it from the session's `kv_precision` before
+    /// encoding, and decode records what the wire actually carried so
+    /// byte accounting follows the quantized sizes.
+    pub precision: KvPrecision,
+    /// Per-row int8 dequantization scales exactly as decoded from the
+    /// wire (empty unless this message was decoded from an int8 frame).
+    /// Re-encoding reuses them so decode→encode is bit-exact; recomputing
+    /// a scale from dequantized data is not (floating-point `absmax/127`
+    /// of `q·s` values need not reproduce `s`).
+    pub qscale_k: Vec<f32>,
+    pub qscale_v: Vec<f32>,
 }
 
 impl KvContribution {
@@ -330,7 +714,25 @@ impl KvContribution {
             mk.extend_from_slice(k.row(i));
             mv.extend_from_slice(v.row(i));
         }
-        Self { block, owner, kv_heads, head_dim, pos: mpos, relevance: mrel, k: mk, v: mv }
+        Self {
+            block,
+            owner,
+            kv_heads,
+            head_dim,
+            pos: mpos,
+            relevance: mrel,
+            k: mk,
+            v: mv,
+            precision: KvPrecision::F32,
+            qscale_k: Vec::new(),
+            qscale_v: Vec::new(),
+        }
+    }
+
+    /// Set the wire precision (builder-style, for senders).
+    pub fn with_precision(mut self, precision: KvPrecision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// Transmitted rows in this contribution.
@@ -338,13 +740,15 @@ impl KvContribution {
         self.pos.len()
     }
 
-    /// **Data-plane bytes** — the K/V row payload, and the value every
-    /// round's comm accounting is derived from.  Always equals
-    /// `rows() × GlobalKv::row_bytes(kv_heads, head_dim)` (asserted by the
-    /// protocol property suite), which is the paper's bits-transmitted
-    /// metric.
+    /// **Data-plane bytes** — the K/V row payload *as it ships*, and the
+    /// value every round's comm accounting is derived from.  Always
+    /// equals `rows() × precision.wire_row_bytes(kv_heads, head_dim)`
+    /// (asserted by the protocol property suite); at `F32` that is
+    /// `rows() × GlobalKv::row_bytes`, the paper's bits-transmitted
+    /// metric, and at reduced precision it follows the quantized sizes
+    /// (int8 scales included) so the savings in the reports are real.
     pub fn payload_bytes(&self) -> u64 {
-        4 * (self.k.len() + self.v.len()) as u64
+        (self.rows() * self.precision.wire_row_bytes(self.kv_heads, self.head_dim)) as u64
     }
 
     /// Control-plane bytes: header + per-row `pos`/`relevance` metadata.
@@ -357,11 +761,12 @@ impl KvContribution {
 
     /// Exact length of [`KvContribution::encode`]'s output.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + 5 * 4 + self.pos.len() * 8 + (self.k.len() + self.v.len()) * 4
+        let ver_extra = usize::from(self.precision != KvPrecision::F32);
+        HEADER_BYTES + ver_extra + 5 * 4 + self.pos.len() * 8 + self.payload_bytes() as usize
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new(TAG_CONTRIBUTION, self.encoded_len());
+        let mut w = open_kv_writer(TAG_CONTRIBUTION, self.precision, self.encoded_len());
         w.u32(self.block as u32);
         w.u32(self.owner as u32);
         w.u32(self.kv_heads as u32);
@@ -369,13 +774,21 @@ impl KvContribution {
         w.u32(self.rows() as u32);
         w.i32s(&self.pos);
         w.f32s(&self.relevance);
-        w.f32s(&self.k);
-        w.f32s(&self.v);
+        write_kv_payload(
+            &mut w,
+            self.precision,
+            self.kv_heads * self.head_dim,
+            self.rows(),
+            &self.k,
+            &self.v,
+            &self.qscale_k,
+            &self.qscale_v,
+        );
         w.finish()
     }
 
     pub fn decode(b: &[u8]) -> Result<Self, WireError> {
-        let mut r = Reader::open(b, TAG_CONTRIBUTION)?;
+        let (mut r, precision) = Reader::open_quant(b, TAG_CONTRIBUTION)?;
         let block = r.u32()? as usize;
         let owner = r.u32()? as usize;
         let kv_heads = r.u32()? as usize;
@@ -384,10 +797,126 @@ impl KvContribution {
         let elems = row_elems(rows, kv_heads, head_dim)?;
         let pos = r.i32s(rows)?;
         let relevance = r.f32s(rows)?;
-        let k = r.f32s(elems)?;
-        let v = r.f32s(elems)?;
+        let payload = read_kv_payload(&mut r, precision, rows, kv_heads * head_dim, elems)?;
         r.done()?;
-        Ok(Self { block, owner, kv_heads, head_dim, pos, relevance, k, v })
+        Ok(Self {
+            block,
+            owner,
+            kv_heads,
+            head_dim,
+            pos,
+            relevance,
+            k: payload.k,
+            v: payload.v,
+            precision,
+            qscale_k: payload.qscale_k,
+            qscale_v: payload.qscale_v,
+        })
+    }
+}
+
+/// A writer with the right header for a KV message at `precision`: `f32`
+/// writes the legacy version-1 header, reduced precisions write version
+/// 2 plus the precision byte.
+fn open_kv_writer(tag: u8, precision: KvPrecision, cap_hint: usize) -> Writer {
+    match precision {
+        KvPrecision::F32 => Writer::new(tag, cap_hint),
+        p => {
+            let mut w = Writer::with_magic_version(WIRE_MAGIC, tag, WIRE_VERSION_QUANT, cap_hint);
+            w.u8(p.wire_byte());
+            w
+        }
+    }
+}
+
+/// Write a K/V data plane at `precision`.  Int8 writes per-row scales
+/// (k rows' scales, then v rows') ahead of the level bytes; decoded
+/// messages pass their stored wire scales back in so re-encode is
+/// bit-exact, fresh messages pass empty slices and the scales are
+/// computed from the data.
+#[allow(clippy::too_many_arguments)]
+fn write_kv_payload(
+    w: &mut Writer,
+    precision: KvPrecision,
+    row_len: usize,
+    rows: usize,
+    k: &[f32],
+    v: &[f32],
+    qscale_k: &[f32],
+    qscale_v: &[f32],
+) {
+    match precision {
+        KvPrecision::F32 => {
+            w.f32s(k);
+            w.f32s(v);
+        }
+        KvPrecision::F16 => {
+            w.f16s(k);
+            w.f16s(v);
+        }
+        KvPrecision::Int8 => {
+            let sk = stored_or_computed_scales(k, row_len, rows, qscale_k);
+            let sv = stored_or_computed_scales(v, row_len, rows, qscale_v);
+            w.f32s(&sk);
+            w.f32s(&sv);
+            w.i8_rows(k, row_len, &sk);
+            w.i8_rows(v, row_len, &sv);
+        }
+    }
+}
+
+fn stored_or_computed_scales(
+    data: &[f32],
+    row_len: usize,
+    rows: usize,
+    stored: &[f32],
+) -> Vec<f32> {
+    if stored.len() == rows {
+        stored.to_vec()
+    } else {
+        (0..rows)
+            .map(|r| int8_row_scale(&data[r * row_len..(r + 1) * row_len]))
+            .collect()
+    }
+}
+
+/// A decoded K/V data plane: dequantized values plus (for int8) the wire
+/// scales, kept so re-encode is canonical.
+struct KvPayload {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    qscale_k: Vec<f32>,
+    qscale_v: Vec<f32>,
+}
+
+fn read_kv_payload(
+    r: &mut Reader<'_>,
+    precision: KvPrecision,
+    rows: usize,
+    row_len: usize,
+    elems: usize,
+) -> Result<KvPayload, WireError> {
+    let empty = Vec::new;
+    match precision {
+        KvPrecision::F32 => Ok(KvPayload {
+            k: r.f32s(elems)?,
+            v: r.f32s(elems)?,
+            qscale_k: empty(),
+            qscale_v: empty(),
+        }),
+        KvPrecision::F16 => Ok(KvPayload {
+            k: r.f16s_dequant(elems)?,
+            v: r.f16s_dequant(elems)?,
+            qscale_k: empty(),
+            qscale_v: empty(),
+        }),
+        KvPrecision::Int8 => {
+            let qscale_k = r.i8_scales(rows)?;
+            let qscale_v = r.i8_scales(rows)?;
+            let k = r.i8_rows_dequant(row_len, &qscale_k)?;
+            let v = r.i8_rows_dequant(row_len, &qscale_v)?;
+            Ok(KvPayload { k, v, qscale_k, qscale_v })
+        }
     }
 }
 
@@ -411,8 +940,15 @@ pub struct GlobalKvFrame {
     /// [`GlobalKv::pack`]: crate::fedattn::GlobalKv::pack
     pub meta: Vec<KvRowMeta>,
     /// Packed key rows `[rows × kv_heads × head_dim]` (padding trimmed).
+    /// Always dequantized f32 — quantization is an encode-time transform.
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Wire precision of the K/V payload (see [`KvPrecision`]).
+    pub precision: KvPrecision,
+    /// Per-row int8 wire scales as decoded (empty on fresh frames);
+    /// re-encode reuses them so decode→encode is bit-exact.
+    pub qscale_k: Vec<f32>,
+    pub qscale_v: Vec<f32>,
 }
 
 impl GlobalKvFrame {
@@ -427,7 +963,23 @@ impl GlobalKvFrame {
             k.extend_from_slice(g.k.row(i));
             v.extend_from_slice(g.v.row(i));
         }
-        Self { block, kv_heads, head_dim, meta: g.meta.clone(), k, v }
+        Self {
+            block,
+            kv_heads,
+            head_dim,
+            meta: g.meta.clone(),
+            k,
+            v,
+            precision: KvPrecision::F32,
+            qscale_k: Vec::new(),
+            qscale_v: Vec::new(),
+        }
+    }
+
+    /// Set the wire precision (builder-style, for senders).
+    pub fn with_precision(mut self, precision: KvPrecision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// Rebuild the padded [`GlobalKv`] this frame was taken from.
@@ -460,7 +1012,7 @@ impl GlobalKvFrame {
     /// Matches the `NetSim` downlink accounting `round_total - own_tx`
     /// row for row.
     pub fn payload_bytes_for(&self, attendee: usize) -> u64 {
-        let row_bytes = GlobalKv::row_bytes(self.kv_heads, self.head_dim) as u64;
+        let row_bytes = self.precision.wire_row_bytes(self.kv_heads, self.head_dim) as u64;
         self.meta
             .iter()
             .filter(|m| m.transmitted && m.owner != attendee)
@@ -474,41 +1026,60 @@ impl GlobalKvFrame {
     /// actually delivered; `delta_frames = false` bills it so the comm
     /// benches can compare the two modes honestly.
     pub fn full_payload_bytes(&self) -> u64 {
-        self.meta.len() as u64 * GlobalKv::row_bytes(self.kv_heads, self.head_dim) as u64
+        self.meta.len() as u64 * self.precision.wire_row_bytes(self.kv_heads, self.head_dim) as u64
     }
 
     /// Exact length of [`GlobalKvFrame::encode`]'s output.
     pub fn encoded_len(&self) -> usize {
+        let ver_extra = usize::from(self.precision != KvPrecision::F32);
         HEADER_BYTES
+            + ver_extra
             + 4 * 4
             + self.meta.len() * META_ENTRY_BYTES
-            + (self.k.len() + self.v.len()) * 4
+            + self.full_payload_bytes() as usize
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new(TAG_FRAME, self.encoded_len());
+        let mut w = open_kv_writer(TAG_FRAME, self.precision, self.encoded_len());
         w.u32(self.block as u32);
         w.u32(self.kv_heads as u32);
         w.u32(self.head_dim as u32);
         w.u32(self.meta.len() as u32);
         write_meta(&mut w, &self.meta);
-        w.f32s(&self.k);
-        w.f32s(&self.v);
+        write_kv_payload(
+            &mut w,
+            self.precision,
+            self.kv_heads * self.head_dim,
+            self.meta.len(),
+            &self.k,
+            &self.v,
+            &self.qscale_k,
+            &self.qscale_v,
+        );
         w.finish()
     }
 
     pub fn decode(b: &[u8]) -> Result<Self, WireError> {
-        let mut r = Reader::open(b, TAG_FRAME)?;
+        let (mut r, precision) = Reader::open_quant(b, TAG_FRAME)?;
         let block = r.u32()? as usize;
         let kv_heads = r.u32()? as usize;
         let head_dim = r.u32()? as usize;
         let rows = r.u32()? as usize;
         let elems = row_elems(rows, kv_heads, head_dim)?;
         let meta = read_meta(&mut r, rows)?;
-        let k = r.f32s(elems)?;
-        let v = r.f32s(elems)?;
+        let payload = read_kv_payload(&mut r, precision, rows, kv_heads * head_dim, elems)?;
         r.done()?;
-        Ok(Self { block, kv_heads, head_dim, meta, k, v })
+        Ok(Self {
+            block,
+            kv_heads,
+            head_dim,
+            meta,
+            k: payload.k,
+            v: payload.v,
+            precision,
+            qscale_k: payload.qscale_k,
+            qscale_v: payload.qscale_v,
+        })
     }
 }
 
@@ -607,9 +1178,16 @@ pub struct GlobalKvDeltaFrame {
     /// K/V the attendee contributed this round.
     pub retain: Vec<u32>,
     /// Shipped key rows — the transmitted rows of other participants, in
-    /// meta order, packed `[shipped × kv_heads × head_dim]`.
+    /// meta order, packed `[shipped × kv_heads × head_dim]`.  Always
+    /// dequantized f32 — quantization is an encode-time transform.
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Wire precision of the shipped K/V payload (see [`KvPrecision`]).
+    pub precision: KvPrecision,
+    /// Per-*shipped*-row int8 wire scales as decoded (empty on fresh
+    /// deltas); re-encode reuses them so decode→encode is bit-exact.
+    pub qscale_k: Vec<f32>,
+    pub qscale_v: Vec<f32>,
 }
 
 impl GlobalKvDeltaFrame {
@@ -642,6 +1220,11 @@ impl GlobalKvDeltaFrame {
             retain,
             k,
             v,
+            // Inherit the wire precision so the delta bills (and ships)
+            // exactly what the full frame would for this attendee.
+            precision: frame.precision,
+            qscale_k: Vec::new(),
+            qscale_v: Vec::new(),
         }
     }
 
@@ -680,7 +1263,16 @@ impl GlobalKvDeltaFrame {
             retain,
             k,
             v,
+            precision: KvPrecision::F32,
+            qscale_k: Vec::new(),
+            qscale_v: Vec::new(),
         }
+    }
+
+    /// Set the wire precision (builder-style, for senders).
+    pub fn with_precision(mut self, precision: KvPrecision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// Total rows of the reassembled frame.
@@ -697,10 +1289,12 @@ impl GlobalKvDeltaFrame {
             .count()
     }
 
-    /// Data-plane bytes: only the shipped rows.  Always equals the
-    /// source frame's [`GlobalKvFrame::payload_bytes_for`] the attendee.
+    /// Data-plane bytes: only the shipped rows, at the wire precision
+    /// (int8 scales included).  Always equals the source frame's
+    /// [`GlobalKvFrame::payload_bytes_for`] the attendee at matched
+    /// precision.
     pub fn payload_bytes(&self) -> u64 {
-        4 * (self.k.len() + self.v.len()) as u64
+        (self.shipped_rows() * self.precision.wire_row_bytes(self.kv_heads, self.head_dim)) as u64
     }
 
     /// Control-plane bytes: header, metadata, and the retain-list.
@@ -710,16 +1304,18 @@ impl GlobalKvDeltaFrame {
 
     /// Exact length of [`GlobalKvDeltaFrame::encode`]'s output.
     pub fn encoded_len(&self) -> usize {
+        let ver_extra = usize::from(self.precision != KvPrecision::F32);
         HEADER_BYTES
+            + ver_extra
             + 6 * 4
             + self.meta.len() * META_ENTRY_BYTES
             + 4
             + self.retain.len() * 4
-            + (self.k.len() + self.v.len()) * 4
+            + self.payload_bytes() as usize
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new(TAG_DELTA_FRAME, self.encoded_len());
+        let mut w = open_kv_writer(TAG_DELTA_FRAME, self.precision, self.encoded_len());
         w.u32(self.block as u32);
         w.u32(self.epoch as u32);
         w.u32(self.attendee as u32);
@@ -731,8 +1327,16 @@ impl GlobalKvDeltaFrame {
         for &id in &self.retain {
             w.u32(id);
         }
-        w.f32s(&self.k);
-        w.f32s(&self.v);
+        write_kv_payload(
+            &mut w,
+            self.precision,
+            self.kv_heads * self.head_dim,
+            self.shipped_rows(),
+            &self.k,
+            &self.v,
+            &self.qscale_k,
+            &self.qscale_v,
+        );
         w.finish()
     }
 
@@ -743,7 +1347,7 @@ impl GlobalKvDeltaFrame {
     /// every length field is bounded against the buffer before any
     /// allocation.
     pub fn decode(b: &[u8]) -> Result<Self, WireError> {
-        let mut r = Reader::open(b, TAG_DELTA_FRAME)?;
+        let (mut r, precision) = Reader::open_quant(b, TAG_DELTA_FRAME)?;
         let block = r.u32()? as usize;
         let epoch = r.u32()? as usize;
         let attendee = r.u32()? as usize;
@@ -765,10 +1369,22 @@ impl GlobalKvDeltaFrame {
             .filter(|m| m.transmitted && m.owner != attendee)
             .count();
         let elems = row_elems(shipped, kv_heads, head_dim)?;
-        let k = r.f32s(elems)?;
-        let v = r.f32s(elems)?;
+        let payload = read_kv_payload(&mut r, precision, shipped, kv_heads * head_dim, elems)?;
         r.done()?;
-        Ok(Self { block, epoch, attendee, kv_heads, head_dim, meta, retain, k, v })
+        Ok(Self {
+            block,
+            epoch,
+            attendee,
+            kv_heads,
+            head_dim,
+            meta,
+            retain,
+            k: payload.k,
+            v: payload.v,
+            precision,
+            qscale_k: payload.qscale_k,
+            qscale_v: payload.qscale_v,
+        })
     }
 
     /// Reassemble the full downlink frame from this delta plus the
@@ -844,6 +1460,12 @@ impl GlobalKvDeltaFrame {
             meta: self.meta.clone(),
             k,
             v,
+            // The reassembled frame inherits the wire precision so its
+            // byte accounting stays consistent; it is a local value-plane
+            // object (never re-encoded), so no wire scales carry over.
+            precision: self.precision,
+            qscale_k: Vec::new(),
+            qscale_v: Vec::new(),
         })
     }
 }
@@ -1234,5 +1856,204 @@ mod tests {
         let mut broken = f.clone();
         broken.k.pop();
         assert!(broken.to_global(4).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // Quantized wire rows (kv_precision)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn kv_precision_parses_and_sizes_rows() {
+        for (s, p) in [
+            ("f32", KvPrecision::F32),
+            ("f16", KvPrecision::F16),
+            ("int8", KvPrecision::Int8),
+        ] {
+            assert_eq!(KvPrecision::from_str_opt(s), Some(p));
+            assert_eq!(p.as_str(), s);
+        }
+        assert_eq!(KvPrecision::from_str_opt("f8"), None);
+        assert_eq!(KvPrecision::default(), KvPrecision::F32);
+        // Wire bytes per K+V row pair at the fixture geometry (2 heads ×
+        // 24 dims): strictly decreasing f32 → f16 → int8, with int8 a
+        // ≥ 3.5× cut even after paying for its two per-row scales.
+        let f32b = KvPrecision::F32.wire_row_bytes(2, 24);
+        let f16b = KvPrecision::F16.wire_row_bytes(2, 24);
+        let i8b = KvPrecision::Int8.wire_row_bytes(2, 24);
+        assert_eq!(f32b, GlobalKv::row_bytes(2, 24));
+        assert!(f32b > f16b && f16b > i8b, "{f32b} {f16b} {i8b}");
+        assert!(f32b as f64 / i8b as f64 >= 3.5, "{f32b}/{i8b}");
+    }
+
+    #[test]
+    fn f16_conversion_saturates_and_roundtrips_finite_halves() {
+        // Every finite half value survives f16 -> f32 -> f16 bit-exactly
+        // (this is what makes f16 decode canonical).
+        for bits in 0..=u16::MAX {
+            let x = f16_bits_to_f32(bits);
+            if x.is_finite() {
+                assert_eq!(f32_to_f16_bits(x), bits, "half bits {bits:#06x}");
+            }
+        }
+        // Overflow saturates to ±65504 instead of inf; NaN maps to zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0e9)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1.0e9)), -65504.0);
+        assert_eq!(f32_to_f16_bits(f32::NAN), 0);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7BFF);
+        // Values exactly representable in half are preserved.
+        for x in [0.0f32, -0.0, 1.0, -2.5, 0.125, 65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x);
+        }
+    }
+
+    /// Quantized messages decode to exactly what [`requantize_row`]
+    /// produces (the value-plane contract the in-process session relies
+    /// on), and decode→encode is bit-exact (canonical).
+    #[test]
+    fn quant_contribution_decodes_to_requantized_rows_and_is_canonical() {
+        let k = tensor(3, 2, 3, 1.375);
+        let v = tensor(3, 2, 3, -0.631);
+        for precision in [KvPrecision::F16, KvPrecision::Int8] {
+            let c = KvContribution::from_rows(
+                2,
+                1,
+                &k,
+                &v,
+                &[5, 6, 7],
+                &[true, true, false],
+                Some(&[0.25, 0.5, 0.75]),
+            )
+            .with_precision(precision);
+            let bytes = c.encode();
+            assert_eq!(bytes.len(), c.encoded_len(), "{precision:?}");
+            assert_eq!(bytes[2], WIRE_VERSION_QUANT);
+            assert!(bytes.len() < c.clone().with_precision(KvPrecision::F32).encode().len());
+            let back = KvContribution::decode(&bytes).unwrap();
+            assert_eq!(back.precision, precision);
+            assert_eq!(back.pos, c.pos);
+            assert_eq!(back.relevance, c.relevance);
+            // Control fields exact; data plane == requantized original.
+            let row_len = 6usize;
+            for (r, chunk) in c.k.chunks(row_len).enumerate() {
+                let mut want = chunk.to_vec();
+                requantize_row(&mut want, precision);
+                assert_eq!(&back.k[r * row_len..(r + 1) * row_len], &want[..], "{precision:?} k row {r}");
+            }
+            assert_eq!(back.encode(), bytes, "{precision:?} not canonical");
+            assert_eq!(
+                back.payload_bytes(),
+                (c.rows() * precision.wire_row_bytes(2, 3)) as u64
+            );
+            assert_eq!(back.payload_bytes() + back.control_bytes(), bytes.len() as u64);
+        }
+    }
+
+    #[test]
+    fn quant_frame_and_delta_bill_and_roundtrip_consistently() {
+        let (frame, k0, v0) = two_party_frame();
+        for precision in [KvPrecision::F16, KvPrecision::Int8] {
+            let qf = frame.clone().with_precision(precision);
+            let bytes = qf.encode();
+            assert_eq!(bytes.len(), qf.encoded_len());
+            let back = GlobalKvFrame::decode(&bytes).unwrap();
+            assert_eq!(back.precision, precision);
+            assert_eq!(back.meta, qf.meta);
+            assert_eq!(back.encode(), bytes, "{precision:?} frame not canonical");
+            // Delta cut from the quantized frame bills the same rows.
+            for attendee in 0..2usize {
+                let d = GlobalKvDeltaFrame::from_frame(&qf, 7, attendee);
+                assert_eq!(d.precision, precision);
+                assert_eq!(d.payload_bytes(), qf.payload_bytes_for(attendee));
+                let dbytes = d.encode();
+                assert_eq!(dbytes.len(), d.encoded_len());
+                let dback = GlobalKvDeltaFrame::decode(&dbytes).unwrap();
+                assert_eq!(dback.encode(), dbytes, "{precision:?} delta not canonical");
+                // Shipped rows reassemble to the requantized originals;
+                // retained own rows come back raw (the node requantizes
+                // its transmitted ones separately, from the frame's
+                // precision).
+                let (own_k, own_v, own_rows) = if attendee == 0 {
+                    (k0.data(), v0.data(), 3)
+                } else {
+                    (&frame.k[6..10], &frame.v[6..10], 2)
+                };
+                let re = dback.reassemble(own_k, own_v, own_rows).unwrap();
+                let row_len = 2usize;
+                for (i, m) in frame.meta.iter().enumerate() {
+                    if m.owner != attendee && m.transmitted {
+                        let mut want = frame.k[i * row_len..(i + 1) * row_len].to_vec();
+                        requantize_row(&mut want, precision);
+                        assert_eq!(
+                            &re.k[i * row_len..(i + 1) * row_len],
+                            &want[..],
+                            "{precision:?} shipped row {i}"
+                        );
+                    }
+                }
+            }
+            // Quantized payloads are strictly smaller than f32's.
+            assert!(qf.full_payload_bytes() < frame.full_payload_bytes());
+        }
+    }
+
+    #[test]
+    fn quant_all_zero_rows_use_zero_scale() {
+        let k = HostTensor::zeros(&[2, 1, 4]);
+        let c = KvContribution::from_rows(0, 0, &k, &k.clone(), &[0, 1], &[true, true], None)
+            .with_precision(KvPrecision::Int8);
+        let bytes = c.encode();
+        let back = KvContribution::decode(&bytes).unwrap();
+        assert!(back.qscale_k.iter().all(|&s| s == 0.0));
+        assert!(back.k.iter().all(|&x| x == 0.0));
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn hostile_int8_scales_and_levels_rejected() {
+        let k = tensor(2, 1, 2, 3.0);
+        let c = KvContribution::from_rows(0, 0, &k, &k.clone(), &[0, 1], &[true, true], None)
+            .with_precision(KvPrecision::Int8);
+        let bytes = c.encode();
+        // scale_k[0] sits after header+precision + 5 u32s + pos + rel.
+        let scale_at = HEADER_BYTES + 1 + 5 * 4 + 2 * 8;
+        for hostile in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0, 1.0e-45, f32::MAX] {
+            let mut bad = bytes.clone();
+            bad[scale_at..scale_at + 4].copy_from_slice(&hostile.to_le_bytes());
+            assert!(
+                KvContribution::decode(&bad).is_err(),
+                "scale {hostile:e} must be rejected"
+            );
+        }
+        // Zero scale over nonzero levels is inconsistent.
+        let mut bad = bytes.clone();
+        bad[scale_at..scale_at + 4].copy_from_slice(&0.0f32.to_le_bytes());
+        assert!(KvContribution::decode(&bad).is_err(), "zero scale, nonzero levels");
+        // Level -128 cannot re-encode canonically under the ±127 clamp.
+        let level_at = scale_at + 4 * 4; // past the four scales
+        let mut bad = bytes.clone();
+        bad[level_at] = 0x80;
+        assert!(KvContribution::decode(&bad).is_err(), "level -128");
+        // Version 2 with an f32 (or unknown) precision byte is not a
+        // valid encoding — f32 must ship as version 1.
+        for p in [0u8, 3, 255] {
+            let mut bad = bytes.clone();
+            bad[3] = p;
+            assert!(KvContribution::decode(&bad).is_err(), "precision byte {p}");
+        }
+        // Unknown versions stay rejected.
+        let mut bad = bytes;
+        bad[2] = 3;
+        assert!(matches!(KvContribution::decode(&bad), Err(WireError::Version(3))));
+    }
+
+    #[test]
+    fn requantize_row_is_idempotent() {
+        for precision in [KvPrecision::F32, KvPrecision::F16, KvPrecision::Int8] {
+            let mut row = vec![0.73f32, -1.9, 0.0, 2.44, -0.031, 5.5];
+            requantize_row(&mut row, precision);
+            let once = row.clone();
+            requantize_row(&mut row, precision);
+            assert_eq!(row, once, "{precision:?}");
+        }
     }
 }

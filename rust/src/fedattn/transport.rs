@@ -84,8 +84,8 @@ use crate::fedattn::kv::GlobalKv;
 use crate::fedattn::masks::global_mask;
 use crate::fedattn::node::{Participant, ParticipantNode};
 use crate::fedattn::protocol::{
-    wire_kind, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, Reader, TokenBroadcast,
-    WireError, WireKind, Writer,
+    requantize_row, wire_kind, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, KvPrecision,
+    Reader, TokenBroadcast, WireError, WireKind, Writer, WIRE_VERSION_QUANT,
 };
 use crate::fedattn::relevance::attention_mass;
 use crate::fedattn::schedule::SyncSchedule;
@@ -683,6 +683,11 @@ pub enum CtrlMsg {
         ids: Vec<i32>,
         /// Global positions of the kept tokens.
         pos: Vec<i32>,
+        /// Wire precision for the session's K/V payloads; the node stamps
+        /// its uplink contributions with it.  `F32` keeps the legacy
+        /// version-1 handshake bytes, reduced precisions ride the
+        /// version-2 layout (one extra precision byte after the header).
+        kv_precision: KvPrecision,
     },
     /// Node → driver: the participant is built; echoes identity and the
     /// node-side model geometry so a mismatched artifact set fails the
@@ -754,6 +759,10 @@ pub enum CtrlMsg {
         resume_block: usize,
         /// Number of `Resync` frames that follow immediately.
         resync_rounds: usize,
+        /// Wire precision for the session's K/V payloads (same contract
+        /// as [`CtrlMsg::Join`]; a rejoining node must keep stamping its
+        /// contributions the way the live cohort expects).
+        kv_precision: KvPrecision,
     },
     /// Node → driver: replay finished; same geometry echo as `JoinAck`
     /// so a drifted artifact set fails the readmission instead of
@@ -789,6 +798,23 @@ fn read_bool(r: &mut Reader<'_>, what: &str) -> Result<bool, WireError> {
     }
 }
 
+/// Writer for the two control frames that carry a KV precision
+/// (`Join`/`Rejoin`).  `F32` keeps the legacy version-1 header
+/// byte-for-byte — pre-quantization peers and goldens are untouched —
+/// while reduced precisions write the version-2 header plus one
+/// precision byte, mirroring the data plane's version gate so each
+/// message still has exactly one canonical encoding.
+fn ctrl_kv_writer(tag: u8, kv_precision: KvPrecision, cap: usize) -> Writer {
+    match kv_precision {
+        KvPrecision::F32 => Writer::with_magic(CTRL_MAGIC, tag, cap),
+        p => {
+            let mut w = Writer::with_magic_version(CTRL_MAGIC, tag, WIRE_VERSION_QUANT, cap + 1);
+            w.u8(p.wire_byte());
+            w
+        }
+    }
+}
+
 impl CtrlMsg {
     pub fn name(&self) -> &'static str {
         match self {
@@ -809,9 +835,9 @@ impl CtrlMsg {
 
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos } => {
+            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos, kv_precision } => {
                 let cap = 4 + 2 + 8 + 8 + (ids.len() + pos.len()) * 4;
-                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_JOIN, cap);
+                let mut w = ctrl_kv_writer(CTRL_JOIN, *kv_precision, cap);
                 w.u32(*id as u32);
                 w.u8(*keep_caches as u8);
                 match round_deadline_ms {
@@ -898,9 +924,10 @@ impl CtrlMsg {
                 pos,
                 resume_block,
                 resync_rounds,
+                kv_precision,
             } => {
                 let cap = 4 + 2 + 8 + 16 + (ids.len() + pos.len()) * 4;
-                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_REJOIN, cap);
+                let mut w = ctrl_kv_writer(CTRL_REJOIN, *kv_precision, cap);
                 w.u32(*id as u32);
                 w.u8(*keep_caches as u8);
                 match round_deadline_ms {
@@ -944,7 +971,21 @@ impl CtrlMsg {
             return Err(WireError::BadTag { expected: CTRL_MAGIC, got: magic });
         }
         let tag = b.get(1).copied().ok_or(WireError::Truncated(b.len()))?;
-        let mut r = Reader::open_with_magic(b, CTRL_MAGIC, tag)?;
+        // Only `Join`/`Rejoin` carry a KV precision and thus may arrive
+        // as version 2 (precision byte right after the header); every
+        // other control tag is strictly version 1 so each message keeps
+        // exactly one canonical encoding.
+        let (mut r, kv_precision) = if tag == CTRL_JOIN || tag == CTRL_REJOIN {
+            let (mut r, version) = Reader::open_with_magic_versioned(b, CTRL_MAGIC, tag)?;
+            let precision = if version == WIRE_VERSION_QUANT {
+                KvPrecision::from_wire_byte(r.u8()?)?
+            } else {
+                KvPrecision::F32
+            };
+            (r, precision)
+        } else {
+            (Reader::open_with_magic(b, CTRL_MAGIC, tag)?, KvPrecision::F32)
+        };
         let msg = match tag {
             CTRL_JOIN => {
                 let id = r.u32()? as usize;
@@ -958,7 +999,7 @@ impl CtrlMsg {
                 let ids = r.i32s(n_ids)?;
                 let n_pos = r.u32()? as usize;
                 let pos = r.i32s(n_pos)?;
-                CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos }
+                CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos, kv_precision }
             }
             CTRL_JOIN_ACK => CtrlMsg::JoinAck {
                 id: r.u32()? as usize,
@@ -1030,6 +1071,7 @@ impl CtrlMsg {
                     pos,
                     resume_block,
                     resync_rounds,
+                    kv_precision,
                 }
             }
             CTRL_REJOIN_ACK => CtrlMsg::RejoinAck {
@@ -1082,6 +1124,11 @@ pub struct RemoteParticipant {
     /// `(block, epoch)` of the last attendee sync turn sent, i.e. the
     /// fresh-KV generation the node currently holds.
     fresh_sent: Option<(usize, usize)>,
+    /// Wire precision of the session's K/V payloads: announced in the
+    /// handshake, stamped on every downlink frame, and required of every
+    /// uplink contribution (a mismatch is a protocol violation the
+    /// driver demotes on).
+    kv_precision: KvPrecision,
 }
 
 impl RemoteParticipant {
@@ -1101,12 +1148,20 @@ impl RemoteParticipant {
             delta_frames: true,
             epoch: 0,
             fresh_sent: None,
+            kv_precision: KvPrecision::F32,
         }
     }
 
     /// Enable/disable delta downlink frames (default on).
     pub fn set_delta_frames(&mut self, on: bool) {
         self.delta_frames = on;
+    }
+
+    /// Set the session's KV wire precision (default [`KvPrecision::F32`]);
+    /// must be called before [`RemoteParticipant::join_send`] so the
+    /// handshake announces it to the node.
+    pub fn set_kv_precision(&mut self, precision: KvPrecision) {
+        self.kv_precision = precision;
     }
 
     pub(crate) fn id(&self) -> usize {
@@ -1143,6 +1198,7 @@ impl RemoteParticipant {
             round_deadline_ms,
             ids: ids.to_vec(),
             pos: self.pos.clone(),
+            kv_precision: self.kv_precision,
         };
         self.transport.send(&msg.encode())?;
         Ok(())
@@ -1204,6 +1260,7 @@ impl RemoteParticipant {
             pos: self.pos.clone(),
             resume_block,
             resync_rounds: resync.len(),
+            kv_precision: self.kv_precision,
         };
         self.transport.send(&msg.encode())?;
         for (block, epoch, frame) in resync {
@@ -1295,6 +1352,13 @@ impl RemoteParticipant {
             c.block,
             c.owner
         );
+        anyhow::ensure!(
+            c.precision == self.kv_precision,
+            "contribution from node {} shipped {} rows, session runs {}",
+            self.id,
+            c.precision.as_str(),
+            self.kv_precision.as_str()
+        );
         Ok(c)
     }
 
@@ -1308,15 +1372,18 @@ impl RemoteParticipant {
             // the hot path) and ship only what the node is missing.  The
             // delta's data plane is exactly the downlink the round was
             // billed.
-            let delta = GlobalKvDeltaFrame::from_global(block, gkv, self.epoch, self.id);
+            let delta = GlobalKvDeltaFrame::from_global(block, gkv, self.epoch, self.id)
+                .with_precision(self.kv_precision);
             debug_assert_eq!(
                 delta.payload_bytes(),
-                GlobalKvFrame::from_global(block, gkv).payload_bytes_for(self.id),
+                GlobalKvFrame::from_global(block, gkv)
+                    .with_precision(self.kv_precision)
+                    .payload_bytes_for(self.id),
                 "delta payload drifted from the billed downlink"
             );
             self.transport.send(&delta.encode())?;
         } else {
-            let frame = GlobalKvFrame::from_global(block, gkv);
+            let frame = GlobalKvFrame::from_global(block, gkv).with_precision(self.kv_precision);
             self.transport.send(&frame.encode())?;
         }
         Ok(())
@@ -1432,6 +1499,12 @@ struct FreshRound {
 struct EngineNode {
     node: ParticipantNode,
     fresh: Option<FreshRound>,
+    /// Session KV wire precision, announced in the `Join`/`Rejoin`
+    /// handshake: uplink contributions are stamped with it, and the
+    /// local (non-attendee) cache path re-quantizes its transmitted
+    /// rows so every participant's caches hold the same values the
+    /// cohort decoded off the wire.
+    kv_precision: KvPrecision,
 }
 
 /// Restore the attendee's own rows in a full downlink frame from the
@@ -1475,7 +1548,31 @@ fn substitute_own_rows(
         f.k[dst.clone()].copy_from_slice(&fresh_k.data()[src.clone()]);
         f.v[dst].copy_from_slice(&fresh_v.data()[src]);
     }
+    requantize_own_tx_rows(f, me);
     Ok(())
+}
+
+/// Re-quantize an attendee's own *transmitted* rows to the frame's wire
+/// precision after they were restored from the node's full-precision
+/// fresh KV.  The rest of the cohort decoded those rows off the wire, so
+/// the owner must read the identical quantized values from the round —
+/// [`requantize_row`] reproduces the encode→decode value map exactly
+/// (and is idempotent, so rows that already went through a wire decode
+/// are unchanged).  Untransmitted own rows never crossed the wire and
+/// stay raw; at `F32` this is a no-op.
+fn requantize_own_tx_rows(f: &mut GlobalKvFrame, me: usize) {
+    if f.precision == KvPrecision::F32 {
+        return;
+    }
+    let row_len = f.kv_heads * f.head_dim;
+    for (j, m) in f.meta.iter().enumerate() {
+        if m.owner != me || !m.transmitted {
+            continue;
+        }
+        let rows = j * row_len..(j + 1) * row_len;
+        requantize_row(&mut f.k[rows.clone()], f.precision);
+        requantize_row(&mut f.v[rows], f.precision);
+    }
 }
 
 /// Resolve a delta downlink against the node's fresh KV for the pending
@@ -1510,11 +1607,15 @@ fn resolve_delta(
             )
         })?;
     let row_len = fresh.k.shape()[1] * fresh.k.shape()[2];
-    Ok(d.reassemble(
+    let mut full = d.reassemble(
         &fresh.k.data()[..valid * row_len],
         &fresh.v.data()[..valid * row_len],
         valid,
-    )?)
+    )?;
+    // Retained own rows were copied from the raw fresh KV; bring the
+    // transmitted ones back to the wire values the cohort decoded.
+    requantize_own_tx_rows(&mut full, node_id);
+    Ok(full)
 }
 
 /// The node-side half of the wire protocol: owns one participant's full
@@ -1638,7 +1739,7 @@ impl NodeHost {
             }
         }
         match CtrlMsg::decode(frame)? {
-            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos } => {
+            CtrlMsg::Join { id, keep_caches, round_deadline_ms, ids, pos, kv_precision } => {
                 anyhow::ensure!(en.is_none(), "duplicate join for participant {id}");
                 anyhow::ensure!(
                     ids.len() == pos.len(),
@@ -1666,7 +1767,7 @@ impl NodeHost {
                     kv_heads: md.n_kv_heads,
                     head_dim: md.head_dim,
                 };
-                *en = Some(EngineNode { node, fresh: None });
+                *en = Some(EngineNode { node, fresh: None, kv_precision });
                 self.transport.send(&ack.encode())?;
                 Ok(false)
             }
@@ -1678,6 +1779,7 @@ impl NodeHost {
                 pos,
                 resume_block,
                 resync_rounds,
+                kv_precision,
             } => {
                 // A rejoin arrives on a *fresh* transport: the old
                 // connection died, so this serve loop has no prior state
@@ -1712,7 +1814,7 @@ impl NodeHost {
                 self.transport
                     .set_recv_timeout(read_timeout_for_deadline(round_deadline_ms))?;
                 let node = ParticipantNode::build(&self.engine, id, &ids, pos, keep_caches)?;
-                let mut enode = EngineNode { node, fresh: None };
+                let mut enode = EngineNode { node, fresh: None, kv_precision };
                 // Collect the announced resync frames up front (each an
                 // aggregated GlobalKvFrame nested in a control frame —
                 // untrusted input, validated before any replay runs).
@@ -1827,7 +1929,10 @@ impl NodeHost {
                     // arrives — the hidden state advances in attend().
                     let (q, k, v) =
                         self.engine.qkv_project(block, &en.node.x, &en.node.pos_pad)?;
-                    let c = en.node.contribute(block, &k, &v, &tx, rel64.as_deref())?;
+                    let c = en
+                        .node
+                        .contribute(block, &k, &v, &tx, rel64.as_deref())?
+                        .with_precision(en.kv_precision);
                     self.transport.send(&c.encode())?;
                     en.fresh = Some(FreshRound { block, epoch, want_mass, q, k, v });
                 } else {
@@ -1836,7 +1941,10 @@ impl NodeHost {
                     // in-process driver.
                     let (xo, k, v) =
                         self.engine.block_fused(block, &en.node.x, &en.node.pos_pad, &en.node.lmask)?;
-                    let c = en.node.contribute(block, &k, &v, &tx, rel64.as_deref())?;
+                    let c = en
+                        .node
+                        .contribute(block, &k, &v, &tx, rel64.as_deref())?
+                        .with_precision(en.kv_precision);
                     self.transport.send(&c.encode())?;
                     en.node.set_hidden(xo);
                     if en.node.keeps_caches() {
@@ -2086,6 +2194,7 @@ mod tests {
                 round_deadline_ms: Some(750.5),
                 ids: vec![7, 8, 9],
                 pos: vec![3, 4, 5],
+                kv_precision: KvPrecision::F32,
             },
             CtrlMsg::Join {
                 id: 0,
@@ -2093,6 +2202,16 @@ mod tests {
                 round_deadline_ms: None,
                 ids: vec![],
                 pos: vec![],
+                kv_precision: KvPrecision::F32,
+            },
+            // Reduced precisions ride the version-2 handshake layout.
+            CtrlMsg::Join {
+                id: 1,
+                keep_caches: true,
+                round_deadline_ms: None,
+                ids: vec![3],
+                pos: vec![0],
+                kv_precision: KvPrecision::F16,
             },
             CtrlMsg::JoinAck { id: 2, valid: 3, n_layers: 8, kv_heads: 2, head_dim: 24 },
             CtrlMsg::AdvanceLocal { block: 5 },
@@ -2125,6 +2244,7 @@ mod tests {
                 pos: vec![6, 7],
                 resume_block: 4,
                 resync_rounds: 2,
+                kv_precision: KvPrecision::F32,
             },
             CtrlMsg::Rejoin {
                 id: 0,
@@ -2134,6 +2254,7 @@ mod tests {
                 pos: vec![],
                 resume_block: 0,
                 resync_rounds: 0,
+                kv_precision: KvPrecision::Int8,
             },
             CtrlMsg::RejoinAck { id: 1, valid: 2, n_layers: 8, kv_heads: 2, head_dim: 24 },
             CtrlMsg::Resync { block: 3, epoch: 9, frame: vec![0xFA, 2, 1, 0, 7] },
@@ -2146,6 +2267,43 @@ mod tests {
             // bytes.
             assert_eq!(CtrlMsg::decode(&bytes).unwrap().encode(), bytes);
         }
+    }
+
+    /// The handshake version gate: `f32` sessions keep the legacy
+    /// version-1 bytes (pre-quantization peers decode them unchanged),
+    /// reduced precisions ride version 2, and only `Join`/`Rejoin` may
+    /// arrive as version 2 at all.
+    #[test]
+    fn ctrl_join_kv_precision_version_gate() {
+        let join = |kv_precision| CtrlMsg::Join {
+            id: 3,
+            keep_caches: true,
+            round_deadline_ms: Some(100.0),
+            ids: vec![1, 2],
+            pos: vec![0, 1],
+            kv_precision,
+        };
+        let legacy = join(KvPrecision::F32).encode();
+        assert_eq!(legacy[2], 1, "f32 join must stay version 1");
+        for p in [KvPrecision::F16, KvPrecision::Int8] {
+            let bytes = join(p).encode();
+            assert_eq!(bytes[2], 2, "{} join must be version 2", p.as_str());
+            // One extra byte: the precision, right after the header.
+            assert_eq!(bytes.len(), legacy.len() + 1);
+            assert_eq!(&bytes[4..], &legacy[3..]);
+        }
+        // Version 2 with precision byte 0 (f32) is non-canonical: f32
+        // has exactly one encoding, the version-1 one.
+        let mut bad = join(KvPrecision::F16).encode();
+        bad[3] = 0;
+        assert!(CtrlMsg::decode(&bad).is_err());
+        bad[3] = 3;
+        assert!(CtrlMsg::decode(&bad).is_err());
+        // Control tags without a precision field reject version 2
+        // outright.
+        let mut adv = CtrlMsg::AdvanceLocal { block: 1 }.encode();
+        adv[2] = 2;
+        assert!(CtrlMsg::decode(&adv).is_err());
     }
 
     #[test]
@@ -2172,31 +2330,36 @@ mod tests {
         msg.extend_from_slice(&0u32.to_le_bytes());
         msg.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(CtrlMsg::decode(&msg).is_err());
-        // Every truncation of a valid message errors cleanly.
-        let full = CtrlMsg::Join {
-            id: 1,
-            keep_caches: true,
-            round_deadline_ms: Some(250.0),
-            ids: vec![5, 6],
-            pos: vec![0, 1],
-        }
-        .encode();
-        for cut in 0..full.len() {
-            assert!(CtrlMsg::decode(&full[..cut]).is_err(), "cut at {cut}");
-        }
-        // The rejoin handshake frames truncate just as cleanly.
-        let full = CtrlMsg::Rejoin {
-            id: 1,
-            keep_caches: true,
-            round_deadline_ms: Some(250.0),
-            ids: vec![5, 6],
-            pos: vec![0, 1],
-            resume_block: 3,
-            resync_rounds: 1,
-        }
-        .encode();
-        for cut in 0..full.len() {
-            assert!(CtrlMsg::decode(&full[..cut]).is_err(), "rejoin cut at {cut}");
+        // Every truncation of a valid message errors cleanly — at both
+        // handshake wire versions.
+        for kv_precision in [KvPrecision::F32, KvPrecision::Int8] {
+            let full = CtrlMsg::Join {
+                id: 1,
+                keep_caches: true,
+                round_deadline_ms: Some(250.0),
+                ids: vec![5, 6],
+                pos: vec![0, 1],
+                kv_precision,
+            }
+            .encode();
+            for cut in 0..full.len() {
+                assert!(CtrlMsg::decode(&full[..cut]).is_err(), "cut at {cut}");
+            }
+            // The rejoin handshake frames truncate just as cleanly.
+            let full = CtrlMsg::Rejoin {
+                id: 1,
+                keep_caches: true,
+                round_deadline_ms: Some(250.0),
+                ids: vec![5, 6],
+                pos: vec![0, 1],
+                resume_block: 3,
+                resync_rounds: 1,
+                kv_precision,
+            }
+            .encode();
+            for cut in 0..full.len() {
+                assert!(CtrlMsg::decode(&full[..cut]).is_err(), "rejoin cut at {cut}");
+            }
         }
         let full = CtrlMsg::Resync { block: 2, epoch: 4, frame: vec![1, 2, 3, 4] }.encode();
         for cut in 0..full.len() {
@@ -2446,6 +2609,30 @@ mod tests {
         assert!(substitute_own_rows(&mut bad, 0, &own, &fr.v, 2).is_err());
     }
 
+    /// On a quantized frame, restoring own rows re-quantizes exactly the
+    /// *transmitted* ones — the values every other participant decoded
+    /// off the wire — while untransmitted own rows (never on the wire)
+    /// keep the raw fresh KV.
+    #[test]
+    fn substitute_own_rows_requantizes_transmitted_rows() {
+        let mut own = HostTensor::zeros(&[2, 1, 2]);
+        own.row_mut(0).copy_from_slice(&[0.3, -1.7]);
+        own.row_mut(1).copy_from_slice(&[2.5, 0.9]);
+        let zeros = HostTensor::zeros(&[2, 1, 2]);
+        let g = crate::fedattn::kv::GlobalKv::pack(
+            &[(&zeros, &zeros.clone(), &[0, 1][..], 2, &[true, false][..])],
+            2,
+        )
+        .unwrap();
+        let mut f = GlobalKvFrame::from_global(0, &g).with_precision(KvPrecision::Int8);
+        substitute_own_rows(&mut f, 0, &own, &own.clone(), 2).unwrap();
+        let mut want_tx = own.row(0).to_vec();
+        requantize_row(&mut want_tx, KvPrecision::Int8);
+        assert_eq!(&f.k[..2], &want_tx[..], "transmitted row must hold wire values");
+        assert_ne!(&f.k[..2], own.row(0), "int8 must actually change these values");
+        assert_eq!(&f.k[2..4], own.row(1), "untransmitted row stays raw");
+    }
+
     #[test]
     fn ctrl_fuzz_never_panics() {
         let mut rng = Xoshiro256ss::new(0xC7_21);
@@ -2457,7 +2644,10 @@ mod tests {
             if rng.bernoulli(0.5) && bytes.len() >= 3 {
                 bytes[0] = CTRL_MAGIC;
                 bytes[1] = 1 + rng.below(12) as u8;
-                bytes[2] = 1; // wire version
+                // Both live wire versions: v2 exercises the quantized
+                // handshake paths (precision byte on Join/Rejoin, outright
+                // rejection everywhere else).
+                bytes[2] = 1 + rng.below(2) as u8;
             }
             if let Ok(msg) = CtrlMsg::decode(&bytes) {
                 // Canonical: anything that decodes re-encodes identically.

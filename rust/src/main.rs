@@ -84,6 +84,10 @@ fn print_help() {
            --kv-ratio <r>             sparse KV-exchange keep ratio (random policies)\n\
            --kv-budget-rows <k>       row budget for recent-budget / top-k-relevance\n\
            --kv-bytes <b>             total bytes per sync round for byte-budget\n\
+           --kv-precision <p>         f32|f16|int8 wire precision of K/V rows\n\
+                                      (default f32 = exact; reduced precisions\n\
+                                      quantize rows at encode time with per-row\n\
+                                      scales and cut uplink+downlink bytes)\n\
            --local-ratio <r>          sparse local-attention keep ratio\n\
            --dropout <p>              per-node attendance dropout probability\n\
                                       in [0, 1] (0 = off; masks the sync\n\
@@ -163,6 +167,9 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     // Explicit --kv-policy takes precedence over the --kv-ratio shorthand.
     if let Some(policy) = fedattn::cli::parse_kv_policy(args)? {
         f.kv_policy = policy;
+    }
+    if let Some(p) = fedattn::cli::parse_kv_precision(args)? {
+        f.kv_precision = p;
     }
     f.max_new_tokens = args.usize_or("max-new", f.max_new_tokens);
     if let Some(p) = fedattn::cli::parse_dropout(args)? {
@@ -308,6 +315,7 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> 
     scfg.round_deadline_ms = sc.federation.round_deadline_ms;
     scfg.delta_frames = sc.federation.delta_frames;
     scfg.rejoin = sc.federation.rejoin;
+    scfg.kv_precision = sc.federation.kv_precision;
     scfg.rejoin_max_attempts = sc.transport.retry_max_attempts;
     scfg.seed = sc.seed;
     scfg.workers = sc.serving.workers;

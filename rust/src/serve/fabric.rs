@@ -141,7 +141,16 @@ impl<'f> Cohort<'f> {
     /// `Err` and poisons every live member.
     fn step(&mut self, engine: Option<&Engine>) -> Result<Vec<(usize, String)>> {
         if self.batched {
-            let engine = engine.expect("batched cohorts require an engine");
+            // Batched cohorts are only formed when an engine is present,
+            // but a caller wiring the fabric by hand can still hand an
+            // engine-less step a batched cohort.  Degrade it to the
+            // per-session fallback path for the rest of its life
+            // (counted in `fallback_steps`) instead of panicking.
+            let Some(engine) = engine else {
+                self.batched = false;
+                self.stack = None;
+                return self.step_per_session();
+            };
             let mut slots: Vec<SlotParts> = self
                 .members
                 .iter_mut()
@@ -158,15 +167,20 @@ impl<'f> Cohort<'f> {
             self.stack.as_mut().unwrap().step(engine, &mut slots)?;
             Ok(Vec::new())
         } else {
-            let mut failures = Vec::new();
-            for (i, slot) in self.members.iter_mut().enumerate() {
-                let Some(task) = slot else { continue };
-                if let Err(e) = task.dispatch() {
-                    failures.push((i, format!("{e:#}")));
-                }
-            }
-            Ok(failures)
+            self.step_per_session()
         }
+    }
+
+    /// Fallback path: one `dispatch` per live member.
+    fn step_per_session(&mut self) -> Result<Vec<(usize, String)>> {
+        let mut failures = Vec::new();
+        for (i, slot) in self.members.iter_mut().enumerate() {
+            let Some(task) = slot else { continue };
+            if let Err(e) = task.dispatch() {
+                failures.push((i, format!("{e:#}")));
+            }
+        }
+        Ok(failures)
     }
 
     fn live(&self) -> usize {
@@ -186,6 +200,21 @@ enum Event<'f> {
     ArrivalsDone,
     Prefilled(Box<dyn FabricTask + 'f>, Option<String>),
     Stepped(Cohort<'f>, Result<Vec<(usize, String)>, String>),
+    /// A work item panicked on its worker thread: the tasks it carried
+    /// are lost to the unwind (ids captured before the attempt), and the
+    /// worker survives to process the rest of the queue.
+    Poisoned { task_ids: Vec<usize>, was_prefill: bool, error: String },
+}
+
+/// Best-effort message out of a caught worker panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Run a workload through the fabric.  `tasks` pairs each boxed session
@@ -216,22 +245,37 @@ pub fn run_fabric<'f>(
     let mut outcome = FabricOutcome::default();
 
     std::thread::scope(|s| -> Result<()> {
-        // Engine workers: prefills and cohort steps.
+        // Engine workers: prefills and cohort steps.  A panicking task
+        // must not take the worker (and with it the whole serve run)
+        // down: the attempt runs under `catch_unwind`, and a poisoned
+        // item is reported by id so the scheduler can record the loss.
         for _ in 0..cfg.engines.max(1) {
             let work = &work;
             let tx = events_tx.clone();
             s.spawn(move || {
                 while let Some(item) = work.pop() {
-                    let event = match item {
-                        Work::Prefill(mut task) => {
-                            let err = task.prefill().err().map(|e| format!("{e:#}"));
-                            Event::Prefilled(task, err)
-                        }
-                        Work::Step(mut cohort) => {
-                            let res = cohort.step(engine).map_err(|e| format!("{e:#}"));
-                            Event::Stepped(cohort, res)
+                    let (ids, was_prefill) = match &item {
+                        Work::Prefill(t) => (vec![t.task_id()], true),
+                        Work::Step(c) => {
+                            (c.members.iter().flatten().map(|t| t.task_id()).collect(), false)
                         }
                     };
+                    let attempt =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match item {
+                            Work::Prefill(mut task) => {
+                                let err = task.prefill().err().map(|e| format!("{e:#}"));
+                                Event::Prefilled(task, err)
+                            }
+                            Work::Step(mut cohort) => {
+                                let res = cohort.step(engine).map_err(|e| format!("{e:#}"));
+                                Event::Stepped(cohort, res)
+                            }
+                        }));
+                    let event = attempt.unwrap_or_else(|payload| Event::Poisoned {
+                        task_ids: ids,
+                        was_prefill,
+                        error: format!("worker panicked: {}", panic_message(payload.as_ref())),
+                    });
                     if tx.send(event).is_err() {
                         break;
                     }
@@ -261,6 +305,10 @@ pub fn run_fabric<'f>(
                 let _ = tx.send(Event::ArrivalsDone);
             }
         });
+        // Workers and the arrival thread hold the only live senders from
+        // here on: if every one of them exits (e.g. all workers die),
+        // `recv` reports the closed channel instead of blocking forever.
+        drop(events_tx);
 
         // Scheduler: the caller's thread.
         let mut inflight = 0usize;
@@ -372,7 +420,52 @@ pub fn run_fabric<'f>(
                 break;
             }
 
-            match events_rx.recv().expect("fabric event channel closed early") {
+            let event = match events_rx.recv() {
+                Ok(event) => event,
+                Err(_) => {
+                    // Every sender is gone — all engine workers (and the
+                    // arrival thread) exited with sessions still in
+                    // flight.  The run cannot make progress; finalize
+                    // the outcome with everything in flight recorded as
+                    // failed instead of panicking the serve run.
+                    const ERR: &str =
+                        "fabric event channel closed early: all engine workers exited";
+                    log::error!("{ERR}");
+                    for task in decode_ready.drain(..) {
+                        outcome
+                            .failed
+                            .push(FailedTask { task_id: task.task_id(), error: ERR.into() });
+                    }
+                    while let Some(item) = work.try_pop() {
+                        match item {
+                            Work::Prefill(task) => outcome.failed.push(FailedTask {
+                                task_id: task.task_id(),
+                                error: ERR.into(),
+                            }),
+                            Work::Step(mut cohort) => {
+                                for slot in cohort.members.iter_mut() {
+                                    if let Some(task) = slot.take() {
+                                        outcome.failed.push(FailedTask {
+                                            task_id: task.task_id(),
+                                            error: ERR.into(),
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Tasks still queued at admission never started;
+                    // record them too so nothing vanishes silently.
+                    while let Some(pending) = admission.take() {
+                        outcome.failed.push(FailedTask {
+                            task_id: pending.task_id,
+                            error: ERR.into(),
+                        });
+                    }
+                    break;
+                }
+            };
+            match event {
                 Event::Admitted => {}
                 Event::ArrivalsDone => arrivals_done = true,
                 Event::Prefilled(task, err) => {
@@ -447,6 +540,15 @@ pub fn run_fabric<'f>(
                         }
                     }
                 }
+                Event::Poisoned { task_ids, was_prefill, error } => {
+                    if was_prefill {
+                        prefills_outstanding -= 1;
+                    }
+                    for task_id in task_ids {
+                        outcome.failed.push(FailedTask { task_id, error: error.clone() });
+                        inflight -= 1;
+                    }
+                }
             }
         }
 
@@ -455,7 +557,6 @@ pub fn run_fabric<'f>(
         Ok(())
     })?;
 
-    drop(events_tx);
     outcome.dropped = admission.take_dropped();
     outcome.makespan_ms = start.elapsed().as_secs_f64() * 1e3;
     Ok(outcome)
@@ -473,6 +574,7 @@ mod tests {
         id: usize,
         steps: usize,
         fail_prefill: bool,
+        panic_prefill: bool,
         fail_dispatch_at: Option<usize>,
         dispatched: usize,
         pending: bool,
@@ -487,6 +589,7 @@ mod tests {
                 id,
                 steps,
                 fail_prefill: false,
+                panic_prefill: false,
                 fail_dispatch_at: None,
                 dispatched: 0,
                 pending: false,
@@ -506,6 +609,9 @@ mod tests {
             let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
             self.peak.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_micros(self.prefill_us));
+            if self.panic_prefill {
+                panic!("mock poisoned worker task");
+            }
             anyhow::ensure!(!self.fail_prefill, "mock prefill failure");
             Ok(())
         }
@@ -644,6 +750,61 @@ mod tests {
         failed.sort_unstable();
         assert_eq!(failed, vec![1, 4]);
         assert!(out.failed.iter().all(|f| !f.error.is_empty()));
+    }
+
+    #[test]
+    fn fabric_survives_a_poisoned_worker_task() {
+        // A panicking prefill used to kill its worker thread — and, with
+        // every worker dead, the scheduler's recv() panicked and took
+        // the whole serve run down.  The worker now catches the unwind
+        // and the run completes with the poisoned task in `failed`.
+        let g = gauge();
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..5)
+            .map(|i| {
+                let mut t = MockTask::new(i, 1, &g);
+                if i == 2 {
+                    t.panic_prefill = true;
+                }
+                (i as f64 * 0.01, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 1, // a single worker: one un-caught panic = all workers dead
+            queue_depth: 8,
+            max_inflight: 8,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        assert_eq!(out.results.len(), 4, "healthy tasks still complete");
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].task_id, 2);
+        assert!(out.failed[0].error.contains("panicked"), "{}", out.failed[0].error);
+    }
+
+    #[test]
+    fn batched_cohort_without_engine_degrades_to_fallback() {
+        // Cohort::step used to panic via `expect("batched cohorts
+        // require an engine")`; it must degrade to per-session dispatch
+        // instead (counted as fallback by the scheduler's accounting).
+        let g = gauge();
+        let mut task = MockTask::new(0, 1, &g);
+        task.pending = true; // decode-ready: one dispatch owed
+        let mut cohort = Cohort {
+            members: vec![Some(Box::new(task) as Box<dyn FabricTask + 'static>)],
+            stack: None,
+            batched: true,
+            b: 2,
+            r: 4,
+        };
+        let failures = cohort.step(None).expect("degraded step must not error");
+        assert!(failures.is_empty());
+        assert!(!cohort.batched, "cohort flips to the fallback path for good");
+        assert!(cohort.stack.is_none());
+        // The member really was dispatched per-session.
+        let done = matches!(cohort.members[0].as_mut().unwrap().poll(), DecodeStep::Done);
+        assert!(done, "the owed dispatch ran on the fallback path");
     }
 
     #[test]

@@ -18,8 +18,8 @@
 //!   transport feeds these decoders bytes straight off a socket.
 
 use fedattn::fedattn::{
-    DecodeTail, GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
-    KvExchangePolicy, TokenBroadcast, TxContext,
+    requantize_row, DecodeTail, GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution,
+    KvExchangePolicy, KvPrecision, TokenBroadcast, TxContext,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::tensor::HostTensor;
@@ -303,6 +303,51 @@ fn valid_encodings(rng: &mut Xoshiro256ss) -> Vec<(&'static str, Vec<u8>)> {
     ]
 }
 
+/// Quantized (version-2) variants of the KV-carrying messages, for the
+/// same attack helpers: reduced-precision payloads must survive exactly
+/// the same truncation and mutation batteries as the legacy layout.
+fn quant_encodings(rng: &mut Xoshiro256ss) -> Vec<(&'static str, Vec<u8>)> {
+    let k = random_tensor(rng, 3, 2, 2);
+    let v = random_tensor(rng, 3, 2, 2);
+    let c = KvContribution::from_rows(
+        1,
+        0,
+        &k,
+        &v,
+        &[0, 1, 2],
+        &[true, false, true],
+        Some(&[0.25, 0.5, 0.75]),
+    );
+    let gkv = GlobalKv::pack(
+        &[(&k, &v, &[0, 1, 2][..], 3, &[true, false, true][..])],
+        4,
+    )
+    .unwrap();
+    let f = GlobalKvFrame::from_global(2, &gkv);
+    let k2 = random_tensor(rng, 1, 2, 2);
+    let v2 = random_tensor(rng, 1, 2, 2);
+    let gkv2 = GlobalKv::pack(
+        &[
+            (&k, &v, &[0, 1, 2][..], 3, &[true, false, true][..]),
+            (&k2, &v2, &[3][..], 1, &[true][..]),
+        ],
+        4,
+    )
+    .unwrap();
+    let d = GlobalKvDeltaFrame::from_frame(
+        &GlobalKvFrame::from_global(2, &gkv2).with_precision(KvPrecision::Int8),
+        1,
+        0,
+    );
+    vec![
+        ("contribution-f16", c.clone().with_precision(KvPrecision::F16).encode()),
+        ("contribution-int8", c.with_precision(KvPrecision::Int8).encode()),
+        ("frame-f16", f.clone().with_precision(KvPrecision::F16).encode()),
+        ("frame-int8", f.with_precision(KvPrecision::Int8).encode()),
+        ("delta-frame-int8", d.encode()),
+    ]
+}
+
 /// Run every typed decoder over `bytes`; panics propagate (that is the
 /// test failure), and any `Ok` must re-encode to exactly the input —
 /// the codec is canonical, so "successfully decoded garbage" is only
@@ -331,7 +376,9 @@ fn decode_all_canonical(name: &str, bytes: &[u8]) {
 #[test]
 fn every_truncation_of_every_message_errors() {
     let mut rng = Xoshiro256ss::new(41);
-    for (name, bytes) in valid_encodings(&mut rng) {
+    let mut encodings = valid_encodings(&mut rng);
+    encodings.extend(quant_encodings(&mut rng));
+    for (name, bytes) in encodings {
         for cut in 0..bytes.len() {
             let prefix = &bytes[..cut];
             assert!(KvContribution::decode(prefix).is_err(), "{name} cut {cut}");
@@ -347,7 +394,7 @@ fn every_truncation_of_every_message_errors() {
 /// and all reject a wrong magic or version byte.
 #[test]
 fn wrong_tag_magic_and_version_all_rejected() {
-    use fedattn::fedattn::protocol::{WIRE_MAGIC, WIRE_VERSION};
+    use fedattn::fedattn::protocol::{WIRE_MAGIC, WIRE_VERSION_QUANT};
     let mut rng = Xoshiro256ss::new(43);
     let encodings = valid_encodings(&mut rng);
     for (i, (name, bytes)) in encodings.iter().enumerate() {
@@ -365,8 +412,10 @@ fn wrong_tag_magic_and_version_all_rejected() {
         let mut bad = bytes.clone();
         bad[0] = WIRE_MAGIC.wrapping_add(1);
         decode_all_err(name, &bad);
+        // Version 2 is now a *valid* layout for the KV-carrying tags
+        // (quantized rows), so the unknown-version probe starts past it.
         let mut bad = bytes.clone();
-        bad[2] = WIRE_VERSION + 1;
+        bad[2] = WIRE_VERSION_QUANT + 1;
         decode_all_err(name, &bad);
     }
 }
@@ -426,7 +475,9 @@ fn random_bytes_fuzz_never_panics() {
         if rng.bernoulli(0.5) && bytes.len() >= 3 {
             bytes[0] = 0xFA; // WIRE_MAGIC
             bytes[1] = 1 + rng.below(5) as u8;
-            bytes[2] = 1; // WIRE_VERSION
+            // Half legacy, half quantized-layout headers so the fuzz
+            // reaches the version-2 precision-byte and scale paths too.
+            bytes[2] = 1 + rng.below(2) as u8; // WIRE_VERSION | WIRE_VERSION_QUANT
         }
         decode_all_canonical(&format!("fuzz iter {iter}"), &bytes);
     }
@@ -439,7 +490,9 @@ fn random_bytes_fuzz_never_panics() {
 fn mutated_messages_fuzz_never_panics() {
     let mut rng = Xoshiro256ss::new(0xBEEF_7A6);
     for _ in 0..300u32 {
-        for (name, bytes) in valid_encodings(&mut rng) {
+        let mut encodings = valid_encodings(&mut rng);
+        encodings.extend(quant_encodings(&mut rng));
+        for (name, bytes) in encodings {
             let mut mutated = bytes.clone();
             for _ in 0..1 + rng.below(4) {
                 let at = rng.below(mutated.len() as u64) as usize;
@@ -607,4 +660,158 @@ fn contribution_payload_matches_packed_rows() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Quantized wire rows (`kv_precision`): the reduced-precision data plane
+// must round-trip canonically, dequantize to exactly what
+// [`requantize_row`] predicts, and bill the simulator the *quantized*
+// byte counts — under every KV policy.
+// ---------------------------------------------------------------------------
+
+/// A quantized contribution decodes to the requantized rows, re-encodes
+/// bit-exactly, and its `payload_bytes` follow the wire precision —
+/// every reduced precision strictly below f32 whenever any row ships.
+/// (The strict f32 → f16 → int8 chain needs realistic row geometry —
+/// the 8 B/row int8 scale overhead dominates these tiny `hd = 2` rows —
+/// so it is pinned by the comm_quant bench schema instead.)
+#[test]
+fn quantized_contributions_roundtrip_and_shrink_for_all_policies() {
+    propcheck(40, |rng| {
+        for policy in ALL_POLICIES {
+            let n = 1 + rng.below(3) as usize;
+            let r = random_round(rng, policy, n);
+            let row_len = r.hkv * r.hd;
+            for p in 0..n {
+                let base = KvContribution::from_rows(
+                    0, p, &r.ks[p], &r.vs[p], &r.poss[p], &r.txs[p], None,
+                );
+                let f32_bytes = base.payload_bytes();
+                for precision in [KvPrecision::F32, KvPrecision::F16, KvPrecision::Int8] {
+                    let c = base.clone().with_precision(precision);
+                    let want_bytes = (c.rows()
+                        * precision.wire_row_bytes(r.hkv, r.hd))
+                        as u64;
+                    if c.payload_bytes() != want_bytes {
+                        return Err(format!(
+                            "{}: {precision:?} bills {} != {want_bytes}",
+                            policy.as_str(),
+                            c.payload_bytes()
+                        ));
+                    }
+                    if precision != KvPrecision::F32
+                        && c.rows() > 0
+                        && c.payload_bytes() >= f32_bytes
+                    {
+                        return Err(format!(
+                            "{}: {precision:?} does not shrink the payload",
+                            policy.as_str()
+                        ));
+                    }
+                    let bytes = c.encode();
+                    let back =
+                        KvContribution::decode(&bytes).map_err(|e| e.to_string())?;
+                    if back.precision != precision || back.encode() != bytes {
+                        return Err(format!(
+                            "{}: {precision:?} not canonical",
+                            policy.as_str()
+                        ));
+                    }
+                    for w in 0..c.rows() {
+                        let mut want = c.k[w * row_len..(w + 1) * row_len].to_vec();
+                        requantize_row(&mut want, precision);
+                        if back.k[w * row_len..(w + 1) * row_len] != want[..] {
+                            return Err(format!(
+                                "{}: {precision:?} k row {w} != requantize_row",
+                                policy.as_str()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The simulator is billed the quantized sizes: feeding int8
+/// `payload_bytes` into `NetSim::exchange_round` lands the reduced
+/// totals in `NetReport`, strictly below the f32 round.
+#[test]
+fn quantized_payloads_bill_the_simulator_with_quantized_bytes() {
+    let mut rng = Xoshiro256ss::new(0x9A17);
+    // Realistic row geometry (the tiny hd=2 rounds above would let the
+    // 8-byte int8 scale overhead mask the shrink this test pins down).
+    let (n, rows, hkv, hd) = (4, 6, 2, 24);
+    let pos: Vec<i32> = (0..rows as i32).collect();
+    let tx = vec![true; rows];
+    let ks: Vec<_> = (0..n).map(|_| random_tensor(&mut rng, rows, hkv, hd)).collect();
+    let vs: Vec<_> = (0..n).map(|_| random_tensor(&mut rng, rows, hkv, hd)).collect();
+    let attending = vec![true; n];
+    let mut totals = Vec::new();
+    for precision in [KvPrecision::F32, KvPrecision::Int8] {
+        let payloads: Vec<u64> = (0..n)
+            .map(|p| {
+                KvContribution::from_rows(0, p, &ks[p], &vs[p], &pos, &tx, None)
+                    .with_precision(precision)
+                    .payload_bytes()
+            })
+            .collect();
+        let mut sim = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 5);
+        sim.exchange_round(&payloads, &attending);
+        let rep = sim.report();
+        assert_eq!(rep.tx_bytes, payloads, "{precision:?} uplink mismatch");
+        totals.push(rep.round_bytes[0]);
+    }
+    assert!(
+        totals[1] * 3 < totals[0],
+        "int8 round {} not well below f32 round {}",
+        totals[1],
+        totals[0]
+    );
+}
+
+/// Hostile quantized payloads at the integration layer: tampered scale
+/// bytes (NaN/inf/negative/subnormal/huge), inconsistent zero scales,
+/// the non-canonical −128 level, bogus precision bytes, and unknown
+/// versions are all rejected without panicking.
+#[test]
+fn hostile_quant_scales_levels_and_precision_bytes_rejected() {
+    let mut rng = Xoshiro256ss::new(0x5CA1E);
+    let k = random_tensor(&mut rng, 2, 2, 2);
+    let v = random_tensor(&mut rng, 2, 2, 2);
+    let c = KvContribution::from_rows(
+        0,
+        0,
+        &k,
+        &v,
+        &[0, 1],
+        &[true, true],
+        Some(&[0.5, 0.5]),
+    )
+    .with_precision(KvPrecision::Int8);
+    let bytes = c.encode();
+    // scale_k[0] sits after header + precision byte + 5 u32s + pos + rel.
+    let scale_at = 3 + 1 + 5 * 4 + 2 * 8;
+    for hostile in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0, 1.0e-45, f32::MAX] {
+        let mut bad = bytes.clone();
+        bad[scale_at..scale_at + 4].copy_from_slice(&hostile.to_le_bytes());
+        assert!(KvContribution::decode(&bad).is_err(), "scale {hostile:e}");
+        decode_all_canonical("hostile scale", &bad);
+    }
+    let mut bad = bytes.clone();
+    bad[scale_at..scale_at + 4].copy_from_slice(&0.0f32.to_le_bytes());
+    assert!(KvContribution::decode(&bad).is_err(), "zero scale, nonzero levels");
+    let level_at = scale_at + 4 * 4; // past both rows' K and V scales
+    let mut bad = bytes.clone();
+    bad[level_at] = 0x80;
+    assert!(KvContribution::decode(&bad).is_err(), "int8 level -128");
+    for p in [0u8, 3, 255] {
+        let mut bad = bytes.clone();
+        bad[3] = p;
+        assert!(KvContribution::decode(&bad).is_err(), "precision byte {p}");
+    }
+    let mut bad = bytes;
+    bad[2] = 3;
+    assert!(KvContribution::decode(&bad).is_err(), "version 3");
 }

@@ -39,8 +39,8 @@ use fedattn::data::{gen_episode, partition, Segmentation};
 use fedattn::fedattn::{
     wire_kind, ChannelTransport, ChaosTransport, CtrlMsg, FaultSchedule, FedSession,
     GlobalKv, GlobalKvDeltaFrame, GlobalKvFrame, KvContribution, KvExchangePolicy,
-    LocalSparsity, NodeHost, SessionConfig, SessionReport, SyncSchedule, TcpTransport,
-    Transport, TransportDriver, TransportError, WireKind,
+    KvPrecision, LocalSparsity, NodeHost, SessionConfig, SessionReport, SyncSchedule,
+    TcpTransport, Transport, TransportDriver, TransportError, WireKind,
 };
 use fedattn::net::{LinkSpec, NetSim, Topology};
 use fedattn::runtime::Engine;
@@ -199,6 +199,9 @@ struct RunCfg {
     /// Delta-encoded downlink frames (the default).  `false` ships and
     /// bills full broadcast frames — the pre-delta baseline.
     delta: bool,
+    /// Wire precision of the KV data plane (`F32` = the legacy layout
+    /// every golden fixture is pinned to).
+    precision: KvPrecision,
 }
 
 impl RunCfg {
@@ -212,6 +215,7 @@ impl RunCfg {
             deadline: None,
             never_sync: false,
             delta: true,
+            precision: KvPrecision::F32,
         }
     }
 }
@@ -279,6 +283,7 @@ fn run_session(engine: &Engine, mode: Mode, rc: RunCfg) -> SessionReport {
     cfg.dropout_prob = rc.dropout;
     cfg.round_deadline_ms = rc.deadline;
     cfg.delta_frames = rc.delta;
+    cfg.kv_precision = rc.precision;
     let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
 
     let (rep, hosts) = match mode {
@@ -575,6 +580,78 @@ fn delta_default_keeps_wire_in_process_equivalence() {
     }
 }
 
+/// Quantized wire sessions (`kv_precision`): at every reduced precision
+/// the transports decode byte-identically to the in-process session —
+/// channel *and* TCP, stateless and relevance-tracking policies, delta
+/// frames on and off.  (The `f32` default is pinned separately: every
+/// golden-fixture differential above runs at `KvPrecision::F32` and must
+/// stay byte-identical to the pre-quantization transcripts.)
+#[test]
+fn quantized_wire_matches_in_process_at_every_precision() {
+    let Some(engine) = engine() else { return };
+    for precision in [KvPrecision::F16, KvPrecision::Int8] {
+        for (name, policy) in [
+            ("full", KvExchangePolicy::Full),
+            ("top-k-relevance", KvExchangePolicy::TopKRelevance { budget_rows: 8 }),
+        ] {
+            for delta in [true, false] {
+                let mut rc = RunCfg::new(name, policy);
+                rc.decode_all = true;
+                rc.delta = delta;
+                rc.precision = precision;
+                let local = fingerprint(&engine, Mode::InProcess, rc);
+                for (mode, mode_name) in [(Mode::Channel, "channel"), (Mode::Tcp, "tcp")] {
+                    let wire = fingerprint(&engine, mode, rc);
+                    assert_eq!(
+                        local.to_string_compact(),
+                        wire.to_string_compact(),
+                        "{mode_name} diverged from in-process at \
+                         {precision:?}/{name}/delta={delta}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The savings are real on the billed wire: under the `full` policy the
+/// same rows ship at every precision, so int8 cuts every executed
+/// round's KV bytes at least 3.5× below the f32 baseline and f16 cuts
+/// them exactly 2× — while the session still decodes.
+#[test]
+fn int8_cuts_wire_kv_bytes_at_least_3_5x() {
+    let Some(engine) = engine() else { return };
+    let base = RunCfg::new("full", KvExchangePolicy::Full);
+    let f32_rep = run_session(&engine, Mode::InProcess, base);
+    let mut rc16 = base;
+    rc16.precision = KvPrecision::F16;
+    let f16_rep = run_session(&engine, Mode::InProcess, rc16);
+    let mut rc8 = base;
+    rc8.precision = KvPrecision::Int8;
+    let i8_rep = run_session(&engine, Mode::InProcess, rc8);
+
+    assert!(i8_rep.generated_tokens > 0, "int8 session produced no tokens");
+    assert!(f32_rep.net.rounds > 0, "baseline executed no rounds");
+    assert_eq!(f32_rep.net.rounds, i8_rep.net.rounds, "round count changed with precision");
+    assert_eq!(f32_rep.net.round_bytes.len(), i8_rep.net.round_bytes.len());
+    for (i, ((&fr, &hr), &qr)) in f32_rep
+        .net
+        .round_bytes
+        .iter()
+        .zip(&f16_rep.net.round_bytes)
+        .zip(&i8_rep.net.round_bytes)
+        .enumerate()
+    {
+        assert_eq!(hr * 2, fr, "round {i}: f16 bytes {hr} not half of f32 {fr}");
+        // qr ≤ fr / 3.5, in exact integer arithmetic.
+        assert!(
+            qr * 7 <= fr * 2,
+            "round {i}: int8 bytes {qr} not ≥ 3.5× below f32 {fr}"
+        );
+        assert!(qr > 0, "round {i}: int8 round billed zero bytes");
+    }
+}
+
 /// A deadline can only shrink communication relative to no deadline:
 /// with the `full` policy every round's candidate payloads are fixed, so
 /// any finite deadline bills a subset of the undeadlined bytes and
@@ -853,6 +930,7 @@ fn node_host_faults_on_hostile_block_index() {
         round_deadline_ms: None,
         ids: vec![1, 2, 3],
         pos: vec![0, 1, 2],
+        kv_precision: KvPrecision::F32,
     };
     driver_end.send(&join.encode()).unwrap();
     let ack = CtrlMsg::decode(&driver_end.recv().unwrap()).unwrap();
@@ -892,6 +970,7 @@ fn node_read_timeout_derives_from_announced_deadline() {
         round_deadline_ms: Some(60_000.0),
         ids: vec![1, 2, 3],
         pos: vec![0, 1, 2],
+        kv_precision: KvPrecision::F32,
     };
     driver_end.send(&join.encode()).unwrap();
     let ack = CtrlMsg::decode(&driver_end.recv().unwrap()).unwrap();
