@@ -25,7 +25,8 @@ use common::*;
 use fedattn::config::SystemConfig;
 use fedattn::coordinator::{Coordinator, CoordinatorConfig};
 use fedattn::data::{TraceConfig, WorkloadTrace};
-use fedattn::serve::{capacity_curve, ModelParams, ServeMode};
+use fedattn::serve::model::{SLO_DEADLINES_MS, SLO_GAPS_MS, SLO_SESSIONS};
+use fedattn::serve::{capacity_curve, slo_curve, ModelParams, ServeMode};
 use fedattn::util::json::{Json, JsonBuilder};
 
 /// The session sweep pinned into `BENCH_serving.json`.
@@ -70,6 +71,54 @@ fn curve_report() -> Json {
                 .build(),
         )
         .arr_num("sweep", &CURVE_SWEEP.map(|s| s as f64))
+        .set("curve", Json::Arr(rows))
+        .build()
+}
+
+/// Build the deterministic SLO-enforcement report (`BENCH_slo.json`):
+/// the fabric discipline pushed through the deadline-enforcing DES over
+/// the deadline × arrival-gap grid.  CI asserts on the committed copy
+/// that every offered session is accounted (completed + killed) and
+/// that the completion rate is monotone non-increasing in arrival rate
+/// at each fixed deadline.
+fn slo_report() -> Json {
+    let p = ModelParams::default();
+    let curve =
+        slo_curve(&p, ServeMode::Fabric, SLO_SESSIONS, &SLO_DEADLINES_MS, &SLO_GAPS_MS);
+    let rows: Vec<Json> = curve
+        .iter()
+        .map(|pt| {
+            JsonBuilder::new()
+                .num("deadline_ms", pt.deadline_ms)
+                .num("arrival_gap_ms", pt.arrival_gap_ms)
+                .num("sessions", pt.sessions as f64)
+                .num("completed", pt.completed as f64)
+                .num("killed", pt.killed as f64)
+                .num("completion_rate", pt.completion_rate)
+                .num("goodput_tokens_per_s", pt.goodput_tokens_per_s)
+                .num("p95_ms", pt.p95_ms)
+                .num("makespan_ms", pt.makespan_ms)
+                .build()
+        })
+        .collect();
+    JsonBuilder::new()
+        .str("bench", "slo")
+        .str("mode", ServeMode::Fabric.name())
+        .num("sessions", SLO_SESSIONS as f64)
+        .arr_num("deadlines_ms", &SLO_DEADLINES_MS)
+        .arr_num("gaps_ms", &SLO_GAPS_MS)
+        .set(
+            "params",
+            JsonBuilder::new()
+                .num("engines", p.engines as f64)
+                .num("prefill_ms", p.prefill_ms)
+                .num("step_ms", p.step_ms)
+                .num("step_overhead_ms", p.step_overhead_ms)
+                .num("handoff_ms", p.handoff_ms)
+                .num("decode_steps", p.decode_steps as f64)
+                .num("batch_max", p.batch_max as f64)
+                .build(),
+        )
         .set("curve", Json::Arr(rows))
         .build()
 }
@@ -205,6 +254,28 @@ fn main() -> Result<()> {
         );
     }
 
+    println!("\n== SLO enforcement: completion rate vs load (BENCH_slo.json) ==");
+    println!(
+        "{:>12} {:>10} {:>10} {:>8} {:>8} {:>12} {:>10}",
+        "deadline ms", "gap ms", "completed", "killed", "rate", "goodput t/s", "p95 ms"
+    );
+    {
+        let p = ModelParams::default();
+        for pt in slo_curve(&p, ServeMode::Fabric, SLO_SESSIONS, &SLO_DEADLINES_MS, &SLO_GAPS_MS)
+        {
+            println!(
+                "{:>12.0} {:>10.0} {:>10} {:>8} {:>8.3} {:>12.2} {:>10.1}",
+                pt.deadline_ms,
+                pt.arrival_gap_ms,
+                pt.completed,
+                pt.killed,
+                pt.completion_rate,
+                pt.goodput_tokens_per_s,
+                pt.p95_ms
+            );
+        }
+    }
+
     let stats = engine.stats.view();
     let measured = JsonBuilder::new()
         .set("points", Json::Arr(rows))
@@ -216,5 +287,6 @@ fn main() -> Result<()> {
         .build();
     write_json("serving_throughput", measured);
     write_bench_json("serving", curve_report());
+    write_bench_json("slo", slo_report());
     Ok(())
 }

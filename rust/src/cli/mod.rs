@@ -362,6 +362,82 @@ pub fn parse_max_inflight(args: &Args) -> anyhow::Result<Option<usize>> {
     Ok(Some(n))
 }
 
+/// Shared shape of the liveness-plane millisecond flags
+/// (`--session-deadline`, `--watchdog`, `--heartbeat`, `--slo-prior`,
+/// `--drain-after`).  Returns:
+///
+/// * `Ok(None)` when the flag is absent — callers keep their config
+///   default;
+/// * `Ok(Some(None))` for the explicit sentinels `off` / `none` — the
+///   mechanism is disabled (byte-identical to no knob);
+/// * `Ok(Some(Some(ms)))` for a finite `ms > 0`.
+///
+/// Zero, negative, NaN, or unparsable values are errors, not silent
+/// fallbacks — a typo'd deadline or watchdog would corrupt an SLO
+/// experiment.
+fn parse_liveness_ms(args: &Args, flag: &str) -> anyhow::Result<Option<Option<f64>>> {
+    let Some(raw) = args.opt(flag) else {
+        return Ok(None);
+    };
+    if matches!(raw, "off" | "none") {
+        return Ok(Some(None));
+    }
+    let ms: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--{flag} expects milliseconds or off|none, got {raw:?}")
+    })?;
+    anyhow::ensure!(
+        ms.is_finite() && ms > 0.0,
+        "--{flag} must be finite and > 0, got {ms}"
+    );
+    Ok(Some(Some(ms)))
+}
+
+/// End-to-end per-session deadline from `--session-deadline` (ms; the
+/// clock starts at the admission offer, so queue wait counts).
+pub fn parse_session_deadline(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    parse_liveness_ms(args, "session-deadline")
+}
+
+/// Stuck-session watchdog window from `--watchdog` (ms of no progress
+/// before a dispatched work item is cancelled and its worker replaced).
+pub fn parse_watchdog_ms(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    parse_liveness_ms(args, "watchdog")
+}
+
+/// Wire heartbeat interval from `--heartbeat` (ms between driver pings
+/// to each node host).
+pub fn parse_heartbeat_ms(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    parse_liveness_ms(args, "heartbeat")
+}
+
+/// Admission service-time prior from `--slo-prior` (ms seeding the
+/// reject-over-SLO EMA before the first completion).
+pub fn parse_slo_prior(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    parse_liveness_ms(args, "slo-prior")
+}
+
+/// Graceful-drain trigger from `--drain-after` (ms after serve start; a
+/// SIGTERM stand-in for drain experiments).
+pub fn parse_drain_after(args: &Args) -> anyhow::Result<Option<Option<f64>>> {
+    parse_liveness_ms(args, "drain-after")
+}
+
+/// Missed-beat tolerance from `--heartbeat-max-missed`.  Returns
+/// `Ok(None)` when absent (callers keep
+/// `federation.heartbeat_max_missed`, default 2); zero or unparsable
+/// values are errors — tolerating zero beats would demote every node on
+/// the first tick.
+pub fn parse_heartbeat_max_missed(args: &Args) -> anyhow::Result<Option<u32>> {
+    let Some(raw) = args.opt("heartbeat-max-missed") else {
+        return Ok(None);
+    };
+    let n: u32 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--heartbeat-max-missed expects a positive integer, got {raw:?}")
+    })?;
+    anyhow::ensure!(n >= 1, "--heartbeat-max-missed must be >= 1, got {n}");
+    Ok(Some(n))
+}
+
 /// Trace time-compression factor from `--time-scale`.  Returns `Ok(None)`
 /// when absent (callers fall back to TOML `serving.time_scale`, then
 /// their own default); non-positive or unparsable values are errors.
@@ -595,6 +671,52 @@ mod tests {
         );
         assert!(parse_max_inflight(&parse(&["--max-inflight", "0"])).is_err());
         assert!(parse_max_inflight(&parse(&["--max-inflight", "lots"])).is_err());
+    }
+
+    #[test]
+    fn liveness_ms_flags_share_one_shape() {
+        type P = fn(&Args) -> anyhow::Result<Option<Option<f64>>>;
+        let cases: [(&str, P); 5] = [
+            ("session-deadline", parse_session_deadline),
+            ("watchdog", parse_watchdog_ms),
+            ("heartbeat", parse_heartbeat_ms),
+            ("slo-prior", parse_slo_prior),
+            ("drain-after", parse_drain_after),
+        ];
+        for (flag, f) in cases {
+            assert_eq!(f(&parse(&[])).unwrap(), None, "--{flag} absent");
+            let set_owned = format!("--{flag}");
+            let set = set_owned.as_str();
+            assert_eq!(
+                f(&parse(&[set, "750"])).unwrap(),
+                Some(Some(750.0)),
+                "--{flag} value"
+            );
+            for sentinel in ["off", "none"] {
+                assert_eq!(
+                    f(&parse(&[set, sentinel])).unwrap(),
+                    Some(None),
+                    "--{flag} {sentinel}"
+                );
+            }
+            assert!(f(&parse(&[set, "0"])).is_err(), "--{flag} 0 must fail");
+            assert!(f(&parse(&[set, "-5"])).is_err(), "--{flag} < 0 must fail");
+            assert!(f(&parse(&[set, "NaN"])).is_err(), "--{flag} NaN must fail");
+            assert!(f(&parse(&[set, "soon"])).is_err(), "--{flag} text must fail");
+        }
+    }
+
+    #[test]
+    fn heartbeat_max_missed_parse_and_range() {
+        assert_eq!(parse_heartbeat_max_missed(&parse(&[])).unwrap(), None);
+        assert_eq!(
+            parse_heartbeat_max_missed(&parse(&["--heartbeat-max-missed", "3"])).unwrap(),
+            Some(3)
+        );
+        assert!(parse_heartbeat_max_missed(&parse(&["--heartbeat-max-missed", "0"])).is_err());
+        assert!(
+            parse_heartbeat_max_missed(&parse(&["--heartbeat-max-missed", "lots"])).is_err()
+        );
     }
 
     #[test]

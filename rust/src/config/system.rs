@@ -54,6 +54,20 @@ pub struct FederationConfig {
     /// `f32`).  Reduced precisions quantize rows at encode time with
     /// per-row scales; `f32` is byte-identical to the knob not existing.
     pub kv_precision: KvPrecision,
+    /// Heartbeat window in milliseconds (`--heartbeat` /
+    /// `federation.heartbeat_ms`): in wire mode the driver pings each
+    /// node host at every layer boundary and waits up to this long for
+    /// the echoed pong, and a node that misses
+    /// [`heartbeat_max_missed`](Self::heartbeat_max_missed) consecutive
+    /// beats is demoted (or put on probation when rejoin is on) without
+    /// waiting for a round deadline.  `None` (the default) disables
+    /// heartbeats entirely and is byte-identical to the knob not
+    /// existing.
+    pub heartbeat_ms: Option<f64>,
+    /// Consecutive missed heartbeats tolerated before a node is declared
+    /// non-responsive (`federation.heartbeat_max_missed`, default 2).
+    /// Only consulted when [`heartbeat_ms`](Self::heartbeat_ms) is set.
+    pub heartbeat_max_missed: u32,
 }
 
 impl Default for FederationConfig {
@@ -70,6 +84,8 @@ impl Default for FederationConfig {
             delta_frames: true,
             rejoin: false,
             kv_precision: KvPrecision::F32,
+            heartbeat_ms: None,
+            heartbeat_max_missed: 2,
         }
     }
 }
@@ -170,6 +186,32 @@ pub struct ServingConfig {
     /// Max sessions admitted past the queue at once in fabric mode
     /// (`serving.max_inflight`); `None` = 4 × engines.
     pub max_inflight: Option<usize>,
+    /// End-to-end per-session deadline in milliseconds
+    /// (`serving.session_deadline_ms` / `--session-deadline`): the clock
+    /// starts when a task is offered to admission (queue wait included)
+    /// and the fabric cancels over-deadline sessions at the next resume
+    /// point, reporting them as `deadline_killed`.  `None` (the default)
+    /// disables enforcement and is byte-identical to the knob not
+    /// existing.
+    pub session_deadline_ms: Option<f64>,
+    /// Stuck-session watchdog window in milliseconds
+    /// (`serving.watchdog_ms` / `--watchdog`): a dispatched work item
+    /// making no progress for this long is cancelled, its sessions are
+    /// reported as `watchdog_killed`, and a spare worker replaces the
+    /// wedged one.  `None` (the default) disables the watchdog.
+    pub watchdog_ms: Option<f64>,
+    /// Optimistic service-time prior in milliseconds
+    /// (`serving.slo_prior_ms` / `--slo-prior`): seeds the admission
+    /// controller's service-time EMA so reject-over-SLO gating engages
+    /// before the first completion instead of admitting a startup burst
+    /// blind.  `None` (the default) keeps the learn-from-zero behaviour.
+    pub slo_prior_ms: Option<f64>,
+    /// Graceful-drain trigger in milliseconds after serve start
+    /// (`serving.drain_after_ms` / `--drain-after`): a SIGTERM stand-in
+    /// — once it fires the fabric stops admitting, finishes (or
+    /// deadline-kills) in-flight sessions, and reports never-admitted
+    /// tasks as `drained`.  `None` (the default) never drains.
+    pub drain_after_ms: Option<f64>,
 }
 
 impl Default for ServingConfig {
@@ -182,6 +224,10 @@ impl Default for ServingConfig {
             fabric: false,
             admission: AdmissionPolicy::Block,
             max_inflight: None,
+            session_deadline_ms: None,
+            watchdog_ms: None,
+            slo_prior_ms: None,
+            drain_after_ms: None,
         }
     }
 }
@@ -314,6 +360,26 @@ impl SystemConfig {
             f.kv_precision = KvPrecision::from_str_opt(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown kv_precision {name:?}"))?;
         }
+        if let Some(v) = doc.get("federation.heartbeat_ms") {
+            // Present but malformed must fail loudly — a silently ignored
+            // heartbeat would leave dead nodes undetected until a round
+            // deadline fires (or never).
+            let hb = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("federation.heartbeat_ms must be a number"))?;
+            anyhow::ensure!(
+                hb.is_finite() && hb > 0.0,
+                "federation.heartbeat_ms must be finite and > 0, got {hb}"
+            );
+            f.heartbeat_ms = Some(hb);
+        }
+        if let Some(v) = doc.get("federation.heartbeat_max_missed") {
+            let n = v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("federation.heartbeat_max_missed must be a positive integer")
+            })?;
+            anyhow::ensure!(n >= 1, "federation.heartbeat_max_missed must be >= 1, got {n}");
+            f.heartbeat_max_missed = n as u32;
+        }
 
         c.network.topology = if doc.str_or("network.topology", "star") == "mesh" {
             Topology::Mesh
@@ -423,6 +489,26 @@ impl SystemConfig {
             })?;
             anyhow::ensure!(n >= 1, "serving.max_inflight must be >= 1, got {n}");
             c.serving.max_inflight = Some(n);
+        }
+        // Liveness-plane knobs share one shape: optional, strictly
+        // positive, and loud on malformed input — a silently ignored
+        // deadline or watchdog would corrupt SLO experiments.
+        for (key, slot) in [
+            ("serving.session_deadline_ms", &mut c.serving.session_deadline_ms),
+            ("serving.watchdog_ms", &mut c.serving.watchdog_ms),
+            ("serving.slo_prior_ms", &mut c.serving.slo_prior_ms),
+            ("serving.drain_after_ms", &mut c.serving.drain_after_ms),
+        ] {
+            if let Some(v) = doc.get(key) {
+                let ms = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a number"))?;
+                anyhow::ensure!(
+                    ms.is_finite() && ms > 0.0,
+                    "{key} must be finite and > 0, got {ms}"
+                );
+                *slot = Some(ms);
+            }
         }
         Ok(c)
     }
@@ -685,6 +771,64 @@ mod tests {
         assert!(SystemConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[node]\nengine_dir = 7").unwrap();
         assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn heartbeat_parses_and_validates() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.federation.heartbeat_ms, None);
+        assert_eq!(c.federation.heartbeat_max_missed, 2);
+
+        let doc = TomlDoc::parse(
+            "[federation]\nheartbeat_ms = 500.0\nheartbeat_max_missed = 3",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.federation.heartbeat_ms, Some(500.0));
+        assert_eq!(c.federation.heartbeat_max_missed, 3);
+
+        // Present but malformed: loud failure, not a silent default.
+        let doc = TomlDoc::parse("[federation]\nheartbeat_ms = 0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[federation]\nheartbeat_ms = \"fast\"").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[federation]\nheartbeat_max_missed = 0").unwrap();
+        assert!(SystemConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn liveness_knobs_parse_and_validate() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.serving.session_deadline_ms, None);
+        assert_eq!(c.serving.watchdog_ms, None);
+        assert_eq!(c.serving.slo_prior_ms, None);
+        assert_eq!(c.serving.drain_after_ms, None);
+
+        let doc = TomlDoc::parse(
+            "[serving]\nsession_deadline_ms = 1500.0\nwatchdog_ms = 400.0\n\
+             slo_prior_ms = 120.0\ndrain_after_ms = 60000",
+        )
+        .unwrap();
+        let c = SystemConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.serving.session_deadline_ms, Some(1500.0));
+        assert_eq!(c.serving.watchdog_ms, Some(400.0));
+        assert_eq!(c.serving.slo_prior_ms, Some(120.0));
+        assert_eq!(c.serving.drain_after_ms, Some(60000.0));
+
+        // Zero, negative, and non-numeric values all fail loudly for
+        // every knob in the family.
+        for key in
+            ["session_deadline_ms", "watchdog_ms", "slo_prior_ms", "drain_after_ms"]
+        {
+            let doc = TomlDoc::parse(&format!("[serving]\n{key} = 0")).unwrap();
+            assert!(SystemConfig::from_toml(&doc).is_err(), "{key} = 0 must fail");
+            let doc = TomlDoc::parse(&format!("[serving]\n{key} = -10.0")).unwrap();
+            assert!(SystemConfig::from_toml(&doc).is_err(), "{key} < 0 must fail");
+            let doc = TomlDoc::parse(&format!("[serving]\n{key} = \"soon\"")).unwrap();
+            assert!(SystemConfig::from_toml(&doc).is_err(), "{key} non-numeric must fail");
+        }
     }
 
     #[test]

@@ -86,6 +86,29 @@ pub struct CoordinatorConfig {
     /// Max sessions admitted past the queue at once (fabric mode);
     /// `None` = 4 × engines.
     pub max_inflight: Option<usize>,
+    /// End-to-end per-session budget in ms, queue wait included
+    /// (`serving.session_deadline_ms` / `--session-deadline`); fabric
+    /// mode cancels over-budget sessions into the `deadline_killed`
+    /// bucket.  `None` = no deadline.
+    pub session_deadline_ms: Option<f64>,
+    /// Stuck-session watchdog window in ms (`serving.watchdog_ms` /
+    /// `--watchdog`); fabric mode only.  `None` = off.
+    pub watchdog_ms: Option<f64>,
+    /// Service-time prior seeding the reject-over-SLO wait predictor
+    /// (`serving.slo_prior_ms` / `--slo-prior`).  `None` = admit
+    /// blind until the first completion.
+    pub slo_prior_ms: Option<f64>,
+    /// Graceful drain: stop admitting this many ms into a fabric serve
+    /// run (`serving.drain_after_ms` / `--drain-after`) — the CLI
+    /// approximation of a SIGTERM-triggered drain.  `None` = never.
+    pub drain_after_ms: Option<f64>,
+    /// Wire-session heartbeat window in ms (`federation.heartbeat_ms` /
+    /// `--heartbeat`): the driver pings every node at round
+    /// boundaries and demotes after `heartbeat_max_missed` consecutive
+    /// misses.  `None` = off; in-process sessions ignore it.
+    pub heartbeat_ms: Option<f64>,
+    /// Consecutive missed heartbeats before demotion (min 1).
+    pub heartbeat_max_missed: u32,
 }
 
 impl CoordinatorConfig {
@@ -119,6 +142,12 @@ impl CoordinatorConfig {
             fabric: sc.serving.fabric,
             admission: sc.serving.admission,
             max_inflight: sc.serving.max_inflight,
+            session_deadline_ms: sc.serving.session_deadline_ms,
+            watchdog_ms: sc.serving.watchdog_ms,
+            slo_prior_ms: sc.serving.slo_prior_ms,
+            drain_after_ms: sc.serving.drain_after_ms,
+            heartbeat_ms: sc.federation.heartbeat_ms,
+            heartbeat_max_missed: sc.federation.heartbeat_max_missed,
         }
     }
 
@@ -165,6 +194,14 @@ pub struct ServeReport {
     pub failed: Vec<FailedTask>,
     /// Tasks shed or rejected by admission control (fabric mode).
     pub dropped: Vec<DroppedTask>,
+    /// Sessions cancelled over their end-to-end deadline (fabric mode).
+    pub deadline_killed: Vec<FailedTask>,
+    /// Sessions cancelled by the stuck-session watchdog (fabric mode).
+    pub watchdog_killed: Vec<FailedTask>,
+    /// Task ids that never started because the fabric was draining.
+    pub drained: Vec<usize>,
+    /// Wedged engine workers replaced from the spare budget.
+    pub replaced_workers: u64,
     pub makespan_ms: f64,
 }
 
@@ -179,6 +216,18 @@ impl ServeReport {
     /// Tasks that started but errored (excluded from every other stat).
     pub fn failed_count(&self) -> usize {
         self.failed.len()
+    }
+
+    /// Every offered task, summed across all outcome buckets (completed,
+    /// failed, dropped, deadline-killed, watchdog-killed, drained) — the
+    /// liveness invariant is `accounted() == tasks offered`.
+    pub fn accounted(&self) -> usize {
+        self.results.len()
+            + self.failed.len()
+            + self.dropped.len()
+            + self.deadline_killed.len()
+            + self.watchdog_killed.len()
+            + self.drained.len()
     }
 
     pub fn throughput_tasks_per_s(&self) -> f64 {
@@ -350,6 +399,8 @@ impl Coordinator {
         scfg.round_deadline_ms = cfg.round_deadline_ms;
         scfg.delta_frames = cfg.delta_frames;
         scfg.kv_precision = cfg.kv_precision;
+        scfg.heartbeat_ms = cfg.heartbeat_ms;
+        scfg.heartbeat_max_missed = cfg.heartbeat_max_missed;
         scfg.seed = task_seed;
         // The session borrows the coordinator's shared pool; keep
         // workers = 1 so FedSession::new doesn't spawn a throwaway one.
@@ -540,6 +591,10 @@ impl Coordinator {
             results,
             failed,
             dropped: Vec::new(),
+            deadline_killed: Vec::new(),
+            watchdog_killed: Vec::new(),
+            drained: Vec::new(),
+            replaced_workers: 0,
             makespan_ms: start.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -548,13 +603,30 @@ impl Coordinator {
     /// state machine scheduled by [`run_fabric`].
     fn serve_trace_fabric(&self, trace: &WorkloadTrace) -> Result<ServeReport> {
         let engines = self.cfg.engines.max(1);
+        // `drain_after_ms` is the CLI stand-in for an operator SIGTERM: a
+        // timer thread flips the drain signal mid-run, the fabric stops
+        // admitting, and in-flight sessions finish (or deadline-kill).
+        let drain = self.cfg.drain_after_ms.map(|after_ms| {
+            let signal = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let armed = Arc::clone(&signal);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(after_ms / 1e3));
+                armed.store(true, std::sync::atomic::Ordering::SeqCst);
+            });
+            signal
+        });
         let fcfg = FabricConfig {
             engines,
             queue_depth: self.cfg.queue_depth,
             max_inflight: self.cfg.max_inflight.unwrap_or(4 * engines),
             admission: self.cfg.admission,
+            service_prior_ms: self.cfg.slo_prior_ms,
             batching: true,
             time_scale: self.cfg.time_scale,
+            session_deadline_ms: self.cfg.session_deadline_ms,
+            watchdog_ms: self.cfg.watchdog_ms,
+            drain,
+            faults: None,
         };
         let tasks: Vec<(f64, Box<dyn FabricTask + '_>)> = trace
             .tasks
@@ -578,10 +650,20 @@ impl Coordinator {
         results.sort_by_key(|r| r.task_id);
         let mut failed = out.failed;
         failed.sort_by_key(|f| f.task_id);
+        let mut deadline_killed = out.deadline_killed;
+        deadline_killed.sort_by_key(|f| f.task_id);
+        let mut watchdog_killed = out.watchdog_killed;
+        watchdog_killed.sort_by_key(|f| f.task_id);
+        let mut drained = out.drained;
+        drained.sort_unstable();
         Ok(ServeReport {
             results,
             failed,
             dropped: out.dropped,
+            deadline_killed,
+            watchdog_killed,
+            drained,
+            replaced_workers: out.replaced_workers,
             makespan_ms: out.makespan_ms,
         })
     }
@@ -752,6 +834,13 @@ mod tests {
             results: vec![mk(0, 10.0, true), mk(1, 20.0, false), mk(2, 30.0, true)],
             failed: vec![FailedTask { task_id: 3, error: "transport lost".into() }],
             dropped: Vec::new(),
+            deadline_killed: vec![FailedTask {
+                task_id: 4,
+                error: "session deadline exceeded".into(),
+            }],
+            watchdog_killed: Vec::new(),
+            drained: vec![5, 6],
+            replaced_workers: 0,
             makespan_ms: 1000.0,
         };
         // Stats run over completions only; the failure is counted apart.
@@ -760,6 +849,8 @@ mod tests {
         assert_eq!(rep.latency_percentile(100.0), 30.0);
         assert_eq!(rep.failed_count(), 1);
         assert_eq!(rep.failed[0].task_id, 3);
+        // Liveness buckets count toward the offered-task accounting.
+        assert_eq!(rep.accounted(), 3 + 1 + 1 + 2);
     }
 
     #[test]
@@ -783,6 +874,10 @@ mod tests {
             results: (0..10).map(|i| mk(i, (i + 1) as f64)).collect(),
             failed: Vec::new(),
             dropped: Vec::new(),
+            deadline_killed: Vec::new(),
+            watchdog_killed: Vec::new(),
+            drained: Vec::new(),
+            replaced_workers: 0,
             makespan_ms: 100.0,
         };
         // `percentile` indexes round(p · (n−1)): p50 of 1..=10 → v[5].
@@ -799,6 +894,10 @@ mod tests {
             results: Vec::new(),
             failed: Vec::new(),
             dropped: Vec::new(),
+            deadline_killed: Vec::new(),
+            watchdog_killed: Vec::new(),
+            drained: Vec::new(),
+            replaced_workers: 0,
             makespan_ms: 0.0,
         };
         assert_eq!(rep.em_rate(), 0.0);

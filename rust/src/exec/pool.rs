@@ -109,7 +109,18 @@ impl Pool {
         let mut got = 0usize;
         let mut panicked = 0usize;
         while got < n {
-            let (i, v) = rrx.recv().expect("scope worker vanished");
+            let Ok((i, v)) = rrx.recv() else {
+                // Every result sender is gone with results still owed: a
+                // task vanished without reporting.  That happens when the
+                // panic payload itself panics on drop — the inner
+                // `catch_unwind` returns the payload, `.ok()` drops it,
+                // and the drop-panic unwinds past the reporting `send`
+                // (caught by the worker loop, which survives).  Fold the
+                // missing tasks into the ScopeError instead of panicking
+                // the caller's thread.
+                panicked += n - got;
+                break;
+            };
             if let Some(v) = v {
                 slots[i] = Some(v);
             } else {
@@ -172,6 +183,36 @@ mod tests {
             .unwrap_err();
         assert_eq!(err.panicked, 1);
         assert_eq!(err.total, 10);
+    }
+
+    #[test]
+    fn scope_map_survives_drop_panicking_payload() {
+        // A panic payload whose Drop itself panics never reaches the
+        // result channel: the inner catch_unwind hands the payload to
+        // `.ok()`, dropping it re-panics, and the reporting send is
+        // skipped.  This used to abort the caller via
+        // `rrx.recv().expect(..)`; it must surface as ScopeError.
+        struct DropBomb;
+        impl Drop for DropBomb {
+            fn drop(&mut self) {
+                if !std::thread::panicking() {
+                    panic!("payload drop panic");
+                }
+            }
+        }
+        let pool = Pool::new(2);
+        let err = pool
+            .scope_map(6, |i| {
+                if i == 3 {
+                    std::panic::panic_any(DropBomb);
+                }
+                i
+            })
+            .unwrap_err();
+        assert_eq!(err.panicked, 1);
+        assert_eq!(err.total, 6);
+        // The pool stays usable for the next region.
+        assert_eq!(pool.scope_map(3, |i| i + 1).unwrap(), vec![1, 2, 3]);
     }
 
     #[test]

@@ -89,7 +89,7 @@ use crate::fedattn::protocol::{requantize_row, GlobalKvFrame, KvContribution, Kv
 use crate::fedattn::relevance::{self, RelevanceTracker};
 use crate::fedattn::schedule::SyncSchedule;
 use crate::fedattn::sparse::{KvExchangePolicy, LocalSparsity, TxContext};
-use crate::fedattn::transport::{RemoteParticipant, Transport};
+use crate::fedattn::transport::{read_timeout_for_deadline, RemoteParticipant, Transport};
 use crate::net::{NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::tensor::HostTensor;
@@ -197,6 +197,20 @@ pub struct SessionConfig {
     ///
     /// [`KvPrecision::wire_row_bytes`]: crate::fedattn::protocol::KvPrecision::wire_row_bytes
     pub kv_precision: KvPrecision,
+    /// Liveness heartbeats (`federation.heartbeat_ms` / `--heartbeat`,
+    /// default off): in wire mode the driver pings every `Alive` node at
+    /// each block-round boundary and waits up to this window (ms) for
+    /// the echoed `Pong`.  A node that misses
+    /// [`SessionConfig::heartbeat_max_missed`] consecutive beats is
+    /// handed to the churn machinery — probation when rejoin is armed,
+    /// demotion otherwise — so a wedged host is caught in
+    /// O(heartbeat_ms) instead of a round-deadline read timeout.  `None`
+    /// sends nothing and is byte-identical to the pre-heartbeat driver;
+    /// in-process sessions ignore it.
+    pub heartbeat_ms: Option<f64>,
+    /// Consecutive missed beats (retried back-to-back within one
+    /// boundary) tolerated before demotion.  Clamped to ≥ 1.
+    pub heartbeat_max_missed: u32,
 }
 
 impl SessionConfig {
@@ -219,6 +233,8 @@ impl SessionConfig {
             rejoin_max_attempts: 3,
             late_overrides: None,
             kv_precision: KvPrecision::F32,
+            heartbeat_ms: None,
+            heartbeat_max_missed: 2,
         }
     }
 }
@@ -381,6 +397,14 @@ impl<'a> SessionDriver<'a> {
                 "round_deadline_ms must be >= 0, got {d}"
             );
         }
+        if let Some(hb) = cfg.heartbeat_ms {
+            // The window bounds a real socket wait, so unlike the round
+            // deadline it must be finite and strictly positive.
+            anyhow::ensure!(
+                hb > 0.0 && hb.is_finite(),
+                "heartbeat_ms must be finite and > 0, got {hb}"
+            );
+        }
         let mut rng = Xoshiro256ss::new(cfg.seed ^ 0x5E55_10);
         let publisher = partition.publisher();
 
@@ -536,6 +560,49 @@ impl<'a> SessionDriver<'a> {
             self.wire_state[p] = WireState::Demoted;
             self.net.record_demotion();
             log::warn!("node {p} demoted for the rest of the session: {why:#}");
+        }
+    }
+
+    /// One round-boundary heartbeat pass: ping every `Alive` node with a
+    /// fresh sequence number, retrying a missed beat back-to-back up to
+    /// `heartbeat_max_missed` times before handing the node to
+    /// [`SessionDriver::demote`] (probation when rejoin is armed).
+    /// Heartbeats are control-plane traffic: not billed, invisible to
+    /// byte accounting, and a session where every beat answers is
+    /// byte-identical to one that never pinged.
+    fn heartbeat_round(
+        &mut self,
+        remotes: &mut [RemoteParticipant],
+        window_ms: f64,
+        seq: &mut u32,
+    ) {
+        let window = std::time::Duration::from_secs_f64(window_ms / 1e3);
+        // After the beat the transport must wait like any protocol turn
+        // again (the dial-site grace default applies; a custom grace only
+        // shifts this bound, never the heartbeat's own window).
+        let restore = read_timeout_for_deadline(self.cfg.round_deadline_ms);
+        for p in 0..self.wire_state.len() {
+            if self.wire_state[p] != WireState::Alive {
+                continue;
+            }
+            let mut last_err: Option<anyhow::Error> = None;
+            for _ in 0..self.cfg.heartbeat_max_missed.max(1) {
+                *seq = seq.wrapping_add(1);
+                match remotes[p].ping(*seq, window, restore) {
+                    Ok(()) => {
+                        last_err = None;
+                        break;
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+            if let Some(e) = last_err {
+                let why = e.context(format!(
+                    "node {p} missed {} consecutive heartbeats ({window_ms} ms window)",
+                    self.cfg.heartbeat_max_missed.max(1)
+                ));
+                self.demote(p, &why);
+            }
         }
     }
 
@@ -1079,12 +1146,23 @@ impl<'a> SessionDriver<'a> {
         let recovery = self.cfg.rejoin && self.reconnector.is_some();
         self.rejoin_window = recovery;
         let mut resync_log: Vec<ResyncRound> = Vec::new();
+        // Heartbeat sequence counter: one stream per session, so a
+        // straggler pong can never match a later beat.
+        let mut hb_seq = 0u32;
         for m in 0..n_layers {
             // Round boundary: readmit probation nodes before this block's
             // planning, so a rejoined node is a full participant from
             // block `m` on (replayed up to exactly here).
             if recovery {
                 self.try_rejoins(remotes, &resync_log, m);
+            }
+            // Liveness heartbeats: probe every Alive node before this
+            // block's turns, so a wedged host fails fast here (and feeds
+            // the same probation/demotion machinery as any transport
+            // fault) instead of stalling a protocol turn until the
+            // round-deadline read timeout.
+            if let Some(hb) = self.cfg.heartbeat_ms {
+                self.heartbeat_round(remotes, hb, &mut hb_seq);
             }
             let attend = self.schedule.attend[m].clone();
 

@@ -663,6 +663,8 @@ const CTRL_FAULT: u8 = 9;
 const CTRL_REJOIN: u8 = 10;
 const CTRL_REJOIN_ACK: u8 = 11;
 const CTRL_RESYNC: u8 = 12;
+const CTRL_PING: u8 = 13;
+const CTRL_PONG: u8 = 14;
 
 /// Driver↔node control messages.  By construction no variant can carry
 /// an embedding or a hidden state: the handshake ships plain vocabulary
@@ -788,6 +790,15 @@ pub enum CtrlMsg {
         /// control frame; decoded with the standard frame codec).
         frame: Vec<u8>,
     },
+    /// Driver → node: liveness probe.  Sent at round boundaries when
+    /// heartbeats are armed (`federation.heartbeat_ms`); the node must
+    /// echo the sequence number back as [`CtrlMsg::Pong`] within the
+    /// heartbeat window or the driver hands it to the churn machinery
+    /// (probation when rejoin is armed, demotion otherwise).  Carries no
+    /// session state, so a host may answer it even before `Join`.
+    Ping { seq: u32 },
+    /// Node → driver: echo of a [`CtrlMsg::Ping`], same `seq`.
+    Pong { seq: u32 },
 }
 
 fn read_bool(r: &mut Reader<'_>, what: &str) -> Result<bool, WireError> {
@@ -830,6 +841,8 @@ impl CtrlMsg {
             CtrlMsg::Rejoin { .. } => "rejoin",
             CtrlMsg::RejoinAck { .. } => "rejoin-ack",
             CtrlMsg::Resync { .. } => "resync",
+            CtrlMsg::Ping { .. } => "ping",
+            CtrlMsg::Pong { .. } => "pong",
         }
     }
 
@@ -962,6 +975,16 @@ impl CtrlMsg {
                 w.bytes(frame);
                 w.finish()
             }
+            CtrlMsg::Ping { seq } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_PING, 4);
+                w.u32(*seq);
+                w.finish()
+            }
+            CtrlMsg::Pong { seq } => {
+                let mut w = Writer::with_magic(CTRL_MAGIC, CTRL_PONG, 4);
+                w.u32(*seq);
+                w.finish()
+            }
         }
     }
 
@@ -1088,6 +1111,8 @@ impl CtrlMsg {
                 let frame = r.take(len)?.to_vec();
                 CtrlMsg::Resync { block, epoch, frame }
             }
+            CTRL_PING => CtrlMsg::Ping { seq: r.u32()? },
+            CTRL_PONG => CtrlMsg::Pong { seq: r.u32()? },
             other => return Err(WireError::Malformed(format!("unknown control tag {other}"))),
         };
         r.done()?;
@@ -1166,6 +1191,41 @@ impl RemoteParticipant {
 
     pub(crate) fn id(&self) -> usize {
         self.id
+    }
+
+    /// One liveness turn: send [`CtrlMsg::Ping`] and wait up to `window`
+    /// for the matching [`CtrlMsg::Pong`].  The read timeout is
+    /// re-armed to the heartbeat window for the echo — that is the whole
+    /// point: an unresponsive host is detected in O(window) instead of
+    /// the round-deadline read timeout — and restored to `restore`
+    /// before returning, success or failure, so the next protocol turn
+    /// sees the session timeout.  A stale pong from an earlier,
+    /// timed-out beat (lower seq) is consumed and skipped so a
+    /// slow-but-alive node does not desynchronize the stream.
+    pub(crate) fn ping(&mut self, seq: u32, window: Duration, restore: Duration) -> Result<()> {
+        self.transport.set_recv_timeout(window)?;
+        let turn = (|| -> Result<()> {
+            self.transport.send(&CtrlMsg::Ping { seq }.encode())?;
+            loop {
+                let frame = self.transport.recv()?;
+                self.check_fault(&frame)?;
+                match CtrlMsg::decode(&frame)? {
+                    CtrlMsg::Pong { seq: got } if got == seq => return Ok(()),
+                    CtrlMsg::Pong { seq: got } if got < seq => continue,
+                    other => anyhow::bail!(
+                        "node {}: expected pong seq {seq}, got {}",
+                        self.id,
+                        other.name()
+                    ),
+                }
+            }
+        })();
+        // Restore even on a failed beat: a missed-beat node may stay on
+        // probation and be spoken to again after a rejoin.
+        let restore_res = self.transport.set_recv_timeout(restore);
+        turn?;
+        restore_res?;
+        Ok(())
     }
 
     pub(crate) fn keeps_caches(&self) -> bool {
@@ -1982,12 +2042,20 @@ impl NodeHost {
                 Ok(false)
             }
             CtrlMsg::Shutdown => Ok(true),
+            // Liveness probe: echo the seq immediately.  Deliberately
+            // stateless — heartbeats are legal before `Join` (`en` may be
+            // `None`) and between any two block turns.
+            CtrlMsg::Ping { seq } => {
+                self.transport.send(&CtrlMsg::Pong { seq }.encode())?;
+                Ok(false)
+            }
             other @ (CtrlMsg::JoinAck { .. }
             | CtrlMsg::RejoinAck { .. }
             | CtrlMsg::Resync { .. }
             | CtrlMsg::RoundMass { .. }
             | CtrlMsg::DecodeDone { .. }
-            | CtrlMsg::Fault { .. }) => {
+            | CtrlMsg::Fault { .. }
+            | CtrlMsg::Pong { .. }) => {
                 anyhow::bail!("unexpected {} control frame at node host", other.name())
             }
         }
@@ -2259,6 +2327,9 @@ mod tests {
             CtrlMsg::RejoinAck { id: 1, valid: 2, n_layers: 8, kv_heads: 2, head_dim: 24 },
             CtrlMsg::Resync { block: 3, epoch: 9, frame: vec![0xFA, 2, 1, 0, 7] },
             CtrlMsg::Resync { block: 0, epoch: 0, frame: vec![] },
+            CtrlMsg::Ping { seq: 0 },
+            CtrlMsg::Ping { seq: u32::MAX },
+            CtrlMsg::Pong { seq: 41 },
         ];
         for msg in msgs {
             let bytes = msg.encode();
@@ -2304,6 +2375,10 @@ mod tests {
         let mut adv = CtrlMsg::AdvanceLocal { block: 1 }.encode();
         adv[2] = 2;
         assert!(CtrlMsg::decode(&adv).is_err());
+        // Heartbeats included: strictly version 1.
+        let mut ping = CtrlMsg::Ping { seq: 7 }.encode();
+        ping[2] = 2;
+        assert!(CtrlMsg::decode(&ping).is_err());
     }
 
     #[test]
@@ -2365,12 +2440,50 @@ mod tests {
         for cut in 0..full.len() {
             assert!(CtrlMsg::decode(&full[..cut]).is_err(), "resync cut at {cut}");
         }
+        // Heartbeat frames truncate cleanly too (4-byte seq body).
+        for full in [CtrlMsg::Ping { seq: 9 }.encode(), CtrlMsg::Pong { seq: 9 }.encode()] {
+            for cut in 0..full.len() {
+                assert!(CtrlMsg::decode(&full[..cut]).is_err(), "heartbeat cut at {cut}");
+            }
+            // Trailing garbage is non-canonical.
+            let mut long = full.clone();
+            long.push(0);
+            assert!(CtrlMsg::decode(&long).is_err());
+        }
         // Hostile resync payload length must fail before allocating.
         let mut msg = vec![CTRL_MAGIC, CTRL_RESYNC, 1];
         msg.extend_from_slice(&0u32.to_le_bytes());
         msg.extend_from_slice(&0u32.to_le_bytes());
         msg.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(CtrlMsg::decode(&msg).is_err());
+    }
+
+    #[test]
+    fn ping_turn_matches_seq_skips_stragglers_and_times_out() {
+        let (a, mut b) = ChannelTransport::pair();
+        let mut p = RemoteParticipant::new(0, vec![0], 1, false, Box::new(a));
+        let win = Duration::from_millis(200);
+        let restore = Duration::from_secs(2);
+        let peer = std::thread::spawn(move || {
+            // Beat 1: a straggler pong from an imaginary earlier beat
+            // arrives first; the driver must skip it and accept the echo.
+            let CtrlMsg::Ping { seq } = CtrlMsg::decode(&b.recv().unwrap()).unwrap() else {
+                panic!("expected ping");
+            };
+            b.send(&CtrlMsg::Pong { seq: seq - 1 }.encode()).unwrap();
+            b.send(&CtrlMsg::Pong { seq }.encode()).unwrap();
+            // Beat 2: answer with the wrong frame kind entirely.
+            let _ = b.recv().unwrap();
+            b.send(&CtrlMsg::DecodeDone { tokens: 0 }.encode()).unwrap();
+            // Beat 3: go silent (keep the link open so the driver hits
+            // the heartbeat window, not a clean close).
+            let _ = b.recv().unwrap();
+            b
+        });
+        p.ping(7, win, restore).unwrap();
+        assert!(p.ping(8, win, restore).is_err(), "non-pong reply must fail the beat");
+        assert!(p.ping(9, win, restore).is_err(), "a silent peer must time out in O(window)");
+        let _b = peer.join().unwrap();
     }
 
     #[test]
@@ -2643,7 +2756,7 @@ mod tests {
             // the magic/tag checks and into the length-validation paths.
             if rng.bernoulli(0.5) && bytes.len() >= 3 {
                 bytes[0] = CTRL_MAGIC;
-                bytes[1] = 1 + rng.below(12) as u8;
+                bytes[1] = 1 + rng.below(14) as u8;
                 // Both live wire versions: v2 exercises the quantized
                 // handshake paths (precision byte on Join/Rejoin, outright
                 // rejection everywhere else).

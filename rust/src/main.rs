@@ -137,7 +137,33 @@ fn print_help() {
            --slo-ms <ms>              serve: predicted-wait SLO for\n\
                                       reject-over-slo\n\
            --max-inflight <n>         serve: max sessions admitted at once\n\
-                                      (fabric; default 4 x engines)"
+                                      (fabric; default 4 x engines)\n\
+           --session-deadline <ms>    serve: end-to-end per-session deadline\n\
+                                      (fabric; clock starts at the admission\n\
+                                      offer, queue wait included; over-budget\n\
+                                      sessions are cancelled at the next\n\
+                                      resume point; off|none disables)\n\
+           --watchdog <ms>            serve: stuck-session watchdog (fabric;\n\
+                                      a dispatched work item making no\n\
+                                      progress for this long is cancelled and\n\
+                                      its wedged worker replaced by a spare;\n\
+                                      off|none disables)\n\
+           --slo-prior <ms>           serve: optimistic service-time prior\n\
+                                      seeding the reject-over-slo EMA, so\n\
+                                      gating engages before the first\n\
+                                      completion (off|none disables)\n\
+           --drain-after <ms>         serve: graceful drain this long after\n\
+                                      start (SIGTERM stand-in): stop\n\
+                                      admitting, finish in-flight work,\n\
+                                      report the rest as drained\n\
+           --heartbeat <ms>           run/serve --connect: ping each node\n\
+                                      host at layer boundaries once this\n\
+                                      interval has elapsed; a silent node is\n\
+                                      demoted (or put on probation with\n\
+                                      --rejoin) without waiting for a round\n\
+                                      deadline (off|none disables)\n\
+           --heartbeat-max-missed <n> consecutive missed heartbeats tolerated\n\
+                                      before demotion (default 2)"
     );
 }
 
@@ -184,6 +210,12 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     if let Some(on) = fedattn::cli::parse_rejoin(args)? {
         f.rejoin = on;
     }
+    if let Some(hb) = fedattn::cli::parse_heartbeat_ms(args)? {
+        f.heartbeat_ms = hb;
+    }
+    if let Some(n) = fedattn::cli::parse_heartbeat_max_missed(args)? {
+        f.heartbeat_max_missed = n;
+    }
     if let Some(n) = fedattn::cli::parse_retry_max_attempts(args)? {
         sc.transport.retry_max_attempts = n;
     }
@@ -212,6 +244,18 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     }
     if let Some(n) = fedattn::cli::parse_max_inflight(args)? {
         sc.serving.max_inflight = Some(n);
+    }
+    if let Some(d) = fedattn::cli::parse_session_deadline(args)? {
+        sc.serving.session_deadline_ms = d;
+    }
+    if let Some(w) = fedattn::cli::parse_watchdog_ms(args)? {
+        sc.serving.watchdog_ms = w;
+    }
+    if let Some(p) = fedattn::cli::parse_slo_prior(args)? {
+        sc.serving.slo_prior_ms = p;
+    }
+    if let Some(d) = fedattn::cli::parse_drain_after(args)? {
+        sc.serving.drain_after_ms = d;
     }
     Ok(sc)
 }
@@ -316,6 +360,8 @@ fn cmd_run_wire(args: &Args, sc: &SystemConfig, addrs: &[String]) -> Result<()> 
     scfg.delta_frames = sc.federation.delta_frames;
     scfg.rejoin = sc.federation.rejoin;
     scfg.kv_precision = sc.federation.kv_precision;
+    scfg.heartbeat_ms = sc.federation.heartbeat_ms;
+    scfg.heartbeat_max_missed = sc.federation.heartbeat_max_missed;
     scfg.rejoin_max_attempts = sc.transport.retry_max_attempts;
     scfg.seed = sc.seed;
     scfg.workers = sc.serving.workers;
@@ -488,6 +534,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             rep.dropped.len(),
             shed,
             rep.dropped.len() - shed
+        );
+    }
+    if !rep.deadline_killed.is_empty() {
+        println!("slo-killed  : {} over the session deadline", rep.deadline_killed.len());
+        for f in &rep.deadline_killed {
+            println!("  task {}: {}", f.task_id, f.error);
+        }
+    }
+    if !rep.watchdog_killed.is_empty() {
+        println!("wdog-killed : {} stuck sessions cancelled", rep.watchdog_killed.len());
+        for f in &rep.watchdog_killed {
+            println!("  task {}: {}", f.task_id, f.error);
+        }
+    }
+    if !rep.drained.is_empty() {
+        println!(
+            "drained     : {} never admitted (graceful drain)",
+            rep.drained.len()
+        );
+    }
+    if rep.replaced_workers > 0 {
+        println!(
+            "spares      : {} wedged engine worker(s) replaced",
+            rep.replaced_workers
         );
     }
     let comm: u64 = rep.results.iter().map(|r| r.comm_bytes).sum();

@@ -14,8 +14,12 @@
 //!   overload; the shed task is recorded).
 //! * [`AdmissionPolicy::RejectOverSlo`] — reject an arrival outright when
 //!   its predicted queue wait exceeds the SLO.  The prediction is
-//!   `queued × service_EMA / engines`; with no completed task yet (no
-//!   EMA) every arrival is admitted.
+//!   `queued × service_EMA / engines`.  With no completed task yet the
+//!   EMA is blind; [`AdmissionController::with_service_prior`] seeds it
+//!   with a prior service time (`serving.slo_prior_ms` /
+//!   `--slo-prior-ms`) so a burst at startup is gated instead of
+//!   admitted wholesale.  Without a prior the historical behaviour
+//!   stands: every arrival is admitted until the first completion.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -107,6 +111,16 @@ impl<T> AdmissionController<T> {
         }
     }
 
+    /// Seed the service-time predictor before the first completion.
+    /// The prior behaves exactly like an already-observed EMA: the wait
+    /// prediction uses it immediately, and the first real completion
+    /// blends into it (`0.3·obs + 0.7·prior`) rather than replacing it.
+    /// `None` keeps the cold-start admit-when-blind behaviour.
+    pub fn with_service_prior(self, prior_ms: Option<f64>) -> Self {
+        *self.service_ema_ms.lock().unwrap() = prior_ms;
+        self
+    }
+
     pub fn policy(&self) -> AdmissionPolicy {
         self.policy
     }
@@ -170,7 +184,8 @@ impl<T> AdmissionController<T> {
 
     /// Predicted queue wait for a new arrival: tasks ahead of it, each
     /// costing one mean service time, spread over the engine workers.
-    /// 0.0 until the first completion (admit when blind).
+    /// 0.0 until the first completion (admit when blind) unless a
+    /// service prior seeded the EMA.
     pub fn predicted_wait_ms(&self) -> f64 {
         match *self.service_ema_ms.lock().unwrap() {
             Some(ema) => self.queue.len() as f64 * ema / self.engines as f64,
@@ -240,6 +255,35 @@ mod tests {
         ac.take().unwrap();
         ac.take().unwrap();
         assert!(ac.offer(3, 3));
+    }
+
+    #[test]
+    fn reject_over_slo_with_prior_gates_a_startup_burst() {
+        // Same burst as the blind test above, but the predictor is
+        // seeded: the third arrival is rejected before any task has
+        // completed (2 queued × 80 ms prior = 160 ms > 100 ms SLO).
+        let ac: AdmissionController<u32> =
+            AdmissionController::new(AdmissionPolicy::RejectOverSlo { slo_ms: 100.0 }, 8, 1)
+                .with_service_prior(Some(80.0));
+        assert!(ac.offer(0, 0)); // predicted 0 (empty queue)
+        assert!(ac.offer(1, 1)); // predicted 80 ≤ 100
+        assert!(!ac.offer(2, 2)); // predicted 160 > 100 → rejected
+        let dropped = ac.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].task_id, 2);
+        assert_eq!(dropped[0].reason, DropReason::Rejected);
+        // The first real completion blends into the prior instead of
+        // replacing it: 0.3·10 + 0.7·80 = 59.
+        ac.observe_service(10.0);
+        assert!((ac.predicted_wait_ms() - 2.0 * 59.0).abs() < 1e-9);
+        // A None prior is byte-identical to no prior at all.
+        let blind: AdmissionController<u32> =
+            AdmissionController::new(AdmissionPolicy::RejectOverSlo { slo_ms: 100.0 }, 8, 1)
+                .with_service_prior(None);
+        for id in 0..5 {
+            assert!(blind.offer(id, id as u32));
+        }
+        assert_eq!(blind.predicted_wait_ms(), 0.0);
     }
 
     #[test]

@@ -26,9 +26,40 @@
 //! decode (wire mode).  Batched and per-session decode produce
 //! byte-identical transcripts; the `serving_fabric` differential test
 //! pins this against the golden session fixture.
+//!
+//! # Liveness plane
+//!
+//! Three cooperative mechanisms bound how long any session can occupy
+//! the fabric, each defaulting off (an unarmed fabric is byte-identical
+//! to the pre-liveness scheduler):
+//!
+//! * **Session deadline** ([`FabricConfig::session_deadline_ms`]): an
+//!   end-to-end budget from admission (queue wait included).  It is
+//!   checked at every scheduler resume point — admit, post-prefill,
+//!   cohort formation, and after every cohort step — and an over-budget
+//!   session is cancelled into [`FabricOutcome::deadline_killed`].
+//!   Cancellation never interrupts an in-flight engine dispatch; it
+//!   takes effect at the next resume point.
+//! * **Stuck-session watchdog** ([`FabricConfig::watchdog_ms`]): workers
+//!   announce each work item they pick up; an item that produces no
+//!   completion event within the window has its sessions cancelled into
+//!   [`FabricOutcome::watchdog_killed`] and the wedged worker replaced
+//!   from a bounded spare budget.  If the stall later resolves, the
+//!   stale completion is discarded — the accounting never double-counts.
+//! * **Graceful drain** ([`FabricConfig::drain`]): flipping the signal
+//!   stops admission (queued tasks land in [`FabricOutcome::drained`]),
+//!   fast-forwards the remaining trace, and lets in-flight sessions
+//!   finish (or deadline-kill); the run then terminates with every
+//!   offered task in exactly one outcome bucket.
+//!
+//! [`FabricFaultSchedule`] injects deterministic chaos (stall / slow
+//! step / member fault / worker panic) keyed per `(task, op)`, so the
+//! same seed draws the same faults regardless of thread interleaving.
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -78,11 +109,36 @@ pub struct FabricConfig {
     /// outcome proves it.
     pub max_inflight: usize,
     pub admission: AdmissionPolicy,
+    /// Seed for the SLO wait predictor before the first completion
+    /// (`serving.slo_prior_ms` / `--slo-prior-ms`): with it,
+    /// reject-over-SLO gates a burst at startup instead of admitting
+    /// blind.  `None` keeps the historical cold-start behaviour.
+    pub service_prior_ms: Option<f64>,
     /// Attempt cross-session batched decode (requires batched artifacts;
     /// falls back per-session when absent).
     pub batching: bool,
     /// Trace time compression (arrival gaps divided by this).
     pub time_scale: f64,
+    /// End-to-end session budget in wall-clock ms, measured from
+    /// admission (queue wait included), checked cooperatively at every
+    /// scheduler resume point (`serving.session_deadline_ms` /
+    /// `--session-deadline`).  Over-budget sessions are cancelled into
+    /// [`FabricOutcome::deadline_killed`].  `None` = no deadline.
+    pub session_deadline_ms: Option<f64>,
+    /// Stuck-item watchdog window in wall-clock ms
+    /// (`serving.watchdog_ms` / `--watchdog-ms`): an in-worker item with
+    /// no completion for this long has its sessions cancelled into
+    /// [`FabricOutcome::watchdog_killed`] and its worker replaced from a
+    /// spare (at most `engines` replacements per run).  `None` = off.
+    pub watchdog_ms: Option<f64>,
+    /// Graceful-drain signal: when flipped to `true` mid-run the fabric
+    /// stops admitting (queued + not-yet-arrived tasks land in
+    /// [`FabricOutcome::drained`]) and in-flight sessions run to
+    /// completion or their deadline.  `None` = not drainable.
+    pub drain: Option<Arc<AtomicBool>>,
+    /// Deterministic chaos injection for tests and burn-in; `None` (the
+    /// default) draws nothing and is byte-identical to no chaos.
+    pub faults: Option<FabricFaultSchedule>,
 }
 
 impl Default for FabricConfig {
@@ -92,9 +148,116 @@ impl Default for FabricConfig {
             queue_depth: 64,
             max_inflight: 4,
             admission: AdmissionPolicy::Block,
+            service_prior_ms: None,
             batching: true,
             time_scale: 1.0,
+            session_deadline_ms: None,
+            watchdog_ms: None,
+            drain: None,
+            faults: None,
         }
+    }
+}
+
+/// One injected fabric fault (see [`FabricFaultSchedule`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricFault {
+    /// The worker sleeps this long *before* running the item — a wedge
+    /// the watchdog should catch (opt-in: wall-clock dependent).
+    StallMs(u64),
+    /// The worker sleeps this long *after* running the item — a slow
+    /// step; progress, just late.
+    SlowMs(u64),
+    /// The member's op fails with an injected error (a prefill failure
+    /// or a cohort slot failure, depending on where it lands).
+    FailSlot,
+    /// The whole work item panics on its worker (exercises the
+    /// poisoned-item path; opt-in).
+    PanicWork,
+}
+
+/// Deterministic fabric chaos, the serving-side sibling of the
+/// transport `FaultSchedule`: each `(task, op)` pair — op 0 is the
+/// task's prefill, op k its k-th decode step — draws independently from
+/// a pure seeded hash.  Because a task's ops are numbered by its own
+/// progress, the same seed draws the same faults no matter how work
+/// interleaves across workers or runs; with panics and stalls off and
+/// singleton cohorts, outcome buckets are exactly reproducible.
+#[derive(Debug, Clone)]
+pub struct FabricFaultSchedule {
+    seed: u64,
+    /// Probability that a given `(task, op)` draws a fault.
+    rate: f64,
+    stall_ms: u64,
+    slow_ms: u64,
+    stalls: bool,
+    panics: bool,
+}
+
+impl FabricFaultSchedule {
+    pub fn from_seed(seed: u64, rate: f64) -> Self {
+        Self {
+            seed,
+            rate: rate.clamp(0.0, 1.0),
+            stall_ms: 50,
+            slow_ms: 2,
+            stalls: false,
+            panics: false,
+        }
+    }
+
+    /// Allow worker-stall faults of `stall_ms` (off by default — they
+    /// interact with wall-clock watchdog timing).
+    pub fn with_stalls(mut self, stall_ms: u64) -> Self {
+        self.stalls = true;
+        self.stall_ms = stall_ms;
+        self
+    }
+
+    /// Slow-step fault delay (default 2 ms).
+    pub fn with_slow_ms(mut self, slow_ms: u64) -> Self {
+        self.slow_ms = slow_ms;
+        self
+    }
+
+    /// Allow injected worker panics (off by default — a panic poisons
+    /// the whole work item, so under multi-member cohorts the blast
+    /// radius depends on cohort composition).
+    pub fn with_panics(mut self) -> Self {
+        self.panics = true;
+        self
+    }
+
+    /// splitmix64 finalizer: a bijective avalanche, so consecutive
+    /// (task, op) keys decorrelate fully.
+    fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    /// The fault (if any) for task `task_id`'s `op`-th unit of work.
+    /// Pure: no state, no RNG stream — safe to call from any thread in
+    /// any order.
+    pub fn at(&self, task_id: usize, op: usize) -> Option<FabricFault> {
+        if self.rate <= 0.0 {
+            return None;
+        }
+        let key = Self::mix(Self::mix(self.seed ^ (task_id as u64)) ^ (op as u64));
+        let u = (key >> 11) as f64 / (1u64 << 53) as f64;
+        if u >= self.rate {
+            return None;
+        }
+        let mut kinds = vec![FabricFault::FailSlot, FabricFault::SlowMs(self.slow_ms)];
+        if self.stalls {
+            kinds.push(FabricFault::StallMs(self.stall_ms));
+        }
+        if self.panics {
+            kinds.push(FabricFault::PanicWork);
+        }
+        let pick = Self::mix(key ^ 0xD6E8_FEB8_6659_FD93) as usize % kinds.len();
+        Some(kinds[pick])
     }
 }
 
@@ -112,6 +275,15 @@ pub struct FabricOutcome {
     pub results: Vec<TaskResult>,
     pub failed: Vec<FailedTask>,
     pub dropped: Vec<DroppedTask>,
+    /// Sessions cancelled over their end-to-end deadline (SLO kills),
+    /// with the resume point and age in the error string.
+    pub deadline_killed: Vec<FailedTask>,
+    /// Sessions cancelled by the stuck-item watchdog.
+    pub watchdog_killed: Vec<FailedTask>,
+    /// Task ids that never started because the fabric was draining.
+    pub drained: Vec<usize>,
+    /// Wedged workers replaced from the spare budget.
+    pub replaced_workers: u64,
     /// High-water mark of concurrently admitted sessions.
     pub peak_inflight: usize,
     /// Cohort decode steps executed as batched dispatches.
@@ -198,6 +370,9 @@ enum Event<'f> {
     Admitted,
     /// The arrival thread replayed the whole trace.
     ArrivalsDone,
+    /// A worker picked up a work item (sent only when the watchdog is
+    /// armed): the scheduler starts the item's no-progress clock.
+    Started { item_seq: u64, task_ids: Vec<usize>, was_prefill: bool },
     Prefilled(Box<dyn FabricTask + 'f>, Option<String>),
     Stepped(Cohort<'f>, Result<Vec<(usize, String)>, String>),
     /// A work item panicked on its worker thread: the tasks it carried
@@ -226,11 +401,32 @@ pub fn run_fabric<'f>(
     cfg: &FabricConfig,
     tasks: Vec<(f64, Box<dyn FabricTask + 'f>)>,
 ) -> Result<FabricOutcome> {
+    if let Some(d) = cfg.session_deadline_ms {
+        anyhow::ensure!(
+            d > 0.0 && d.is_finite(),
+            "session_deadline_ms must be finite and > 0, got {d}"
+        );
+    }
+    if let Some(w) = cfg.watchdog_ms {
+        anyhow::ensure!(
+            w > 0.0 && w.is_finite(),
+            "watchdog_ms must be finite and > 0, got {w}"
+        );
+    }
+    if let Some(p) = cfg.service_prior_ms {
+        anyhow::ensure!(
+            p > 0.0 && p.is_finite(),
+            "slo_prior_ms must be finite and > 0, got {p}"
+        );
+    }
     let admission: AdmissionController<Box<dyn FabricTask + 'f>> =
-        AdmissionController::new(cfg.admission, cfg.queue_depth, cfg.engines);
+        AdmissionController::new(cfg.admission, cfg.queue_depth, cfg.engines)
+            .with_service_prior(cfg.service_prior_ms);
     let work: TaskQueue<Work<'f>> = TaskQueue::new(cfg.queue_depth.max(16));
     let (events_tx, events_rx) = mpsc::channel::<Event<'f>>();
     let max_inflight = cfg.max_inflight.max(1);
+    let deadline = cfg.session_deadline_ms;
+    let watchdog = cfg.watchdog_ms;
 
     // Batched decode is possible only with an engine whose artifact set
     // carries batched variants; the realized width is still bounded per
@@ -241,61 +437,177 @@ pub fn run_fabric<'f>(
         .flatten()
         .unwrap_or(1);
 
+    // Per-task executed-op counters for chaos draws: a task's ops are
+    // numbered by its own progress, so the draw for (task, op) is
+    // interleaving-proof.
+    let fault_ops: Mutex<HashMap<usize, usize>> = Mutex::new(HashMap::new());
+    // Monotone work-item ordinal for watchdog progress tracking.
+    let item_counter = AtomicU64::new(0);
+
     let start = Instant::now();
     let mut outcome = FabricOutcome::default();
 
     std::thread::scope(|s| -> Result<()> {
-        // Engine workers: prefills and cohort steps.  A panicking task
-        // must not take the worker (and with it the whole serve run)
-        // down: the attempt runs under `catch_unwind`, and a poisoned
-        // item is reported by id so the scheduler can record the loss.
-        for _ in 0..cfg.engines.max(1) {
+        // One engine-worker loop, reused for watchdog spares: prefills
+        // and cohort steps.  A panicking task must not take the worker
+        // (and with it the whole serve run) down: the attempt runs under
+        // `catch_unwind`, and a poisoned item is reported by id so the
+        // scheduler can record the loss.  Chaos draws happen here, once
+        // per carried member, keyed by that member's own op counter.
+        let make_worker = {
             let work = &work;
-            let tx = events_tx.clone();
-            s.spawn(move || {
-                while let Some(item) = work.pop() {
-                    let (ids, was_prefill) = match &item {
-                        Work::Prefill(t) => (vec![t.task_id()], true),
-                        Work::Step(c) => {
-                            (c.members.iter().flatten().map(|t| t.task_id()).collect(), false)
+            let fault_ops = &fault_ops;
+            let item_counter = &item_counter;
+            let faults = cfg.faults.as_ref();
+            let watchdog_armed = watchdog.is_some();
+            move |tx: mpsc::Sender<Event<'f>>| {
+                move || {
+                    while let Some(item) = work.pop() {
+                        let (ids, was_prefill) = match &item {
+                            Work::Prefill(t) => (vec![t.task_id()], true),
+                            Work::Step(c) => (
+                                c.members.iter().flatten().map(|t| t.task_id()).collect(),
+                                false,
+                            ),
+                        };
+                        let draws: Vec<(usize, FabricFault)> = match faults {
+                            Some(fs) => {
+                                let slot_ids: Vec<(usize, usize)> = match &item {
+                                    Work::Prefill(t) => vec![(0, t.task_id())],
+                                    Work::Step(c) => c
+                                        .members
+                                        .iter()
+                                        .enumerate()
+                                        .filter_map(|(i, m)| m.as_ref().map(|t| (i, t.task_id())))
+                                        .collect(),
+                                };
+                                let mut ops = fault_ops.lock().unwrap();
+                                slot_ids
+                                    .into_iter()
+                                    .filter_map(|(slot, id)| {
+                                        let op = ops.entry(id).or_insert(0);
+                                        let draw = fs.at(id, *op);
+                                        *op += 1;
+                                        draw.map(|f| (slot, f))
+                                    })
+                                    .collect()
+                            }
+                            None => Vec::new(),
+                        };
+                        if watchdog_armed {
+                            let seq = item_counter.fetch_add(1, Ordering::Relaxed);
+                            let started = Event::Started {
+                                item_seq: seq,
+                                task_ids: ids.clone(),
+                                was_prefill,
+                            };
+                            if tx.send(started).is_err() {
+                                break;
+                            }
                         }
-                    };
-                    let attempt =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match item {
-                            Work::Prefill(mut task) => {
-                                let err = task.prefill().err().map(|e| format!("{e:#}"));
-                                Event::Prefilled(task, err)
-                            }
-                            Work::Step(mut cohort) => {
-                                let res = cohort.step(engine).map_err(|e| format!("{e:#}"));
-                                Event::Stepped(cohort, res)
-                            }
-                        }));
-                    let event = attempt.unwrap_or_else(|payload| Event::Poisoned {
-                        task_ids: ids,
-                        was_prefill,
-                        error: format!("worker panicked: {}", panic_message(payload.as_ref())),
-                    });
-                    if tx.send(event).is_err() {
-                        break;
+                        // Injected wedge: the worker sits on the item with
+                        // no completion — exactly what the watchdog exists
+                        // to catch.
+                        let stall = draws
+                            .iter()
+                            .filter_map(|(_, f)| match f {
+                                FabricFault::StallMs(ms) => Some(*ms),
+                                _ => None,
+                            })
+                            .max();
+                        if let Some(ms) = stall {
+                            std::thread::sleep(Duration::from_millis(ms));
+                        }
+                        let panic_injected =
+                            draws.iter().any(|(_, f)| matches!(f, FabricFault::PanicWork));
+                        let attempt =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                if panic_injected {
+                                    panic!("chaos: injected worker panic");
+                                }
+                                match item {
+                                    Work::Prefill(mut task) => {
+                                        let mut err =
+                                            task.prefill().err().map(|e| format!("{e:#}"));
+                                        if err.is_none()
+                                            && draws
+                                                .iter()
+                                                .any(|(_, f)| matches!(f, FabricFault::FailSlot))
+                                        {
+                                            err = Some("chaos: injected prefill fault".into());
+                                        }
+                                        Event::Prefilled(task, err)
+                                    }
+                                    Work::Step(mut cohort) => {
+                                        let mut res =
+                                            cohort.step(engine).map_err(|e| format!("{e:#}"));
+                                        if let Ok(fails) = &mut res {
+                                            for (slot, f) in &draws {
+                                                if matches!(f, FabricFault::FailSlot)
+                                                    && cohort.members[*slot].is_some()
+                                                    && !fails.iter().any(|(i, _)| i == slot)
+                                                {
+                                                    fails.push((
+                                                        *slot,
+                                                        "chaos: injected member fault".into(),
+                                                    ));
+                                                }
+                                            }
+                                        }
+                                        Event::Stepped(cohort, res)
+                                    }
+                                }
+                            }));
+                        if let Some(ms) = draws
+                            .iter()
+                            .filter_map(|(_, f)| match f {
+                                FabricFault::SlowMs(ms) => Some(*ms),
+                                _ => None,
+                            })
+                            .max()
+                        {
+                            std::thread::sleep(Duration::from_millis(ms));
+                        }
+                        let event = attempt.unwrap_or_else(|payload| Event::Poisoned {
+                            task_ids: ids,
+                            was_prefill,
+                            error: format!(
+                                "worker panicked: {}",
+                                panic_message(payload.as_ref())
+                            ),
+                        });
+                        if tx.send(event).is_err() {
+                            break;
+                        }
                     }
                 }
-            });
+            }
+        };
+        for _ in 0..cfg.engines.max(1) {
+            s.spawn(make_worker(events_tx.clone()));
         }
 
-        // Arrival thread: trace replay through admission control.
+        // Arrival thread: trace replay through admission control.  Once
+        // the drain signal flips, the remaining trace fast-forwards (no
+        // sleeps) so every not-yet-offered task reaches the scheduler
+        // and is recorded as drained instead of stalling the replay.
         let arrivals = s.spawn({
             let admission = &admission;
             let tx = events_tx.clone();
             let time_scale = cfg.time_scale.max(1e-9);
+            let drain = cfg.drain.clone();
             move || {
                 for (arrival_ms, task) in tasks {
-                    let due_ms = arrival_ms / time_scale;
-                    let elapsed = start.elapsed().as_secs_f64() * 1e3;
-                    if due_ms > elapsed {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            (due_ms - elapsed) / 1e3,
-                        ));
+                    let draining =
+                        drain.as_ref().map_or(false, |d| d.load(Ordering::Relaxed));
+                    if !draining {
+                        let due_ms = arrival_ms / time_scale;
+                        let elapsed = start.elapsed().as_secs_f64() * 1e3;
+                        if due_ms > elapsed {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(
+                                (due_ms - elapsed) / 1e3,
+                            ));
+                        }
                     }
                     let id = task.task_id();
                     if admission.offer(id, task) && tx.send(Event::Admitted).is_err() {
@@ -308,6 +620,10 @@ pub fn run_fabric<'f>(
         // Workers and the arrival thread hold the only live senders from
         // here on: if every one of them exits (e.g. all workers die),
         // `recv` reports the closed channel instead of blocking forever.
+        // With the watchdog armed a spare sender is retained for
+        // replacement workers; stalled-worker detection covers the
+        // dead-pool case there instead.
+        let spare_tx = watchdog.map(|_| events_tx.clone());
         drop(events_tx);
 
         // Scheduler: the caller's thread.
@@ -316,8 +632,29 @@ pub fn run_fabric<'f>(
         let mut arrivals_done = false;
         let mut decode_ready: Vec<Box<dyn FabricTask + 'f>> = Vec::new();
         // task_id → queue wait, patched into results at finalize.
-        let mut queue_waits: std::collections::HashMap<usize, f64> =
-            std::collections::HashMap::new();
+        let mut queue_waits: HashMap<usize, f64> = HashMap::new();
+        // Liveness state: admission instants for the deadline clock,
+        // in-worker items for the watchdog, and cancelled ids whose
+        // stale completions must be discarded.
+        let mut admitted_at: HashMap<usize, Instant> = HashMap::new();
+        let mut in_worker: HashMap<u64, (Instant, Vec<usize>, bool)> = HashMap::new();
+        let mut task_item: HashMap<usize, u64> = HashMap::new();
+        let mut zombies: HashMap<usize, bool> = HashMap::new();
+        let mut spares_left = cfg.engines.max(1);
+        let ticking = watchdog.is_some() || cfg.drain.is_some();
+        // With a wall clock to watch (watchdog) or an external signal to
+        // observe (drain), park briefly instead of indefinitely.
+        let tick = Duration::from_secs_f64(
+            watchdog.map(|w| (w / 4.0).clamp(1.0, 50.0)).unwrap_or(10.0) / 1e3,
+        );
+
+        // Age of an over-deadline session, `None` while within budget.
+        let over_deadline = |admitted_at: &HashMap<usize, Instant>, id: usize| -> Option<f64> {
+            let d = deadline?;
+            let t0 = admitted_at.get(&id)?;
+            let age_ms = t0.elapsed().as_secs_f64() * 1e3;
+            (age_ms > d).then_some(age_ms)
+        };
 
         // Finalize a finished task into a result row.
         let finalize = |task: Box<dyn FabricTask + 'f>,
@@ -340,17 +677,63 @@ pub fn run_fabric<'f>(
         };
 
         loop {
+            // Drain: stop admitting.  Everything still queued (or fast-
+            // forwarded in by the arrival thread) never starts.  The
+            // admit loop below is gated too, so an arrival racing the
+            // flush cannot slip in after the signal.
+            let draining = cfg.drain.as_ref().map_or(false, |d| d.load(Ordering::Relaxed));
+            if draining {
+                while let Some(pending) = admission.take() {
+                    outcome.drained.push(pending.task_id);
+                }
+            }
+
             // Admit while there is inflight headroom.
-            while inflight < max_inflight {
+            while !draining && inflight < max_inflight {
                 let Some(pending) = admission.take() else { break };
-                queue_waits.insert(
-                    pending.task_id,
-                    pending.enqueued_at.elapsed().as_secs_f64() * 1e3,
-                );
+                let waited_ms = pending.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                if let Some(d) = deadline {
+                    if waited_ms > d {
+                        // Resume point 1 (admit): already over budget
+                        // while queued — don't spend a prefill on it.
+                        outcome.deadline_killed.push(FailedTask {
+                            task_id: pending.task_id,
+                            error: format!(
+                                "session deadline exceeded: queued {waited_ms:.0} ms of a \
+                                 {d} ms budget; cancelled before prefill"
+                            ),
+                        });
+                        continue;
+                    }
+                    admitted_at.insert(pending.task_id, pending.enqueued_at);
+                }
+                queue_waits.insert(pending.task_id, waited_ms);
                 inflight += 1;
                 outcome.peak_inflight = outcome.peak_inflight.max(inflight);
                 prefills_outstanding += 1;
                 work.push(Work::Prefill(pending.item));
+            }
+
+            // Resume point 2 (cohort formation): decode-ready sessions
+            // past their budget are cancelled before joining a cohort.
+            if let Some(d) = deadline {
+                let mut i = 0;
+                while i < decode_ready.len() {
+                    let id = decode_ready[i].task_id();
+                    if let Some(age_ms) = over_deadline(&admitted_at, id) {
+                        decode_ready.remove(i);
+                        outcome.deadline_killed.push(FailedTask {
+                            task_id: id,
+                            error: format!(
+                                "session deadline exceeded: {age_ms:.0} ms of a {d} ms \
+                                 budget; cancelled at cohort formation"
+                            ),
+                        });
+                        inflight -= 1;
+                    } else {
+                        i += 1;
+                    }
+                }
             }
 
             // Scheduler tick: gather decode-ready sessions into cohorts
@@ -420,133 +803,277 @@ pub fn run_fabric<'f>(
                 break;
             }
 
-            let event = match events_rx.recv() {
-                Ok(event) => event,
-                Err(_) => {
-                    // Every sender is gone — all engine workers (and the
-                    // arrival thread) exited with sessions still in
-                    // flight.  The run cannot make progress; finalize
-                    // the outcome with everything in flight recorded as
-                    // failed instead of panicking the serve run.
-                    const ERR: &str =
-                        "fabric event channel closed early: all engine workers exited";
-                    log::error!("{ERR}");
-                    for task in decode_ready.drain(..) {
-                        outcome
-                            .failed
-                            .push(FailedTask { task_id: task.task_id(), error: ERR.into() });
+            // Park for events.  The default fabric blocks indefinitely
+            // (byte-identical to the pre-liveness scheduler); a ticking
+            // fabric wakes periodically so the watchdog sweep and drain
+            // flush run even with no events flowing.
+            let mut channel_dead = false;
+            let event = if ticking {
+                match events_rx.recv_timeout(tick) {
+                    Ok(event) => Some(event),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        channel_dead = true;
+                        None
                     }
-                    while let Some(item) = work.try_pop() {
-                        match item {
-                            Work::Prefill(task) => outcome.failed.push(FailedTask {
-                                task_id: task.task_id(),
-                                error: ERR.into(),
-                            }),
-                            Work::Step(mut cohort) => {
-                                for slot in cohort.members.iter_mut() {
-                                    if let Some(task) = slot.take() {
-                                        outcome.failed.push(FailedTask {
-                                            task_id: task.task_id(),
-                                            error: ERR.into(),
-                                        });
-                                    }
-                                }
-                            }
-                        }
+                }
+            } else {
+                match events_rx.recv() {
+                    Ok(event) => Some(event),
+                    Err(_) => {
+                        channel_dead = true;
+                        None
                     }
-                    // Tasks still queued at admission never started;
-                    // record them too so nothing vanishes silently.
-                    while let Some(pending) = admission.take() {
-                        outcome.failed.push(FailedTask {
-                            task_id: pending.task_id,
-                            error: ERR.into(),
-                        });
-                    }
-                    break;
                 }
             };
-            match event {
-                Event::Admitted => {}
-                Event::ArrivalsDone => arrivals_done = true,
-                Event::Prefilled(task, err) => {
-                    prefills_outstanding -= 1;
-                    match err {
-                        Some(error) => {
-                            outcome
-                                .failed
-                                .push(FailedTask { task_id: task.task_id(), error });
-                            inflight -= 1;
-                        }
-                        None => {
-                            let mut task = task;
-                            match task.poll() {
-                                DecodeStep::Done => {
-                                    finalize(task, &mut outcome, &admission, &queue_waits);
-                                    inflight -= 1;
-                                }
-                                _ => decode_ready.push(task),
-                            }
-                        }
-                    }
+            if channel_dead {
+                // Every sender is gone — all engine workers (and the
+                // arrival thread) exited with sessions still in
+                // flight.  The run cannot make progress; finalize
+                // the outcome with everything in flight recorded as
+                // failed instead of panicking the serve run.
+                const ERR: &str =
+                    "fabric event channel closed early: all engine workers exited";
+                log::error!("{ERR}");
+                for task in decode_ready.drain(..) {
+                    outcome
+                        .failed
+                        .push(FailedTask { task_id: task.task_id(), error: ERR.into() });
                 }
-                Event::Stepped(mut cohort, res) => {
-                    match res {
-                        Err(error) => {
-                            // A batched dispatch failure poisons every
-                            // live member — record each, free the lanes.
+                while let Some(item) = work.try_pop() {
+                    match item {
+                        Work::Prefill(task) => outcome.failed.push(FailedTask {
+                            task_id: task.task_id(),
+                            error: ERR.into(),
+                        }),
+                        Work::Step(mut cohort) => {
                             for slot in cohort.members.iter_mut() {
                                 if let Some(task) = slot.take() {
                                     outcome.failed.push(FailedTask {
                                         task_id: task.task_id(),
-                                        error: error.clone(),
+                                        error: ERR.into(),
                                     });
-                                    inflight -= 1;
                                 }
-                            }
-                        }
-                        Ok(failures) => {
-                            if cohort.batched {
-                                outcome.batched_steps += 1;
-                            } else {
-                                outcome.fallback_steps += cohort.live() as u64;
-                            }
-                            for (i, error) in failures {
-                                if let Some(task) = cohort.members[i].take() {
-                                    outcome.failed.push(FailedTask {
-                                        task_id: task.task_id(),
-                                        error,
-                                    });
-                                    inflight -= 1;
-                                }
-                            }
-                            for slot in cohort.members.iter_mut() {
-                                let done = match slot {
-                                    Some(task) => {
-                                        matches!(task.poll(), DecodeStep::Done)
-                                    }
-                                    None => false,
-                                };
-                                if done {
-                                    let task = slot.take().unwrap();
-                                    finalize(task, &mut outcome, &admission, &queue_waits);
-                                    inflight -= 1;
-                                }
-                            }
-                            if cohort.live() > 0 {
-                                // Sticky: surviving members march together
-                                // until the whole cohort drains.
-                                work.push(Work::Step(cohort));
                             }
                         }
                     }
                 }
-                Event::Poisoned { task_ids, was_prefill, error } => {
+                // Tasks still queued at admission never started;
+                // record them too so nothing vanishes silently.
+                while let Some(pending) = admission.take() {
+                    outcome.failed.push(FailedTask {
+                        task_id: pending.task_id,
+                        error: ERR.into(),
+                    });
+                }
+                break;
+            }
+            if let Some(event) = event {
+                match event {
+                    Event::Admitted => {}
+                    Event::ArrivalsDone => arrivals_done = true,
+                    Event::Started { item_seq, task_ids, was_prefill } => {
+                        for id in &task_ids {
+                            task_item.insert(*id, item_seq);
+                        }
+                        in_worker.insert(item_seq, (Instant::now(), task_ids, was_prefill));
+                    }
+                    Event::Prefilled(task, err) => {
+                        let id = task.task_id();
+                        if let Some(seq) = task_item.remove(&id) {
+                            in_worker.remove(&seq);
+                        }
+                        if zombies.remove(&id).is_some() {
+                            // The watchdog already cancelled and accounted
+                            // this session; its stall resolved late and
+                            // the result is discarded.
+                        } else {
+                            prefills_outstanding -= 1;
+                            match err {
+                                Some(error) => {
+                                    outcome.failed.push(FailedTask { task_id: id, error });
+                                    inflight -= 1;
+                                }
+                                None => {
+                                    let mut task = task;
+                                    if let Some(age_ms) = over_deadline(&admitted_at, id) {
+                                        // Resume point 3 (post-prefill):
+                                        // the budget is already spent.
+                                        outcome.deadline_killed.push(FailedTask {
+                                            task_id: id,
+                                            error: format!(
+                                                "session deadline exceeded: {age_ms:.0} ms \
+                                                 of a {} ms budget; cancelled after prefill",
+                                                deadline.unwrap_or(0.0)
+                                            ),
+                                        });
+                                        inflight -= 1;
+                                    } else {
+                                        match task.poll() {
+                                            DecodeStep::Done => {
+                                                finalize(
+                                                    task,
+                                                    &mut outcome,
+                                                    &admission,
+                                                    &queue_waits,
+                                                );
+                                                inflight -= 1;
+                                            }
+                                            _ => decode_ready.push(task),
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Event::Stepped(mut cohort, res) => {
+                        // Clear progress tracking; members the watchdog
+                        // already cancelled are dropped here (their kill
+                        // was accounted when it happened).
+                        for slot in cohort.members.iter_mut() {
+                            let Some(t) = slot else { continue };
+                            let id = t.task_id();
+                            if let Some(seq) = task_item.remove(&id) {
+                                in_worker.remove(&seq);
+                            }
+                            if zombies.remove(&id).is_some() {
+                                *slot = None;
+                            }
+                        }
+                        match res {
+                            Err(error) => {
+                                // A batched dispatch failure poisons every
+                                // live member — record each, free the lanes.
+                                for slot in cohort.members.iter_mut() {
+                                    if let Some(task) = slot.take() {
+                                        outcome.failed.push(FailedTask {
+                                            task_id: task.task_id(),
+                                            error: error.clone(),
+                                        });
+                                        inflight -= 1;
+                                    }
+                                }
+                            }
+                            Ok(failures) => {
+                                if cohort.batched {
+                                    outcome.batched_steps += 1;
+                                } else {
+                                    outcome.fallback_steps += cohort.live() as u64;
+                                }
+                                for (i, error) in failures {
+                                    if let Some(task) = cohort.members[i].take() {
+                                        outcome.failed.push(FailedTask {
+                                            task_id: task.task_id(),
+                                            error,
+                                        });
+                                        inflight -= 1;
+                                    }
+                                }
+                                for slot in cohort.members.iter_mut() {
+                                    let done = match slot {
+                                        Some(task) => {
+                                            matches!(task.poll(), DecodeStep::Done)
+                                        }
+                                        None => false,
+                                    };
+                                    if done {
+                                        let task = slot.take().unwrap();
+                                        finalize(task, &mut outcome, &admission, &queue_waits);
+                                        inflight -= 1;
+                                    }
+                                }
+                                // Resume point 4 (post-step): survivors
+                                // over budget leave the cohort here.
+                                if let Some(d) = deadline {
+                                    for slot in cohort.members.iter_mut() {
+                                        let Some(t) = slot else { continue };
+                                        let id = t.task_id();
+                                        if let Some(age_ms) = over_deadline(&admitted_at, id)
+                                        {
+                                            *slot = None;
+                                            outcome.deadline_killed.push(FailedTask {
+                                                task_id: id,
+                                                error: format!(
+                                                    "session deadline exceeded: {age_ms:.0} \
+                                                     ms of a {d} ms budget; cancelled after \
+                                                     a decode step"
+                                                ),
+                                            });
+                                            inflight -= 1;
+                                        }
+                                    }
+                                }
+                                if cohort.live() > 0 {
+                                    // Sticky: surviving members march together
+                                    // until the whole cohort drains.
+                                    work.push(Work::Step(cohort));
+                                }
+                            }
+                        }
+                    }
+                    Event::Poisoned { task_ids, was_prefill, error } => {
+                        let mut zombie_prefill = false;
+                        let mut lost = Vec::new();
+                        for id in task_ids {
+                            if let Some(seq) = task_item.remove(&id) {
+                                in_worker.remove(&seq);
+                            }
+                            match zombies.remove(&id) {
+                                Some(was_p) => zombie_prefill |= was_p,
+                                None => lost.push(id),
+                            }
+                        }
+                        // A zombie prefill's outstanding count was already
+                        // released at watchdog-kill time.
+                        if was_prefill && !zombie_prefill {
+                            prefills_outstanding -= 1;
+                        }
+                        for task_id in lost {
+                            outcome.failed.push(FailedTask { task_id, error: error.clone() });
+                            inflight -= 1;
+                        }
+                    }
+                }
+            }
+
+            // Watchdog sweep: an in-worker item silent past the window
+            // has its sessions cancelled (late results, if any, are
+            // discarded via `zombies`) and the wedged worker replaced
+            // from the spare budget so capacity is not lost for good.
+            if let Some(wd) = watchdog {
+                let stuck: Vec<u64> = in_worker
+                    .iter()
+                    .filter(|(_, (t0, _, _))| t0.elapsed().as_secs_f64() * 1e3 > wd)
+                    .map(|(&seq, _)| seq)
+                    .collect();
+                for seq in stuck {
+                    let Some((t0, ids, was_prefill)) = in_worker.remove(&seq) else {
+                        continue;
+                    };
+                    let stalled_ms = t0.elapsed().as_secs_f64() * 1e3;
                     if was_prefill {
+                        // Release the formation gate: this prefill will
+                        // never report (or reports as a discarded zombie).
                         prefills_outstanding -= 1;
                     }
-                    for task_id in task_ids {
-                        outcome.failed.push(FailedTask { task_id, error: error.clone() });
+                    for id in ids {
+                        task_item.remove(&id);
+                        zombies.insert(id, was_prefill);
+                        outcome.watchdog_killed.push(FailedTask {
+                            task_id: id,
+                            error: format!(
+                                "watchdog: no progress for {stalled_ms:.0} ms \
+                                 (window {wd} ms); session cancelled"
+                            ),
+                        });
                         inflight -= 1;
+                    }
+                    if spares_left > 0 {
+                        if let Some(tx) = &spare_tx {
+                            s.spawn(make_worker(tx.clone()));
+                            spares_left -= 1;
+                            outcome.replaced_workers += 1;
+                        }
                     }
                 }
             }
@@ -579,6 +1106,11 @@ mod tests {
         dispatched: usize,
         pending: bool,
         prefill_us: u64,
+        /// Extra prefill sleep in ms — a targeted wedge for watchdog
+        /// and deadline tests (0 = none).
+        stall_prefill_ms: u64,
+        /// Per-dispatch sleep in µs (0 = instant decode steps).
+        dispatch_us: u64,
         inflight: Arc<AtomicUsize>,
         peak: Arc<AtomicUsize>,
     }
@@ -594,6 +1126,8 @@ mod tests {
                 dispatched: 0,
                 pending: false,
                 prefill_us: 200,
+                stall_prefill_ms: 0,
+                dispatch_us: 0,
                 inflight: Arc::clone(&gauge.0),
                 peak: Arc::clone(&gauge.1),
             }
@@ -609,6 +1143,9 @@ mod tests {
             let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
             self.peak.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_micros(self.prefill_us));
+            if self.stall_prefill_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(self.stall_prefill_ms));
+            }
             if self.panic_prefill {
                 panic!("mock poisoned worker task");
             }
@@ -633,6 +1170,9 @@ mod tests {
             if Some(self.dispatched) == self.fail_dispatch_at {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
                 anyhow::bail!("mock dispatch failure at step {}", self.dispatched);
+            }
+            if self.dispatch_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(self.dispatch_us));
             }
             self.dispatched += 1;
             self.pending = false;
@@ -686,6 +1226,7 @@ mod tests {
             admission: AdmissionPolicy::Block,
             batching: false,
             time_scale: 1e6,
+            ..FabricConfig::default()
         };
         let out = run_fabric(None, &cfg, mock_trace(24, 3, &g)).unwrap();
         assert_eq!(out.results.len(), 24, "block policy loses no task");
@@ -711,6 +1252,7 @@ mod tests {
             admission: AdmissionPolicy::Block,
             batching: false,
             time_scale: 1e6,
+            ..FabricConfig::default()
         };
         let out = run_fabric(None, &cfg, mock_trace(16, 2, &g)).unwrap();
         assert_eq!(out.results.len(), 16);
@@ -742,6 +1284,7 @@ mod tests {
             admission: AdmissionPolicy::Block,
             batching: false,
             time_scale: 1e6,
+            ..FabricConfig::default()
         };
         let out = run_fabric(None, &cfg, tasks).unwrap();
         assert_eq!(out.results.len(), 4);
@@ -775,6 +1318,7 @@ mod tests {
             admission: AdmissionPolicy::Block,
             batching: false,
             time_scale: 1e6,
+            ..FabricConfig::default()
         };
         let out = run_fabric(None, &cfg, tasks).unwrap();
         assert_eq!(out.results.len(), 4, "healthy tasks still complete");
@@ -820,6 +1364,7 @@ mod tests {
             admission: AdmissionPolicy::ShedOldest,
             batching: false,
             time_scale: 1e9,
+            ..FabricConfig::default()
         };
         let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..12)
             .map(|i| {
@@ -836,5 +1381,315 @@ mod tests {
         );
         assert!(out.failed.is_empty());
         assert!(!out.dropped.is_empty(), "pressure this high must shed something");
+    }
+
+    #[test]
+    fn fault_schedule_is_pure_and_rate_bounded() {
+        let fs = FabricFaultSchedule::from_seed(7, 0.5).with_panics();
+        // Pure: the same (task, op) draws the same fault every time.
+        let a: Vec<_> = (0..50).map(|t| fs.at(t, 3)).collect();
+        let b: Vec<_> = (0..50).map(|t| fs.at(t, 3)).collect();
+        assert_eq!(a, b);
+        // Rate 0 never draws; rate 1 always draws.
+        let off = FabricFaultSchedule::from_seed(7, 0.0);
+        assert!((0..100).all(|t| off.at(t, 0).is_none()));
+        let on = FabricFaultSchedule::from_seed(7, 1.0);
+        assert!((0..100).all(|t| on.at(t, 0).is_some()));
+        // Stalls and panics are opt-in.
+        let plain = FabricFaultSchedule::from_seed(11, 1.0);
+        for t in 0..200 {
+            for op in 0..4 {
+                match plain.at(t, op) {
+                    Some(FabricFault::StallMs(_)) => panic!("stall drawn without with_stalls"),
+                    Some(FabricFault::PanicWork) => panic!("panic drawn without with_panics"),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    fn chaos_buckets(seed: u64) -> (Vec<usize>, Vec<(usize, String)>) {
+        let g = gauge();
+        let cfg = FabricConfig {
+            engines: 2,
+            queue_depth: 32,
+            max_inflight: 4,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+            faults: Some(
+                FabricFaultSchedule::from_seed(seed, 0.35).with_panics().with_slow_ms(0),
+            ),
+            ..FabricConfig::default()
+        };
+        let out = run_fabric(None, &cfg, mock_trace(16, 3, &g)).unwrap();
+        let mut done: Vec<usize> = out.results.iter().map(|r| r.task_id).collect();
+        done.sort_unstable();
+        let mut failed: Vec<(usize, String)> =
+            out.failed.iter().map(|f| (f.task_id, f.error.clone())).collect();
+        failed.sort();
+        assert_eq!(done.len() + failed.len(), 16, "every task in exactly one bucket");
+        (done, failed)
+    }
+
+    #[test]
+    fn chaos_fabric_buckets_are_seed_deterministic() {
+        // Non-batched cohorts are singletons, so FailSlot and PanicWork
+        // each kill exactly the member they were drawn for: the outcome
+        // buckets depend only on the seed, not on thread interleaving.
+        let first = chaos_buckets(42);
+        let second = chaos_buckets(42);
+        assert_eq!(first, second, "same seed, same buckets — at any interleaving");
+        assert!(!first.1.is_empty(), "rate 0.35 over 16 tasks must injure someone");
+    }
+
+    #[test]
+    fn zero_rate_chaos_matches_no_chaos() {
+        let run = |faults: Option<FabricFaultSchedule>| {
+            let g = gauge();
+            let cfg = FabricConfig {
+                engines: 2,
+                queue_depth: 8,
+                max_inflight: 4,
+                admission: AdmissionPolicy::Block,
+                batching: false,
+                time_scale: 1e6,
+                faults,
+                ..FabricConfig::default()
+            };
+            let out = run_fabric(None, &cfg, mock_trace(10, 2, &g)).unwrap();
+            let mut ids: Vec<usize> = out.results.iter().map(|r| r.task_id).collect();
+            ids.sort_unstable();
+            (ids, out.failed.len(), out.fallback_steps)
+        };
+        assert_eq!(run(None), run(Some(FabricFaultSchedule::from_seed(9, 0.0))));
+    }
+
+    #[test]
+    fn deadline_kills_over_budget_sessions_and_accounts_them() {
+        let g = gauge();
+        // One worker, serial ~100 ms prefills against a 250 ms end-to-end
+        // budget measured from admission: the backlog's tail blows its
+        // budget waiting in the queue and must be cancelled — recorded in
+        // `deadline_killed`, never silently dropped.
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..6)
+            .map(|i| {
+                let mut t = MockTask::new(i, 1, &g);
+                t.stall_prefill_ms = 100;
+                (0.0, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 1,
+            queue_depth: 8,
+            max_inflight: 1,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+            session_deadline_ms: Some(250.0),
+            ..FabricConfig::default()
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        assert!(!out.deadline_killed.is_empty(), "the tail must blow the 250 ms budget");
+        assert!(!out.results.is_empty(), "the head must finish within budget");
+        assert_eq!(
+            out.results.len() + out.deadline_killed.len() + out.failed.len(),
+            6,
+            "every task lands in exactly one bucket"
+        );
+        assert!(out.deadline_killed.iter().all(|f| f.error.contains("deadline")));
+    }
+
+    #[test]
+    fn watchdog_cancels_a_stalled_session_and_replaces_the_worker() {
+        let g = gauge();
+        // Task 2 wedges the only worker for 400 ms; with a 50 ms watchdog
+        // the session is cancelled, a spare worker drains the rest of the
+        // queue, and when the stall finally resolves the stale completion
+        // is discarded (no double accounting).
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..6)
+            .map(|i| {
+                let mut t = MockTask::new(i, 1, &g);
+                if i == 2 {
+                    t.stall_prefill_ms = 400;
+                }
+                (0.0, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 1,
+            queue_depth: 8,
+            max_inflight: 2,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1e6,
+            watchdog_ms: Some(50.0),
+            ..FabricConfig::default()
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        assert_eq!(out.watchdog_killed.len(), 1, "exactly the wedged session dies");
+        assert_eq!(out.watchdog_killed[0].task_id, 2);
+        assert!(out.watchdog_killed[0].error.contains("watchdog"));
+        assert_eq!(out.replaced_workers, 1);
+        assert_eq!(out.results.len(), 5, "the spare worker finishes the rest");
+        assert!(out.failed.is_empty());
+    }
+
+    #[test]
+    fn drain_stops_admission_and_accounts_every_task() {
+        let g = gauge();
+        let drain = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // 40 arrivals spread over ~320 ms; the signal flips at ~40 ms, so
+        // the head completes, the tail is drained, and nothing is lost.
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..40)
+            .map(|i| {
+                let mut t = MockTask::new(i, 2, &g);
+                t.prefill_us = 2_000;
+                (i as f64 * 8.0, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 2,
+            queue_depth: 4,
+            max_inflight: 2,
+            admission: AdmissionPolicy::Block,
+            batching: false,
+            time_scale: 1.0,
+            drain: Some(Arc::clone(&drain)),
+            ..FabricConfig::default()
+        };
+        let flip = {
+            let drain = Arc::clone(&drain);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+                drain.store(true, Ordering::SeqCst);
+            })
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        flip.join().unwrap();
+        assert!(!out.drained.is_empty(), "the tail of the trace must be drained");
+        assert!(!out.results.is_empty(), "the head completes before the signal");
+        assert_eq!(
+            out.results.len() + out.failed.len() + out.drained.len(),
+            40,
+            "drained + completed + failed covers the whole trace"
+        );
+        // A drained task never started: no id is in two buckets.
+        let done: std::collections::HashSet<usize> =
+            out.results.iter().map(|r| r.task_id).collect();
+        assert!(out.drained.iter().all(|id| !done.contains(id)));
+    }
+
+    #[test]
+    fn armed_fabric_accounts_every_offered_task_exactly_once() {
+        // Everything on at once — chaos, deadline, watchdog, drain,
+        // admission prior — and still: 30 offered tasks, 30 bucket rows.
+        let g = gauge();
+        let drain = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let tasks: Vec<(f64, Box<dyn FabricTask + 'static>)> = (0..30)
+            .map(|i| {
+                let mut t = MockTask::new(i, 2, &g);
+                t.prefill_us = 1_000;
+                (i as f64 * 3.0, Box::new(t) as _)
+            })
+            .collect();
+        let cfg = FabricConfig {
+            engines: 2,
+            queue_depth: 8,
+            max_inflight: 4,
+            admission: AdmissionPolicy::RejectOverSlo { slo_ms: 60.0 },
+            service_prior_ms: Some(5.0),
+            batching: false,
+            time_scale: 1.0,
+            session_deadline_ms: Some(150.0),
+            watchdog_ms: Some(100.0),
+            drain: Some(Arc::clone(&drain)),
+            faults: Some(FabricFaultSchedule::from_seed(3, 0.2).with_slow_ms(0)),
+        };
+        let flip = {
+            let drain = Arc::clone(&drain);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                drain.store(true, Ordering::SeqCst);
+            })
+        };
+        let out = run_fabric(None, &cfg, tasks).unwrap();
+        flip.join().unwrap();
+        let total = out.results.len()
+            + out.failed.len()
+            + out.dropped.len()
+            + out.deadline_killed.len()
+            + out.watchdog_killed.len()
+            + out.drained.len();
+        assert_eq!(total, 30, "every offered task lands in exactly one bucket");
+    }
+
+    #[test]
+    fn mid_cohort_member_failure_frees_only_that_slot() {
+        // Drive a 3-member cohort by hand: member 1 fails its second
+        // dispatch.  Members 0 and 2 must produce token transcripts
+        // byte-identical to an unperturbed control cohort, and only
+        // slot 1 is freed by the failure.
+        let g = gauge();
+        let build = |perturb: bool| -> Cohort<'static> {
+            let members = (0..3)
+                .map(|i| {
+                    let mut t = MockTask::new(i, 3, &g);
+                    if perturb && i == 1 {
+                        t.fail_dispatch_at = Some(1);
+                    }
+                    Some(Box::new(t) as Box<dyn FabricTask + 'static>)
+                })
+                .collect();
+            Cohort { members, stack: None, batched: false, b: 3, r: 0 }
+        };
+        let drive = |mut cohort: Cohort<'static>| -> (Vec<Vec<i32>>, Vec<usize>) {
+            let mut transcripts: Vec<Vec<i32>> = vec![Vec::new(); 3];
+            let mut failed_slots: Vec<usize> = Vec::new();
+            // The fabric polls once post-prefill; mirror that.
+            for (i, slot) in cohort.members.iter_mut().enumerate() {
+                if let Some(t) = slot {
+                    if let DecodeStep::Ready { token } = t.poll() {
+                        transcripts[i].push(token);
+                    }
+                }
+            }
+            while cohort.live() > 0 {
+                let failures = cohort.step(None).unwrap();
+                for (i, _err) in failures {
+                    cohort.members[i] = None;
+                    failed_slots.push(i);
+                }
+                for (i, slot) in cohort.members.iter_mut().enumerate() {
+                    let done = match slot {
+                        Some(t) => match t.poll() {
+                            DecodeStep::Done => true,
+                            DecodeStep::Ready { token } => {
+                                transcripts[i].push(token);
+                                false
+                            }
+                            _ => false,
+                        },
+                        None => false,
+                    };
+                    if done {
+                        *slot = None;
+                    }
+                }
+            }
+            (transcripts, failed_slots)
+        };
+        let (control, control_failed) = drive(build(false));
+        let (perturbed, perturbed_failed) = drive(build(true));
+        assert!(control_failed.is_empty());
+        assert_eq!(perturbed_failed, vec![1], "only the failing member's slot is freed");
+        assert_eq!(perturbed[0], control[0], "slot 0 transcript is unaffected");
+        assert_eq!(perturbed[2], control[2], "slot 2 transcript is unaffected");
+        assert!(
+            perturbed[1].len() < control[1].len(),
+            "the failed member stops early ({} vs {} tokens)",
+            perturbed[1].len(),
+            control[1].len()
+        );
     }
 }

@@ -27,5 +27,11 @@ pub mod fabric;
 pub mod model;
 
 pub use admission::{AdmissionController, AdmissionPolicy, DropReason, DroppedTask};
-pub use fabric::{run_fabric, FabricConfig, FabricOutcome, FabricTask, FailedTask};
-pub use model::{capacity_curve, simulate, CurvePoint, ModelParams, ServeMode};
+pub use fabric::{
+    run_fabric, FabricConfig, FabricFault, FabricFaultSchedule, FabricOutcome, FabricTask,
+    FailedTask,
+};
+pub use model::{
+    capacity_curve, simulate, simulate_slo, slo_curve, CurvePoint, ModelParams, ServeMode,
+    SloPoint,
+};

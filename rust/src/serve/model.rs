@@ -156,6 +156,161 @@ pub fn capacity_curve(p: &ModelParams, sweep: &[usize]) -> Vec<CurvePoint> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// SLO-enforcement model (BENCH_slo.json)
+// ---------------------------------------------------------------------------
+
+/// Deadline sweep for the committed `BENCH_slo.json` grid (ms).  At the
+/// default [`ModelParams`] the fabric's zero-wait service time is
+/// `900 + 11 × 41 = 1351` ms, so 1500 ms is a tight budget (149 ms of
+/// queue-wait headroom), 2400 ms a moderate one, and 4000 ms loose.
+pub const SLO_DEADLINES_MS: [f64; 3] = [1500.0, 2400.0, 4000.0];
+/// Arrival-gap sweep for the committed grid (ms), ordered from light
+/// load (800 ms is under the 2-engine capacity gap of ~675 ms) to heavy
+/// — CI asserts completion rate is monotone non-increasing along this
+/// axis at each fixed deadline.
+pub const SLO_GAPS_MS: [f64; 5] = [800.0, 400.0, 200.0, 120.0, 60.0];
+/// Sessions offered at each grid point.
+pub const SLO_SESSIONS: usize = 24;
+
+/// One point of the SLO-enforcement curve: a fixed trace pushed through
+/// the deadline-enforcing fabric model at one (deadline, arrival-gap)
+/// setting.
+#[derive(Debug, Clone)]
+pub struct SloPoint {
+    pub mode: ServeMode,
+    pub deadline_ms: f64,
+    pub arrival_gap_ms: f64,
+    /// Tasks offered to admission.
+    pub sessions: usize,
+    /// Sessions that finished every decode step inside the deadline.
+    pub completed: usize,
+    /// Sessions cancelled at a resume point (queue wait included in the
+    /// elapsed clock, exactly like the real fabric).
+    pub killed: usize,
+    /// `completed / sessions`.
+    pub completion_rate: f64,
+    /// Tokens from *completed* sessions only, per wall-clock second —
+    /// work burned on killed sessions counts against this.
+    pub goodput_tokens_per_s: f64,
+    /// p95 end-to-end latency over completed sessions (0 when none).
+    pub p95_ms: f64,
+    pub makespan_ms: f64,
+}
+
+/// Checkpoint decomposition of a discipline's service time:
+/// `(prefill segment, per-step segment)` with
+/// `service_ms == prefill_seg + decode_steps × step_seg`.
+fn service_profile(p: &ModelParams, mode: ServeMode, sessions: usize) -> (f64, f64) {
+    match mode {
+        ServeMode::ThreadPerTask => {
+            (p.prefill_ms + p.handoff_ms, p.step_overhead_ms + p.step_ms)
+        }
+        ServeMode::Fabric => (p.prefill_ms, p.step_overhead_ms + p.step_ms),
+        ServeMode::FabricBatched => {
+            let b = (sessions as f64 / p.engines as f64)
+                .ceil()
+                .min(p.batch_max as f64)
+                .max(1.0);
+            (p.prefill_ms, p.step_overhead_ms / b + p.step_ms)
+        }
+    }
+}
+
+/// Deterministic DES of in-flight SLO enforcement, mirroring the real
+/// fabric's cancellation semantics:
+///
+/// * the deadline clock starts at *arrival* (admission offer), so queue
+///   wait counts against the budget;
+/// * cancellation is cooperative — it happens only at resume points
+///   (before prefill, after prefill, after each decode step), never
+///   mid-dispatch, so a killed session still occupies its server up to
+///   the checkpoint where the kill lands;
+/// * a session already over budget when it reaches the front of the
+///   queue is cancelled before prefill and consumes no service at all.
+pub fn simulate_slo(
+    p: &ModelParams,
+    mode: ServeMode,
+    sessions: usize,
+    deadline_ms: f64,
+) -> SloPoint {
+    let (prefill_seg, step_seg) = service_profile(p, mode, sessions);
+    let mut free = vec![0.0f64; p.engines.max(1)];
+    let mut latencies = Vec::new();
+    let mut completed = 0usize;
+    let mut killed = 0usize;
+    let mut makespan: f64 = 0.0;
+    for i in 0..sessions {
+        let arrival = i as f64 * p.arrival_gap_ms;
+        let (srv, _) = free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = arrival.max(free[srv]);
+        if start - arrival > deadline_ms {
+            // Resume point 1: over budget before prefill — the server is
+            // never touched.
+            killed += 1;
+            makespan = makespan.max(start);
+            continue;
+        }
+        let mut t = start + prefill_seg;
+        let mut dead = t - arrival > deadline_ms;
+        if !dead {
+            for _ in 0..p.decode_steps {
+                t += step_seg;
+                if t - arrival > deadline_ms {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        free[srv] = t;
+        makespan = makespan.max(t);
+        if dead {
+            killed += 1;
+        } else {
+            completed += 1;
+            latencies.push(t - arrival);
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tokens = (completed * p.decode_steps) as f64;
+    SloPoint {
+        mode,
+        deadline_ms,
+        arrival_gap_ms: p.arrival_gap_ms,
+        sessions,
+        completed,
+        killed,
+        completion_rate: completed as f64 / sessions.max(1) as f64,
+        goodput_tokens_per_s: tokens / (makespan / 1e3).max(1e-9),
+        p95_ms: percentile(&latencies, 95.0),
+        makespan_ms: makespan,
+    }
+}
+
+/// The full SLO grid: every deadline × arrival-gap combination at a
+/// fixed offered-session count.
+pub fn slo_curve(
+    p: &ModelParams,
+    mode: ServeMode,
+    sessions: usize,
+    deadlines_ms: &[f64],
+    gaps_ms: &[f64],
+) -> Vec<SloPoint> {
+    let mut out = Vec::new();
+    for &deadline in deadlines_ms {
+        for &gap in gaps_ms {
+            let mut params = p.clone();
+            params.arrival_gap_ms = gap;
+            out.push(simulate_slo(&params, mode, sessions, deadline));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +360,88 @@ mod tests {
         assert!(high < low);
         let cap = service_ms(&p, ServeMode::FabricBatched, 1000);
         assert!((cap - high).abs() < 1e-9, "width saturates at batch_max");
+    }
+
+    #[test]
+    fn slo_accounts_every_session_and_relaxes_with_the_deadline() {
+        let p = ModelParams::default();
+        let curve =
+            slo_curve(&p, ServeMode::Fabric, SLO_SESSIONS, &SLO_DEADLINES_MS, &SLO_GAPS_MS);
+        assert_eq!(curve.len(), SLO_DEADLINES_MS.len() * SLO_GAPS_MS.len());
+        for pt in &curve {
+            assert_eq!(
+                pt.completed + pt.killed,
+                pt.sessions,
+                "every offered session is either completed or killed"
+            );
+            assert!(pt.goodput_tokens_per_s.is_finite());
+            assert!((0.0..=1.0).contains(&pt.completion_rate));
+            // A completed session's p95 can never exceed the deadline —
+            // anything slower would have been cancelled at a checkpoint.
+            assert!(pt.completed == 0 || pt.p95_ms <= pt.deadline_ms);
+        }
+        // At a fixed arrival gap, loosening the deadline never completes
+        // fewer sessions.
+        for (gi, _) in SLO_GAPS_MS.iter().enumerate() {
+            let rates: Vec<f64> = SLO_DEADLINES_MS
+                .iter()
+                .enumerate()
+                .map(|(di, _)| curve[di * SLO_GAPS_MS.len() + gi].completion_rate)
+                .collect();
+            for w in rates.windows(2) {
+                assert!(w[1] >= w[0], "completion rate must relax with the deadline");
+            }
+        }
+    }
+
+    #[test]
+    fn slo_completion_rate_is_monotone_in_arrival_rate() {
+        // The CI shape contract for BENCH_slo.json: at each fixed
+        // deadline, shrinking the arrival gap (raising offered load)
+        // never *increases* the completion rate.
+        let p = ModelParams::default();
+        for &deadline in &SLO_DEADLINES_MS {
+            let rates: Vec<f64> = SLO_GAPS_MS
+                .iter()
+                .map(|&gap| {
+                    let mut params = p.clone();
+                    params.arrival_gap_ms = gap;
+                    simulate_slo(&params, ServeMode::Fabric, SLO_SESSIONS, deadline)
+                        .completion_rate
+                })
+                .collect();
+            for w in rates.windows(2) {
+                assert!(
+                    w[1] <= w[0],
+                    "completion rate rose with load at deadline {deadline}: {rates:?}"
+                );
+            }
+        }
+        // The grid must actually exercise enforcement: full completion
+        // under light load, heavy kills under saturation.
+        let mut light = p.clone();
+        light.arrival_gap_ms = SLO_GAPS_MS[0];
+        let head = simulate_slo(&light, ServeMode::Fabric, SLO_SESSIONS, SLO_DEADLINES_MS[0]);
+        assert_eq!(head.completion_rate, 1.0, "light load must complete everything");
+        let mut heavy = p.clone();
+        heavy.arrival_gap_ms = *SLO_GAPS_MS.last().unwrap();
+        let tail = simulate_slo(&heavy, ServeMode::Fabric, SLO_SESSIONS, SLO_DEADLINES_MS[0]);
+        assert!(tail.killed > tail.completed, "saturation must kill most sessions");
+    }
+
+    #[test]
+    fn slo_with_infinite_deadline_matches_the_capacity_model() {
+        // With an unreachable deadline nothing is killed and the DES
+        // degenerates to `simulate` — same FIFO schedule, same p95.
+        let p = ModelParams::default();
+        for mode in ServeMode::ALL {
+            let slo = simulate_slo(&p, mode, 16, f64::INFINITY);
+            let cap = simulate(&p, mode, 16);
+            assert_eq!(slo.completed, 16);
+            assert_eq!(slo.killed, 0);
+            assert!((slo.p95_ms - cap.p95_ms).abs() < 1e-9, "{mode:?} p95 diverged");
+            assert!((slo.makespan_ms - cap.makespan_ms).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -235,6 +235,7 @@ fn diurnal_fabric_block_policy_bounds_inflight_and_loses_nothing() {
         admission: AdmissionPolicy::Block,
         batching: false,
         time_scale: 1e6, // compress the day to microseconds
+        ..FabricConfig::default()
     };
     let out = run_fabric(None, &cfg, tasks).unwrap();
     assert_eq!(out.results.len(), total, "block policy lost tasks");

@@ -114,6 +114,7 @@ fn reject_over_slo_accounts_every_offered_task() {
         admission: AdmissionPolicy::RejectOverSlo { slo_ms: 0.5 },
         batching: false,
         time_scale: 1.0,
+        ..FabricConfig::default()
     };
     let n = 16;
     let out = run_fabric(None, &cfg, mock_tasks(n, 2.0, 4000)).unwrap();
@@ -151,6 +152,7 @@ fn block_policy_completes_everything_in_arrival_independent_set() {
         admission: AdmissionPolicy::Block,
         batching: false,
         time_scale: 1e6,
+        ..FabricConfig::default()
     };
     let n = 20;
     let out = run_fabric(None, &cfg, mock_tasks(n, 0.01, 300)).unwrap();

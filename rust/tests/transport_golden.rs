@@ -28,6 +28,10 @@
 //! per seed, and a zero-rate chaos wrapper changes nothing), and a
 //! mid-decode churn regression (a node dying between token broadcasts
 //! leaves its answer absent without killing the session).
+//!
+//! A liveness suite closes the file: answered heartbeats are
+//! byte-invisible, and a node that swallows its pings is demoted before
+//! it can stall a protocol turn.
 
 use std::net::TcpListener;
 use std::path::PathBuf;
@@ -202,6 +206,9 @@ struct RunCfg {
     /// Wire precision of the KV data plane (`F32` = the legacy layout
     /// every golden fixture is pinned to).
     precision: KvPrecision,
+    /// Liveness heartbeat interval; `None` (the default everywhere a
+    /// golden fixture is compared) disarms the heartbeat plane.
+    heartbeat: Option<f64>,
 }
 
 impl RunCfg {
@@ -216,6 +223,7 @@ impl RunCfg {
             never_sync: false,
             delta: true,
             precision: KvPrecision::F32,
+            heartbeat: None,
         }
     }
 }
@@ -284,6 +292,7 @@ fn run_session(engine: &Engine, mode: Mode, rc: RunCfg) -> SessionReport {
     cfg.round_deadline_ms = rc.deadline;
     cfg.delta_frames = rc.delta;
     cfg.kv_precision = rc.precision;
+    cfg.heartbeat_ms = rc.heartbeat;
     let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
 
     let (rep, hosts) = match mode {
@@ -1547,4 +1556,121 @@ fn mid_decode_churn_leaves_answer_absent_not_fatal() {
     // Prefill billing is untouched by a decode-phase death.
     assert_eq!(rep.net.tx_bytes, clean.net.tx_bytes);
     assert_eq!(rep.net.round_bytes, clean.net.round_bytes);
+}
+
+// ---------------------------------------------------------------------------
+// Liveness heartbeats
+// ---------------------------------------------------------------------------
+
+/// Heartbeats are pure control-plane traffic: a wire session where every
+/// ping is answered (hosts always pong; the window is generous) must be
+/// byte-identical — answers, billed bytes, churn counters — to the same
+/// session with the heartbeat plane disarmed.
+#[test]
+fn heartbeat_on_healthy_links_changes_nothing() {
+    let Some(engine) = engine() else { return };
+    let mut off = RunCfg::new("full", KvExchangePolicy::Full);
+    off.decode_all = true;
+    let mut on = off;
+    on.heartbeat = Some(5_000.0);
+
+    let quiet = run_session(&engine, Mode::Channel, off);
+    let beating = run_session(&engine, Mode::Channel, on);
+    assert_eq!(
+        chaos_fp(&quiet),
+        chaos_fp(&beating),
+        "an answered heartbeat stream must not change the session"
+    );
+    assert_eq!(
+        (beating.net.demotions, beating.net.rejoins, beating.net.retries),
+        (0, 0, 0),
+        "healthy heartbeats must record no churn"
+    );
+}
+
+/// Swallows driver→node `Ping` frames (pretending they were sent) so the
+/// driver's pong wait times out: a host that is reachable but wedged —
+/// exactly what the heartbeat plane exists to catch.
+struct PingBlackhole {
+    inner: ChannelTransport,
+}
+
+impl Transport for PingBlackhole {
+    fn send(&mut self, frame: &[u8]) -> Result<(), TransportError> {
+        if let Ok(CtrlMsg::Ping { .. }) = CtrlMsg::decode(frame) {
+            return Ok(());
+        }
+        self.inner.send(frame)
+    }
+    fn recv(&mut self) -> Result<Vec<u8>, TransportError> {
+        self.inner.recv()
+    }
+    fn set_recv_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.inner.set_recv_timeout(timeout)
+    }
+    fn peer(&self) -> String {
+        "ping-blackhole".into()
+    }
+}
+
+/// A node that never answers heartbeats is demoted after
+/// `heartbeat_max_missed` consecutive missed beats — before it can stall
+/// a single protocol turn — and the session completes without it: its
+/// answer absent, its uplink never billed, the publisher still decoding.
+#[test]
+fn muted_node_misses_heartbeats_and_is_demoted() {
+    let Some(engine) = engine() else { return };
+    let md = engine.manifest.model.clone();
+    let n = 3usize;
+    let mut rng = SplitMix64::new(31);
+    let ep = gen_episode(&mut rng, 4);
+    let part = partition(&ep, n, Segmentation::SemQEx);
+    let publisher = part.publisher();
+    let muted = (publisher + 1) % n;
+    let mut cfg = SessionConfig::new(SyncSchedule::uniform(md.n_layers, n, 2));
+    cfg.seed = 11;
+    cfg.decode_all = true;
+    // A short window keeps the one demotion fast; once the node is out
+    // of `Alive` the heartbeat loop never probes it again.
+    cfg.heartbeat_ms = Some(40.0);
+    cfg.heartbeat_max_missed = 2;
+    let net = NetSim::uniform(Topology::Star, n, LinkSpec::default(), 11);
+
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    let mut hosts = Vec::with_capacity(n);
+    for p in 0..n {
+        let (driver_end, node_end) = ChannelTransport::pair();
+        let engine_c = engine.clone();
+        // The muted node's host is abandoned mid-session (its channel
+        // closes when the driver drops it); every other host must finish
+        // cleanly.
+        let tolerant = p == muted;
+        hosts.push(std::thread::spawn(move || {
+            let res = NodeHost::new(engine_c, Box::new(node_end)).serve();
+            if !tolerant {
+                res.unwrap_or_else(|e| panic!("answering node host {p} failed: {e:#}"));
+            }
+        }));
+        if p == muted {
+            transports.push(Box::new(PingBlackhole { inner: driver_end }));
+        } else {
+            transports.push(Box::new(driver_end));
+        }
+    }
+    let rep = TransportDriver::new(&engine, &part, cfg, net, transports)
+        .unwrap()
+        .run()
+        .unwrap();
+    for h in hosts {
+        h.join().expect("node host thread panicked");
+    }
+
+    assert_eq!(rep.net.demotions, 1, "a muted node is exactly one demotion");
+    assert_eq!(rep.net.rejoins, 0, "no rejoin armed: demotion is final");
+    assert!(rep.answers[muted].is_none(), "the muted node must not decode");
+    assert!(!rep.answer.is_empty(), "publisher answer must survive the demotion");
+    assert!(rep.answers[publisher].is_some());
+    assert!(rep.generated_tokens > 0);
+    // Demoted before its first sync round: never billed a byte of uplink.
+    assert_eq!(rep.net.tx_bytes[muted], 0, "a pre-sync demotion must not bill uplink");
 }
